@@ -1,0 +1,98 @@
+//! Shared experiment drivers for the paper-figure benches.
+//!
+//! Every bench prints the same rows/series the paper reports and writes a
+//! JSON report under `reports/` for plotting. Runs are deterministic
+//! (seeded), so figures regenerate bit-identically.
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use computron::config::SystemConfig;
+use computron::coordinator::engine::SwapRecord;
+use computron::metrics::{SwapScalingPoint, WorkloadCell};
+use computron::sim::{Driver, SimReport, SimSystem};
+use computron::workload::GammaWorkload;
+
+/// Number of alternating blocking requests in §5.1-style experiments.
+pub const SWAP_REQUESTS: usize = 20;
+
+/// Run the §5.1 worst-case swap experiment for one configuration.
+pub fn run_swap_experiment(cfg: SystemConfig) -> SimReport {
+    let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+        models: 2,
+        input_len: 2,
+        total: SWAP_REQUESTS,
+    })
+    .expect("config valid");
+    sys.preload(&[1]);
+    sys.run()
+}
+
+/// §5.1 scaling point for (tp, pp) under a given config transform.
+pub fn swap_point(
+    tp: usize,
+    pp: usize,
+    transform: impl Fn(SystemConfig) -> SystemConfig,
+) -> SwapScalingPoint {
+    let cfg = transform(SystemConfig::swap_experiment(tp, pp));
+    let link_bw = cfg.hardware.link.bandwidth;
+    let model_bytes = cfg.spec().unwrap().param_bytes();
+    let report = run_swap_experiment(cfg);
+    SwapScalingPoint::from_records(
+        tp,
+        pp,
+        &report.swaps,
+        &report.requests,
+        model_bytes,
+        link_bw,
+    )
+}
+
+/// Run one §5.2 workload cell (skew row × CV column).
+pub fn run_workload_cell(
+    num_models: usize,
+    cap: usize,
+    max_batch: usize,
+    rates: &[f64],
+    cv: f64,
+    seed: u64,
+) -> WorkloadCell {
+    let cfg = SystemConfig::workload_experiment(num_models, cap, max_batch);
+    let workload = GammaWorkload::new(rates.to_vec(), cv, seed);
+    let arrivals = workload.generate();
+    let measure_start = workload.measure_start();
+    let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).expect("config valid");
+    // Paper warms up before measuring; start with the first `cap` models
+    // resident, as a warm server would be.
+    let preload: Vec<usize> = (0..cap.min(num_models)).collect();
+    sys.preload(&preload);
+    let report = sys.run();
+    assert_eq!(report.violations, 0, "pipelined designs never violate dependencies");
+    assert_eq!(report.oom_events, 0);
+    WorkloadCell::from_report(
+        &computron::workload::gamma::paper::skew_label(rates),
+        cv,
+        &report,
+        measure_start,
+    )
+}
+
+/// Mean swap duration of a report.
+pub fn mean_swap(report: &SimReport) -> f64 {
+    if report.swaps.is_empty() {
+        return 0.0;
+    }
+    report.swaps.iter().map(SwapRecord::duration).sum::<f64>() / report.swaps.len() as f64
+}
+
+/// Write a JSON report under `reports/`.
+pub fn save_report(name: &str, json: computron::util::json::Json) {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir).expect("mkdir reports");
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.pretty()).expect("write report");
+    println!("[report] wrote {}", path.display());
+}
+
+/// Format seconds for table cells.
+pub fn fmt_s(x: f64) -> String {
+    format!("{x:.3}")
+}

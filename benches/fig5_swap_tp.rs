@@ -1,0 +1,66 @@
+//! Fig 5 — swapping latency with changing TP scale (§5.1).
+//!
+//! Left panel: mean swap time vs TP ∈ {1, 2, 4} (PP = 1) against the
+//! ideal 24 GB / (n · 32 GB/s) target. Right panel: swap vs execution
+//! proportions of end-to-end latency.
+//!
+//! Expected shape (paper): swap time decreases with TP but sublinearly —
+//! each TP shard still carries all 644 tensor messages, so the α term is
+//! constant; TP=1 sits noticeably above the 0.75 s lower bound; swapping
+//! dominates e2e latency everywhere, but its share shrinks as TP grows.
+
+#[path = "common.rs"]
+mod common;
+
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+
+fn main() {
+    section("Fig 5: swapping latency vs TP (PP = 1), OPT-13B worst case");
+    let points: Vec<_> = [1usize, 2, 4]
+        .iter()
+        .map(|&tp| common::swap_point(tp, 1, |c| c))
+        .collect();
+
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("TP={}", p.tp),
+                common::fmt_s(p.mean_swap),
+                common::fmt_s(p.ideal),
+                format!("{:.2}x", p.mean_swap / p.ideal),
+                common::fmt_s(p.mean_exec),
+                common::fmt_s(p.mean_e2e),
+                format!("{:.0}%", 100.0 * p.mean_swap / p.mean_e2e),
+            ]
+        })
+        .collect();
+    table(
+        &["config", "swap (s)", "ideal (s)", "vs ideal", "exec (s)", "e2e (s)", "swap share"],
+        &rows,
+    );
+
+    // Shape assertions from the paper.
+    assert!(points[1].mean_swap < points[0].mean_swap, "TP=2 beats TP=1");
+    assert!(points[2].mean_swap < points[1].mean_swap, "TP=4 beats TP=2");
+    assert!(
+        points[2].mean_swap > points[0].mean_swap / 4.0,
+        "scaling is sublinear (α term persists)"
+    );
+    assert!(points[0].mean_swap > 0.75, "TP=1 sits above the bandwidth lower bound");
+    for p in &points {
+        assert!(p.mean_swap / p.mean_e2e > 0.5, "swapping remains the bottleneck");
+    }
+    let share = |p: &computron::metrics::SwapScalingPoint| p.mean_swap / p.mean_e2e;
+    assert!(share(&points[2]) < share(&points[0]), "swap share shrinks with more GPUs");
+    println!("shape checks passed: sublinear TP scaling, swap-dominated e2e");
+
+    common::save_report(
+        "fig5_swap_tp",
+        Json::from_pairs(vec![
+            ("figure", "fig5".into()),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ]),
+    );
+}

@@ -1,0 +1,55 @@
+//! Fig 6 — swapping latency with changing PP scale (§5.1).
+//!
+//! Expected shape (paper): swap time decreases with PP ∈ {1, 2, 4} but
+//! sublinearly — load entries pipeline through worker stages, so each
+//! additional stage adds a pipe-hop delay, and load entries must wait
+//! their turn in each worker's FIFO inbox.
+
+#[path = "common.rs"]
+mod common;
+
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+
+fn main() {
+    section("Fig 6: swapping latency vs PP (TP = 1), OPT-13B worst case");
+    let points: Vec<_> = [1usize, 2, 4]
+        .iter()
+        .map(|&pp| common::swap_point(1, pp, |c| c))
+        .collect();
+
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("PP={}", p.pp),
+                common::fmt_s(p.mean_swap),
+                common::fmt_s(p.ideal),
+                format!("{:.2}x", p.mean_swap / p.ideal),
+                common::fmt_s(p.mean_exec),
+                common::fmt_s(p.mean_e2e),
+                format!("{:.0}%", 100.0 * p.mean_swap / p.mean_e2e),
+            ]
+        })
+        .collect();
+    table(
+        &["config", "swap (s)", "ideal (s)", "vs ideal", "exec (s)", "e2e (s)", "swap share"],
+        &rows,
+    );
+
+    assert!(points[1].mean_swap < points[0].mean_swap, "PP=2 beats PP=1");
+    assert!(points[2].mean_swap < points[1].mean_swap, "PP=4 beats PP=2");
+    assert!(
+        points[2].mean_swap > points[0].mean_swap / 4.0,
+        "scaling is sublinear (pipelined load-entry delays)"
+    );
+    println!("shape checks passed: sublinear PP scaling");
+
+    common::save_report(
+        "fig6_swap_pp",
+        Json::from_pairs(vec![
+            ("figure", "fig6".into()),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ]),
+    );
+}

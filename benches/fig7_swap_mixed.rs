@@ -1,0 +1,52 @@
+//! Fig 7 — swapping latency for TP=2, PP=2 vs pure TP=4 / PP=4 (§5.1).
+//!
+//! Expected shape (paper): at the same world size (4 GPUs), the mixed
+//! configuration undercuts both pure configurations and approaches the
+//! ideal scaling target — mixing halves both the TP α-term and the PP
+//! pipe-hop overheads.
+
+#[path = "common.rs"]
+mod common;
+
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+
+fn main() {
+    section("Fig 7: swapping latency at world size 4 — mixed vs pure parallelism");
+    let configs = [(4usize, 1usize, "TP=4,PP=1"), (1, 4, "TP=1,PP=4"), (2, 2, "TP=2,PP=2")];
+    let points: Vec<_> =
+        configs.iter().map(|&(tp, pp, _)| common::swap_point(tp, pp, |c| c)).collect();
+
+    let rows: Vec<Vec<String>> = configs
+        .iter()
+        .zip(&points)
+        .map(|(&(_, _, label), p)| {
+            vec![
+                label.to_string(),
+                common::fmt_s(p.mean_swap),
+                common::fmt_s(p.ideal),
+                format!("{:.2}x", p.mean_swap / p.ideal),
+                common::fmt_s(p.mean_e2e),
+            ]
+        })
+        .collect();
+    table(&["config", "swap (s)", "ideal (s)", "vs ideal", "e2e (s)"], &rows);
+
+    let (tp4, pp4, mixed) = (&points[0], &points[1], &points[2]);
+    assert!(mixed.mean_swap < tp4.mean_swap, "mixed beats pure TP");
+    assert!(mixed.mean_swap < pp4.mean_swap, "mixed beats pure PP");
+    assert!(
+        mixed.mean_swap / mixed.ideal < 1.8,
+        "mixed approaches the ideal target ({}x)",
+        mixed.mean_swap / mixed.ideal
+    );
+    println!("shape checks passed: mixed < pure TP, mixed < pure PP, near ideal");
+
+    common::save_report(
+        "fig7_swap_mixed",
+        Json::from_pairs(vec![
+            ("figure", "fig7".into()),
+            ("points", Json::Arr(points.iter().map(|p| p.to_json()).collect())),
+        ]),
+    );
+}

@@ -1,0 +1,110 @@
+//! §Perf micro-benchmarks — the L3 hot paths (criterion-style harness
+//! from util::bench since criterion is unavailable offline).
+//!
+//! Targets (EXPERIMENTS.md §Perf): engine scheduling decision < 10 µs;
+//! DES throughput > 1M events/s; collective round-trip and JSON parse
+//! tracked for regressions.
+
+#[path = "common.rs"]
+mod common;
+
+use computron::config::{EngineConfig, SystemConfig};
+use computron::coordinator::engine::Engine;
+use computron::sim::{Driver, SimSystem};
+use computron::util::bench::{black_box, fmt_rate, section, Bencher};
+use computron::util::json::Json;
+
+fn main() {
+    section("Perf: L3 hot paths");
+    let mut b = Bencher::default();
+
+    // Engine request->dispatch round trip (resident model, no swap).
+    b.bench("engine: on_request + drain (hot, resident)", {
+        let mut e = Engine::new(4, 4, 2, EngineConfig::default(), 1);
+        e.force_resident(0, 0.0);
+        let mut now = 0.0;
+        let mut pending: Vec<u64> = Vec::new();
+        move || {
+            now += 0.001;
+            e.on_request(now, 0, 8);
+            for entry in e.drain_outbox() {
+                if let computron::coordinator::Entry::Batch(bb) = entry {
+                    pending.push(bb.id);
+                }
+            }
+            // Complete eagerly so state stays bounded.
+            while pending.len() > 2 {
+                let id = pending.remove(0);
+                e.on_batch_done(now, id);
+                for entry in e.drain_outbox() {
+                    if let computron::coordinator::Entry::Batch(bb) = entry {
+                        pending.push(bb.id);
+                    }
+                }
+            }
+            e.take_completed();
+        }
+    });
+
+    // Swap decision (plan + victim selection) under cap pressure.
+    b.bench("engine: swap decision (cap pressure)", {
+        let mut e = Engine::new(8, 1, 1, EngineConfig { resident_cap: 2, ..Default::default() }, 2);
+        e.force_resident(0, 0.0);
+        e.force_resident(1, 0.0);
+        let mut now = 0.0;
+        let mut model = 2usize;
+        move || {
+            now += 0.01;
+            e.on_request(now, model, 8);
+            // Resolve the swap immediately.
+            let out = e.drain_outbox();
+            for entry in &out {
+                if entry.is_load() {
+                    e.on_load_ack(now, entry.id());
+                }
+            }
+            for entry in e.drain_outbox() {
+                if let computron::coordinator::Entry::Batch(bb) = entry {
+                    e.on_batch_done(now, bb.id);
+                }
+            }
+            e.take_completed();
+            model = 2 + (model - 1) % 6;
+        }
+    });
+
+    // Whole-simulation throughput: events/sec on a Tab-1 style cell.
+    {
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let workload = computron::workload::GammaWorkload::new(vec![10.0, 10.0, 10.0], 1.0, 7);
+        let arrivals = workload.generate();
+        let t0 = std::time::Instant::now();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0, 1]);
+        let report = sys.run();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "sim: {} events, {} requests in {:.3}s host time -> {}",
+            report.events,
+            report.requests.len(),
+            dt,
+            fmt_rate(report.events as f64 / dt)
+        );
+    }
+
+    // JSON parse of a config-sized document.
+    let doc = SystemConfig::workload_experiment(6, 4, 32).to_json().pretty();
+    b.bench("json: parse system config", || {
+        black_box(Json::parse(&doc).unwrap());
+    });
+
+    // Gamma sampling (workload generation inner loop).
+    b.bench("rng: gamma sample (cv=4)", {
+        let mut rng = computron::util::rng::Rng::seeded(3);
+        move || {
+            black_box(rng.gamma(0.0625, 16.0));
+        }
+    });
+
+    println!("\nsummaries recorded; see EXPERIMENTS.md §Perf for targets");
+}

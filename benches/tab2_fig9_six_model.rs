@@ -1,0 +1,84 @@
+//! Tab 2 + Fig 9 — simulated workloads: 6 OPT-13B models, at most 4 in
+//! GPU memory, max batch 32, TP=2 PP=2 (§5.2).
+//!
+//! Expected shape (paper): same burstiness pattern as Tab 1; at CV=4 the
+//! 6-model deployment is *at least as good as* the 3-model one (good
+//! utilization under bursts), while at low CV latencies roughly double
+//! (the GPUs were already saturated, so 2× work ⇒ ~2× latency).
+
+#[path = "common.rs"]
+mod common;
+
+use computron::metrics::{latency_table, WorkloadCell};
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+use computron::workload::gamma::paper;
+
+fn main() {
+    section("Tab 2 / Fig 9: 6 models, cap 4, max batch 32, TP=2 PP=2, 30 s Gamma workloads");
+    let mut cells: Vec<WorkloadCell> = Vec::new();
+    for rates in paper::SKEWS_6 {
+        for cv in paper::CVS {
+            let cell = common::run_workload_cell(6, 4, 32, &rates, cv, 0xF169);
+            println!(
+                "  skew={} cv={:<4} -> mean {:.3}s p99 {:.3}s over {} requests ({} swaps)",
+                cell.skew_label, cv, cell.mean_latency, cell.summary.p99, cell.requests, cell.swaps
+            );
+            cells.push(cell);
+        }
+    }
+
+    println!();
+    let (headers, rows) = latency_table(&cells, &paper::CVS);
+    table(&headers, &rows);
+
+    // Burstiness pattern (per skew row).
+    for rates in paper::SKEWS_6 {
+        let label = paper::skew_label(&rates);
+        let get = |cv: f64| {
+            cells
+                .iter()
+                .find(|c| c.skew_label == label && (c.cv - cv).abs() < 1e-9)
+                .unwrap()
+                .mean_latency
+        };
+        assert!(get(4.0) < get(0.25), "{label}: bursty must beat regular");
+    }
+
+    // Cross-table comparison with the 3-model experiment (paper's Tab 1
+    // vs Tab 2 observations): rerun the uniform 3-model cells here.
+    let three_low = common::run_workload_cell(3, 2, 8, &[1.0, 1.0, 1.0], 0.25, 0xF168);
+    let three_high = common::run_workload_cell(3, 2, 8, &[1.0, 1.0, 1.0], 4.0, 0xF168);
+    let six_low = &cells[0]; // (1,1,1,1,1,1) cv=0.25
+    let six_high = &cells[2]; // (1,1,1,1,1,1) cv=4
+    println!(
+        "3-model vs 6-model: cv=0.25 {:.3} -> {:.3} ({:.2}x); cv=4 {:.3} -> {:.3}",
+        three_low.mean_latency,
+        six_low.mean_latency,
+        six_low.mean_latency / three_low.mean_latency,
+        three_high.mean_latency,
+        six_high.mean_latency,
+    );
+    assert!(
+        six_high.mean_latency < six_low.mean_latency,
+        "bursty 6-model case must beat its low-CV counterpart"
+    );
+    // Paper observes ~2x at its saturation point; our calibrated service
+    // times sit lower relative to offered load, so the growth is smaller
+    // but must still be clearly present (see EXPERIMENTS.md §Tab2).
+    assert!(
+        six_low.mean_latency > three_low.mean_latency * 1.15,
+        "low-CV latencies must grow when doubling models: {} -> {}",
+        three_low.mean_latency,
+        six_low.mean_latency
+    );
+    println!("shape checks passed");
+
+    common::save_report(
+        "tab2_fig9_six_model",
+        Json::from_pairs(vec![
+            ("experiment", "tab2_fig9".into()),
+            ("cells", Json::Arr(cells.iter().map(WorkloadCell::to_json).collect())),
+        ]),
+    );
+}

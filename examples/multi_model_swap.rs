@@ -1,0 +1,63 @@
+//! Model-parallel swapping up close: measure real load/offload entry
+//! times at TP×PP ∈ {(1,1), (2,1), (1,2), (2,2)} on the PJRT path and
+//! show the cross-stage loading parallelism of the async pipelined
+//! design — the real-mode analogue of the paper's Fig 5–7 experiment.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example multi_model_swap
+//! ```
+
+use computron::config::EngineConfig;
+use computron::serving::{Computron, ServeConfig};
+use computron::util::bench::table;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = computron::runtime::manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not found at {}; run `make artifacts`", dir.display());
+        std::process::exit(1);
+    }
+
+    let prompt: Vec<i32> = (1..9).collect();
+    let mut rows = Vec::new();
+    for (tp, pp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
+        let mut cfg = ServeConfig::new(&dir, "opt-test", 2, tp, pp);
+        cfg.engine = EngineConfig { resident_cap: 1, max_batch_size: 8, ..Default::default() };
+        let server = Computron::launch(cfg)?;
+        // Warmup (loads model 0).
+        server.submit(0, prompt.clone()).wait().map_err(|e| anyhow::anyhow!(e))?;
+
+        // Alternate blocking requests: every one forces offload+load.
+        let n = 12;
+        let t0 = Instant::now();
+        for i in 0..n {
+            server
+                .submit((i + 1) % 2, prompt.clone())
+                .wait()
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+        let per_req = t0.elapsed().as_secs_f64() / n as f64;
+        let stats = server.stats();
+        rows.push(vec![
+            format!("TP={tp},PP={pp}"),
+            format!("{:.1}", stats.swap.loads_completed as f64),
+            format!("{:.4}", stats.mean_load_secs),
+            format!("{per_req:.4}"),
+        ]);
+        server.shutdown();
+    }
+
+    println!("\nreal-mode model-parallel swapping (opt-test, alternating worst case):");
+    table(
+        &["grid", "loads", "mean load-entry (s)", "e2e per request (s)"],
+        &rows,
+    );
+    println!(
+        "\nNote: per-worker load-entry time shrinks with the grid (smaller shards\n\
+         per worker) and stages transfer concurrently — the paper's model\n\
+         parallel swapping effect, here on the CPU-PJRT substrate."
+    );
+    Ok(())
+}

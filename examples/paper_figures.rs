@@ -1,0 +1,112 @@
+//! Regenerate every table and figure of the paper's evaluation (§5) in
+//! one run, printing paper-style output and writing JSON series to
+//! `reports/`. This is the simulation counterpart of the bench suite —
+//! handy for a quick look without `cargo bench`.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # everything
+//! cargo run --release --example paper_figures -- --only fig5
+//! ```
+
+use computron::config::SystemConfig;
+use computron::metrics::{latency_table, SwapScalingPoint, WorkloadCell};
+use computron::sim::{Driver, SimSystem};
+use computron::util::args::Args;
+use computron::util::bench::{section, table};
+use computron::workload::gamma::paper;
+use computron::workload::GammaWorkload;
+
+fn swap_report(tp: usize, pp: usize) -> SwapScalingPoint {
+    let cfg = SystemConfig::swap_experiment(tp, pp);
+    let bw = cfg.hardware.link.bandwidth;
+    let bytes = cfg.spec().unwrap().param_bytes();
+    let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+        models: 2,
+        input_len: 2,
+        total: 20,
+    })
+    .unwrap();
+    sys.preload(&[1]);
+    let r = sys.run();
+    SwapScalingPoint::from_records(tp, pp, &r.swaps, &r.requests, bytes, bw)
+}
+
+fn swap_rows(points: &[SwapScalingPoint]) -> Vec<Vec<String>> {
+    points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("TP={},PP={}", p.tp, p.pp),
+                format!("{:.3}", p.mean_swap),
+                format!("{:.3}", p.ideal),
+                format!("{:.2}x", p.mean_swap / p.ideal),
+                format!("{:.0}%", 100.0 * p.mean_swap / p.mean_e2e),
+            ]
+        })
+        .collect()
+}
+
+fn workload_grid(num_models: usize, cap: usize, batch: usize, skews: &[Vec<f64>], seed: u64) -> Vec<WorkloadCell> {
+    let mut cells = Vec::new();
+    for rates in skews {
+        for &cv in &paper::CVS {
+            let cfg = SystemConfig::workload_experiment(num_models, cap, batch);
+            let w = GammaWorkload::new(rates.clone(), cv, seed);
+            let arrivals = w.generate();
+            let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+            sys.preload(&(0..cap).collect::<Vec<_>>());
+            let r = sys.run();
+            cells.push(WorkloadCell::from_report(
+                &paper::skew_label(rates),
+                cv,
+                &r,
+                w.measure_start(),
+            ));
+        }
+    }
+    cells
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::new("paper_figures", "regenerate §5 tables and figures")
+        .opt("only", "fig5|fig6|fig7|tab1|tab2 (default: all)", None)
+        .parse()?;
+    let only = args.get("only").map(str::to_string);
+    let want = |k: &str| only.as_deref().map_or(true, |o| o == k);
+
+    let headers = ["config", "swap (s)", "ideal (s)", "vs ideal", "swap share"];
+
+    if want("fig5") {
+        section("Fig 5: swap latency vs TP");
+        let pts: Vec<_> = [1, 2, 4].iter().map(|&tp| swap_report(tp, 1)).collect();
+        table(&headers, &swap_rows(&pts));
+    }
+    if want("fig6") {
+        section("Fig 6: swap latency vs PP");
+        let pts: Vec<_> = [1, 2, 4].iter().map(|&pp| swap_report(1, pp)).collect();
+        table(&headers, &swap_rows(&pts));
+    }
+    if want("fig7") {
+        section("Fig 7: mixed parallelism at world size 4");
+        let pts: Vec<_> =
+            [(4, 1), (1, 4), (2, 2)].iter().map(|&(tp, pp)| swap_report(tp, pp)).collect();
+        table(&headers, &swap_rows(&pts));
+    }
+    if want("tab1") {
+        section("Tab 1 / Fig 8: 3 models, cap 2, batch 8");
+        let skews: Vec<Vec<f64>> = paper::SKEWS_3.iter().map(|s| s.to_vec()).collect();
+        let cells = workload_grid(3, 2, 8, &skews, 0xF168);
+        let (h, rows) = latency_table(&cells, &paper::CVS);
+        table(&h, &rows);
+        println!("(CDF series in reports/ after `cargo bench --bench tab1_fig8_three_model`)");
+    }
+    if want("tab2") {
+        section("Tab 2 / Fig 9: 6 models, cap 4, batch 32");
+        let skews: Vec<Vec<f64>> = paper::SKEWS_6.iter().map(|s| s.to_vec()).collect();
+        let cells = workload_grid(6, 4, 32, &skews, 0xF169);
+        let (h, rows) = latency_table(&cells, &paper::CVS);
+        table(&h, &rows);
+    }
+    println!("\nall requested figures regenerated.");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: launch Computron on the real PJRT path, serve a few
+//! requests against two co-located model instances with a residency cap
+//! of one, and watch the swaps happen.
+//!
+//! ```bash
+//! make artifacts          # once: AOT-compile the jax/pallas stages
+//! cargo run --release --example quickstart
+//! ```
+
+use computron::config::EngineConfig;
+use computron::serving::{Computron, ServeConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = computron::runtime::manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not found at {}; run `make artifacts` first", dir.display());
+        std::process::exit(1);
+    }
+
+    // Two opt-test instances sharing the grid; only ONE may be resident —
+    // every alternation forces a model-parallel swap, exactly the paper's
+    // §5.1 worst case.
+    let mut cfg = ServeConfig::new(&dir, "opt-test", 2, 1, 1);
+    cfg.engine = EngineConfig { resident_cap: 1, max_batch_size: 8, ..Default::default() };
+    println!("launching computron: model=opt-test instances=2 tp=1 pp=1 cap=1");
+    let server = Computron::launch(cfg)?;
+
+    let prompt: Vec<i32> = vec![11, 42, 7, 100, 3, 250, 9, 1];
+    for i in 0..6 {
+        let model = i % 2;
+        let out = server
+            .submit(model, prompt.clone())
+            .wait()
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "request {i}: model {model} -> next-token argmax {:4}  (latency {:.3}s)",
+            out.argmax, out.latency
+        );
+    }
+
+    let stats = server.stats();
+    println!(
+        "\nserved {} requests | swaps: {} loads / {} offloads | mean load {:.3}s",
+        stats.completed,
+        stats.swap.loads_completed,
+        stats.swap.offloads_completed,
+        stats.mean_load_secs
+    );
+    if let Some(lat) = stats.latency {
+        println!("latency: mean {:.3}s p50 {:.3}s p99 {:.3}s", lat.mean, lat.p50, lat.p99);
+    }
+    server.shutdown();
+    println!("done.");
+    Ok(())
+}

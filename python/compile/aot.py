@@ -1,0 +1,209 @@
+"""AOT compilation: lower every stage function to HLO text + manifest.
+
+Build-time entry point (`make artifacts`). Python never runs at serving
+time: this script lowers the L2 stage functions (which call the L1 Pallas
+kernels) to HLO *text* — the interchange format the rust `xla` crate's
+XLA 0.5.1 can parse (jax ≥ 0.5 serialized protos use 64-bit instruction
+ids it rejects; the text parser reassigns ids — see /opt/xla-example).
+
+Artifacts, per (model, tp, batch, seq) bucket:
+    {model}_tp{tp}_b{B}_s{S}_{role}.hlo.txt   role ∈ embed|attn|mlp|head
+
+plus `manifest.json` describing every artifact's argument signature, the
+model configs, the weight seed, and golden test vectors (input ids +
+reference last-position logits) that the rust integration tests check
+against.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models opt-test]
+       [--fast]  (fast: only the buckets the tests/examples need)
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.ref import ref_opt_forward
+from .weights import MODEL_SPECS, WEIGHT_SEED, build_weights
+
+BATCHES = [1, 4, 8]
+SEQS = [8, 32]
+TPS = [1, 2]
+ROLES = ["embed", "attn", "mlp", "head"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def stage_signature(role: str, cfg: dict, tp: int, b: int, s: int):
+    """(function, [(arg_name, dtype, shape), ...]) for one artifact."""
+    h, f, v, heads = cfg["hidden"], cfg["ffn"], cfg["vocab"], cfg["heads"]
+    mp = cfg["max_pos"]
+    if role == "embed":
+        fn = lambda ids, start, tok, pos: M.embed_stage(ids, start, tok, pos, tp=tp)
+        args = [
+            ("ids", "i32", [b, s]),
+            ("vocab_start", "i32", []),
+            ("embed_tokens", "f32", [v // tp, h]),
+            ("embed_positions", "f32", [mp + 2, h]),
+        ]
+    elif role == "attn":
+        fn = lambda hidden, ln_w, ln_b, qw, qb, kw, kb, vw, vb, ow, ob: M.attn_half(
+            hidden, ln_w, ln_b, qw, qb, kw, kb, vw, vb, ow, ob,
+            heads_local=heads // tp, tp=tp,
+        )
+        args = [
+            ("hidden", "f32", [b, s, h]),
+            ("ln_w", "f32", [h]),
+            ("ln_b", "f32", [h]),
+            ("q_w", "f32", [h // tp, h]),
+            ("q_b", "f32", [h // tp]),
+            ("k_w", "f32", [h // tp, h]),
+            ("k_b", "f32", [h // tp]),
+            ("v_w", "f32", [h // tp, h]),
+            ("v_b", "f32", [h // tp]),
+            ("o_w", "f32", [h, h // tp]),
+            ("o_b", "f32", [h]),
+        ]
+    elif role == "mlp":
+        fn = lambda hidden, ln_w, ln_b, f1w, f1b, f2w, f2b: M.mlp_half(
+            hidden, ln_w, ln_b, f1w, f1b, f2w, f2b, tp=tp
+        )
+        args = [
+            ("hidden", "f32", [b, s, h]),
+            ("ln_w", "f32", [h]),
+            ("ln_b", "f32", [h]),
+            ("fc1_w", "f32", [f // tp, h]),
+            ("fc1_b", "f32", [f // tp]),
+            ("fc2_w", "f32", [h, f // tp]),
+            ("fc2_b", "f32", [h]),
+        ]
+    elif role == "head":
+        fn = M.head_stage
+        args = [
+            ("hidden", "f32", [b, s, h]),
+            ("lnf_w", "f32", [h]),
+            ("lnf_b", "f32", [h]),
+            ("lm_head", "f32", [v // tp, h]),
+        ]
+    else:
+        raise ValueError(role)
+    return fn, args
+
+
+def lower_artifact(role, cfg, tp, b, s):
+    fn, args = stage_signature(role, cfg, tp, b, s)
+    specs = [i32(*shape) if dt == "i32" else f32(*shape) for (_, dt, shape) in args]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), args
+
+
+def golden_vectors(name: str, cfg: dict) -> dict:
+    """Reference inputs/outputs for the rust integration tests: seeded ids
+    and the unsharded reference forward's last-position logits."""
+    weights = {k: jnp.array(v) for k, v in build_weights(cfg, WEIGHT_SEED).items()}
+    rng = np.random.default_rng(0xD00D ^ len(name))
+    b, s = 2, 8
+    ids = rng.integers(0, cfg["vocab"], size=(b, s)).astype(np.int32)
+    logits = np.asarray(ref_opt_forward(jnp.array(ids), weights, cfg))
+    last = logits[:, -1, :]  # (B, V)
+    return {
+        "batch": b,
+        "seq": s,
+        "ids": ids.flatten().tolist(),
+        "last_logits": [round(float(x), 6) for x in last.flatten()],
+        "argmax": np.argmax(last, axis=-1).astype(int).tolist(),
+        "tolerance": 2e-3,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=["opt-test", "opt-mini"])
+    ap.add_argument(
+        "--fast",
+        action="store_true",
+        help="only the buckets the test-suite/examples need (b in {1,8}, s=8, tp in {1,2})",
+    )
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    batches = [1, 8] if args.fast else BATCHES
+    seqs = [8] if args.fast else SEQS
+
+    manifest = {
+        "version": 1,
+        "weight_seed": WEIGHT_SEED,
+        "models": {},
+        "artifacts": [],
+        "golden": {},
+        "arg_convention": (
+            "Each artifact computes one stage function with weights passed "
+            "as runtime arguments (one executable serves every layer). "
+            "Outputs are 1-tuples (return_tuple lowering). See model.py for "
+            "TP partial/all-reduce semantics."
+        ),
+    }
+
+    t0 = time.time()
+    count = 0
+    for name in args.models:
+        cfg = MODEL_SPECS[name]
+        manifest["models"][name] = cfg
+        print(f"[aot] golden vectors for {name}...", flush=True)
+        manifest["golden"][name] = golden_vectors(name, cfg)
+        for tp in TPS:
+            if cfg["heads"] % tp or cfg["vocab"] % tp or cfg["ffn"] % tp:
+                continue
+            for b in batches:
+                for s in seqs:
+                    for role in ROLES:
+                        fname = f"{name}_tp{tp}_b{b}_s{s}_{role}.hlo.txt"
+                        text, arg_spec = lower_artifact(role, cfg, tp, b, s)
+                        (out_dir / fname).write_text(text)
+                        manifest["artifacts"].append(
+                            {
+                                "file": fname,
+                                "model": name,
+                                "role": role,
+                                "tp": tp,
+                                "batch": b,
+                                "seq": s,
+                                "args": arg_spec,
+                            }
+                        )
+                        count += 1
+                print(
+                    f"[aot] {name} tp={tp} b={b}: {count} artifacts, "
+                    f"{time.time() - t0:.1f}s",
+                    flush=True,
+                )
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"[aot] wrote {count} artifacts + manifest to {out_dir} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1: fused causal flash-attention as a Pallas kernel.
+
+The paper's serving hot spot is the transformer forward pass; on the
+CUDA testbed this is cuBLAS + fused attention kernels. Per the hardware
+adaptation rule (DESIGN.md §2) we do not port CUDA idioms — the kernel is
+written TPU-style:
+
+- the grid iterates (batch·heads, query blocks); each program owns a
+  (block_q × head_dim) query tile in VMEM,
+- K/V stream through VMEM in (block_k × head_dim) tiles with an online
+  (running max / running sum) softmax so the full S×S score matrix never
+  materializes — the flash-attention recurrence,
+- both matmuls (q·kᵀ and p·v) are shaped for the 128×128 MXU; block sizes
+  are clamped to the sequence length so small serving shapes still work.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls, so kernels lower to plain HLO for execution and the Mosaic
+path is compile-only. VMEM footprint / MXU utilization are estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_len: int, scale: float):
+    """One (bh, q-block) program: online-softmax over K/V tiles."""
+    block_q = q_ref.shape[1]
+    head_dim = q_ref.shape[2]
+    q_block_idx = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # (block_q, d)
+
+    # Running statistics for the online softmax.
+    m = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, head_dim), dtype=jnp.float32)
+
+    q_pos = q_block_idx * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+
+    num_k_blocks = (seq_len + block_k - 1) // block_k
+    for kb in range(num_k_blocks):  # static unroll: shapes are compile-time
+        k_tile = k_ref[0, kb * block_k : (kb + 1) * block_k, :]  # (block_k, d)
+        v_tile = v_ref[0, kb * block_k : (kb + 1) * block_k, :]
+        k_pos = kb * block_k + jax.lax.iota(jnp.int32, k_tile.shape[0])
+
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m - m_new)
+        l = l * correction + jnp.sum(p, axis=1)
+        acc = acc * correction[:, None] + jnp.dot(
+            p, v_tile, preferred_element_type=jnp.float32
+        )
+        m = m_new
+
+    # Causality guarantees every row attends at least to itself: l > 0.
+    o_ref[0, :, :] = acc / l[:, None]
+
+
+def flash_attention(q, k, v, *, block_q: int = 16, block_k: int = 16, interpret: bool = True):
+    """Causal self-attention.
+
+    Args:
+      q, k, v: float32 ``(batch_heads, seq, head_dim)``.
+      block_q / block_k: VMEM tile sizes (clamped to ``seq``).
+      interpret: must stay True for CPU-PJRT execution (see module doc).
+
+    Returns:
+      ``(batch_heads, seq, head_dim)`` attention output.
+    """
+    bh, seq, d = q.shape
+    assert k.shape == (bh, seq, d) and v.shape == (bh, seq, d)
+    block_q = max(1, min(block_q, seq))
+    block_k = max(1, min(block_k, seq))
+    num_q_blocks = (seq + block_q - 1) // block_q
+    if seq % block_q != 0:
+        # Keep the kernel simple: require exact q tiling (serving buckets
+        # are powers of two; hypothesis sweeps confirm the constraint).
+        block_q = seq
+        num_q_blocks = 1
+
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, seq_len=seq, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, num_q_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(seq: int, head_dim: int, block_q: int = 16, block_k: int = 16) -> int:
+    """Analytic VMEM estimate per program (EXPERIMENTS.md §Perf): the query
+    tile, one K/V tile pair, the accumulator, and softmax statistics."""
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    f = 4  # f32
+    q_tile = block_q * head_dim * f
+    kv_tiles = 2 * block_k * head_dim * f
+    acc = block_q * head_dim * f
+    stats = 2 * block_q * f
+    scores = block_q * block_k * f
+    return q_tile + kv_tiles + acc + stats + scores

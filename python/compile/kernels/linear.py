@@ -1,0 +1,120 @@
+"""L1: fused linear (+bias +activation) as a Pallas kernel.
+
+Computes ``act(x @ w.T + b)`` with (M, N, K) tiling:
+
+- grid = (M/bm, N/bn, K/bk); the K axis is the innermost (fastest) grid
+  dimension, so each (i, j) output tile is visited K/bk times and the
+  partial products accumulate in the output ref — the canonical Pallas
+  matmul pattern (grid-carried accumulation maps to double-buffered K
+  streaming through VMEM on real hardware),
+- tiles default to 128 (clamped to the problem) to line up with the
+  128×128 MXU systolic array,
+- bias add + activation are fused into the final K step, saving an HBM
+  round-trip for the activation tensor.
+
+Used by the L2 model for the MLP fc1 (ReLU, as in OPT). interpret=True
+for CPU-PJRT execution (see attention.py module doc).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, num_k_blocks: int, activation: str):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_tile = x_ref[...]  # (bm, bk)
+    w_tile = w_ref[...]  # (bn, bk)
+    o_ref[...] += jnp.dot(x_tile, w_tile.T, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == num_k_blocks - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...][None, :]
+        if activation == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif activation == "gelu":
+            y = jax.nn.gelu(y)
+        elif activation != "none":
+            raise ValueError(f"unknown activation {activation!r}")
+        o_ref[...] = y
+
+
+def fused_linear(
+    x,
+    w,
+    b,
+    *,
+    activation: str = "none",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """``act(x @ w.T + b)``.
+
+    Args:
+      x: ``(M, K)`` float32.
+      w: ``(N, K)`` float32 (PyTorch Linear layout: out_features first).
+      b: ``(N,)`` float32.
+      activation: ``"none" | "relu" | "gelu"``.
+
+    Returns:
+      ``(M, N)`` float32.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,)
+
+    bm = max(1, min(block_m, m))
+    bn = max(1, min(block_n, n))
+    bk = max(1, min(block_k, k))
+    # Require exact tiling (shapes in this repo are powers of two); fall
+    # back to untiled dims otherwise so arbitrary hypothesis shapes work.
+    if m % bm != 0:
+        bm = m
+    if n % bn != 0:
+        bn = n
+    if k % bk != 0:
+        bk = k
+    num_k_blocks = k // bk
+
+    kernel = functools.partial(
+        _linear_kernel, num_k_blocks=num_k_blocks, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, num_k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(block_m=128, block_n=128, block_k=128) -> int:
+    """Analytic VMEM estimate per program: one x tile, one w tile, the
+    accumulator tile, and the bias slice (EXPERIMENTS.md §Perf)."""
+    f = 4
+    return (block_m * block_k + block_n * block_k + block_m * block_n + block_n) * f
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m=128, block_n=128, block_k=128) -> float:
+    """Fraction of MXU tile slots doing useful MACs (1.0 when every tile
+    dimension divides 128)."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    eff = lambda b: min(b, 128) / 128.0
+    return eff(bm) * eff(bn) * eff(bk)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for the Pallas kernels and the full model forward.
+
+These are the correctness anchors: pytest/hypothesis compare every kernel
+against its oracle across shapes, and `model.py`'s sharded stage pipeline
+is compared against `ref_opt_forward` (the unsharded reference) both in
+python tests and — through the golden vectors in the artifact manifest —
+in the rust runtime's integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v):
+    """Causal attention, direct softmax. q/k/v: (BH, S, D) f32."""
+    _, seq, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    s = jnp.where(mask[None, :, :], s, -1.0e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def ref_linear(x, w, b, activation="none"):
+    """act(x @ w.T + b). x: (M,K), w: (N,K), b: (N,)."""
+    y = x @ w.T + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    return y
+
+
+def ref_layer_norm(x, w, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * w + b
+
+
+def ref_opt_forward(ids, weights, cfg):
+    """Unsharded OPT-style decoder forward.
+
+    Args:
+      ids: (B, S) int32 token ids.
+      weights: dict tensor-name -> array (full, unsharded), names as in
+        rust `model::spec::ModelSpec::tensors`.
+      cfg: dict with layers/hidden/heads/ffn/vocab/max_pos.
+
+    Returns:
+      (B, S, vocab) logits.
+    """
+    b, s = ids.shape
+    h = cfg["hidden"]
+    heads = cfg["heads"]
+    d = h // heads
+
+    tok = weights["decoder.embed_tokens.weight"][ids]  # (B,S,h)
+    pos = weights["decoder.embed_positions.weight"][2 : s + 2]  # OPT +2 offset
+    x = tok + pos[None, :, :]
+
+    for l in range(cfg["layers"]):
+        p = f"decoder.layers.{l}"
+        # Attention block (pre-LN).
+        y = ref_layer_norm(
+            x, weights[f"{p}.self_attn_layer_norm.weight"], weights[f"{p}.self_attn_layer_norm.bias"]
+        )
+        q = y @ weights[f"{p}.self_attn.q_proj.weight"].T + weights[f"{p}.self_attn.q_proj.bias"]
+        k = y @ weights[f"{p}.self_attn.k_proj.weight"].T + weights[f"{p}.self_attn.k_proj.bias"]
+        v = y @ weights[f"{p}.self_attn.v_proj.weight"].T + weights[f"{p}.self_attn.v_proj.bias"]
+        # (B,S,h) -> (B*heads, S, d)
+        split = lambda t: t.reshape(b, s, heads, d).transpose(0, 2, 1, 3).reshape(b * heads, s, d)
+        attn = ref_attention(split(q), split(k), split(v))
+        attn = attn.reshape(b, heads, s, d).transpose(0, 2, 1, 3).reshape(b, s, h)
+        attn = attn @ weights[f"{p}.self_attn.out_proj.weight"].T + weights[f"{p}.self_attn.out_proj.bias"]
+        x = x + attn
+        # MLP block (pre-LN, ReLU as in OPT).
+        y = ref_layer_norm(
+            x, weights[f"{p}.final_layer_norm.weight"], weights[f"{p}.final_layer_norm.bias"]
+        )
+        a = ref_linear(
+            y.reshape(b * s, h), weights[f"{p}.fc1.weight"], weights[f"{p}.fc1.bias"], "relu"
+        )
+        m = ref_linear(a, weights[f"{p}.fc2.weight"], weights[f"{p}.fc2.bias"])
+        x = x + m.reshape(b, s, h)
+
+    x = ref_layer_norm(
+        x, weights["decoder.final_layer_norm.weight"], weights["decoder.final_layer_norm.bias"]
+    )
+    # Tied lm_head.
+    return x @ weights["decoder.embed_tokens.weight"].T

@@ -1,0 +1,203 @@
+"""L2: the OPT-style decoder forward as TP-shardable stage functions.
+
+The rust runtime composes a model forward from four executables (compiled
+once per (model, tp, batch, seq) bucket and reused across layers/stages):
+
+  embed      (stage-0 prologue)  ids -> partial hidden        [all-reduce]
+  attn_half  (per layer)         hidden -> partial attn out   [all-reduce]
+  mlp_half   (per layer)         hidden -> partial mlp out    [all-reduce]
+  head       (last-stage epilogue) hidden -> local logit shard [all-gather]
+
+TP conventions (must match rust `model::shard` and `weights.py`):
+- q/k/v and fc1 are column-parallel: rank r holds output rows
+  [r·n/tp, (r+1)·n/tp); heads split with them.
+- out_proj and fc2 are row-parallel: rank r holds input columns; every
+  rank adds bias/tp so the sum over ranks reconstructs the bias once.
+- embedding is vocab-parallel: rank r embeds ids in its vocab slice and
+  contributes zero elsewhere; the (replicated) position embedding is
+  scaled by 1/tp for the same sum-once reason.
+- residual connections are applied by the *caller* (rust) after each
+  all-reduce: x = x + sum_r(partial_r).
+
+The rust side performs the all-reduces (elementwise sums over worker
+channel exchanges) and the final all-gather (concat of logit shards).
+Python never runs at serving time; these functions exist to be lowered by
+`aot.py` into HLO text artifacts.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.linear import fused_linear
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * w + b
+
+
+def embed_stage(ids, vocab_start, embed_tokens_shard, embed_positions, *, tp: int):
+    """Vocab-parallel embedding partial.
+
+    Args:
+      ids: (B, S) int32.
+      vocab_start: scalar int32 — first vocab row owned by this rank.
+      embed_tokens_shard: (vocab/tp, h).
+      embed_positions: (max_pos+2, h) replicated.
+
+    Returns:
+      (B, S, h) partial — sum over ranks gives tok_embed + pos_embed.
+    """
+    shard_rows = embed_tokens_shard.shape[0]
+    s = ids.shape[1]
+    local = ids - vocab_start
+    in_range = (local >= 0) & (local < shard_rows)
+    clipped = jnp.clip(local, 0, shard_rows - 1)
+    tok = embed_tokens_shard[clipped] * in_range[..., None].astype(jnp.float32)
+    pos = embed_positions[2 : s + 2]  # OPT's +2 position offset
+    return tok + pos[None, :, :] / float(tp)
+
+
+def attn_half(
+    hidden,
+    ln_w,
+    ln_b,
+    q_w,
+    q_b,
+    k_w,
+    k_b,
+    v_w,
+    v_b,
+    o_w,
+    o_b,
+    *,
+    heads_local: int,
+    tp: int,
+):
+    """Pre-LN attention half-layer, TP partial output.
+
+    hidden: (B, S, h). q_w/k_w/v_w: (h/tp, h); o_w: (h, h/tp).
+    Returns the partial attention output (B, S, h); caller all-reduces and
+    adds the residual.
+    """
+    b, s, h = hidden.shape
+    d = q_w.shape[0] // heads_local
+    x = layer_norm(hidden, ln_w, ln_b)
+    x2 = x.reshape(b * s, h)
+    q = x2 @ q_w.T + q_b
+    k = x2 @ k_w.T + k_b
+    v = x2 @ v_w.T + v_b
+
+    def split(t):  # (B*S, h/tp) -> (B*heads_local, S, d)
+        return (
+            t.reshape(b, s, heads_local, d).transpose(0, 2, 1, 3).reshape(b * heads_local, s, d)
+        )
+
+    attn = flash_attention(split(q), split(k), split(v))
+    attn = attn.reshape(b, heads_local, s, d).transpose(0, 2, 1, 3).reshape(b * s, heads_local * d)
+    # Row-parallel out_proj: bias contributed once across ranks.
+    out = attn @ o_w.T + o_b / float(tp)
+    return out.reshape(b, s, h)
+
+
+def mlp_half(hidden, ln_w, ln_b, fc1_w, fc1_b, fc2_w, fc2_b, *, tp: int):
+    """Pre-LN MLP half-layer (ReLU, as in OPT), TP partial output.
+
+    fc1_w: (f/tp, h) column-parallel — computed with the fused Pallas
+    linear kernel (the L1 hot spot); fc2_w: (h, f/tp) row-parallel.
+    """
+    b, s, h = hidden.shape
+    x = layer_norm(hidden, ln_w, ln_b).reshape(b * s, h)
+    a = fused_linear(x, fc1_w, fc1_b, activation="relu")
+    out = a @ fc2_w.T + fc2_b / float(tp)
+    return out.reshape(b, s, h)
+
+
+def head_stage(hidden, lnf_w, lnf_b, lm_head_shard):
+    """Final layer norm + vocab-parallel logits.
+
+    lm_head_shard: (vocab/tp, h) — this rank's logit rows. The caller
+    all-gathers (concatenates) shards into the full vocab.
+    """
+    b, s, h = hidden.shape
+    x = layer_norm(hidden, lnf_w, lnf_b)
+    return x.reshape(b * s, h) @ lm_head_shard.T
+
+
+# ---------------------------------------------------------------------------
+# Sharded-pipeline emulation (used by tests and aot golden generation; the
+# rust runtime performs exactly these reductions with worker channels).
+# ---------------------------------------------------------------------------
+
+def forward_sharded(ids, weights, cfg, tp: int):
+    """Run the full forward by composing stage functions across tp ranks
+    with explicit all-reduces, mirroring the rust execution plan."""
+    from .weights import shard_column, shard_row
+
+    b, s = ids.shape
+    vocab = cfg["vocab"]
+    heads = cfg["heads"]
+    assert heads % tp == 0 and vocab % tp == 0
+
+    # Embedding.
+    partials = []
+    for r in range(tp):
+        shard = shard_column(weights["decoder.embed_tokens.weight"], tp, r)
+        start = jnp.int32(r * (vocab // tp))
+        partials.append(
+            embed_stage(ids, start, shard, weights["decoder.embed_positions.weight"], tp=tp)
+        )
+    x = sum(partials)
+
+    for l in range(cfg["layers"]):
+        p = f"decoder.layers.{l}"
+        partials = []
+        for r in range(tp):
+            partials.append(
+                attn_half(
+                    x,
+                    weights[f"{p}.self_attn_layer_norm.weight"],
+                    weights[f"{p}.self_attn_layer_norm.bias"],
+                    shard_column(weights[f"{p}.self_attn.q_proj.weight"], tp, r),
+                    shard_column(weights[f"{p}.self_attn.q_proj.bias"], tp, r),
+                    shard_column(weights[f"{p}.self_attn.k_proj.weight"], tp, r),
+                    shard_column(weights[f"{p}.self_attn.k_proj.bias"], tp, r),
+                    shard_column(weights[f"{p}.self_attn.v_proj.weight"], tp, r),
+                    shard_column(weights[f"{p}.self_attn.v_proj.bias"], tp, r),
+                    shard_row(weights[f"{p}.self_attn.out_proj.weight"], tp, r),
+                    weights[f"{p}.self_attn.out_proj.bias"],
+                    heads_local=heads // tp,
+                    tp=tp,
+                )
+            )
+        x = x + sum(partials)
+        partials = []
+        for r in range(tp):
+            partials.append(
+                mlp_half(
+                    x,
+                    weights[f"{p}.final_layer_norm.weight"],
+                    weights[f"{p}.final_layer_norm.bias"],
+                    shard_column(weights[f"{p}.fc1.weight"], tp, r),
+                    shard_column(weights[f"{p}.fc1.bias"], tp, r),
+                    shard_row(weights[f"{p}.fc2.weight"], tp, r),
+                    weights[f"{p}.fc2.bias"],
+                    tp=tp,
+                )
+            )
+        x = x + sum(partials)
+
+    logit_shards = []
+    for r in range(tp):
+        lm = shard_column(weights["decoder.embed_tokens.weight"], tp, r)
+        logit_shards.append(
+            head_stage(
+                x,
+                weights["decoder.final_layer_norm.weight"],
+                weights["decoder.final_layer_norm.bias"],
+                lm,
+            )
+        )
+    logits = jnp.concatenate(logit_shards, axis=-1)  # all-gather
+    return logits.reshape(b, s, vocab)

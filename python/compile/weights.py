@@ -1,0 +1,124 @@
+"""Deterministic, language-portable weight generation.
+
+Real OPT checkpoints are not available offline, so model instances use
+seeded random weights (DESIGN.md §1). The generator must produce
+*identical* values in python (for the reference forward and golden
+vectors) and in rust (for the runtime's parameter buffers), so it is a
+counter-based scheme rather than a stateful RNG:
+
+    value[i] = uniform(-scale, scale) from splitmix64(tensor_seed + (i+1)·GOLDEN)
+    tensor_seed = fnv1a64(tensor_name) XOR global_seed
+
+LayerNorm weights get +1.0 so activations stay well-scaled. The rust twin
+is `runtime::weights`; `python/tests/test_weights.py` pins golden values
+that the rust unit tests also pin.
+"""
+
+import numpy as np
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+FNV_OFFSET = np.uint64(0xCBF29CE484222325)
+FNV_PRIME = np.uint64(0x100000001B3)
+
+
+def fnv1a64(name: str) -> np.uint64:
+    h = FNV_OFFSET
+    for byte in name.encode("utf-8"):
+        h = np.uint64((int(h) ^ byte) * int(FNV_PRIME) & 0xFFFFFFFFFFFFFFFF)
+    return h
+
+
+def _splitmix64_finalize(z: np.ndarray) -> np.ndarray:
+    """The splitmix64 output function, vectorized over uint64."""
+    mask = np.uint64(0xFFFFFFFFFFFFFFFF)
+    z = (z + GOLDEN) & mask
+    z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & mask
+    z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & mask
+    return z ^ (z >> np.uint64(31))
+
+
+def tensor_values(name: str, numel: int, global_seed: int, scale: float) -> np.ndarray:
+    """Flat float32 values for one tensor."""
+    seed = np.uint64(int(fnv1a64(name)) ^ (global_seed & 0xFFFFFFFFFFFFFFFF))
+    idx = (np.arange(1, numel + 1, dtype=np.uint64) * GOLDEN + seed) & np.uint64(
+        0xFFFFFFFFFFFFFFFF
+    )
+    bits = _splitmix64_finalize(idx)
+    unit = (bits >> np.uint64(11)).astype(np.float64) * (1.0 / (1 << 53))
+    vals = (unit * 2.0 - 1.0) * scale
+    return vals.astype(np.float32)
+
+
+def default_scale(name: str, hidden: int) -> float:
+    """Init scale: 1/sqrt(hidden) for matmul weights, 0.02 for embeddings,
+    biases, and layer-norm params (LN weights additionally get +1.0 in
+    `build_weights`)."""
+    if "embed" in name or name.endswith(".bias") or "layer_norm" in name:
+        return 0.02
+    return 1.0 / float(hidden) ** 0.5
+
+
+def is_layer_norm_weight(name: str) -> bool:
+    return ("layer_norm.weight" in name) or name.endswith("final_layer_norm.weight")
+
+
+def build_weights(spec: dict, global_seed: int) -> dict:
+    """Full (unsharded) weights for a model spec dict with keys
+    layers/hidden/heads/ffn/vocab/max_pos. Names and shapes exactly match
+    rust `ModelSpec::tensors`."""
+    h = spec["hidden"]
+    f = spec["ffn"]
+    out = {}
+
+    def add(name, shape):
+        vals = tensor_values(name, int(np.prod(shape)), global_seed, default_scale(name, h))
+        arr = vals.reshape(shape)
+        if is_layer_norm_weight(name):
+            arr = arr + 1.0
+        out[name] = arr
+
+    add("decoder.embed_tokens.weight", (spec["vocab"], h))
+    add("decoder.embed_positions.weight", (spec["max_pos"] + 2, h))
+    for l in range(spec["layers"]):
+        p = f"decoder.layers.{l}"
+        for proj in ["q_proj", "k_proj", "v_proj", "out_proj"]:
+            add(f"{p}.self_attn.{proj}.weight", (h, h))
+            add(f"{p}.self_attn.{proj}.bias", (h,))
+        add(f"{p}.self_attn_layer_norm.weight", (h,))
+        add(f"{p}.self_attn_layer_norm.bias", (h,))
+        add(f"{p}.fc1.weight", (f, h))
+        add(f"{p}.fc1.bias", (f,))
+        add(f"{p}.fc2.weight", (h, f))
+        add(f"{p}.fc2.bias", (h,))
+        add(f"{p}.final_layer_norm.weight", (h,))
+        add(f"{p}.final_layer_norm.bias", (h,))
+    add("decoder.final_layer_norm.weight", (h,))
+    add("decoder.final_layer_norm.bias", (h,))
+    return out
+
+
+# Sharding helpers (must mirror rust model::shard conventions exactly).
+
+def shard_column(w: np.ndarray, tp: int, rank: int) -> np.ndarray:
+    """Column-parallel: split output rows (q/k/v/fc1 weights and biases)."""
+    n = w.shape[0]
+    assert n % tp == 0
+    step = n // tp
+    return w[rank * step : (rank + 1) * step]
+
+
+def shard_row(w: np.ndarray, tp: int, rank: int) -> np.ndarray:
+    """Row-parallel: split input columns (out_proj/fc2 weights)."""
+    n = w.shape[1]
+    assert n % tp == 0
+    step = n // tp
+    return w[:, rank * step : (rank + 1) * step]
+
+
+MODEL_SPECS = {
+    # Mirrors rust model::catalog test configs.
+    "opt-test": dict(layers=4, hidden=128, heads=4, ffn=512, vocab=512, max_pos=64),
+    "opt-mini": dict(layers=8, hidden=512, heads=8, ffn=2048, vocab=4096, max_pos=128),
+}
+
+WEIGHT_SEED = 0x0C0117

@@ -1,0 +1,93 @@
+"""AOT pipeline tests: stage signatures, HLO lowering, manifest integrity,
+and golden-vector generation."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import golden_vectors, lower_artifact, stage_signature, to_hlo_text, ROLES
+from compile.kernels.ref import ref_opt_forward
+from compile.weights import MODEL_SPECS, WEIGHT_SEED, build_weights
+
+CFG = MODEL_SPECS["opt-test"]
+
+
+@pytest.mark.parametrize("role", ROLES)
+@pytest.mark.parametrize("tp", [1, 2])
+def test_stage_signatures_consistent(role, tp):
+    fn, args = stage_signature(role, CFG, tp, b=2, s=8)
+    assert callable(fn)
+    # All shapes positive, dtypes known.
+    for name, dt, shape in args:
+        assert dt in ("f32", "i32"), name
+        assert all(d > 0 for d in shape) or shape == [], name
+    # Sharded dims divide correctly.
+    if role == "attn":
+        q_w = dict((a[0], a[2]) for a in args)["q_w"]
+        assert q_w == [CFG["hidden"] // tp, CFG["hidden"]]
+    if role == "embed":
+        tok = dict((a[0], a[2]) for a in args)["embed_tokens"]
+        assert tok == [CFG["vocab"] // tp, CFG["hidden"]]
+
+
+@pytest.mark.parametrize("role", ROLES)
+def test_lowering_produces_hlo_text(role):
+    text, args = lower_artifact(role, CFG, tp=1, b=1, s=8)
+    assert "HloModule" in text
+    assert len(text) > 200
+    assert len(args) >= 4
+
+
+def test_hlo_text_has_expected_parameter_count():
+    text, args = lower_artifact("mlp", CFG, tp=2, b=1, s=8)
+    # One HLO parameter per declared arg.
+    assert text.count("parameter(") >= len(args)
+
+
+def test_golden_vectors_match_reference():
+    g = golden_vectors("opt-test", CFG)
+    ids = np.array(g["ids"], dtype=np.int32).reshape(g["batch"], g["seq"])
+    weights = {k: jnp.array(v) for k, v in build_weights(CFG, WEIGHT_SEED).items()}
+    logits = np.asarray(ref_opt_forward(jnp.array(ids), weights, CFG))
+    last = logits[:, -1, :].flatten()
+    stored = np.array(g["last_logits"], dtype=np.float32)
+    np.testing.assert_allclose(stored, last, atol=1e-5)
+    assert g["argmax"] == list(np.argmax(logits[:, -1, :], axis=-1))
+
+
+def test_manifest_on_disk_is_consistent():
+    manifest_path = Path(__file__).resolve().parents[2] / "artifacts" / "manifest.json"
+    if not manifest_path.exists():
+        pytest.skip("artifacts not built")
+    m = json.loads(manifest_path.read_text())
+    assert m["version"] == 1
+    assert m["weight_seed"] == WEIGHT_SEED
+    seen = set()
+    for art in m["artifacts"]:
+        key = (art["model"], art["tp"], art["role"], art["batch"], art["seq"])
+        assert key not in seen, f"duplicate artifact {key}"
+        seen.add(key)
+        f = manifest_path.parent / art["file"]
+        assert f.exists(), f"missing {f}"
+        assert art["model"] in m["models"]
+    for name, g in m["golden"].items():
+        vocab = m["models"][name]["vocab"]
+        assert len(g["last_logits"]) == g["batch"] * vocab
+        assert len(g["ids"]) == g["batch"] * g["seq"]
+
+
+def test_roles_cover_a_full_forward():
+    # Composing embed -> attn/mlp per layer -> head over the lowered
+    # functions (interpret path) must equal the reference forward.
+    weights = {k: jnp.array(v) for k, v in build_weights(CFG, WEIGHT_SEED).items()}
+    from compile.model import forward_sharded
+
+    rng = np.random.default_rng(7)
+    ids = jnp.array(rng.integers(0, CFG["vocab"], size=(1, 8)), dtype=jnp.int32)
+    ref = ref_opt_forward(ids, weights, CFG)
+    out = forward_sharded(ids, weights, CFG, tp=2)
+    np.testing.assert_allclose(out, ref, atol=2e-3)

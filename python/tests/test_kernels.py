@@ -1,0 +1,143 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis-swept
+across shapes — the core correctness signal for the compute layer."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, vmem_footprint_bytes
+from compile.kernels.linear import fused_linear, mxu_utilization
+from compile.kernels.ref import ref_attention, ref_layer_norm, ref_linear
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.array(RNG.normal(size=shape), dtype=jnp.float32)
+
+
+# ---------- attention ----------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4, 8]),
+    seq=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    d=st.sampled_from([4, 8, 16, 32, 64]),
+)
+def test_attention_matches_ref(bh, seq, d):
+    q, k, v = randn(bh, seq, d), randn(bh, seq, d), randn(bh, seq, d)
+    out = flash_attention(q, k, v)
+    ref = ref_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    block_q=st.sampled_from([2, 4, 8, 16]),
+    block_k=st.sampled_from([2, 4, 8, 16, 32]),
+)
+def test_attention_block_size_invariance(block_q, block_k):
+    """Tiling must never change the numerics."""
+    q, k, v = randn(4, 16, 8), randn(4, 16, 8), randn(4, 16, 8)
+    out = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    ref = ref_attention(q, k, v)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_is_causal():
+    """Changing future tokens must not change earlier outputs."""
+    q, k, v = randn(2, 8, 16), randn(2, 8, 16), randn(2, 8, 16)
+    out1 = flash_attention(q, k, v)
+    k2 = k.at[:, -1, :].set(99.0)
+    v2 = v.at[:, -1, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :-1], out2[:, :-1], atol=1e-5)
+    assert not np.allclose(out1[:, -1], out2[:, -1])
+
+
+def test_attention_first_token_copies_v():
+    """Position 0 attends only to itself: output = v[0]."""
+    q, k, v = randn(3, 8, 8), randn(3, 8, 8), randn(3, 8, 8)
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[:, 0, :], v[:, 0, :], atol=1e-5)
+
+
+def test_attention_uniform_values():
+    """If all v rows are identical, output equals that row everywhere."""
+    q, k = randn(2, 16, 8), randn(2, 16, 8)
+    row = RNG.normal(size=(8,)).astype(np.float32)
+    v = jnp.broadcast_to(jnp.array(row), (2, 16, 8))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out, v, atol=1e-5)
+
+
+def test_attention_vmem_estimate_fits_tpu_core():
+    # 16 MiB VMEM per TPU core; paper-scale OPT-13B head_dim=128.
+    assert vmem_footprint_bytes(seq=2048, head_dim=128, block_q=128, block_k=128) < 16 * 2**20
+
+
+# ---------- fused linear ----------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 8, 32, 64]),
+    n=st.sampled_from([1, 4, 16, 48, 128]),
+    k=st.sampled_from([1, 8, 32, 64, 128]),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+)
+def test_linear_matches_ref(m, n, k, act):
+    x, w, b = randn(m, k), randn(n, k), randn(n)
+    out = fused_linear(x, w, b, activation=act)
+    ref = ref_linear(x, w, b, act)
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([8, 16, 64, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 16, 64, 128]),
+)
+def test_linear_block_size_invariance(bm, bn, bk):
+    x, w, b = randn(64, 128), randn(32, 128), randn(32)
+    out = fused_linear(x, w, b, activation="relu", block_m=bm, block_n=bn, block_k=bk)
+    ref = ref_linear(x, w, b, "relu")
+    np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
+
+
+def test_linear_relu_clamps():
+    x = jnp.full((4, 8), -10.0, dtype=jnp.float32)
+    w = jnp.eye(8, dtype=jnp.float32)
+    b = jnp.zeros((8,), dtype=jnp.float32)
+    out = fused_linear(x, w, b, activation="relu")
+    assert float(jnp.max(out)) == 0.0
+
+
+def test_linear_bias_applied_once():
+    """Grid-carried accumulation must add bias only on the last K step."""
+    x = jnp.zeros((16, 256), dtype=jnp.float32)
+    w = jnp.zeros((16, 256), dtype=jnp.float32)
+    b = jnp.array(RNG.normal(size=(16,)), dtype=jnp.float32)
+    out = fused_linear(x, w, b, block_k=64)  # 4 K-steps
+    np.testing.assert_allclose(out, jnp.broadcast_to(b, (16, 16)), atol=1e-6)
+
+
+def test_linear_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        fused_linear(randn(4, 8), randn(4, 16), randn(4))
+
+
+def test_mxu_utilization_metric():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(64, 128, 128) == 0.5
+    assert 0.0 < mxu_utilization(8, 8, 8) < 0.01
+
+
+# ---------- layer norm oracle sanity ----------
+
+def test_layer_norm_normalizes():
+    x = randn(4, 64)
+    out = ref_layer_norm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.mean(np.asarray(out), axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(out), axis=-1), 1.0, atol=1e-3)

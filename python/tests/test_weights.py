@@ -1,0 +1,73 @@
+"""Weight-generation determinism and the cross-language golden values
+pinned identically in rust (`runtime::weights` unit tests)."""
+
+import numpy as np
+
+from compile.weights import (
+    MODEL_SPECS,
+    WEIGHT_SEED,
+    build_weights,
+    fnv1a64,
+    shard_column,
+    shard_row,
+    tensor_values,
+)
+
+
+def test_fnv1a64_golden():
+    # Pinned in rust runtime::weights tests — do not change.
+    assert int(fnv1a64("")) == 0xCBF29CE484222325
+    assert int(fnv1a64("a")) == 0xAF63DC4C8601EC8C
+    assert int(fnv1a64("decoder.embed_tokens.weight")) == 0x7767B2DCFFF82D57
+
+
+def test_tensor_values_golden():
+    # First four values for a known tensor/seed — pinned in rust too.
+    vals = tensor_values("decoder.embed_tokens.weight", 4, 0x0C0117, 0.02)
+    expected = [0.005162308, 0.016930485, 0.00085321523, -0.0058384575]
+    np.testing.assert_allclose(vals, expected, atol=1e-9)
+
+
+def test_deterministic_and_name_sensitive():
+    a = tensor_values("x.weight", 100, 1, 1.0)
+    b = tensor_values("x.weight", 100, 1, 1.0)
+    c = tensor_values("y.weight", 100, 1, 1.0)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+    d = tensor_values("x.weight", 100, 2, 1.0)
+    assert not np.array_equal(a, d)
+
+
+def test_values_bounded_by_scale():
+    vals = tensor_values("t", 10_000, 7, 0.5)
+    assert np.all(np.abs(vals) <= 0.5)
+    assert np.std(vals) > 0.1  # actually spread out
+
+
+def test_build_weights_shapes_match_spec():
+    cfg = MODEL_SPECS["opt-test"]
+    w = build_weights(cfg, WEIGHT_SEED)
+    h, f = cfg["hidden"], cfg["ffn"]
+    assert w["decoder.embed_tokens.weight"].shape == (cfg["vocab"], h)
+    assert w["decoder.embed_positions.weight"].shape == (cfg["max_pos"] + 2, h)
+    assert w["decoder.layers.0.fc1.weight"].shape == (f, h)
+    assert w["decoder.layers.0.fc2.weight"].shape == (h, f)
+    # 16 tensors per layer + 4.
+    assert len(w) == cfg["layers"] * 16 + 4
+
+
+def test_layer_norm_weights_near_one():
+    cfg = MODEL_SPECS["opt-test"]
+    w = build_weights(cfg, WEIGHT_SEED)
+    ln = w["decoder.layers.0.self_attn_layer_norm.weight"]
+    assert np.all(np.abs(ln - 1.0) < 0.05)
+    lnb = w["decoder.layers.0.self_attn_layer_norm.bias"]
+    assert np.all(np.abs(lnb) < 0.05)
+
+
+def test_shard_helpers_partition_exactly():
+    w = np.arange(24, dtype=np.float32).reshape(6, 4)
+    cols = [shard_column(w, 3, r) for r in range(3)]
+    np.testing.assert_array_equal(np.concatenate(cols, axis=0), w)
+    rows = [shard_row(w, 2, r) for r in range(2)]
+    np.testing.assert_array_equal(np.concatenate(rows, axis=1), w)

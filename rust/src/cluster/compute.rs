@@ -1,0 +1,174 @@
+//! Analytic inference cost model for the simulated GPUs.
+//!
+//! The paper's experiments serve OPT-13B on A100s through Colossal-AI;
+//! execution time there is dominated by per-layer framework/kernel-launch
+//! overhead and HBM weight reads at the tiny batch sizes used (input
+//! length 2–8). The model charges, per pipeline stage:
+//!
+//!   max(flops-bound, memory-bound) + layers·kernel_overhead
+//!     + 2·layers·allreduce(act_bytes, tp)      (TP only)
+//!
+//! Constants default to A100-SXM4-40GB (Perlmutter) and are calibrated in
+//! EXPERIMENTS.md §Calibration; every figure bench prints the constants it
+//! used so results are self-describing.
+
+use crate::model::spec::ModelSpec;
+
+/// Per-GPU compute/communication constants.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Peak dense fp16/bf16 throughput (FLOP/s). A100: 312e12.
+    pub peak_flops: f64,
+    /// Achievable fraction of peak for transformer inference GEMMs.
+    pub efficiency: f64,
+    /// HBM bandwidth (bytes/s). A100-40GB: 1.555e12.
+    pub hbm_bw: f64,
+    /// Per-layer framework + kernel-launch overhead (seconds). Dominates
+    /// tiny-batch latency through a Python serving stack.
+    pub kernel_overhead: f64,
+    /// Per-collective base latency (seconds).
+    pub collective_alpha: f64,
+    /// Per-GPU all-reduce bus bandwidth (bytes/s). NVLink3: ~300e9.
+    pub interconnect_bw: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel::a100()
+    }
+}
+
+impl ComputeModel {
+    pub fn a100() -> ComputeModel {
+        ComputeModel {
+            peak_flops: 312.0e12,
+            efficiency: 0.35,
+            hbm_bw: 1.555e12,
+            kernel_overhead: 2.5e-3,
+            collective_alpha: 20.0e-6,
+            interconnect_bw: 300.0e9,
+        }
+    }
+
+    /// Ring all-reduce time for `bytes` across `tp` ranks.
+    pub fn allreduce_time(&self, bytes: usize, tp: usize) -> f64 {
+        if tp <= 1 {
+            return 0.0;
+        }
+        self.collective_alpha
+            + 2.0 * (tp as f64 - 1.0) / tp as f64 * bytes as f64 / self.interconnect_bw
+    }
+
+    /// Wall time for ONE pipeline stage of a forward pass on one TP rank.
+    ///
+    /// `batch`×`seqlen` tokens; the stage owns `num_layers/pp` layers and
+    /// 1/tp of each weight matrix.
+    pub fn stage_time(
+        &self,
+        spec: &ModelSpec,
+        tp: usize,
+        pp: usize,
+        batch: usize,
+        seqlen: usize,
+    ) -> f64 {
+        assert!(tp >= 1 && pp >= 1);
+        let layers = spec.num_layers as f64 / pp as f64;
+        let frac = layers / spec.num_layers as f64;
+        let flops = spec.forward_flops(batch, seqlen) * frac / tp as f64;
+        let flops_bound = flops / (self.peak_flops * self.efficiency);
+        // Memory-bound: the stage's weight shard streams from HBM once.
+        let weight_bytes = spec.param_bytes() as f64 * frac / tp as f64;
+        let mem_bound = weight_bytes / self.hbm_bw;
+        let act_bytes = batch * seqlen * spec.hidden * spec.dtype.bytes();
+        // Two all-reduces per layer (attention out-proj, MLP fc2).
+        let comm = 2.0 * layers * self.allreduce_time(act_bytes, tp);
+        flops_bound.max(mem_bound) + layers * self.kernel_overhead + comm
+    }
+
+    /// End-to-end forward latency through the whole pipeline (stages run
+    /// back-to-back for a single batch; `pipe_latency` per hop).
+    pub fn pipeline_time(
+        &self,
+        spec: &ModelSpec,
+        tp: usize,
+        pp: usize,
+        batch: usize,
+        seqlen: usize,
+        pipe_latency: f64,
+    ) -> f64 {
+        pp as f64 * self.stage_time(spec, tp, pp, batch, seqlen)
+            + (pp as f64 - 1.0) * pipe_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog;
+
+    fn spec() -> ModelSpec {
+        catalog::opt("opt-13b").unwrap()
+    }
+
+    #[test]
+    fn allreduce_zero_for_tp1() {
+        let m = ComputeModel::a100();
+        assert_eq!(m.allreduce_time(1_000_000, 1), 0.0);
+        assert!(m.allreduce_time(1_000_000, 2) > 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_with_bytes_and_saturates_with_tp() {
+        let m = ComputeModel::a100();
+        assert!(m.allreduce_time(2_000_000, 4) > m.allreduce_time(1_000_000, 4));
+        // 2(tp-1)/tp factor: tp=4 moves more total data than tp=2.
+        assert!(m.allreduce_time(1_000_000, 4) > m.allreduce_time(1_000_000, 2));
+    }
+
+    #[test]
+    fn stage_time_positive_and_shrinks_with_parallelism() {
+        let m = ComputeModel::a100();
+        let t11 = m.stage_time(&spec(), 1, 1, 1, 2);
+        let t21 = m.stage_time(&spec(), 2, 1, 1, 2);
+        let t12 = m.stage_time(&spec(), 1, 2, 1, 2);
+        assert!(t11 > 0.0);
+        assert!(t21 < t11);
+        assert!(t12 < t11);
+    }
+
+    #[test]
+    fn opt13b_tiny_batch_latency_plausible() {
+        // Calibration target: OPT-13B, batch 1, seq 2 on one A100 through a
+        // Python serving stack is O(100 ms), mostly per-layer overhead.
+        let m = ComputeModel::a100();
+        let t = m.pipeline_time(&spec(), 1, 1, 1, 2, 0.0);
+        assert!((0.05..0.5).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn execution_faster_than_swap_at_all_scales() {
+        // Fig 5 right panel: swapping dominates end-to-end latency in every
+        // TP configuration. Check exec < 0.75 s lower-bound swap time.
+        let m = ComputeModel::a100();
+        for tp in [1, 2, 4] {
+            let t = m.pipeline_time(&spec(), tp, 1, 1, 2, 0.0);
+            assert!(t < 0.75, "tp={tp} t={t}");
+        }
+    }
+
+    #[test]
+    fn pipeline_time_adds_hop_latency() {
+        let m = ComputeModel::a100();
+        let base = m.pipeline_time(&spec(), 1, 4, 1, 2, 0.0);
+        let with_pipes = m.pipeline_time(&spec(), 1, 4, 1, 2, 0.010);
+        assert!((with_pipes - base - 0.030).abs() < 1e-9);
+    }
+
+    #[test]
+    fn large_batch_becomes_flops_bound() {
+        let m = ComputeModel::a100();
+        let t_small = m.stage_time(&spec(), 1, 1, 1, 2);
+        let t_big = m.stage_time(&spec(), 1, 1, 32, 512);
+        assert!(t_big > t_small * 2.0, "big batches must cost more: {t_big} vs {t_small}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Simulated GPU device: memory accounting plus the three execution lanes
+//! (compute stream, load stream = H2D link lane, offload stream = D2H
+//! link lane) that a Computron worker drives.
+
+use crate::cluster::clock::SimTime;
+use crate::cluster::link::{Direction, Link, LinkModel};
+use crate::cluster::stream::Stream;
+
+/// Device memory tracker with capacity enforcement and a high-water mark.
+#[derive(Clone, Debug)]
+pub struct MemTracker {
+    capacity: usize,
+    used: usize,
+    high_water: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("out of device memory: requested {requested} bytes, used {used} of {capacity}")]
+pub struct OomError {
+    pub requested: usize,
+    pub used: usize,
+    pub capacity: usize,
+}
+
+impl MemTracker {
+    pub fn new(capacity: usize) -> MemTracker {
+        MemTracker { capacity, used: 0, high_water: 0 }
+    }
+
+    pub fn alloc(&mut self, bytes: usize) -> Result<(), OomError> {
+        if self.used + bytes > self.capacity {
+            return Err(OomError { requested: bytes, used: self.used, capacity: self.capacity });
+        }
+        self.used += bytes;
+        self.high_water = self.high_water.max(self.used);
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: usize) {
+        assert!(bytes <= self.used, "freeing {bytes} with only {} used", self.used);
+        self.used -= bytes;
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn can_fit(&self, bytes: usize) -> bool {
+        self.used + bytes <= self.capacity
+    }
+}
+
+/// One simulated GPU.
+#[derive(Clone, Debug)]
+pub struct GpuDevice {
+    pub id: usize,
+    pub mem: MemTracker,
+    /// Default stream: model inference kernels.
+    pub compute: Stream,
+    /// CPU↔GPU link; its H2D lane is the load stream, D2H the offload
+    /// stream (dedicated transfer streams per §3.2).
+    pub link: Link,
+}
+
+impl GpuDevice {
+    pub fn new(id: usize, mem_capacity: usize, link_model: LinkModel) -> GpuDevice {
+        GpuDevice { id, mem: MemTracker::new(mem_capacity), compute: Stream::new(), link: Link::new(link_model) }
+    }
+
+    /// A100-40GB with a PCIe 4.0 ×16 link (the Perlmutter node).
+    pub fn a100(id: usize) -> GpuDevice {
+        GpuDevice::new(id, 40_000_000_000, LinkModel::pcie4_pinned())
+    }
+
+    /// Enqueue a parameter load (H2D) of `messages` tensors / `bytes`.
+    pub fn enqueue_load(&mut self, now: SimTime, messages: usize, bytes: usize) -> SimTime {
+        self.link.transfer(now, Direction::H2D, messages, bytes)
+    }
+
+    /// Enqueue a parameter offload (D2H).
+    pub fn enqueue_offload(&mut self, now: SimTime, messages: usize, bytes: usize) -> SimTime {
+        self.link.transfer(now, Direction::D2H, messages, bytes)
+    }
+
+    /// Enqueue an inference kernel sequence taking `duration` seconds.
+    pub fn enqueue_compute(&mut self, now: SimTime, duration: f64) -> SimTime {
+        self.compute.enqueue(now, duration)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_alloc_free_cycle() {
+        let mut m = MemTracker::new(100);
+        m.alloc(60).unwrap();
+        assert_eq!(m.used(), 60);
+        assert_eq!(m.free_bytes(), 40);
+        m.free(20);
+        assert_eq!(m.used(), 40);
+        assert_eq!(m.high_water(), 60);
+    }
+
+    #[test]
+    fn mem_rejects_overflow() {
+        let mut m = MemTracker::new(100);
+        m.alloc(80).unwrap();
+        let err = m.alloc(30).unwrap_err();
+        assert_eq!(err.requested, 30);
+        assert_eq!(err.used, 80);
+        // State unchanged after failed alloc.
+        assert_eq!(m.used(), 80);
+        assert!(m.can_fit(20));
+        assert!(!m.can_fit(21));
+    }
+
+    #[test]
+    #[should_panic(expected = "freeing")]
+    fn mem_rejects_double_free() {
+        let mut m = MemTracker::new(100);
+        m.alloc(10).unwrap();
+        m.free(20);
+    }
+
+    #[test]
+    fn paper_memory_cap_two_opt13b_fit_in_a100_grid() {
+        // §5.2: two OPT-13B instances at TP=2,PP=2 co-resident — per-GPU
+        // that is 2 × ~6 GB shards in a 40 GB A100: fits; a third would
+        // also fit per-memory, the cap in the paper is policy (N=2), not
+        // capacity. Verify our tracker agrees shards fit.
+        use crate::model::{catalog, max_shard_bytes};
+        let spec = catalog::opt("opt-13b").unwrap();
+        let shard = max_shard_bytes(&spec, 2, 2).unwrap();
+        let mut gpu = GpuDevice::a100(0);
+        gpu.mem.alloc(shard).unwrap();
+        gpu.mem.alloc(shard).unwrap();
+        assert!(gpu.mem.used() < gpu.mem.capacity());
+    }
+
+    #[test]
+    fn load_and_offload_lanes_overlap_but_compute_separate() {
+        let mut gpu = GpuDevice::new(0, 1000, LinkModel { alpha: 0.0, bandwidth: 1e9, pageable_copy_bw: f64::INFINITY });
+        let f_off = gpu.enqueue_offload(0.0, 1, 1_000_000_000);
+        let f_load = gpu.enqueue_load(0.0, 1, 1_000_000_000);
+        let f_comp = gpu.enqueue_compute(0.0, 0.5);
+        assert_eq!(f_off, 1.0);
+        assert_eq!(f_load, 1.0); // full duplex overlap
+        assert_eq!(f_comp, 0.5); // independent of transfers
+    }
+}

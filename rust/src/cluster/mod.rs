@@ -1,0 +1,21 @@
+//! Simulated GPU-cluster substrate (the paper's Perlmutter node).
+//!
+//! The real testbed (4×A100, PCIe 4.0 links, CUDA streams) is replaced by
+//! a deterministic discrete-event model with the same *semantics*:
+//! FIFO execution lanes, full-duplex α–β links, capacity-checked device
+//! memory, pinned host memory. See DESIGN.md §1 for why this preserves
+//! the paper's claims.
+
+pub mod clock;
+pub mod compute;
+pub mod gpu;
+pub mod hostmem;
+pub mod link;
+pub mod stream;
+
+pub use clock::{EventQueue, SimTime};
+pub use compute::ComputeModel;
+pub use gpu::{GpuDevice, MemTracker};
+pub use hostmem::PinnedPool;
+pub use link::{Direction, Link, LinkModel};
+pub use stream::Stream;

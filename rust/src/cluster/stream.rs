@@ -1,0 +1,88 @@
+//! CUDA-stream-like ordered execution lanes.
+//!
+//! Ops enqueued on one stream serialize FIFO; different streams on the
+//! same device run concurrently. Computron's workers use three lanes per
+//! GPU (§3.2 of the paper): the default compute stream plus dedicated
+//! load and offload streams, which is what lets parameter transfers
+//! overlap with each other and with inference.
+
+use crate::cluster::clock::SimTime;
+
+/// An ordered execution lane with known op durations.
+#[derive(Clone, Debug, Default)]
+pub struct Stream {
+    avail: SimTime,
+    busy: f64,
+    ops: u64,
+}
+
+impl Stream {
+    pub fn new() -> Stream {
+        Stream::default()
+    }
+
+    /// Enqueue an op issued at `now` taking `duration` seconds; returns the
+    /// completion time (starts when the stream drains, never before `now`).
+    pub fn enqueue(&mut self, now: SimTime, duration: f64) -> SimTime {
+        debug_assert!(duration >= 0.0);
+        let start = self.avail.max(now);
+        let finish = start + duration;
+        self.avail = finish;
+        self.busy += duration;
+        self.ops += 1;
+        finish
+    }
+
+    /// When the stream next becomes idle.
+    pub fn next_free(&self) -> SimTime {
+        self.avail
+    }
+
+    /// Total busy seconds (utilization accounting).
+    pub fn busy_time(&self) -> f64 {
+        self.busy
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_serialize() {
+        let mut s = Stream::new();
+        assert_eq!(s.enqueue(0.0, 1.0), 1.0);
+        assert_eq!(s.enqueue(0.0, 1.0), 2.0);
+        assert_eq!(s.enqueue(0.5, 0.25), 2.25);
+    }
+
+    #[test]
+    fn idle_stream_starts_at_now() {
+        let mut s = Stream::new();
+        assert_eq!(s.enqueue(10.0, 2.0), 12.0);
+        assert_eq!(s.next_free(), 12.0);
+    }
+
+    #[test]
+    fn busy_time_accumulates() {
+        let mut s = Stream::new();
+        s.enqueue(0.0, 1.5);
+        s.enqueue(0.0, 0.5);
+        assert_eq!(s.busy_time(), 2.0);
+        assert_eq!(s.ops(), 2);
+    }
+
+    #[test]
+    fn independent_streams_overlap() {
+        let mut a = Stream::new();
+        let mut b = Stream::new();
+        let fa = a.enqueue(0.0, 1.0);
+        let fb = b.enqueue(0.0, 1.0);
+        assert_eq!(fa, 1.0);
+        assert_eq!(fb, 1.0);
+    }
+}

@@ -1,0 +1,469 @@
+//! Typed configuration system.
+//!
+//! Every experiment and the serving binary are driven by a `SystemConfig`,
+//! loadable from JSON (see `configs/` for presets) or built from the
+//! programmatic presets here. Validation happens at construction so
+//! misconfigurations fail before a simulation or server starts.
+
+use crate::cluster::compute::ComputeModel;
+use crate::cluster::link::LinkModel;
+use crate::model::{catalog, spec::ModelSpec};
+use crate::util::json::Json;
+
+/// TP × PP parallel layout shared by all co-located models (the paper's
+/// homogeneity assumption, §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ParallelConfig {
+    pub fn new(tp: usize, pp: usize) -> ParallelConfig {
+        ParallelConfig { tp, pp }
+    }
+
+    /// Total workers (= GPUs) in the grid.
+    pub fn world(&self) -> usize {
+        self.tp * self.pp
+    }
+}
+
+/// Replacement policy selector (LRU is the paper's choice, §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Lfu,
+    Fifo,
+    Random,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(PolicyKind::Lru),
+            "lfu" => Some(PolicyKind::Lfu),
+            "fifo" => Some(PolicyKind::Fifo),
+            "random" => Some(PolicyKind::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::Lfu => "lfu",
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Random => "random",
+        }
+    }
+}
+
+/// How load entries are delivered to workers — the §3.2 design space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadDesign {
+    /// Computron: pipelined through stages, workers forward before the
+    /// transfer completes (Fig 4).
+    AsyncPipelined,
+    /// Naive baseline: workers block on the transfer before forwarding
+    /// (Fig 3) — no cross-stage loading parallelism.
+    SyncPipelined,
+    /// Broken baseline: engine broadcasts load entries directly to every
+    /// stage (Fig 2) — violates load/data dependencies; kept to demonstrate
+    /// the violation.
+    Broadcast,
+}
+
+impl LoadDesign {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadDesign::AsyncPipelined => "async",
+            LoadDesign::SyncPipelined => "sync",
+            LoadDesign::Broadcast => "broadcast",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LoadDesign> {
+        match s.to_ascii_lowercase().as_str() {
+            "async" => Some(LoadDesign::AsyncPipelined),
+            "sync" => Some(LoadDesign::SyncPipelined),
+            "broadcast" => Some(LoadDesign::Broadcast),
+            _ => None,
+        }
+    }
+}
+
+/// Hardware constants for the simulated cluster (defaults: Perlmutter GPU
+/// node — 4×A100-40GB, PCIe 4.0 ×16 each; see DESIGN.md §1).
+#[derive(Clone, Copy, Debug)]
+pub struct HardwareConfig {
+    /// GPU memory per device, bytes.
+    pub gpu_mem: usize,
+    /// CPU↔GPU link model (per GPU).
+    pub link: LinkModel,
+    /// Inference cost model.
+    pub compute: ComputeModel,
+    /// One-way latency of the engine↔worker / stage↔stage FIFO pipes
+    /// (the paper uses RPC pipes borrowed from Energon-AI).
+    pub pipe_latency: f64,
+    /// Worker-loop time to dispatch an async load entry (enqueue transfer
+    /// + forward), §3.2.
+    pub dispatch_overhead: f64,
+    /// Host pinned-memory budget, bytes.
+    pub pin_budget: usize,
+    /// Keep offloaded parameters pinned (§3.2). `false` switches the link
+    /// model to its pageable variant for the ablation.
+    pub pinned: bool,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        HardwareConfig {
+            gpu_mem: 40_000_000_000,
+            link: LinkModel::pcie4_pinned(),
+            compute: ComputeModel::a100(),
+            // Python RPC FIFO pipes (borrowed from Energon-AI in the
+            // paper) cost ~15 ms per hop — the source of the paper's
+            // sublinear PP swap scaling (Fig 6) and part of why mixed
+            // TP=2,PP=2 wins at world size 4 (Fig 7).
+            pipe_latency: 15.0e-3,
+            dispatch_overhead: 1.0e-3,
+            pin_budget: 128_000_000_000,
+            pinned: true,
+        }
+    }
+}
+
+impl HardwareConfig {
+    /// Effective link model honouring the `pinned` flag.
+    pub fn effective_link(&self) -> LinkModel {
+        if self.pinned {
+            self.link
+        } else {
+            LinkModel { pageable_copy_bw: 12.0e9, ..self.link }
+        }
+    }
+}
+
+/// Engine behaviour.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Maximum requests packed into one batch entry.
+    pub max_batch_size: usize,
+    /// Maximum number of models resident (or loading) in GPU memory —
+    /// the paper's co-residency cap (2 of 3, 4 of 6 in §5.2).
+    pub resident_cap: usize,
+    pub policy: PolicyKind,
+    pub load_design: LoadDesign,
+    /// Speculative prefetching (the paper's §6 future-work extension):
+    /// after submitting a batch for model M, load the Markov-predicted
+    /// next model into a free residency slot. Off by default (paper
+    /// behaviour); ablated by `benches/ablation_prefetch.rs`.
+    pub prefetch: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch_size: 8,
+            resident_cap: 2,
+            policy: PolicyKind::Lru,
+            load_design: LoadDesign::AsyncPipelined,
+            prefetch: false,
+        }
+    }
+}
+
+/// Randomized-workload parameters (§5.2): independent Gamma arrival
+/// processes per model.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Mean arrival rate per model (requests/sec); length = model count.
+    pub rates: Vec<f64>,
+    /// Coefficient of variation shared by all models (burstiness).
+    pub cv: f64,
+    /// Measured duration, seconds (paper: 30 s).
+    pub duration: f64,
+    /// Input token length per request (paper: 2 in §5.1, 8 in §5.2).
+    pub input_len: usize,
+    /// Unrecorded warmup requests per model.
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    pub fn new(rates: Vec<f64>, cv: f64) -> WorkloadConfig {
+        WorkloadConfig { rates, cv, duration: 30.0, input_len: 8, warmup: 2, seed: 0xC0117_0420 }
+    }
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Catalog model name (all instances share it — §3.1 assumption).
+    pub model: String,
+    /// Number of co-located model instances.
+    pub num_models: usize,
+    pub parallel: ParallelConfig,
+    pub hardware: HardwareConfig,
+    pub engine: EngineConfig,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("unknown model '{0}' (see model::catalog)")]
+    UnknownModel(String),
+    #[error("invalid parallel config: {0}")]
+    BadParallel(#[from] crate::model::shard::ShardError),
+    #[error("resident_cap must be >= 1")]
+    ZeroCap,
+    #[error("num_models must be >= 1")]
+    ZeroModels,
+    #[error("max_batch_size must be >= 1")]
+    ZeroBatch,
+    #[error(
+        "resident_cap {cap} x shard {shard_bytes}B exceeds GPU memory {gpu_mem}B \
+         (plus one transient shard during overlapped swaps)"
+    )]
+    CapExceedsMemory { cap: usize, shard_bytes: usize, gpu_mem: usize },
+    #[error("{0}")]
+    Json(String),
+}
+
+impl SystemConfig {
+    /// The paper's §5.1 swap-latency setup: 2 models, cap 1, worst case.
+    pub fn swap_experiment(tp: usize, pp: usize) -> SystemConfig {
+        SystemConfig {
+            model: "opt-13b".into(),
+            num_models: 2,
+            parallel: ParallelConfig::new(tp, pp),
+            hardware: HardwareConfig::default(),
+            engine: EngineConfig {
+                max_batch_size: 1,
+                resident_cap: 1,
+                ..EngineConfig::default()
+            },
+        }
+    }
+
+    /// The paper's §5.2 simulated-workload setup.
+    pub fn workload_experiment(num_models: usize, resident_cap: usize, max_batch: usize) -> SystemConfig {
+        SystemConfig {
+            model: "opt-13b".into(),
+            num_models,
+            parallel: ParallelConfig::new(2, 2),
+            hardware: HardwareConfig::default(),
+            engine: EngineConfig {
+                max_batch_size: max_batch,
+                resident_cap,
+                ..EngineConfig::default()
+            },
+        }
+    }
+
+    pub fn spec(&self) -> Result<ModelSpec, ConfigError> {
+        catalog::by_name(&self.model).ok_or_else(|| ConfigError::UnknownModel(self.model.clone()))
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let spec = self.spec()?;
+        crate::model::shard::validate(&spec, self.parallel.tp, self.parallel.pp)?;
+        if self.engine.resident_cap == 0 {
+            return Err(ConfigError::ZeroCap);
+        }
+        if self.num_models == 0 {
+            return Err(ConfigError::ZeroModels);
+        }
+        if self.engine.max_batch_size == 0 {
+            return Err(ConfigError::ZeroBatch);
+        }
+        // `cap` shards must fit in device memory. (Transfers are
+        // per-tensor granular — an overlapped swap drains the victim while
+        // the replacement fills — so the peak is cap shards, not cap+1;
+        // this is what lets §5.1 swap 24 GB models on 40 GB GPUs at TP=1.)
+        let shard_bytes =
+            crate::model::shard::max_shard_bytes(&spec, self.parallel.tp, self.parallel.pp)?;
+        let needed = shard_bytes * self.engine.resident_cap.min(self.num_models);
+        if needed > self.hardware.gpu_mem {
+            return Err(ConfigError::CapExceedsMemory {
+                cap: self.engine.resident_cap,
+                shard_bytes,
+                gpu_mem: self.hardware.gpu_mem,
+            });
+        }
+        Ok(())
+    }
+
+    // ----- JSON (de)serialization -----
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", self.model.as_str().into()),
+            ("num_models", self.num_models.into()),
+            ("tp", self.parallel.tp.into()),
+            ("pp", self.parallel.pp.into()),
+            ("max_batch_size", self.engine.max_batch_size.into()),
+            ("resident_cap", self.engine.resident_cap.into()),
+            ("policy", self.engine.policy.name().into()),
+            ("load_design", self.engine.load_design.name().into()),
+            ("prefetch", self.engine.prefetch.into()),
+            ("gpu_mem", self.hardware.gpu_mem.into()),
+            ("link_alpha", self.hardware.link.alpha.into()),
+            ("link_bandwidth", self.hardware.link.bandwidth.into()),
+            ("pipe_latency", self.hardware.pipe_latency.into()),
+            ("dispatch_overhead", self.hardware.dispatch_overhead.into()),
+            ("pinned", self.hardware.pinned.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SystemConfig, ConfigError> {
+        let e = |m: String| ConfigError::Json(m);
+        let mut cfg = SystemConfig {
+            model: j.req_str("model").map_err(|x| e(x.to_string()))?.to_string(),
+            num_models: j.req_usize("num_models").map_err(|x| e(x.to_string()))?,
+            parallel: ParallelConfig::new(
+                j.req_usize("tp").map_err(|x| e(x.to_string()))?,
+                j.req_usize("pp").map_err(|x| e(x.to_string()))?,
+            ),
+            hardware: HardwareConfig::default(),
+            engine: EngineConfig::default(),
+        };
+        if let Some(v) = j.get("max_batch_size").and_then(Json::as_usize) {
+            cfg.engine.max_batch_size = v;
+        }
+        if let Some(v) = j.get("resident_cap").and_then(Json::as_usize) {
+            cfg.engine.resident_cap = v;
+        }
+        if let Some(s) = j.get("policy").and_then(Json::as_str) {
+            cfg.engine.policy =
+                PolicyKind::parse(s).ok_or_else(|| e(format!("unknown policy '{s}'")))?;
+        }
+        if let Some(s) = j.get("load_design").and_then(Json::as_str) {
+            cfg.engine.load_design =
+                LoadDesign::parse(s).ok_or_else(|| e(format!("unknown load_design '{s}'")))?;
+        }
+        if let Some(v) = j.get("prefetch").and_then(Json::as_bool) {
+            cfg.engine.prefetch = v;
+        }
+        if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
+            cfg.hardware.gpu_mem = v;
+        }
+        if let Some(v) = j.get("link_alpha").and_then(Json::as_f64) {
+            cfg.hardware.link.alpha = v;
+        }
+        if let Some(v) = j.get("link_bandwidth").and_then(Json::as_f64) {
+            cfg.hardware.link.bandwidth = v;
+        }
+        if let Some(v) = j.get("pipe_latency").and_then(Json::as_f64) {
+            cfg.hardware.pipe_latency = v;
+        }
+        if let Some(v) = j.get("dispatch_overhead").and_then(Json::as_f64) {
+            cfg.hardware.dispatch_overhead = v;
+        }
+        if let Some(v) = j.get("pinned").and_then(Json::as_bool) {
+            cfg.hardware.pinned = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<SystemConfig> {
+        let j = Json::parse_file(path)?;
+        Ok(Self::from_json(&j)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for (tp, pp) in [(1, 1), (2, 1), (4, 1), (1, 2), (1, 4), (2, 2)] {
+            SystemConfig::swap_experiment(tp, pp).validate().unwrap();
+        }
+        SystemConfig::workload_experiment(3, 2, 8).validate().unwrap();
+        SystemConfig::workload_experiment(6, 4, 32).validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_parallel_rejected() {
+        let cfg = SystemConfig::swap_experiment(3, 1);
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadParallel(_))));
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.model = "bert-9000".into();
+        assert!(matches!(cfg.validate(), Err(ConfigError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn zero_fields_rejected() {
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.engine.resident_cap = 0;
+        assert!(matches!(cfg.validate(), Err(ConfigError::ZeroCap)));
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.num_models = 0;
+        assert!(matches!(cfg.validate(), Err(ConfigError::ZeroModels)));
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.engine.max_batch_size = 0;
+        assert!(matches!(cfg.validate(), Err(ConfigError::ZeroBatch)));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SystemConfig::workload_experiment(6, 4, 32);
+        let j = cfg.to_json();
+        let back = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.num_models, 6);
+        assert_eq!(back.parallel, cfg.parallel);
+        assert_eq!(back.engine.max_batch_size, 32);
+        assert_eq!(back.engine.resident_cap, 4);
+        assert_eq!(back.engine.policy, PolicyKind::Lru);
+    }
+
+    #[test]
+    fn json_with_overrides() {
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":2,"tp":2,"pp":2,
+                "policy":"lfu","load_design":"sync","pinned":false,
+                "link_alpha":0.001}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine.policy, PolicyKind::Lfu);
+        assert_eq!(cfg.engine.load_design, LoadDesign::SyncPipelined);
+        assert!(!cfg.hardware.pinned);
+        assert_eq!(cfg.hardware.link.alpha, 0.001);
+        // pinned=false switches the effective link to pageable.
+        assert!(cfg.hardware.effective_link().pageable_copy_bw.is_finite());
+    }
+
+    #[test]
+    fn bad_json_fields_error() {
+        let j = Json::parse(r#"{"model":"opt-13b","num_models":2,"tp":2,"pp":2,"policy":"mru"}"#)
+            .unwrap();
+        assert!(SystemConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn shipped_preset_files_load() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        for name in ["swap_tp2_pp2.json", "workload_3model.json", "workload_6model.json"] {
+            let cfg = SystemConfig::from_file(&dir.join(name))
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            cfg.validate().unwrap();
+            assert_eq!(cfg.model, "opt-13b");
+        }
+    }
+
+    #[test]
+    fn workload_config_defaults_match_paper() {
+        let w = WorkloadConfig::new(vec![10.0, 1.0, 1.0], 4.0);
+        assert_eq!(w.duration, 30.0);
+        assert_eq!(w.input_len, 8);
+    }
+}

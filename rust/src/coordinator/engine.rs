@@ -1,0 +1,760 @@
+//! The centralized engine (§3.1–§3.2): per-model queues, oldest-first
+//! batch scheduling, swap decisions, and load-dependency enforcement.
+//!
+//! The engine is a *passive* state machine: backends (the discrete-event
+//! simulator in `sim/`, the thread-based real runtime in `serving/`) feed
+//! it arrivals and completion acks and drain its action outbox. This keeps
+//! the paper's coordination logic in exactly one place, testable without
+//! any backend.
+//!
+//! Invariants enforced here (the paper's ordering rules):
+//! - a batch entry for model M is submitted only while M is `Resident`
+//!   (all workers acked M's load) — the load dependency;
+//! - a resident model with in-flight batch entries is never chosen as an
+//!   eviction victim — evicting it would invalidate entries already in
+//!   the pipes;
+//! - offload of the victim and load of the requested model are issued
+//!   back-to-back so the backend can overlap them (swap ≈ max, not sum).
+
+use std::collections::HashMap;
+
+use crate::config::EngineConfig;
+use crate::coordinator::entry::{
+    BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId,
+};
+use crate::coordinator::prefetch::MarkovPredictor;
+use crate::coordinator::queues::RequestQueues;
+use crate::coordinator::swap::{Residency, SwapManager, SwapPlan, SwapStats};
+
+/// Completion record for one request (drives every latency table/CDF).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestRecord {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: f64,
+    /// When the request's batch entry was submitted to workers.
+    pub batch_submit: f64,
+    /// When the batch's output returned to the engine.
+    pub done: f64,
+    pub batch_size: usize,
+}
+
+impl RequestRecord {
+    /// End-to-end latency (the paper's reported metric).
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+
+    /// Time spent queued at the engine (includes swap waits).
+    pub fn queue_time(&self) -> f64 {
+        self.batch_submit - self.arrival
+    }
+}
+
+/// Completion record for one swap (offload+load pair or bare load),
+/// measured the way §5.1 measures: from submission of the first entry to
+/// completion of both.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapRecord {
+    pub load_model: ModelId,
+    pub victim: Option<ModelId>,
+    pub submitted: f64,
+    pub completed: f64,
+}
+
+impl SwapRecord {
+    pub fn duration(&self) -> f64 {
+        self.completed - self.submitted
+    }
+}
+
+struct InflightLoad {
+    model: ModelId,
+    dir: LoadDirection,
+    acks_remaining: usize,
+    /// Index into `swap_pairs`.
+    pair: usize,
+}
+
+struct SwapPair {
+    load_model: ModelId,
+    victim: Option<ModelId>,
+    submitted: f64,
+    /// Entries not yet fully acked (1 or 2).
+    outstanding: usize,
+    completed: Option<f64>,
+}
+
+/// The engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    /// Worker-acks required per load entry (= tp·pp workers).
+    world: usize,
+    /// Max in-flight batch entries per model before the engine stops
+    /// draining that queue (fills the PP pipeline without starving
+    /// batching; default = pp). See DESIGN.md §5.
+    max_inflight_per_model: usize,
+    queues: RequestQueues,
+    swap: SwapManager,
+    inflight_batches: HashMap<EntryId, BatchEntry>,
+    inflight_per_model: Vec<usize>,
+    inflight_loads: HashMap<EntryId, InflightLoad>,
+    swap_pairs: Vec<SwapPair>,
+    next_entry: EntryId,
+    next_request: RequestId,
+    outbox: Vec<Entry>,
+    completed: Vec<RequestRecord>,
+    swap_records: Vec<SwapRecord>,
+    batch_submit_times: HashMap<EntryId, f64>,
+    predictor: MarkovPredictor,
+    prefetches_issued: u64,
+}
+
+impl Engine {
+    pub fn new(num_models: usize, world: usize, pp: usize, cfg: EngineConfig, seed: u64) -> Engine {
+        Engine {
+            cfg,
+            world,
+            max_inflight_per_model: pp.max(1),
+            queues: RequestQueues::new(num_models),
+            swap: SwapManager::new(num_models, cfg.resident_cap, cfg.policy, seed),
+            inflight_batches: HashMap::new(),
+            inflight_per_model: vec![0; num_models],
+            inflight_loads: HashMap::new(),
+            swap_pairs: Vec::new(),
+            next_entry: 0,
+            next_request: 0,
+            outbox: Vec::new(),
+            completed: Vec::new(),
+            swap_records: Vec::new(),
+            batch_submit_times: HashMap::new(),
+            predictor: MarkovPredictor::new(num_models),
+            prefetches_issued: 0,
+        }
+    }
+
+    /// Override the per-model in-flight batch limit (ablation knob).
+    pub fn set_max_inflight_per_model(&mut self, n: usize) {
+        assert!(n >= 1);
+        self.max_inflight_per_model = n;
+    }
+
+    /// Pre-warm initial residency (experiments start with some models
+    /// loaded; counts against the cap).
+    pub fn force_resident(&mut self, model: ModelId, now: f64) {
+        self.swap.force_resident(model, now);
+    }
+
+    // ----- inputs -----
+
+    /// A client request arrived. Returns its id. Call `drain_outbox` after.
+    pub fn on_request(&mut self, now: f64, model: ModelId, input_len: usize) -> RequestId {
+        let id = self.next_request;
+        self.next_request += 1;
+        self.predictor.observe(model);
+        self.queues.push(Request { id, model, arrival: now, input_len });
+        self.pump(now);
+        if self.cfg.prefetch {
+            self.maybe_prefetch(now, model);
+        }
+        id
+    }
+
+    /// §6 extension: speculatively swap in the predicted next model,
+    /// evicting only a completely idle victim (no queued requests, no
+    /// in-flight batches, and not the model just requested).
+    fn maybe_prefetch(&mut self, now: f64, current: ModelId) {
+        let Some(next) = self.predictor.predict_after(current) else { return };
+        if self.queues.len(next) > 0 {
+            return; // a real request is queued: the normal path handles it
+        }
+        let inflight = &self.inflight_per_model;
+        let queues = &self.queues;
+        let plan = self.swap.plan_prefetch(next, now, |m| {
+            m != current && inflight[m] == 0 && queues.len(m) == 0
+        });
+        match plan {
+            Some(victim) => {
+                self.prefetches_issued += 1;
+                self.submit_swap_entries(now, next, victim);
+            }
+            None => {}
+        }
+    }
+
+    /// Number of speculative loads issued so far.
+    pub fn prefetches_issued(&self) -> u64 {
+        self.prefetches_issued
+    }
+
+    fn submit_swap_entries(&mut self, now: f64, model: ModelId, victim: Option<ModelId>) {
+        self.submit_swap(now, model, victim);
+    }
+
+    /// Workers returned the output of a batch entry.
+    pub fn on_batch_done(&mut self, now: f64, entry_id: EntryId) {
+        let batch = self
+            .inflight_batches
+            .remove(&entry_id)
+            .unwrap_or_else(|| panic!("unknown batch entry {entry_id}"));
+        self.inflight_per_model[batch.model] -= 1;
+        let submit = self.batch_submit_times.remove(&entry_id).expect("missing submit time");
+        for req in &batch.requests {
+            self.completed.push(RequestRecord {
+                id: req.id,
+                model: req.model,
+                arrival: req.arrival,
+                batch_submit: submit,
+                done: now,
+                batch_size: batch.batch_size(),
+            });
+        }
+        self.pump(now);
+    }
+
+    /// One worker acknowledged completion of a load entry.
+    pub fn on_load_ack(&mut self, now: f64, entry_id: EntryId) {
+        let finished = {
+            let inflight = self
+                .inflight_loads
+                .get_mut(&entry_id)
+                .unwrap_or_else(|| panic!("unknown load entry {entry_id}"));
+            inflight.acks_remaining -= 1;
+            inflight.acks_remaining == 0
+        };
+        if !finished {
+            return;
+        }
+        let inflight = self.inflight_loads.remove(&entry_id).unwrap();
+        match inflight.dir {
+            LoadDirection::Load => self.swap.on_load_complete(inflight.model, now),
+            LoadDirection::Offload => self.swap.on_offload_complete(inflight.model),
+        }
+        let pair = &mut self.swap_pairs[inflight.pair];
+        pair.outstanding -= 1;
+        if pair.outstanding == 0 {
+            pair.completed = Some(now);
+            self.swap_records.push(SwapRecord {
+                load_model: pair.load_model,
+                victim: pair.victim,
+                submitted: pair.submitted,
+                completed: now,
+            });
+        }
+        self.pump(now);
+    }
+
+    // ----- outputs -----
+
+    /// Entries to deliver to workers, in submission order.
+    pub fn drain_outbox(&mut self) -> Vec<Entry> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Completed request records (drained).
+    pub fn take_completed(&mut self) -> Vec<RequestRecord> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Completed swap records (drained).
+    pub fn take_swap_records(&mut self) -> Vec<SwapRecord> {
+        std::mem::take(&mut self.swap_records)
+    }
+
+    pub fn swap_stats(&self) -> SwapStats {
+        self.swap.stats()
+    }
+
+    pub fn residency(&self, model: ModelId) -> Residency {
+        self.swap.state(model)
+    }
+
+    pub fn queued(&self, model: ModelId) -> usize {
+        self.queues.len(model)
+    }
+
+    pub fn inflight_batches(&self) -> usize {
+        self.inflight_batches.len()
+    }
+
+    /// True when nothing is queued or in flight (quiescent).
+    pub fn idle(&self) -> bool {
+        self.queues.is_empty() && self.inflight_batches.is_empty() && self.inflight_loads.is_empty()
+    }
+
+    // ----- scheduling core -----
+
+    /// Drain every schedulable queue, visiting models strictly in
+    /// oldest-queue-head order (the paper's scheduling key). Two rules
+    /// beyond the paper's prose, both needed for liveness:
+    ///
+    /// - a model whose swap-in is **Blocked** (every potential victim has
+    ///   in-flight batches) stalls all *younger* queues — otherwise a hot
+    ///   model could be re-batched forever and the blocked model's victim
+    ///   would never drain (starvation under skewed rates, which §5.2
+    ///   shows Computron tolerates);
+    /// - models that are merely **Loading** do NOT stall younger queues —
+    ///   that concurrency is the entire point of the async load-entry
+    ///   design (§3.2, Fig 4).
+    fn pump(&mut self, now: f64) {
+        loop {
+            let mut progressed = false;
+            // Snapshot of models with queued work, oldest head first.
+            let mut heads: Vec<(f64, ModelId)> = self
+                .queues
+                .nonempty_models()
+                .into_iter()
+                .map(|m| (self.queues.head_arrival(m).unwrap(), m))
+                .collect();
+            heads.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            'scan: for &(_, model) in &heads {
+                match self.swap.state(model) {
+                    Residency::Resident => {
+                        if self.inflight_per_model[model] < self.max_inflight_per_model {
+                            self.submit_batch(now, model);
+                            progressed = true;
+                            // Queue head changed; re-sort on the next loop.
+                            break 'scan;
+                        }
+                        // At its in-flight limit: its queue waits, younger
+                        // queues may proceed.
+                    }
+                    Residency::Loading | Residency::Offloading => {
+                        // In flight; batches gated until Resident.
+                    }
+                    Residency::Offloaded => {
+                        let inflight = &self.inflight_per_model;
+                        // The broadcast strawman (Fig 2) has no safe-victim
+                        // tracking at all — that is precisely why it
+                        // violates load dependencies; the pipelined designs
+                        // exclude models with in-flight batches.
+                        let broadcast = self.cfg.load_design == crate::config::LoadDesign::Broadcast;
+                        // §6 extension: predictive replacement — prefer not
+                        // to evict the model predicted to be needed next.
+                        let avoid = if self.cfg.prefetch {
+                            self.predictor.predict_after(model)
+                        } else {
+                            None
+                        };
+                        let mut plan = self.swap.plan_swap_in(model, now, |m| {
+                            (broadcast || inflight[m] == 0) && Some(m) != avoid
+                        });
+                        if plan == SwapPlan::Blocked && avoid.is_some() {
+                            // Soft preference only: fall back to the plain
+                            // filter rather than stalling.
+                            plan = self
+                                .swap
+                                .plan_swap_in(model, now, |m| broadcast || inflight[m] == 0);
+                        }
+                        match plan {
+                            SwapPlan::Start { victim } => {
+                                self.submit_swap(now, model, victim);
+                                progressed = true;
+                                break 'scan;
+                            }
+                            SwapPlan::Blocked => {
+                                // Head-of-line: stop scheduling younger
+                                // queues so a victim can drain.
+                                break 'scan;
+                            }
+                            SwapPlan::AlreadyResident | SwapPlan::AlreadyLoading => {}
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    fn submit_batch(&mut self, now: f64, model: ModelId) {
+        debug_assert!(self.swap.is_resident(model), "load dependency violated");
+        let requests = self.queues.pop_batch(model, self.cfg.max_batch_size);
+        debug_assert!(!requests.is_empty());
+        let id = self.next_entry;
+        self.next_entry += 1;
+        let entry = BatchEntry::new(id, model, requests);
+        self.swap.note_access(model, now);
+        self.inflight_per_model[model] += 1;
+        self.batch_submit_times.insert(id, now);
+        self.inflight_batches.insert(id, entry.clone());
+        self.outbox.push(Entry::Batch(entry));
+    }
+
+    fn submit_swap(&mut self, now: f64, model: ModelId, victim: Option<ModelId>) {
+        let pair_idx = self.swap_pairs.len();
+        self.swap_pairs.push(SwapPair {
+            load_model: model,
+            victim,
+            submitted: now,
+            outstanding: if victim.is_some() { 2 } else { 1 },
+            completed: None,
+        });
+        // Offload first (paper measures swap from offload submission), then
+        // the load immediately after — the backend overlaps them.
+        if let Some(v) = victim {
+            let id = self.next_entry;
+            self.next_entry += 1;
+            self.inflight_loads.insert(
+                id,
+                InflightLoad { model: v, dir: LoadDirection::Offload, acks_remaining: self.world, pair: pair_idx },
+            );
+            self.outbox.push(Entry::Load(LoadEntry { id, model: v, dir: LoadDirection::Offload }));
+        }
+        let id = self.next_entry;
+        self.next_entry += 1;
+        self.inflight_loads.insert(
+            id,
+            InflightLoad { model, dir: LoadDirection::Load, acks_remaining: self.world, pair: pair_idx },
+        );
+        self.outbox.push(Entry::Load(LoadEntry { id, model, dir: LoadDirection::Load }));
+    }
+}
+
+/// Convenience constructor used by tests and simple setups.
+pub fn engine_for(num_models: usize, tp: usize, pp: usize, cfg: EngineConfig) -> Engine {
+    Engine::new(num_models, tp * pp, pp, cfg, 0x5EED)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+
+    fn cfg(cap: usize, max_batch: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch_size: max_batch,
+            resident_cap: cap,
+            policy: PolicyKind::Lru,
+            load_design: crate::config::LoadDesign::AsyncPipelined,
+            prefetch: false,
+        }
+    }
+
+    /// Ack a load entry from all `world` workers.
+    fn ack_all(e: &mut Engine, now: f64, id: EntryId, world: usize) {
+        for _ in 0..world {
+            e.on_load_ack(now, id);
+        }
+    }
+
+    #[test]
+    fn request_to_offloaded_model_triggers_load_then_batch() {
+        let mut e = engine_for(2, 2, 2, cfg(1, 8));
+        e.on_request(0.0, 0, 8);
+        let out = e.drain_outbox();
+        // No victim (cap not reached): just a load entry.
+        assert_eq!(out.len(), 1);
+        let load_id = match &out[0] {
+            Entry::Load(l) => {
+                assert_eq!(l.model, 0);
+                assert_eq!(l.dir, LoadDirection::Load);
+                l.id
+            }
+            _ => panic!("expected load entry"),
+        };
+        // Batch must NOT be submitted until all 4 workers ack.
+        for _ in 0..3 {
+            e.on_load_ack(1.0, load_id);
+            assert!(e.drain_outbox().is_empty(), "batch submitted before load complete");
+        }
+        e.on_load_ack(1.0, load_id);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            Entry::Batch(b) => {
+                assert_eq!(b.model, 0);
+                assert_eq!(b.batch_size(), 1);
+            }
+            _ => panic!("expected batch entry"),
+        }
+    }
+
+    #[test]
+    fn swap_emits_offload_then_load() {
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 2);
+        match (&out[0], &out[1]) {
+            (Entry::Load(off), Entry::Load(load)) => {
+                assert_eq!(off.model, 0);
+                assert_eq!(off.dir, LoadDirection::Offload);
+                assert_eq!(load.model, 1);
+                assert_eq!(load.dir, LoadDirection::Load);
+            }
+            _ => panic!("expected offload+load pair"),
+        }
+    }
+
+    #[test]
+    fn swap_record_measures_pair() {
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        let out = e.drain_outbox();
+        let (off_id, load_id) = (out[0].id(), out[1].id());
+        e.on_load_ack(1.5, off_id); // offload done first
+        assert!(e.take_swap_records().is_empty());
+        e.on_load_ack(2.0, load_id);
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].load_model, 1);
+        assert_eq!(recs[0].victim, Some(0));
+        assert_eq!(recs[0].submitted, 1.0);
+        assert_eq!(recs[0].completed, 2.0);
+        assert!((recs[0].duration() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batching_packs_up_to_max() {
+        let mut e = engine_for(1, 1, 1, cfg(1, 4));
+        e.force_resident(0, 0.0);
+        // First request goes out alone (nothing else queued).
+        e.on_request(0.0, 0, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        let first = out[0].id();
+        // While the first batch is in flight (inflight limit pp=1), more
+        // requests accumulate.
+        for i in 0..6 {
+            e.on_request(0.1 * (i + 1) as f64, 0, 8);
+        }
+        assert!(e.drain_outbox().is_empty(), "limit should hold batches back");
+        // Completion frees the slot: next batch packs max_batch=4.
+        e.on_batch_done(1.0, first);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            Entry::Batch(b) => assert_eq!(b.batch_size(), 4),
+            _ => panic!(),
+        }
+        // Two requests remain queued.
+        assert_eq!(e.queued(0), 2);
+    }
+
+    #[test]
+    fn oldest_head_served_when_choice_exists() {
+        // One pump with a genuine choice: model 0 becomes resident via a
+        // load ack while BOTH models 0 and 1 have queued requests; model
+        // 1's head is older and model 1 is already resident with a free
+        // slot — the engine must submit model 1's batch first.
+        let mut e = engine_for(2, 1, 1, cfg(2, 8));
+        e.force_resident(1, 0.0);
+        e.set_max_inflight_per_model(1);
+        // Occupy model 1 so its later request queues.
+        e.on_request(0.0, 1, 8);
+        let busy1 = e.drain_outbox()[0].id();
+        // Request model 0 (offloaded) -> load entry; request model 1 queues.
+        e.on_request(1.0, 0, 8);
+        let load0 = e.drain_outbox()[0].id();
+        e.on_request(2.0, 1, 8);
+        assert!(e.drain_outbox().is_empty());
+        // Free model 1 while model 0 still loading: model 1's (older) head
+        // is served.
+        e.on_batch_done(3.0, busy1);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].model(), 1);
+        // Now the load ack makes model 0 resident: model 0's request (the
+        // only remaining queued one) goes out.
+        e.on_load_ack(4.0, load0);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].model(), 0);
+    }
+
+    #[test]
+    fn blocked_swap_stalls_younger_queues_until_victim_drains() {
+        // Starvation guard: model 0 (resident, hot) is busy; model 1's
+        // swap-in is blocked because model 0 is the only victim. A younger
+        // request for model 0 must NOT be submitted when model 0's batch
+        // completes — the engine holds it back so model 0 drains and the
+        // swap can start.
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        e.on_request(0.0, 0, 8);
+        let batch0 = e.drain_outbox()[0].id();
+        e.on_request(1.0, 1, 8); // older head for model 1, blocked
+        e.on_request(2.0, 0, 8); // younger request for the hot model
+        assert!(e.drain_outbox().is_empty());
+        e.on_batch_done(3.0, batch0);
+        let out = e.drain_outbox();
+        // The swap for model 1 must start; model 0's younger request must
+        // still be queued (not batched).
+        assert_eq!(out.len(), 2, "expected offload+load, got {out:?}");
+        assert!(out.iter().all(Entry::is_load));
+        assert_eq!(e.queued(0), 1);
+    }
+
+    #[test]
+    fn model_with_inflight_batches_not_evicted() {
+        let mut e = engine_for(3, 1, 1, cfg(2, 8));
+        e.force_resident(0, 0.0);
+        e.force_resident(1, 0.0);
+        // Model 0 has an in-flight batch (and was used LEAST recently, so
+        // plain LRU would pick it).
+        e.on_request(0.0, 0, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1);
+        e.on_request(0.5, 1, 8); // bumps model 1 recency AND occupies it? no: completes below
+        let out1 = e.drain_outbox();
+        e.on_batch_done(0.6, out1[0].id()); // model 1 now idle but recent
+        // Request model 2: must evict model 1 (idle) not model 0 (in flight),
+        // even though 0 is older by LRU.
+        e.on_request(1.0, 2, 8);
+        let out = e.drain_outbox();
+        let offload = out.iter().find_map(|en| match en {
+            Entry::Load(l) if l.dir == LoadDirection::Offload => Some(l.model),
+            _ => None,
+        });
+        assert_eq!(offload, Some(1));
+    }
+
+    #[test]
+    fn blocked_swap_retries_after_completion() {
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        // Model 0 busy with a batch; request for model 1 cannot evict.
+        e.on_request(0.0, 0, 8);
+        let batch0 = e.drain_outbox()[0].id();
+        e.on_request(0.5, 1, 8);
+        assert!(e.drain_outbox().is_empty(), "no eviction while victim busy");
+        // Batch completes → pump retries the swap.
+        e.on_batch_done(1.0, batch0);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 2, "offload+load after unblock");
+        assert_eq!(out[0].model(), 0);
+        assert_eq!(out[1].model(), 1);
+    }
+
+    #[test]
+    fn request_records_complete_lifecycle() {
+        let mut e = engine_for(1, 2, 1, cfg(1, 8));
+        e.on_request(0.0, 0, 4);
+        let load_id = e.drain_outbox()[0].id();
+        ack_all(&mut e, 2.0, load_id, 2);
+        let batch_id = e.drain_outbox()[0].id();
+        e.on_batch_done(3.5, batch_id);
+        let recs = e.take_completed();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.model, 0);
+        assert_eq!(r.arrival, 0.0);
+        assert_eq!(r.batch_submit, 2.0);
+        assert_eq!(r.done, 3.5);
+        assert!((r.latency() - 3.5).abs() < 1e-12);
+        assert!((r.queue_time() - 2.0).abs() < 1e-12);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn alternating_worst_case_swaps_every_request() {
+        // §5.1's worst case: cap 1, alternating blocking requests.
+        let mut e = engine_for(2, 1, 1, cfg(1, 1));
+        e.force_resident(0, 0.0);
+        let mut now = 0.0;
+        let mut swaps = 0;
+        for i in 0..6 {
+            let model = 1 - (i % 2); // start with model 1 (0 resident)
+            e.on_request(now, model, 2);
+            let out = e.drain_outbox();
+            // Expect offload+load then (after acks) a batch.
+            assert_eq!(out.len(), 2, "iteration {i}");
+            swaps += 1;
+            now += 1.0;
+            e.on_load_ack(now, out[0].id());
+            e.on_load_ack(now, out[1].id());
+            let batch = e.drain_outbox();
+            assert_eq!(batch.len(), 1);
+            now += 0.1;
+            e.on_batch_done(now, batch[0].id());
+        }
+        assert_eq!(e.take_swap_records().len(), swaps);
+        assert_eq!(e.swap_stats().loads_completed as usize, swaps);
+    }
+
+    #[test]
+    fn no_batch_for_nonresident_model_ever() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        // Property: under random request/ack interleavings, every batch
+        // entry in the outbox is for a currently-resident model at the
+        // moment of submission (checked inside the engine via residency
+        // queries right after drain).
+        prop::check(
+            "load-dependency",
+            |rng: &mut Rng| {
+                let models = prop::usize_in(rng, 2, 4);
+                let cap = prop::usize_in(rng, 1, models);
+                let reqs: Vec<usize> = (0..32).map(|_| rng.index(models)).collect();
+                (models, cap, reqs)
+            },
+            |(models, cap, reqs)| {
+                let world = 2;
+                let mut e = Engine::new(
+                    *models,
+                    world,
+                    1,
+                    cfg(*cap, 4),
+                    7,
+                );
+                let mut now = 0.0;
+                let mut pending_loads: Vec<EntryId> = Vec::new();
+                let mut pending_batches: Vec<EntryId> = Vec::new();
+                for &m in reqs {
+                    now += 0.1;
+                    e.on_request(now, m, 8);
+                    // Drain and validate.
+                    for entry in e.drain_outbox() {
+                        match entry {
+                            Entry::Batch(b) => {
+                                if e.residency(b.model) != Residency::Resident {
+                                    return Err(format!(
+                                        "batch for non-resident model {}",
+                                        b.model
+                                    ));
+                                }
+                                pending_batches.push(b.id);
+                            }
+                            Entry::Load(l) => pending_loads.push(l.id),
+                        }
+                    }
+                    // Randomly complete some outstanding work.
+                    if !pending_loads.is_empty() && now as u64 % 2 == 0 {
+                        let id = pending_loads.remove(0);
+                        now += 0.5;
+                        for _ in 0..world {
+                            e.on_load_ack(now, id);
+                        }
+                        for entry in e.drain_outbox() {
+                            match entry {
+                                Entry::Batch(b) => {
+                                    if e.residency(b.model) != Residency::Resident {
+                                        return Err("batch for non-resident".into());
+                                    }
+                                    pending_batches.push(b.id);
+                                }
+                                Entry::Load(l) => pending_loads.push(l.id),
+                            }
+                        }
+                    }
+                    if pending_batches.len() > 2 {
+                        let id = pending_batches.remove(0);
+                        now += 0.2;
+                        e.on_batch_done(now, id);
+                        for entry in e.drain_outbox() {
+                            match entry {
+                                Entry::Batch(b) => pending_batches.push(b.id),
+                                Entry::Load(l) => pending_loads.push(l.id),
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Requests and the two engine→worker action types from §3 of the paper:
+//! **batch entries** (evaluate a model on a packed batch of requests) and
+//! **load entries** (load or offload one model's parameter shards).
+
+/// Index of a registered model instance.
+pub type ModelId = usize;
+/// Unique id of one client request.
+pub type RequestId = u64;
+/// Unique id of one engine-submitted entry (batch or load).
+pub type EntryId = u64;
+
+/// One inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: ModelId,
+    /// Arrival timestamp at the engine (sim seconds or unix seconds).
+    pub arrival: f64,
+    /// Input token length.
+    pub input_len: usize,
+}
+
+/// Direction of a load entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LoadDirection {
+    /// CPU → GPU: make the model resident.
+    Load,
+    /// GPU → CPU: evict the model (parameters stay pinned on the host).
+    Offload,
+}
+
+impl LoadDirection {
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadDirection::Load => "load",
+            LoadDirection::Offload => "offload",
+        }
+    }
+}
+
+/// A packed batch of requests for one model, pipelined through all stages.
+#[derive(Clone, Debug)]
+pub struct BatchEntry {
+    pub id: EntryId,
+    pub model: ModelId,
+    pub requests: Vec<Request>,
+    /// Max input length in the batch (padding length for execution).
+    pub seqlen: usize,
+}
+
+impl BatchEntry {
+    pub fn new(id: EntryId, model: ModelId, requests: Vec<Request>) -> BatchEntry {
+        assert!(!requests.is_empty(), "empty batch entry");
+        debug_assert!(requests.iter().all(|r| r.model == model));
+        let seqlen = requests.iter().map(|r| r.input_len).max().unwrap();
+        BatchEntry { id, model, requests, seqlen }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// A command to move one model's shards between CPU and GPU memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadEntry {
+    pub id: EntryId,
+    pub model: ModelId,
+    pub dir: LoadDirection,
+}
+
+/// Anything the engine submits into the worker pipeline.
+#[derive(Clone, Debug)]
+pub enum Entry {
+    Batch(BatchEntry),
+    Load(LoadEntry),
+}
+
+impl Entry {
+    pub fn id(&self) -> EntryId {
+        match self {
+            Entry::Batch(b) => b.id,
+            Entry::Load(l) => l.id,
+        }
+    }
+
+    pub fn model(&self) -> ModelId {
+        match self {
+            Entry::Batch(b) => b.model,
+            Entry::Load(l) => l.model,
+        }
+    }
+
+    pub fn is_load(&self) -> bool {
+        matches!(self, Entry::Load(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: RequestId, model: ModelId, len: usize) -> Request {
+        Request { id, model, arrival: 0.0, input_len: len }
+    }
+
+    #[test]
+    fn batch_entry_packs_and_pads() {
+        let b = BatchEntry::new(1, 0, vec![req(1, 0, 2), req(2, 0, 8), req(3, 0, 4)]);
+        assert_eq!(b.batch_size(), 3);
+        assert_eq!(b.seqlen, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch entry")]
+    fn empty_batch_rejected() {
+        BatchEntry::new(1, 0, vec![]);
+    }
+
+    #[test]
+    fn entry_accessors() {
+        let b = Entry::Batch(BatchEntry::new(7, 3, vec![req(1, 3, 2)]));
+        let l = Entry::Load(LoadEntry { id: 8, model: 4, dir: LoadDirection::Load });
+        assert_eq!(b.id(), 7);
+        assert_eq!(b.model(), 3);
+        assert!(!b.is_load());
+        assert_eq!(l.id(), 8);
+        assert_eq!(l.model(), 4);
+        assert!(l.is_load());
+        assert_eq!(LoadDirection::Load.name(), "load");
+        assert_eq!(LoadDirection::Offload.name(), "offload");
+    }
+}

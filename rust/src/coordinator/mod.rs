@@ -1,0 +1,16 @@
+//! The paper's system contribution: the centralized engine, per-model
+//! request queues, dynamic batching, swap manager with pluggable
+//! replacement policies, and the batch/load entry types that flow through
+//! the worker pipelines.
+
+pub mod engine;
+pub mod entry;
+pub mod policy;
+pub mod prefetch;
+pub mod queues;
+pub mod swap;
+
+pub use engine::{Engine, RequestRecord, SwapRecord};
+pub use entry::{BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId};
+pub use queues::RequestQueues;
+pub use swap::{Residency, SwapManager, SwapPlan, SwapStats};

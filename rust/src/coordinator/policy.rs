@@ -1,0 +1,269 @@
+//! Model replacement policies.
+//!
+//! The paper uses LRU (§4). The trait keeps the policy pluggable so the
+//! ablation bench can compare LRU against LFU / FIFO / Random victim
+//! selection under the same workloads.
+
+use crate::coordinator::entry::ModelId;
+use crate::util::rng::Rng;
+
+/// Chooses which resident model to evict when a swap-in needs room.
+pub trait ReplacementPolicy: Send {
+    /// Record that `model` was just used (batch submitted / load issued).
+    fn on_access(&mut self, model: ModelId, now: f64);
+
+    /// Record that `model` became resident.
+    fn on_insert(&mut self, model: ModelId, now: f64);
+
+    /// Record that `model` was evicted.
+    fn on_evict(&mut self, model: ModelId);
+
+    /// Pick a victim among `candidates` (already filtered to evictable
+    /// models). Returns `None` iff `candidates` is empty.
+    fn victim(&mut self, candidates: &[ModelId]) -> Option<ModelId>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Least-recently-used — the paper's policy.
+#[derive(Default)]
+pub struct Lru {
+    last_access: Vec<f64>,
+}
+
+impl Lru {
+    pub fn new(num_models: usize) -> Lru {
+        Lru { last_access: vec![f64::NEG_INFINITY; num_models] }
+    }
+
+    fn slot(&mut self, model: ModelId) -> &mut f64 {
+        if model >= self.last_access.len() {
+            self.last_access.resize(model + 1, f64::NEG_INFINITY);
+        }
+        &mut self.last_access[model]
+    }
+}
+
+impl ReplacementPolicy for Lru {
+    fn on_access(&mut self, model: ModelId, now: f64) {
+        *self.slot(model) = now;
+    }
+
+    fn on_insert(&mut self, model: ModelId, now: f64) {
+        *self.slot(model) = now;
+    }
+
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[ModelId]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                let ta = self.last_access.get(a).copied().unwrap_or(f64::NEG_INFINITY);
+                let tb = self.last_access.get(b).copied().unwrap_or(f64::NEG_INFINITY);
+                ta.total_cmp(&tb).then(a.cmp(&b))
+            })
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// Least-frequently-used with access counts.
+#[derive(Default)]
+pub struct Lfu {
+    counts: Vec<u64>,
+}
+
+impl Lfu {
+    pub fn new(num_models: usize) -> Lfu {
+        Lfu { counts: vec![0; num_models] }
+    }
+
+    fn slot(&mut self, model: ModelId) -> &mut u64 {
+        if model >= self.counts.len() {
+            self.counts.resize(model + 1, 0);
+        }
+        &mut self.counts[model]
+    }
+}
+
+impl ReplacementPolicy for Lfu {
+    fn on_access(&mut self, model: ModelId, _now: f64) {
+        *self.slot(model) += 1;
+    }
+
+    fn on_insert(&mut self, _model: ModelId, _now: f64) {}
+
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[ModelId]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|&m| (self.counts.get(m).copied().unwrap_or(0), m))
+    }
+
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+}
+
+/// First-in-first-out by residency insertion order.
+#[derive(Default)]
+pub struct Fifo {
+    order: Vec<ModelId>,
+    counter: u64,
+    inserted_at: Vec<u64>,
+}
+
+impl Fifo {
+    pub fn new(num_models: usize) -> Fifo {
+        Fifo { order: Vec::new(), counter: 0, inserted_at: vec![u64::MAX; num_models] }
+    }
+}
+
+impl ReplacementPolicy for Fifo {
+    fn on_access(&mut self, _model: ModelId, _now: f64) {}
+
+    fn on_insert(&mut self, model: ModelId, _now: f64) {
+        if model >= self.inserted_at.len() {
+            self.inserted_at.resize(model + 1, u64::MAX);
+        }
+        self.inserted_at[model] = self.counter;
+        self.counter += 1;
+        self.order.push(model);
+    }
+
+    fn on_evict(&mut self, model: ModelId) {
+        self.order.retain(|&m| m != model);
+    }
+
+    fn victim(&mut self, candidates: &[ModelId]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|&m| (self.inserted_at.get(m).copied().unwrap_or(u64::MAX), m))
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Uniform random victim (seeded; deterministic in experiments).
+pub struct RandomPolicy {
+    rng: Rng,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> RandomPolicy {
+        RandomPolicy { rng: Rng::seeded(seed) }
+    }
+}
+
+impl ReplacementPolicy for RandomPolicy {
+    fn on_access(&mut self, _model: ModelId, _now: f64) {}
+    fn on_insert(&mut self, _model: ModelId, _now: f64) {}
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[ModelId]) -> Option<ModelId> {
+        if candidates.is_empty() {
+            None
+        } else {
+            Some(candidates[self.rng.index(candidates.len())])
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Construct a policy from config.
+pub fn make_policy(kind: crate::config::PolicyKind, num_models: usize, seed: u64) -> Box<dyn ReplacementPolicy> {
+    use crate::config::PolicyKind;
+    match kind {
+        PolicyKind::Lru => Box::new(Lru::new(num_models)),
+        PolicyKind::Lfu => Box::new(Lfu::new(num_models)),
+        PolicyKind::Fifo => Box::new(Fifo::new(num_models)),
+        PolicyKind::Random => Box::new(RandomPolicy::new(seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_picks_least_recent() {
+        let mut p = Lru::new(3);
+        p.on_insert(0, 1.0);
+        p.on_insert(1, 2.0);
+        p.on_insert(2, 3.0);
+        p.on_access(0, 4.0); // 0 is now most recent
+        assert_eq!(p.victim(&[0, 1, 2]), Some(1));
+        assert_eq!(p.victim(&[0, 2]), Some(2));
+    }
+
+    #[test]
+    fn lru_never_accessed_evicted_first() {
+        let mut p = Lru::new(2);
+        p.on_access(1, 5.0);
+        assert_eq!(p.victim(&[0, 1]), Some(0));
+    }
+
+    #[test]
+    fn lru_empty_candidates_none() {
+        let mut p = Lru::new(2);
+        assert_eq!(p.victim(&[]), None);
+    }
+
+    #[test]
+    fn lfu_picks_least_frequent() {
+        let mut p = Lfu::new(3);
+        for _ in 0..5 {
+            p.on_access(0, 0.0);
+        }
+        p.on_access(1, 0.0);
+        p.on_access(1, 0.0);
+        p.on_access(2, 0.0);
+        assert_eq!(p.victim(&[0, 1, 2]), Some(2));
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_resident() {
+        let mut p = Fifo::new(3);
+        p.on_insert(2, 0.0);
+        p.on_insert(0, 1.0);
+        p.on_insert(1, 2.0);
+        p.on_access(2, 99.0); // access must not matter for FIFO
+        assert_eq!(p.victim(&[0, 1, 2]), Some(2));
+        p.on_evict(2);
+        p.on_insert(2, 3.0);
+        assert_eq!(p.victim(&[0, 1, 2]), Some(0));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed_and_in_range() {
+        let mut a = RandomPolicy::new(9);
+        let mut b = RandomPolicy::new(9);
+        for _ in 0..50 {
+            let va = a.victim(&[3, 5, 7]).unwrap();
+            let vb = b.victim(&[3, 5, 7]).unwrap();
+            assert_eq!(va, vb);
+            assert!([3, 5, 7].contains(&va));
+        }
+    }
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        use crate::config::PolicyKind;
+        for kind in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Fifo, PolicyKind::Random] {
+            let p = make_policy(kind, 4, 1);
+            assert_eq!(p.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Speculative model prefetching — the paper's §6 future-work extension,
+//! implemented behind `EngineConfig::prefetch`.
+//!
+//! "Requests to different models are often not independent processes, but
+//! instead have predictable patterns, such as … a subset of models often
+//! being requested in some fixed order." The predictor is a first-order
+//! Markov chain over consecutive requested models; when a batch for model
+//! M is submitted and a free residency slot exists, the engine issues a
+//! speculative load for argmax P(next | M) — turning the next request's
+//! on-demand swap into a hit. Ablated by `benches/ablation_prefetch.rs`.
+
+use crate::coordinator::entry::ModelId;
+
+/// First-order Markov next-model predictor.
+#[derive(Clone, Debug)]
+pub struct MarkovPredictor {
+    /// transitions[a][b] = count of (request a) immediately followed by
+    /// (request b).
+    transitions: Vec<Vec<u64>>,
+    last: Option<ModelId>,
+    /// Minimum observations of a transition before we act on it.
+    min_count: u64,
+}
+
+impl MarkovPredictor {
+    pub fn new(num_models: usize) -> MarkovPredictor {
+        MarkovPredictor {
+            transitions: vec![vec![0; num_models]; num_models],
+            last: None,
+            min_count: 2,
+        }
+    }
+
+    /// Record an observed request.
+    pub fn observe(&mut self, model: ModelId) {
+        if let Some(prev) = self.last {
+            self.transitions[prev][model] += 1;
+        }
+        self.last = Some(model);
+    }
+
+    /// Most likely next model after `model`, if seen often enough and not
+    /// a self-transition (the current model is already resident).
+    pub fn predict_after(&self, model: ModelId) -> Option<ModelId> {
+        let row = self.transitions.get(model)?;
+        let (best, &count) = row.iter().enumerate().max_by_key(|&(i, c)| (*c, i))?;
+        if count >= self.min_count && best != model {
+            Some(best)
+        } else {
+            None
+        }
+    }
+
+    /// Total observed transitions (diagnostics).
+    pub fn observations(&self) -> u64 {
+        self.transitions.iter().flatten().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_cyclic_pattern() {
+        let mut p = MarkovPredictor::new(3);
+        for _ in 0..4 {
+            p.observe(0);
+            p.observe(1);
+            p.observe(2);
+        }
+        assert_eq!(p.predict_after(0), Some(1));
+        assert_eq!(p.predict_after(1), Some(2));
+        assert_eq!(p.predict_after(2), Some(0));
+    }
+
+    #[test]
+    fn needs_min_observations() {
+        let mut p = MarkovPredictor::new(2);
+        p.observe(0);
+        p.observe(1); // one 0->1 transition: below threshold
+        assert_eq!(p.predict_after(0), None);
+        p.observe(0);
+        p.observe(1);
+        assert_eq!(p.predict_after(0), Some(1));
+    }
+
+    #[test]
+    fn ignores_self_transitions() {
+        let mut p = MarkovPredictor::new(2);
+        for _ in 0..10 {
+            p.observe(0);
+        }
+        assert_eq!(p.predict_after(0), None);
+    }
+
+    #[test]
+    fn empty_predictor_predicts_nothing() {
+        let p = MarkovPredictor::new(4);
+        for m in 0..4 {
+            assert_eq!(p.predict_after(m), None);
+        }
+        assert_eq!(p.observations(), 0);
+    }
+
+    #[test]
+    fn picks_majority_branch() {
+        let mut p = MarkovPredictor::new(3);
+        for _ in 0..5 {
+            p.observe(0);
+            p.observe(1);
+        }
+        for _ in 0..2 {
+            p.observe(0);
+            p.observe(2);
+        }
+        assert_eq!(p.predict_after(0), Some(1));
+    }
+}

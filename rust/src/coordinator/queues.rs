@@ -1,0 +1,151 @@
+//! Per-model timestamped request queues (§3.1).
+//!
+//! The engine "pushes the request object along with a timestamp into a
+//! queue specifically for that model", then repeatedly picks the queue
+//! whose head is oldest and packs a batch from it.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::entry::{ModelId, Request};
+
+/// All per-model FIFO queues.
+#[derive(Debug)]
+pub struct RequestQueues {
+    queues: Vec<VecDeque<Request>>,
+}
+
+impl RequestQueues {
+    pub fn new(num_models: usize) -> RequestQueues {
+        RequestQueues { queues: (0..num_models).map(|_| VecDeque::new()).collect() }
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Enqueue a request into its model's queue.
+    pub fn push(&mut self, req: Request) {
+        let q = &mut self.queues[req.model];
+        debug_assert!(
+            q.back().map_or(true, |r| r.arrival <= req.arrival),
+            "arrivals must be pushed in time order per model"
+        );
+        q.push_back(req);
+    }
+
+    /// Arrival time of the oldest request for `model`, if any.
+    pub fn head_arrival(&self, model: ModelId) -> Option<f64> {
+        self.queues[model].front().map(|r| r.arrival)
+    }
+
+    /// Model whose queue head is oldest (the paper's scheduling key),
+    /// restricted to `eligible`. Ties break by lowest model id.
+    pub fn oldest_head(&self, eligible: impl Fn(ModelId) -> bool) -> Option<ModelId> {
+        let mut best: Option<(f64, ModelId)> = None;
+        for (m, q) in self.queues.iter().enumerate() {
+            if !eligible(m) {
+                continue;
+            }
+            if let Some(front) = q.front() {
+                match best {
+                    Some((t, _)) if t <= front.arrival => {}
+                    _ => best = Some((front.arrival, m)),
+                }
+            }
+        }
+        best.map(|(_, m)| m)
+    }
+
+    /// Pop up to `max` oldest requests from `model`'s queue.
+    pub fn pop_batch(&mut self, model: ModelId, max: usize) -> Vec<Request> {
+        let q = &mut self.queues[model];
+        let n = q.len().min(max);
+        q.drain(..n).collect()
+    }
+
+    pub fn len(&self, model: ModelId) -> usize {
+        self.queues[model].len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Models with at least one queued request.
+    pub fn nonempty_models(&self) -> Vec<ModelId> {
+        (0..self.queues.len()).filter(|&m| !self.queues[m].is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: ModelId, arrival: f64) -> Request {
+        Request { id, model, arrival, input_len: 8 }
+    }
+
+    #[test]
+    fn push_pop_fifo_per_model() {
+        let mut q = RequestQueues::new(2);
+        q.push(req(1, 0, 1.0));
+        q.push(req(2, 0, 2.0));
+        q.push(req(3, 1, 1.5));
+        let batch = q.pop_batch(0, 10);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(q.len(0), 0);
+        assert_eq!(q.len(1), 1);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let mut q = RequestQueues::new(1);
+        for i in 0..10 {
+            q.push(req(i, 0, i as f64));
+        }
+        let batch = q.pop_batch(0, 4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(q.len(0), 6);
+    }
+
+    #[test]
+    fn oldest_head_picks_globally_oldest() {
+        let mut q = RequestQueues::new(3);
+        q.push(req(1, 0, 5.0));
+        q.push(req(2, 1, 3.0));
+        q.push(req(3, 2, 4.0));
+        assert_eq!(q.oldest_head(|_| true), Some(1));
+        // With model 1 ineligible (e.g. loading), next oldest wins.
+        assert_eq!(q.oldest_head(|m| m != 1), Some(2));
+    }
+
+    #[test]
+    fn oldest_head_tie_breaks_by_id() {
+        let mut q = RequestQueues::new(2);
+        q.push(req(1, 1, 2.0));
+        q.push(req(2, 0, 2.0));
+        assert_eq!(q.oldest_head(|_| true), Some(0));
+    }
+
+    #[test]
+    fn oldest_head_empty_none() {
+        let q = RequestQueues::new(2);
+        assert_eq!(q.oldest_head(|_| true), None);
+    }
+
+    #[test]
+    fn counters() {
+        let mut q = RequestQueues::new(3);
+        assert!(q.is_empty());
+        q.push(req(1, 0, 1.0));
+        q.push(req(2, 2, 1.0));
+        assert_eq!(q.total_len(), 2);
+        assert_eq!(q.nonempty_models(), vec![0, 2]);
+        assert!(!q.is_empty());
+    }
+}

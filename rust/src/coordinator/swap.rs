@@ -1,0 +1,364 @@
+//! Swap manager: model residency state machine, co-residency cap, and
+//! victim selection (§3.2, §4).
+//!
+//! The engine owns all swapping decisions (workers only execute load
+//! entries). The manager tracks each model through
+//! `Offloaded → Loading → Resident → Offloading → Offloaded` and enforces
+//! the experiment's co-residency cap (paper: 1 in §5.1; 2-of-3 and 4-of-6
+//! in §5.2). Loading models count toward the cap (their memory is being
+//! filled); offloading models do not (their memory is draining and the
+//! overlapped-swap design relies on starting the load concurrently).
+
+use crate::config::PolicyKind;
+use crate::coordinator::entry::ModelId;
+use crate::coordinator::policy::{make_policy, ReplacementPolicy};
+
+/// Where a model's parameters currently live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Pinned in CPU memory only.
+    Offloaded,
+    /// Load entry in flight (CPU → GPU).
+    Loading,
+    /// Fully in GPU memory; batch entries may be submitted.
+    Resident,
+    /// Offload entry in flight (GPU → CPU).
+    Offloading,
+}
+
+/// Outcome of a swap-in attempt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SwapPlan {
+    /// Model already resident — submit batches directly.
+    AlreadyResident,
+    /// A load for this model is already in flight — wait.
+    AlreadyLoading,
+    /// Begin a swap: offload `victim` (if any) and load the model. The
+    /// manager has already transitioned both states.
+    Start { victim: Option<ModelId> },
+    /// Cap reached and no evictable victim right now — retry after the
+    /// next completion event.
+    Blocked,
+}
+
+/// Aggregate swap counters for reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SwapStats {
+    pub loads_started: u64,
+    pub offloads_started: u64,
+    pub loads_completed: u64,
+    pub offloads_completed: u64,
+    pub blocked: u64,
+}
+
+/// The swap decision component of the engine.
+pub struct SwapManager {
+    states: Vec<Residency>,
+    cap: usize,
+    policy: Box<dyn ReplacementPolicy>,
+    stats: SwapStats,
+}
+
+impl SwapManager {
+    pub fn new(num_models: usize, cap: usize, policy: PolicyKind, seed: u64) -> SwapManager {
+        assert!(cap >= 1, "resident cap must be >= 1");
+        SwapManager {
+            states: vec![Residency::Offloaded; num_models],
+            cap,
+            policy: make_policy(policy, num_models, seed),
+            stats: SwapStats::default(),
+        }
+    }
+
+    pub fn state(&self, model: ModelId) -> Residency {
+        self.states[model]
+    }
+
+    pub fn is_resident(&self, model: ModelId) -> bool {
+        self.states[model] == Residency::Resident
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn stats(&self) -> SwapStats {
+        self.stats
+    }
+
+    /// Models currently counted against the cap.
+    pub fn counted(&self) -> usize {
+        self.states
+            .iter()
+            .filter(|s| matches!(s, Residency::Resident | Residency::Loading))
+            .count()
+    }
+
+    /// All currently resident models.
+    pub fn resident_models(&self) -> Vec<ModelId> {
+        (0..self.states.len()).filter(|&m| self.states[m] == Residency::Resident).collect()
+    }
+
+    /// Record a use of `model` for the replacement policy.
+    pub fn note_access(&mut self, model: ModelId, now: f64) {
+        self.policy.on_access(model, now);
+    }
+
+    /// Try to begin making `model` resident. `evictable` filters which
+    /// resident models may be chosen as victims (the engine excludes
+    /// models with in-flight batch entries — evicting those would violate
+    /// the load dependency of entries already in the pipes).
+    pub fn plan_swap_in(
+        &mut self,
+        model: ModelId,
+        now: f64,
+        evictable: impl Fn(ModelId) -> bool,
+    ) -> SwapPlan {
+        match self.states[model] {
+            Residency::Resident => return SwapPlan::AlreadyResident,
+            Residency::Loading => return SwapPlan::AlreadyLoading,
+            // Must finish draining before it can be reloaded.
+            Residency::Offloading => {
+                self.stats.blocked += 1;
+                return SwapPlan::Blocked;
+            }
+            Residency::Offloaded => {}
+        }
+        if self.counted() < self.cap {
+            self.states[model] = Residency::Loading;
+            self.stats.loads_started += 1;
+            self.policy.on_access(model, now);
+            return SwapPlan::Start { victim: None };
+        }
+        // Need a victim.
+        let candidates: Vec<ModelId> = (0..self.states.len())
+            .filter(|&m| m != model && self.states[m] == Residency::Resident && evictable(m))
+            .collect();
+        match self.policy.victim(&candidates) {
+            None => {
+                self.stats.blocked += 1;
+                SwapPlan::Blocked
+            }
+            Some(victim) => {
+                self.states[victim] = Residency::Offloading;
+                self.states[model] = Residency::Loading;
+                self.policy.on_evict(victim);
+                self.policy.on_access(model, now);
+                self.stats.loads_started += 1;
+                self.stats.offloads_started += 1;
+                SwapPlan::Start { victim: Some(victim) }
+            }
+        }
+    }
+
+    /// Speculative prefetch (paper §6 extension): begin loading `model`,
+    /// using a free residency slot if one exists or evicting an *idle*
+    /// victim (per `evictable`; the engine only passes models with no
+    /// queued requests and no in-flight batches). Unlike `plan_swap_in`,
+    /// this never blocks — if no safe victim exists the prefetch is simply
+    /// skipped. Returns `None` for no action, else the optional victim.
+    pub fn plan_prefetch(
+        &mut self,
+        model: ModelId,
+        now: f64,
+        evictable: impl Fn(ModelId) -> bool,
+    ) -> Option<Option<ModelId>> {
+        if self.states[model] != Residency::Offloaded {
+            return None;
+        }
+        if self.counted() < self.cap {
+            self.states[model] = Residency::Loading;
+            self.stats.loads_started += 1;
+            self.policy.on_access(model, now);
+            return Some(None);
+        }
+        let candidates: Vec<ModelId> = (0..self.states.len())
+            .filter(|&m| m != model && self.states[m] == Residency::Resident && evictable(m))
+            .collect();
+        let victim = self.policy.victim(&candidates)?;
+        self.states[victim] = Residency::Offloading;
+        self.states[model] = Residency::Loading;
+        self.policy.on_evict(victim);
+        self.policy.on_access(model, now);
+        self.stats.loads_started += 1;
+        self.stats.offloads_started += 1;
+        Some(Some(victim))
+    }
+
+    /// All workers acknowledged the load: model becomes resident.
+    pub fn on_load_complete(&mut self, model: ModelId, now: f64) {
+        assert_eq!(
+            self.states[model],
+            Residency::Loading,
+            "load completion for model {model} in state {:?}",
+            self.states[model]
+        );
+        self.states[model] = Residency::Resident;
+        self.stats.loads_completed += 1;
+        self.policy.on_insert(model, now);
+    }
+
+    /// All workers acknowledged the offload: memory is drained.
+    pub fn on_offload_complete(&mut self, model: ModelId) {
+        assert_eq!(
+            self.states[model],
+            Residency::Offloading,
+            "offload completion for model {model} in state {:?}",
+            self.states[model]
+        );
+        self.states[model] = Residency::Offloaded;
+        self.stats.offloads_completed += 1;
+    }
+
+    /// Pre-warm: mark a model resident without a load entry (used to set
+    /// up initial conditions in experiments; counts against the cap).
+    pub fn force_resident(&mut self, model: ModelId, now: f64) {
+        assert!(self.counted() < self.cap, "force_resident would exceed cap");
+        assert_eq!(self.states[model], Residency::Offloaded);
+        self.states[model] = Residency::Resident;
+        self.policy.on_insert(model, now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(n: usize, cap: usize) -> SwapManager {
+        SwapManager::new(n, cap, PolicyKind::Lru, 0)
+    }
+
+    #[test]
+    fn load_without_eviction_under_cap() {
+        let mut m = mgr(3, 2);
+        assert_eq!(m.plan_swap_in(0, 0.0, |_| true), SwapPlan::Start { victim: None });
+        assert_eq!(m.state(0), Residency::Loading);
+        assert_eq!(m.counted(), 1);
+        m.on_load_complete(0, 1.0);
+        assert!(m.is_resident(0));
+    }
+
+    #[test]
+    fn eviction_when_cap_reached() {
+        let mut m = mgr(3, 1);
+        m.force_resident(0, 0.0);
+        let plan = m.plan_swap_in(1, 1.0, |_| true);
+        assert_eq!(plan, SwapPlan::Start { victim: Some(0) });
+        assert_eq!(m.state(0), Residency::Offloading);
+        assert_eq!(m.state(1), Residency::Loading);
+        // Offloading does not count; Loading does.
+        assert_eq!(m.counted(), 1);
+    }
+
+    #[test]
+    fn lru_victim_selection() {
+        let mut m = mgr(3, 2);
+        m.force_resident(0, 0.0);
+        m.force_resident(1, 1.0);
+        m.note_access(0, 5.0); // 0 most recently used
+        let plan = m.plan_swap_in(2, 6.0, |_| true);
+        assert_eq!(plan, SwapPlan::Start { victim: Some(1) });
+    }
+
+    #[test]
+    fn pinned_models_not_evicted() {
+        let mut m = mgr(3, 2);
+        m.force_resident(0, 0.0);
+        m.force_resident(1, 1.0);
+        // Model 1 is LRU-older but has in-flight batches (not evictable).
+        let plan = m.plan_swap_in(2, 2.0, |mm| mm != 1);
+        assert_eq!(plan, SwapPlan::Start { victim: Some(0) });
+    }
+
+    #[test]
+    fn blocked_when_no_victim() {
+        let mut m = mgr(2, 1);
+        m.force_resident(0, 0.0);
+        let plan = m.plan_swap_in(1, 1.0, |_| false); // nothing evictable
+        assert_eq!(plan, SwapPlan::Blocked);
+        assert_eq!(m.state(1), Residency::Offloaded); // unchanged
+        assert_eq!(m.stats().blocked, 1);
+    }
+
+    #[test]
+    fn already_states() {
+        let mut m = mgr(2, 2);
+        m.force_resident(0, 0.0);
+        assert_eq!(m.plan_swap_in(0, 1.0, |_| true), SwapPlan::AlreadyResident);
+        assert_eq!(m.plan_swap_in(1, 1.0, |_| true), SwapPlan::Start { victim: None });
+        assert_eq!(m.plan_swap_in(1, 1.0, |_| true), SwapPlan::AlreadyLoading);
+    }
+
+    #[test]
+    fn offloading_model_blocks_reload_until_drained() {
+        let mut m = mgr(2, 1);
+        m.force_resident(0, 0.0);
+        assert_eq!(m.plan_swap_in(1, 1.0, |_| true), SwapPlan::Start { victim: Some(0) });
+        // Request for 0 arrives while it is still draining.
+        assert_eq!(m.plan_swap_in(0, 2.0, |_| true), SwapPlan::Blocked);
+        m.on_offload_complete(0);
+        m.on_load_complete(1, 3.0);
+        // Now 0 can come back (victim = 1).
+        assert_eq!(m.plan_swap_in(0, 4.0, |_| true), SwapPlan::Start { victim: Some(1) });
+    }
+
+    #[test]
+    fn stats_track_lifecycle() {
+        let mut m = mgr(2, 1);
+        m.plan_swap_in(0, 0.0, |_| true);
+        m.on_load_complete(0, 0.5);
+        m.plan_swap_in(1, 1.0, |_| true);
+        m.on_offload_complete(0);
+        m.on_load_complete(1, 2.0);
+        let s = m.stats();
+        assert_eq!(s.loads_started, 2);
+        assert_eq!(s.loads_completed, 2);
+        assert_eq!(s.offloads_started, 1);
+        assert_eq!(s.offloads_completed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "load completion")]
+    fn bad_transition_panics() {
+        let mut m = mgr(1, 1);
+        m.on_load_complete(0, 0.0);
+    }
+
+    #[test]
+    fn cap_never_exceeded_under_random_ops() {
+        use crate::util::prop;
+        use crate::util::rng::Rng;
+        prop::check(
+            "swap-cap-invariant",
+            |rng: &mut Rng| {
+                let n = prop::usize_in(rng, 2, 6);
+                let cap = prop::usize_in(rng, 1, n - 1);
+                let ops: Vec<usize> = (0..64).map(|_| rng.index(n)).collect();
+                (n, cap, ops)
+            },
+            |(n, cap, ops)| {
+                let mut m = mgr(*n, *cap);
+                // Track in-flight to complete them eagerly (single-threaded
+                // simulation of the engine's completion callbacks).
+                for &model in ops {
+                    match m.plan_swap_in(model, 0.0, |_| true) {
+                        SwapPlan::Start { victim } => {
+                            if m.counted() > *cap {
+                                return Err(format!("cap exceeded: {}", m.counted()));
+                            }
+                            if let Some(v) = victim {
+                                m.on_offload_complete(v);
+                            }
+                            m.on_load_complete(model, 0.0);
+                        }
+                        _ => {}
+                    }
+                    if m.counted() > *cap {
+                        return Err(format!("cap exceeded: {}", m.counted()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Computron: serving distributed deep learning models with model parallel
+//! swapping — a Rust + JAX + Pallas reproduction.
+//!
+//! See DESIGN.md for the architecture overview and EXPERIMENTS.md for the
+//! reproduction of every table and figure in the paper.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod metrics;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workload;

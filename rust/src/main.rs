@@ -1,0 +1,218 @@
+//! `computron` — CLI launcher.
+//!
+//! Subcommands:
+//!   serve     launch the real-mode server and run an interactive demo load
+//!   simulate  run a §5.2-style simulated workload and print metrics
+//!   swap      run the §5.1 worst-case swap experiment for one (tp, pp)
+//!   info      print environment, catalog, and artifact status
+//!
+//! `computron <subcommand> --help` lists options.
+
+use anyhow::{anyhow, Result};
+use computron::config::{EngineConfig, LoadDesign, PolicyKind, SystemConfig};
+use computron::coordinator::engine::SwapRecord;
+use computron::metrics::WorkloadCell;
+use computron::serving::{Computron, ServeConfig};
+use computron::sim::{Driver, SimSystem};
+use computron::util::args::Args;
+use computron::util::bench::{section, table};
+use computron::workload::GammaWorkload;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("usage: computron <serve|simulate|swap|info> [options]  (--help per subcommand)");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd.as_str() {
+        "serve" => cmd_serve(&rest),
+        "simulate" => cmd_simulate(&rest),
+        "swap" => cmd_swap(&rest),
+        "info" => cmd_info(),
+        other => Err(anyhow!("unknown subcommand '{other}'")),
+    };
+    if let Err(e) = result {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::new("computron serve", "launch the real-mode server (demo load)")
+        .opt("model", "manifest model name", Some("opt-test"))
+        .opt("models", "number of co-located instances", Some("2"))
+        .opt("tp", "tensor parallel degree", Some("1"))
+        .opt("pp", "pipeline parallel degree", Some("1"))
+        .opt("cap", "resident model cap", Some("1"))
+        .opt("requests", "demo requests to send", Some("10"))
+        .opt("http", "serve HTTP on this address instead (e.g. 127.0.0.1:8080)", None)
+        .parse_from(argv)?;
+    let dir = computron::runtime::manifest::default_dir();
+    let mut cfg = ServeConfig::new(
+        &dir,
+        args.get_or("model", "opt-test"),
+        args.get_usize("models")?.unwrap_or(2),
+        args.get_usize("tp")?.unwrap_or(1),
+        args.get_usize("pp")?.unwrap_or(1),
+    );
+    cfg.engine = EngineConfig {
+        resident_cap: args.get_usize("cap")?.unwrap_or(1),
+        ..Default::default()
+    };
+    let num_models = cfg.num_models;
+    let server = Computron::launch(cfg)?;
+    if let Some(bind) = args.get("http") {
+        let server = std::sync::Arc::new(server);
+        let http = computron::serving::http::HttpServer::start(server, bind)?;
+        println!("serving HTTP on http://{}  (POST /v1/infer, GET /v1/stats, /health)", http.addr());
+        println!("press Ctrl-C to stop");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let n = args.get_usize("requests")?.unwrap_or(10);
+    println!("serving {n} demo requests across {num_models} instances...");
+    for i in 0..n {
+        let out = server
+            .submit(i % num_models, (1..9).collect())
+            .wait()
+            .map_err(|e| anyhow!(e))?;
+        println!("  req {i}: model {} argmax {} latency {:.3}s", i % num_models, out.argmax, out.latency);
+    }
+    let stats = server.stats();
+    println!(
+        "completed {} | loads {} offloads {} | mean load {:.3}s",
+        stats.completed, stats.swap.loads_completed, stats.swap.offloads_completed, stats.mean_load_secs
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let args = Args::new("computron simulate", "run a §5.2-style simulated workload")
+        .opt("config", "JSON system config (see configs/); CLI flags override", None)
+        .opt("models", "number of model instances", Some("3"))
+        .opt("cap", "resident model cap", Some("2"))
+        .opt("batch", "max batch size", Some("8"))
+        .opt("rates", "comma-separated mean rates (default 1 per model)", None)
+        .opt("cv", "coefficient of variation", Some("1"))
+        .opt("duration", "measured seconds", Some("30"))
+        .opt("seed", "workload seed", Some("42"))
+        .opt("policy", "lru|lfu|fifo|random", Some("lru"))
+        .opt("load-design", "async|sync|broadcast", Some("async"))
+        .flag("no-pinned", "use pageable host memory (ablation)")
+        .parse_from(argv)?;
+
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(std::path::Path::new(path))?,
+        None => SystemConfig::workload_experiment(
+            args.get_usize("models")?.unwrap_or(3),
+            args.get_usize("cap")?.unwrap_or(2),
+            args.get_usize("batch")?.unwrap_or(8),
+        ),
+    };
+    let models = cfg.num_models;
+    let cap = cfg.engine.resident_cap;
+    cfg.engine.policy = PolicyKind::parse(args.get_or("policy", "lru"))
+        .ok_or_else(|| anyhow!("bad --policy"))?;
+    cfg.engine.load_design = LoadDesign::parse(args.get_or("load-design", "async"))
+        .ok_or_else(|| anyhow!("bad --load-design"))?;
+    if args.flag("no-pinned") {
+        cfg.hardware.pinned = false;
+    }
+    let rates: Vec<f64> = match args.get("rates") {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse::<f64>().map_err(|_| anyhow!("bad rate '{x}'")))
+            .collect::<Result<_>>()?,
+        None => vec![1.0; models],
+    };
+    anyhow::ensure!(rates.len() == models, "--rates needs {models} entries");
+    let mut workload = GammaWorkload::new(
+        rates,
+        args.get_f64("cv")?.unwrap_or(1.0),
+        args.get_usize("seed")?.unwrap_or(42) as u64,
+    );
+    workload.duration = args.get_f64("duration")?.unwrap_or(30.0);
+
+    let arrivals = workload.generate();
+    let start = workload.measure_start();
+    let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
+    sys.preload(&(0..cap.min(models)).collect::<Vec<_>>());
+    let report = sys.run();
+    let cell = WorkloadCell::from_report("cli", workload.cv, &report, start);
+
+    section("simulation results");
+    table(
+        &["metric", "value"],
+        &vec![
+            vec!["requests".into(), cell.requests.to_string()],
+            vec!["mean latency (s)".into(), format!("{:.3}", cell.mean_latency)],
+            vec!["p50 / p90 / p99 (s)".into(), format!("{:.3} / {:.3} / {:.3}", cell.summary.p50, cell.summary.p90, cell.summary.p99)],
+            vec!["swaps".into(), cell.swaps.to_string()],
+            vec!["dependency violations".into(), report.violations.to_string()],
+            vec!["sim events".into(), report.events.to_string()],
+            vec!["host wall (s)".into(), format!("{:.3}", report.wall_secs)],
+        ],
+    );
+    Ok(())
+}
+
+fn cmd_swap(argv: &[String]) -> Result<()> {
+    let args = Args::new("computron swap", "run the §5.1 worst-case swap experiment")
+        .opt("tp", "tensor parallel degree", Some("2"))
+        .opt("pp", "pipeline parallel degree", Some("2"))
+        .opt("requests", "alternating blocking requests", Some("20"))
+        .parse_from(argv)?;
+    let (tp, pp) = (args.get_usize("tp")?.unwrap_or(2), args.get_usize("pp")?.unwrap_or(2));
+    let cfg = SystemConfig::swap_experiment(tp, pp);
+    let ideal = cfg.spec()?.param_bytes() as f64 / ((tp * pp) as f64 * cfg.hardware.link.bandwidth);
+    let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+        models: 2,
+        input_len: 2,
+        total: args.get_usize("requests")?.unwrap_or(20),
+    })?;
+    sys.preload(&[1]);
+    let r = sys.run();
+    let mean_swap = r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64;
+    let mean_e2e =
+        r.requests.iter().map(|q| q.latency()).sum::<f64>() / r.requests.len() as f64;
+    println!(
+        "TP={tp} PP={pp}: mean swap {mean_swap:.3}s (ideal {ideal:.3}s, {:.2}x), mean e2e {mean_e2e:.3}s over {} requests",
+        mean_swap / ideal,
+        r.requests.len()
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    section("computron environment");
+    let client = xla::PjRtClient::cpu()?;
+    println!("pjrt: platform={} devices={}", client.platform_name(), client.device_count());
+    println!("catalog (simulation): {:?}", computron::model::catalog::opt_names());
+    let dir = computron::runtime::manifest::default_dir();
+    match computron::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} files at {}", m.artifacts.len(), dir.display());
+            for (name, spec) in &m.models {
+                let marks: Vec<String> = [1usize, 2]
+                    .iter()
+                    .filter(|&&tp| m.supports(name, tp))
+                    .map(|tp| format!("tp{tp}"))
+                    .collect();
+                println!(
+                    "  {name}: {} layers, hidden {}, vocab {} [{}]",
+                    spec.num_layers,
+                    spec.hidden,
+                    spec.vocab,
+                    marks.join(",")
+                );
+            }
+        }
+        Err(_) => println!("artifacts: not built (run `make artifacts`) — real mode unavailable"),
+    }
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Experiment reporting: turn raw request/swap records into the exact
+//! artifacts the paper publishes — average-latency tables (Tab 1, Tab 2),
+//! latency CDFs (Fig 8, Fig 9), and swap-scaling series (Fig 5–7) — plus
+//! JSON export for downstream plotting.
+
+use crate::coordinator::engine::{RequestRecord, SwapRecord};
+use crate::sim::system::SimReport;
+use crate::util::json::Json;
+use crate::util::stats::{cdf, Summary};
+
+/// Measured outcome of one (skew, CV) cell of Tab 1 / Tab 2.
+#[derive(Clone, Debug)]
+pub struct WorkloadCell {
+    pub skew_label: String,
+    pub cv: f64,
+    /// Average end-to-end latency over the measured window (the table
+    /// entry the paper reports).
+    pub mean_latency: f64,
+    pub summary: Summary,
+    /// (latency, F(latency)) CDF points — Fig 8 / Fig 9 series.
+    pub cdf: Vec<(f64, f64)>,
+    pub requests: usize,
+    pub swaps: usize,
+}
+
+impl WorkloadCell {
+    /// Build a cell from a simulation report, filtering out warmup.
+    pub fn from_report(
+        skew_label: &str,
+        cv: f64,
+        report: &SimReport,
+        measure_start: f64,
+    ) -> WorkloadCell {
+        let lats = report.latencies_from(measure_start);
+        let summary = Summary::of(&lats).unwrap_or(Summary {
+            count: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        });
+        WorkloadCell {
+            skew_label: skew_label.to_string(),
+            cv,
+            mean_latency: summary.mean,
+            summary: summary.clone(),
+            cdf: cdf(&lats, 100),
+            requests: lats.len(),
+            swaps: report
+                .swaps
+                .iter()
+                .filter(|s| s.submitted >= measure_start)
+                .count(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("skew", self.skew_label.as_str().into()),
+            ("cv", self.cv.into()),
+            ("mean_latency", self.mean_latency.into()),
+            ("summary", self.summary.to_json()),
+            (
+                "cdf",
+                Json::Arr(
+                    self.cdf
+                        .iter()
+                        .map(|&(x, f)| Json::Arr(vec![x.into(), f.into()]))
+                        .collect(),
+                ),
+            ),
+            ("requests", self.requests.into()),
+            ("swaps", self.swaps.into()),
+        ])
+    }
+}
+
+/// One point of the Fig 5/6/7 swap-scaling series.
+#[derive(Clone, Debug)]
+pub struct SwapScalingPoint {
+    pub tp: usize,
+    pub pp: usize,
+    pub mean_swap: f64,
+    pub mean_exec: f64,
+    pub mean_e2e: f64,
+    /// 24 GB / (n · 32 GB/s): the paper's ideal target.
+    pub ideal: f64,
+}
+
+impl SwapScalingPoint {
+    pub fn from_records(
+        tp: usize,
+        pp: usize,
+        swaps: &[SwapRecord],
+        requests: &[RequestRecord],
+        model_bytes: usize,
+        link_bandwidth: f64,
+    ) -> SwapScalingPoint {
+        let mean_swap = mean(swaps.iter().map(SwapRecord::duration));
+        let mean_e2e = mean(requests.iter().map(RequestRecord::latency));
+        SwapScalingPoint {
+            tp,
+            pp,
+            mean_swap,
+            mean_exec: mean_e2e - mean_swap,
+            mean_e2e,
+            ideal: model_bytes as f64 / ((tp * pp) as f64 * link_bandwidth),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("tp", self.tp.into()),
+            ("pp", self.pp.into()),
+            ("mean_swap", self.mean_swap.into()),
+            ("mean_exec", self.mean_exec.into()),
+            ("mean_e2e", self.mean_e2e.into()),
+            ("ideal", self.ideal.into()),
+        ])
+    }
+}
+
+fn mean(iter: impl Iterator<Item = f64>) -> f64 {
+    let values: Vec<f64> = iter.collect();
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
+/// Render a Tab-1/Tab-2-style grid: rows = skew, columns = CV.
+pub fn latency_table(cells: &[WorkloadCell], cvs: &[f64]) -> (Vec<&'static str>, Vec<Vec<String>>) {
+    let mut skews: Vec<String> = Vec::new();
+    for c in cells {
+        if !skews.contains(&c.skew_label) {
+            skews.push(c.skew_label.clone());
+        }
+    }
+    let rows: Vec<Vec<String>> = skews
+        .iter()
+        .map(|skew| {
+            let mut row = vec![skew.clone()];
+            for &cv in cvs {
+                let cell = cells
+                    .iter()
+                    .find(|c| &c.skew_label == skew && (c.cv - cv).abs() < 1e-9);
+                row.push(match cell {
+                    Some(c) => format!("{:.3}", c.mean_latency),
+                    None => "-".to_string(),
+                });
+            }
+            row
+        })
+        .collect();
+    (vec!["Skew", "CV = 0.25", "CV = 1", "CV = 4"], rows)
+}
+
+/// Write a set of cells to a JSON report file.
+pub fn save_cells(path: &std::path::Path, experiment: &str, cells: &[WorkloadCell]) -> anyhow::Result<()> {
+    let j = Json::from_pairs(vec![
+        ("experiment", experiment.into()),
+        ("cells", Json::Arr(cells.iter().map(WorkloadCell::to_json).collect())),
+    ]);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, j.pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::sim::{Driver, SimSystem};
+
+    fn small_report() -> SimReport {
+        let cfg = SystemConfig::swap_experiment(2, 2);
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total: 6,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        sys.run()
+    }
+
+    #[test]
+    fn cell_from_report() {
+        let r = small_report();
+        let cell = WorkloadCell::from_report("(1,1)", 1.0, &r, 0.0);
+        assert_eq!(cell.requests, 6);
+        assert!(cell.mean_latency > 0.0);
+        assert!(!cell.cdf.is_empty());
+        let j = cell.to_json();
+        assert_eq!(j.get("skew").unwrap().as_str().unwrap(), "(1,1)");
+    }
+
+    #[test]
+    fn scaling_point_math() {
+        let r = small_report();
+        let p = SwapScalingPoint::from_records(2, 2, &r.swaps, &r.requests, 24_000_000_000, 32.0e9);
+        assert!((p.ideal - 0.1875).abs() < 1e-9);
+        assert!(p.mean_swap > p.ideal, "measured swap must exceed ideal");
+        assert!((p.mean_e2e - p.mean_swap - p.mean_exec).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_layout() {
+        let r = small_report();
+        let cells = vec![
+            WorkloadCell::from_report("(1,1,1)", 0.25, &r, 0.0),
+            WorkloadCell::from_report("(1,1,1)", 1.0, &r, 0.0),
+            WorkloadCell::from_report("(10,1,1)", 0.25, &r, 0.0),
+        ];
+        let (headers, rows) = latency_table(&cells, &[0.25, 1.0, 4.0]);
+        assert_eq!(headers.len(), 4);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][0], "(1,1,1)");
+        assert_eq!(rows[1][3], "-"); // missing CV=4 cell
+    }
+
+    #[test]
+    fn save_cells_writes_json() {
+        let r = small_report();
+        let cells = vec![WorkloadCell::from_report("(1,1)", 4.0, &r, 0.0)];
+        let dir = std::env::temp_dir().join("computron_metrics_test");
+        let path = dir.join("cells.json");
+        save_cells(&path, "tab1", &cells).unwrap();
+        let j = Json::parse_file(&path).unwrap();
+        assert_eq!(j.get("experiment").unwrap().as_str().unwrap(), "tab1");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,128 @@
+//! Catalog of OPT-family model architectures (Zhang et al., 2022) plus
+//! small test configurations that run for real on CPU PJRT.
+//!
+//! The paper serves OPT-13B; the simulator uses the real architecture
+//! table so that shard sizes and tensor counts (the α–β inputs) are
+//! faithful. Sizes follow the released OPT configs: ffn = 4·hidden,
+//! vocab = 50272, max_pos = 2048.
+
+use super::spec::{Dtype, ModelSpec};
+
+/// All catalog entries: (name, layers, hidden, heads).
+const OPT_TABLE: &[(&str, usize, usize, usize)] = &[
+    ("opt-125m", 12, 768, 12),
+    ("opt-350m", 24, 1024, 16),
+    ("opt-1.3b", 24, 2048, 32),
+    ("opt-2.7b", 32, 2560, 32),
+    ("opt-6.7b", 32, 4096, 32),
+    ("opt-13b", 40, 5120, 40),
+    ("opt-30b", 48, 7168, 56),
+    ("opt-66b", 64, 9216, 72),
+];
+
+/// Look up a released OPT config by name (fp16, as served in the paper).
+pub fn opt(name: &str) -> Option<ModelSpec> {
+    OPT_TABLE.iter().find(|(n, ..)| *n == name).map(|&(n, layers, hidden, heads)| ModelSpec {
+        name: n.to_string(),
+        num_layers: layers,
+        hidden,
+        heads,
+        ffn: 4 * hidden,
+        vocab: 50272,
+        max_pos: 2048,
+        dtype: Dtype::F16,
+    })
+}
+
+/// Names of all real OPT configs.
+pub fn opt_names() -> Vec<&'static str> {
+    OPT_TABLE.iter().map(|(n, ..)| *n).collect()
+}
+
+/// Tiny OPT-shaped config that the real-mode examples execute end-to-end
+/// on CPU PJRT (artifacts built by `make artifacts`). Architecture rules
+/// match OPT (ffn = 4h); sizes are chosen so TP=2 / PP=2 sharding stays
+/// exact (hidden divisible by 2·heads, layers divisible by 2).
+pub fn opt_test() -> ModelSpec {
+    ModelSpec {
+        name: "opt-test".to_string(),
+        num_layers: 4,
+        hidden: 128,
+        heads: 4,
+        ffn: 512,
+        vocab: 512,
+        max_pos: 64,
+        dtype: Dtype::F32, // CPU PJRT path computes in f32
+    }
+}
+
+/// ~25M-parameter config for the heavier end-to-end example (large enough
+/// that swap time is visible on the real CPU path, small enough to build
+/// artifacts quickly).
+pub fn opt_mini() -> ModelSpec {
+    ModelSpec {
+        name: "opt-mini".to_string(),
+        num_layers: 8,
+        hidden: 512,
+        heads: 8,
+        ffn: 2048,
+        vocab: 4096,
+        max_pos: 128,
+        dtype: Dtype::F32,
+    }
+}
+
+/// Resolve any catalog name (released OPT or test configs).
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "opt-test" => Some(opt_test()),
+        "opt-mini" => Some(opt_mini()),
+        other => opt(other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_released_configs_resolve() {
+        for name in opt_names() {
+            let spec = opt(name).unwrap();
+            assert_eq!(spec.ffn, 4 * spec.hidden);
+            assert_eq!(spec.hidden % spec.heads, 0, "{name}");
+            assert_eq!(spec.vocab, 50272);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(opt("opt-9000b").is_none());
+        assert!(by_name("gpt-4").is_none());
+    }
+
+    #[test]
+    fn sizes_increase_monotonically() {
+        let sizes: Vec<usize> =
+            opt_names().iter().map(|n| opt(n).unwrap().param_count()).collect();
+        for w in sizes.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn test_configs_shardable() {
+        for spec in [opt_test(), opt_mini()] {
+            assert_eq!(spec.num_layers % 2, 0);
+            assert_eq!(spec.hidden % (2 * spec.heads), 0);
+            assert_eq!(spec.ffn % 2, 0);
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        assert!(by_name("opt-13b").is_some());
+        assert!(by_name("opt-test").is_some());
+        assert!(by_name("opt-mini").is_some());
+    }
+}

@@ -1,0 +1,13 @@
+//! Model architecture specs, the OPT catalog, and TP×PP sharding math.
+//!
+//! This module answers, for any model and parallel configuration, "which
+//! tensors does each worker hold, and how big are they?" — the input to
+//! both the swap-time cost model (α per tensor, β per byte) and the real
+//! runtime's parameter buffers.
+
+pub mod catalog;
+pub mod shard;
+pub mod spec;
+
+pub use shard::{shard, shard_grid, max_shard_bytes, GridPos, ShardManifest};
+pub use spec::{Dtype, ModelSpec, TensorSpec};

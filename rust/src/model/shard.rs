@@ -1,0 +1,325 @@
+//! TP × PP sharding of a model's tensor inventory.
+//!
+//! Produces, for every worker in the parallel grid, the exact list of
+//! parameter tensors it owns (Megatron-style sharding):
+//!
+//! - attention q/k/v and fc1 are **column-parallel** (output dim / TP),
+//! - attention out_proj and fc2 are **row-parallel** (input dim / TP,
+//!   bias kept on every rank — each rank adds bias/tp so the TP
+//!   all-reduce reconstructs it exactly once; see `model.py`),
+//! - token embedding is **vocab-parallel**; positions and layer norms are
+//!   replicated,
+//! - layers are chunked contiguously across PP stages; stage 0 owns the
+//!   embeddings, the last stage owns the final layer norm plus (when
+//!   PP > 1) the untied copy of the tied lm_head that Megatron-style
+//!   pipelines place on the last stage.
+//!
+//! The resulting shard manifests drive both the simulator's α–β transfer
+//! costs (tensor count × bytes per tensor) and the real runtime's host
+//! buffer layout.
+
+use super::spec::{ModelSpec, TensorSpec};
+
+/// Position of one worker in the TP × PP grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridPos {
+    pub pp_rank: usize,
+    pub tp_rank: usize,
+}
+
+/// The parameter shard owned by one worker.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    pub model: String,
+    pub pos: GridPos,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl ShardManifest {
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(TensorSpec::bytes).sum()
+    }
+
+    pub fn tensor_count(&self) -> usize {
+        self.tensors.len()
+    }
+}
+
+/// Errors from an invalid parallel configuration.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ShardError {
+    #[error("tp degree {tp} must divide hidden={hidden}, heads={heads}, ffn={ffn}, vocab={vocab}")]
+    TpIndivisible { tp: usize, hidden: usize, heads: usize, ffn: usize, vocab: usize },
+    #[error("pp degree {pp} must divide num_layers={layers}")]
+    PpIndivisible { pp: usize, layers: usize },
+    #[error("parallel degrees must be >= 1 (tp={tp}, pp={pp})")]
+    ZeroDegree { tp: usize, pp: usize },
+}
+
+/// Validate a (tp, pp) configuration against a model spec.
+pub fn validate(spec: &ModelSpec, tp: usize, pp: usize) -> Result<(), ShardError> {
+    if tp == 0 || pp == 0 {
+        return Err(ShardError::ZeroDegree { tp, pp });
+    }
+    if spec.hidden % tp != 0 || spec.heads % tp != 0 || spec.ffn % tp != 0 || spec.vocab % tp != 0
+    {
+        return Err(ShardError::TpIndivisible {
+            tp,
+            hidden: spec.hidden,
+            heads: spec.heads,
+            ffn: spec.ffn,
+            vocab: spec.vocab,
+        });
+    }
+    if spec.num_layers % pp != 0 {
+        return Err(ShardError::PpIndivisible { pp, layers: spec.num_layers });
+    }
+    Ok(())
+}
+
+/// Layer range `[start, end)` owned by a PP stage.
+pub fn stage_layers(spec: &ModelSpec, pp: usize, pp_rank: usize) -> (usize, usize) {
+    let per = spec.num_layers / pp;
+    (pp_rank * per, (pp_rank + 1) * per)
+}
+
+/// Build the shard manifest for one worker.
+pub fn shard(spec: &ModelSpec, tp: usize, pp: usize, pos: GridPos) -> Result<ShardManifest, ShardError> {
+    validate(spec, tp, pp)?;
+    assert!(pos.tp_rank < tp && pos.pp_rank < pp, "rank out of grid");
+    let h = spec.hidden;
+    let f = spec.ffn;
+    let dt = spec.dtype;
+    let mut tensors = Vec::new();
+
+    let is_first = pos.pp_rank == 0;
+    let is_last = pos.pp_rank == pp - 1;
+
+    if is_first {
+        tensors.push(TensorSpec::new(
+            "decoder.embed_tokens.weight",
+            vec![spec.vocab / tp, h],
+            dt,
+        ));
+        tensors.push(TensorSpec::new(
+            "decoder.embed_positions.weight",
+            vec![spec.max_pos + 2, h],
+            dt,
+        ));
+    }
+
+    let (lo, hi) = stage_layers(spec, pp, pos.pp_rank);
+    for l in lo..hi {
+        let p = format!("decoder.layers.{l}");
+        // Column-parallel q/k/v: weight rows split.
+        for proj in ["q_proj", "k_proj", "v_proj"] {
+            tensors.push(TensorSpec::new(
+                format!("{p}.self_attn.{proj}.weight"),
+                vec![h / tp, h],
+                dt,
+            ));
+            tensors.push(TensorSpec::new(format!("{p}.self_attn.{proj}.bias"), vec![h / tp], dt));
+        }
+        // Row-parallel out_proj: weight cols split; bias replicated (each
+        // rank applies bias/tp before the all-reduce).
+        tensors.push(TensorSpec::new(
+            format!("{p}.self_attn.out_proj.weight"),
+            vec![h, h / tp],
+            dt,
+        ));
+        tensors.push(TensorSpec::new(format!("{p}.self_attn.out_proj.bias"), vec![h], dt));
+        tensors.push(TensorSpec::new(format!("{p}.self_attn_layer_norm.weight"), vec![h], dt));
+        tensors.push(TensorSpec::new(format!("{p}.self_attn_layer_norm.bias"), vec![h], dt));
+        // Column-parallel fc1.
+        tensors.push(TensorSpec::new(format!("{p}.fc1.weight"), vec![f / tp, h], dt));
+        tensors.push(TensorSpec::new(format!("{p}.fc1.bias"), vec![f / tp], dt));
+        // Row-parallel fc2.
+        tensors.push(TensorSpec::new(format!("{p}.fc2.weight"), vec![h, f / tp], dt));
+        tensors.push(TensorSpec::new(format!("{p}.fc2.bias"), vec![h], dt));
+        tensors.push(TensorSpec::new(format!("{p}.final_layer_norm.weight"), vec![h], dt));
+        tensors.push(TensorSpec::new(format!("{p}.final_layer_norm.bias"), vec![h], dt));
+    }
+
+    if is_last {
+        tensors.push(TensorSpec::new("decoder.final_layer_norm.weight", vec![h], dt));
+        tensors.push(TensorSpec::new("decoder.final_layer_norm.bias", vec![h], dt));
+        if pp > 1 {
+            // Untied lm_head copy on the last stage (vocab-parallel), as
+            // Megatron-style pipelines do for tied embeddings.
+            tensors.push(TensorSpec::new("lm_head.weight", vec![spec.vocab / tp, h], dt));
+        }
+    }
+
+    Ok(ShardManifest { model: spec.name.clone(), pos, tensors })
+}
+
+/// Build the full grid of shard manifests, indexed `[pp_rank][tp_rank]`.
+pub fn shard_grid(spec: &ModelSpec, tp: usize, pp: usize) -> Result<Vec<Vec<ShardManifest>>, ShardError> {
+    validate(spec, tp, pp)?;
+    (0..pp)
+        .map(|pp_rank| {
+            (0..tp)
+                .map(|tp_rank| shard(spec, tp, pp, GridPos { pp_rank, tp_rank }))
+                .collect::<Result<Vec<_>, _>>()
+        })
+        .collect()
+}
+
+/// Bytes of the largest shard in the grid (what each GPU must hold).
+pub fn max_shard_bytes(spec: &ModelSpec, tp: usize, pp: usize) -> Result<usize, ShardError> {
+    Ok(shard_grid(spec, tp, pp)?
+        .iter()
+        .flatten()
+        .map(ShardManifest::bytes)
+        .max()
+        .expect("grid is non-empty"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn spec13b() -> ModelSpec {
+        catalog::opt("opt-13b").unwrap()
+    }
+
+    #[test]
+    fn validate_rejects_bad_degrees() {
+        let spec = spec13b();
+        assert_eq!(validate(&spec, 0, 1), Err(ShardError::ZeroDegree { tp: 0, pp: 1 }));
+        assert!(validate(&spec, 3, 1).is_err()); // 40 heads not divisible by 3
+        assert!(validate(&spec, 1, 3).is_err()); // 40 layers not divisible by 3
+        assert!(validate(&spec, 4, 4).is_ok());
+    }
+
+    #[test]
+    fn tp1_pp1_equals_full_inventory() {
+        let spec = spec13b();
+        let shard = shard(&spec, 1, 1, GridPos { pp_rank: 0, tp_rank: 0 }).unwrap();
+        assert_eq!(shard.bytes(), spec.param_bytes());
+        assert_eq!(shard.tensor_count(), spec.tensors().len());
+    }
+
+    #[test]
+    fn tp_preserves_tensor_count_per_stage() {
+        // §5.1 of the paper: "Each TP shard still contains the same number
+        // of tensors as the original model" — this is the α-term source.
+        let spec = spec13b();
+        let full = spec.tensors().len();
+        for tp in [2, 4] {
+            let s = shard(&spec, tp, 1, GridPos { pp_rank: 0, tp_rank: 0 }).unwrap();
+            assert_eq!(s.tensor_count(), full, "tp={tp}");
+        }
+    }
+
+    #[test]
+    fn tp_shards_sum_to_total_with_replication_overhead() {
+        let spec = spec13b();
+        for tp in [2usize, 4] {
+            let grid = shard_grid(&spec, tp, 1).unwrap();
+            let total: usize = grid.iter().flatten().map(ShardManifest::bytes).sum();
+            // Replicated tensors (positions, norms, row-parallel biases)
+            // make the total slightly exceed param_bytes, but by < 2%.
+            assert!(total >= spec.param_bytes());
+            assert!(
+                (total as f64) < spec.param_bytes() as f64 * 1.02,
+                "tp={tp}: total={total}"
+            );
+        }
+    }
+
+    #[test]
+    fn pp_shards_partition_layers() {
+        let spec = spec13b();
+        for pp in [2usize, 4] {
+            let grid = shard_grid(&spec, 1, pp).unwrap();
+            let total: usize = grid.iter().flatten().map(ShardManifest::bytes).sum();
+            // PP adds the lm_head copy on the last stage.
+            let lm_head_bytes = spec.vocab * spec.hidden * spec.dtype.bytes();
+            assert_eq!(total, spec.param_bytes() + lm_head_bytes, "pp={pp}");
+        }
+    }
+
+    #[test]
+    fn shard_bytes_shrink_roughly_linearly() {
+        let spec = spec13b();
+        let full = spec.param_bytes() as f64;
+        for (tp, pp) in [(2, 1), (4, 1), (1, 2), (1, 4), (2, 2)] {
+            let max = max_shard_bytes(&spec, tp, pp).unwrap() as f64;
+            let ideal = full / (tp * pp) as f64;
+            assert!(max >= ideal * 0.95, "tp={tp} pp={pp}");
+            assert!(max <= ideal * 1.35, "tp={tp} pp={pp}: max={max} ideal={ideal}");
+        }
+    }
+
+    #[test]
+    fn stage_layers_partition() {
+        let spec = spec13b();
+        for pp in [1usize, 2, 4] {
+            let mut covered = vec![false; spec.num_layers];
+            for r in 0..pp {
+                let (lo, hi) = stage_layers(&spec, pp, r);
+                for slot in covered.iter_mut().take(hi).skip(lo) {
+                    assert!(!*slot);
+                    *slot = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c));
+        }
+    }
+
+    #[test]
+    fn prop_grid_invariants() {
+        // Property: for random valid configs on random catalog models,
+        // every shard is non-empty, per-stage TP ranks have equal tensor
+        // counts, and total bytes stay within replication bounds.
+        prop::check(
+            "shard-grid-invariants",
+            |rng: &mut Rng| {
+                let name = prop::choice(rng, &["opt-125m", "opt-1.3b", "opt-6.7b", "opt-13b"]);
+                let tp = prop::choice(rng, &[1usize, 2, 4]);
+                let pp = prop::choice(rng, &[1usize, 2, 4]);
+                (name, tp, pp)
+            },
+            |&(name, tp, pp)| {
+                let spec = catalog::opt(name).unwrap();
+                if validate(&spec, tp, pp).is_err() {
+                    return Ok(()); // skip invalid combos
+                }
+                let grid = shard_grid(&spec, tp, pp).map_err(|e| e.to_string())?;
+                if grid.len() != pp || grid.iter().any(|row| row.len() != tp) {
+                    return Err("grid shape mismatch".into());
+                }
+                for row in &grid {
+                    let count0 = row[0].tensor_count();
+                    for s in row {
+                        if s.tensor_count() != count0 {
+                            return Err("unequal tensor counts across TP ranks".into());
+                        }
+                        if s.bytes() == 0 {
+                            return Err("empty shard".into());
+                        }
+                    }
+                }
+                let total: usize = grid.iter().flatten().map(ShardManifest::bytes).sum();
+                if total < spec.param_bytes() {
+                    return Err("shards lost parameters".into());
+                }
+                // Allowed overhead: the untied lm_head copy (pp>1) plus
+                // <2% for replicated norms/positions/biases.
+                let lm_head =
+                    if pp > 1 { spec.vocab * spec.hidden * spec.dtype.bytes() } else { 0 };
+                // Replication grows with TP (each extra rank re-holds
+                // positions/norms/row-parallel biases): ~2% per rank.
+                let bound = (spec.param_bytes() + lm_head) as f64 * (1.0 + 0.02 * tp as f64);
+                if (total as f64) > bound {
+                    return Err(format!("replication overhead too large: {total} > {bound}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,193 @@
+//! Model architecture specification and tensor inventory.
+//!
+//! The swap subsystem's cost model needs, for every (TP, PP) shard, the
+//! exact list of parameter tensors (count × bytes): the α–β link model
+//! charges per-message latency α for every tensor and β per byte, which
+//! is precisely the structure the paper uses to explain Fig 5's sublinear
+//! TP scaling. We therefore enumerate real OPT tensors (HF naming) rather
+//! than treating a model as one opaque blob.
+
+/// Parameter element type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F16,
+    Bf16,
+    F32,
+}
+
+impl Dtype {
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F16 | Dtype::Bf16 => 2,
+            Dtype::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+            Dtype::F32 => "f32",
+        }
+    }
+}
+
+/// One weight tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    /// HF-style dotted name, e.g. `decoder.layers.3.self_attn.q_proj.weight`.
+    pub name: String,
+    /// Logical shape (row-major).
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, dtype: Dtype) -> TensorSpec {
+        TensorSpec { name: name.into(), shape, dtype }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+/// OPT-family architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// Catalog name, e.g. `opt-13b`.
+    pub name: String,
+    pub num_layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// FFN inner dim (4×hidden for OPT).
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Maximum sequence length (OPT: 2048, +2 position offset).
+    pub max_pos: usize,
+    pub dtype: Dtype,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Full (unsharded) tensor inventory, HF OPT naming. `lm_head` is tied
+    /// to `embed_tokens` (OPT convention) so it is not listed separately.
+    pub fn tensors(&self) -> Vec<TensorSpec> {
+        let h = self.hidden;
+        let f = self.ffn;
+        let dt = self.dtype;
+        let mut out = Vec::new();
+        out.push(TensorSpec::new("decoder.embed_tokens.weight", vec![self.vocab, h], dt));
+        out.push(TensorSpec::new("decoder.embed_positions.weight", vec![self.max_pos + 2, h], dt));
+        for l in 0..self.num_layers {
+            let p = format!("decoder.layers.{l}");
+            for proj in ["q_proj", "k_proj", "v_proj", "out_proj"] {
+                out.push(TensorSpec::new(format!("{p}.self_attn.{proj}.weight"), vec![h, h], dt));
+                out.push(TensorSpec::new(format!("{p}.self_attn.{proj}.bias"), vec![h], dt));
+            }
+            out.push(TensorSpec::new(format!("{p}.self_attn_layer_norm.weight"), vec![h], dt));
+            out.push(TensorSpec::new(format!("{p}.self_attn_layer_norm.bias"), vec![h], dt));
+            out.push(TensorSpec::new(format!("{p}.fc1.weight"), vec![f, h], dt));
+            out.push(TensorSpec::new(format!("{p}.fc1.bias"), vec![f], dt));
+            out.push(TensorSpec::new(format!("{p}.fc2.weight"), vec![h, f], dt));
+            out.push(TensorSpec::new(format!("{p}.fc2.bias"), vec![h], dt));
+            out.push(TensorSpec::new(format!("{p}.final_layer_norm.weight"), vec![h], dt));
+            out.push(TensorSpec::new(format!("{p}.final_layer_norm.bias"), vec![h], dt));
+        }
+        out.push(TensorSpec::new("decoder.final_layer_norm.weight", vec![h], dt));
+        out.push(TensorSpec::new("decoder.final_layer_norm.bias", vec![h], dt));
+        out
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors().iter().map(TensorSpec::numel).sum()
+    }
+
+    /// Total parameter bytes at the spec dtype.
+    pub fn param_bytes(&self) -> usize {
+        self.tensors().iter().map(TensorSpec::bytes).sum()
+    }
+
+    /// Forward-pass FLOPs for a `tokens`-token batch (matmul-dominated
+    /// 2·params_matmul·tokens plus attention 2·2·h·s² per layer). Used by
+    /// the simulator's compute cost model.
+    pub fn forward_flops(&self, batch: usize, seqlen: usize) -> f64 {
+        let tokens = (batch * seqlen) as f64;
+        let h = self.hidden as f64;
+        let f = self.ffn as f64;
+        let l = self.num_layers as f64;
+        // Per-layer matmul params: 4 attention projections (h·h) + fc1/fc2 (2·h·f).
+        let matmul_params_per_layer = 4.0 * h * h + 2.0 * h * f;
+        let layer_flops = 2.0 * matmul_params_per_layer * tokens
+            + 4.0 * (seqlen as f64) * h * tokens; // QK^T + PV
+        let logits = 2.0 * (self.vocab as f64) * h * tokens;
+        l * layer_flops + logits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(Dtype::F16.bytes(), 2);
+        assert_eq!(Dtype::Bf16.bytes(), 2);
+        assert_eq!(Dtype::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn opt_13b_matches_paper_footprint() {
+        // Paper §5.1: OPT-13B in fp16 has a footprint of "about 24 GB".
+        let spec = catalog::opt("opt-13b").unwrap();
+        let gb = spec.param_bytes() as f64 / 1e9;
+        assert!((23.0..27.0).contains(&gb), "got {gb} GB");
+        // And roughly 13B parameters.
+        let b = spec.param_count() as f64 / 1e9;
+        assert!((12.0..13.5).contains(&b), "got {b}B params");
+    }
+
+    #[test]
+    fn opt_125m_param_count() {
+        let spec = catalog::opt("opt-125m").unwrap();
+        let m = spec.param_count() as f64 / 1e6;
+        assert!((110.0..140.0).contains(&m), "got {m}M params");
+    }
+
+    #[test]
+    fn tensor_count_scales_with_layers() {
+        let a = catalog::opt("opt-125m").unwrap();
+        let b = catalog::opt("opt-1.3b").unwrap();
+        // 16 tensors per layer + 4 non-layer tensors.
+        assert_eq!(a.tensors().len(), a.num_layers * 16 + 4);
+        assert_eq!(b.tensors().len(), b.num_layers * 16 + 4);
+    }
+
+    #[test]
+    fn forward_flops_positive_and_monotone() {
+        let spec = catalog::opt("opt-1.3b").unwrap();
+        let f1 = spec.forward_flops(1, 8);
+        let f2 = spec.forward_flops(8, 8);
+        let f3 = spec.forward_flops(8, 64);
+        assert!(f1 > 0.0);
+        assert!(f2 > f1);
+        assert!(f3 > f2);
+    }
+
+    #[test]
+    fn flops_order_of_magnitude() {
+        // ~2 * 13e9 params * tokens for OPT-13B.
+        let spec = catalog::opt("opt-13b").unwrap();
+        let flops = spec.forward_flops(1, 1);
+        assert!((1.0e10..1.0e11).contains(&flops), "got {flops}");
+    }
+}

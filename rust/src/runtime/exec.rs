@@ -1,0 +1,566 @@
+//! Per-worker PJRT execution: compiled stage executables + parameter
+//! shard buffers + the stage forward pass.
+//!
+//! One `WorkerRuntime` corresponds to one worker (= one GPU in the paper)
+//! at grid position (pp_rank, tp_rank). It owns:
+//!
+//! - the PJRT client and the compiled stage executables (embed / attn /
+//!   mlp / head, one per (batch, seq) bucket) — compiled once at startup
+//!   from the HLO text artifacts, reused by every model instance and
+//!   every layer (weights are runtime arguments);
+//! - for every model instance, the *host* ("pinned CPU") parameter shard
+//!   and, when the instance is loaded, the *device* parameter buffers.
+//!
+//! Load = upload host shard → PjRtBuffers (`buffer_from_host_buffer`);
+//! offload = drop the device buffers (host copy is authoritative, exactly
+//! the paper's pinned-CPU-memory design). PJRT objects are not Send, so
+//! each worker thread builds its own `WorkerRuntime`.
+//!
+//! CPU-PJRT divergence note (DESIGN.md §1): there are no async copy
+//! engines on the CPU plugin, so real-mode transfers run synchronously
+//! inside the worker thread; cross-stage load parallelism still happens
+//! (each stage's thread transfers concurrently), while stream-level
+//! overlap is exercised by the discrete-event simulator.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::shard::stage_layers;
+use crate::model::spec::{ModelSpec, TensorSpec};
+use crate::runtime::manifest::{Manifest, Role};
+use crate::runtime::weights;
+
+/// Input to a stage forward.
+pub enum StageInput {
+    /// First stage: flattened (batch, seq) token ids.
+    Ids(Vec<i32>),
+    /// Later stages: flattened (batch, seq, hidden) activations.
+    Hidden(Vec<f32>),
+}
+
+/// Output of a stage forward.
+#[derive(Clone, Debug)]
+pub enum StageOutput {
+    /// Flattened (batch, seq, hidden) activations for the next stage.
+    Hidden(Vec<f32>),
+    /// Last stage: flattened (batch*seq, vocab/tp) local logit shard.
+    LogitShard(Vec<f32>),
+}
+
+struct LayerParams {
+    /// ln_w, ln_b, q_w, q_b, k_w, k_b, v_w, v_b, o_w, o_b.
+    attn: Vec<(Vec<usize>, Vec<f32>)>,
+    /// ln_w, ln_b, fc1_w, fc1_b, fc2_w, fc2_b.
+    mlp: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+/// Host-resident ("pinned") parameter shard for one model instance.
+struct HostShard {
+    /// embed_tokens shard + positions (stage 0 only).
+    embed: Option<Vec<(Vec<usize>, Vec<f32>)>>,
+    layers: Vec<LayerParams>,
+    /// lnf_w, lnf_b, lm_head shard (last stage only).
+    head: Option<Vec<(Vec<usize>, Vec<f32>)>>,
+    bytes: usize,
+    tensors: usize,
+}
+
+/// Device-resident buffers (present iff the instance is loaded).
+struct DeviceShard {
+    embed: Option<Vec<xla::PjRtBuffer>>,
+    layers: Vec<(Vec<xla::PjRtBuffer>, Vec<xla::PjRtBuffer>)>,
+    head: Option<Vec<xla::PjRtBuffer>>,
+}
+
+/// One worker's runtime.
+pub struct WorkerRuntime {
+    pub client: xla::PjRtClient,
+    pub spec: ModelSpec,
+    pub tp: usize,
+    pub pp: usize,
+    pub tp_rank: usize,
+    pub pp_rank: usize,
+    /// (role, batch, seq) -> compiled executable.
+    exes: HashMap<(Role, usize, usize), xla::PjRtLoadedExecutable>,
+    buckets: Vec<(usize, usize)>,
+    hosts: Vec<HostShard>,
+    devices: Vec<Option<DeviceShard>>,
+    local_layers: (usize, usize),
+}
+
+impl WorkerRuntime {
+    /// Build the runtime: compile all bucket executables and generate the
+    /// host parameter shards for `num_instances` model instances
+    /// (instance i uses weight seed `manifest.weight_seed + i`).
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        tp: usize,
+        pp: usize,
+        tp_rank: usize,
+        pp_rank: usize,
+        num_instances: usize,
+    ) -> Result<WorkerRuntime> {
+        let spec = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+            .clone();
+        if !manifest.supports(model, tp) {
+            return Err(anyhow!("artifacts missing for model '{model}' tp={tp} — run `make artifacts`"));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let buckets = manifest.buckets(model, tp);
+        let mut exes = HashMap::new();
+        for &(b, s) in &buckets {
+            for role in [Role::Embed, Role::Attn, Role::Mlp, Role::Head] {
+                let art = manifest
+                    .find(model, tp, role, b, s)
+                    .ok_or_else(|| anyhow!("missing artifact {model} tp={tp} {role:?} b={b} s={s}"))?;
+                let path = art
+                    .file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+                let proto = xla::HloModuleProto::from_text_file(path)
+                    .with_context(|| format!("loading {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+                exes.insert((role, b, s), exe);
+            }
+        }
+
+        let local_layers = stage_layers(&spec, pp, pp_rank);
+        let mut hosts = Vec::new();
+        for inst in 0..num_instances {
+            let seed = manifest.weight_seed + inst as u64;
+            hosts.push(build_host_shard(&spec, seed, tp, pp, tp_rank, pp_rank)?);
+        }
+        let devices = (0..num_instances).map(|_| None).collect();
+        Ok(WorkerRuntime {
+            client,
+            spec,
+            tp,
+            pp,
+            tp_rank,
+            pp_rank,
+            exes,
+            buckets,
+            hosts,
+            devices,
+            local_layers,
+        })
+    }
+
+    pub fn is_first_stage(&self) -> bool {
+        self.pp_rank == 0
+    }
+
+    pub fn is_last_stage(&self) -> bool {
+        self.pp_rank == self.pp - 1
+    }
+
+    /// Number of transformer layers owned by this stage.
+    pub fn num_local_layers(&self) -> usize {
+        self.local_layers.1 - self.local_layers.0
+    }
+
+    /// Host shard size in bytes (what a load entry transfers).
+    pub fn shard_bytes(&self, instance: usize) -> usize {
+        self.hosts[instance].bytes
+    }
+
+    /// Host shard tensor count (the α-term message count).
+    pub fn shard_tensors(&self, instance: usize) -> usize {
+        self.hosts[instance].tensors
+    }
+
+    pub fn is_loaded(&self, instance: usize) -> bool {
+        self.devices[instance].is_some()
+    }
+
+    /// Available (batch, seq) buckets.
+    pub fn buckets(&self) -> &[(usize, usize)] {
+        &self.buckets
+    }
+
+    /// Smallest bucket fitting (batch, seq).
+    pub fn pick_bucket(&self, batch: usize, seq: usize) -> Option<(usize, usize)> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&(b, s)| b >= batch && s >= seq)
+            .min()
+    }
+
+    /// Upload the instance's parameters to the device (the load entry's
+    /// work). Returns the number of buffers created.
+    pub fn load(&mut self, instance: usize) -> Result<usize> {
+        if self.devices[instance].is_some() {
+            return Err(anyhow!("instance {instance} already loaded"));
+        }
+        let host = &self.hosts[instance];
+        let up = |params: &Vec<(Vec<usize>, Vec<f32>)>| -> Result<Vec<xla::PjRtBuffer>> {
+            params
+                .iter()
+                .map(|(shape, data)| {
+                    Ok(self.client.buffer_from_host_buffer::<f32>(data, shape, None)?)
+                })
+                .collect()
+        };
+        let embed = host.embed.as_ref().map(&up).transpose()?;
+        let mut layers = Vec::new();
+        for layer in &host.layers {
+            layers.push((up(&layer.attn)?, up(&layer.mlp)?));
+        }
+        let head = host.head.as_ref().map(&up).transpose()?;
+        let count = embed.as_ref().map_or(0, Vec::len)
+            + layers.iter().map(|(a, m)| a.len() + m.len()).sum::<usize>()
+            + head.as_ref().map_or(0, Vec::len);
+        self.devices[instance] = Some(DeviceShard { embed, layers, head });
+        Ok(count)
+    }
+
+    /// Drop the instance's device buffers (the offload entry's work; the
+    /// pinned host copy remains authoritative).
+    pub fn offload(&mut self, instance: usize) -> Result<()> {
+        if self.devices[instance].take().is_none() {
+            return Err(anyhow!("instance {instance} not loaded"));
+        }
+        Ok(())
+    }
+
+    fn exe(&self, role: Role, bucket: (usize, usize)) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(&(role, bucket.0, bucket.1))
+            .ok_or_else(|| anyhow!("no executable for {role:?} bucket {bucket:?}"))
+    }
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, shape, None)?)
+    }
+
+    fn run(
+        &self,
+        role: Role,
+        bucket: (usize, usize),
+        args: Vec<&xla::PjRtBuffer>,
+    ) -> Result<Vec<f32>> {
+        let exe = self.exe(role, bucket)?;
+        let out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let lit = out[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Execute the vocab-parallel embedding partial (first stage only).
+    pub fn exec_embed(&self, instance: usize, ids: &[i32], bucket: (usize, usize)) -> Result<Vec<f32>> {
+        let dev = self.devices[instance]
+            .as_ref()
+            .ok_or_else(|| anyhow!("instance {instance} not loaded (load dependency violated)"))?;
+        let embed = dev.embed.as_ref().ok_or_else(|| anyhow!("not the first stage"))?;
+        let (b, s) = bucket;
+        anyhow::ensure!(ids.len() == b * s, "ids length {} != bucket {b}x{s}", ids.len());
+        let ids_buf = self.client.buffer_from_host_buffer::<i32>(ids, &[b, s], None)?;
+        let start = (self.tp_rank * (self.spec.vocab / self.tp)) as i32;
+        let start_buf = self.client.buffer_from_host_buffer::<i32>(&[start], &[], None)?;
+        self.run(Role::Embed, bucket, vec![&ids_buf, &start_buf, &embed[0], &embed[1]])
+    }
+
+    /// Execute one local layer's attention half (partial output).
+    pub fn exec_attn(
+        &self,
+        instance: usize,
+        local_layer: usize,
+        hidden: &[f32],
+        bucket: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        let dev = self.devices[instance]
+            .as_ref()
+            .ok_or_else(|| anyhow!("instance {instance} not loaded (load dependency violated)"))?;
+        let (b, s) = bucket;
+        let h = self.spec.hidden;
+        anyhow::ensure!(hidden.len() == b * s * h);
+        let hidden_buf = self.upload_f32(hidden, &[b, s, h])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&hidden_buf];
+        args.extend(dev.layers[local_layer].0.iter());
+        self.run(Role::Attn, bucket, args)
+    }
+
+    /// Execute one local layer's MLP half (partial output).
+    pub fn exec_mlp(
+        &self,
+        instance: usize,
+        local_layer: usize,
+        hidden: &[f32],
+        bucket: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        let dev = self.devices[instance]
+            .as_ref()
+            .ok_or_else(|| anyhow!("instance {instance} not loaded (load dependency violated)"))?;
+        let (b, s) = bucket;
+        let h = self.spec.hidden;
+        anyhow::ensure!(hidden.len() == b * s * h);
+        let hidden_buf = self.upload_f32(hidden, &[b, s, h])?;
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&hidden_buf];
+        args.extend(dev.layers[local_layer].1.iter());
+        self.run(Role::Mlp, bucket, args)
+    }
+
+    /// Execute the final-LN + logits shard (last stage only).
+    pub fn exec_head(&self, instance: usize, hidden: &[f32], bucket: (usize, usize)) -> Result<Vec<f32>> {
+        let dev = self.devices[instance]
+            .as_ref()
+            .ok_or_else(|| anyhow!("instance {instance} not loaded (load dependency violated)"))?;
+        let head = dev.head.as_ref().ok_or_else(|| anyhow!("not the last stage"))?;
+        let (b, s) = bucket;
+        let h = self.spec.hidden;
+        anyhow::ensure!(hidden.len() == b * s * h);
+        let hidden_buf = self.upload_f32(hidden, &[b, s, h])?;
+        self.run(Role::Head, bucket, vec![&hidden_buf, &head[0], &head[1], &head[2]])
+    }
+
+    /// Full stage forward: embed (stage 0) / hidden in, hidden out (or the
+    /// local logit shard on the last stage). `reduce` performs the TP
+    /// all-reduce over partials (identity at tp=1); the residual adds
+    /// happen here, after each reduce, exactly as in `model.py`'s
+    /// `forward_sharded`.
+    pub fn forward_stage(
+        &self,
+        instance: usize,
+        input: StageInput,
+        bucket: (usize, usize),
+        reduce: &mut dyn FnMut(Vec<f32>) -> Vec<f32>,
+    ) -> Result<StageOutput> {
+        let mut hidden = match input {
+            StageInput::Ids(ids) => {
+                anyhow::ensure!(self.is_first_stage(), "ids input on non-first stage");
+                reduce(self.exec_embed(instance, &ids, bucket)?)
+            }
+            StageInput::Hidden(h) => h,
+        };
+        for l in 0..self.num_local_layers() {
+            let attn = reduce(self.exec_attn(instance, l, &hidden, bucket)?);
+            add_inplace(&mut hidden, &attn);
+            let mlp = reduce(self.exec_mlp(instance, l, &hidden, bucket)?);
+            add_inplace(&mut hidden, &mlp);
+        }
+        if self.is_last_stage() {
+            Ok(StageOutput::LogitShard(self.exec_head(instance, &hidden, bucket)?))
+        } else {
+            Ok(StageOutput::Hidden(hidden))
+        }
+    }
+}
+
+fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// Generate the host parameter shard for one worker/instance.
+fn build_host_shard(
+    spec: &ModelSpec,
+    seed: u64,
+    tp: usize,
+    pp: usize,
+    tp_rank: usize,
+    pp_rank: usize,
+) -> Result<HostShard> {
+    let h = spec.hidden;
+    let f = spec.ffn;
+    let dt = spec.dtype;
+    let gen = |name: &str, shape: Vec<usize>| -> (Vec<usize>, Vec<f32>) {
+        let full_spec = TensorSpec::new(name, shape.clone(), dt);
+        let vals = weights::shard_values(spec, &full_spec, seed, tp, tp_rank);
+        // Shard shape after splitting.
+        let shard_shape = match weights::shard_kind(name) {
+            weights::ShardKind::Column => {
+                let mut s = shape.clone();
+                s[0] /= tp;
+                s
+            }
+            weights::ShardKind::Row => {
+                let mut s = shape.clone();
+                s[1] /= tp;
+                s
+            }
+            weights::ShardKind::Replicated => shape.clone(),
+        };
+        debug_assert_eq!(vals.len(), shard_shape.iter().product::<usize>());
+        (shard_shape, vals)
+    };
+
+    let embed = if pp_rank == 0 {
+        Some(vec![
+            gen("decoder.embed_tokens.weight", vec![spec.vocab, h]),
+            gen("decoder.embed_positions.weight", vec![spec.max_pos + 2, h]),
+        ])
+    } else {
+        None
+    };
+
+    let (lo, hi) = stage_layers(spec, pp, pp_rank);
+    let mut layers = Vec::new();
+    for l in lo..hi {
+        let p = format!("decoder.layers.{l}");
+        let attn = vec![
+            gen(&format!("{p}.self_attn_layer_norm.weight"), vec![h]),
+            gen(&format!("{p}.self_attn_layer_norm.bias"), vec![h]),
+            gen(&format!("{p}.self_attn.q_proj.weight"), vec![h, h]),
+            gen(&format!("{p}.self_attn.q_proj.bias"), vec![h]),
+            gen(&format!("{p}.self_attn.k_proj.weight"), vec![h, h]),
+            gen(&format!("{p}.self_attn.k_proj.bias"), vec![h]),
+            gen(&format!("{p}.self_attn.v_proj.weight"), vec![h, h]),
+            gen(&format!("{p}.self_attn.v_proj.bias"), vec![h]),
+            gen(&format!("{p}.self_attn.out_proj.weight"), vec![h, h]),
+            gen(&format!("{p}.self_attn.out_proj.bias"), vec![h]),
+        ];
+        let mlp = vec![
+            gen(&format!("{p}.final_layer_norm.weight"), vec![h]),
+            gen(&format!("{p}.final_layer_norm.bias"), vec![h]),
+            gen(&format!("{p}.fc1.weight"), vec![f, h]),
+            gen(&format!("{p}.fc1.bias"), vec![f]),
+            gen(&format!("{p}.fc2.weight"), vec![h, f]),
+            gen(&format!("{p}.fc2.bias"), vec![h]),
+        ];
+        layers.push(LayerParams { attn, mlp });
+    }
+
+    let head = if pp_rank == pp - 1 {
+        Some(vec![
+            gen("decoder.final_layer_norm.weight", vec![h]),
+            gen("decoder.final_layer_norm.bias", vec![h]),
+            // Tied lm_head = embed_tokens (column shard).
+            gen("decoder.embed_tokens.weight", vec![spec.vocab, h]),
+        ])
+    } else {
+        None
+    };
+
+    let all = |o: &Option<Vec<(Vec<usize>, Vec<f32>)>>| -> (usize, usize) {
+        o.as_ref().map_or((0, 0), |v| {
+            (v.iter().map(|(_, d)| d.len() * 4).sum(), v.len())
+        })
+    };
+    let (eb, et) = all(&embed);
+    let (hb, ht) = all(&head);
+    let (lb, lt) = layers.iter().fold((0usize, 0usize), |(b, t), l| {
+        (
+            b + l.attn.iter().chain(&l.mlp).map(|(_, d)| d.len() * 4).sum::<usize>(),
+            t + l.attn.len() + l.mlp.len(),
+        )
+    });
+    Ok(HostShard { embed, layers, head, bytes: eb + hb + lb, tensors: et + ht + lt })
+}
+
+/// Utility for tests and single-process drivers: run the full pipeline
+/// over a grid of runtimes indexed `[pp_rank][tp_rank]`, performing the
+/// all-reduces and the final all-gather in-process.
+///
+/// `shape` is the *logical* (batch, seq); the call picks the smallest
+/// compiled bucket that fits, pads ids with zeros (harmless: batches are
+/// row-independent and attention is causal), and returns logits for the
+/// logical shape only, flattened (batch*seq, vocab).
+pub fn forward_pipeline(
+    grid: &[Vec<WorkerRuntime>],
+    instance: usize,
+    ids: &[i32],
+    shape: (usize, usize),
+) -> Result<Vec<f32>> {
+    let (lb, ls) = shape;
+    anyhow::ensure!(ids.len() == lb * ls, "ids length {} != {lb}x{ls}", ids.len());
+    let bucket = grid[0][0]
+        .pick_bucket(lb, ls)
+        .ok_or_else(|| anyhow!("no bucket fits batch={lb} seq={ls}"))?;
+    let padded = pad_ids(ids, (lb, ls), bucket);
+    let full = forward_pipeline_bucket(grid, instance, &padded, bucket)?;
+    // Slice the logical rows/positions back out.
+    let vocab = grid[0][0].spec.vocab;
+    let (_, bs) = bucket;
+    let mut out = Vec::with_capacity(lb * ls * vocab);
+    for row in 0..lb {
+        for pos in 0..ls {
+            let src = (row * bs + pos) * vocab;
+            out.extend_from_slice(&full[src..src + vocab]);
+        }
+    }
+    Ok(out)
+}
+
+/// Pad flattened (batch, seq) ids into a (bucket_b, bucket_s) grid.
+pub fn pad_ids(ids: &[i32], shape: (usize, usize), bucket: (usize, usize)) -> Vec<i32> {
+    let (lb, ls) = shape;
+    let (bb, bs) = bucket;
+    let mut out = vec![0i32; bb * bs];
+    for row in 0..lb {
+        out[row * bs..row * bs + ls].copy_from_slice(&ids[row * ls..(row + 1) * ls]);
+    }
+    out
+}
+
+/// Like `forward_pipeline` but with an exact bucket-shaped input.
+pub fn forward_pipeline_bucket(
+    grid: &[Vec<WorkerRuntime>],
+    instance: usize,
+    ids: &[i32],
+    bucket: (usize, usize),
+) -> Result<Vec<f32>> {
+    let pp = grid.len();
+    let tp = grid[0].len();
+    let (b, s) = bucket;
+    anyhow::ensure!(ids.len() == b * s);
+    let spec = &grid[0][0].spec;
+    let h = spec.hidden;
+
+    let mut hidden: Option<Vec<f32>> = None;
+    let mut logits_shards: Vec<Vec<f32>> = Vec::new();
+    for (stage, row) in grid.iter().enumerate() {
+        // Gather each rank's per-op partials via lockstep per-layer calls.
+        let mut x = match &hidden {
+            None => {
+                let mut sum = vec![0.0f32; b * s * h];
+                for rt in row {
+                    let p = rt.exec_embed(instance, ids, bucket)?;
+                    add_inplace(&mut sum, &p);
+                }
+                sum
+            }
+            Some(hd) => hd.clone(),
+        };
+        for l in 0..row[0].num_local_layers() {
+            let mut attn = vec![0.0f32; x.len()];
+            for rt in row {
+                add_inplace(&mut attn, &rt.exec_attn(instance, l, &x, bucket)?);
+            }
+            add_inplace(&mut x, &attn);
+            let mut mlp = vec![0.0f32; x.len()];
+            for rt in row {
+                add_inplace(&mut mlp, &rt.exec_mlp(instance, l, &x, bucket)?);
+            }
+            add_inplace(&mut x, &mlp);
+        }
+        if stage == pp - 1 {
+            for rt in row {
+                logits_shards.push(rt.exec_head(instance, &x, bucket)?);
+            }
+        }
+        hidden = Some(x);
+    }
+
+    // All-gather: concatenate vocab shards per row.
+    let vocab = spec.vocab;
+    let vshard = vocab / tp;
+    let rows = b * s;
+    let mut logits = vec![0.0f32; rows * vocab];
+    for (r, shard) in logits_shards.iter().enumerate() {
+        anyhow::ensure!(shard.len() == rows * vshard);
+        for row_i in 0..rows {
+            let dst = row_i * vocab + r * vshard;
+            let src = row_i * vshard;
+            logits[dst..dst + vshard].copy_from_slice(&shard[src..src + vshard]);
+        }
+    }
+    Ok(logits)
+}

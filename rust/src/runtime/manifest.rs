@@ -1,0 +1,261 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Parses `artifacts/manifest.json` into typed
+//! descriptions of every HLO artifact (role, bucket, argument signature),
+//! the model configs, and the golden test vectors.
+
+use crate::model::spec::{Dtype, ModelSpec};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Stage role of one artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    Embed,
+    Attn,
+    Mlp,
+    Head,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Option<Role> {
+        match s {
+            "embed" => Some(Role::Embed),
+            "attn" => Some(Role::Attn),
+            "mlp" => Some(Role::Mlp),
+            "head" => Some(Role::Head),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Embed => "embed",
+            Role::Attn => "attn",
+            Role::Mlp => "mlp",
+            Role::Head => "head",
+        }
+    }
+}
+
+/// One argument of an artifact's entry computation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    /// "f32" or "i32".
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One compiled-HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub model: String,
+    pub role: Role,
+    pub tp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Golden test vector for one model config.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub batch: usize,
+    pub seq: usize,
+    /// Flattened (batch, seq) int32 token ids.
+    pub ids: Vec<i32>,
+    /// Flattened (batch, vocab) reference logits at the last position.
+    pub last_logits: Vec<f32>,
+    pub argmax: Vec<usize>,
+    pub tolerance: f64,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub weight_seed: u64,
+    pub models: BTreeMap<String, ModelSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub golden: BTreeMap<String, Golden>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let weight_seed = j.req_f64("weight_seed")? as u64;
+
+        let mut models = BTreeMap::new();
+        for (name, cfg) in j.get("models").and_then(Json::as_obj).into_iter().flatten() {
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    name: name.clone(),
+                    num_layers: cfg.req_usize("layers")?,
+                    hidden: cfg.req_usize("hidden")?,
+                    heads: cfg.req_usize("heads")?,
+                    ffn: cfg.req_usize("ffn")?,
+                    vocab: cfg.req_usize("vocab")?,
+                    max_pos: cfg.req_usize("max_pos")?,
+                    dtype: Dtype::F32,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for item in j.req_arr("artifacts")? {
+            let role = Role::parse(item.req_str("role")?)
+                .ok_or_else(|| anyhow::anyhow!("unknown role in manifest"))?;
+            let mut args = Vec::new();
+            for a in item.req_arr("args")? {
+                let parts = a.as_arr().ok_or_else(|| anyhow::anyhow!("bad arg spec"))?;
+                args.push(ArgSpec {
+                    name: parts[0].as_str().unwrap_or_default().to_string(),
+                    dtype: parts[1].as_str().unwrap_or_default().to_string(),
+                    shape: parts[2]
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                });
+            }
+            artifacts.push(ArtifactSpec {
+                file: dir.join(item.req_str("file")?),
+                model: item.req_str("model")?.to_string(),
+                role,
+                tp: item.req_usize("tp")?,
+                batch: item.req_usize("batch")?,
+                seq: item.req_usize("seq")?,
+                args,
+            });
+        }
+
+        let mut golden = BTreeMap::new();
+        for (name, g) in j.get("golden").and_then(Json::as_obj).into_iter().flatten() {
+            golden.insert(
+                name.clone(),
+                Golden {
+                    batch: g.req_usize("batch")?,
+                    seq: g.req_usize("seq")?,
+                    ids: g
+                        .req_arr("ids")?
+                        .iter()
+                        .filter_map(Json::as_f64)
+                        .map(|x| x as i32)
+                        .collect(),
+                    last_logits: g
+                        .req_arr("last_logits")?
+                        .iter()
+                        .filter_map(Json::as_f64)
+                        .map(|x| x as f32)
+                        .collect(),
+                    argmax: g.req_arr("argmax")?.iter().filter_map(Json::as_usize).collect(),
+                    tolerance: g.req_f64("tolerance")?,
+                },
+            );
+        }
+
+        Ok(Manifest { dir: dir.to_path_buf(), weight_seed, models, artifacts, golden })
+    }
+
+    /// Find the artifact for (model, tp, role) with the smallest bucket
+    /// that fits (batch, seq). Buckets are exact-shape executables; the
+    /// caller pads its batch to the bucket.
+    pub fn find(
+        &self,
+        model: &str,
+        tp: usize,
+        role: Role,
+        batch: usize,
+        seq: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.model == model && a.tp == tp && a.role == role && a.batch >= batch && a.seq >= seq
+            })
+            .min_by_key(|a| (a.batch, a.seq))
+    }
+
+    /// All (batch, seq) buckets available for (model, tp).
+    pub fn buckets(&self, model: &str, tp: usize) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.tp == tp && a.role == Role::Attn)
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// True if the artifacts directory provides (model, tp).
+    pub fn supports(&self, model: &str, tp: usize) -> bool {
+        !self.buckets(model, tp).is_empty()
+    }
+}
+
+/// Default artifacts directory: `$COMPUTRON_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("COMPUTRON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir).expect("manifest parses"))
+        } else {
+            None // artifacts not built in this environment; covered by `make test`
+        }
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let Some(m) = manifest() else { return };
+        assert!(m.weight_seed > 0);
+        assert!(m.models.contains_key("opt-test"));
+        assert!(m.supports("opt-test", 1));
+        let spec = &m.models["opt-test"];
+        assert_eq!(spec.hidden, 128);
+        // Every artifact file exists on disk.
+        for a in &m.artifacts {
+            assert!(a.file.exists(), "{:?} missing", a.file);
+            assert!(!a.args.is_empty());
+        }
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let Some(m) = manifest() else { return };
+        let buckets = m.buckets("opt-test", 1);
+        assert!(buckets.contains(&(1, 8)));
+        let a = m.find("opt-test", 1, Role::Attn, 1, 8).unwrap();
+        assert_eq!((a.batch, a.seq), (1, 8));
+        // batch 2 must pick the smallest bucket >= 2.
+        if let Some(a) = m.find("opt-test", 1, Role::Attn, 2, 8) {
+            assert!(a.batch >= 2);
+        }
+        // Oversized requests find nothing.
+        assert!(m.find("opt-test", 1, Role::Attn, 1024, 8).is_none());
+    }
+
+    #[test]
+    fn golden_vectors_present() {
+        let Some(m) = manifest() else { return };
+        let g = &m.golden["opt-test"];
+        assert_eq!(g.ids.len(), g.batch * g.seq);
+        assert_eq!(g.last_logits.len(), g.batch * m.models["opt-test"].vocab);
+        assert_eq!(g.argmax.len(), g.batch);
+    }
+}

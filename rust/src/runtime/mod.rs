@@ -1,0 +1,24 @@
+//! PJRT runtime: artifact manifest, cross-language weight generation, and
+//! per-worker stage execution (load / offload / forward).
+//!
+//! Layer-2/1 artifacts are produced once by `make artifacts`
+//! (`python/compile/aot.py`); this module loads the HLO text through the
+//! `xla` crate (PJRT CPU client) and serves it from the request path —
+//! python never runs at serving time.
+
+pub mod exec;
+pub mod manifest;
+pub mod weights;
+
+pub use exec::{forward_pipeline, StageInput, StageOutput, WorkerRuntime};
+pub use manifest::{Manifest, Role};
+
+use anyhow::Result;
+
+/// Load an HLO text file and compile it on the given client (the
+/// /opt/xla-example load_hlo pattern).
+pub fn compile_hlo_text(client: &xla::PjRtClient, path: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}

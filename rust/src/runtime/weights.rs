@@ -1,0 +1,222 @@
+//! Deterministic weight generation — the rust twin of
+//! `python/compile/weights.py`.
+//!
+//! Both languages must produce bit-identical parameters so the golden
+//! vectors in the artifact manifest (computed by the python reference
+//! forward) validate the rust execution path. The scheme is counter-based
+//! splitmix64 keyed by FNV-1a of the tensor name (see the python module
+//! doc); goldens are pinned in both test suites.
+
+use crate::model::spec::ModelSpec;
+use crate::model::TensorSpec;
+
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// FNV-1a 64-bit hash of a tensor name.
+pub fn fnv1a64(name: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+fn splitmix64_finalize(z: u64) -> u64 {
+    let mut z = z.wrapping_add(GOLDEN);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Flat values for one tensor: uniform(-scale, scale), f32.
+pub fn tensor_values(name: &str, numel: usize, global_seed: u64, scale: f64) -> Vec<f32> {
+    let seed = fnv1a64(name) ^ global_seed;
+    (1..=numel as u64)
+        .map(|i| {
+            let bits = splitmix64_finalize(i.wrapping_mul(GOLDEN).wrapping_add(seed));
+            let unit = (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            ((unit * 2.0 - 1.0) * scale) as f32
+        })
+        .collect()
+}
+
+/// Init scale rule (must match python `default_scale`).
+pub fn default_scale(name: &str, hidden: usize) -> f64 {
+    if name.contains("embed") || name.ends_with(".bias") || name.contains("layer_norm") {
+        0.02
+    } else {
+        1.0 / (hidden as f64).sqrt()
+    }
+}
+
+fn is_layer_norm_weight(name: &str) -> bool {
+    name.contains("layer_norm.weight") || name.ends_with("final_layer_norm.weight")
+}
+
+/// Full (unsharded) values for one tensor of a model instance.
+/// `global_seed` distinguishes instances (instance i uses base_seed + i).
+pub fn full_tensor(spec: &ModelSpec, name: &str, shape: &[usize], global_seed: u64) -> Vec<f32> {
+    let numel: usize = shape.iter().product();
+    let mut vals = tensor_values(name, numel, global_seed, default_scale(name, spec.hidden));
+    if is_layer_norm_weight(name) {
+        for v in &mut vals {
+            *v += 1.0;
+        }
+    }
+    vals
+}
+
+/// Slice a column-parallel shard (split dim 0) out of a full tensor.
+pub fn shard_column(full: &[f32], shape: &[usize], tp: usize, rank: usize) -> Vec<f32> {
+    let rows = shape[0];
+    assert_eq!(rows % tp, 0);
+    let row_elems: usize = shape[1..].iter().product::<usize>().max(1);
+    let step = rows / tp;
+    full[rank * step * row_elems..(rank + 1) * step * row_elems].to_vec()
+}
+
+/// Slice a row-parallel shard (split dim 1) out of a full 2-D tensor.
+pub fn shard_row(full: &[f32], shape: &[usize], tp: usize, rank: usize) -> Vec<f32> {
+    assert_eq!(shape.len(), 2);
+    let (rows, cols) = (shape[0], shape[1]);
+    assert_eq!(cols % tp, 0);
+    let step = cols / tp;
+    let mut out = Vec::with_capacity(rows * step);
+    for r in 0..rows {
+        let base = r * cols + rank * step;
+        out.extend_from_slice(&full[base..base + step]);
+    }
+    out
+}
+
+/// How a tensor is sharded under TP (mirrors `model::shard` / model.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Split dim 0 (q/k/v/fc1 weights+biases, embed_tokens, lm_head).
+    Column,
+    /// Split dim 1 (out_proj / fc2 weights).
+    Row,
+    /// Full copy on every rank (norms, positions, row-parallel biases).
+    Replicated,
+}
+
+/// Sharding rule by tensor name.
+pub fn shard_kind(name: &str) -> ShardKind {
+    if name.contains("out_proj.weight") || name.contains("fc2.weight") {
+        ShardKind::Row
+    } else if name.contains("embed_tokens")
+        || name.ends_with("lm_head.weight")
+        || name.contains("q_proj")
+        || name.contains("k_proj")
+        || name.contains("v_proj")
+        || name.contains("fc1")
+    {
+        ShardKind::Column
+    } else {
+        ShardKind::Replicated
+    }
+}
+
+/// Generate this rank's shard of one tensor, given the FULL tensor spec.
+pub fn shard_values(
+    spec: &ModelSpec,
+    full_spec: &TensorSpec,
+    global_seed: u64,
+    tp: usize,
+    rank: usize,
+) -> Vec<f32> {
+    let full = full_tensor(spec, &full_spec.name, &full_spec.shape, global_seed);
+    match shard_kind(&full_spec.name) {
+        ShardKind::Column => shard_column(&full, &full_spec.shape, tp, rank),
+        ShardKind::Row => shard_row(&full, &full_spec.shape, tp, rank),
+        ShardKind::Replicated => full,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::catalog;
+
+    #[test]
+    fn fnv_goldens_match_python() {
+        assert_eq!(fnv1a64(""), 0xCBF29CE484222325);
+        assert_eq!(fnv1a64("a"), 0xAF63DC4C8601EC8C);
+        assert_eq!(fnv1a64("decoder.embed_tokens.weight"), 0x7767B2DCFFF82D57);
+    }
+
+    #[test]
+    fn tensor_values_golden_matches_python() {
+        let vals = tensor_values("decoder.embed_tokens.weight", 4, 0x0C0117, 0.02);
+        let expected = [0.005162308f32, 0.016930485, 0.00085321523, -0.0058384575];
+        for (a, b) in vals.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_distinct() {
+        let a = tensor_values("x", 64, 1, 1.0);
+        let b = tensor_values("x", 64, 1, 1.0);
+        let c = tensor_values("y", 64, 1, 1.0);
+        let d = tensor_values("x", 64, 2, 1.0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        assert!(a.iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn layer_norm_weights_offset() {
+        let spec = catalog::opt_test();
+        let vals = full_tensor(&spec, "decoder.layers.0.self_attn_layer_norm.weight", &[128], 1);
+        assert!(vals.iter().all(|v| (v - 1.0).abs() < 0.05));
+    }
+
+    #[test]
+    fn column_shards_reassemble() {
+        let shape = [6, 4];
+        let full: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let mut cat = Vec::new();
+        for r in 0..3 {
+            cat.extend(shard_column(&full, &shape, 3, r));
+        }
+        assert_eq!(cat, full);
+    }
+
+    #[test]
+    fn row_shards_reassemble() {
+        let shape = [3, 4];
+        let full: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let s0 = shard_row(&full, &shape, 2, 0);
+        let s1 = shard_row(&full, &shape, 2, 1);
+        assert_eq!(s0, vec![0.0, 1.0, 4.0, 5.0, 8.0, 9.0]);
+        assert_eq!(s1, vec![2.0, 3.0, 6.0, 7.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn shard_kinds_by_name() {
+        assert_eq!(shard_kind("decoder.layers.0.self_attn.q_proj.weight"), ShardKind::Column);
+        assert_eq!(shard_kind("decoder.layers.0.self_attn.out_proj.weight"), ShardKind::Row);
+        assert_eq!(shard_kind("decoder.layers.0.fc2.weight"), ShardKind::Row);
+        assert_eq!(shard_kind("decoder.layers.0.fc1.bias"), ShardKind::Column);
+        assert_eq!(shard_kind("decoder.layers.0.self_attn.out_proj.bias"), ShardKind::Replicated);
+        assert_eq!(shard_kind("decoder.embed_positions.weight"), ShardKind::Replicated);
+        assert_eq!(shard_kind("decoder.final_layer_norm.weight"), ShardKind::Replicated);
+        assert_eq!(shard_kind("decoder.embed_tokens.weight"), ShardKind::Column);
+    }
+
+    #[test]
+    fn shard_bytes_match_manifest_shapes() {
+        // The per-rank shard of q_proj for opt-test tp=2 must be (64, 128).
+        let spec = catalog::opt_test();
+        let full_spec = TensorSpec::new(
+            "decoder.layers.0.self_attn.q_proj.weight",
+            vec![128, 128],
+            spec.dtype,
+        );
+        let vals = shard_values(&spec, &full_spec, 1, 2, 0);
+        assert_eq!(vals.len(), 64 * 128);
+    }
+}

@@ -1,0 +1,172 @@
+//! In-process TP collectives for the real-mode worker threads.
+//!
+//! The paper's TP communication is NCCL all-reduce over NVLink; here the
+//! TP ranks of one pipeline stage are threads sharing a `CollectiveGroup`
+//! that implements barrier-style all-reduce (elementwise sum) and
+//! all-gather (shard concat), with generation counters so the group is
+//! reusable across calls.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+struct GroupState {
+    generation: u64,
+    arrived: usize,
+    slots: Vec<Option<Vec<f32>>>,
+    /// Result of the completed round, kept until all ranks picked it up.
+    result: Option<Arc<Vec<Vec<f32>>>>,
+    picked_up: usize,
+}
+
+/// A reusable barrier collective over `tp` ranks.
+pub struct CollectiveGroup {
+    tp: usize,
+    state: Mutex<GroupState>,
+    cv: Condvar,
+}
+
+impl CollectiveGroup {
+    pub fn new(tp: usize) -> Arc<CollectiveGroup> {
+        Arc::new(CollectiveGroup {
+            tp,
+            state: Mutex::new(GroupState {
+                generation: 0,
+                arrived: 0,
+                slots: vec![None; tp],
+                result: None,
+                picked_up: 0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn tp(&self) -> usize {
+        self.tp
+    }
+
+    /// Deposit this rank's contribution and wait for everyone; returns all
+    /// ranks' contributions (in rank order).
+    fn exchange(&self, rank: usize, data: Vec<f32>) -> Arc<Vec<Vec<f32>>> {
+        let mut st = self.state.lock().unwrap();
+        // Wait for the previous round to fully drain (all picked up).
+        while st.result.is_some() {
+            st = self.cv.wait(st).unwrap();
+        }
+        let my_gen = st.generation;
+        assert!(st.slots[rank].is_none(), "rank {rank} double-entered a collective");
+        st.slots[rank] = Some(data);
+        st.arrived += 1;
+        if st.arrived == self.tp {
+            let gathered: Vec<Vec<f32>> = st.slots.iter_mut().map(|s| s.take().unwrap()).collect();
+            st.result = Some(Arc::new(gathered));
+            st.arrived = 0;
+            st.picked_up = 0;
+            self.cv.notify_all();
+        } else {
+            while st.generation == my_gen && st.result.is_none() {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        let result = st.result.as_ref().unwrap().clone();
+        st.picked_up += 1;
+        if st.picked_up == self.tp {
+            st.result = None;
+            st.generation += 1;
+            self.cv.notify_all();
+        }
+        result
+    }
+
+    /// Elementwise-sum all-reduce. tp=1 is a free pass-through.
+    pub fn all_reduce(&self, rank: usize, data: Vec<f32>) -> Vec<f32> {
+        if self.tp == 1 {
+            return data;
+        }
+        let n = data.len();
+        let parts = self.exchange(rank, data);
+        let mut out = vec![0.0f32; n];
+        for part in parts.iter() {
+            debug_assert_eq!(part.len(), n);
+            for (o, x) in out.iter_mut().zip(part) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// All-gather: every rank receives every rank's shard, rank-ordered.
+    pub fn all_gather(&self, rank: usize, data: Vec<f32>) -> Vec<Vec<f32>> {
+        if self.tp == 1 {
+            return vec![data];
+        }
+        let parts = self.exchange(rank, data);
+        parts.as_ref().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn tp1_pass_through() {
+        let g = CollectiveGroup::new(1);
+        assert_eq!(g.all_reduce(0, vec![1.0, 2.0]), vec![1.0, 2.0]);
+        assert_eq!(g.all_gather(0, vec![3.0]), vec![vec![3.0]]);
+    }
+
+    #[test]
+    fn all_reduce_sums_across_threads() {
+        let g = CollectiveGroup::new(4);
+        let handles: Vec<_> = (0..4)
+            .map(|rank| {
+                let g = g.clone();
+                thread::spawn(move || g.all_reduce(rank, vec![rank as f32, 1.0]))
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let g = CollectiveGroup::new(3);
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let g = g.clone();
+                thread::spawn(move || g.all_gather(rank, vec![rank as f32 * 10.0]))
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out, vec![vec![0.0], vec![10.0], vec![20.0]]);
+        }
+    }
+
+    #[test]
+    fn group_is_reusable_across_rounds() {
+        let g = CollectiveGroup::new(2);
+        let rounds = 50;
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let g = g.clone();
+                thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for round in 0..rounds {
+                        let out = g.all_reduce(rank, vec![(rank + round) as f32]);
+                        outs.push(out[0]);
+                    }
+                    outs
+                })
+            })
+            .collect();
+        for h in handles {
+            let outs = h.join().unwrap();
+            for (round, &v) in outs.iter().enumerate() {
+                assert_eq!(v, (2 * round + 1) as f32, "round {round}");
+            }
+        }
+    }
+}

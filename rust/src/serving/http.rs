@@ -1,0 +1,262 @@
+//! Minimal HTTP/1.1 front end for a running `Computron` deployment.
+//!
+//! The paper deploys Computron behind asynchronous Python web frameworks
+//! (FastAPI); here the service front end is rust all the way down — a
+//! small hand-rolled HTTP server (no external crates are available in
+//! the offline build) exposing:
+//!
+//! - `POST /v1/infer`   body `{"model": 0, "ids": [1,2,3]}` →
+//!   `{"argmax": .., "latency": .., "logits": [..]}` (logits optional via
+//!   `"return_logits": true`)
+//! - `GET  /v1/stats`   engine statistics snapshot
+//! - `GET  /health`     liveness probe
+//!
+//! One thread per connection (connections are expected to be few and
+//! long-lived benchmark drivers; the engine itself is already
+//! thread-safe behind its channel).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::serving::Computron;
+use crate::util::json::Json;
+
+/// Handle to a running HTTP front end.
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Start serving `computron` on `bind` (e.g. "127.0.0.1:0"; port 0
+    /// picks a free port — read it back from `addr()`).
+    pub fn start(computron: Arc<Computron>, bind: &str) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let server = computron.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &server);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(HttpServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections (in-flight handlers finish on their own).
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, server: &Computron) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    loop {
+        // Request line.
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+
+        // Headers.
+        let mut content_length = 0usize;
+        let mut keep_alive = true;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 {
+                return Ok(());
+            }
+            let h = h.trim();
+            if h.is_empty() {
+                break;
+            }
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+            if lower.starts_with("connection:") && lower.contains("close") {
+                keep_alive = false;
+            }
+        }
+        let mut body = vec![0u8; content_length.min(1 << 20)];
+        reader.read_exact(&mut body)?;
+        let body = String::from_utf8_lossy(&body).to_string();
+
+        let (status, payload) = route(server, &method, &path, &body);
+        respond(&mut reader.get_ref().try_clone()?, status, &payload)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+fn route(server: &Computron, method: &str, path: &str, body: &str) -> (u16, Json) {
+    match (method, path) {
+        ("GET", "/health") => (200, Json::from_pairs(vec![("ok", true.into())])),
+        ("GET", "/v1/stats") => {
+            let s = server.stats();
+            (
+                200,
+                Json::from_pairs(vec![
+                    ("completed", s.completed.into()),
+                    ("loads_completed", s.swap.loads_completed.into()),
+                    ("offloads_completed", s.swap.offloads_completed.into()),
+                    ("mean_load_secs", s.mean_load_secs.into()),
+                    (
+                        "latency",
+                        s.latency.map(|l| l.to_json()).unwrap_or(Json::Null),
+                    ),
+                    ("errors", Json::Arr(s.errors.iter().map(|e| e.as_str().into()).collect())),
+                ]),
+            )
+        }
+        ("POST", "/v1/infer") => match infer(server, body) {
+            Ok(j) => (200, j),
+            Err(msg) => (400, Json::from_pairs(vec![("error", msg.as_str().into())])),
+        },
+        _ => (404, Json::from_pairs(vec![("error", "not found".into())])),
+    }
+}
+
+fn infer(server: &Computron, body: &str) -> Result<Json, String> {
+    let req = Json::parse(body).map_err(|e| format!("bad json: {e}"))?;
+    let model = req.get("model").and_then(Json::as_usize).ok_or("missing 'model'")?;
+    let ids: Vec<i32> = req
+        .get("ids")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'ids'")?
+        .iter()
+        .map(|x| x.as_f64().map(|v| v as i32).ok_or("non-numeric id"))
+        .collect::<Result<_, _>>()?;
+    let return_logits = req.get("return_logits").and_then(Json::as_bool).unwrap_or(false);
+    let out = server.submit(model, ids).wait().map_err(|e| e.to_string())?;
+    let mut j = Json::from_pairs(vec![
+        ("argmax", out.argmax.into()),
+        ("latency", out.latency.into()),
+        ("vocab", out.logits.len().into()),
+    ]);
+    if return_logits {
+        j.set(
+            "logits",
+            Json::Arr(out.logits.iter().map(|&x| Json::Num(x as f64)).collect()),
+        );
+    }
+    Ok(j)
+}
+
+fn respond(stream: &mut TcpStream, status: u16, payload: &Json) -> std::io::Result<()> {
+    let body = payload.to_string();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny test client.
+    fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let status: u16 = buf.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let json_body = buf.split("\r\n\r\n").nth(1).unwrap_or("null");
+        (status, Json::parse(json_body).unwrap())
+    }
+
+    fn with_server(f: impl FnOnce(std::net::SocketAddr)) {
+        let dir = crate::runtime::manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping http test: artifacts not built");
+            return;
+        }
+        let cfg = crate::serving::ServeConfig::new(&dir, "opt-test", 2, 1, 1);
+        let server = Arc::new(Computron::launch(cfg).unwrap());
+        let http = HttpServer::start(server.clone(), "127.0.0.1:0").unwrap();
+        f(http.addr());
+        http.stop();
+        Arc::try_unwrap(server).ok().map(Computron::shutdown);
+    }
+
+    #[test]
+    fn health_and_stats_endpoints() {
+        with_server(|addr| {
+            let (status, j) = request(addr, "GET", "/health", "");
+            assert_eq!(status, 200);
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+            let (status, j) = request(addr, "GET", "/v1/stats", "");
+            assert_eq!(status, 200);
+            assert!(j.get("completed").is_some());
+        });
+    }
+
+    #[test]
+    fn infer_endpoint_roundtrip() {
+        with_server(|addr| {
+            let (status, j) =
+                request(addr, "POST", "/v1/infer", r#"{"model":0,"ids":[1,2,3,4]}"#);
+            assert_eq!(status, 200, "{j}");
+            assert!(j.get("argmax").and_then(Json::as_usize).is_some());
+            assert!(j.req_f64("latency").unwrap() > 0.0);
+            // Second model must answer too (exercises a swap).
+            let (status, _) =
+                request(addr, "POST", "/v1/infer", r#"{"model":1,"ids":[1,2,3,4]}"#);
+            assert_eq!(status, 200);
+        });
+    }
+
+    #[test]
+    fn infer_validates_input() {
+        with_server(|addr| {
+            let (status, _) = request(addr, "POST", "/v1/infer", "not json");
+            assert_eq!(status, 400);
+            let (status, _) = request(addr, "POST", "/v1/infer", r#"{"ids":[1]}"#);
+            assert_eq!(status, 400);
+            let (status, _) = request(addr, "POST", "/v1/infer", r#"{"model":9,"ids":[1]}"#);
+            assert_eq!(status, 400);
+            let (status, _) = request(addr, "GET", "/nope", "");
+            assert_eq!(status, 404);
+        });
+    }
+}

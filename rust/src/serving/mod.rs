@@ -1,0 +1,371 @@
+//! Real-mode serving: the public Computron API.
+//!
+//! `Computron::launch` starts one engine thread plus tp×pp worker threads
+//! (each owning its own PJRT client and parameter shards), wired with
+//! mpsc FIFO pipes exactly like Fig 1: engine → stage 0 → … → stage pp-1,
+//! with TP collectives inside each stage. The engine thread drives the
+//! same `coordinator::Engine` state machine the simulator uses — the
+//! paper's coordination logic exists in exactly one place.
+//!
+//! ```no_run
+//! use computron::serving::{Computron, ServeConfig};
+//! let cfg = ServeConfig::new("artifacts", "opt-test", 3, 2, 2);
+//! let server = Computron::launch(cfg).unwrap();
+//! let out = server.submit(0, vec![1, 2, 3, 4]).wait().unwrap();
+//! println!("argmax={} latency={:.3}s", out.argmax, out.latency);
+//! server.shutdown();
+//! ```
+
+pub mod collective;
+pub mod http;
+pub mod worker;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::EngineConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::entry::{Entry, EntryId, ModelId, RequestId};
+use crate::coordinator::swap::SwapStats;
+use crate::runtime::Manifest;
+use crate::serving::collective::CollectiveGroup;
+use crate::serving::worker::{run_worker, BatchData, EngineMsg, PipeMsg, WorkerWiring};
+use crate::util::promise::{promise, Future, Promise};
+use crate::util::stats::Summary;
+
+/// Configuration for a real-mode deployment.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: PathBuf,
+    /// Catalog/manifest model name (all instances share the architecture,
+    /// §3.1; instance i gets weight seed `manifest.weight_seed + i`).
+    pub model: String,
+    pub num_models: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub engine: EngineConfig,
+}
+
+impl ServeConfig {
+    pub fn new(
+        artifacts_dir: impl Into<PathBuf>,
+        model: impl Into<String>,
+        num_models: usize,
+        tp: usize,
+        pp: usize,
+    ) -> ServeConfig {
+        ServeConfig {
+            artifacts_dir: artifacts_dir.into(),
+            model: model.into(),
+            num_models,
+            tp,
+            pp,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// Result of one inference request.
+#[derive(Clone, Debug)]
+pub struct InferenceOutput {
+    /// Full-vocab logits at the last input position.
+    pub logits: Vec<f32>,
+    pub argmax: usize,
+    /// End-to-end seconds (arrival → response), the paper's metric.
+    pub latency: f64,
+}
+
+pub type InferenceResult = Result<InferenceOutput, String>;
+
+/// Snapshot of serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub completed: u64,
+    pub swap: SwapStats,
+    pub latency: Option<Summary>,
+    /// Mean measured load-entry transfer time across workers.
+    pub mean_load_secs: f64,
+    pub errors: Vec<String>,
+}
+
+enum ToEngine {
+    Submit { model: ModelId, ids: Vec<i32>, reply: Promise<InferenceResult> },
+    Worker(EngineMsg),
+    Stats(Promise<ServeStats>),
+    Shutdown,
+}
+
+/// Handle to a running Computron deployment.
+pub struct Computron {
+    to_engine: Sender<ToEngine>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Computron {
+    /// Start engine + worker threads. Blocks until workers have compiled
+    /// their executables (first submit is then fast).
+    pub fn launch(cfg: ServeConfig) -> Result<Computron> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        if !manifest.supports(&cfg.model, cfg.tp) {
+            return Err(anyhow!(
+                "artifacts for model '{}' tp={} not built (run `make artifacts`)",
+                cfg.model,
+                cfg.tp
+            ));
+        }
+        let spec = manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("model '{}' missing from manifest", cfg.model))?;
+        if spec.num_layers % cfg.pp != 0 {
+            return Err(anyhow!("pp={} must divide {} layers", cfg.pp, spec.num_layers));
+        }
+        let buckets = manifest.buckets(&cfg.model, cfg.tp);
+        let max_batch_bucket = buckets.iter().map(|b| b.0).max().unwrap();
+        if cfg.engine.max_batch_size > max_batch_bucket {
+            return Err(anyhow!(
+                "max_batch_size {} exceeds largest compiled batch bucket {}",
+                cfg.engine.max_batch_size,
+                max_batch_bucket
+            ));
+        }
+
+        let (engine_tx, engine_rx) = channel::<ToEngine>();
+        let mut threads = Vec::new();
+
+        // Build stage pipes: stage s rank r has its own inbox.
+        let mut stage_txs: Vec<Vec<Sender<PipeMsg>>> = Vec::new();
+        let mut stage_rxs: Vec<Vec<std::sync::mpsc::Receiver<PipeMsg>>> = Vec::new();
+        for _ in 0..cfg.pp {
+            let mut txs = Vec::new();
+            let mut rxs = Vec::new();
+            for _ in 0..cfg.tp {
+                let (tx, rx) = channel();
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            stage_txs.push(txs);
+            stage_rxs.push(rxs);
+        }
+
+        let groups: Vec<_> = (0..cfg.pp).map(|_| CollectiveGroup::new(cfg.tp)).collect();
+
+        for pp_rank in (0..cfg.pp).rev() {
+            let rxs = stage_rxs.pop().unwrap();
+            for (tp_rank, inbox) in rxs.into_iter().enumerate() {
+                let wiring = WorkerWiring {
+                    model: cfg.model.clone(),
+                    tp: cfg.tp,
+                    pp: cfg.pp,
+                    tp_rank,
+                    pp_rank,
+                    num_instances: cfg.num_models,
+                    inbox,
+                    next: if pp_rank + 1 < cfg.pp {
+                        Some(stage_txs[pp_rank + 1][tp_rank].clone())
+                    } else {
+                        None
+                    },
+                    engine: {
+                        let tx = engine_tx.clone();
+                        let (wtx, wrx) = channel::<EngineMsg>();
+                        // Adapter thread: forwards worker msgs into the
+                        // unified engine inbox (std mpsc has no select).
+                        threads.push(std::thread::spawn(move || {
+                            while let Ok(m) = wrx.recv() {
+                                if tx.send(ToEngine::Worker(m)).is_err() {
+                                    break;
+                                }
+                            }
+                        }));
+                        wtx
+                    },
+                    group: groups[pp_rank].clone(),
+                };
+                let manifest = manifest.clone();
+                threads.push(std::thread::spawn(move || run_worker(&manifest, wiring)));
+            }
+        }
+
+        // Engine thread.
+        let stage0: Vec<Sender<PipeMsg>> = stage_txs[0].clone();
+        let ecfg = cfg.clone();
+        let ebuckets = buckets.clone();
+        threads.push(std::thread::spawn(move || {
+            engine_loop(ecfg, ebuckets, stage0, engine_rx);
+        }));
+
+        Ok(Computron { to_engine: engine_tx, threads })
+    }
+
+    /// Submit a request; returns a future for the result.
+    pub fn submit(&self, model: ModelId, ids: Vec<i32>) -> Future<InferenceResult> {
+        let (reply, fut) = promise();
+        if self.to_engine.send(ToEngine::Submit { model, ids, reply }).is_err() {
+            let (p, f) = promise();
+            p.fulfill(Err("engine is down".to_string())).ok();
+            return f;
+        }
+        fut
+    }
+
+    /// Fetch a statistics snapshot.
+    pub fn stats(&self) -> ServeStats {
+        let (reply, fut) = promise();
+        if self.to_engine.send(ToEngine::Stats(reply)).is_err() {
+            return ServeStats::default();
+        }
+        fut.wait()
+    }
+
+    /// Stop all threads (pending requests get an error).
+    pub fn shutdown(self) {
+        let _ = self.to_engine.send(ToEngine::Shutdown);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn engine_loop(
+    cfg: ServeConfig,
+    buckets: Vec<(usize, usize)>,
+    stage0: Vec<Sender<PipeMsg>>,
+    inbox: std::sync::mpsc::Receiver<ToEngine>,
+) {
+    let start = Instant::now();
+    let world = cfg.tp * cfg.pp;
+    let mut engine = Engine::new(cfg.num_models, world, cfg.pp, cfg.engine, 0xC0117);
+    let mut payloads: HashMap<RequestId, Vec<i32>> = HashMap::new();
+    let mut replies: HashMap<RequestId, Promise<InferenceResult>> = HashMap::new();
+    let mut batch_members: HashMap<EntryId, Vec<RequestId>> = HashMap::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut errors: Vec<String> = Vec::new();
+    let mut load_secs: Vec<f64> = Vec::new();
+    let mut completed: u64 = 0;
+    let max_seq = buckets.iter().map(|b| b.1).max().unwrap_or(0);
+
+    let route = |engine: &mut Engine,
+                 payloads: &HashMap<RequestId, Vec<i32>>,
+                 batch_members: &mut HashMap<EntryId, Vec<RequestId>>| {
+        for entry in engine.drain_outbox() {
+            match entry {
+                Entry::Load(l) => {
+                    for tx in &stage0 {
+                        let _ = tx.send(PipeMsg::Load(l.clone()));
+                    }
+                }
+                Entry::Batch(b) => {
+                    let n = b.batch_size();
+                    let bucket = buckets
+                        .iter()
+                        .copied()
+                        .filter(|&(bb, bs)| bb >= n && bs >= b.seqlen)
+                        .min()
+                        .expect("validated at launch: bucket fits");
+                    // Pad the id grid.
+                    let mut grid = vec![0i32; bucket.0 * bucket.1];
+                    for (row, req) in b.requests.iter().enumerate() {
+                        let ids = &payloads[&req.id];
+                        grid[row * bucket.1..row * bucket.1 + ids.len()].copy_from_slice(ids);
+                    }
+                    batch_members.insert(b.id, b.requests.iter().map(|r| r.id).collect());
+                    for tx in &stage0 {
+                        let _ = tx.send(PipeMsg::Batch {
+                            entry: b.clone(),
+                            bucket,
+                            data: BatchData::Ids(grid.clone()),
+                        });
+                    }
+                }
+            }
+        }
+    };
+
+    while let Ok(msg) = inbox.recv() {
+        let now = start.elapsed().as_secs_f64();
+        match msg {
+            ToEngine::Submit { model, ids, reply } => {
+                if model >= cfg.num_models {
+                    let _ = reply.fulfill(Err(format!("unknown model {model}")));
+                    continue;
+                }
+                if ids.is_empty() || ids.len() > max_seq {
+                    let _ = reply.fulfill(Err(format!(
+                        "input length {} out of range (1..={max_seq})",
+                        ids.len()
+                    )));
+                    continue;
+                }
+                let id = engine.on_request(now, model, ids.len());
+                payloads.insert(id, ids);
+                replies.insert(id, reply);
+                route(&mut engine, &payloads, &mut batch_members);
+            }
+            ToEngine::Worker(EngineMsg::LoadAck { entry_id, elapsed }) => {
+                load_secs.push(elapsed);
+                engine.on_load_ack(now, entry_id);
+                route(&mut engine, &payloads, &mut batch_members);
+            }
+            ToEngine::Worker(EngineMsg::BatchDone { entry_id, outputs }) => {
+                let members = batch_members.remove(&entry_id).unwrap_or_default();
+                engine.on_batch_done(now, entry_id);
+                let mut rec_latency: HashMap<RequestId, f64> = HashMap::new();
+                for rec in engine.take_completed() {
+                    latencies.push(rec.latency());
+                    rec_latency.insert(rec.id, rec.latency());
+                    completed += 1;
+                }
+                for (i, rid) in members.iter().enumerate() {
+                    payloads.remove(rid);
+                    if let Some(reply) = replies.remove(rid) {
+                        let logits = outputs.get(i).cloned().unwrap_or_default();
+                        let argmax = logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.total_cmp(b.1))
+                            .map(|(i, _)| i)
+                            .unwrap_or(0);
+                        let _ = reply.fulfill(Ok(InferenceOutput {
+                            logits,
+                            argmax,
+                            latency: rec_latency.get(rid).copied().unwrap_or(0.0),
+                        }));
+                    }
+                }
+                route(&mut engine, &payloads, &mut batch_members);
+            }
+            ToEngine::Worker(EngineMsg::WorkerError { worker, message }) => {
+                crate::log_error!("worker {worker}: {message}");
+                errors.push(format!("worker {worker}: {message}"));
+            }
+            ToEngine::Stats(reply) => {
+                let _ = reply.fulfill(ServeStats {
+                    completed,
+                    swap: engine.swap_stats(),
+                    latency: Summary::of(&latencies),
+                    mean_load_secs: if load_secs.is_empty() {
+                        0.0
+                    } else {
+                        load_secs.iter().sum::<f64>() / load_secs.len() as f64
+                    },
+                    errors: errors.clone(),
+                });
+            }
+            ToEngine::Shutdown => {
+                for tx in &stage0 {
+                    let _ = tx.send(PipeMsg::Shutdown);
+                }
+                for (_, reply) in replies.drain() {
+                    let _ = reply.fulfill(Err("server shut down".to_string()));
+                }
+                return;
+            }
+        }
+    }
+}

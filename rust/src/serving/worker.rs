@@ -1,0 +1,183 @@
+//! Real-mode worker thread: one per (pp_rank, tp_rank) grid position.
+//!
+//! Each thread owns its own `WorkerRuntime` (PJRT objects are not Send)
+//! and mirrors the §3.2 worker behaviour:
+//!
+//! - entries arrive over an mpsc FIFO pipe (engine → stage 0 → stage 1 …);
+//! - batch entries execute synchronously through the stage's layers, with
+//!   TP all-reduces via the stage's `CollectiveGroup`, then forward
+//!   activations (or return logits from the last stage);
+//! - load entries are *forwarded before the transfer happens* (the async
+//!   pipelined design, Fig 4), so all stages transfer concurrently in
+//!   their own threads; the transfer itself is synchronous within the
+//!   thread because CPU PJRT has no async copy engines (DESIGN.md §1).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::entry::{BatchEntry, EntryId, LoadDirection, LoadEntry};
+use crate::runtime::exec::{StageInput, StageOutput, WorkerRuntime};
+use crate::runtime::Manifest;
+use crate::serving::collective::CollectiveGroup;
+
+/// Message flowing through worker pipes.
+pub enum PipeMsg {
+    Batch { entry: BatchEntry, bucket: (usize, usize), data: BatchData },
+    Load(LoadEntry),
+    Shutdown,
+}
+
+pub enum BatchData {
+    /// Stage-0 input: bucket-padded flattened (batch, seq) token ids.
+    Ids(Vec<i32>),
+    /// Later stages: flattened (batch, seq, hidden) activations.
+    Hidden(Vec<f32>),
+}
+
+/// Worker → engine notifications.
+pub enum EngineMsg {
+    LoadAck { entry_id: EntryId, elapsed: f64 },
+    /// From the last stage's rank 0: full-vocab logits rows, one
+    /// (last-real-position) vector per request in entry order.
+    BatchDone { entry_id: EntryId, outputs: Vec<Vec<f32>> },
+    /// A worker hit an unrecoverable error.
+    WorkerError { worker: usize, message: String },
+}
+
+/// Static wiring for one worker thread.
+pub struct WorkerWiring {
+    pub model: String,
+    pub tp: usize,
+    pub pp: usize,
+    pub tp_rank: usize,
+    pub pp_rank: usize,
+    pub num_instances: usize,
+    pub inbox: Receiver<PipeMsg>,
+    /// Next pipeline stage, same tp rank (None on the last stage).
+    pub next: Option<Sender<PipeMsg>>,
+    pub engine: Sender<EngineMsg>,
+    pub group: Arc<CollectiveGroup>,
+}
+
+/// Body of a worker thread. Returns when a Shutdown message arrives.
+pub fn run_worker(manifest: &Manifest, w: WorkerWiring) {
+    let start = Instant::now();
+    let widx = w.pp_rank * w.tp + w.tp_rank;
+    let mut runtime = match WorkerRuntime::new(
+        manifest,
+        &w.model,
+        w.tp,
+        w.pp,
+        w.tp_rank,
+        w.pp_rank,
+        w.num_instances,
+    ) {
+        Ok(rt) => rt,
+        Err(e) => {
+            let _ = w.engine.send(EngineMsg::WorkerError {
+                worker: widx,
+                message: format!("startup: {e:#}"),
+            });
+            return;
+        }
+    };
+
+    while let Ok(msg) = w.inbox.recv() {
+        match msg {
+            PipeMsg::Shutdown => {
+                if let Some(next) = &w.next {
+                    let _ = next.send(PipeMsg::Shutdown);
+                }
+                return;
+            }
+            PipeMsg::Load(load) => {
+                // Async pipelined design: forward before transferring.
+                if let Some(next) = &w.next {
+                    let _ = next.send(PipeMsg::Load(load.clone()));
+                }
+                let t0 = Instant::now();
+                let result = match load.dir {
+                    LoadDirection::Load => runtime.load(load.model).map(|_| ()),
+                    LoadDirection::Offload => runtime.offload(load.model),
+                };
+                if let Err(e) = result {
+                    let _ = w.engine.send(EngineMsg::WorkerError {
+                        worker: widx,
+                        message: format!("{} model {}: {e:#}", load.dir.name(), load.model),
+                    });
+                    continue;
+                }
+                let _ = w.engine.send(EngineMsg::LoadAck {
+                    entry_id: load.id,
+                    elapsed: t0.elapsed().as_secs_f64(),
+                });
+            }
+            PipeMsg::Batch { entry, bucket, data } => {
+                let input = match data {
+                    BatchData::Ids(ids) => StageInput::Ids(ids),
+                    BatchData::Hidden(h) => StageInput::Hidden(h),
+                };
+                let group = w.group.clone();
+                let rank = w.tp_rank;
+                let mut reduce = |v: Vec<f32>| group.all_reduce(rank, v);
+                match runtime.forward_stage(entry.model, input, bucket, &mut reduce) {
+                    Ok(StageOutput::Hidden(hidden)) => {
+                        if let Some(next) = &w.next {
+                            let _ = next.send(PipeMsg::Batch {
+                                entry,
+                                bucket,
+                                data: BatchData::Hidden(hidden),
+                            });
+                        }
+                    }
+                    Ok(StageOutput::LogitShard(shard)) => {
+                        // All-gather shards; rank 0 assembles and replies.
+                        let shards = w.group.all_gather(w.tp_rank, shard);
+                        if w.tp_rank == 0 {
+                            let outputs =
+                                assemble_outputs(&runtime, &entry, bucket, &shards);
+                            let _ = w.engine.send(EngineMsg::BatchDone {
+                                entry_id: entry.id,
+                                outputs,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        let _ = w.engine.send(EngineMsg::WorkerError {
+                            worker: widx,
+                            message: format!("batch {}: {e:#}", entry.id),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    let _ = start;
+}
+
+/// Concatenate vocab shards and slice each request's last-real-position
+/// logits row.
+fn assemble_outputs(
+    runtime: &WorkerRuntime,
+    entry: &BatchEntry,
+    bucket: (usize, usize),
+    shards: &[Vec<f32>],
+) -> Vec<Vec<f32>> {
+    let vocab = runtime.spec.vocab;
+    let vshard = vocab / shards.len();
+    let (_, bs) = bucket;
+    entry
+        .requests
+        .iter()
+        .enumerate()
+        .map(|(row, req)| {
+            let pos = row * bs + (req.input_len - 1);
+            let mut out = Vec::with_capacity(vocab);
+            for shard in shards {
+                out.extend_from_slice(&shard[pos * vshard..(pos + 1) * vshard]);
+            }
+            out
+        })
+        .collect()
+}

@@ -1,0 +1,9 @@
+//! Discrete-event simulation backend: the paper's testbed (engine + TP×PP
+//! worker grid + pipes + links) as a deterministic, calibrated simulator.
+//! See DESIGN.md §1 for the substitution argument.
+
+pub mod system;
+pub mod worker;
+
+pub use system::{Arrival, Driver, SimReport, SimSystem};
+pub use worker::{InstState, SimWorker, WorkerAction};

@@ -1,0 +1,530 @@
+//! The composed discrete-event simulation: engine + TP×PP worker grid +
+//! FIFO pipes + workload driver.
+//!
+//! `SimSystem` reproduces the paper's testbed end-to-end: the engine state
+//! machine (`coordinator::Engine`) emits batch/load entries; entries flow
+//! through per-stage FIFO pipes to `SimWorker`s whose streams/links/memory
+//! are the calibrated `cluster` substrate; completions flow back as acks.
+//! Every experiment in `benches/` is a deterministic run of this system.
+
+use crate::cluster::clock::{EventQueue, SimTime};
+use crate::cluster::gpu::GpuDevice;
+use crate::config::{LoadDesign, SystemConfig};
+use crate::coordinator::engine::{Engine, RequestRecord, SwapRecord};
+use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
+use crate::coordinator::swap::SwapStats;
+use crate::model::{shard_grid, GridPos, ModelSpec};
+use crate::sim::worker::{SimWorker, WorkerAction};
+use std::collections::HashMap;
+
+/// One scheduled request arrival.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    pub at: SimTime,
+    pub model: ModelId,
+    pub input_len: usize,
+}
+
+/// Workload driving mode.
+#[derive(Clone, Debug)]
+pub enum Driver {
+    /// Open loop: pre-scheduled arrivals (§5.2 Gamma workloads).
+    Open(Vec<Arrival>),
+    /// Closed loop (§5.1): `total` blocking requests alternating across
+    /// `models`, the next sent when the previous completes.
+    AlternatingBlocking { models: usize, input_len: usize, total: usize },
+}
+
+/// Everything measured during a run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub requests: Vec<RequestRecord>,
+    pub swaps: Vec<SwapRecord>,
+    pub swap_stats: SwapStats,
+    /// Load-dependency violations across workers (Fig 2 demonstration;
+    /// zero in both pipelined designs).
+    pub violations: u64,
+    pub oom_events: u64,
+    /// Per-GPU memory high-water mark, bytes.
+    pub mem_high_water: Vec<usize>,
+    /// Per-GPU H2D bytes moved.
+    pub h2d_bytes: Vec<u64>,
+    pub d2h_bytes: Vec<u64>,
+    /// DES events processed (perf metric).
+    pub events: u64,
+    /// Host wall-clock seconds for the run (perf metric).
+    pub wall_secs: f64,
+    /// Final virtual time.
+    pub sim_end: SimTime,
+}
+
+impl SimReport {
+    /// Latencies of requests arriving at or after `measure_start`.
+    pub fn latencies_from(&self, measure_start: f64) -> Vec<f64> {
+        self.requests
+            .iter()
+            .filter(|r| r.arrival >= measure_start)
+            .map(RequestRecord::latency)
+            .collect()
+    }
+
+    pub fn mean_latency_from(&self, measure_start: f64) -> f64 {
+        let l = self.latencies_from(measure_start);
+        if l.is_empty() {
+            0.0
+        } else {
+            l.iter().sum::<f64>() / l.len() as f64
+        }
+    }
+}
+
+enum Ev {
+    Arrival { model: ModelId, input_len: usize },
+    Deliver { worker: usize, entry: Entry },
+    Wake { worker: usize },
+    TransferFin { worker: usize, entry_id: EntryId, model: ModelId, dir: LoadDirection },
+    LoadAck { entry_id: EntryId },
+    BatchReturn { entry_id: EntryId },
+}
+
+/// The composed simulator.
+pub struct SimSystem {
+    cfg: SystemConfig,
+    spec: ModelSpec,
+    engine: Engine,
+    workers: Vec<SimWorker>,
+    queue: EventQueue<Ev>,
+    batch_acks: HashMap<EntryId, usize>,
+    driver: Driver,
+    closed_sent: usize,
+    /// Memoized stage compute times per (batch, seqlen) — `stage_time`
+    /// walks the model's tensor inventory (param_bytes), which at 644
+    /// tensors dominated the event loop before memoization (§Perf:
+    /// 47 K events/s → >1 M events/s).
+    compute_cache: HashMap<(usize, usize), f64>,
+}
+
+impl SimSystem {
+    pub fn new(cfg: SystemConfig, driver: Driver) -> anyhow::Result<SimSystem> {
+        cfg.validate()?;
+        let spec = cfg.spec()?;
+        let (tp, pp) = (cfg.parallel.tp, cfg.parallel.pp);
+        let grid = shard_grid(&spec, tp, pp)?;
+        let link = cfg.hardware.effective_link();
+        let mut workers = Vec::with_capacity(tp * pp);
+        for pp_rank in 0..pp {
+            for tp_rank in 0..tp {
+                let shard = &grid[pp_rank][tp_rank];
+                let gpu = GpuDevice::new(workers.len(), cfg.hardware.gpu_mem, link);
+                workers.push(SimWorker::new(
+                    GridPos { pp_rank, tp_rank },
+                    gpu,
+                    cfg.num_models,
+                    shard.bytes(),
+                    shard.tensor_count(),
+                ));
+            }
+        }
+        let engine = Engine::new(
+            cfg.num_models,
+            tp * pp,
+            pp,
+            cfg.engine,
+            0x5EED ^ cfg.num_models as u64,
+        );
+        Ok(SimSystem {
+            cfg,
+            spec,
+            engine,
+            workers,
+            queue: EventQueue::new(),
+            batch_acks: HashMap::new(),
+            driver,
+            closed_sent: 0,
+            compute_cache: HashMap::new(),
+        })
+    }
+
+    /// Pre-warm models into GPU memory (engine + all workers).
+    pub fn preload(&mut self, models: &[ModelId]) {
+        for &m in models {
+            self.engine.force_resident(m, 0.0);
+            for w in &mut self.workers {
+                w.force_loaded(m);
+            }
+        }
+    }
+
+    fn worker_idx(&self, pp_rank: usize, tp_rank: usize) -> usize {
+        pp_rank * self.cfg.parallel.tp + tp_rank
+    }
+
+    /// Route engine outbox entries into stage-0 pipes (or broadcast).
+    fn route_outbox(&mut self) {
+        let lat = self.cfg.hardware.pipe_latency;
+        let entries = self.engine.drain_outbox();
+        for entry in entries {
+            match self.cfg.engine.load_design {
+                LoadDesign::Broadcast if entry.is_load() => {
+                    // Fig 2 strawman: every worker gets the load entry
+                    // directly, racing any in-flight batch entries.
+                    for w in 0..self.workers.len() {
+                        self.queue.schedule_in(lat, Ev::Deliver { worker: w, entry: entry.clone() });
+                    }
+                }
+                _ => {
+                    for tp_rank in 0..self.cfg.parallel.tp {
+                        let w = self.worker_idx(0, tp_rank);
+                        self.queue.schedule_in(lat, Ev::Deliver { worker: w, entry: entry.clone() });
+                    }
+                }
+            }
+        }
+    }
+
+    fn handle_worker_actions(&mut self, widx: usize, actions: Vec<WorkerAction>) {
+        let now = self.queue.now();
+        let lat = self.cfg.hardware.pipe_latency;
+        let (tp, pp) = (self.cfg.parallel.tp, self.cfg.parallel.pp);
+        let pos = self.workers[widx].pos;
+        for action in actions {
+            match action {
+                WorkerAction::Forward { entry, at } => {
+                    debug_assert!(at >= now);
+                    let last = pos.pp_rank == pp - 1;
+                    match (&entry, last) {
+                        (Entry::Batch(b), true) => {
+                            // Last stage returns output to the engine.
+                            self.queue
+                                .schedule_at(at + lat, Ev::BatchReturn { entry_id: b.id });
+                        }
+                        (Entry::Load(_), true) => {
+                            // Load entries terminate at the last stage; the
+                            // engine ack comes from TransferFin.
+                        }
+                        (_, false) => {
+                            // Broadcast design does not forward load entries
+                            // (they were delivered to every stage directly).
+                            if self.cfg.engine.load_design == LoadDesign::Broadcast
+                                && entry.is_load()
+                            {
+                                continue;
+                            }
+                            let next = self.worker_idx(pos.pp_rank + 1, pos.tp_rank);
+                            self.queue.schedule_at(at + lat, Ev::Deliver { worker: next, entry });
+                        }
+                    }
+                }
+                WorkerAction::BatchOutput { entry_id, at } => {
+                    self.queue.schedule_at(at + lat, Ev::BatchReturn { entry_id });
+                }
+                WorkerAction::TransferDone { entry_id, model, dir, at } => {
+                    self.queue.schedule_at(
+                        at,
+                        Ev::TransferFin { worker: widx, entry_id, model, dir },
+                    );
+                }
+            }
+        }
+        // Keep the worker loop turning.
+        let w = &self.workers[widx];
+        if !w.inbox.is_empty() {
+            let at = w.busy_until.max(now);
+            self.queue.schedule_at(at, Ev::Wake { worker: widx });
+        }
+        let _ = tp;
+    }
+
+    /// Memoized `ComputeModel::stage_time` lookup.
+    fn stage_time(&mut self, batch: usize, seqlen: usize) -> f64 {
+        let (tp, pp) = (self.cfg.parallel.tp, self.cfg.parallel.pp);
+        let spec = &self.spec;
+        let compute = &self.cfg.hardware.compute;
+        *self
+            .compute_cache
+            .entry((batch, seqlen))
+            .or_insert_with(|| compute.stage_time(spec, tp, pp, batch, seqlen))
+    }
+
+    fn wake_worker(&mut self, widx: usize) {
+        let now = self.queue.now();
+        let dispatch = self.cfg.hardware.dispatch_overhead;
+        let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
+        // Pre-resolve the compute time for the entry at the head of the
+        // inbox (if it is a batch) so the step closure is allocation-free.
+        let head_cost = match self.workers[widx].inbox.front() {
+            Some(Entry::Batch(b)) => {
+                let (bs, sl) = (b.batch_size(), b.seqlen);
+                self.stage_time(bs, sl)
+            }
+            _ => 0.0,
+        };
+        let actions = self.workers[widx].step(now, |_| head_cost, dispatch, sync_loads);
+        if let Some(actions) = actions {
+            self.handle_worker_actions(widx, actions);
+        } else if !self.workers[widx].inbox.is_empty()
+            && self.workers[widx].busy_until > now
+        {
+            // Busy: try again when free.
+            let at = self.workers[widx].busy_until;
+            self.queue.schedule_at(at, Ev::Wake { worker: widx });
+        }
+    }
+
+    fn drive_closed_loop_next(&mut self) {
+        if let Driver::AlternatingBlocking { models, input_len, total } = self.driver {
+            if self.closed_sent < total {
+                let model = self.closed_sent % models;
+                let input_len = input_len;
+                self.closed_sent += 1;
+                self.queue.schedule_in(0.0, Ev::Arrival { model, input_len });
+            }
+        }
+    }
+
+    /// Run the simulation to completion and return the report.
+    pub fn run(mut self) -> SimReport {
+        let wall_start = std::time::Instant::now();
+        match &self.driver {
+            Driver::Open(arrivals) => {
+                let arrivals = arrivals.clone();
+                for a in arrivals {
+                    self.queue.schedule_at(a.at, Ev::Arrival { model: a.model, input_len: a.input_len });
+                }
+            }
+            Driver::AlternatingBlocking { .. } => {
+                self.drive_closed_loop_next();
+            }
+        }
+
+        while let Some((now, ev)) = self.queue.pop() {
+            match ev {
+                Ev::Arrival { model, input_len } => {
+                    self.engine.on_request(now, model, input_len);
+                    self.route_outbox();
+                }
+                Ev::Deliver { worker, entry } => {
+                    self.workers[worker].deliver(entry);
+                    self.wake_worker(worker);
+                }
+                Ev::Wake { worker } => {
+                    self.wake_worker(worker);
+                }
+                Ev::TransferFin { worker, entry_id, model, dir } => {
+                    self.workers[worker].on_transfer_done(model, dir);
+                    self.queue.schedule_in(
+                        self.cfg.hardware.pipe_latency,
+                        Ev::LoadAck { entry_id },
+                    );
+                }
+                Ev::LoadAck { entry_id } => {
+                    self.engine.on_load_ack(now, entry_id);
+                    self.route_outbox();
+                }
+                Ev::BatchReturn { entry_id } => {
+                    let acks = self.batch_acks.entry(entry_id).or_insert(0);
+                    *acks += 1;
+                    if *acks == self.cfg.parallel.tp {
+                        self.batch_acks.remove(&entry_id);
+                        self.engine.on_batch_done(now, entry_id);
+                        self.route_outbox();
+                        self.drive_closed_loop_next();
+                    }
+                }
+            }
+        }
+
+        debug_assert!(self.engine.idle(), "simulation drained with engine non-idle");
+        let mut engine = self.engine;
+        SimReport {
+            requests: engine.take_completed(),
+            swaps: engine.take_swap_records(),
+            swap_stats: engine.swap_stats(),
+            violations: self.workers.iter().map(|w| w.violations).sum(),
+            oom_events: self.workers.iter().map(|w| w.oom_events).sum(),
+            mem_high_water: self.workers.iter().map(|w| w.gpu.mem.high_water()).collect(),
+            h2d_bytes: self
+                .workers
+                .iter()
+                .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::H2D))
+                .collect(),
+            d2h_bytes: self
+                .workers
+                .iter()
+                .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::D2H))
+                .collect(),
+            events: self.queue.processed(),
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+            sim_end: self.queue.now(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn swap_cfg(tp: usize, pp: usize) -> SystemConfig {
+        SystemConfig::swap_experiment(tp, pp)
+    }
+
+    /// §5.1 worst case: alternating blocking requests, cap 1.
+    fn run_swap(tp: usize, pp: usize, total: usize) -> SimReport {
+        let cfg = swap_cfg(tp, pp);
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total,
+        })
+        .unwrap();
+        sys.preload(&[1]); // model 1 resident; first request (model 0) must swap
+        sys.run()
+    }
+
+    #[test]
+    fn alternating_requests_all_complete_and_swap() {
+        let report = run_swap(1, 1, 6);
+        assert_eq!(report.requests.len(), 6);
+        // Every request required a swap (worst case by construction).
+        assert_eq!(report.swaps.len(), 6);
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+    }
+
+    #[test]
+    fn swap_time_near_paper_estimate_tp1() {
+        // §5.1: OPT-13B ≈ 24 GB over 32 GB/s ⇒ 0.75 s pure-bandwidth; plus
+        // the α term (644 tensors × 0.1 ms ≈ 64 ms) and pipe/dispatch
+        // overheads. Expect noticeably above the naive lower bound — the
+        // paper observes exactly this gap.
+        let report = run_swap(1, 1, 4);
+        let mean =
+            report.swaps.iter().map(SwapRecord::duration).sum::<f64>() / report.swaps.len() as f64;
+        assert!((0.78..1.2).contains(&mean), "mean swap {mean}");
+    }
+
+    #[test]
+    fn swap_time_decreases_with_tp_sublinearly() {
+        let m1 = {
+            let r = run_swap(1, 1, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let m2 = {
+            let r = run_swap(2, 1, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let m4 = {
+            let r = run_swap(4, 1, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        assert!(m2 < m1, "TP=2 ({m2}) must beat TP=1 ({m1})");
+        assert!(m4 < m2, "TP=4 ({m4}) must beat TP=2 ({m2})");
+        // Sublinear: TP=4 does NOT achieve a 4× speedup (α term persists).
+        assert!(m4 > m1 / 4.0, "scaling should be sublinear: {m4} vs {m1}/4");
+    }
+
+    #[test]
+    fn swap_time_decreases_with_pp() {
+        let m1 = {
+            let r = run_swap(1, 1, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let m4 = {
+            let r = run_swap(1, 4, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        assert!(m4 < m1, "PP=4 ({m4}) must beat PP=1 ({m1})");
+        assert!(m4 > m1 / 4.0, "PP scaling is sublinear");
+    }
+
+    #[test]
+    fn mixed_beats_pure_at_same_world_size() {
+        // Fig 7: TP=2,PP=2 lies below both TP=4 and PP=4.
+        let mean = |tp, pp| {
+            let r = run_swap(tp, pp, 4);
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let tp4 = mean(4, 1);
+        let pp4 = mean(1, 4);
+        let mixed = mean(2, 2);
+        assert!(mixed < tp4, "mixed {mixed} vs tp4 {tp4}");
+        assert!(mixed < pp4, "mixed {mixed} vs pp4 {pp4}");
+    }
+
+    #[test]
+    fn open_loop_gamma_like_run_completes() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.hardware.gpu_mem = 40_000_000_000;
+        let arrivals: Vec<Arrival> = (0..30)
+            .map(|i| Arrival { at: i as f64 * 0.3, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0, 1]);
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 30);
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+        // Cap 2: never more than 2 shards resident per GPU (+1 transient
+        // during overlapped swap).
+        let spec = crate::model::catalog::opt("opt-13b").unwrap();
+        let shard = crate::model::max_shard_bytes(&spec, 2, 2).unwrap();
+        for &hw in &report.mem_high_water {
+            assert!(hw <= 3 * shard, "high water {hw} vs shard {shard}");
+        }
+    }
+
+    #[test]
+    fn sync_design_slower_than_async() {
+        // Fig 3 vs Fig 4: synchronous load entries lose cross-stage
+        // loading parallelism; with PP=4 the gap must be visible.
+        let mean_for = |design| {
+            let mut cfg = swap_cfg(1, 4);
+            cfg.engine.load_design = design;
+            let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+                models: 2,
+                input_len: 2,
+                total: 4,
+            })
+            .unwrap();
+            sys.preload(&[1]);
+            let r = sys.run();
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let async_mean = mean_for(LoadDesign::AsyncPipelined);
+        let sync_mean = mean_for(LoadDesign::SyncPipelined);
+        assert!(
+            sync_mean > async_mean * 1.5,
+            "sync {sync_mean} should be much slower than async {async_mean}"
+        );
+    }
+
+    #[test]
+    fn broadcast_design_violates_dependencies() {
+        // Fig 2: broadcast load entries race in-flight batches. Trigger:
+        // model 0 busy with a long batch while model 1's swap evicts it.
+        let mut cfg = swap_cfg(1, 2);
+        cfg.engine.load_design = LoadDesign::Broadcast;
+        cfg.engine.max_batch_size = 8;
+        // Many interleaved arrivals to force eviction races.
+        let arrivals: Vec<Arrival> = (0..16)
+            .map(|i| Arrival { at: i as f64 * 0.01, model: i % 2, input_len: 2 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0]);
+        let report = sys.run();
+        assert!(
+            report.violations > 0,
+            "broadcast baseline should violate load dependencies"
+        );
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let r1 = run_swap(2, 2, 6);
+        let r2 = run_swap(2, 2, 6);
+        assert_eq!(r1.requests, r2.requests);
+        assert_eq!(r1.swaps, r2.swaps);
+        assert_eq!(r1.events, r2.events);
+    }
+}

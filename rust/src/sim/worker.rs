@@ -1,0 +1,364 @@
+//! Simulated worker: one per GPU in the TP×PP grid.
+//!
+//! Mirrors §3.2's worker behaviour exactly:
+//! - entries arrive over a FIFO pipe into an inbox and are processed in
+//!   order by the worker loop;
+//! - **batch entries** execute synchronously: the loop blocks until the
+//!   compute stream finishes, then forwards activations to the next stage
+//!   (or returns the output to the engine from the last stage);
+//! - **load entries** (async design) are dispatched onto the dedicated
+//!   load/offload streams and forwarded immediately — the loop is busy
+//!   only for the dispatch overhead, which is what lets all stages
+//!   transfer in parallel (Fig 4);
+//! - in the **sync baseline** (Fig 3) the loop instead blocks until the
+//!   transfer completes before forwarding.
+
+use crate::cluster::gpu::GpuDevice;
+use crate::cluster::SimTime;
+use crate::coordinator::entry::{Entry, LoadDirection, ModelId};
+use crate::model::GridPos;
+use std::collections::VecDeque;
+
+/// Worker-local view of one model instance's shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstState {
+    Offloaded,
+    Loading,
+    Loaded,
+    Offloading,
+}
+
+/// What the worker loop decided to do with one entry; the system layer
+/// turns these into future events.
+#[derive(Clone, Debug)]
+pub enum WorkerAction {
+    /// Forward the entry to the next pipeline stage at `at`.
+    Forward { entry: Entry, at: SimTime },
+    /// Last stage finished a batch: return output to engine at `at`.
+    BatchOutput { entry_id: u64, at: SimTime },
+    /// A dispatched transfer will complete at `at` (ack the engine then).
+    TransferDone { entry_id: u64, model: ModelId, dir: LoadDirection, at: SimTime },
+}
+
+/// One simulated worker.
+pub struct SimWorker {
+    pub pos: GridPos,
+    pub gpu: GpuDevice,
+    pub inbox: VecDeque<Entry>,
+    /// Worker loop is busy (processing an entry) until this time.
+    pub busy_until: SimTime,
+    /// Per-model shard state on this worker.
+    pub instances: Vec<InstState>,
+    /// Load-dependency violations observed (batch entry for a shard that
+    /// is not Loaded — only reachable in the broadcast baseline, Fig 2).
+    pub violations: u64,
+    /// Failed device allocations (overcommit; only reachable when the
+    /// residency cap is misconfigured or the broadcast baseline races).
+    pub oom_events: u64,
+    /// Shard size for each model on this worker (homogeneous co-location:
+    /// same for every model, §3.1).
+    pub shard_bytes: usize,
+    pub shard_messages: usize,
+}
+
+impl SimWorker {
+    pub fn new(
+        pos: GridPos,
+        gpu: GpuDevice,
+        num_models: usize,
+        shard_bytes: usize,
+        shard_messages: usize,
+    ) -> SimWorker {
+        SimWorker {
+            pos,
+            gpu,
+            inbox: VecDeque::new(),
+            busy_until: 0.0,
+            instances: vec![InstState::Offloaded; num_models],
+            violations: 0,
+            oom_events: 0,
+            shard_bytes,
+            shard_messages,
+        }
+    }
+
+    /// Pre-warm a model to Loaded (experiment initial conditions).
+    pub fn force_loaded(&mut self, model: ModelId) {
+        assert_eq!(self.instances[model], InstState::Offloaded);
+        self.gpu.mem.alloc(self.shard_bytes).expect("force_loaded overcommits GPU memory");
+        self.instances[model] = InstState::Loaded;
+    }
+
+    /// Deliver an entry from a pipe into the inbox.
+    pub fn deliver(&mut self, entry: Entry) {
+        self.inbox.push_back(entry);
+    }
+
+    /// Run one worker-loop step at `now`. Returns the actions taken, or
+    /// `None` if the loop is busy or the inbox is empty. The system layer
+    /// must schedule another wake at `busy_until` whenever it changes.
+    ///
+    /// `compute_time` is the stage execution time for a batch entry
+    /// (provided by the cost model); `dispatch_overhead` is the async
+    /// dispatch cost; `sync_loads` selects the Fig 3 baseline.
+    pub fn step(
+        &mut self,
+        now: SimTime,
+        compute_time: impl Fn(&crate::coordinator::entry::BatchEntry) -> f64,
+        dispatch_overhead: f64,
+        sync_loads: bool,
+    ) -> Option<Vec<WorkerAction>> {
+        if now < self.busy_until {
+            return None;
+        }
+        let entry = self.inbox.pop_front()?;
+        let mut actions = Vec::new();
+        match &entry {
+            Entry::Batch(batch) => {
+                if self.instances[batch.model] != InstState::Loaded {
+                    // Fig 2: only the broadcast baseline can get here.
+                    self.violations += 1;
+                }
+                let dur = compute_time(batch);
+                let finish = self.gpu.enqueue_compute(now, dur);
+                // Synchronous processing: loop blocked until kernels drain.
+                self.busy_until = finish;
+                actions.push(WorkerAction::Forward { entry, at: finish });
+            }
+            Entry::Load(load) => {
+                let (finish, _) = self.dispatch_transfer(now, load.model, load.dir);
+                actions.push(WorkerAction::TransferDone {
+                    entry_id: load.id,
+                    model: load.model,
+                    dir: load.dir,
+                    at: finish,
+                });
+                if sync_loads {
+                    // Fig 3 baseline: block the loop and forward only after
+                    // the transfer completes.
+                    self.busy_until = finish;
+                    actions.push(WorkerAction::Forward { entry, at: finish });
+                } else {
+                    // Computron (Fig 4): forward immediately after dispatch.
+                    self.busy_until = now + dispatch_overhead;
+                    actions.push(WorkerAction::Forward { entry, at: self.busy_until });
+                }
+            }
+        }
+        Some(actions)
+    }
+
+    /// Enqueue the H2D/D2H transfer and update shard state + memory.
+    /// Returns (completion time, alloc_ok).
+    ///
+    /// Memory accounting granularity: transfers move one tensor at a time
+    /// (PyTorch frees each CUDA tensor as it is copied out, and allocates
+    /// each as it is copied in), so an overlapped swap never needs both
+    /// models' full footprints simultaneously. We attribute the shard at
+    /// the conservative end of each transfer: an offloading shard stops
+    /// counting when its drain *starts*; a loading shard counts from when
+    /// its fill *completes*. Peak accuracy is within one shard, matching
+    /// the per-tensor behaviour; cap enforcement is the engine's job.
+    fn dispatch_transfer(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> (SimTime, bool) {
+        match dir {
+            LoadDirection::Load => {
+                debug_assert_eq!(self.instances[model], InstState::Offloaded);
+                self.instances[model] = InstState::Loading;
+                (self.gpu.enqueue_load(now, self.shard_messages, self.shard_bytes), true)
+            }
+            LoadDirection::Offload => {
+                debug_assert_eq!(self.instances[model], InstState::Loaded);
+                self.instances[model] = InstState::Offloading;
+                self.gpu.mem.free(self.shard_bytes);
+                (self.gpu.enqueue_offload(now, self.shard_messages, self.shard_bytes), true)
+            }
+        }
+    }
+
+    /// A previously dispatched transfer finished.
+    pub fn on_transfer_done(&mut self, model: ModelId, dir: LoadDirection) {
+        match dir {
+            LoadDirection::Load => {
+                debug_assert_eq!(self.instances[model], InstState::Loading);
+                if self.gpu.mem.alloc(self.shard_bytes).is_err() {
+                    self.oom_events += 1;
+                }
+                self.instances[model] = InstState::Loaded;
+            }
+            LoadDirection::Offload => {
+                debug_assert_eq!(self.instances[model], InstState::Offloading);
+                self.instances[model] = InstState::Offloaded;
+            }
+        }
+    }
+
+    pub fn is_last_stage(&self, pp: usize) -> bool {
+        self.pos.pp_rank == pp - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::link::LinkModel;
+    use crate::coordinator::entry::{BatchEntry, LoadEntry, Request};
+
+    fn worker() -> SimWorker {
+        let gpu = GpuDevice::new(
+            0,
+            1000,
+            LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
+        );
+        SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 1)
+    }
+
+    fn batch(id: u64, model: usize) -> Entry {
+        Entry::Batch(BatchEntry::new(
+            id,
+            model,
+            vec![Request { id: 1, model, arrival: 0.0, input_len: 2 }],
+        ))
+    }
+
+    fn load(id: u64, model: usize, dir: LoadDirection) -> Entry {
+        Entry::Load(LoadEntry { id, model, dir })
+    }
+
+    #[test]
+    fn batch_blocks_loop_until_compute_done() {
+        let mut w = worker();
+        w.force_loaded(0);
+        w.deliver(batch(1, 0));
+        let actions = w.step(0.0, |_| 2.0, 0.001, false).unwrap();
+        assert_eq!(w.busy_until, 2.0);
+        match &actions[0] {
+            WorkerAction::Forward { at, .. } => assert_eq!(*at, 2.0),
+            _ => panic!(),
+        }
+        // Busy: no further processing until 2.0.
+        w.deliver(batch(2, 0));
+        assert!(w.step(1.0, |_| 1.0, 0.001, false).is_none());
+        assert!(w.step(2.0, |_| 1.0, 0.001, false).is_some());
+    }
+
+    #[test]
+    fn async_load_frees_loop_immediately() {
+        let mut w = worker();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        // Transfer takes 100 bytes / 100 B/s = 1 s, but the loop is only
+        // busy for the 1 ms dispatch.
+        assert!((w.busy_until - 0.001).abs() < 1e-12);
+        assert_eq!(w.instances[0], InstState::Loading);
+        let (mut done_at, mut fwd_at) = (0.0, 0.0);
+        for a in &actions {
+            match a {
+                WorkerAction::TransferDone { at, .. } => done_at = *at,
+                WorkerAction::Forward { at, .. } => fwd_at = *at,
+                _ => {}
+            }
+        }
+        assert_eq!(done_at, 1.0);
+        assert!((fwd_at - 0.001).abs() < 1e-12, "forward before transfer completes");
+    }
+
+    #[test]
+    fn sync_load_blocks_loop() {
+        let mut w = worker();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, true).unwrap();
+        assert_eq!(w.busy_until, 1.0);
+        let fwd = actions.iter().find_map(|a| match a {
+            WorkerAction::Forward { at, .. } => Some(*at),
+            _ => None,
+        });
+        assert_eq!(fwd, Some(1.0));
+    }
+
+    #[test]
+    fn load_then_offload_memory_cycle() {
+        let mut w = worker();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        // Per-tensor semantics: a loading shard counts from completion.
+        assert_eq!(w.gpu.mem.used(), 0);
+        w.on_transfer_done(0, LoadDirection::Load);
+        assert_eq!(w.instances[0], InstState::Loaded);
+        assert_eq!(w.gpu.mem.used(), 100);
+        w.deliver(load(2, 0, LoadDirection::Offload));
+        w.step(1.0, |_| 1.0, 0.001, false).unwrap();
+        assert_eq!(w.instances[0], InstState::Offloading);
+        assert_eq!(w.gpu.mem.used(), 0, "offloading shard stops counting at drain start");
+        w.on_transfer_done(0, LoadDirection::Offload);
+        assert_eq!(w.gpu.mem.used(), 0);
+        assert_eq!(w.instances[0], InstState::Offloaded);
+    }
+
+    #[test]
+    fn overlapped_swap_never_double_counts_memory() {
+        // A 40 GB GPU swapping two 24 GB models must not OOM (per-tensor
+        // transfer granularity — the reason §5.1's TP=1 experiment fits).
+        let gpu = GpuDevice::new(
+            0,
+            40,
+            LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
+        );
+        let mut w = SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 24, 1);
+        w.force_loaded(0);
+        w.deliver(load(1, 0, LoadDirection::Offload));
+        w.deliver(load(2, 1, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        w.step(0.001, |_| 1.0, 0.001, false).unwrap();
+        w.on_transfer_done(0, LoadDirection::Offload);
+        w.on_transfer_done(1, LoadDirection::Load);
+        assert_eq!(w.oom_events, 0);
+        assert_eq!(w.gpu.mem.used(), 24);
+        assert!(w.gpu.mem.high_water() <= 24 + 24);
+    }
+
+    #[test]
+    fn offload_and_load_overlap_on_link() {
+        // The overlapped swap: offload model 0, load model 1 — full-duplex
+        // link lets both complete at t=1.0.
+        let mut w = worker();
+        w.force_loaded(0);
+        w.deliver(load(1, 0, LoadDirection::Offload));
+        w.deliver(load(2, 1, LoadDirection::Load));
+        let a1 = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let a2 = w.step(0.001, |_| 1.0, 0.001, false).unwrap();
+        let t1 = match &a1[0] {
+            WorkerAction::TransferDone { at, .. } => *at,
+            _ => panic!(),
+        };
+        let t2 = match &a2[0] {
+            WorkerAction::TransferDone { at, .. } => *at,
+            _ => panic!(),
+        };
+        assert_eq!(t1, 1.0);
+        assert!((t2 - 1.001).abs() < 1e-9, "load starts at dispatch, overlaps offload");
+    }
+
+    #[test]
+    fn violation_detected_for_unloaded_batch() {
+        let mut w = worker();
+        w.deliver(batch(1, 0)); // model 0 never loaded
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        assert_eq!(w.violations, 1);
+    }
+
+    #[test]
+    fn inbox_fifo_order_preserved() {
+        let mut w = worker();
+        w.force_loaded(0);
+        w.deliver(batch(1, 0));
+        w.deliver(load(2, 0, LoadDirection::Offload));
+        // First step: batch (blocks to t=1).
+        let a = w.step(0.0, |_| 1.0, 0.01, false).unwrap();
+        assert!(matches!(a[0], WorkerAction::Forward { .. }));
+        // Offload cannot be dispatched until the batch finishes — FIFO
+        // pipe order is the §3.2 correctness argument.
+        assert!(w.step(0.5, |_| 1.0, 0.01, false).is_none());
+        let a = w.step(1.0, |_| 1.0, 0.01, false).unwrap();
+        assert!(matches!(a[0], WorkerAction::TransferDone { .. }));
+    }
+}

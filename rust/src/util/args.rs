@@ -1,0 +1,225 @@
+//! Small CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates a usage string. Used by the `computron` binary and examples.
+
+use std::collections::BTreeMap;
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{s}'"))?,
+            )),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{s}'"))?,
+            )),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Argument parser builder.
+pub struct Args {
+    program: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Args {
+    pub fn new(program: &'static str, about: &'static str) -> Args {
+        Args { program, about, opts: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Args {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Args {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let left = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let default = match &o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            out.push_str(&format!("  {:<26} {}{}\n", left, o.help, default));
+        }
+        out.push_str("  --help                     show this help\n");
+        out
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> anyhow::Result<Parsed> {
+        let mut parsed = Parsed::default();
+        for opt in &self.opts {
+            if let Some(d) = &opt.default {
+                parsed.values.insert(opt.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} expects a value"))?
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("flag --{name} does not take a value");
+                    }
+                    parsed.flags.push(name.to_string());
+                }
+            } else {
+                parsed.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+
+    /// Parse `std::env::args()`.
+    pub fn parse(&self) -> anyhow::Result<Parsed> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("t", "test")
+            .opt("tp", "tensor parallel degree", Some("1"))
+            .opt("config", "config path", None)
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse_from(&argv(&[])).unwrap();
+        assert_eq!(p.get("tp"), Some("1"));
+        assert_eq!(p.get("config"), None);
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn values_and_flags() {
+        let p = spec().parse_from(&argv(&["--tp", "4", "--verbose", "pos1"])).unwrap();
+        assert_eq!(p.get_usize("tp").unwrap(), Some(4));
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = spec().parse_from(&argv(&["--tp=8", "--config=/x.json"])).unwrap();
+        assert_eq!(p.get("tp"), Some("8"));
+        assert_eq!(p.get("config"), Some("/x.json"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(spec().parse_from(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(spec().parse_from(&argv(&["--config"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let p = spec().parse_from(&argv(&["--tp", "abc"])).unwrap();
+        assert!(p.get_usize("tp").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage();
+        assert!(u.contains("--tp"));
+        assert!(u.contains("--verbose"));
+        assert!(u.contains("default: 1"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Criterion-style micro-benchmark harness (criterion itself is not
+//! vendored in this offline environment).
+//!
+//! Benches in `benches/` use `harness = false` and call into this module.
+//! Provides warmup, timed iterations with auto-calibrated batch sizes,
+//! and mean / p50 / p95 / p99 reporting, plus a `black_box` shim.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Configuration for a micro-benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup wall-clock budget.
+    pub warmup: Duration,
+    /// Measurement wall-clock budget.
+    pub measure: Duration,
+    /// Minimum number of measured samples.
+    pub min_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_samples: 20,
+        }
+    }
+}
+
+/// Result of one micro-benchmark: per-iteration timings in seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration for each measured sample.
+    pub samples: Vec<f64>,
+    /// Iterations per sample batch (1 unless the op is very fast).
+    pub batch: u64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples).expect("bench produced no samples")
+    }
+
+    /// Human-readable one-liner, criterion-style.
+    pub fn report(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<44} {:>12}/iter  (p50 {}, p95 {}, p99 {}, n={})",
+            self.name,
+            fmt_duration(s.mean),
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            fmt_duration(s.p99),
+            s.count,
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a rate (items/sec) with an adaptive unit.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+/// A named group of benchmarks that prints results as it goes.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(BenchConfig::default())
+    }
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Bencher {
+        Bencher { config, results: Vec::new() }
+    }
+
+    /// Quick preset for very cheap ops in CI-like runs.
+    pub fn fast() -> Bencher {
+        Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_samples: 10,
+        })
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and batch-size calibration: target ≥ ~25 µs per sample so
+        // Instant overhead stays below ~1%.
+        let warm_start = Instant::now();
+        let mut iters: u64 = 0;
+        while warm_start.elapsed() < self.config.warmup || iters == 0 {
+            f();
+            iters += 1;
+            if iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / iters as f64;
+        let batch = ((25e-6 / per_iter.max(1e-12)).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.config.measure
+            || samples.len() < self.config.min_samples
+        {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        let result = BenchResult { name: name.to_string(), samples, batch };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a section header used by the paper-figure benches so `cargo bench`
+/// output reads like the paper's evaluation section.
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Print an aligned table: header row + rows of cells.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut out = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", out.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_samples: 5,
+        });
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.samples.len() >= 5);
+        assert!(r.summary().mean > 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.5).contains("s"));
+        assert!(fmt_duration(2.5e-3).contains("ms"));
+        assert!(fmt_duration(2.5e-6).contains("µs"));
+        assert!(fmt_duration(2.5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert!(fmt_rate(5.0).ends_with("/s"));
+        assert!(fmt_rate(5e3).contains("K/s"));
+        assert!(fmt_rate(5e6).contains("M/s"));
+        assert!(fmt_rate(5e9).contains("G/s"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation substrates built in-repo because the offline build
+//! environment only vendors the `xla` crate closure (no rand / serde /
+//! clap / criterion / proptest / tokio). Each submodule is a small,
+//! fully-tested replacement for the crate we would otherwise use; see
+//! DESIGN.md §1.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod promise;
+pub mod prop;
+pub mod rng;
+pub mod stats;

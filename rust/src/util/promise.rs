@@ -1,0 +1,142 @@
+//! One-shot promise/future on std sync primitives.
+//!
+//! The serving API returns a `ResponseFuture` that the caller can block on
+//! (with optional timeout) while the engine thread fulfils the promise.
+//! This replaces the oneshot channel we would normally take from tokio.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Shared<T> {
+    slot: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+/// Producing half; consumed by `fulfill`.
+pub struct Promise<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Consuming half; blocks until the value arrives.
+pub struct Future<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a connected promise/future pair.
+pub fn promise<T>() -> (Promise<T>, Future<T>) {
+    let shared = Arc::new(Shared { slot: Mutex::new(None), cv: Condvar::new() });
+    (Promise { shared: shared.clone() }, Future { shared })
+}
+
+impl<T> Promise<T> {
+    /// Fulfil the promise. Returns `Err(value)` if already fulfilled
+    /// (should not happen in correct engine code; surfaced for tests).
+    pub fn fulfill(self, value: T) -> Result<(), T> {
+        let mut slot = self.shared.slot.lock().unwrap();
+        if slot.is_some() {
+            return Err(value);
+        }
+        *slot = Some(value);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+}
+
+impl<T> Future<T> {
+    /// Block until the value is available.
+    pub fn wait(self) -> T {
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(v) = slot.take() {
+                return v;
+            }
+            slot = self.shared.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Block with a timeout; `Err(self)` on timeout so the caller can keep
+    /// waiting.
+    pub fn wait_timeout(self, dur: Duration) -> Result<T, Future<T>> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut slot = self.shared.slot.lock().unwrap();
+        loop {
+            if let Some(v) = slot.take() {
+                return Ok(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                drop(slot);
+                return Err(self);
+            }
+            let (guard, res) = self.shared.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+            if res.timed_out() && slot.is_none() {
+                drop(slot);
+                return Err(self);
+            }
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<T> {
+        self.shared.slot.lock().unwrap().take()
+    }
+
+    /// True if a value is waiting (without consuming it).
+    pub fn is_ready(&self) -> bool {
+        self.shared.slot.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fulfil_then_wait() {
+        let (p, f) = promise();
+        p.fulfill(42).unwrap();
+        assert_eq!(f.wait(), 42);
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled() {
+        let (p, f) = promise();
+        let h = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            p.fulfill("done").unwrap();
+        });
+        assert_eq!(f.wait(), "done");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_returns_future_back() {
+        let (_p, f) = promise::<u32>();
+        let f = match f.wait_timeout(Duration::from_millis(10)) {
+            Err(f) => f,
+            Ok(_) => panic!("should have timed out"),
+        };
+        assert!(!f.is_ready());
+    }
+
+    #[test]
+    fn timeout_then_success() {
+        let (p, f) = promise();
+        let f = f.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        p.fulfill(7u32).unwrap();
+        assert_eq!(f.wait_timeout(Duration::from_millis(100)).ok(), Some(7));
+    }
+
+    #[test]
+    fn is_ready_and_try_take() {
+        let (p, f) = promise();
+        assert!(!f.is_ready());
+        assert!(f.try_take().is_none());
+        p.fulfill(1u8).unwrap();
+        assert!(f.is_ready());
+        assert_eq!(f.try_take(), Some(1));
+        assert!(f.try_take().is_none());
+    }
+}

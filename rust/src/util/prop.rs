@@ -1,0 +1,112 @@
+//! Seeded property-testing harness (proptest is not vendored offline).
+//!
+//! Runs a property over many randomly generated cases; on failure it
+//! reports the failing case's seed so the exact case can be replayed by
+//! setting `COMPUTRON_PROP_SEED`. Includes simple input generators built
+//! on `util::rng`. No shrinking — cases are kept small by construction,
+//! and the seed makes failures reproducible.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property; override with `COMPUTRON_PROP_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("COMPUTRON_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(128)
+}
+
+/// Run `prop` on `cases` generated inputs. `gen` builds an input from an
+/// RNG; `prop` returns `Err(msg)` (or panics) to signal failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = default_cases();
+    let base_seed: u64 = std::env::var("COMPUTRON_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 COMPUTRON_PROP_SEED={seed} COMPUTRON_PROP_CASES=1):\n  \
+                 input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+// ---- generators ----
+
+/// Vec of length in [min_len, max_len] with elements from `elem`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut elem: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = min_len + rng.index(max_len - min_len + 1);
+    (0..len).map(|_| elem(rng)).collect()
+}
+
+/// usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.index(hi - lo + 1)
+}
+
+/// f64 in [lo, hi).
+pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    rng.range_f64(lo, hi)
+}
+
+/// One of the provided choices (cloned).
+pub fn choice<T: Clone>(rng: &mut Rng, options: &[T]) -> T {
+    options[rng.index(options.len())].clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "reverse-reverse-is-identity",
+            |rng| vec_of(rng, 0, 32, |r| r.next_u64()),
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                if &r == xs {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |rng| rng.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..1000 {
+            let n = usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&n));
+            let x = f64_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let v = vec_of(&mut rng, 2, 4, |r| r.f64());
+            assert!((2..=4).contains(&v.len()));
+            let c = choice(&mut rng, &[10, 20, 30]);
+            assert!([10, 20, 30].contains(&c));
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Latency statistics: summary moments, percentiles, CDFs, histograms.
+//!
+//! Used by the metrics recorder and every benchmark to report the same
+//! quantities the paper reports (average latency tables, latency CDFs).
+
+use crate::util::json::Json;
+
+/// Summary statistics over a sample of (latency) values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(values: &[f64]) -> Option<Summary> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary {
+            count: n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p95: percentile_sorted(&sorted, 0.95),
+            p99: percentile_sorted(&sorted, 0.99),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("count", self.count.into()),
+            ("mean", self.mean.into()),
+            ("std", self.std.into()),
+            ("min", self.min.into()),
+            ("max", self.max.into()),
+            ("p50", self.p50.into()),
+            ("p90", self.p90.into()),
+            ("p95", self.p95.into()),
+            ("p99", self.p99.into()),
+        ])
+    }
+}
+
+/// Linear-interpolated percentile over an already-sorted slice, q in [0,1].
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Convenience: percentile of an unsorted sample.
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    percentile_sorted(&sorted, q)
+}
+
+/// Empirical CDF: returns (x, F(x)) pairs suitable for plotting the
+/// paper's Fig 8 / Fig 9 latency CDFs. `points` controls downsampling;
+/// all points are returned when the sample is small.
+pub fn cdf(values: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = values.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+    let n = sorted.len();
+    let take = points.max(2).min(n);
+    (0..take)
+        .map(|i| {
+            let idx = if take == 1 { n - 1 } else { i * (n - 1) / (take - 1) };
+            (sorted[idx], (idx + 1) as f64 / n as f64)
+        })
+        .collect()
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets plus an
+/// overflow bucket; used in perf reports.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub overflow: u64,
+    pub underflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Histogram {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], overflow: 0, underflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            self.counts[idx.min(bins - 1)] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.overflow + self.underflow
+    }
+}
+
+/// Streaming mean/variance (Welford) — used in hot paths where we do not
+/// want to buffer every sample.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_value() {
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 37.0) % 100.0).collect();
+        let c = cdf(&xs, 50);
+        assert_eq!(c.len(), 50);
+        for w in c.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_small_sample() {
+        let c = cdf(&[3.0, 1.0, 2.0], 100);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0].0, 1.0);
+        assert_eq!(c[2], (3.0, 1.0));
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(42.0);
+        assert_eq!(h.counts, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.add(x);
+        }
+        let s = Summary::of(&xs).unwrap();
+        assert!((w.mean() - s.mean).abs() < 1e-9);
+        assert!((w.std() - s.std).abs() < 1e-9);
+    }
+}

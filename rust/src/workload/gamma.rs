@@ -1,0 +1,199 @@
+//! Random workload generation (§5.2): independent Gamma arrival processes
+//! per model.
+//!
+//! The paper parameterizes each model's request stream by a mean arrival
+//! rate and a coefficient of variation (CV) shared across models:
+//! inter-arrival times are Gamma with shape k = 1/CV², scale θ = CV²/rate,
+//! giving mean 1/rate and std CV/rate. CV = 1 is Poisson; CV = 4 is very
+//! bursty; CV = 0.25 is near-deterministic.
+
+use crate::coordinator::entry::ModelId;
+use crate::sim::system::Arrival;
+use crate::util::rng::Rng;
+
+/// Parameters of one §5.2-style workload.
+#[derive(Clone, Debug)]
+pub struct GammaWorkload {
+    /// Mean arrival rate per model (req/s); index = model id.
+    pub rates: Vec<f64>,
+    /// Shared coefficient of variation.
+    pub cv: f64,
+    /// Measured window length in seconds (paper: 30 s).
+    pub duration: f64,
+    /// Input token length per request (paper: 8).
+    pub input_len: usize,
+    /// Per-model warmup requests sent before t=0 (not measured).
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl GammaWorkload {
+    pub fn new(rates: Vec<f64>, cv: f64, seed: u64) -> GammaWorkload {
+        GammaWorkload { rates, cv, duration: 30.0, input_len: 8, warmup: 2, seed }
+    }
+
+    /// Gamma shape/scale for a given rate under this CV.
+    pub fn gamma_params(&self, rate: f64) -> (f64, f64) {
+        let shape = 1.0 / (self.cv * self.cv);
+        let scale = self.cv * self.cv / rate;
+        (shape, scale)
+    }
+
+    /// Generate the arrival schedule. Warmup requests are placed in
+    /// `[0, warmup_lead)` and the measured window is
+    /// `[warmup_lead, warmup_lead + duration)`; use `measure_start()` to
+    /// filter records. Arrivals are sorted by time.
+    pub fn generate(&self) -> Vec<Arrival> {
+        let mut master = Rng::seeded(self.seed);
+        let mut arrivals = Vec::new();
+        let lead = self.warmup_lead();
+        for (model, &rate) in self.rates.iter().enumerate() {
+            let mut rng = master.fork();
+            // Warmup: evenly spaced in the lead window.
+            for w in 0..self.warmup {
+                let at = lead * (w as f64 + 0.5) / self.warmup.max(1) as f64;
+                arrivals.push(Arrival { at, model: model as ModelId, input_len: self.input_len });
+            }
+            if rate <= 0.0 {
+                continue;
+            }
+            let (shape, scale) = self.gamma_params(rate);
+            let mut t = lead;
+            loop {
+                t += rng.gamma(shape, scale);
+                if t >= lead + self.duration {
+                    break;
+                }
+                arrivals.push(Arrival { at: t, model: model as ModelId, input_len: self.input_len });
+            }
+        }
+        arrivals.sort_by(|a, b| a.at.total_cmp(&b.at));
+        arrivals
+    }
+
+    /// Start of the measured window.
+    pub fn measure_start(&self) -> f64 {
+        self.warmup_lead()
+    }
+
+    fn warmup_lead(&self) -> f64 {
+        // Enough room for each model's warmup requests to complete.
+        2.0 * self.warmup.max(1) as f64
+    }
+
+    /// Expected measured request count (for sanity checks).
+    pub fn expected_requests(&self) -> f64 {
+        self.rates.iter().sum::<f64>() * self.duration
+    }
+}
+
+/// The paper's §5.2 grids.
+pub mod paper {
+    /// Tab 1 / Fig 8 skew rows: 3 models.
+    pub const SKEWS_3: [[f64; 3]; 3] = [[1.0, 1.0, 1.0], [10.0, 1.0, 1.0], [10.0, 10.0, 1.0]];
+    /// Tab 2 / Fig 9 skew rows: 6 models.
+    pub const SKEWS_6: [[f64; 6]; 3] = [
+        [1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+        [10.0, 10.0, 1.0, 1.0, 1.0, 1.0],
+        [10.0, 10.0, 10.0, 10.0, 1.0, 1.0],
+    ];
+    /// CV columns shared by both tables.
+    pub const CVS: [f64; 3] = [0.25, 1.0, 4.0];
+
+    pub fn skew_label(rates: &[f64]) -> String {
+        let items: Vec<String> = rates.iter().map(|r| format!("{r:.0}")).collect();
+        format!("({})", items.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_sorted_and_in_window() {
+        let w = GammaWorkload::new(vec![5.0, 5.0, 5.0], 1.0, 42);
+        let arr = w.generate();
+        for pair in arr.windows(2) {
+            assert!(pair[0].at <= pair[1].at);
+        }
+        let end = w.measure_start() + w.duration;
+        assert!(arr.iter().all(|a| a.at >= 0.0 && a.at < end));
+    }
+
+    #[test]
+    fn rate_controls_expected_count() {
+        let w = GammaWorkload::new(vec![10.0, 1.0, 1.0], 1.0, 7);
+        let arr = w.generate();
+        let measured: Vec<_> = arr.iter().filter(|a| a.at >= w.measure_start()).collect();
+        let per_model: Vec<usize> =
+            (0..3).map(|m| measured.iter().filter(|a| a.model == m).count()).collect();
+        // 30 s at rate 10 ⇒ ~300; rate 1 ⇒ ~30. Allow generous tolerance.
+        assert!((200..400).contains(&per_model[0]), "{per_model:?}");
+        assert!((10..60).contains(&per_model[1]), "{per_model:?}");
+        assert!((10..60).contains(&per_model[2]), "{per_model:?}");
+    }
+
+    #[test]
+    fn cv_controls_burstiness() {
+        // Measure the CV of realized inter-arrival times for one model.
+        let measure_cv = |cv: f64| {
+            let w = GammaWorkload {
+                rates: vec![20.0],
+                cv,
+                duration: 2000.0,
+                input_len: 8,
+                warmup: 0,
+                seed: 11,
+            };
+            let arr = w.generate();
+            let gaps: Vec<f64> = arr.windows(2).map(|p| p[1].at - p[0].at).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        for &cv in &[0.25, 1.0, 4.0] {
+            let est = measure_cv(cv);
+            assert!((est - cv).abs() / cv < 0.15, "cv={cv} est={est}");
+        }
+    }
+
+    #[test]
+    fn warmup_requests_present_per_model() {
+        let w = GammaWorkload::new(vec![1.0, 1.0], 1.0, 3);
+        let arr = w.generate();
+        let warm: Vec<_> = arr.iter().filter(|a| a.at < w.measure_start()).collect();
+        assert_eq!(warm.len(), 4); // 2 models × 2 warmups
+        for m in 0..2 {
+            assert_eq!(warm.iter().filter(|a| a.model == m).count(), 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = GammaWorkload::new(vec![5.0, 5.0], 4.0, 99);
+        let a = w.generate();
+        let b = w.generate();
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.at == y.at && x.model == y.model));
+        let w2 = GammaWorkload::new(vec![5.0, 5.0], 4.0, 100);
+        let c = w2.generate();
+        assert!(a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.at != y.at));
+    }
+
+    #[test]
+    fn zero_rate_model_gets_only_warmup() {
+        let w = GammaWorkload::new(vec![5.0, 0.0], 1.0, 5);
+        let arr = w.generate();
+        let m1: Vec<_> = arr.iter().filter(|a| a.model == 1).collect();
+        assert_eq!(m1.len(), w.warmup);
+    }
+
+    #[test]
+    fn paper_grids_shape() {
+        assert_eq!(paper::SKEWS_3.len(), 3);
+        assert_eq!(paper::SKEWS_6.len(), 3);
+        assert_eq!(paper::CVS, [0.25, 1.0, 4.0]);
+        assert_eq!(paper::skew_label(&[10.0, 1.0, 1.0]), "(10,1,1)");
+    }
+}

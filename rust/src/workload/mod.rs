@@ -1,0 +1,8 @@
+//! Workload generation: Gamma arrival processes (§5.2) and trace
+//! record/replay.
+
+pub mod gamma;
+pub mod trace;
+
+pub use gamma::GammaWorkload;
+pub use trace::Trace;

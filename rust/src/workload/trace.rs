@@ -1,0 +1,137 @@
+//! Workload trace record / replay.
+//!
+//! Traces let an experiment be captured once and replayed bit-exactly
+//! (e.g. to compare replacement policies on identical arrivals), and let
+//! the real-mode examples drive the serving API with the same workloads
+//! the simulator uses.
+
+use crate::sim::system::Arrival;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// A serializable workload trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    /// Start of the measured window (arrivals before are warmup).
+    pub measure_start: f64,
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, measure_start: f64, arrivals: Vec<Arrival>) -> Trace {
+        Trace { name: name.into(), measure_start, arrivals }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("measure_start", self.measure_start.into()),
+            (
+                "arrivals",
+                Json::Arr(
+                    self.arrivals
+                        .iter()
+                        .map(|a| {
+                            Json::from_pairs(vec![
+                                ("at", a.at.into()),
+                                ("model", a.model.into()),
+                                ("input_len", a.input_len.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let name = j.req_str("name")?.to_string();
+        let measure_start = j.req_f64("measure_start")?;
+        let mut arrivals = Vec::new();
+        for item in j.req_arr("arrivals")? {
+            arrivals.push(Arrival {
+                at: item.req_f64("at")?,
+                model: item.req_usize("model")?,
+                input_len: item.req_usize("input_len")?,
+            });
+        }
+        Ok(Trace { name, measure_start, arrivals })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        Trace::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Count of models referenced.
+    pub fn num_models(&self) -> usize {
+        self.arrivals.iter().map(|a| a.model + 1).max().unwrap_or(0)
+    }
+
+    /// Arrivals in the measured window.
+    pub fn measured(&self) -> impl Iterator<Item = &Arrival> {
+        self.arrivals.iter().filter(move |a| a.at >= self.measure_start)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::gamma::GammaWorkload;
+
+    fn sample() -> Trace {
+        let w = GammaWorkload::new(vec![5.0, 1.0], 1.0, 77);
+        Trace::new("t", w.measure_start(), w.generate())
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let t = sample();
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.arrivals.len(), t.arrivals.len());
+        for (a, b) in t.arrivals.iter().zip(&back.arrivals) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.model, b.model);
+            assert_eq!(a.input_len, b.input_len);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let dir = std::env::temp_dir().join("computron_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.arrivals.len(), t.arrivals.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn measured_filters_warmup() {
+        let t = sample();
+        let measured = t.measured().count();
+        assert!(measured < t.arrivals.len());
+        assert!(t.measured().all(|a| a.at >= t.measure_start));
+    }
+
+    #[test]
+    fn num_models_counts() {
+        let t = sample();
+        assert_eq!(t.num_models(), 2);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        let j = Json::parse(r#"{"name":"x"}"#).unwrap();
+        assert!(Trace::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! System-level simulation tests: invariants of the full engine + worker
+//! + cluster composition under randomized workloads (the DES equivalent
+//! of chaos testing), plus the §5.2 memory-footprint check.
+
+use computron::config::{LoadDesign, PolicyKind, SystemConfig};
+use computron::model::{catalog, max_shard_bytes};
+use computron::sim::{Arrival, Driver, SimSystem};
+use computron::util::prop;
+use computron::util::rng::Rng;
+use computron::workload::GammaWorkload;
+
+fn run_open(cfg: SystemConfig, arrivals: Vec<Arrival>, preload: &[usize]) -> computron::sim::SimReport {
+    let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload(preload);
+    sys.run()
+}
+
+#[test]
+fn gpu_memory_matches_two_model_footprint() {
+    // §5.2: "we check that GPU memory usage approximately matches the
+    // footprint of two OPT-13B models" (cap 2, TP=2 PP=2).
+    let cfg = SystemConfig::workload_experiment(3, 2, 8);
+    let w = GammaWorkload::new(vec![2.0, 2.0, 2.0], 1.0, 5);
+    let report = run_open(cfg, w.generate(), &[0, 1]);
+    let spec = catalog::opt("opt-13b").unwrap();
+    let shard = max_shard_bytes(&spec, 2, 2).unwrap();
+    for &hw in &report.mem_high_water {
+        assert!(hw >= 2 * shard * 9 / 10, "high water {hw} below ~2 shards");
+        assert!(hw <= 3 * shard, "high water {hw} above 2 shards + transient");
+    }
+}
+
+#[test]
+fn all_arrivals_complete_under_every_policy() {
+    for policy in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Fifo, PolicyKind::Random] {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.engine.policy = policy;
+        let w = GammaWorkload::new(vec![5.0, 3.0, 1.0], 4.0, 11);
+        let arrivals = w.generate();
+        let n = arrivals.len();
+        let report = run_open(cfg, arrivals, &[0, 1]);
+        assert_eq!(report.requests.len(), n, "policy {policy:?} lost requests");
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+    }
+}
+
+#[test]
+fn prefetch_preserves_correctness_under_random_load() {
+    let mut cfg = SystemConfig::workload_experiment(4, 2, 8);
+    cfg.engine.prefetch = true;
+    let w = GammaWorkload::new(vec![4.0, 3.0, 2.0, 1.0], 4.0, 23);
+    let arrivals = w.generate();
+    let n = arrivals.len();
+    let report = run_open(cfg, arrivals, &[0, 1]);
+    assert_eq!(report.requests.len(), n);
+    assert_eq!(report.violations, 0);
+    assert_eq!(report.oom_events, 0);
+}
+
+#[test]
+fn sync_design_preserves_correctness() {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.engine.load_design = LoadDesign::SyncPipelined;
+    let w = GammaWorkload::new(vec![2.0, 2.0, 2.0], 1.0, 31);
+    let arrivals = w.generate();
+    let n = arrivals.len();
+    let report = run_open(cfg, arrivals, &[0, 1]);
+    assert_eq!(report.requests.len(), n);
+    assert_eq!(report.violations, 0);
+}
+
+#[test]
+fn latencies_nonnegative_and_queue_before_done() {
+    let cfg = SystemConfig::workload_experiment(3, 2, 8);
+    let w = GammaWorkload::new(vec![8.0, 4.0, 2.0], 4.0, 41);
+    let report = run_open(cfg, w.generate(), &[0, 1]);
+    for r in &report.requests {
+        assert!(r.batch_submit >= r.arrival, "submitted before arrival");
+        assert!(r.done > r.batch_submit, "done before submission");
+        assert!(r.latency() > 0.0);
+        assert!(r.queue_time() >= 0.0);
+    }
+}
+
+#[test]
+fn swap_accounting_consistent() {
+    let cfg = SystemConfig::workload_experiment(3, 1, 8); // cap 1: heavy swapping
+    let w = GammaWorkload::new(vec![2.0, 2.0, 2.0], 0.25, 43);
+    let report = run_open(cfg, w.generate(), &[0]);
+    let s = report.swap_stats;
+    assert_eq!(s.loads_started, s.loads_completed, "loads must drain");
+    assert_eq!(s.offloads_started, s.offloads_completed, "offloads must drain");
+    assert_eq!(report.swaps.len() as u64, s.loads_completed);
+    // H2D bytes across all GPUs == loads × per-worker shard bytes summed.
+    let total_h2d: u64 = report.h2d_bytes.iter().sum();
+    assert!(total_h2d > 0);
+}
+
+#[test]
+fn property_random_configs_and_workloads_preserve_invariants() {
+    prop::check(
+        "sim-chaos",
+        |rng: &mut Rng| {
+            let models = prop::usize_in(rng, 2, 6);
+            let cap = prop::usize_in(rng, 1, models);
+            let tp = prop::choice(rng, &[1usize, 2, 4]);
+            let pp = prop::choice(rng, &[1usize, 2, 4]);
+            let cv = prop::choice(rng, &[0.25, 1.0, 4.0]);
+            let batch = prop::choice(rng, &[1usize, 4, 8, 32]);
+            let prefetch = rng.f64() < 0.3;
+            let rates: Vec<f64> = (0..models).map(|_| prop::f64_in(rng, 0.5, 8.0)).collect();
+            let seed = rng.next_u64();
+            (models, cap, tp, pp, cv, batch, prefetch, rates, seed)
+        },
+        |(models, cap, tp, pp, cv, batch, prefetch, rates, seed)| {
+            let mut cfg = SystemConfig::workload_experiment(*models, *cap, *batch);
+            cfg.parallel = computron::config::ParallelConfig::new(*tp, *pp);
+            cfg.engine.prefetch = *prefetch;
+            if cfg.validate().is_err() {
+                return Ok(()); // invalid grid for opt-13b: skip
+            }
+            let mut w = GammaWorkload::new(rates.clone(), *cv, *seed);
+            w.duration = 5.0; // keep each case fast
+            let arrivals = w.generate();
+            let n = arrivals.len();
+            let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).map_err(|e| e.to_string())?;
+            let preload: Vec<usize> = (0..*cap.min(models)).collect();
+            sys.preload(&preload);
+            let report = sys.run();
+            if report.requests.len() != n {
+                return Err(format!("lost requests: {} != {n}", report.requests.len()));
+            }
+            if report.violations != 0 {
+                return Err(format!("{} dependency violations", report.violations));
+            }
+            if report.oom_events != 0 {
+                return Err(format!("{} OOM events", report.oom_events));
+            }
+            if report.swap_stats.loads_started != report.swap_stats.loads_completed {
+                return Err("loads did not drain".into());
+            }
+            for r in &report.requests {
+                if r.latency() <= 0.0 || r.queue_time() < 0.0 {
+                    return Err(format!("bad record {r:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    let make = || {
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let w = GammaWorkload::new(vec![5.0, 5.0, 5.0], 4.0, 77);
+        run_open(cfg, w.generate(), &[0, 1])
+    };
+    let a = make();
+    let b = make();
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.swaps, b.swaps);
+    assert_eq!(a.events, b.events);
+}
+
+#[test]
+fn burstier_workloads_swap_less_per_request() {
+    // The mechanism behind the paper's Tab 1 pattern: higher CV ⇒
+    // consecutive requests hit the same resident model more often.
+    let swaps_per_request = |cv: f64| {
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let w = GammaWorkload::new(vec![3.0, 3.0, 3.0], cv, 99);
+        let report = run_open(cfg, w.generate(), &[0, 1]);
+        report.swaps.len() as f64 / report.requests.len() as f64
+    };
+    let low = swaps_per_request(0.25);
+    let high = swaps_per_request(4.0);
+    assert!(high < low, "cv=4 ({high}) must swap less per request than cv=0.25 ({low})");
+}
