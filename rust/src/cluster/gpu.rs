@@ -14,13 +14,24 @@ pub struct MemTracker {
     high_water: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("out of device memory: requested {requested} bytes, used {used} of {capacity}")]
+#[derive(Debug, PartialEq)]
 pub struct OomError {
     pub requested: usize,
     pub used: usize,
     pub capacity: usize,
 }
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "out of device memory: requested {} bytes, used {} of {}",
+            self.requested, self.used, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 impl MemTracker {
     pub fn new(capacity: usize) -> MemTracker {

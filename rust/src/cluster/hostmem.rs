@@ -17,13 +17,24 @@ pub struct PinnedPool {
     allocs: BTreeMap<String, usize>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("pinned memory budget exceeded: requested {requested}, used {used} of {budget}")]
+#[derive(Debug, PartialEq)]
 pub struct PinnedOom {
     pub requested: usize,
     pub used: usize,
     pub budget: usize,
 }
+
+impl std::fmt::Display for PinnedOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pinned memory budget exceeded: requested {}, used {} of {}",
+            self.requested, self.used, self.budget
+        )
+    }
+}
+
+impl std::error::Error for PinnedOom {}
 
 impl PinnedPool {
     /// `budget` is the maximum bytes that may be pinned simultaneously.

@@ -207,27 +207,60 @@ pub struct SystemConfig {
     pub parallel: ParallelConfig,
     pub hardware: HardwareConfig,
     pub engine: EngineConfig,
+    /// Named workload scenario from `workload::scenarios` driving
+    /// open-loop runs (`SimSystem::from_scenario`); `None` means the
+    /// caller supplies arrivals itself (default "uniform" when driven
+    /// through the scenario path).
+    pub scenario: Option<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("unknown model '{0}' (see model::catalog)")]
     UnknownModel(String),
-    #[error("invalid parallel config: {0}")]
-    BadParallel(#[from] crate::model::shard::ShardError),
-    #[error("resident_cap must be >= 1")]
+    BadParallel(crate::model::shard::ShardError),
     ZeroCap,
-    #[error("num_models must be >= 1")]
     ZeroModels,
-    #[error("max_batch_size must be >= 1")]
     ZeroBatch,
-    #[error(
-        "resident_cap {cap} x shard {shard_bytes}B exceeds GPU memory {gpu_mem}B \
-         (plus one transient shard during overlapped swaps)"
-    )]
     CapExceedsMemory { cap: usize, shard_bytes: usize, gpu_mem: usize },
-    #[error("{0}")]
+    UnknownScenario(String),
     Json(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::UnknownModel(m) => write!(f, "unknown model '{m}' (see model::catalog)"),
+            ConfigError::BadParallel(e) => write!(f, "invalid parallel config: {e}"),
+            ConfigError::ZeroCap => write!(f, "resident_cap must be >= 1"),
+            ConfigError::ZeroModels => write!(f, "num_models must be >= 1"),
+            ConfigError::ZeroBatch => write!(f, "max_batch_size must be >= 1"),
+            ConfigError::CapExceedsMemory { cap, shard_bytes, gpu_mem } => write!(
+                f,
+                "resident_cap {cap} x shard {shard_bytes}B exceeds GPU memory {gpu_mem}B \
+                 (plus one transient shard during overlapped swaps)"
+            ),
+            ConfigError::UnknownScenario(s) => write!(
+                f,
+                "unknown scenario '{s}' (see workload::scenarios::names())"
+            ),
+            ConfigError::Json(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::BadParallel(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::model::shard::ShardError> for ConfigError {
+    fn from(e: crate::model::shard::ShardError) -> ConfigError {
+        ConfigError::BadParallel(e)
+    }
 }
 
 impl SystemConfig {
@@ -243,6 +276,7 @@ impl SystemConfig {
                 resident_cap: 1,
                 ..EngineConfig::default()
             },
+            scenario: None,
         }
     }
 
@@ -258,6 +292,7 @@ impl SystemConfig {
                 resident_cap,
                 ..EngineConfig::default()
             },
+            scenario: None,
         }
     }
 
@@ -276,6 +311,11 @@ impl SystemConfig {
         }
         if self.engine.max_batch_size == 0 {
             return Err(ConfigError::ZeroBatch);
+        }
+        if let Some(name) = &self.scenario {
+            if !crate::workload::scenarios::is_known(name) {
+                return Err(ConfigError::UnknownScenario(name.clone()));
+            }
         }
         // `cap` shards must fit in device memory. (Transfers are
         // per-tensor granular — an overlapped swap drains the victim while
@@ -297,7 +337,7 @@ impl SystemConfig {
     // ----- JSON (de)serialization -----
 
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("model", self.model.as_str().into()),
             ("num_models", self.num_models.into()),
             ("tp", self.parallel.tp.into()),
@@ -313,7 +353,11 @@ impl SystemConfig {
             ("pipe_latency", self.hardware.pipe_latency.into()),
             ("dispatch_overhead", self.hardware.dispatch_overhead.into()),
             ("pinned", self.hardware.pinned.into()),
-        ])
+        ]);
+        if let Some(s) = &self.scenario {
+            j.set("scenario", s.as_str().into());
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<SystemConfig, ConfigError> {
@@ -327,7 +371,11 @@ impl SystemConfig {
             ),
             hardware: HardwareConfig::default(),
             engine: EngineConfig::default(),
+            scenario: None,
         };
+        if let Some(s) = j.get("scenario").and_then(Json::as_str) {
+            cfg.scenario = Some(s.to_string());
+        }
         if let Some(v) = j.get("max_batch_size").and_then(Json::as_usize) {
             cfg.engine.max_batch_size = v;
         }
@@ -458,6 +506,24 @@ mod tests {
             cfg.validate().unwrap();
             assert_eq!(cfg.model, "opt-13b");
         }
+    }
+
+    #[test]
+    fn scenario_field_roundtrips_and_validates() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.scenario = Some("flash-crowd".into());
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.scenario.as_deref(), Some("flash-crowd"));
+
+        let mut bad = SystemConfig::workload_experiment(3, 2, 8);
+        bad.scenario = Some("mystery".into());
+        assert!(matches!(bad.validate(), Err(ConfigError::UnknownScenario(_))));
+
+        // Absent scenario stays absent through JSON.
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.scenario.is_none());
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Computron: serving distributed deep learning models with model parallel
 //! swapping — a Rust + JAX + Pallas reproduction.
 //!
-//! See DESIGN.md for the architecture overview and EXPERIMENTS.md for the
-//! reproduction of every table and figure in the paper.
+//! See `DESIGN.md` (repo root) for the architecture overview — the
+//! engine / simulator / serving split and the workload scenario registry
+//! — and `EXPERIMENTS.md` for the bench list that reproduces every table
+//! and figure in the paper (`benches/*.rs`, run via `cargo bench`).
 
 pub mod baselines;
 pub mod cluster;

@@ -1,10 +1,11 @@
 //! `computron` — CLI launcher.
 //!
 //! Subcommands:
-//!   serve     launch the real-mode server and run an interactive demo load
-//!   simulate  run a §5.2-style simulated workload and print metrics
-//!   swap      run the §5.1 worst-case swap experiment for one (tp, pp)
-//!   info      print environment, catalog, and artifact status
+//!   serve      launch the real-mode server and run an interactive demo load
+//!   simulate   run a §5.2-style simulated workload and print metrics
+//!   swap       run the §5.1 worst-case swap experiment for one (tp, pp)
+//!   scenarios  list the named workload scenarios (`--scenario` targets)
+//!   info       print environment, catalog, and artifact status
 //!
 //! `computron <subcommand> --help` lists options.
 
@@ -23,7 +24,7 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|swap|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|swap|scenarios|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
@@ -31,6 +32,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "simulate" => cmd_simulate(&rest),
         "swap" => cmd_swap(&rest),
+        "scenarios" => cmd_scenarios(),
         "info" => cmd_info(),
         other => Err(anyhow!("unknown subcommand '{other}'")),
     };
@@ -93,7 +95,8 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {
     let args = Args::new("computron simulate", "run a §5.2-style simulated workload")
-        .opt("config", "JSON system config (see configs/); CLI flags override", None)
+        .opt("config", "JSON system config (see configs/); --policy/--load-design/--no-pinned still apply, size flags do not", None)
+        .opt("scenario", "named workload scenario (see `computron scenarios`); overrides --rates/--cv", None)
         .opt("models", "number of model instances", Some("3"))
         .opt("cap", "resident model cap", Some("2"))
         .opt("batch", "max batch size", Some("8"))
@@ -123,27 +126,46 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     if args.flag("no-pinned") {
         cfg.hardware.pinned = false;
     }
-    let rates: Vec<f64> = match args.get("rates") {
-        Some(s) => s
-            .split(',')
-            .map(|x| x.trim().parse::<f64>().map_err(|_| anyhow!("bad rate '{x}'")))
-            .collect::<Result<_>>()?,
-        None => vec![1.0; models],
-    };
-    anyhow::ensure!(rates.len() == models, "--rates needs {models} entries");
-    let mut workload = GammaWorkload::new(
-        rates,
-        args.get_f64("cv")?.unwrap_or(1.0),
-        args.get_usize("seed")?.unwrap_or(42) as u64,
-    );
-    workload.duration = args.get_f64("duration")?.unwrap_or(30.0);
+    let duration = args.get_f64("duration")?.unwrap_or(30.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
 
-    let arrivals = workload.generate();
-    let start = workload.measure_start();
-    let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
-    sys.preload(&(0..cap.min(models)).collect::<Vec<_>>());
-    let report = sys.run();
-    let cell = WorkloadCell::from_report("cli", workload.cv, &report, start);
+    // Scenario precedence: an explicit --scenario flag always wins; a
+    // config-file `scenario` field applies unless the user passed
+    // explicit --rates (flags override config).
+    let scenario = args.get("scenario").map(str::to_string).or_else(|| {
+        if args.get("rates").is_some() {
+            None
+        } else {
+            cfg.scenario.clone()
+        }
+    });
+    let (report, start, label, cv) = if let Some(name) = scenario {
+        // Named-scenario path: the registry supplies the arrival process.
+        cfg.scenario = Some(name.clone());
+        cfg.validate()?;
+        let (sys, start) = SimSystem::from_scenario(cfg, duration, seed)?;
+        // -1.0 marks "CV not applicable" for non-Gamma scenarios.
+        let cv = computron::workload::scenarios::nominal_cv(&name).unwrap_or(-1.0);
+        (sys.run(), start, name, cv)
+    } else {
+        let rates: Vec<f64> = match args.get("rates") {
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().parse::<f64>().map_err(|_| anyhow!("bad rate '{x}'")))
+                .collect::<Result<_>>()?,
+            None => vec![1.0; models],
+        };
+        anyhow::ensure!(rates.len() == models, "--rates needs {models} entries");
+        let mut workload = GammaWorkload::new(rates, args.get_f64("cv")?.unwrap_or(1.0), seed);
+        workload.duration = duration;
+        let arrivals = workload.generate();
+        let start = workload.measure_start();
+        let cv = workload.cv;
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
+        sys.preload(&(0..cap.min(models)).collect::<Vec<_>>());
+        (sys.run(), start, "cli".to_string(), cv)
+    };
+    let cell = WorkloadCell::from_report(&label, cv, &report, start);
 
     section("simulation results");
     table(
@@ -185,6 +207,21 @@ fn cmd_swap(argv: &[String]) -> Result<()> {
         mean_swap / ideal,
         r.requests.len()
     );
+    Ok(())
+}
+
+fn cmd_scenarios() -> Result<()> {
+    section("named workload scenarios (computron simulate --scenario <name>)");
+    let rows: Vec<Vec<String>> = computron::workload::scenarios::names()
+        .iter()
+        .map(|&name| {
+            vec![
+                name.to_string(),
+                computron::workload::scenarios::describe(name).unwrap_or("").to_string(),
+            ]
+        })
+        .collect();
+    table(&["name", "description"], &rows);
     Ok(())
 }
 

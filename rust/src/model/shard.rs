@@ -46,15 +46,31 @@ impl ShardManifest {
 }
 
 /// Errors from an invalid parallel configuration.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ShardError {
-    #[error("tp degree {tp} must divide hidden={hidden}, heads={heads}, ffn={ffn}, vocab={vocab}")]
     TpIndivisible { tp: usize, hidden: usize, heads: usize, ffn: usize, vocab: usize },
-    #[error("pp degree {pp} must divide num_layers={layers}")]
     PpIndivisible { pp: usize, layers: usize },
-    #[error("parallel degrees must be >= 1 (tp={tp}, pp={pp})")]
     ZeroDegree { tp: usize, pp: usize },
 }
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::TpIndivisible { tp, hidden, heads, ffn, vocab } => write!(
+                f,
+                "tp degree {tp} must divide hidden={hidden}, heads={heads}, ffn={ffn}, vocab={vocab}"
+            ),
+            ShardError::PpIndivisible { pp, layers } => {
+                write!(f, "pp degree {pp} must divide num_layers={layers}")
+            }
+            ShardError::ZeroDegree { tp, pp } => {
+                write!(f, "parallel degrees must be >= 1 (tp={tp}, pp={pp})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
 
 /// Validate a (tp, pp) configuration against a model spec.
 pub fn validate(spec: &ModelSpec, tp: usize, pp: usize) -> Result<(), ShardError> {

@@ -145,6 +145,38 @@ impl SimSystem {
         })
     }
 
+    /// Build a system from the scenario named in `cfg.scenario` (default
+    /// `"uniform"`): resolve it in `workload::scenarios`, generate its
+    /// arrival schedule, and preload the first `resident_cap` models (a
+    /// warm server's initial conditions). Returns the system plus the
+    /// measured-window start for latency filtering.
+    pub fn from_scenario(
+        cfg: SystemConfig,
+        duration: f64,
+        seed: u64,
+    ) -> anyhow::Result<(SimSystem, f64)> {
+        use crate::workload::scenarios::{self, ScenarioParams, WorkloadGen};
+        let name = cfg.scenario.clone().unwrap_or_else(|| "uniform".to_string());
+        let params = ScenarioParams {
+            num_models: cfg.num_models,
+            duration,
+            seed,
+            ..ScenarioParams::default()
+        };
+        let gen = scenarios::by_name(&name, &params).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario '{name}' (known: {})",
+                scenarios::names().join(", ")
+            )
+        })?;
+        let arrivals = gen.generate();
+        let measure_start = gen.measure_start();
+        let cap = cfg.engine.resident_cap.min(cfg.num_models);
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
+        sys.preload(&(0..cap).collect::<Vec<_>>());
+        Ok((sys, measure_start))
+    }
+
     /// Pre-warm models into GPU memory (engine + all workers).
     pub fn preload(&mut self, models: &[ModelId]) {
         for &m in models {

@@ -1,8 +1,11 @@
-//! Workload generation: Gamma arrival processes (§5.2) and trace
-//! record/replay.
+//! Workload generation: Gamma arrival processes (§5.2), the named
+//! scenario catalog (Zipf / Markov on-off / diurnal / flash-crowd), and
+//! trace record/replay.
 
 pub mod gamma;
+pub mod scenarios;
 pub mod trace;
 
 pub use gamma::GammaWorkload;
+pub use scenarios::{ScenarioParams, WorkloadGen};
 pub use trace::Trace;

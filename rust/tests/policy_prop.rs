@@ -1,0 +1,308 @@
+//! Property tests for every `ReplacementPolicy` (LRU / LFU / FIFO /
+//! Random) under randomized access traces, against straightforward
+//! reference models:
+//!
+//! - the victim is always drawn from the candidate set (never an
+//!   arbitrary model),
+//! - evicted models are forgotten: re-insertion restarts their history
+//!   (FIFO position, LRU recency) rather than resuming the old one,
+//! - LRU picks the genuinely least-recently-used candidate,
+//! - LFU picks the least-frequently-accessed candidate,
+//! - FIFO picks the earliest-inserted resident candidate,
+//! - Random is deterministic per seed and covers the candidate set.
+
+use computron::config::PolicyKind;
+use computron::coordinator::policy::{make_policy, Fifo, Lru, RandomPolicy, ReplacementPolicy};
+use computron::util::prop;
+use computron::util::rng::Rng;
+
+const ALL_KINDS: [PolicyKind; 4] =
+    [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Fifo, PolicyKind::Random];
+
+/// One randomized trace event.
+#[derive(Clone, Debug)]
+enum Op {
+    Insert(usize),
+    Access(usize),
+    Evict(usize),
+}
+
+/// Generate a random but *well-formed* trace: models are inserted before
+/// they are accessed/evicted, mirroring how the engine drives a policy
+/// (insert on load-complete, access on batch submit, evict on offload).
+fn gen_trace(rng: &mut Rng, num_models: usize, len: usize) -> Vec<Op> {
+    let mut resident: Vec<usize> = Vec::new();
+    let mut ops = Vec::new();
+    for _ in 0..len {
+        let roll = rng.f64();
+        if resident.is_empty() || roll < 0.35 {
+            let m = rng.index(num_models);
+            if !resident.contains(&m) {
+                resident.push(m);
+                ops.push(Op::Insert(m));
+            }
+        } else if roll < 0.8 {
+            let m = resident[rng.index(resident.len())];
+            ops.push(Op::Access(m));
+        } else {
+            let i = rng.index(resident.len());
+            let m = resident.remove(i);
+            ops.push(Op::Evict(m));
+        }
+    }
+    ops
+}
+
+/// Replay a trace into a policy, timestamping ops 1.0 apart, and return
+/// the reference state: (resident set, last-access time, access count,
+/// insertion sequence) per model.
+struct Reference {
+    resident: Vec<usize>,
+    last_access: Vec<f64>,
+    counts: Vec<u64>,
+    inserted_seq: Vec<u64>,
+}
+
+fn replay(policy: &mut dyn ReplacementPolicy, ops: &[Op], num_models: usize) -> Reference {
+    let mut r = Reference {
+        resident: Vec::new(),
+        last_access: vec![f64::NEG_INFINITY; num_models],
+        counts: vec![0; num_models],
+        inserted_seq: vec![u64::MAX; num_models],
+    };
+    let mut now = 0.0;
+    let mut seq = 0;
+    for op in ops {
+        now += 1.0;
+        match *op {
+            Op::Insert(m) => {
+                policy.on_insert(m, now);
+                r.resident.push(m);
+                // LRU counts insertion as a use.
+                r.last_access[m] = now;
+                r.inserted_seq[m] = seq;
+                seq += 1;
+            }
+            Op::Access(m) => {
+                policy.on_access(m, now);
+                r.last_access[m] = now;
+                r.counts[m] += 1;
+            }
+            Op::Evict(m) => {
+                policy.on_evict(m);
+                r.resident.retain(|&x| x != m);
+            }
+        }
+    }
+    r
+}
+
+#[test]
+fn victim_always_from_candidates_all_policies() {
+    for kind in ALL_KINDS {
+        prop::check(
+            &format!("victim-in-candidates-{}", kind.name()),
+            |rng: &mut Rng| {
+                let n = prop::usize_in(rng, 2, 8);
+                let ops = gen_trace(rng, n, prop::usize_in(rng, 1, 64));
+                let seed = rng.next_u64();
+                (n, ops, seed)
+            },
+            |(n, ops, seed)| {
+                let mut policy = make_policy(kind, *n, *seed);
+                let reference = replay(policy.as_mut(), ops, *n);
+                if reference.resident.is_empty() {
+                    if policy.victim(&[]).is_some() {
+                        return Err("victim from empty candidate set".into());
+                    }
+                    return Ok(());
+                }
+                // Try several random candidate subsets of the residents.
+                let mut rng = Rng::seeded(seed.wrapping_add(1));
+                for _ in 0..8 {
+                    let mut candidates: Vec<usize> = reference
+                        .resident
+                        .iter()
+                        .copied()
+                        .filter(|_| rng.f64() < 0.7)
+                        .collect();
+                    candidates.dedup();
+                    let victim = policy.victim(&candidates);
+                    match victim {
+                        None if candidates.is_empty() => {}
+                        None => return Err("no victim despite candidates".into()),
+                        Some(v) if candidates.contains(&v) => {}
+                        Some(v) => return Err(format!("victim {v} not in {candidates:?}")),
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn lru_victim_is_least_recent_under_random_traces() {
+    prop::check(
+        "lru-least-recent",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            (n, ops)
+        },
+        |(n, ops)| {
+            let mut policy = Lru::new(*n);
+            let reference = replay(&mut policy, ops, *n);
+            let candidates = reference.resident.clone();
+            if candidates.is_empty() {
+                return Ok(());
+            }
+            let expected = candidates
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    reference.last_access[a]
+                        .total_cmp(&reference.last_access[b])
+                        .then(a.cmp(&b))
+                })
+                .unwrap();
+            let got = policy.victim(&candidates).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "LRU chose {got}, expected {expected} (last_access {:?})",
+                    reference.last_access
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lfu_victim_is_least_frequent_under_random_traces() {
+    prop::check(
+        "lfu-least-frequent",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            (n, ops)
+        },
+        |(n, ops)| {
+            let mut policy = make_policy(PolicyKind::Lfu, *n, 0);
+            let reference = replay(policy.as_mut(), ops, *n);
+            let candidates = reference.resident.clone();
+            if candidates.is_empty() {
+                return Ok(());
+            }
+            let expected = candidates
+                .iter()
+                .copied()
+                .min_by_key(|&m| (reference.counts[m], m))
+                .unwrap();
+            let got = policy.victim(&candidates).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "LFU chose {got}, expected {expected} (counts {:?})",
+                    reference.counts
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fifo_victim_is_earliest_inserted_under_random_traces() {
+    prop::check(
+        "fifo-earliest-inserted",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            (n, ops)
+        },
+        |(n, ops)| {
+            let mut policy = Fifo::new(*n);
+            let reference = replay(&mut policy, ops, *n);
+            let candidates = reference.resident.clone();
+            if candidates.is_empty() {
+                return Ok(());
+            }
+            let expected = candidates
+                .iter()
+                .copied()
+                .min_by_key(|&m| (reference.inserted_seq[m], m))
+                .unwrap();
+            let got = policy.victim(&candidates).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "FIFO chose {got}, expected {expected} (seq {:?})",
+                    reference.inserted_seq
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn evicted_models_are_forgotten_on_reinsert() {
+    // FIFO: evict + re-insert moves a model to the back of the queue.
+    let mut fifo = Fifo::new(3);
+    fifo.on_insert(0, 0.0);
+    fifo.on_insert(1, 1.0);
+    fifo.on_insert(2, 2.0);
+    fifo.on_evict(0);
+    fifo.on_insert(0, 3.0);
+    assert_eq!(fifo.victim(&[0, 1, 2]), Some(1), "re-inserted 0 must not stay oldest");
+
+    // LRU: evict + re-insert refreshes recency.
+    let mut lru = Lru::new(3);
+    lru.on_insert(0, 0.0);
+    lru.on_insert(1, 1.0);
+    lru.on_insert(2, 2.0);
+    lru.on_evict(0);
+    lru.on_insert(0, 3.0);
+    assert_eq!(lru.victim(&[0, 1, 2]), Some(1), "re-inserted 0 is most recent");
+}
+
+#[test]
+fn random_policy_deterministic_and_covering() {
+    prop::check(
+        "random-deterministic-covering",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 6);
+            let candidates: Vec<usize> = (0..n).collect();
+            let seed = rng.next_u64();
+            (candidates, seed)
+        },
+        |(candidates, seed)| {
+            let mut a = RandomPolicy::new(*seed);
+            let mut b = RandomPolicy::new(*seed);
+            let mut seen = vec![false; candidates.len()];
+            for _ in 0..256 {
+                let va = a.victim(candidates).ok_or("no victim")?;
+                let vb = b.victim(candidates).ok_or("no victim")?;
+                if va != vb {
+                    return Err(format!("same seed diverged: {va} vs {vb}"));
+                }
+                if !candidates.contains(&va) {
+                    return Err(format!("victim {va} outside candidates"));
+                }
+                seen[candidates.iter().position(|&c| c == va).unwrap()] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err(format!("256 draws missed some candidates: {seen:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn factory_names_and_empty_candidates() {
+    for kind in ALL_KINDS {
+        let mut p = make_policy(kind, 4, 7);
+        assert_eq!(p.name(), kind.name());
+        assert_eq!(p.victim(&[]), None, "{:?} must return None on empty", kind);
+    }
+}

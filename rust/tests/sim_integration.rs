@@ -1,12 +1,15 @@
 //! System-level simulation tests: invariants of the full engine + worker
 //! + cluster composition under randomized workloads (the DES equivalent
-//! of chaos testing), plus the §5.2 memory-footprint check.
+//! of chaos testing), the §5.2 memory-footprint check, and the
+//! engine-invariant oracle swept over every scenario in the
+//! `workload::scenarios` registry.
 
 use computron::config::{LoadDesign, PolicyKind, SystemConfig};
 use computron::model::{catalog, max_shard_bytes};
 use computron::sim::{Arrival, Driver, SimSystem};
 use computron::util::prop;
 use computron::util::rng::Rng;
+use computron::workload::scenarios::{self, ScenarioParams, WorkloadGen};
 use computron::workload::GammaWorkload;
 
 fn run_open(cfg: SystemConfig, arrivals: Vec<Arrival>, preload: &[usize]) -> computron::sim::SimReport {
@@ -162,6 +165,115 @@ fn deterministic_across_identical_runs() {
     assert_eq!(a.requests, b.requests);
     assert_eq!(a.swaps, b.swaps);
     assert_eq!(a.events, b.events);
+}
+
+/// Engine-invariant oracle: run one scenario end-to-end and check every
+/// cross-layer invariant the design guarantees. Zero load-dependency
+/// violations covers "no batch submitted for a non-resident model" (the
+/// worker counts exactly that); zero OOM events covers "no eviction of a
+/// model whose memory is still needed" (an unsafe eviction leaves the
+/// replacement's fill overcommitting the device); completed == arrivals
+/// covers "every arrival eventually completes".
+fn check_scenario_invariants(name: &str, cfg: SystemConfig, params: &ScenarioParams) {
+    let gen = scenarios::by_name(name, params)
+        .unwrap_or_else(|| panic!("scenario '{name}' missing from registry"));
+    let arrivals = gen.generate();
+    let n = arrivals.len();
+    assert!(n > 0, "{name}: empty schedule");
+    let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload(&[0, 1]);
+    let report = sys.run();
+
+    assert_eq!(report.requests.len(), n, "{name}: arrivals lost");
+    assert_eq!(report.violations, 0, "{name}: load-dependency violations");
+    assert_eq!(report.oom_events, 0, "{name}: OOM events");
+    let s = report.swap_stats;
+    assert_eq!(s.loads_started, s.loads_completed, "{name}: loads did not drain");
+    assert_eq!(s.offloads_started, s.offloads_completed, "{name}: offloads did not drain");
+    assert_eq!(report.swaps.len() as u64, s.loads_completed, "{name}: swap records mismatch");
+    for r in &report.requests {
+        assert!(r.batch_submit >= r.arrival, "{name}: submitted before arrival");
+        assert!(r.done > r.batch_submit, "{name}: done before submission");
+    }
+}
+
+#[test]
+fn every_registry_scenario_preserves_engine_invariants() {
+    for &name in scenarios::names() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.scenario = Some(name.to_string());
+        cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let params = ScenarioParams { duration: 8.0, ..ScenarioParams::new(3, 0x0AC1E) };
+        check_scenario_invariants(name, cfg, &params);
+    }
+}
+
+#[test]
+fn scenarios_hold_under_cap_pressure_and_every_policy() {
+    // The harshest residency setting (cap 1 of 3), with EVERY policy
+    // facing EVERY traffic shape (runs are short, so the full cross
+    // product stays cheap).
+    let policies = [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Fifo, PolicyKind::Random];
+    for &name in scenarios::names() {
+        let params = ScenarioParams { duration: 5.0, ..ScenarioParams::new(3, 0xCA9) };
+        let gen = scenarios::by_name(name, &params).unwrap();
+        let arrivals = gen.generate();
+        let n = arrivals.len();
+        for &policy in &policies {
+            let mut cfg = SystemConfig::workload_experiment(3, 1, 8);
+            cfg.engine.policy = policy;
+            cfg.scenario = Some(name.to_string());
+            // preload under cap 1: only model 0.
+            let mut sys = SimSystem::new(cfg, Driver::Open(arrivals.clone())).unwrap();
+            sys.preload(&[0]);
+            let report = sys.run();
+            assert_eq!(report.requests.len(), n, "{name}/{policy:?}: arrivals lost under cap 1");
+            assert_eq!(report.violations, 0, "{name}/{policy:?}: violations under cap 1");
+            assert_eq!(report.oom_events, 0, "{name}/{policy:?}: OOM under cap 1");
+        }
+    }
+}
+
+#[test]
+fn from_scenario_wiring_end_to_end() {
+    // The config -> registry -> simulator wiring used by the CLI and the
+    // scenario-suite bench.
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some("flash-crowd".to_string());
+    let (sys, measure_start) = SimSystem::from_scenario(cfg, 6.0, 0xE2E).unwrap();
+    assert!(measure_start > 0.0);
+    let report = sys.run();
+    assert!(!report.requests.is_empty());
+    assert_eq!(report.violations, 0);
+    assert!(report.requests.iter().any(|r| r.arrival >= measure_start));
+
+    // Default scenario (None -> "uniform") works too.
+    let cfg = SystemConfig::workload_experiment(3, 2, 8);
+    let (sys, _) = SimSystem::from_scenario(cfg, 4.0, 0xE2E).unwrap();
+    assert!(!sys.run().requests.is_empty());
+
+    // Unknown names error instead of silently falling back.
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some("not-a-scenario".to_string());
+    assert!(cfg.validate().is_err(), "validate must reject unknown scenarios");
+    assert!(SimSystem::from_scenario(cfg, 4.0, 1).is_err());
+}
+
+#[test]
+fn scenario_registry_runs_are_deterministic() {
+    for &name in ["zipf", "markov-onoff"].iter() {
+        let run = || {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.scenario = Some(name.to_string());
+            let (sys, _) = SimSystem::from_scenario(cfg, 6.0, 0xD3).unwrap();
+            sys.run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.requests, b.requests, "{name}: nondeterministic requests");
+        assert_eq!(a.swaps, b.swaps, "{name}: nondeterministic swaps");
+        assert_eq!(a.events, b.events, "{name}: nondeterministic event count");
+    }
 }
 
 #[test]

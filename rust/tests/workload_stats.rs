@@ -1,0 +1,250 @@
+//! Statistical tests for the workload generators: configured rates/CVs
+//! are realized within tolerance, Zipf popularity is monotone in rank,
+//! scenario-specific shapes (on/off burstiness, diurnal peaks, flash
+//! crowds) are present, and every generator is deterministic under a
+//! fixed seed.
+
+use computron::util::rng::Rng;
+use computron::workload::scenarios::{
+    self, DiurnalWorkload, FlashCrowdWorkload, MarkovOnOffWorkload, ScenarioParams, WorkloadGen,
+    ZipfWorkload,
+};
+use computron::workload::GammaWorkload;
+
+fn mean_and_cv(gaps: &[f64]) -> (f64, f64) {
+    let n = gaps.len() as f64;
+    let mean = gaps.iter().sum::<f64>() / n;
+    let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / n;
+    (mean, var.sqrt() / mean)
+}
+
+#[test]
+fn gamma_interarrival_mean_and_cv_match_config() {
+    for &(rate, cv) in &[(4.0, 0.25), (4.0, 1.0), (4.0, 4.0)] {
+        let w = GammaWorkload {
+            rates: vec![rate],
+            cv,
+            duration: 8000.0,
+            input_len: 8,
+            warmup: 0,
+            seed: 0x57A7,
+        };
+        let arr = w.generate();
+        let gaps: Vec<f64> = arr.windows(2).map(|p| p[1].at - p[0].at).collect();
+        assert!(gaps.len() > 10_000, "need a large sample, got {}", gaps.len());
+        let (mean, cv_est) = mean_and_cv(&gaps);
+        assert!(
+            (mean - 1.0 / rate).abs() / (1.0 / rate) < 0.10,
+            "cv={cv}: mean gap {mean} vs configured {}",
+            1.0 / rate
+        );
+        assert!(
+            (cv_est - cv).abs() / cv < 0.15,
+            "configured cv={cv}, realized {cv_est}"
+        );
+    }
+}
+
+#[test]
+fn zipf_frequencies_monotone_in_rank() {
+    let params = ScenarioParams {
+        num_models: 5,
+        duration: 600.0,
+        warmup: 0,
+        ..ScenarioParams::new(5, 0x21FF)
+    };
+    let z = ZipfWorkload::new(params);
+    let arr = z.generate();
+    let mut counts = vec![0usize; 5];
+    for a in &arr {
+        counts[a.model] += 1;
+    }
+    assert!(arr.len() > 2_000, "need a large sample, got {}", arr.len());
+    for m in 0..4 {
+        assert!(
+            counts[m] > counts[m + 1],
+            "rank {m} ({}) must outdraw rank {} ({}): {counts:?}",
+            counts[m],
+            m + 1,
+            counts[m + 1]
+        );
+    }
+    // Empirical frequencies track the configured popularity within 15%.
+    let pop = z.popularity();
+    let total = arr.len() as f64;
+    for m in 0..5 {
+        let freq = counts[m] as f64 / total;
+        assert!(
+            (freq - pop[m]).abs() / pop[m] < 0.15,
+            "model {m}: freq {freq} vs popularity {}",
+            pop[m]
+        );
+    }
+}
+
+#[test]
+fn markov_onoff_is_burstier_than_poisson() {
+    let params = ScenarioParams {
+        num_models: 1,
+        duration: 2000.0,
+        warmup: 0,
+        ..ScenarioParams::new(1, 0x0FF0)
+    };
+    let w = MarkovOnOffWorkload::new(params);
+    let arr = w.generate();
+    assert!(arr.len() > 1_000, "need a large sample, got {}", arr.len());
+    let gaps: Vec<f64> = arr.windows(2).map(|p| p[1].at - p[0].at).collect();
+    let (_, cv) = mean_and_cv(&gaps);
+    // On/off modulation makes inter-arrivals overdispersed vs Poisson.
+    assert!(cv > 1.2, "on/off stream should have CV > 1.2, got {cv}");
+    // Long-run rate ≈ rate_on × duty cycle.
+    let realized = arr.len() as f64 / 2000.0;
+    let expected = w.rate_on * w.duty_cycle();
+    assert!(
+        (realized - expected).abs() / expected < 0.15,
+        "realized rate {realized} vs expected {expected}"
+    );
+}
+
+#[test]
+fn diurnal_peak_half_outdraws_trough_half() {
+    let params = ScenarioParams {
+        num_models: 2,
+        duration: 400.0,
+        warmup: 0,
+        ..ScenarioParams::new(2, 0xD1A1)
+    };
+    let d = DiurnalWorkload::new(params);
+    let arr = d.generate();
+    let start = d.measure_start();
+    // sin > 0 over the first half-period, < 0 over the second.
+    let half = start + 200.0;
+    let first = arr.iter().filter(|a| a.at < half).count();
+    let second = arr.len() - first;
+    assert!(
+        first as f64 > second as f64 * 2.0,
+        "peak half ({first}) must clearly outdraw trough half ({second})"
+    );
+    // Mean rate over the whole window stays near base_rate per model.
+    let realized = arr.len() as f64 / (400.0 * 2.0);
+    assert!(
+        (realized - d.base_rate).abs() / d.base_rate < 0.15,
+        "realized per-model rate {realized} vs base {}",
+        d.base_rate
+    );
+}
+
+#[test]
+fn flash_crowd_spikes_the_target_model_only() {
+    let params = ScenarioParams {
+        num_models: 3,
+        duration: 600.0,
+        warmup: 0,
+        ..ScenarioParams::new(3, 0xFC0D)
+    };
+    let f = FlashCrowdWorkload::new(params);
+    let arr = f.generate();
+    let (lo, hi) = f.spike_window();
+    let rate_in = |model: usize, a: f64, b: f64| {
+        arr.iter().filter(|x| x.model == model && x.at >= a && x.at < b).count() as f64 / (b - a)
+    };
+    // The spiking model runs near spike_factor × base inside the window...
+    let spiked = rate_in(0, lo, hi);
+    assert!(
+        spiked > f.base_rate * f.spike_factor * 0.7,
+        "spike rate {spiked} vs expected {}",
+        f.base_rate * f.spike_factor
+    );
+    // ...and near base outside it.
+    let before = rate_in(0, f.measure_start(), lo);
+    assert!(
+        before < f.base_rate * 1.5,
+        "pre-spike rate {before} should sit near base {}",
+        f.base_rate
+    );
+    // Other models never spike.
+    for m in 1..3 {
+        let r = rate_in(m, lo, hi);
+        assert!(
+            r < f.base_rate * 2.0,
+            "model {m} rate {r} in spike window should stay near base"
+        );
+    }
+}
+
+#[test]
+fn all_scenarios_deterministic_under_fixed_seed() {
+    for &name in scenarios::names() {
+        let params = ScenarioParams { duration: 12.0, ..ScenarioParams::new(3, 0xDE7E) };
+        let a = scenarios::by_name(name, &params).unwrap().generate();
+        let b = scenarios::by_name(name, &params).unwrap().generate();
+        assert_eq!(a.len(), b.len(), "{name}: lengths differ across runs");
+        assert!(
+            a.iter().zip(&b).all(|(x, y)| x.at == y.at
+                && x.model == y.model
+                && x.input_len == y.input_len),
+            "{name}: schedules differ across runs with the same seed"
+        );
+
+        let other = ScenarioParams { seed: 0xDE7E + 1, ..params };
+        let c = scenarios::by_name(name, &other).unwrap().generate();
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.at != y.at),
+            "{name}: different seeds must produce different schedules"
+        );
+    }
+}
+
+#[test]
+fn all_scenarios_respect_rate_scale() {
+    // Doubling rate_scale should roughly double measured arrivals for
+    // every registered scenario (warmup excluded).
+    for &name in scenarios::names() {
+        let base = ScenarioParams { duration: 600.0, ..ScenarioParams::new(3, 0x5CA1E) };
+        let double = ScenarioParams { rate_scale: 2.0, ..base.clone() };
+        let measured = |p: &ScenarioParams| {
+            let gen = scenarios::by_name(name, p).unwrap();
+            let start = gen.measure_start();
+            gen.generate().iter().filter(|a| a.at >= start).count() as f64
+        };
+        let n1 = measured(&base);
+        let n2 = measured(&double);
+        let ratio = n2 / n1;
+        assert!(
+            (1.5..2.6).contains(&ratio),
+            "{name}: rate_scale 2.0 gave ratio {ratio} ({n1} -> {n2})"
+        );
+    }
+}
+
+#[test]
+fn scenario_streams_are_independent_per_model() {
+    // Forked per-model streams must not be identical (a classic seeding
+    // bug): model 0 and model 1 arrival times differ for every scenario
+    // that generates per-model streams.
+    let params = ScenarioParams { duration: 60.0, ..ScenarioParams::new(2, 7) };
+    for &name in ["markov-onoff", "diurnal", "flash-crowd"].iter() {
+        let gen = scenarios::by_name(name, &params).unwrap();
+        let arr = gen.generate();
+        let start = gen.measure_start();
+        let m0: Vec<f64> =
+            arr.iter().filter(|a| a.model == 0 && a.at >= start).map(|a| a.at).collect();
+        let m1: Vec<f64> =
+            arr.iter().filter(|a| a.model == 1 && a.at >= start).map(|a| a.at).collect();
+        assert!(!m0.is_empty() && !m1.is_empty(), "{name}: empty per-model stream");
+        assert!(
+            m0.len() != m1.len() || m0.iter().zip(&m1).any(|(a, b)| a != b),
+            "{name}: model streams are clones"
+        );
+    }
+}
+
+#[test]
+fn rng_sanity_for_sampler_reuse() {
+    // The scenario generators lean on exponential(); spot-check its mean
+    // here so a sampler regression fails close to the source.
+    let mut rng = Rng::seeded(99);
+    let n = 100_000;
+    let mean = (0..n).map(|_| rng.exponential(8.0)).sum::<f64>() / n as f64;
+    assert!((mean - 0.125).abs() < 0.005, "exponential mean {mean}");
+}

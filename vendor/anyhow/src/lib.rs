@@ -1,0 +1,182 @@
+//! Offline vendored subset of the `anyhow` API.
+//!
+//! The build environment has no network access to crates.io, so this
+//! path crate provides the (small) slice of anyhow that the repo uses:
+//! `Error`, `Result`, the `anyhow!` / `bail!` / `ensure!` macros, and the
+//! `Context` extension trait. Semantics match upstream for this subset:
+//!
+//! - `Error` wraps a message chain and converts (via a blanket `From`)
+//!   from any `std::error::Error + Send + Sync + 'static`;
+//! - like upstream, `Error` deliberately does NOT implement
+//!   `std::error::Error` itself — that is what makes the blanket `From`
+//!   coherent;
+//! - `.context(..)` / `.with_context(..)` prepend a message, and `{:#}`
+//!   formatting shows the full chain (here: the same string, since the
+//!   chain is pre-rendered at wrap time).
+
+use std::fmt;
+
+/// Error type: a rendered message (chain flattened at construction).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context message (the `Context` trait calls this).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — alias with our `Error` as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "x";
+        let e = anyhow!("bad flag --{name}: {}", 42);
+        assert_eq!(e.to_string(), "bad flag --x: 42");
+        let e2 = anyhow!(String::from("plain"));
+        assert_eq!(e2.to_string(), "plain");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok: {}", 7);
+            Ok(1)
+        }
+        fn g() -> Result<u32> {
+            bail!("stop");
+        }
+        fn h(v: usize) -> Result<()> {
+            ensure!(v > 2);
+            Ok(())
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "not ok: 7");
+        assert_eq!(g().unwrap_err().to_string(), "stop");
+        assert!(h(1).unwrap_err().to_string().contains("v > 2"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("loading {}", "f.json")).unwrap_err();
+        assert!(e.to_string().starts_with("loading f.json: "));
+        let r2: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e2 = r2.context("ctx").unwrap_err();
+        assert!(e2.to_string().starts_with("ctx: "));
+        assert_eq!(format!("{e2:#}"), e2.to_string());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("empty").unwrap_err().to_string(), "empty");
+    }
+}

@@ -1,0 +1,165 @@
+//! Compile-only stub of the `xla` crate (xla-rs style PJRT bindings).
+//!
+//! The real-mode execution path (`runtime::exec`, `serving`) is written
+//! against the PJRT CPU client of the `xla` crate, which links the XLA
+//! C++ runtime and is not available in this offline build environment.
+//! This stub preserves the exact API surface the repo uses so the whole
+//! workspace builds and the simulator/test suite runs; any attempt to
+//! actually execute a computation returns a descriptive error.
+//!
+//! Real-mode tests and examples gate on the artifact manifest
+//! (`artifacts/manifest.json`, produced by `make artifacts`) and skip
+//! when it is absent, so a stubbed runtime never reaches `execute_b`.
+//! Swapping in the real binding is a Cargo.toml one-liner (point the
+//! `xla` path dependency at the actual crate); no source changes needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs: a message string.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: the vendored `xla` crate is a compile-only \
+         stub (run against the real PJRT binding for real-mode execution)"
+    ))
+}
+
+/// Element types accepted by buffer upload / literal download.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Parsed HLO module (stub holds nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub validates that the file exists
+    /// and is readable, which keeps artifact plumbing errors accurate.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading {}: {e}", path.display())))?;
+        Ok(HloModuleProto)
+    }
+}
+
+/// An XLA computation built from a proto.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub holds nothing).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Host literal (stub holds nothing).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(stub_err("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(stub_err("Literal::to_vec"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client. Construction succeeds so environment probes
+    /// (`computron info`) and launch-time validation still run; only
+    /// compilation/execution is stubbed out.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(stub_err("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        assert_eq!(c.device_count(), 1);
+        let comp = XlaComputation::from_proto(&HloModuleProto);
+        assert!(c.compile(&comp).is_err());
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[1], None).is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_reports_path() {
+        let err = HloModuleProto::from_text_file("/nonexistent/stage.hlo").unwrap_err();
+        assert!(err.to_string().contains("/nonexistent/stage.hlo"));
+    }
+
+    #[test]
+    fn execute_reports_stub() {
+        let exe = PjRtLoadedExecutable;
+        let args: Vec<&PjRtBuffer> = Vec::new();
+        let err = exe.execute_b::<&PjRtBuffer>(&args).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
