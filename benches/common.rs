@@ -59,6 +59,7 @@ pub fn run_workload_cell(
     let workload = GammaWorkload::new(rates.to_vec(), cv, seed);
     let arrivals = workload.generate();
     let measure_start = workload.measure_start();
+    let duration = workload.duration;
     let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).expect("config valid");
     // Paper warms up before measuring; start with the first `cap` models
     // resident, as a warm server would be.
@@ -72,6 +73,7 @@ pub fn run_workload_cell(
         cv,
         &report,
         measure_start,
+        duration,
     )
 }
 

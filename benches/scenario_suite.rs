@@ -48,7 +48,7 @@ fn run_cell(name: &str) -> (WorkloadCell, u64, u64) {
     let total_requests = report.requests.len() as u64;
     // -1.0 marks "CV not applicable" for non-Gamma scenarios in reports.
     let cv = scenarios::nominal_cv(name).unwrap_or(-1.0);
-    (WorkloadCell::from_report(name, cv, &report, measure_start), total_requests, events)
+    (WorkloadCell::from_report(name, cv, &report, measure_start, DURATION), total_requests, events)
 }
 
 fn main() {

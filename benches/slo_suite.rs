@@ -1,0 +1,131 @@
+//! SLO suite — sweep every scheduling discipline in
+//! `coordinator::scheduler` across every named workload scenario in
+//! `workload::scenarios` and report the SLO-serving metrics (deadline
+//! attainment, goodput, drop rate) per cell.
+//!
+//! This is the evaluation grid the scheduling subsystem is judged on:
+//! `fcfs` is the paper's engine (the baseline every other discipline is
+//! compared against), `edf` reorders by per-model deadlines,
+//! `swap-aware` amortizes swap costs over packed batches, and `shed`
+//! trades tail latency for a measured drop rate. SLOs are deliberately
+//! non-uniform (model 0 tight, the rest loose) so `edf` actually
+//! diverges from `fcfs`. See EXPERIMENTS.md §SLO suite for how to read
+//! the numbers against Tab 1 / Tab 2.
+//!
+//! ```bash
+//! cargo bench --bench slo_suite
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use computron::config::{SchedulerKind, SystemConfig};
+use computron::coordinator::scheduler;
+use computron::metrics::WorkloadCell;
+use computron::sim::{SimReport, SimSystem};
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+use computron::workload::scenarios;
+
+const DURATION: f64 = 20.0;
+const SEED: u64 = 0x510_517E;
+/// Model 0 gets a tight SLO, the rest a loose one (seconds).
+const TIGHT_SLO: f64 = 1.0;
+const LOOSE_SLO: f64 = 3.0;
+
+fn run_cell(scenario: &str, kind: SchedulerKind) -> (WorkloadCell, SimReport) {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some(scenario.to_string());
+    cfg.engine.scheduler = kind;
+    let mut slos = vec![LOOSE_SLO; cfg.num_models];
+    slos[0] = TIGHT_SLO;
+    cfg.slos = Some(slos);
+    let (sys, measure_start) =
+        SimSystem::from_scenario(cfg, DURATION, SEED).expect("scenario resolves");
+    let report = sys.run();
+
+    // Engine-invariant oracle per cell (same as scenario_suite).
+    let tag = format!("{scenario}/{}", kind.name());
+    assert_eq!(report.violations, 0, "{tag}: load-dependency violations");
+    assert_eq!(report.oom_events, 0, "{tag}: OOM events");
+    assert_eq!(
+        report.swap_stats.loads_started, report.swap_stats.loads_completed,
+        "{tag}: loads did not drain"
+    );
+    if kind != SchedulerKind::Shed {
+        assert!(report.drops.is_empty(), "{tag}: only shed may drop requests");
+    }
+
+    let cv = scenarios::nominal_cv(scenario).unwrap_or(-1.0);
+    (WorkloadCell::from_report(scenario, cv, &report, measure_start, DURATION), report)
+}
+
+fn main() {
+    section(&format!(
+        "SLO suite: 3 models (SLOs {TIGHT_SLO}s/{LOOSE_SLO}s/{LOOSE_SLO}s), cap 2, \
+         max batch 8, TP=2 PP=2, {DURATION} s per cell"
+    ));
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cells_json: Vec<Json> = Vec::new();
+    for &scenario in scenarios::names() {
+        // Total arrivals are scheduler-independent (same seed, same
+        // generator): completions + drops must cover them identically.
+        let mut totals: Vec<usize> = Vec::new();
+        for &name in scheduler::names() {
+            let kind = SchedulerKind::parse(name).expect("registry name parses");
+            let (cell, report) = run_cell(scenario, kind);
+            totals.push(report.requests.len() + report.drops.len());
+            rows.push(vec![
+                scenario.to_string(),
+                name.to_string(),
+                cell.requests.to_string(),
+                common::fmt_s(cell.mean_latency),
+                common::fmt_s(cell.summary.p99),
+                format!("{:.1}%", 100.0 * cell.attainment),
+                format!("{:.2}", cell.goodput),
+                cell.drops.to_string(),
+                format!("{:.1}%", 100.0 * cell.drop_rate),
+            ]);
+            let mut j = cell.to_json();
+            j.set("scenario", scenario.into());
+            j.set("scheduler", name.into());
+            cells_json.push(j);
+        }
+        assert!(
+            totals.windows(2).all(|w| w[0] == w[1]),
+            "{scenario}: completions+drops must equal total arrivals for every \
+             scheduler, got {totals:?}"
+        );
+    }
+
+    table(
+        &[
+            "scenario",
+            "scheduler",
+            "served",
+            "mean (s)",
+            "p99 (s)",
+            "attainment",
+            "goodput (r/s)",
+            "drops",
+            "drop rate",
+        ],
+        &rows,
+    );
+    println!(
+        "\ninvariants held on every scenario x scheduler cell: no dependency \
+         violations, no OOM, swaps drained, every arrival served or (shed only) dropped"
+    );
+
+    common::save_report(
+        "slo_suite",
+        Json::from_pairs(vec![
+            ("experiment", "slo_suite".into()),
+            ("duration", DURATION.into()),
+            ("tight_slo", TIGHT_SLO.into()),
+            ("loose_slo", LOOSE_SLO.into()),
+            ("cells", Json::Arr(cells_json)),
+        ]),
+    );
+}

@@ -65,7 +65,7 @@ fn main() {
     );
     // Paper observes ~2x at its saturation point; our calibrated service
     // times sit lower relative to offered load, so the growth is smaller
-    // but must still be clearly present (see EXPERIMENTS.md §Tab2).
+    // but must still be clearly present (see EXPERIMENTS.md §Calibration).
     assert!(
         six_low.mean_latency > three_low.mean_latency * 1.15,
         "low-CV latencies must grow when doubling models: {} -> {}",

@@ -61,6 +61,7 @@ fn workload_grid(num_models: usize, cap: usize, batch: usize, skews: &[Vec<f64>]
                 cv,
                 &r,
                 w.measure_start(),
+                w.duration,
             ));
         }
     }

@@ -1,4 +1,4 @@
-//! End-to-end driver (the DESIGN.md §E2E deliverable): serve THREE real
+//! End-to-end driver (the EXPERIMENTS.md §E2E deliverable): serve THREE real
 //! opt-mini models (~25M parameters each) on the full stack — rust
 //! engine/worker threads, TP=2 × PP=2 grid, PJRT execution of the
 //! AOT-compiled jax+pallas stages — under a bursty multi-model workload

@@ -2,8 +2,8 @@
 
 The paper's serving hot spot is the transformer forward pass; on the
 CUDA testbed this is cuBLAS + fused attention kernels. Per the hardware
-adaptation rule (DESIGN.md §2) we do not port CUDA idioms — the kernel is
-written TPU-style:
+adaptation rule we do not port CUDA idioms — the kernel is written
+TPU-style:
 
 - the grid iterates (batch·heads, query blocks); each program owns a
   (block_q × head_dim) query tile in VMEM,

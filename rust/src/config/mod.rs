@@ -59,6 +59,45 @@ impl PolicyKind {
     }
 }
 
+/// Scheduling / admission-control discipline selector (see
+/// `coordinator::scheduler` for the registry and DESIGN.md §5 for the
+/// semantics). `Fcfs` is the paper's oldest-queue-head discipline and the
+/// default; the others add the SLO-aware serving axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Oldest queue head first (the paper's §3.1 discipline).
+    Fcfs,
+    /// Earliest deadline first over per-model SLOs.
+    Edf,
+    /// Oldest head first, but swap costs are amortized over the batch a
+    /// cold model could pack before it jumps ahead of warm queues.
+    SwapAware,
+    /// FCFS plus admission control: requests whose deadline is provably
+    /// infeasible are dropped instead of queued.
+    Shed,
+}
+
+impl SchedulerKind {
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Some(SchedulerKind::Fcfs),
+            "edf" => Some(SchedulerKind::Edf),
+            "swap-aware" => Some(SchedulerKind::SwapAware),
+            "shed" => Some(SchedulerKind::Shed),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Fcfs => "fcfs",
+            SchedulerKind::Edf => "edf",
+            SchedulerKind::SwapAware => "swap-aware",
+            SchedulerKind::Shed => "shed",
+        }
+    }
+}
+
 /// How load entries are delivered to workers — the §3.2 design space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LoadDesign {
@@ -160,6 +199,9 @@ pub struct EngineConfig {
     /// next model into a free residency slot. Off by default (paper
     /// behaviour); ablated by `benches/ablation_prefetch.rs`.
     pub prefetch: bool,
+    /// Scheduling / admission discipline (DESIGN.md §5). `Fcfs`
+    /// reproduces the paper's engine decision-for-decision.
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for EngineConfig {
@@ -170,6 +212,7 @@ impl Default for EngineConfig {
             policy: PolicyKind::Lru,
             load_design: LoadDesign::AsyncPipelined,
             prefetch: false,
+            scheduler: SchedulerKind::Fcfs,
         }
     }
 }
@@ -212,6 +255,11 @@ pub struct SystemConfig {
     /// caller supplies arrivals itself (default "uniform" when driven
     /// through the scenario path).
     pub scenario: Option<String>,
+    /// Per-model latency SLO targets in seconds (deadline = arrival +
+    /// SLO), length `num_models`. `None` means no deadlines (every SLO is
+    /// effectively infinite): `edf` then degenerates to `fcfs` and `shed`
+    /// never drops.
+    pub slos: Option<Vec<f64>>,
 }
 
 #[derive(Debug)]
@@ -223,6 +271,8 @@ pub enum ConfigError {
     ZeroBatch,
     CapExceedsMemory { cap: usize, shard_bytes: usize, gpu_mem: usize },
     UnknownScenario(String),
+    UnknownScheduler(String),
+    BadSlos(String),
     Json(String),
 }
 
@@ -243,6 +293,11 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "unknown scenario '{s}' (see workload::scenarios::names())"
             ),
+            ConfigError::UnknownScheduler(s) => write!(
+                f,
+                "unknown scheduler '{s}' (see coordinator::scheduler::names())"
+            ),
+            ConfigError::BadSlos(m) => write!(f, "bad slos: {m}"),
             ConfigError::Json(m) => write!(f, "{m}"),
         }
     }
@@ -277,6 +332,7 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
+            slos: None,
         }
     }
 
@@ -293,6 +349,7 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
+            slos: None,
         }
     }
 
@@ -315,6 +372,20 @@ impl SystemConfig {
         if let Some(name) = &self.scenario {
             if !crate::workload::scenarios::is_known(name) {
                 return Err(ConfigError::UnknownScenario(name.clone()));
+            }
+        }
+        if let Some(slos) = &self.slos {
+            if slos.len() != self.num_models {
+                return Err(ConfigError::BadSlos(format!(
+                    "expected {} entries (one per model), got {}",
+                    self.num_models,
+                    slos.len()
+                )));
+            }
+            if let Some(bad) = slos.iter().find(|s| !(s.is_finite() && **s > 0.0)) {
+                return Err(ConfigError::BadSlos(format!(
+                    "SLO targets must be finite and positive, got {bad}"
+                )));
             }
         }
         // `cap` shards must fit in device memory. (Transfers are
@@ -346,6 +417,7 @@ impl SystemConfig {
             ("resident_cap", self.engine.resident_cap.into()),
             ("policy", self.engine.policy.name().into()),
             ("load_design", self.engine.load_design.name().into()),
+            ("scheduler", self.engine.scheduler.name().into()),
             ("prefetch", self.engine.prefetch.into()),
             ("gpu_mem", self.hardware.gpu_mem.into()),
             ("link_alpha", self.hardware.link.alpha.into()),
@@ -356,6 +428,9 @@ impl SystemConfig {
         ]);
         if let Some(s) = &self.scenario {
             j.set("scenario", s.as_str().into());
+        }
+        if let Some(slos) = &self.slos {
+            j.set("slos", Json::Arr(slos.iter().map(|&s| s.into()).collect()));
         }
         j
     }
@@ -372,9 +447,21 @@ impl SystemConfig {
             hardware: HardwareConfig::default(),
             engine: EngineConfig::default(),
             scenario: None,
+            slos: None,
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
+        }
+        // SLO targets: a per-model "slos" array, or the "slo" scalar
+        // shorthand applied uniformly to every model.
+        if let Some(arr) = j.get("slos").and_then(Json::as_arr) {
+            let slos: Vec<f64> = arr
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| e("slos entries must be numbers".into())))
+                .collect::<Result<_, _>>()?;
+            cfg.slos = Some(slos);
+        } else if let Some(v) = j.get("slo").and_then(Json::as_f64) {
+            cfg.slos = Some(vec![v; cfg.num_models]);
         }
         if let Some(v) = j.get("max_batch_size").and_then(Json::as_usize) {
             cfg.engine.max_batch_size = v;
@@ -389,6 +476,10 @@ impl SystemConfig {
         if let Some(s) = j.get("load_design").and_then(Json::as_str) {
             cfg.engine.load_design =
                 LoadDesign::parse(s).ok_or_else(|| e(format!("unknown load_design '{s}'")))?;
+        }
+        if let Some(s) = j.get("scheduler").and_then(Json::as_str) {
+            cfg.engine.scheduler = SchedulerKind::parse(s)
+                .ok_or_else(|| ConfigError::UnknownScheduler(s.to_string()))?;
         }
         if let Some(v) = j.get("prefetch").and_then(Json::as_bool) {
             cfg.engine.prefetch = v;
@@ -500,12 +591,22 @@ mod tests {
     #[test]
     fn shipped_preset_files_load() {
         let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
-        for name in ["swap_tp2_pp2.json", "workload_3model.json", "workload_6model.json"] {
+        for name in [
+            "swap_tp2_pp2.json",
+            "workload_3model.json",
+            "workload_6model.json",
+            "slo_3model.json",
+        ] {
             let cfg = SystemConfig::from_file(&dir.join(name))
                 .unwrap_or_else(|e| panic!("{name}: {e}"));
             cfg.validate().unwrap();
             assert_eq!(cfg.model, "opt-13b");
         }
+        // The SLO preset exercises the scheduler + slos fields end-to-end.
+        let cfg = SystemConfig::from_file(&dir.join("slo_3model.json")).unwrap();
+        assert_eq!(cfg.engine.scheduler, SchedulerKind::Edf);
+        assert_eq!(cfg.slos.as_deref(), Some(&[1.0, 3.0, 3.0][..]));
+        assert_eq!(cfg.scenario.as_deref(), Some("bursty"));
     }
 
     #[test]
@@ -524,6 +625,62 @@ mod tests {
         let cfg = SystemConfig::workload_experiment(3, 2, 8);
         let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
         assert!(back.scenario.is_none());
+    }
+
+    #[test]
+    fn scheduler_field_roundtrips_and_validates() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.engine.scheduler = SchedulerKind::Edf;
+        cfg.slos = Some(vec![1.0, 2.0, 3.0]);
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine.scheduler, SchedulerKind::Edf);
+        assert_eq!(back.slos.as_deref(), Some(&[1.0, 2.0, 3.0][..]));
+
+        // Unknown scheduler name rejected at JSON parse time.
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":2,"tp":2,"pp":2,"scheduler":"sjf"}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            SystemConfig::from_json(&j),
+            Err(ConfigError::UnknownScheduler(_))
+        ));
+
+        // Scalar "slo" shorthand expands per model.
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,"scheduler":"shed","slo":1.5}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.engine.scheduler, SchedulerKind::Shed);
+        assert_eq!(cfg.slos.as_deref(), Some(&[1.5, 1.5, 1.5][..]));
+    }
+
+    #[test]
+    fn bad_slos_rejected() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.slos = Some(vec![1.0, 2.0]); // wrong length
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.slos = Some(vec![1.0, -2.0, 1.0]); // non-positive
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.slos = Some(vec![1.0, f64::NAN, 1.0]); // non-finite
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
+    }
+
+    #[test]
+    fn scheduler_kind_parse_name_roundtrip() {
+        for kind in [
+            SchedulerKind::Fcfs,
+            SchedulerKind::Edf,
+            SchedulerKind::SwapAware,
+            SchedulerKind::Shed,
+        ] {
+            assert_eq!(SchedulerKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SchedulerKind::parse("nope"), None);
     }
 
     #[test]

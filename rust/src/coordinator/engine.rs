@@ -1,5 +1,6 @@
-//! The centralized engine (§3.1–§3.2): per-model queues, oldest-first
-//! batch scheduling, swap decisions, and load-dependency enforcement.
+//! The centralized engine (§3.1–§3.2): per-model queues, pluggable batch
+//! scheduling (default: the paper's oldest-first discipline), swap
+//! decisions, admission control, and load-dependency enforcement.
 //!
 //! The engine is a *passive* state machine: backends (the discrete-event
 //! simulator in `sim/`, the thread-based real runtime in `serving/`) feed
@@ -24,6 +25,7 @@ use crate::coordinator::entry::{
 };
 use crate::coordinator::prefetch::MarkovPredictor;
 use crate::coordinator::queues::RequestQueues;
+use crate::coordinator::scheduler::{self, Candidate, SchedCtx, Scheduler};
 use crate::coordinator::swap::{Residency, SwapManager, SwapPlan, SwapStats};
 
 /// Completion record for one request (drives every latency table/CDF).
@@ -32,6 +34,9 @@ pub struct RequestRecord {
     pub id: RequestId,
     pub model: ModelId,
     pub arrival: f64,
+    /// Latency deadline (`arrival + SLO`); `f64::INFINITY` when the
+    /// model has no SLO target.
+    pub deadline: f64,
     /// When the request's batch entry was submitted to workers.
     pub batch_submit: f64,
     /// When the batch's output returned to the engine.
@@ -49,6 +54,27 @@ impl RequestRecord {
     pub fn queue_time(&self) -> f64 {
         self.batch_submit - self.arrival
     }
+
+    /// True iff the request completed within its SLO deadline.
+    pub fn attained(&self) -> bool {
+        self.done <= self.deadline
+    }
+}
+
+/// Record of one request rejected or shed by admission control (only the
+/// `shed` scheduler produces these).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DropRecord {
+    pub id: RequestId,
+    pub model: ModelId,
+    pub arrival: f64,
+    pub deadline: f64,
+    /// When the drop decision was made (== `arrival` for rejections at
+    /// admission, later for requests shed while queued).
+    pub dropped_at: f64,
+    /// The model's residency state at the drop decision — determines
+    /// which lower bounds made the deadline provably infeasible.
+    pub residency: Residency,
 }
 
 /// Completion record for one swap (offload+load pair or bare load),
@@ -96,6 +122,16 @@ pub struct Engine {
     max_inflight_per_model: usize,
     queues: RequestQueues,
     swap: SwapManager,
+    /// Scheduling / admission discipline (DESIGN.md §5); built from
+    /// `cfg.scheduler` via the `coordinator::scheduler` registry.
+    scheduler: Box<dyn Scheduler>,
+    /// Per-model SLO target in seconds (deadline = arrival + SLO);
+    /// `f64::INFINITY` means no deadline.
+    slos: Vec<f64>,
+    /// Cost-model constants for SLO-aware disciplines (see `SchedCtx`).
+    swap_cost: f64,
+    swap_floor: f64,
+    exec_floor: f64,
     inflight_batches: HashMap<EntryId, BatchEntry>,
     inflight_per_model: Vec<usize>,
     inflight_loads: HashMap<EntryId, InflightLoad>,
@@ -104,6 +140,7 @@ pub struct Engine {
     next_request: RequestId,
     outbox: Vec<Entry>,
     completed: Vec<RequestRecord>,
+    dropped: Vec<DropRecord>,
     swap_records: Vec<SwapRecord>,
     batch_submit_times: HashMap<EntryId, f64>,
     predictor: MarkovPredictor,
@@ -118,6 +155,11 @@ impl Engine {
             max_inflight_per_model: pp.max(1),
             queues: RequestQueues::new(num_models),
             swap: SwapManager::new(num_models, cfg.resident_cap, cfg.policy, seed),
+            scheduler: scheduler::make(cfg.scheduler),
+            slos: vec![f64::INFINITY; num_models],
+            swap_cost: 0.0,
+            swap_floor: 0.0,
+            exec_floor: 0.0,
             inflight_batches: HashMap::new(),
             inflight_per_model: vec![0; num_models],
             inflight_loads: HashMap::new(),
@@ -126,6 +168,7 @@ impl Engine {
             next_request: 0,
             outbox: Vec::new(),
             completed: Vec::new(),
+            dropped: Vec::new(),
             swap_records: Vec::new(),
             batch_submit_times: HashMap::new(),
             predictor: MarkovPredictor::new(num_models),
@@ -139,6 +182,47 @@ impl Engine {
         self.max_inflight_per_model = n;
     }
 
+    /// Set per-model SLO targets in seconds (deadline = arrival + SLO).
+    /// Entries must be positive; use `f64::INFINITY` for "no SLO".
+    pub fn set_slos(&mut self, slos: &[f64]) {
+        assert_eq!(slos.len(), self.slos.len(), "one SLO per model");
+        assert!(slos.iter().all(|s| *s > 0.0), "SLO targets must be positive");
+        self.slos.copy_from_slice(slos);
+    }
+
+    /// Provide the scheduler's cost model: `swap_cost` is an *estimate*
+    /// of one swap-in's latency (drives `swap-aware` amortization);
+    /// `swap_floor` and `exec_floor` are *lower bounds* on a cold load
+    /// and on batch-submit→completion time (drive `shed`'s provable
+    /// infeasibility test). All default to zero, which disables
+    /// amortization and makes shedding maximally conservative.
+    pub fn set_cost_model(&mut self, swap_cost: f64, swap_floor: f64, exec_floor: f64) {
+        assert!(swap_cost >= 0.0 && swap_floor >= 0.0 && exec_floor >= 0.0);
+        self.swap_cost = swap_cost;
+        self.swap_floor = swap_floor;
+        self.exec_floor = exec_floor;
+    }
+
+    /// The scheduling discipline in effect.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Deadline for a request for `model` arriving at `arrival`.
+    pub fn deadline_for(&self, model: ModelId, arrival: f64) -> f64 {
+        arrival + self.slos[model]
+    }
+
+    fn sched_ctx(&self, now: f64) -> SchedCtx {
+        SchedCtx {
+            now,
+            max_batch_size: self.cfg.max_batch_size,
+            swap_cost: self.swap_cost,
+            swap_floor: self.swap_floor,
+            exec_floor: self.exec_floor,
+        }
+    }
+
     /// Pre-warm initial residency (experiments start with some models
     /// loaded; counts against the cap).
     pub fn force_resident(&mut self, model: ModelId, now: f64) {
@@ -147,11 +231,31 @@ impl Engine {
 
     // ----- inputs -----
 
-    /// A client request arrived. Returns its id. Call `drain_outbox` after.
+    /// A client request arrived. Returns its id. Call `drain_outbox`
+    /// after. Under the `shed` scheduler a provably deadline-infeasible
+    /// request is rejected instead of queued: it gets a `DropRecord`
+    /// (see `take_dropped`) and never a `RequestRecord`.
     pub fn on_request(&mut self, now: f64, model: ModelId, input_len: usize) -> RequestId {
         let id = self.next_request;
         self.next_request += 1;
+        // The predictor observes every arrival, including ones shed below:
+        // rejected traffic is still demand, and prefetching its model is
+        // exactly what can make the *next* request feasible again.
         self.predictor.observe(model);
+        let deadline = self.deadline_for(model, now);
+        if self.scheduler.sheds()
+            && !self.scheduler.admit(&self.sched_ctx(now), deadline, self.swap.state(model))
+        {
+            self.dropped.push(DropRecord {
+                id,
+                model,
+                arrival: now,
+                deadline,
+                dropped_at: now,
+                residency: self.swap.state(model),
+            });
+            return id;
+        }
         self.queues.push(Request { id, model, arrival: now, input_len });
         self.pump(now);
         if self.cfg.prefetch {
@@ -204,6 +308,7 @@ impl Engine {
                 id: req.id,
                 model: req.model,
                 arrival: req.arrival,
+                deadline: self.deadline_for(req.model, req.arrival),
                 batch_submit: submit,
                 done: now,
                 batch_size: batch.batch_size(),
@@ -256,6 +361,17 @@ impl Engine {
         std::mem::take(&mut self.completed)
     }
 
+    /// Requests dropped by admission control (drained).
+    pub fn take_dropped(&mut self) -> Vec<DropRecord> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    /// Total drops recorded so far but not yet drained (lets backends
+    /// detect drops caused by the call they just made).
+    pub fn dropped_count(&self) -> usize {
+        self.dropped.len()
+    }
+
     /// Completed swap records (drained).
     pub fn take_swap_records(&mut self) -> Vec<SwapRecord> {
         std::mem::take(&mut self.swap_records)
@@ -284,30 +400,85 @@ impl Engine {
 
     // ----- scheduling core -----
 
-    /// Drain every schedulable queue, visiting models strictly in
-    /// oldest-queue-head order (the paper's scheduling key). Two rules
-    /// beyond the paper's prose, both needed for liveness:
+    /// Shed queued heads whose deadline became provably infeasible while
+    /// they waited (no-op for non-shedding schedulers). Only heads need
+    /// checking: under a per-model SLO deeper requests have later
+    /// deadlines, so they are never *more* infeasible than their head.
+    fn shed_stale_heads(&mut self, now: f64) {
+        if !self.scheduler.sheds() {
+            return;
+        }
+        let ctx = self.sched_ctx(now);
+        for model in self.queues.nonempty_models() {
+            while let Some(arrival) = self.queues.head(model).map(|r| r.arrival) {
+                let deadline = self.deadline_for(model, arrival);
+                let residency = self.swap.state(model);
+                if !self.scheduler.drop_queued(&ctx, deadline, residency) {
+                    break;
+                }
+                let req = self.queues.pop_head(model).unwrap();
+                self.dropped.push(DropRecord {
+                    id: req.id,
+                    model,
+                    arrival: req.arrival,
+                    deadline,
+                    dropped_at: now,
+                    residency,
+                });
+            }
+        }
+    }
+
+    /// Drain every schedulable queue, visiting models in the order the
+    /// configured `Scheduler` ranks them (the default `fcfs` discipline
+    /// is the paper's strict oldest-queue-head order). Two rules beyond
+    /// the paper's prose, shared by every discipline:
     ///
     /// - a model whose swap-in is **Blocked** (every potential victim has
-    ///   in-flight batches) stalls all *younger* queues — otherwise a hot
-    ///   model could be re-batched forever and the blocked model's victim
-    ///   would never drain (starvation under skewed rates, which §5.2
-    ///   shows Computron tolerates);
-    /// - models that are merely **Loading** do NOT stall younger queues —
-    ///   that concurrency is the entire point of the async load-entry
-    ///   design (§3.2, Fig 4).
+    ///   in-flight batches) stalls all *lower-priority* queues — otherwise
+    ///   a hot model could be re-batched forever and the blocked model's
+    ///   victim would never drain (starvation under skewed rates, which
+    ///   §5.2 shows Computron tolerates);
+    /// - models that are merely **Loading** do NOT stall lower-priority
+    ///   queues — that concurrency is the entire point of the async
+    ///   load-entry design (§3.2, Fig 4).
+    ///
+    /// The stall only shields queues the discipline ranks *below* the
+    /// blocked model, so its starvation-freedom guarantee is only as
+    /// strong as the rank key's aging. Under `fcfs` and `swap-aware` the
+    /// key grows with arrival time, so a blocked model eventually
+    /// outranks all fresh traffic and stalls it until its victim drains.
+    /// Under `edf` a model with a much looser (or absent) SLO can be
+    /// starved for as long as tighter-deadline queues stay saturated —
+    /// the textbook EDF overload behaviour, documented in DESIGN.md §5;
+    /// pair `edf` with `shed`-style admission or finite SLOs on every
+    /// model when starvation matters.
     fn pump(&mut self, now: f64) {
         loop {
             let mut progressed = false;
-            // Snapshot of models with queued work, oldest head first.
-            let mut heads: Vec<(f64, ModelId)> = self
+            self.shed_stale_heads(now);
+            // Snapshot of models with queued work, ranked by the
+            // scheduling discipline (fcfs: oldest head first).
+            let ctx = self.sched_ctx(now);
+            let mut candidates: Vec<Candidate> = self
                 .queues
                 .nonempty_models()
                 .into_iter()
-                .map(|m| (self.queues.head_arrival(m).unwrap(), m))
+                .map(|m| {
+                    let head_arrival = self.queues.head_arrival(m).unwrap();
+                    Candidate {
+                        model: m,
+                        head_arrival,
+                        head_deadline: self.deadline_for(m, head_arrival),
+                        queue_len: self.queues.len(m),
+                        residency: self.swap.state(m),
+                        inflight: self.inflight_per_model[m],
+                    }
+                })
                 .collect();
-            heads.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-            'scan: for &(_, model) in &heads {
+            self.scheduler.order(&ctx, &mut candidates);
+            'scan: for c in &candidates {
+                let model = c.model;
                 match self.swap.state(model) {
                     Residency::Resident => {
                         if self.inflight_per_model[model] < self.max_inflight_per_model {
@@ -429,6 +600,7 @@ mod tests {
             policy: PolicyKind::Lru,
             load_design: crate::config::LoadDesign::AsyncPipelined,
             prefetch: false,
+            scheduler: crate::config::SchedulerKind::Fcfs,
         }
     }
 
@@ -674,6 +846,158 @@ mod tests {
         }
         assert_eq!(e.take_swap_records().len(), swaps);
         assert_eq!(e.swap_stats().loads_completed as usize, swaps);
+    }
+
+    fn cfg_with_scheduler(cap: usize, max_batch: usize, s: crate::config::SchedulerKind) -> EngineConfig {
+        EngineConfig { scheduler: s, ..cfg(cap, max_batch) }
+    }
+
+    #[test]
+    fn records_carry_deadlines_and_attainment() {
+        let mut e = engine_for(2, 1, 1, cfg(2, 8));
+        e.set_slos(&[1.0, f64::INFINITY]);
+        e.force_resident(0, 0.0);
+        e.force_resident(1, 0.0);
+        e.on_request(0.0, 0, 4);
+        e.on_request(0.0, 1, 4);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 2);
+        // Model 0 finishes past its 1 s SLO; model 1 has no deadline.
+        e.on_batch_done(2.0, out[0].id());
+        e.on_batch_done(2.0, out[1].id());
+        let recs = e.take_completed();
+        let r0 = recs.iter().find(|r| r.model == 0).unwrap();
+        let r1 = recs.iter().find(|r| r.model == 1).unwrap();
+        assert_eq!(r0.deadline, 1.0);
+        assert!(!r0.attained());
+        assert_eq!(r1.deadline, f64::INFINITY);
+        assert!(r1.attained());
+    }
+
+    /// Build the one genuine choice point the engine has: cap 1, model 0
+    /// resident and busy, model 1's (older) swap-in blocked behind it,
+    /// plus a younger queued request for model 0. When model 0's batch
+    /// completes, the scheduler decides between re-batching model 0 and
+    /// starting model 1's swap. Returns the entries emitted at that pump.
+    fn choice_point(kind: crate::config::SchedulerKind, slos: &[f64], cost: f64) -> Vec<Entry> {
+        let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 8, kind));
+        e.set_slos(slos);
+        e.set_cost_model(cost, 0.0, 0.0);
+        e.force_resident(0, 0.0);
+        e.on_request(0.0, 0, 4);
+        let busy = e.drain_outbox()[0].id();
+        e.on_request(0.1, 1, 4); // older head, needs a swap (blocked)
+        e.on_request(0.2, 0, 4); // younger head for the warm model
+        assert!(e.drain_outbox().is_empty());
+        e.on_batch_done(0.5, busy);
+        e.drain_outbox()
+    }
+
+    #[test]
+    fn edf_serves_tighter_deadline_first() {
+        use crate::config::SchedulerKind;
+        // Model 0's queued request has the tighter deadline (0.2 + 1.0)
+        // vs model 1's (0.1 + 100.0): EDF re-batches model 0; FCFS starts
+        // model 1's swap (older head).
+        let edf = choice_point(SchedulerKind::Edf, &[1.0, 100.0], 0.0);
+        assert_eq!(edf.len(), 1, "EDF emits one batch, got {edf:?}");
+        assert!(!edf[0].is_load());
+        assert_eq!(edf[0].model(), 0);
+
+        let fcfs = choice_point(SchedulerKind::Fcfs, &[1.0, 100.0], 0.0);
+        assert_eq!(fcfs.len(), 2, "FCFS starts the swap, got {fcfs:?}");
+        assert!(fcfs.iter().all(Entry::is_load));
+
+        // With equal SLOs the deadline order equals the arrival order:
+        // EDF degenerates to FCFS.
+        let edf_eq = choice_point(SchedulerKind::Edf, &[5.0, 5.0], 0.0);
+        assert_eq!(edf_eq.len(), 2);
+        assert!(edf_eq.iter().all(Entry::is_load));
+    }
+
+    #[test]
+    fn swap_aware_defers_unamortized_swap() {
+        use crate::config::SchedulerKind;
+        // Swap cost 0.4 s amortized over model 1's single queued request
+        // pushes its effective key past model 0's head: the warm model is
+        // re-batched first.
+        let out = choice_point(SchedulerKind::SwapAware, &[f64::INFINITY; 2], 0.4);
+        assert_eq!(out.len(), 1, "swap-aware re-batches the warm model, got {out:?}");
+        assert_eq!(out[0].model(), 0);
+        // Zero swap cost: identical to FCFS (swap starts).
+        let out = choice_point(SchedulerKind::SwapAware, &[f64::INFINITY; 2], 0.0);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(Entry::is_load));
+    }
+
+    #[test]
+    fn shed_rejects_provably_infeasible_at_admission() {
+        use crate::config::SchedulerKind;
+        let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 8, SchedulerKind::Shed));
+        // Cold load lower bound 0.75 s, exec floor 0.03 s.
+        e.set_cost_model(0.8, 0.75, 0.03);
+        e.set_slos(&[0.5, 2.0]);
+        e.force_resident(1, 0.0);
+        // Model 0 is offloaded: 0.75 + 0.03 > 0.5 — provably infeasible.
+        let id = e.on_request(0.0, 0, 4);
+        assert!(e.drain_outbox().is_empty(), "rejected request must not schedule");
+        let drops = e.take_dropped();
+        assert_eq!(drops.len(), 1);
+        assert_eq!(drops[0].id, id);
+        assert_eq!(drops[0].model, 0);
+        assert_eq!(drops[0].deadline, 0.5);
+        assert_eq!(drops[0].dropped_at, 0.0);
+        assert_eq!(drops[0].residency, Residency::Offloaded);
+        // Model 1 is resident with a feasible SLO: admitted and served.
+        e.on_request(0.0, 1, 4);
+        assert_eq!(e.drain_outbox().len(), 1);
+    }
+
+    #[test]
+    fn shed_drops_heads_that_go_stale_in_queue() {
+        use crate::config::SchedulerKind;
+        let mut e = engine_for(1, 1, 1, cfg_with_scheduler(1, 8, SchedulerKind::Shed));
+        e.set_slos(&[0.5]);
+        e.force_resident(0, 0.0);
+        e.set_max_inflight_per_model(1);
+        // First request goes out; second queues behind it (feasible now).
+        e.on_request(0.0, 0, 4);
+        let busy = e.drain_outbox()[0].id();
+        e.on_request(0.1, 0, 4); // deadline 0.6
+        assert!(e.drain_outbox().is_empty());
+        assert_eq!(e.queued(0), 1);
+        // The batch completes long after the queued deadline: the head is
+        // shed instead of submitted.
+        e.on_batch_done(1.0, busy);
+        assert!(e.drain_outbox().is_empty(), "stale head must not be batched");
+        let drops = e.take_dropped();
+        assert_eq!(drops.len(), 1);
+        assert_eq!(drops[0].deadline, 0.6);
+        assert_eq!(drops[0].dropped_at, 1.0);
+        assert_eq!(e.queued(0), 0);
+        // The completed first request is still recorded normally.
+        assert_eq!(e.take_completed().len(), 1);
+    }
+
+    #[test]
+    fn shed_without_slos_never_drops() {
+        use crate::config::SchedulerKind;
+        let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 4, SchedulerKind::Shed));
+        e.set_cost_model(0.8, 0.75, 0.03);
+        e.force_resident(0, 0.0);
+        let mut now = 0.0;
+        for i in 0..8 {
+            e.on_request(now, i % 2, 4);
+            now += 0.5;
+            // Complete everything in flight to keep the run moving.
+            for entry in e.drain_outbox() {
+                match entry {
+                    Entry::Batch(b) => e.on_batch_done(now, b.id),
+                    Entry::Load(l) => e.on_load_ack(now, l.id),
+                }
+            }
+        }
+        assert!(e.take_dropped().is_empty(), "infinite SLOs are always feasible");
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! The paper's system contribution: the centralized engine, per-model
 //! request queues, dynamic batching, swap manager with pluggable
-//! replacement policies, and the batch/load entry types that flow through
-//! the worker pipelines.
+//! replacement policies, the scheduling/admission-control registry
+//! (DESIGN.md §5), and the batch/load entry types that flow through the
+//! worker pipelines.
 
 pub mod engine;
 pub mod entry;
 pub mod policy;
 pub mod prefetch;
 pub mod queues;
+pub mod scheduler;
 pub mod swap;
 
-pub use engine::{Engine, RequestRecord, SwapRecord};
+pub use engine::{DropRecord, Engine, RequestRecord, SwapRecord};
+pub use scheduler::{Candidate, SchedCtx, Scheduler};
 pub use entry::{BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId};
 pub use queues::RequestQueues;
 pub use swap::{Residency, SwapManager, SwapPlan, SwapStats};

@@ -14,7 +14,7 @@ use crate::coordinator::entry::ModelId;
 /// First-order Markov next-model predictor.
 #[derive(Clone, Debug)]
 pub struct MarkovPredictor {
-    /// transitions[a][b] = count of (request a) immediately followed by
+    /// `transitions[a][b]` = count of (request a) immediately followed by
     /// (request b).
     transitions: Vec<Vec<u64>>,
     last: Option<ModelId>,

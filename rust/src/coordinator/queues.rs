@@ -38,6 +38,17 @@ impl RequestQueues {
         self.queues[model].front().map(|r| r.arrival)
     }
 
+    /// The oldest queued request for `model`, if any.
+    pub fn head(&self, model: ModelId) -> Option<&Request> {
+        self.queues[model].front()
+    }
+
+    /// Remove and return the oldest queued request for `model` (used by
+    /// shedding admission control to drop an infeasible head).
+    pub fn pop_head(&mut self, model: ModelId) -> Option<Request> {
+        self.queues[model].pop_front()
+    }
+
     /// Model whose queue head is oldest (the paper's scheduling key),
     /// restricted to `eligible`. Ties break by lowest model id.
     pub fn oldest_head(&self, eligible: impl Fn(ModelId) -> bool) -> Option<ModelId> {
@@ -136,6 +147,18 @@ mod tests {
     fn oldest_head_empty_none() {
         let q = RequestQueues::new(2);
         assert_eq!(q.oldest_head(|_| true), None);
+    }
+
+    #[test]
+    fn head_and_pop_head() {
+        let mut q = RequestQueues::new(2);
+        q.push(req(1, 0, 1.0));
+        q.push(req(2, 0, 2.0));
+        assert_eq!(q.head(0).map(|r| r.id), Some(1));
+        assert_eq!(q.head(1).map(|r| r.id), None);
+        assert_eq!(q.pop_head(0).map(|r| r.id), Some(1));
+        assert_eq!(q.head(0).map(|r| r.id), Some(2));
+        assert_eq!(q.pop_head(1).map(|r| r.id), None);
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Pluggable scheduling & admission-control disciplines (DESIGN.md §5).
+//!
+//! The paper's engine hard-codes one discipline: visit per-model queues in
+//! oldest-head order and pack a batch from the winner (§3.1). That cannot
+//! express the latency-deadline serving regime that AlpaServe
+//! (arXiv 2302.11665) identifies as where model-parallel multiplexing wins
+//! or loses, so this module lifts the decision into a `Scheduler` trait
+//! behind a named registry (mirroring `workload::scenarios::by_name`):
+//!
+//! | name         | discipline |
+//! |--------------|------------|
+//! | `fcfs`       | oldest queue head first — bit-for-bit the paper's engine |
+//! | `edf`        | earliest deadline first over per-model SLOs |
+//! | `swap-aware` | FCFS with the swap-in cost amortized over the batch a cold model could pack |
+//! | `shed`       | FCFS plus admission control: provably deadline-infeasible requests are dropped |
+//!
+//! The engine drives the trait at exactly two points: `order` ranks the
+//! models that have queued work before each scheduling pass, and
+//! `admit`/`drop_queued` gate requests at arrival time and while they
+//! wait. Everything else — residency gating, the in-flight cap, blocked
+//! head-of-line stalling — stays in `engine::Engine::pump`, identical for
+//! every discipline, which is what makes `fcfs` reproduce the old
+//! behaviour decision-for-decision (pinned by
+//! `rust/tests/scheduler_prop.rs`).
+
+use crate::config::SchedulerKind;
+use crate::coordinator::entry::ModelId;
+use crate::coordinator::swap::Residency;
+
+/// Cost-model constants the engine hands every scheduling decision. All
+/// default to zero, which makes the SLO-aware disciplines maximally
+/// conservative (`shed` only drops requests that are already past their
+/// deadline); backends with a calibrated cost model (`sim::SimSystem`)
+/// tighten them via `Engine::set_cost_model`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedCtx {
+    /// Current engine time (sim seconds or unix seconds).
+    pub now: f64,
+    /// Engine max batch size (amortization denominator for `swap-aware`).
+    pub max_batch_size: usize,
+    /// *Estimate* of one swap-in's latency — used by `swap-aware` to
+    /// weigh queue pressure against the cost the `SwapManager` would pay.
+    pub swap_cost: f64,
+    /// *Lower bound* on a cold load's latency — used by `shed` for
+    /// provable infeasibility, so it must never overestimate.
+    pub swap_floor: f64,
+    /// *Lower bound* on any request's batch-submit → completion time
+    /// (pipe hops + compute), also part of `shed`'s proof obligation.
+    pub exec_floor: f64,
+}
+
+/// Snapshot of one model with queued work, taken at the top of a
+/// scheduling pass.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub model: ModelId,
+    /// Arrival time of the queue head (the paper's scheduling key).
+    pub head_arrival: f64,
+    /// Deadline of the queue head (`arrival + SLO`, `f64::INFINITY` when
+    /// the model has no SLO).
+    pub head_deadline: f64,
+    /// Queued requests for this model.
+    pub queue_len: usize,
+    pub residency: Residency,
+    /// In-flight batch entries for this model.
+    pub inflight: usize,
+}
+
+/// A scheduling & admission discipline.
+pub trait Scheduler: Send {
+    fn kind(&self) -> SchedulerKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Rank the candidates for one scheduling pass; the engine scans them
+    /// in the returned order (earlier = higher priority). Must be a total
+    /// deterministic order (ties broken by model id) so runs stay
+    /// bit-for-bit reproducible.
+    fn order(&self, ctx: &SchedCtx, candidates: &mut [Candidate]);
+
+    /// Admission control at arrival time: `false` rejects the request
+    /// before it is queued. Default: admit everything.
+    fn admit(&self, _ctx: &SchedCtx, _deadline: f64, _residency: Residency) -> bool {
+        true
+    }
+
+    /// Lazy shedding of queued heads whose deadline became infeasible
+    /// while they waited. Default: never drop.
+    fn drop_queued(&self, _ctx: &SchedCtx, _deadline: f64, _residency: Residency) -> bool {
+        false
+    }
+
+    /// True if this discipline can ever drop requests (lets the engine
+    /// skip the shedding pass entirely for the others).
+    fn sheds(&self) -> bool {
+        false
+    }
+}
+
+fn by_arrival(candidates: &mut [Candidate]) {
+    candidates.sort_by(|a, b| {
+        a.head_arrival.total_cmp(&b.head_arrival).then(a.model.cmp(&b.model))
+    });
+}
+
+/// Lower bound on when a request for a model in `residency` state could
+/// possibly complete, starting from `ctx.now`: every request pays at
+/// least `exec_floor`, and a model whose shards are off-GPU (or still
+/// draining — the engine cannot start its reload before the drain
+/// finishes) additionally pays at least one cold load.
+fn earliest_completion(ctx: &SchedCtx, residency: Residency) -> f64 {
+    let cold = match residency {
+        Residency::Offloaded | Residency::Offloading => ctx.swap_floor,
+        Residency::Resident | Residency::Loading => 0.0,
+    };
+    ctx.now + ctx.exec_floor + cold
+}
+
+/// `fcfs` — the paper's oldest-queue-head discipline, preserved exactly
+/// (same key, same model-id tiebreak as the pre-registry engine).
+pub struct Fcfs;
+
+impl Scheduler for Fcfs {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Fcfs
+    }
+
+    fn order(&self, _ctx: &SchedCtx, candidates: &mut [Candidate]) {
+        by_arrival(candidates);
+    }
+}
+
+/// `edf` — earliest deadline first. Ties (equal deadlines, e.g. every
+/// model SLO-less) fall back to the FCFS key, so `edf` with no SLOs is
+/// exactly `fcfs`.
+///
+/// Standard EDF caveat: the deadline key ages exactly as fast as the
+/// arrival key, so under sustained overload a model with a much looser
+/// (or absent) SLO is starved while tighter-deadline queues stay
+/// saturated. Give every model a finite SLO (or combine with `shed`)
+/// when starvation matters — see DESIGN.md §5.
+pub struct Edf;
+
+impl Scheduler for Edf {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Edf
+    }
+
+    fn order(&self, _ctx: &SchedCtx, candidates: &mut [Candidate]) {
+        candidates.sort_by(|a, b| {
+            a.head_deadline
+                .total_cmp(&b.head_deadline)
+                .then(a.head_arrival.total_cmp(&b.head_arrival))
+                .then(a.model.cmp(&b.model))
+        });
+    }
+}
+
+/// `swap-aware` — FCFS on an *effective* arrival time that charges cold
+/// models their swap cost amortized over the batch the swap would unlock:
+/// `key = head_arrival + swap_cost / min(queue_len, max_batch_size)`.
+/// A cold model with one queued request pays the full swap cost and
+/// yields to warm queues; a cold model with a full batch waiting pays
+/// `swap_cost / max_batch_size` and jumps back up — the swap is worth it
+/// precisely when many requests share it.
+pub struct SwapAware;
+
+impl SwapAware {
+    /// Effective scheduling key for one candidate.
+    pub fn effective_key(ctx: &SchedCtx, c: &Candidate) -> f64 {
+        let cold = matches!(c.residency, Residency::Offloaded | Residency::Offloading);
+        if cold {
+            let amortize = c.queue_len.min(ctx.max_batch_size.max(1)).max(1);
+            c.head_arrival + ctx.swap_cost / amortize as f64
+        } else {
+            c.head_arrival
+        }
+    }
+}
+
+impl Scheduler for SwapAware {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::SwapAware
+    }
+
+    fn order(&self, ctx: &SchedCtx, candidates: &mut [Candidate]) {
+        candidates.sort_by(|a, b| {
+            Self::effective_key(ctx, a)
+                .total_cmp(&Self::effective_key(ctx, b))
+                .then(a.head_arrival.total_cmp(&b.head_arrival))
+                .then(a.model.cmp(&b.model))
+        });
+    }
+}
+
+/// `shed` — FCFS ordering plus admission control: a request is rejected
+/// at arrival (and a queued head is dropped while waiting) iff its
+/// deadline is *provably* infeasible — even a zero-queue best case using
+/// the lower-bound cost model could not meet it. Turns unbounded tail
+/// latency into a measured drop rate.
+pub struct Shed;
+
+impl Scheduler for Shed {
+    fn kind(&self) -> SchedulerKind {
+        SchedulerKind::Shed
+    }
+
+    fn order(&self, _ctx: &SchedCtx, candidates: &mut [Candidate]) {
+        by_arrival(candidates);
+    }
+
+    fn admit(&self, ctx: &SchedCtx, deadline: f64, residency: Residency) -> bool {
+        earliest_completion(ctx, residency) <= deadline
+    }
+
+    fn drop_queued(&self, ctx: &SchedCtx, deadline: f64, residency: Residency) -> bool {
+        earliest_completion(ctx, residency) > deadline
+    }
+
+    fn sheds(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Every discipline, in presentation order. `names()`/`describe()` are
+/// pinned to this list by `registry_resolves_every_name`, and `make()`'s
+/// exhaustive match forces a new `SchedulerKind` variant through this
+/// file — keeping the name-keyed registry from drifting from the enum.
+pub const KINDS: [SchedulerKind; 4] =
+    [SchedulerKind::Fcfs, SchedulerKind::Edf, SchedulerKind::SwapAware, SchedulerKind::Shed];
+
+/// All registered scheduler names, in presentation order.
+pub fn names() -> &'static [&'static str] {
+    &["fcfs", "edf", "swap-aware", "shed"]
+}
+
+/// True if `name` is a registered scheduler.
+pub fn is_known(name: &str) -> bool {
+    names().contains(&name)
+}
+
+/// One-line description for CLI listings.
+pub fn describe(name: &str) -> Option<&'static str> {
+    match name {
+        "fcfs" => Some("oldest queue head first (the paper's engine, exact)"),
+        "edf" => Some("earliest deadline first using per-model SLO targets"),
+        "swap-aware" => Some("FCFS with swap cost amortized over the batch a cold model packs"),
+        "shed" => Some("FCFS + admission control: drop provably deadline-infeasible requests"),
+        _ => None,
+    }
+}
+
+/// Look up a scheduler by registry name.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    SchedulerKind::parse(name).map(make)
+}
+
+/// Instantiate the scheduler for a config selector.
+pub fn make(kind: SchedulerKind) -> Box<dyn Scheduler> {
+    match kind {
+        SchedulerKind::Fcfs => Box::new(Fcfs),
+        SchedulerKind::Edf => Box::new(Edf),
+        SchedulerKind::SwapAware => Box::new(SwapAware),
+        SchedulerKind::Shed => Box::new(Shed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(model: ModelId, arrival: f64, deadline: f64, qlen: usize, res: Residency) -> Candidate {
+        Candidate {
+            model,
+            head_arrival: arrival,
+            head_deadline: deadline,
+            queue_len: qlen,
+            residency: res,
+            inflight: 0,
+        }
+    }
+
+    fn ctx(swap_cost: f64) -> SchedCtx {
+        SchedCtx { now: 10.0, max_batch_size: 8, swap_cost, swap_floor: 0.75, exec_floor: 0.03 }
+    }
+
+    fn order_of(s: &dyn Scheduler, ctx: &SchedCtx, mut cands: Vec<Candidate>) -> Vec<ModelId> {
+        s.order(ctx, &mut cands);
+        cands.iter().map(|c| c.model).collect()
+    }
+
+    #[test]
+    fn registry_resolves_every_name() {
+        // names() must be exactly KINDS rendered through name(), so the
+        // string list cannot drift from the enum.
+        let from_kinds: Vec<&str> = KINDS.iter().map(|k| k.name()).collect();
+        assert_eq!(names(), &from_kinds[..]);
+        for &name in names() {
+            assert!(is_known(name));
+            assert!(describe(name).is_some(), "{name} has no description");
+            let s = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(s.name(), name);
+        }
+        assert!(by_name("nope").is_none());
+        assert!(!is_known("nope"));
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival_then_model() {
+        let order = order_of(
+            &Fcfs,
+            &ctx(1.0),
+            vec![
+                cand(2, 3.0, f64::INFINITY, 1, Residency::Resident),
+                cand(0, 3.0, f64::INFINITY, 1, Residency::Offloaded),
+                cand(1, 1.0, 0.0, 9, Residency::Offloaded),
+            ],
+        );
+        assert_eq!(order, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_and_degenerates_to_fcfs() {
+        let order = order_of(
+            &Edf,
+            &ctx(1.0),
+            vec![
+                cand(0, 1.0, 9.0, 1, Residency::Resident),
+                cand(1, 2.0, 4.0, 1, Residency::Resident),
+            ],
+        );
+        assert_eq!(order, vec![1, 0], "earlier deadline wins despite later arrival");
+        // All-infinite deadlines: exactly the FCFS order.
+        let cands = vec![
+            cand(2, 3.0, f64::INFINITY, 1, Residency::Resident),
+            cand(0, 3.0, f64::INFINITY, 1, Residency::Resident),
+            cand(1, 1.0, f64::INFINITY, 1, Residency::Resident),
+        ];
+        assert_eq!(
+            order_of(&Edf, &ctx(1.0), cands.clone()),
+            order_of(&Fcfs, &ctx(1.0), cands)
+        );
+    }
+
+    #[test]
+    fn swap_aware_amortizes_cold_penalty_over_queue() {
+        let c = ctx(8.0);
+        // Cold model with 1 queued request: key = arrival + 8.0 → loses to
+        // a warm model that arrived 2 s later.
+        let order = order_of(
+            &SwapAware,
+            &c,
+            vec![
+                cand(0, 0.0, f64::INFINITY, 1, Residency::Offloaded),
+                cand(1, 2.0, f64::INFINITY, 1, Residency::Resident),
+            ],
+        );
+        assert_eq!(order, vec![1, 0]);
+        // Same cold model with a full batch queued: key = arrival + 1.0 →
+        // wins again (the swap is amortized over 8 requests).
+        let order = order_of(
+            &SwapAware,
+            &c,
+            vec![
+                cand(0, 0.0, f64::INFINITY, 8, Residency::Offloaded),
+                cand(1, 2.0, f64::INFINITY, 1, Residency::Resident),
+            ],
+        );
+        assert_eq!(order, vec![0, 1]);
+        // Zero swap cost: identical to FCFS.
+        let cands = vec![
+            cand(0, 5.0, f64::INFINITY, 1, Residency::Offloaded),
+            cand(1, 2.0, f64::INFINITY, 3, Residency::Resident),
+        ];
+        assert_eq!(
+            order_of(&SwapAware, &ctx(0.0), cands.clone()),
+            order_of(&Fcfs, &ctx(0.0), cands)
+        );
+    }
+
+    #[test]
+    fn shed_admits_feasible_and_rejects_infeasible() {
+        let c = ctx(1.0); // swap_floor 0.75, exec_floor 0.03, now 10.0
+        // Resident model: feasible iff deadline >= 10.03.
+        assert!(Shed.admit(&c, 10.03, Residency::Resident));
+        assert!(!Shed.admit(&c, 10.02, Residency::Resident));
+        // Offloaded model additionally pays the cold-load floor.
+        assert!(Shed.admit(&c, 10.78, Residency::Offloaded));
+        assert!(!Shed.admit(&c, 10.77, Residency::Offloaded));
+        // Loading counts as warm (the load may complete immediately).
+        assert!(Shed.admit(&c, 10.05, Residency::Loading));
+        // drop_queued is the exact complement of admit.
+        for res in [Residency::Resident, Residency::Offloaded, Residency::Loading] {
+            for d in [9.0, 10.05, 10.5, 11.0, f64::INFINITY] {
+                assert_eq!(Shed.admit(&c, d, res), !Shed.drop_queued(&c, d, res));
+            }
+        }
+        assert!(Shed.sheds());
+        assert!(!Fcfs.sheds() && !Edf.sheds() && !SwapAware.sheds());
+    }
+
+    #[test]
+    fn only_shed_gates_admission() {
+        let c = ctx(5.0);
+        for s in [&Fcfs as &dyn Scheduler, &Edf, &SwapAware] {
+            assert!(s.admit(&c, f64::NEG_INFINITY, Residency::Offloaded));
+            assert!(!s.drop_queued(&c, f64::NEG_INFINITY, Residency::Offloaded));
+        }
+    }
+}

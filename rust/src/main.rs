@@ -1,16 +1,17 @@
 //! `computron` — CLI launcher.
 //!
 //! Subcommands:
-//!   serve      launch the real-mode server and run an interactive demo load
-//!   simulate   run a §5.2-style simulated workload and print metrics
-//!   swap       run the §5.1 worst-case swap experiment for one (tp, pp)
-//!   scenarios  list the named workload scenarios (`--scenario` targets)
-//!   info       print environment, catalog, and artifact status
+//!   serve       launch the real-mode server and run an interactive demo load
+//!   simulate    run a §5.2-style simulated workload and print metrics
+//!   swap        run the §5.1 worst-case swap experiment for one (tp, pp)
+//!   scenarios   list the named workload scenarios (`--scenario` targets)
+//!   schedulers  list the scheduling disciplines (`--scheduler` targets)
+//!   info        print environment, catalog, and artifact status
 //!
 //! `computron <subcommand> --help` lists options.
 
 use anyhow::{anyhow, Result};
-use computron::config::{EngineConfig, LoadDesign, PolicyKind, SystemConfig};
+use computron::config::{EngineConfig, LoadDesign, PolicyKind, SchedulerKind, SystemConfig};
 use computron::coordinator::engine::SwapRecord;
 use computron::metrics::WorkloadCell;
 use computron::serving::{Computron, ServeConfig};
@@ -24,7 +25,7 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|swap|scenarios|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|swap|scenarios|schedulers|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
@@ -33,6 +34,7 @@ fn main() {
         "simulate" => cmd_simulate(&rest),
         "swap" => cmd_swap(&rest),
         "scenarios" => cmd_scenarios(),
+        "schedulers" => cmd_schedulers(),
         "info" => cmd_info(),
         other => Err(anyhow!("unknown subcommand '{other}'")),
     };
@@ -106,6 +108,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("seed", "workload seed", Some("42"))
         .opt("policy", "lru|lfu|fifo|random", Some("lru"))
         .opt("load-design", "async|sync|broadcast", Some("async"))
+        .opt("scheduler", "fcfs|edf|swap-aware|shed (see `computron schedulers`)", None)
+        .opt("slo", "uniform per-model latency SLO in seconds", None)
+        .opt("slos", "comma-separated per-model SLOs in seconds (overrides --slo)", None)
         .flag("no-pinned", "use pageable host memory (ablation)")
         .parse_from(argv)?;
 
@@ -123,11 +128,28 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --policy"))?;
     cfg.engine.load_design = LoadDesign::parse(args.get_or("load-design", "async"))
         .ok_or_else(|| anyhow!("bad --load-design"))?;
+    // Scheduler / SLO flags override the config file; absent flags keep
+    // the config's values (default: fcfs, no SLOs).
+    if let Some(s) = args.get("scheduler") {
+        cfg.engine.scheduler = SchedulerKind::parse(s)
+            .ok_or_else(|| anyhow!("bad --scheduler '{s}' (see `computron schedulers`)"))?;
+    }
+    if let Some(s) = args.get("slos") {
+        let slos: Vec<f64> = s
+            .split(',')
+            .map(|x| x.trim().parse::<f64>().map_err(|_| anyhow!("bad SLO '{x}'")))
+            .collect::<Result<_>>()?;
+        cfg.slos = Some(slos);
+    } else if let Some(v) = args.get_f64("slo")? {
+        cfg.slos = Some(vec![v; cfg.num_models]);
+    }
     if args.flag("no-pinned") {
         cfg.hardware.pinned = false;
     }
     let duration = args.get_f64("duration")?.unwrap_or(30.0);
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let scheduler_name = cfg.engine.scheduler.name();
+    let has_slos = cfg.slos.is_some();
 
     // Scenario precedence: an explicit --scenario flag always wins; a
     // config-file `scenario` field applies unless the user passed
@@ -165,21 +187,42 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         sys.preload(&(0..cap.min(models)).collect::<Vec<_>>());
         (sys.run(), start, "cli".to_string(), cv)
     };
-    let cell = WorkloadCell::from_report(&label, cv, &report, start);
+    let cell = WorkloadCell::from_report(&label, cv, &report, start, duration);
 
     section("simulation results");
-    table(
-        &["metric", "value"],
-        &vec![
-            vec!["requests".into(), cell.requests.to_string()],
-            vec!["mean latency (s)".into(), format!("{:.3}", cell.mean_latency)],
-            vec!["p50 / p90 / p99 (s)".into(), format!("{:.3} / {:.3} / {:.3}", cell.summary.p50, cell.summary.p90, cell.summary.p99)],
-            vec!["swaps".into(), cell.swaps.to_string()],
-            vec!["dependency violations".into(), report.violations.to_string()],
-            vec!["sim events".into(), report.events.to_string()],
-            vec!["host wall (s)".into(), format!("{:.3}", report.wall_secs)],
-        ],
-    );
+    let mut rows = vec![
+        vec!["scheduler".into(), scheduler_name.to_string()],
+        vec!["requests".into(), cell.requests.to_string()],
+        vec!["mean latency (s)".into(), format!("{:.3}", cell.mean_latency)],
+        vec!["p50 / p90 / p99 (s)".into(), format!("{:.3} / {:.3} / {:.3}", cell.summary.p50, cell.summary.p90, cell.summary.p99)],
+        vec!["swaps".into(), cell.swaps.to_string()],
+        vec!["dependency violations".into(), report.violations.to_string()],
+        vec!["sim events".into(), report.events.to_string()],
+        vec!["host wall (s)".into(), format!("{:.3}", report.wall_secs)],
+    ];
+    if has_slos {
+        rows.insert(2, vec!["SLO attainment".into(), format!("{:.1}%", 100.0 * cell.attainment)]);
+        rows.insert(3, vec!["goodput (att. req/s)".into(), format!("{:.2}", cell.goodput)]);
+        rows.insert(4, vec!["dropped (rate)".into(), format!("{} ({:.1}%)", cell.drops, 100.0 * cell.drop_rate)]);
+    }
+    table(&["metric", "value"], &rows);
+    Ok(())
+}
+
+fn cmd_schedulers() -> Result<()> {
+    section("scheduling disciplines (computron simulate --scheduler <name>)");
+    let rows: Vec<Vec<String>> = computron::coordinator::scheduler::names()
+        .iter()
+        .map(|&name| {
+            vec![
+                name.to_string(),
+                computron::coordinator::scheduler::describe(name).unwrap_or("").to_string(),
+            ]
+        })
+        .collect();
+    table(&["name", "description"], &rows);
+    println!("\nSLO targets come from --slo/--slos (CLI) or the `slo`/`slos` config fields;");
+    println!("without them every deadline is infinite: edf degenerates to fcfs and shed never drops.");
     Ok(())
 }
 

@@ -8,7 +8,9 @@ use crate::sim::system::SimReport;
 use crate::util::json::Json;
 use crate::util::stats::{cdf, Summary};
 
-/// Measured outcome of one (skew, CV) cell of Tab 1 / Tab 2.
+/// Measured outcome of one (skew, CV) cell of Tab 1 / Tab 2, extended
+/// with the SLO-serving metrics (deadline attainment, goodput, drop
+/// rate) that `benches/slo_suite.rs` sweeps.
 #[derive(Clone, Debug)]
 pub struct WorkloadCell {
     pub skew_label: String,
@@ -21,40 +23,57 @@ pub struct WorkloadCell {
     pub cdf: Vec<(f64, f64)>,
     pub requests: usize,
     pub swaps: usize,
+    /// Requests dropped by admission control in the measured window.
+    pub drops: usize,
+    /// Fraction of measured *completed* requests that met their deadline
+    /// (1.0 when no SLOs are configured — every deadline is infinite).
+    pub attainment: f64,
+    /// Deadline-met completions per second of measured window (the
+    /// SLO-serving literature's goodput); 0 when the window length is
+    /// unknown (`duration <= 0`).
+    pub goodput: f64,
+    /// drops / (completions + drops) over the measured window.
+    pub drop_rate: f64,
 }
 
 impl WorkloadCell {
     /// Build a cell from a simulation report, filtering out warmup.
+    /// `duration` is the measured-window length in seconds (the goodput
+    /// denominator); pass 0.0 when it is unknown.
     pub fn from_report(
         skew_label: &str,
         cv: f64,
         report: &SimReport,
         measure_start: f64,
+        duration: f64,
     ) -> WorkloadCell {
-        let lats = report.latencies_from(measure_start);
-        let summary = Summary::of(&lats).unwrap_or(Summary {
-            count: 0,
-            mean: 0.0,
-            std: 0.0,
-            min: 0.0,
-            max: 0.0,
-            p50: 0.0,
-            p90: 0.0,
-            p95: 0.0,
-            p99: 0.0,
-        });
+        let measured: Vec<&RequestRecord> =
+            report.requests.iter().filter(|r| r.arrival >= measure_start).collect();
+        let lats: Vec<f64> = measured.iter().map(|r| r.latency()).collect();
+        let summary = Summary::of(&lats).unwrap_or_else(Summary::empty);
+        let attained = measured.iter().filter(|r| r.attained()).count();
+        let drops = report.drops.iter().filter(|d| d.arrival >= measure_start).count();
+        let served = measured.len();
         WorkloadCell {
             skew_label: skew_label.to_string(),
             cv,
             mean_latency: summary.mean,
             summary: summary.clone(),
             cdf: cdf(&lats, 100),
-            requests: lats.len(),
+            requests: served,
             swaps: report
                 .swaps
                 .iter()
                 .filter(|s| s.submitted >= measure_start)
                 .count(),
+            drops,
+            attainment: if served == 0 { 0.0 } else { attained as f64 / served as f64 },
+            goodput: if duration > 0.0 { attained as f64 / duration } else { 0.0 },
+            drop_rate: if served + drops == 0 {
+                0.0
+            } else {
+                drops as f64 / (served + drops) as f64
+            },
         }
     }
 
@@ -75,6 +94,10 @@ impl WorkloadCell {
             ),
             ("requests", self.requests.into()),
             ("swaps", self.swaps.into()),
+            ("drops", self.drops.into()),
+            ("attainment", self.attainment.into()),
+            ("goodput", self.goodput.into()),
+            ("drop_rate", self.drop_rate.into()),
         ])
     }
 }
@@ -194,12 +217,45 @@ mod tests {
     #[test]
     fn cell_from_report() {
         let r = small_report();
-        let cell = WorkloadCell::from_report("(1,1)", 1.0, &r, 0.0);
+        let cell = WorkloadCell::from_report("(1,1)", 1.0, &r, 0.0, 10.0);
         assert_eq!(cell.requests, 6);
         assert!(cell.mean_latency > 0.0);
         assert!(!cell.cdf.is_empty());
         let j = cell.to_json();
         assert_eq!(j.get("skew").unwrap().as_str().unwrap(), "(1,1)");
+    }
+
+    #[test]
+    fn slo_metrics_in_cells() {
+        use crate::config::SchedulerKind;
+        use crate::sim::Arrival;
+        // No SLOs: every completion attains; goodput = completions / window.
+        let r = small_report();
+        let cell = WorkloadCell::from_report("x", 1.0, &r, 0.0, 10.0);
+        assert_eq!(cell.attainment, 1.0);
+        assert_eq!(cell.drops, 0);
+        assert_eq!(cell.drop_rate, 0.0);
+        assert!((cell.goodput - cell.requests as f64 / 10.0).abs() < 1e-12);
+
+        // Overloaded shed run: drops appear in the cell and the rate is
+        // consistent with the counts.
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
+        cfg.engine.scheduler = SchedulerKind::Shed;
+        cfg.slos = Some(vec![1.0, 1.0]);
+        let arrivals: Vec<Arrival> = (0..100)
+            .map(|i| Arrival { at: 0.02 * i as f64, model: i % 2, input_len: 8 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0]);
+        let r = sys.run();
+        let cell = WorkloadCell::from_report("shed", 1.0, &r, 0.0, 2.0);
+        assert_eq!(cell.requests + cell.drops, 100);
+        assert!(cell.drops > 0);
+        assert!((cell.drop_rate - cell.drops as f64 / 100.0).abs() < 1e-12);
+        assert!(cell.attainment <= 1.0);
+        let j = cell.to_json();
+        assert!(j.get("drop_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("attainment").is_some() && j.get("goodput").is_some());
     }
 
     #[test]
@@ -215,9 +271,9 @@ mod tests {
     fn table_layout() {
         let r = small_report();
         let cells = vec![
-            WorkloadCell::from_report("(1,1,1)", 0.25, &r, 0.0),
-            WorkloadCell::from_report("(1,1,1)", 1.0, &r, 0.0),
-            WorkloadCell::from_report("(10,1,1)", 0.25, &r, 0.0),
+            WorkloadCell::from_report("(1,1,1)", 0.25, &r, 0.0, 0.0),
+            WorkloadCell::from_report("(1,1,1)", 1.0, &r, 0.0, 0.0),
+            WorkloadCell::from_report("(10,1,1)", 0.25, &r, 0.0, 0.0),
         ];
         let (headers, rows) = latency_table(&cells, &[0.25, 1.0, 4.0]);
         assert_eq!(headers.len(), 4);
@@ -229,7 +285,7 @@ mod tests {
     #[test]
     fn save_cells_writes_json() {
         let r = small_report();
-        let cells = vec![WorkloadCell::from_report("(1,1)", 4.0, &r, 0.0)];
+        let cells = vec![WorkloadCell::from_report("(1,1)", 4.0, &r, 0.0, 0.0)];
         let dir = std::env::temp_dir().join("computron_metrics_test");
         let path = dir.join("cells.json");
         save_cells(&path, "tab1", &cells).unwrap();

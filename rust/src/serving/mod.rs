@@ -49,6 +49,10 @@ pub struct ServeConfig {
     pub tp: usize,
     pub pp: usize,
     pub engine: EngineConfig,
+    /// Per-model latency SLO targets in seconds (deadline = arrival +
+    /// SLO); `None` disables deadlines. Only consulted by the SLO-aware
+    /// schedulers (`edf`, `shed`) selected via `engine.scheduler`.
+    pub slos: Option<Vec<f64>>,
 }
 
 impl ServeConfig {
@@ -66,6 +70,7 @@ impl ServeConfig {
             tp,
             pp,
             engine: EngineConfig::default(),
+            slos: None,
         }
     }
 }
@@ -241,6 +246,9 @@ fn engine_loop(
     let start = Instant::now();
     let world = cfg.tp * cfg.pp;
     let mut engine = Engine::new(cfg.num_models, world, cfg.pp, cfg.engine, 0xC0117);
+    if let Some(slos) = &cfg.slos {
+        engine.set_slos(slos);
+    }
     let mut payloads: HashMap<RequestId, Vec<i32>> = HashMap::new();
     let mut replies: HashMap<RequestId, Promise<InferenceResult>> = HashMap::new();
     let mut batch_members: HashMap<EntryId, Vec<RequestId>> = HashMap::new();
@@ -287,6 +295,23 @@ fn engine_loop(
         }
     };
 
+    // The shed scheduler may reject a request at admission (or shed a
+    // stale queued head at any later pump) — fail those replies
+    // immediately rather than leaving them pending forever.
+    let settle_drops = |engine: &mut Engine,
+                        payloads: &mut HashMap<RequestId, Vec<i32>>,
+                        replies: &mut HashMap<RequestId, Promise<InferenceResult>>| {
+        for drop in engine.take_dropped() {
+            payloads.remove(&drop.id);
+            if let Some(pending) = replies.remove(&drop.id) {
+                let _ = pending.fulfill(Err(format!(
+                    "request shed: deadline {:.3}s infeasible",
+                    drop.deadline
+                )));
+            }
+        }
+    };
+
     while let Ok(msg) = inbox.recv() {
         let now = start.elapsed().as_secs_f64();
         match msg {
@@ -305,11 +330,13 @@ fn engine_loop(
                 let id = engine.on_request(now, model, ids.len());
                 payloads.insert(id, ids);
                 replies.insert(id, reply);
+                settle_drops(&mut engine, &mut payloads, &mut replies);
                 route(&mut engine, &payloads, &mut batch_members);
             }
             ToEngine::Worker(EngineMsg::LoadAck { entry_id, elapsed }) => {
                 load_secs.push(elapsed);
                 engine.on_load_ack(now, entry_id);
+                settle_drops(&mut engine, &mut payloads, &mut replies);
                 route(&mut engine, &payloads, &mut batch_members);
             }
             ToEngine::Worker(EngineMsg::BatchDone { entry_id, outputs }) => {
@@ -338,6 +365,7 @@ fn engine_loop(
                         }));
                     }
                 }
+                settle_drops(&mut engine, &mut payloads, &mut replies);
                 route(&mut engine, &payloads, &mut batch_members);
             }
             ToEngine::Worker(EngineMsg::WorkerError { worker, message }) => {

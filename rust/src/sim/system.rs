@@ -10,7 +10,7 @@
 use crate::cluster::clock::{EventQueue, SimTime};
 use crate::cluster::gpu::GpuDevice;
 use crate::config::{LoadDesign, SystemConfig};
-use crate::coordinator::engine::{Engine, RequestRecord, SwapRecord};
+use crate::coordinator::engine::{DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
 use crate::coordinator::swap::SwapStats;
 use crate::model::{shard_grid, GridPos, ModelSpec};
@@ -39,6 +39,9 @@ pub enum Driver {
 #[derive(Clone, Debug)]
 pub struct SimReport {
     pub requests: Vec<RequestRecord>,
+    /// Requests rejected or shed by admission control (empty for every
+    /// scheduler except `shed`).
+    pub drops: Vec<DropRecord>,
     pub swaps: Vec<SwapRecord>,
     pub swap_stats: SwapStats,
     /// Load-dependency violations across workers (Fig 2 demonstration;
@@ -125,13 +128,32 @@ impl SimSystem {
                 ));
             }
         }
-        let engine = Engine::new(
+        let mut engine = Engine::new(
             cfg.num_models,
             tp * pp,
             pp,
             cfg.engine,
             0x5EED ^ cfg.num_models as u64,
         );
+        if let Some(slos) = &cfg.slos {
+            engine.set_slos(slos);
+        }
+        // Scheduler cost model from the calibrated substrate. The
+        // estimate includes the per-tensor α term and one engine→worker
+        // pipe hop each way; the floors are true lower bounds (pure
+        // bandwidth for a cold load; pipe traversal for execution), which
+        // is what makes `shed`'s drops provably infeasible.
+        let shard_bytes = crate::model::shard::max_shard_bytes(&spec, tp, pp)?;
+        let shard_msgs = grid
+            .iter()
+            .flat_map(|row| row.iter().map(|s| s.tensor_count()))
+            .max()
+            .unwrap_or(0);
+        let swap_cost =
+            link.transfer_time(shard_msgs, shard_bytes) + 2.0 * cfg.hardware.pipe_latency;
+        let swap_floor = shard_bytes as f64 / link.bandwidth;
+        let exec_floor = (pp + 1) as f64 * cfg.hardware.pipe_latency;
+        engine.set_cost_model(swap_cost, swap_floor, exec_floor);
         Ok(SimSystem {
             cfg,
             spec,
@@ -314,6 +336,15 @@ impl SimSystem {
         }
     }
 
+    /// A dropped request never produces a completion ack, so the closed
+    /// loop must advance once per drop recorded since `before` or it
+    /// would wait forever on the shed request.
+    fn drive_closed_loop_for_drops(&mut self, before: usize) {
+        for _ in before..self.engine.dropped_count() {
+            self.drive_closed_loop_next();
+        }
+    }
+
     /// Run the simulation to completion and return the report.
     pub fn run(mut self) -> SimReport {
         let wall_start = std::time::Instant::now();
@@ -330,6 +361,7 @@ impl SimSystem {
         }
 
         while let Some((now, ev)) = self.queue.pop() {
+            let drops_before = self.engine.dropped_count();
             match ev {
                 Ev::Arrival { model, input_len } => {
                     self.engine.on_request(now, model, input_len);
@@ -364,12 +396,14 @@ impl SimSystem {
                     }
                 }
             }
+            self.drive_closed_loop_for_drops(drops_before);
         }
 
         debug_assert!(self.engine.idle(), "simulation drained with engine non-idle");
         let mut engine = self.engine;
         SimReport {
             requests: engine.take_completed(),
+            drops: engine.take_dropped(),
             swaps: engine.take_swap_records(),
             swap_stats: engine.swap_stats(),
             violations: self.workers.iter().map(|w| w.violations).sum(),
@@ -549,6 +583,53 @@ mod tests {
             report.violations > 0,
             "broadcast baseline should violate load dependencies"
         );
+    }
+
+    #[test]
+    fn shed_scheduler_accounts_for_every_arrival() {
+        use crate::config::SchedulerKind;
+        // Heavily overloaded alternating load (cap 1 ⇒ every alternation
+        // swaps) with a tight SLO: shed converts the unbounded queue wait
+        // into drops, and completions + drops still cover every arrival.
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
+        cfg.engine.scheduler = SchedulerKind::Shed;
+        cfg.slos = Some(vec![1.0, 1.0]);
+        let arrivals: Vec<Arrival> = (0..100)
+            .map(|i| Arrival { at: 0.02 * i as f64, model: i % 2, input_len: 8 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0]);
+        let report = sys.run();
+        assert_eq!(report.requests.len() + report.drops.len(), 100);
+        assert!(!report.drops.is_empty(), "overload with a 1 s SLO must shed");
+        assert!(report.violations == 0 && report.oom_events == 0);
+        // Every record carries the configured deadline.
+        for r in &report.requests {
+            assert!((r.deadline - r.arrival - 1.0).abs() < 1e-9);
+        }
+        for d in &report.drops {
+            assert!((d.deadline - d.arrival - 1.0).abs() < 1e-9);
+            assert!(d.dropped_at >= d.arrival);
+        }
+    }
+
+    #[test]
+    fn fcfs_and_edf_identical_without_slos() {
+        use crate::config::SchedulerKind;
+        // With no SLOs every deadline is infinite and EDF's order
+        // degenerates to FCFS: the two runs must be bit-for-bit equal.
+        let run = |kind: SchedulerKind| {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.engine.scheduler = kind;
+            cfg.scenario = Some("bursty".into());
+            let (sys, _) = SimSystem::from_scenario(cfg, 10.0, 7).unwrap();
+            sys.run()
+        };
+        let a = run(SchedulerKind::Fcfs);
+        let b = run(SchedulerKind::Edf);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.swaps, b.swaps);
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -20,6 +20,22 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// The all-zero summary used as the fallback for empty samples
+    /// (report cells render it as "no data" rather than panicking).
+    pub fn empty() -> Summary {
+        Summary {
+            count: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p90: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        }
+    }
+
     /// Compute a summary; returns `None` for an empty sample.
     pub fn of(values: &[f64]) -> Option<Summary> {
         if values.is_empty() {
@@ -187,6 +203,15 @@ mod tests {
     #[test]
     fn summary_empty_is_none() {
         assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_empty_constructor_is_zeroed() {
+        let e = Summary::empty();
+        assert_eq!(e.count, 0);
+        for v in [e.mean, e.std, e.min, e.max, e.p50, e.p90, e.p95, e.p99] {
+            assert_eq!(v, 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Property tests for the scheduling & admission-control registry
+//! (`coordinator::scheduler`, DESIGN.md §5):
+//!
+//! 1. `fcfs` ranks candidates exactly like the pre-registry engine's
+//!    oldest-head sort, and — replayed decision-for-decision against a
+//!    mirror of the legacy discipline — never batches a model while
+//!    another schedulable model holds a strictly older head.
+//! 2. `edf` never inverts two feasible deadlines: its order is
+//!    non-decreasing in deadline.
+//! 3. `shed` only drops requests that are provably deadline-infeasible
+//!    under its lower-bound cost model.
+//! 4. With no SLOs configured, `fcfs` and `edf` produce bit-identical
+//!    seeded `SimReport`s across the whole scenario registry.
+
+use computron::config::{EngineConfig, SchedulerKind, SystemConfig};
+use computron::coordinator::engine::Engine;
+use computron::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
+use computron::coordinator::scheduler::{self, Candidate, SchedCtx, Scheduler};
+use computron::coordinator::swap::Residency;
+use computron::sim::SimSystem;
+use computron::util::prop;
+use computron::util::rng::Rng;
+use computron::workload::scenarios;
+
+fn random_candidates(rng: &mut Rng) -> Vec<Candidate> {
+    let n = prop::usize_in(rng, 1, 8);
+    (0..n)
+        .map(|model| Candidate {
+            model,
+            head_arrival: (rng.index(50) as f64) * 0.25,
+            head_deadline: if rng.index(4) == 0 {
+                f64::INFINITY
+            } else {
+                (rng.index(80) as f64) * 0.25
+            },
+            queue_len: prop::usize_in(rng, 1, 12),
+            residency: match rng.index(4) {
+                0 => Residency::Offloaded,
+                1 => Residency::Loading,
+                2 => Residency::Resident,
+                _ => Residency::Offloading,
+            },
+            inflight: rng.index(3),
+        })
+        .collect()
+}
+
+fn ctx(rng: &mut Rng) -> SchedCtx {
+    SchedCtx {
+        now: (rng.index(100) as f64) * 0.25,
+        max_batch_size: prop::usize_in(rng, 1, 8),
+        swap_cost: (rng.index(20) as f64) * 0.1,
+        swap_floor: (rng.index(10) as f64) * 0.1,
+        exec_floor: (rng.index(5) as f64) * 0.01,
+    }
+}
+
+#[test]
+fn fcfs_order_matches_legacy_oldest_head_sort() {
+    prop::check(
+        "fcfs-legacy-sort",
+        |rng: &mut Rng| (ctx(rng), random_candidates(rng)),
+        |(ctx, cands)| {
+            // The pre-registry engine's exact sort key.
+            let mut legacy: Vec<(f64, ModelId)> =
+                cands.iter().map(|c| (c.head_arrival, c.model)).collect();
+            legacy.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+            let mut ours = cands.clone();
+            scheduler::by_name("fcfs").unwrap().order(ctx, &mut ours);
+            let got: Vec<(f64, ModelId)> =
+                ours.iter().map(|c| (c.head_arrival, c.model)).collect();
+            if got != legacy {
+                return Err(format!("fcfs diverged: {got:?} vs legacy {legacy:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn edf_never_inverts_two_feasible_deadlines() {
+    prop::check(
+        "edf-no-deadline-inversion",
+        |rng: &mut Rng| (ctx(rng), random_candidates(rng)),
+        |(ctx, cands)| {
+            let mut ours = cands.clone();
+            scheduler::by_name("edf").unwrap().order(ctx, &mut ours);
+            for pair in ours.windows(2) {
+                if pair[0].head_deadline > pair[1].head_deadline {
+                    return Err(format!(
+                        "deadline inversion: model {} (deadline {}) before model {} ({})",
+                        pair[0].model,
+                        pair[0].head_deadline,
+                        pair[1].model,
+                        pair[1].head_deadline
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Mirror of the engine state the legacy FCFS discipline keys on,
+/// reconstructed purely from the engine's observable outputs.
+struct FcfsMirror {
+    /// Queued arrival times per model, oldest first.
+    queues: Vec<Vec<f64>>,
+    residency: Vec<Residency>,
+    inflight: Vec<usize>,
+    /// Remaining worker acks per in-flight load entry.
+    load_acks: std::collections::HashMap<EntryId, (ModelId, LoadDirection, usize)>,
+}
+
+impl FcfsMirror {
+    fn new(models: usize) -> FcfsMirror {
+        FcfsMirror {
+            queues: vec![Vec::new(); models],
+            residency: vec![Residency::Offloaded; models],
+            inflight: vec![0; models],
+            load_acks: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Replay one drained entry, checking the legacy-discipline batch
+    /// invariant: a batch for `m` is only legal while no OTHER
+    /// schedulable model (resident, below the in-flight limit, nonempty
+    /// queue) holds a strictly older head (ties break by model id).
+    fn replay(
+        &mut self,
+        entry: &Entry,
+        world: usize,
+        max_inflight: usize,
+        max_batch: usize,
+    ) -> Result<(), String> {
+        match entry {
+            Entry::Batch(b) => {
+                let m = b.model;
+                if b.batch_size() > max_batch {
+                    return Err("batch exceeds max batch size".into());
+                }
+                if b.batch_size() > self.queues[m].len() {
+                    return Err("batch larger than queued work".into());
+                }
+                let head = self.queues[m][0];
+                // The batch must pack the oldest queued requests, in order.
+                for (i, req) in b.requests.iter().enumerate() {
+                    if req.arrival != self.queues[m][i] {
+                        return Err(format!(
+                            "batch for model {m} skipped the queue front: \
+                             got arrival {}, expected {}",
+                            req.arrival, self.queues[m][i]
+                        ));
+                    }
+                }
+                for other in 0..self.queues.len() {
+                    if other == m || self.queues[other].is_empty() {
+                        continue;
+                    }
+                    let oh = self.queues[other][0];
+                    let older = oh < head || (oh == head && other < m);
+                    if !older {
+                        continue;
+                    }
+                    match self.residency[other] {
+                        // A schedulable resident model with an older head
+                        // must have been batched first.
+                        Residency::Resident if self.inflight[other] < max_inflight => {
+                            return Err(format!(
+                                "fcfs batched model {m} (head {head}) while schedulable \
+                                 model {other} held an older head ({oh})"
+                            ));
+                        }
+                        // An offloaded model with an older head either
+                        // started its swap earlier in this pump (mirror
+                        // would show Loading) or was Blocked — and a
+                        // blocked older head stalls every younger queue.
+                        Residency::Offloaded => {
+                            return Err(format!(
+                                "fcfs batched model {m} (head {head}) past offloaded \
+                                 model {other} with an older head ({oh})"
+                            ));
+                        }
+                        // At the in-flight limit, Loading, or Offloading:
+                        // legally bypassed without stalling.
+                        _ => {}
+                    }
+                }
+                self.queues[m].drain(..b.batch_size());
+                self.inflight[m] += 1;
+            }
+            Entry::Load(l) => {
+                self.residency[l.model] = match l.dir {
+                    LoadDirection::Load => Residency::Loading,
+                    LoadDirection::Offload => Residency::Offloading,
+                };
+                self.load_acks.insert(l.id, (l.model, l.dir, world));
+            }
+        }
+        Ok(())
+    }
+
+    fn ack_load(&mut self, id: EntryId) {
+        let (model, dir, remaining) = *self.load_acks.get(&id).expect("unknown load");
+        if remaining == 1 {
+            self.load_acks.remove(&id);
+            self.residency[model] = match dir {
+                LoadDirection::Load => Residency::Resident,
+                LoadDirection::Offload => Residency::Offloaded,
+            };
+        } else {
+            self.load_acks.insert(id, (model, dir, remaining - 1));
+        }
+    }
+}
+
+#[test]
+fn fcfs_matches_legacy_engine_decision_for_decision() {
+    prop::check(
+        "fcfs-decision-replay",
+        |rng: &mut Rng| {
+            let models = prop::usize_in(rng, 2, 4);
+            let cap = prop::usize_in(rng, 1, models);
+            let reqs: Vec<usize> = (0..48).map(|_| rng.index(models)).collect();
+            (models, cap, reqs)
+        },
+        |(models, cap, reqs)| {
+            let world = 2;
+            let max_batch = 4;
+            let cfg = EngineConfig {
+                max_batch_size: max_batch,
+                resident_cap: *cap,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::new(*models, world, 1, cfg, 7);
+            let mut mirror = FcfsMirror::new(*models);
+            let mut pending_loads: Vec<EntryId> = Vec::new();
+            let mut pending_batches: Vec<(EntryId, ModelId)> = Vec::new();
+            let mut now = 0.0;
+            let drain = |e: &mut Engine,
+                             mirror: &mut FcfsMirror,
+                             loads: &mut Vec<EntryId>,
+                             batches: &mut Vec<(EntryId, ModelId)>|
+             -> Result<(), String> {
+                for entry in e.drain_outbox() {
+                    mirror.replay(&entry, world, 1, max_batch)?;
+                    match entry {
+                        Entry::Batch(b) => batches.push((b.id, b.model)),
+                        Entry::Load(l) => loads.push(l.id),
+                    }
+                }
+                Ok(())
+            };
+            for &m in reqs {
+                now += 0.125;
+                e.on_request(now, m, 8);
+                mirror.queues[m].push(now);
+                drain(&mut e, &mut mirror, &mut pending_loads, &mut pending_batches)?;
+                // Randomly (deterministically from `now`) complete work.
+                if !pending_loads.is_empty() && (now * 8.0) as u64 % 2 == 0 {
+                    let id = pending_loads.remove(0);
+                    now += 0.5;
+                    for _ in 0..world {
+                        e.on_load_ack(now, id);
+                        mirror.ack_load(id);
+                    }
+                    drain(&mut e, &mut mirror, &mut pending_loads, &mut pending_batches)?;
+                }
+                if pending_batches.len() > 2 {
+                    let (id, bm) = pending_batches.remove(0);
+                    now += 0.25;
+                    e.on_batch_done(now, id);
+                    mirror.inflight[bm] -= 1;
+                    drain(&mut e, &mut mirror, &mut pending_loads, &mut pending_batches)?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shed_drops_only_provably_infeasible_requests() {
+    prop::check(
+        "shed-provable-drops",
+        |rng: &mut Rng| {
+            let models = prop::usize_in(rng, 2, 4);
+            let cap = prop::usize_in(rng, 1, models);
+            // A mix of tight and loose SLOs.
+            let slos: Vec<f64> =
+                (0..models).map(|_| [0.25, 0.5, 2.0, 16.0][rng.index(4)]).collect();
+            let swap_floor = (rng.index(8) as f64) * 0.1;
+            let exec_floor = (rng.index(4) as f64) * 0.05;
+            let reqs: Vec<usize> = (0..48).map(|_| rng.index(models)).collect();
+            (models, cap, slos, swap_floor, exec_floor, reqs)
+        },
+        |(models, cap, slos, swap_floor, exec_floor, reqs)| {
+            let cfg = EngineConfig {
+                max_batch_size: 4,
+                resident_cap: *cap,
+                scheduler: SchedulerKind::Shed,
+                ..EngineConfig::default()
+            };
+            let mut e = Engine::new(*models, 1, 1, cfg, 7);
+            e.set_slos(slos);
+            e.set_cost_model(*swap_floor, *swap_floor, *exec_floor);
+            let mut pending_loads: Vec<EntryId> = Vec::new();
+            let mut pending_batches: Vec<EntryId> = Vec::new();
+            let mut now = 0.0;
+            for &m in reqs {
+                now += 0.125;
+                e.on_request(now, m, 8);
+                for entry in e.drain_outbox() {
+                    match entry {
+                        Entry::Batch(b) => pending_batches.push(b.id),
+                        Entry::Load(l) => pending_loads.push(l.id),
+                    }
+                }
+                if !pending_loads.is_empty() && (now * 8.0) as u64 % 2 == 0 {
+                    let id = pending_loads.remove(0);
+                    now += 0.5;
+                    e.on_load_ack(now, id);
+                    for entry in e.drain_outbox() {
+                        match entry {
+                            Entry::Batch(b) => pending_batches.push(b.id),
+                            Entry::Load(l) => pending_loads.push(l.id),
+                        }
+                    }
+                }
+                if pending_batches.len() > 1 {
+                    let id = pending_batches.remove(0);
+                    now += 0.25;
+                    e.on_batch_done(now, id);
+                    for entry in e.drain_outbox() {
+                        match entry {
+                            Entry::Batch(b) => pending_batches.push(b.id),
+                            Entry::Load(l) => pending_loads.push(l.id),
+                        }
+                    }
+                }
+            }
+            // Every drop must be provably infeasible at its drop time
+            // under the engine's lower-bound cost model.
+            for d in e.take_dropped() {
+                let cold = match d.residency {
+                    Residency::Offloaded | Residency::Offloading => *swap_floor,
+                    _ => 0.0,
+                };
+                let earliest = d.dropped_at + *exec_floor + cold;
+                if earliest <= d.deadline {
+                    return Err(format!(
+                        "dropped request {} was still feasible: earliest completion \
+                         {earliest} <= deadline {} (residency {:?})",
+                        d.id, d.deadline, d.residency
+                    ));
+                }
+                if d.dropped_at < d.arrival {
+                    return Err("drop predates arrival".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fcfs_and_edf_reports_identical_without_slos_across_registry() {
+    // With no SLOs every deadline is infinite, so EDF's (deadline,
+    // arrival, model) key collapses to FCFS's (arrival, model): the two
+    // disciplines must produce bit-identical seeded runs on every
+    // scenario in the registry.
+    for &name in scenarios::names() {
+        let run = |kind: SchedulerKind| {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.scenario = Some(name.to_string());
+            cfg.engine.scheduler = kind;
+            let (sys, _) = SimSystem::from_scenario(cfg, 8.0, 0xD15C).unwrap();
+            sys.run()
+        };
+        let fcfs = run(SchedulerKind::Fcfs);
+        let edf = run(SchedulerKind::Edf);
+        assert_eq!(fcfs.requests, edf.requests, "{name}: request records diverged");
+        assert_eq!(fcfs.swaps, edf.swaps, "{name}: swap records diverged");
+        assert_eq!(fcfs.events, edf.events, "{name}: event counts diverged");
+        assert!(fcfs.drops.is_empty() && edf.drops.is_empty());
+    }
+}
