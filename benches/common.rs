@@ -55,7 +55,21 @@ pub fn run_workload_cell(
     cv: f64,
     seed: u64,
 ) -> WorkloadCell {
-    let cfg = SystemConfig::workload_experiment(num_models, cap, max_batch);
+    run_workload_cell_with(num_models, cap, max_batch, rates, cv, seed, |c| c)
+}
+
+/// `run_workload_cell` with a config transform (e.g. switch the load
+/// design) applied before the run.
+pub fn run_workload_cell_with(
+    num_models: usize,
+    cap: usize,
+    max_batch: usize,
+    rates: &[f64],
+    cv: f64,
+    seed: u64,
+    transform: impl Fn(SystemConfig) -> SystemConfig,
+) -> WorkloadCell {
+    let cfg = transform(SystemConfig::workload_experiment(num_models, cap, max_batch));
     let workload = GammaWorkload::new(rates.to_vec(), cv, seed);
     let arrivals = workload.generate();
     let measure_start = workload.measure_start();
@@ -92,6 +106,37 @@ pub fn save_report(name: &str, json: computron::util::json::Json) {
     let path = dir.join(format!("{name}.json"));
     std::fs::write(&path, json.pretty()).expect("write report");
     println!("[report] wrote {}", path.display());
+}
+
+/// Destination of the machine-readable bench summary: `--json <path>`
+/// (after `cargo bench --bench <name> --`) when given, else
+/// `BENCH_<name>.json` in the working directory. These files are the
+/// cross-PR perf trajectory; CI uploads them as artifacts.
+pub fn bench_json_path(name: &str) -> std::path::PathBuf {
+    let args: Vec<String> = std::env::args().collect();
+    for pair in args.windows(2) {
+        if pair[0] == "--json" {
+            return std::path::PathBuf::from(&pair[1]);
+        }
+    }
+    std::path::PathBuf::from(format!("BENCH_{name}.json"))
+}
+
+/// Write the machine-readable `BENCH_<name>.json` summary.
+pub fn save_bench_json(name: &str, json: computron::util::json::Json) {
+    let path = bench_json_path(name);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).expect("mkdir bench json dir");
+        }
+    }
+    std::fs::write(&path, json.pretty()).expect("write bench json");
+    println!("[bench-json] wrote {}", path.display());
+}
+
+/// `--fast` (after `--`): trim workloads for CI smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast")
 }
 
 /// Format seconds for table cells.

@@ -4,19 +4,25 @@
 //! Targets (EXPERIMENTS.md §Perf): engine scheduling decision < 10 µs;
 //! DES throughput > 1M events/s; collective round-trip and JSON parse
 //! tracked for regressions.
+//!
+//! `cargo bench --bench perf_hotpath -- --fast` trims warmup/measure
+//! budgets and the sim workload for the CI perf smoke job; either way a
+//! machine-readable `BENCH_perf_hotpath.json` (or `--json <path>`)
+//! records the summaries so the perf trajectory is tracked across PRs.
 
 #[path = "common.rs"]
 mod common;
 
-use computron::config::{EngineConfig, SystemConfig};
+use computron::config::{EngineConfig, LoadDesign, SystemConfig};
 use computron::coordinator::engine::Engine;
 use computron::sim::{Driver, SimSystem};
 use computron::util::bench::{black_box, fmt_rate, section, Bencher};
 use computron::util::json::Json;
 
 fn main() {
-    section("Perf: L3 hot paths");
-    let mut b = Bencher::default();
+    let fast = common::fast_mode();
+    section(if fast { "Perf: L3 hot paths (fast mode)" } else { "Perf: L3 hot paths" });
+    let mut b = if fast { Bencher::fast() } else { Bencher::default() };
 
     // Engine request->dispatch round trip (resident model, no swap).
     b.bench("engine: on_request + drain (hot, resident)", {
@@ -73,10 +79,16 @@ fn main() {
         }
     });
 
-    // Whole-simulation throughput: events/sec on a Tab-1 style cell.
-    {
-        let cfg = SystemConfig::workload_experiment(3, 2, 8);
-        let workload = computron::workload::GammaWorkload::new(vec![10.0, 10.0, 10.0], 1.0, 7);
+    // Whole-simulation throughput: events/sec on a Tab-1 style cell, for
+    // both the monolithic async design and the chunked swap pipeline
+    // (the chunked inner loop carries extra chunk events — regressions in
+    // either show up here).
+    let mut sim_stats: Vec<Json> = Vec::new();
+    for design in [LoadDesign::AsyncPipelined, LoadDesign::ChunkedPipelined] {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.engine.load_design = design;
+        let rate = if fast { 3.0 } else { 10.0 };
+        let workload = computron::workload::GammaWorkload::new(vec![rate, rate, rate], 1.0, 7);
         let arrivals = workload.generate();
         let t0 = std::time::Instant::now();
         let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
@@ -84,12 +96,20 @@ fn main() {
         let report = sys.run();
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "sim: {} events, {} requests in {:.3}s host time -> {}",
+            "sim [{}]: {} events, {} requests in {:.3}s host time -> {}",
+            design.name(),
             report.events,
             report.requests.len(),
             dt,
             fmt_rate(report.events as f64 / dt)
         );
+        sim_stats.push(Json::from_pairs(vec![
+            ("design", design.name().into()),
+            ("events", report.events.into()),
+            ("requests", report.requests.len().into()),
+            ("host_secs", dt.into()),
+            ("events_per_sec", (report.events as f64 / dt).into()),
+        ]));
     }
 
     // JSON parse of a config-sized document.
@@ -106,5 +126,14 @@ fn main() {
         }
     });
 
+    common::save_bench_json(
+        "perf_hotpath",
+        Json::from_pairs(vec![
+            ("experiment", "perf_hotpath".into()),
+            ("fast", fast.into()),
+            ("micro", b.to_json()),
+            ("sim", Json::Arr(sim_stats)),
+        ]),
+    );
     println!("\nsummaries recorded; see EXPERIMENTS.md §Perf for targets");
 }

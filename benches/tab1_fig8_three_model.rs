@@ -65,11 +65,64 @@ fn main() {
     }
     println!("shape checks passed: burstier -> faster; skew tolerated");
 
-    common::save_report(
-        "tab1_fig8_three_model",
-        Json::from_pairs(vec![
-            ("experiment", "tab1_fig8".into()),
-            ("cells", Json::Arr(cells.iter().map(WorkloadCell::to_json).collect())),
-        ]),
+    // Chunked-pipeline oracle on the Fig 8 workload: rerun the
+    // heaviest-swapping cell (uniform skew, CV=0.25 — the most regular
+    // stream, so the most cold hits) with the layer-granular chunked
+    // pipeline. Same arrivals, same bytes moved; cold-start overlap must
+    // lower the mean latency and collapse time-to-first-chunk.
+    section("Fig 8 cold-start oracle: async vs chunked-pipelined, skew (1,1,1), CV = 0.25");
+    let rates = paper::SKEWS_3[0];
+    // The async side of this cell is exactly the grid's first entry
+    // (same skew, CV, and seed) — reuse it instead of re-simulating.
+    let async_cell = cells[0].clone();
+    assert!((async_cell.cv - 0.25).abs() < 1e-9 && async_cell.skew_label == paper::skew_label(&rates));
+    let chunked_cell = common::run_workload_cell_with(3, 2, 8, &rates, 0.25, 0xF168, |mut c| {
+        c.engine.load_design = computron::config::LoadDesign::ChunkedPipelined;
+        c
+    });
+    table(
+        &["design", "mean (s)", "p99 (s)", "swaps", "ttfc (s)", "overlap"],
+        &[
+            vec![
+                "async (monolithic)".into(),
+                common::fmt_s(async_cell.mean_latency),
+                common::fmt_s(async_cell.summary.p99),
+                async_cell.swaps.to_string(),
+                common::fmt_s(async_cell.mean_ttfc),
+                format!("{:.0}%", 100.0 * async_cell.mean_overlap),
+            ],
+            vec![
+                "chunked-pipelined".into(),
+                common::fmt_s(chunked_cell.mean_latency),
+                common::fmt_s(chunked_cell.summary.p99),
+                chunked_cell.swaps.to_string(),
+                common::fmt_s(chunked_cell.mean_ttfc),
+                format!("{:.0}%", 100.0 * chunked_cell.mean_overlap),
+            ],
+        ],
     );
+    assert!(
+        chunked_cell.mean_latency < async_cell.mean_latency,
+        "chunked mean {} must beat async {} on the fig8 workload",
+        chunked_cell.mean_latency,
+        async_cell.mean_latency
+    );
+    assert!(
+        chunked_cell.mean_ttfc < async_cell.mean_ttfc,
+        "time-to-first-chunk must collapse: {} vs {}",
+        chunked_cell.mean_ttfc,
+        async_cell.mean_ttfc
+    );
+    println!("cold-start oracle passed: chunked pipeline reduces fig8 mean latency");
+
+    let payload = Json::from_pairs(vec![
+        ("experiment", "tab1_fig8".into()),
+        ("cells", Json::Arr(cells.iter().map(WorkloadCell::to_json).collect())),
+        ("chunked_oracle", Json::from_pairs(vec![
+            ("async", async_cell.to_json()),
+            ("chunked", chunked_cell.to_json()),
+        ])),
+    ]);
+    common::save_report("tab1_fig8_three_model", payload.clone());
+    common::save_bench_json("tab1_fig8_three_model", payload);
 }

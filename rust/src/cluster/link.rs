@@ -193,6 +193,35 @@ mod tests {
     }
 
     #[test]
+    fn chunked_sequence_equals_monolithic_on_the_lane() {
+        // The α–β equivalence the chunked swap pipeline (DESIGN.md §6)
+        // relies on: n chunks moving the same total messages/bytes finish
+        // exactly when the single monolithic transfer would (α is per
+        // message, and the lane is FIFO with no inter-chunk gap). The sim
+        // worker enqueues chunks one at a time — each from the previous
+        // one's completion event, which lands at exactly these times — so
+        // a mid-transfer cancellation reclaims the not-yet-enqueued lane
+        // time for whoever preempted it.
+        let chunks: Vec<(usize, usize)> = vec![(161, 6_000_000_000); 4];
+        let (messages, bytes) = (644, 24_000_000_000);
+        let mut lane_a = Link::new(LinkModel::pcie4_pinned());
+        let mut lane_b = Link::new(LinkModel::pcie4_pinned());
+        let fins: Vec<SimTime> = chunks
+            .iter()
+            .map(|&(m, b)| lane_a.transfer(0.0, Direction::H2D, m, b))
+            .collect();
+        let mono = lane_b.transfer(0.0, Direction::H2D, messages, bytes);
+        assert_eq!(fins.len(), 4);
+        assert!(fins.windows(2).all(|w| w[0] < w[1]), "chunks complete in order");
+        assert!((fins[3] - mono).abs() < 1e-9, "split is free under α–β");
+        assert!(fins[0] < mono / 3.0, "first chunk lands far earlier");
+        assert_eq!(
+            lane_a.bytes_moved(Direction::H2D),
+            lane_b.bytes_moved(Direction::H2D)
+        );
+    }
+
+    #[test]
     fn transfer_respects_now() {
         let mut link = Link::new(LinkModel { alpha: 0.0, bandwidth: 1e9, pageable_copy_bw: f64::INFINITY });
         let f = link.transfer(5.0, Direction::H2D, 1, 500_000_000);

@@ -111,6 +111,13 @@ pub enum LoadDesign {
     /// stage (Fig 2) — violates load/data dependencies; kept to demonstrate
     /// the violation.
     Broadcast,
+    /// Chunked swap pipeline: shard transfers split into layer-granular
+    /// chunks (see `model::shard::chunk_plan` and `EngineConfig::
+    /// chunk_layers`), compute on a batch starts as soon as the layers it
+    /// needs are resident, and half-loaded models can be cancelled
+    /// mid-transfer. With a one-chunk plan (`chunk_layers` >= layers per
+    /// stage) this reproduces `AsyncPipelined` timings exactly.
+    ChunkedPipelined,
 }
 
 impl LoadDesign {
@@ -119,6 +126,7 @@ impl LoadDesign {
             LoadDesign::AsyncPipelined => "async",
             LoadDesign::SyncPipelined => "sync",
             LoadDesign::Broadcast => "broadcast",
+            LoadDesign::ChunkedPipelined => "chunked",
         }
     }
 
@@ -127,6 +135,7 @@ impl LoadDesign {
             "async" => Some(LoadDesign::AsyncPipelined),
             "sync" => Some(LoadDesign::SyncPipelined),
             "broadcast" => Some(LoadDesign::Broadcast),
+            "chunked" | "chunked-pipelined" => Some(LoadDesign::ChunkedPipelined),
             _ => None,
         }
     }
@@ -202,6 +211,11 @@ pub struct EngineConfig {
     /// Scheduling / admission discipline (DESIGN.md §5). `Fcfs`
     /// reproduces the paper's engine decision-for-decision.
     pub scheduler: SchedulerKind,
+    /// Layers per chunk for the `chunked` load design (ignored by the
+    /// other designs). `None` selects the default of layers-per-stage / 4;
+    /// any value >= layers-per-stage degenerates to one chunk — i.e. the
+    /// monolithic transfer, bit-for-bit (DESIGN.md §6).
+    pub chunk_layers: Option<usize>,
 }
 
 impl Default for EngineConfig {
@@ -213,6 +227,7 @@ impl Default for EngineConfig {
             load_design: LoadDesign::AsyncPipelined,
             prefetch: false,
             scheduler: SchedulerKind::Fcfs,
+            chunk_layers: None,
         }
     }
 }
@@ -269,6 +284,7 @@ pub enum ConfigError {
     ZeroCap,
     ZeroModels,
     ZeroBatch,
+    ZeroChunkLayers,
     CapExceedsMemory { cap: usize, shard_bytes: usize, gpu_mem: usize },
     UnknownScenario(String),
     UnknownScheduler(String),
@@ -284,6 +300,9 @@ impl std::fmt::Display for ConfigError {
             ConfigError::ZeroCap => write!(f, "resident_cap must be >= 1"),
             ConfigError::ZeroModels => write!(f, "num_models must be >= 1"),
             ConfigError::ZeroBatch => write!(f, "max_batch_size must be >= 1"),
+            ConfigError::ZeroChunkLayers => {
+                write!(f, "chunk_layers must be >= 1 (omit it for the default)")
+            }
             ConfigError::CapExceedsMemory { cap, shard_bytes, gpu_mem } => write!(
                 f,
                 "resident_cap {cap} x shard {shard_bytes}B exceeds GPU memory {gpu_mem}B \
@@ -369,6 +388,9 @@ impl SystemConfig {
         if self.engine.max_batch_size == 0 {
             return Err(ConfigError::ZeroBatch);
         }
+        if self.engine.chunk_layers == Some(0) {
+            return Err(ConfigError::ZeroChunkLayers);
+        }
         if let Some(name) = &self.scenario {
             if !crate::workload::scenarios::is_known(name) {
                 return Err(ConfigError::UnknownScenario(name.clone()));
@@ -426,6 +448,9 @@ impl SystemConfig {
             ("dispatch_overhead", self.hardware.dispatch_overhead.into()),
             ("pinned", self.hardware.pinned.into()),
         ]);
+        if let Some(n) = self.engine.chunk_layers {
+            j.set("chunk_layers", n.into());
+        }
         if let Some(s) = &self.scenario {
             j.set("scenario", s.as_str().into());
         }
@@ -483,6 +508,9 @@ impl SystemConfig {
         }
         if let Some(v) = j.get("prefetch").and_then(Json::as_bool) {
             cfg.engine.prefetch = v;
+        }
+        if let Some(v) = j.get("chunk_layers").and_then(Json::as_usize) {
+            cfg.engine.chunk_layers = Some(v);
         }
         if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
             cfg.hardware.gpu_mem = v;
@@ -596,6 +624,7 @@ mod tests {
             "workload_3model.json",
             "workload_6model.json",
             "slo_3model.json",
+            "chunked_3model.json",
         ] {
             let cfg = SystemConfig::from_file(&dir.join(name))
                 .unwrap_or_else(|e| panic!("{name}: {e}"));
@@ -607,6 +636,10 @@ mod tests {
         assert_eq!(cfg.engine.scheduler, SchedulerKind::Edf);
         assert_eq!(cfg.slos.as_deref(), Some(&[1.0, 3.0, 3.0][..]));
         assert_eq!(cfg.scenario.as_deref(), Some("bursty"));
+        // The chunked preset exercises the swap-pipeline fields.
+        let cfg = SystemConfig::from_file(&dir.join("chunked_3model.json")).unwrap();
+        assert_eq!(cfg.engine.load_design, LoadDesign::ChunkedPipelined);
+        assert_eq!(cfg.engine.chunk_layers, Some(2));
     }
 
     #[test]
@@ -681,6 +714,36 @@ mod tests {
             assert_eq!(SchedulerKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(SchedulerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn chunked_design_and_chunk_layers_roundtrip() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+        cfg.engine.chunk_layers = Some(2);
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine.load_design, LoadDesign::ChunkedPipelined);
+        assert_eq!(back.engine.chunk_layers, Some(2));
+
+        // Absent chunk_layers stays absent (auto default).
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine.chunk_layers, None);
+
+        // Zero chunk_layers rejected.
+        let mut bad = SystemConfig::workload_experiment(3, 2, 8);
+        bad.engine.chunk_layers = Some(0);
+        assert!(matches!(bad.validate(), Err(ConfigError::ZeroChunkLayers)));
+
+        // Both spellings parse; name() roundtrips.
+        assert_eq!(LoadDesign::parse("chunked"), Some(LoadDesign::ChunkedPipelined));
+        assert_eq!(
+            LoadDesign::parse("chunked-pipelined"),
+            Some(LoadDesign::ChunkedPipelined)
+        );
+        assert_eq!(LoadDesign::parse(LoadDesign::ChunkedPipelined.name()),
+            Some(LoadDesign::ChunkedPipelined));
     }
 
     #[test]

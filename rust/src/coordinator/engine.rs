@@ -86,6 +86,19 @@ pub struct SwapRecord {
     pub victim: Option<ModelId>,
     pub submitted: f64,
     pub completed: f64,
+    /// Submission → first chunk of the load resident on every worker —
+    /// the moment stage-0 compute may begin under the chunked pipeline.
+    /// For a monolithic load the whole shard is the first chunk, so this
+    /// equals the load's own completion latency.
+    pub time_to_first_chunk: f64,
+    /// Fraction of the load's chunks that landed while a batch for the
+    /// loading model was already in flight, i.e. how much of the transfer
+    /// the engine managed to hide behind compute. Always 0 for monolithic
+    /// loads (batches are gated on full residency).
+    pub overlap_fraction: f64,
+    /// True when the load was cancelled mid-transfer; `completed` is then
+    /// the cancellation-ack time and the model ended `Offloaded`.
+    pub cancelled: bool,
 }
 
 impl SwapRecord {
@@ -100,6 +113,14 @@ struct InflightLoad {
     acks_remaining: usize,
     /// Index into `swap_pairs`.
     pair: usize,
+    /// Worker acks received per non-final chunk (chunked loads only;
+    /// empty for monolithic loads, offloads, and cancels).
+    chunk_acks: Vec<usize>,
+    /// A cancel entry for this load is in flight: ignore its remaining
+    /// chunk/load acks; the cancel entry resolves it.
+    cancelled: bool,
+    /// For `dir == Cancel`: the load entry this cancels.
+    target: Option<EntryId>,
 }
 
 struct SwapPair {
@@ -109,6 +130,13 @@ struct SwapPair {
     /// Entries not yet fully acked (1 or 2).
     outstanding: usize,
     completed: Option<f64>,
+    /// Chunks in the load entry (1 for monolithic transfers).
+    total_chunks: usize,
+    /// When the load's first chunk was acked by every worker.
+    first_chunk_at: Option<f64>,
+    /// Chunks that landed while the loading model had in-flight batches.
+    overlapped_chunks: usize,
+    cancelled: bool,
 }
 
 /// The engine.
@@ -136,6 +164,13 @@ pub struct Engine {
     inflight_per_model: Vec<usize>,
     inflight_loads: HashMap<EntryId, InflightLoad>,
     swap_pairs: Vec<SwapPair>,
+    /// Chunks per load entry under the chunked pipeline; 1 (the default)
+    /// means monolithic transfers, in which case the engine behaves
+    /// exactly like the async design regardless of `cfg.load_design` —
+    /// the `chunk_layers = all` equivalence invariant (DESIGN.md §6).
+    chunks_per_load: usize,
+    /// Models with a cancel entry in flight (no early batches for them).
+    cancelling: Vec<bool>,
     next_entry: EntryId,
     next_request: RequestId,
     outbox: Vec<Entry>,
@@ -164,6 +199,8 @@ impl Engine {
             inflight_per_model: vec![0; num_models],
             inflight_loads: HashMap::new(),
             swap_pairs: Vec::new(),
+            chunks_per_load: 1,
+            cancelling: vec![false; num_models],
             next_entry: 0,
             next_request: 0,
             outbox: Vec::new(),
@@ -208,6 +245,23 @@ impl Engine {
         self.scheduler.name()
     }
 
+    /// Configure the chunked swap pipeline: each load entry transfers as
+    /// `n` layer-granular chunks (see `model::shard::chunk_plan`). Only
+    /// meaningful with `LoadDesign::ChunkedPipelined`; `n == 1` keeps the
+    /// monolithic behaviour bit-for-bit.
+    pub fn set_chunks_per_load(&mut self, n: usize) {
+        assert!(n >= 1);
+        self.chunks_per_load = n;
+    }
+
+    /// True when the chunked pipeline changes engine behaviour: batches
+    /// may be submitted to partially resident models and in-flight loads
+    /// may be cancelled. A one-chunk plan is monolithic by definition.
+    fn chunked_active(&self) -> bool {
+        self.cfg.load_design == crate::config::LoadDesign::ChunkedPipelined
+            && self.chunks_per_load > 1
+    }
+
     /// Deadline for a request for `model` arriving at `arrival`.
     pub fn deadline_for(&self, model: ModelId, arrival: f64) -> f64 {
         arrival + self.slos[model]
@@ -220,6 +274,7 @@ impl Engine {
             swap_cost: self.swap_cost,
             swap_floor: self.swap_floor,
             exec_floor: self.exec_floor,
+            chunked: self.chunked_active(),
         }
     }
 
@@ -303,7 +358,7 @@ impl Engine {
             .unwrap_or_else(|| panic!("unknown batch entry {entry_id}"));
         self.inflight_per_model[batch.model] -= 1;
         let submit = self.batch_submit_times.remove(&entry_id).expect("missing submit time");
-        for req in &batch.requests {
+        for req in batch.requests.iter() {
             self.completed.push(RequestRecord {
                 id: req.id,
                 model: req.model,
@@ -317,6 +372,46 @@ impl Engine {
         self.pump(now);
     }
 
+    /// One worker acknowledged completion of a non-final chunk of a
+    /// chunked load entry (chunks `0 .. total-1`; the final chunk acks as
+    /// the load entry itself via `on_load_ack`). Once every worker has
+    /// acked chunk `c`, the model advances to
+    /// `PartiallyResident { loaded: c + 1, total }`.
+    pub fn on_chunk_ack(&mut self, now: f64, entry_id: EntryId, chunk: usize) {
+        // A chunk ack may trail a cancellation that already resolved the
+        // entry — tolerated, not an error.
+        let Some(inflight) = self.inflight_loads.get_mut(&entry_id) else { return };
+        if inflight.cancelled || inflight.dir != LoadDirection::Load {
+            return;
+        }
+        debug_assert!(chunk < inflight.chunk_acks.len(), "chunk index out of plan");
+        inflight.chunk_acks[chunk] += 1;
+        if inflight.chunk_acks[chunk] < self.world {
+            return;
+        }
+        let model = inflight.model;
+        let pair_idx = inflight.pair;
+        let total = self.chunks_per_load;
+        // World-acks complete in chunk order (each worker acks its chunks
+        // in order), but guard monotonicity anyway.
+        let advance = match self.swap.state(model) {
+            Residency::Loading => true,
+            Residency::PartiallyResident { loaded, .. } => chunk + 1 > loaded,
+            _ => false,
+        };
+        if advance {
+            self.swap.on_chunk_loaded(model, chunk + 1, total);
+        }
+        let overlapped = self.inflight_per_model[model] > 0;
+        let pair = &mut self.swap_pairs[pair_idx];
+        if chunk == 0 && pair.first_chunk_at.is_none() {
+            pair.first_chunk_at = Some(now);
+        }
+        if overlapped {
+            pair.overlapped_chunks += 1;
+        }
+    }
+
     /// One worker acknowledged completion of a load entry.
     pub fn on_load_ack(&mut self, now: f64, entry_id: EntryId) {
         let finished = {
@@ -325,28 +420,66 @@ impl Engine {
                 .get_mut(&entry_id)
                 .unwrap_or_else(|| panic!("unknown load entry {entry_id}"));
             inflight.acks_remaining -= 1;
-            inflight.acks_remaining == 0
+            // A cancelled load never completes from its own acks; the
+            // cancel entry resolves it (and removes it) instead.
+            inflight.acks_remaining == 0 && !inflight.cancelled
         };
         if !finished {
             return;
         }
         let inflight = self.inflight_loads.remove(&entry_id).unwrap();
         match inflight.dir {
-            LoadDirection::Load => self.swap.on_load_complete(inflight.model, now),
+            LoadDirection::Load => {
+                let overlapped = self.inflight_per_model[inflight.model] > 0;
+                let pair = &mut self.swap_pairs[inflight.pair];
+                // The final chunk just landed everywhere; for monolithic
+                // loads it is also the *first* chunk.
+                if pair.first_chunk_at.is_none() {
+                    pair.first_chunk_at = Some(now);
+                }
+                if overlapped {
+                    pair.overlapped_chunks += 1;
+                }
+                self.swap.on_load_complete(inflight.model, now);
+            }
             LoadDirection::Offload => self.swap.on_offload_complete(inflight.model),
+            LoadDirection::Cancel => {
+                let target = inflight.target.expect("cancel entry without target");
+                self.inflight_loads.remove(&target);
+                self.swap.on_load_cancelled(inflight.model);
+                self.cancelling[inflight.model] = false;
+                self.swap_pairs[inflight.pair].cancelled = true;
+            }
         }
-        let pair = &mut self.swap_pairs[inflight.pair];
-        pair.outstanding -= 1;
-        if pair.outstanding == 0 {
-            pair.completed = Some(now);
+        self.settle_pair(inflight.pair, now);
+        self.pump(now);
+    }
+
+    /// One member (offload, load, or the load's cancel) of a swap pair
+    /// fully acked; record the pair once both members resolve.
+    fn settle_pair(&mut self, pair_idx: usize, now: f64) {
+        let done = {
+            let pair = &mut self.swap_pairs[pair_idx];
+            pair.outstanding -= 1;
+            if pair.outstanding == 0 {
+                pair.completed = Some(now);
+                true
+            } else {
+                false
+            }
+        };
+        if done {
+            let pair = &self.swap_pairs[pair_idx];
             self.swap_records.push(SwapRecord {
                 load_model: pair.load_model,
                 victim: pair.victim,
                 submitted: pair.submitted,
                 completed: now,
+                time_to_first_chunk: pair.first_chunk_at.unwrap_or(now) - pair.submitted,
+                overlap_fraction: pair.overlapped_chunks as f64 / pair.total_chunks as f64,
+                cancelled: pair.cancelled,
             });
         }
-        self.pump(now);
     }
 
     // ----- outputs -----
@@ -490,8 +623,23 @@ impl Engine {
                         // At its in-flight limit: its queue waits, younger
                         // queues may proceed.
                     }
-                    Residency::Loading | Residency::Offloading => {
-                        // In flight; batches gated until Resident.
+                    Residency::Loading | Residency::PartiallyResident { .. } => {
+                        // Chunked pipeline: batches may chase an in-flight
+                        // load — workers gate each layer's compute on its
+                        // chunk's arrival, so the transfer hides behind
+                        // execution (time-to-first-chunk, DESIGN.md §6).
+                        // Monolithic designs gate batches until Resident.
+                        if self.chunked_active()
+                            && !self.cancelling[model]
+                            && self.inflight_per_model[model] < self.max_inflight_per_model
+                        {
+                            self.submit_batch(now, model);
+                            progressed = true;
+                            break 'scan;
+                        }
+                    }
+                    Residency::Offloading => {
+                        // Draining; must complete before a reload can start.
                     }
                     Residency::Offloaded => {
                         let inflight = &self.inflight_per_model;
@@ -525,7 +673,12 @@ impl Engine {
                             }
                             SwapPlan::Blocked => {
                                 // Head-of-line: stop scheduling younger
-                                // queues so a victim can drain.
+                                // queues so a victim can drain. The chunked
+                                // pipeline can additionally preempt a stale
+                                // half-loaded model to free the slot.
+                                if self.chunked_active() {
+                                    self.try_cancel_stale_load(model);
+                                }
                                 break 'scan;
                             }
                             SwapPlan::AlreadyResident | SwapPlan::AlreadyLoading => {}
@@ -540,7 +693,11 @@ impl Engine {
     }
 
     fn submit_batch(&mut self, now: f64, model: ModelId) {
-        debug_assert!(self.swap.is_resident(model), "load dependency violated");
+        debug_assert!(
+            self.swap.is_resident(model)
+                || (self.chunked_active() && self.swap.state(model).is_loading()),
+            "load dependency violated"
+        );
         let requests = self.queues.pop_batch(model, self.cfg.max_batch_size);
         debug_assert!(!requests.is_empty());
         let id = self.next_entry;
@@ -554,6 +711,7 @@ impl Engine {
     }
 
     fn submit_swap(&mut self, now: f64, model: ModelId, victim: Option<ModelId>) {
+        let chunks = if self.chunked_active() { self.chunks_per_load } else { 1 };
         let pair_idx = self.swap_pairs.len();
         self.swap_pairs.push(SwapPair {
             load_model: model,
@@ -561,6 +719,10 @@ impl Engine {
             submitted: now,
             outstanding: if victim.is_some() { 2 } else { 1 },
             completed: None,
+            total_chunks: chunks,
+            first_chunk_at: None,
+            overlapped_chunks: 0,
+            cancelled: false,
         });
         // Offload first (paper measures swap from offload submission), then
         // the load immediately after — the backend overlaps them.
@@ -569,7 +731,15 @@ impl Engine {
             self.next_entry += 1;
             self.inflight_loads.insert(
                 id,
-                InflightLoad { model: v, dir: LoadDirection::Offload, acks_remaining: self.world, pair: pair_idx },
+                InflightLoad {
+                    model: v,
+                    dir: LoadDirection::Offload,
+                    acks_remaining: self.world,
+                    pair: pair_idx,
+                    chunk_acks: Vec::new(),
+                    cancelled: false,
+                    target: None,
+                },
             );
             self.outbox.push(Entry::Load(LoadEntry { id, model: v, dir: LoadDirection::Offload }));
         }
@@ -577,9 +747,76 @@ impl Engine {
         self.next_entry += 1;
         self.inflight_loads.insert(
             id,
-            InflightLoad { model, dir: LoadDirection::Load, acks_remaining: self.world, pair: pair_idx },
+            InflightLoad {
+                model,
+                dir: LoadDirection::Load,
+                acks_remaining: self.world,
+                pair: pair_idx,
+                chunk_acks: vec![0; chunks - 1],
+                cancelled: false,
+                target: None,
+            },
         );
         self.outbox.push(Entry::Load(LoadEntry { id, model, dir: LoadDirection::Load }));
+    }
+
+    /// Abort model `model`'s in-flight chunked load: emit a cancel entry
+    /// that makes every worker stop dispatching further chunks and
+    /// discard the ones already on GPU (the pinned host copy stays the
+    /// source of truth). Legal only under the chunked pipeline, for a
+    /// model that is Loading/PartiallyResident with no in-flight batches
+    /// — cancelling a model whose batch entries are already in the pipes
+    /// would violate the load dependency. Returns true iff a cancel
+    /// entry was issued; the swap slot frees when every worker acks.
+    pub fn cancel_swap_in(&mut self, model: ModelId) -> bool {
+        if !self.chunked_active()
+            || self.cancelling[model]
+            || !self.swap.state(model).is_loading()
+            || self.inflight_per_model[model] != 0
+        {
+            return false;
+        }
+        let found = self
+            .inflight_loads
+            .iter()
+            .find(|(_, l)| l.model == model && l.dir == LoadDirection::Load && !l.cancelled)
+            .map(|(&id, l)| (id, l.pair));
+        let Some((load_id, pair)) = found else { return false };
+        self.inflight_loads.get_mut(&load_id).unwrap().cancelled = true;
+        let id = self.next_entry;
+        self.next_entry += 1;
+        self.inflight_loads.insert(
+            id,
+            InflightLoad {
+                model,
+                dir: LoadDirection::Cancel,
+                acks_remaining: self.world,
+                pair,
+                chunk_acks: Vec::new(),
+                cancelled: false,
+                target: Some(load_id),
+            },
+        );
+        self.cancelling[model] = true;
+        self.outbox.push(Entry::Load(LoadEntry { id, model, dir: LoadDirection::Cancel }));
+        true
+    }
+
+    /// A burst flipped priorities while `requested`'s swap-in is Blocked:
+    /// reclaim the cap slot from a stale in-flight load — one with no
+    /// queued requests and no in-flight batches (in practice a
+    /// speculative prefetch made obsolete by the burst).
+    fn try_cancel_stale_load(&mut self, requested: ModelId) {
+        let stale = (0..self.cancelling.len()).find(|&m| {
+            m != requested
+                && self.swap.state(m).is_loading()
+                && !self.cancelling[m]
+                && self.inflight_per_model[m] == 0
+                && self.queues.len(m) == 0
+        });
+        if let Some(m) = stale {
+            self.cancel_swap_in(m);
+        }
     }
 }
 
@@ -601,7 +838,23 @@ mod tests {
             load_design: crate::config::LoadDesign::AsyncPipelined,
             prefetch: false,
             scheduler: crate::config::SchedulerKind::Fcfs,
+            chunk_layers: None,
         }
+    }
+
+    /// Chunked-pipeline engine: `chunks` chunks per load entry.
+    fn chunked_engine(models: usize, cap: usize, max_batch: usize, chunks: usize) -> Engine {
+        let mut e = engine_for(
+            models,
+            1,
+            1,
+            EngineConfig {
+                load_design: crate::config::LoadDesign::ChunkedPipelined,
+                ..cfg(cap, max_batch)
+            },
+        );
+        e.set_chunks_per_load(chunks);
+        e
     }
 
     /// Ack a load entry from all `world` workers.
@@ -678,6 +931,130 @@ mod tests {
         assert_eq!(recs[0].submitted, 1.0);
         assert_eq!(recs[0].completed, 2.0);
         assert!((recs[0].duration() - 1.0).abs() < 1e-12);
+        // Monolithic load: the whole shard is the first chunk, batches
+        // never overlapped it, nothing was cancelled.
+        assert!((recs[0].time_to_first_chunk - 1.0).abs() < 1e-12);
+        assert_eq!(recs[0].overlap_fraction, 0.0);
+        assert!(!recs[0].cancelled);
+    }
+
+    #[test]
+    fn chunked_engine_submits_batch_while_loading() {
+        // The tentpole behaviour: under the chunked pipeline the batch
+        // entry follows the load entry into the pipes immediately, so
+        // compute can chase the chunks instead of waiting for residency.
+        let mut e = chunked_engine(2, 1, 8, 4);
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 3, "offload + load + early batch, got {out:?}");
+        assert!(out[0].is_load() && out[1].is_load());
+        match &out[2] {
+            Entry::Batch(b) => assert_eq!(b.model, 1),
+            _ => panic!("expected early batch, got {:?}", out[2]),
+        }
+        assert!(e.residency(1).is_loading());
+        // The async engine gates the same batch until the load acks.
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        assert_eq!(e.drain_outbox().len(), 2, "monolithic: no early batch");
+    }
+
+    #[test]
+    fn chunk_acks_advance_partial_residency_and_ttfc() {
+        let mut e = chunked_engine(2, 1, 8, 4);
+        e.on_request(0.0, 0, 8);
+        let out = e.drain_outbox();
+        // No victim: load + early batch.
+        let load_id = out[0].id();
+        let batch_id = out[1].id();
+        assert_eq!(e.residency(0), Residency::Loading);
+        e.on_chunk_ack(0.5, load_id, 0);
+        assert_eq!(e.residency(0), Residency::PartiallyResident { loaded: 1, total: 4 });
+        e.on_chunk_ack(0.7, load_id, 1);
+        e.on_chunk_ack(0.9, load_id, 2);
+        assert_eq!(e.residency(0), Residency::PartiallyResident { loaded: 3, total: 4 });
+        e.on_load_ack(1.1, load_id);
+        assert_eq!(e.residency(0), Residency::Resident);
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert!((recs[0].time_to_first_chunk - 0.5).abs() < 1e-12);
+        // All 4 chunks landed while the early batch was in flight.
+        assert!((recs[0].overlap_fraction - 1.0).abs() < 1e-12);
+        assert!(!recs[0].cancelled);
+        e.on_batch_done(1.5, batch_id);
+        assert_eq!(e.take_completed().len(), 1);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn cancellation_mid_transfer_resolves_cleanly() {
+        // Model 0 resident+idle, cap 1. A request for model 1 starts a
+        // swap (victim 0) and an early batch; once that batch completes
+        // and model 0 is requested again, the engine is Blocked (model 0
+        // still Offloading) — then, when the drain finishes but model 1
+        // is a stale half-loaded model with no demand, the blocked pump
+        // cancels it mid-transfer and reclaims the slot.
+        let mut e = chunked_engine(2, 1, 8, 4);
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 3);
+        let (off0, load1, batch1) = (out[0].id(), out[1].id(), out[2].id());
+        e.on_chunk_ack(1.2, load1, 0);
+        assert_eq!(e.residency(1), Residency::PartiallyResident { loaded: 1, total: 4 });
+        // The early batch completes; model 1 now has no queued work and
+        // no in-flight batches, but still holds the cap slot.
+        e.on_batch_done(1.5, batch1);
+        assert_eq!(e.take_completed().len(), 1);
+        // Demand flips back to model 0: it is still Offloading, so the
+        // request just queues.
+        e.on_request(2.0, 0, 8);
+        assert!(e.drain_outbox().is_empty());
+        // The drain completes: model 0's swap-in is now Blocked (the cap
+        // slot is held by stale half-loaded model 1), so the pump
+        // preempts model 1 with a cancel entry.
+        e.on_load_ack(2.5, off0);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 1, "expected a cancel entry, got {out:?}");
+        let cancel1 = match &out[0] {
+            Entry::Load(l) => {
+                assert_eq!(l.model, 1);
+                assert_eq!(l.dir, LoadDirection::Cancel);
+                l.id
+            }
+            _ => panic!("expected cancel entry"),
+        };
+        // Chunk acks racing the cancel are tolerated and ignored.
+        e.on_chunk_ack(2.6, load1, 1);
+        assert_eq!(e.residency(1), Residency::PartiallyResident { loaded: 1, total: 4 });
+        // Cancel acks: slot frees, model 1 ends Offloaded, and model 0's
+        // queued request immediately starts a fresh swap-in + early batch.
+        e.on_load_ack(3.0, cancel1);
+        assert_eq!(e.residency(1), Residency::Offloaded);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 2, "load + early batch for model 0, got {out:?}");
+        assert!(out[0].is_load());
+        assert_eq!(out[0].model(), 0);
+        // The cancelled pair is recorded as such.
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].cancelled);
+        assert_eq!(recs[0].load_model, 1);
+        assert_eq!(recs[0].victim, Some(0));
+        assert_eq!(recs[0].completed, 3.0);
+        assert!((recs[0].time_to_first_chunk - 0.2).abs() < 1e-12);
+        // Drain model 0's fresh load to quiescence and check accounting.
+        e.on_load_ack(3.5, out[0].id());
+        let batch = e.drain_outbox();
+        assert!(batch.is_empty(), "early batch was already submitted: {batch:?}");
+        e.on_batch_done(4.0, out[1].id());
+        assert_eq!(e.take_completed().len(), 1);
+        assert!(e.idle());
+        let stats = e.swap_stats();
+        assert_eq!(stats.loads_cancelled, 1);
+        assert_eq!(stats.loads_started, stats.loads_completed + stats.loads_cancelled);
     }
 
     #[test]

@@ -27,6 +27,12 @@ pub enum LoadDirection {
     Load,
     /// GPU → CPU: evict the model (parameters stay pinned on the host).
     Offload,
+    /// Abort an in-flight chunked load: stop dispatching further chunks
+    /// and discard the chunks already on the GPU (the host copy stays
+    /// pinned, so nothing needs to drain back). Only the chunked swap
+    /// pipeline emits these (DESIGN.md §6); workers ack once the
+    /// in-flight chunk, if any, completes.
+    Cancel,
 }
 
 impl LoadDirection {
@@ -34,16 +40,21 @@ impl LoadDirection {
         match self {
             LoadDirection::Load => "load",
             LoadDirection::Offload => "offload",
+            LoadDirection::Cancel => "cancel",
         }
     }
 }
 
 /// A packed batch of requests for one model, pipelined through all stages.
+///
+/// The request list is shared (`Arc`): a batch entry is cloned once per
+/// TP lane at routing time and once into the engine's in-flight table, so
+/// a deep `Vec` clone on every submit was measurable on the sim hot path.
 #[derive(Clone, Debug)]
 pub struct BatchEntry {
     pub id: EntryId,
     pub model: ModelId,
-    pub requests: Vec<Request>,
+    pub requests: std::sync::Arc<[Request]>,
     /// Max input length in the batch (padding length for execution).
     pub seqlen: usize,
 }
@@ -53,7 +64,7 @@ impl BatchEntry {
         assert!(!requests.is_empty(), "empty batch entry");
         debug_assert!(requests.iter().all(|r| r.model == model));
         let seqlen = requests.iter().map(|r| r.input_len).max().unwrap();
-        BatchEntry { id, model, requests, seqlen }
+        BatchEntry { id, model, requests: requests.into(), seqlen }
     }
 
     pub fn batch_size(&self) -> usize {

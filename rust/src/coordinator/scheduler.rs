@@ -47,6 +47,13 @@ pub struct SchedCtx {
     /// *Lower bound* on any request's batch-submit → completion time
     /// (pipe hops + compute), also part of `shed`'s proof obligation.
     pub exec_floor: f64,
+    /// True when the chunked swap pipeline is active (DESIGN.md §6): the
+    /// load then *overlaps* execution — compute starts after the first
+    /// chunk, so a cold request's earliest completion is
+    /// `max(swap_floor, exec_floor)` rather than their sum. (`swap_cost`
+    /// is likewise supplied as a time-to-first-chunk estimate by backends
+    /// running the chunked design.)
+    pub chunked: bool,
 }
 
 /// Snapshot of one model with queued work, taken at the top of a
@@ -113,9 +120,17 @@ fn by_arrival(candidates: &mut [Candidate]) {
 fn earliest_completion(ctx: &SchedCtx, residency: Residency) -> f64 {
     let cold = match residency {
         Residency::Offloaded | Residency::Offloading => ctx.swap_floor,
-        Residency::Resident | Residency::Loading => 0.0,
+        Residency::Resident | Residency::Loading | Residency::PartiallyResident { .. } => 0.0,
     };
-    ctx.now + ctx.exec_floor + cold
+    if ctx.chunked {
+        // Transfer and execution overlap: a request still cannot finish
+        // before the full shard has crossed the link (the last layer's
+        // chunk lands no earlier than swap_floor) NOR before the pure
+        // execution floor — but it no longer pays them in series.
+        ctx.now + ctx.exec_floor.max(cold)
+    } else {
+        ctx.now + ctx.exec_floor + cold
+    }
 }
 
 /// `fcfs` — the paper's oldest-queue-head discipline, preserved exactly
@@ -287,7 +302,14 @@ mod tests {
     }
 
     fn ctx(swap_cost: f64) -> SchedCtx {
-        SchedCtx { now: 10.0, max_batch_size: 8, swap_cost, swap_floor: 0.75, exec_floor: 0.03 }
+        SchedCtx {
+            now: 10.0,
+            max_batch_size: 8,
+            swap_cost,
+            swap_floor: 0.75,
+            exec_floor: 0.03,
+            chunked: false,
+        }
     }
 
     fn order_of(s: &dyn Scheduler, ctx: &SchedCtx, mut cands: Vec<Candidate>) -> Vec<ModelId> {
@@ -403,6 +425,31 @@ mod tests {
         }
         assert!(Shed.sheds());
         assert!(!Fcfs.sheds() && !Edf.sheds() && !SwapAware.sheds());
+    }
+
+    #[test]
+    fn chunked_cost_model_overlaps_transfer_and_execution() {
+        // Chunked pipeline: cold earliest completion is now + max(floors),
+        // not now + sum — requests that the serial model would shed stay
+        // admissible.
+        let mut c = ctx(1.0); // swap_floor 0.75, exec_floor 0.03, now 10.0
+        c.chunked = true;
+        assert!(Shed.admit(&c, 10.75, Residency::Offloaded), "max(0.75, 0.03) = 0.75");
+        assert!(!Shed.admit(&c, 10.74, Residency::Offloaded));
+        // Serial model would require 10.78.
+        let serial = ctx(1.0);
+        assert!(!Shed.admit(&serial, 10.75, Residency::Offloaded));
+        // Warm models: unchanged (exec floor only).
+        assert!(Shed.admit(&c, 10.03, Residency::Resident));
+        assert!(!Shed.admit(&c, 10.02, Residency::Resident));
+        // Partial residency counts as warm: the load may complete any
+        // moment and compute is already overlapping.
+        assert!(Shed.admit(&c, 10.03, Residency::PartiallyResident { loaded: 1, total: 4 }));
+        // swap-aware treats a partially resident model as warm: its swap
+        // is already paid for, so no amortized penalty on the key.
+        let partial =
+            cand(0, 3.0, f64::INFINITY, 1, Residency::PartiallyResident { loaded: 2, total: 4 });
+        assert_eq!(SwapAware::effective_key(&c, &partial), 3.0);
     }
 
     #[test]

@@ -20,10 +20,22 @@ pub enum Residency {
     Offloaded,
     /// Load entry in flight (CPU → GPU).
     Loading,
+    /// Chunked load in flight with `loaded` of `total` chunks already on
+    /// every worker (DESIGN.md §6). Counts against the cap exactly like
+    /// `Loading`; the chunked engine may submit batches in this state —
+    /// workers gate each layer's compute on its chunk's arrival.
+    PartiallyResident { loaded: usize, total: usize },
     /// Fully in GPU memory; batch entries may be submitted.
     Resident,
     /// Offload entry in flight (GPU → CPU).
     Offloading,
+}
+
+impl Residency {
+    /// True while a load (monolithic or chunked) is in flight.
+    pub fn is_loading(self) -> bool {
+        matches!(self, Residency::Loading | Residency::PartiallyResident { .. })
+    }
 }
 
 /// Outcome of a swap-in attempt.
@@ -48,6 +60,10 @@ pub struct SwapStats {
     pub offloads_started: u64,
     pub loads_completed: u64,
     pub offloads_completed: u64,
+    /// Loads aborted mid-transfer (chunked pipeline only); every started
+    /// load either completes or is cancelled:
+    /// `loads_started == loads_completed + loads_cancelled` at quiescence.
+    pub loads_cancelled: u64,
     pub blocked: u64,
 }
 
@@ -90,7 +106,14 @@ impl SwapManager {
     pub fn counted(&self) -> usize {
         self.states
             .iter()
-            .filter(|s| matches!(s, Residency::Resident | Residency::Loading))
+            .filter(|s| {
+                matches!(
+                    s,
+                    Residency::Resident
+                        | Residency::Loading
+                        | Residency::PartiallyResident { .. }
+                )
+            })
             .count()
     }
 
@@ -116,7 +139,9 @@ impl SwapManager {
     ) -> SwapPlan {
         match self.states[model] {
             Residency::Resident => return SwapPlan::AlreadyResident,
-            Residency::Loading => return SwapPlan::AlreadyLoading,
+            Residency::Loading | Residency::PartiallyResident { .. } => {
+                return SwapPlan::AlreadyLoading
+            }
             // Must finish draining before it can be reloaded.
             Residency::Offloading => {
                 self.stats.blocked += 1;
@@ -185,17 +210,46 @@ impl SwapManager {
         Some(Some(victim))
     }
 
+    /// All workers acknowledged completion of chunk `loaded - 1` of a
+    /// chunked load: the model is now partially resident. Chunk acks
+    /// arrive in order, so `loaded` only moves forward.
+    pub fn on_chunk_loaded(&mut self, model: ModelId, loaded: usize, total: usize) {
+        assert!(loaded >= 1 && loaded < total, "partial progress out of range");
+        match self.states[model] {
+            Residency::Loading => {}
+            Residency::PartiallyResident { loaded: prev, total: t } => {
+                assert_eq!(t, total);
+                assert!(loaded > prev, "chunk progress must be monotone");
+            }
+            s => panic!("chunk progress for model {model} in state {s:?}"),
+        }
+        self.states[model] = Residency::PartiallyResident { loaded, total };
+    }
+
     /// All workers acknowledged the load: model becomes resident.
     pub fn on_load_complete(&mut self, model: ModelId, now: f64) {
-        assert_eq!(
-            self.states[model],
-            Residency::Loading,
+        assert!(
+            self.states[model].is_loading(),
             "load completion for model {model} in state {:?}",
             self.states[model]
         );
         self.states[model] = Residency::Resident;
         self.stats.loads_completed += 1;
         self.policy.on_insert(model, now);
+    }
+
+    /// All workers acknowledged a mid-transfer cancellation: the chunks
+    /// already on GPU were discarded (the pinned host copy is the source
+    /// of truth, so nothing drains back) and the model's cap slot is
+    /// free again.
+    pub fn on_load_cancelled(&mut self, model: ModelId) {
+        assert!(
+            self.states[model].is_loading(),
+            "cancellation for model {model} in state {:?}",
+            self.states[model]
+        );
+        self.states[model] = Residency::Offloaded;
+        self.stats.loads_cancelled += 1;
     }
 
     /// All workers acknowledged the offload: memory is drained.
@@ -325,36 +379,120 @@ mod tests {
     }
 
     #[test]
+    fn partial_residency_lifecycle() {
+        let mut m = mgr(2, 1);
+        assert_eq!(m.plan_swap_in(0, 0.0, |_| true), SwapPlan::Start { victim: None });
+        m.on_chunk_loaded(0, 1, 4);
+        assert_eq!(m.state(0), Residency::PartiallyResident { loaded: 1, total: 4 });
+        assert!(m.state(0).is_loading());
+        assert!(!m.is_resident(0));
+        // Still counts against the cap and still reads as "already loading".
+        assert_eq!(m.counted(), 1);
+        assert_eq!(m.plan_swap_in(0, 1.0, |_| true), SwapPlan::AlreadyLoading);
+        assert_eq!(m.plan_swap_in(1, 1.0, |_| true), SwapPlan::Blocked);
+        m.on_chunk_loaded(0, 3, 4);
+        assert_eq!(m.state(0), Residency::PartiallyResident { loaded: 3, total: 4 });
+        m.on_load_complete(0, 2.0);
+        assert!(m.is_resident(0));
+        assert_eq!(m.stats().loads_completed, 1);
+    }
+
+    #[test]
+    fn cancellation_frees_the_cap_slot() {
+        let mut m = mgr(2, 1);
+        m.force_resident(0, 0.0);
+        assert_eq!(m.plan_swap_in(1, 1.0, |_| true), SwapPlan::Start { victim: Some(0) });
+        m.on_chunk_loaded(1, 1, 4);
+        // Cancel the half-loaded model: the slot frees, the victim keeps
+        // draining independently.
+        m.on_load_cancelled(1);
+        assert_eq!(m.state(1), Residency::Offloaded);
+        assert_eq!(m.counted(), 0);
+        m.on_offload_complete(0);
+        assert_eq!(m.state(0), Residency::Offloaded);
+        let s = m.stats();
+        assert_eq!(s.loads_started, 1);
+        assert_eq!(s.loads_completed, 0);
+        assert_eq!(s.loads_cancelled, 1);
+        // The slot is genuinely reusable.
+        assert_eq!(m.plan_swap_in(0, 2.0, |_| true), SwapPlan::Start { victim: None });
+    }
+
+    #[test]
+    #[should_panic(expected = "cancellation")]
+    fn cancel_of_non_loading_model_panics() {
+        let mut m = mgr(2, 1);
+        m.force_resident(0, 0.0);
+        m.on_load_cancelled(0);
+    }
+
+    #[test]
     fn cap_never_exceeded_under_random_ops() {
         use crate::util::prop;
         use crate::util::rng::Rng;
+        // Randomly interleaves swap-ins with chunked partial progress and
+        // mid-transfer cancellations: the cap invariant and the
+        // started == completed + cancelled accounting must hold at every
+        // step, and a cancelled model must be immediately reusable.
         prop::check(
             "swap-cap-invariant",
             |rng: &mut Rng| {
                 let n = prop::usize_in(rng, 2, 6);
                 let cap = prop::usize_in(rng, 1, n - 1);
-                let ops: Vec<usize> = (0..64).map(|_| rng.index(n)).collect();
+                let ops: Vec<(usize, usize)> =
+                    (0..64).map(|_| (rng.index(n), rng.index(4))).collect();
                 (n, cap, ops)
             },
             |(n, cap, ops)| {
                 let mut m = mgr(*n, *cap);
                 // Track in-flight to complete them eagerly (single-threaded
                 // simulation of the engine's completion callbacks).
-                for &model in ops {
+                for &(model, kind) in ops {
+                    let mut started = false;
                     match m.plan_swap_in(model, 0.0, |_| true) {
                         SwapPlan::Start { victim } => {
+                            started = true;
                             if m.counted() > *cap {
                                 return Err(format!("cap exceeded: {}", m.counted()));
                             }
                             if let Some(v) = victim {
                                 m.on_offload_complete(v);
                             }
-                            m.on_load_complete(model, 0.0);
+                            match kind {
+                                // Monolithic completion.
+                                0 => m.on_load_complete(model, 0.0),
+                                // Chunked completion with partial progress.
+                                1 => {
+                                    m.on_chunk_loaded(model, 1, 4);
+                                    m.on_chunk_loaded(model, 3, 4);
+                                    m.on_load_complete(model, 0.0);
+                                }
+                                // Cancel straight from Loading.
+                                2 => m.on_load_cancelled(model),
+                                // Cancel from PartiallyResident.
+                                _ => {
+                                    m.on_chunk_loaded(model, 2, 4);
+                                    m.on_load_cancelled(model);
+                                }
+                            }
                         }
                         _ => {}
                     }
                     if m.counted() > *cap {
                         return Err(format!("cap exceeded: {}", m.counted()));
+                    }
+                    let s = m.stats();
+                    if s.loads_started != s.loads_completed + s.loads_cancelled {
+                        return Err(format!(
+                            "load accounting broken: started {} != completed {} + cancelled {}",
+                            s.loads_started, s.loads_completed, s.loads_cancelled
+                        ));
+                    }
+                    if started && kind >= 2 && m.state(model) != Residency::Offloaded {
+                        return Err(format!(
+                            "cancelled model {model} not offloaded: {:?}",
+                            m.state(model)
+                        ));
                     }
                 }
                 Ok(())

@@ -107,7 +107,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("duration", "measured seconds", Some("30"))
         .opt("seed", "workload seed", Some("42"))
         .opt("policy", "lru|lfu|fifo|random", Some("lru"))
-        .opt("load-design", "async|sync|broadcast", Some("async"))
+        .opt("load-design", "async|sync|broadcast|chunked", Some("async"))
+        .opt("chunk-layers", "layers per chunk for --load-design chunked (default layers-per-stage/4; >= layers-per-stage is monolithic)", None)
         .opt("scheduler", "fcfs|edf|swap-aware|shed (see `computron schedulers`)", None)
         .opt("slo", "uniform per-model latency SLO in seconds", None)
         .opt("slos", "comma-separated per-model SLOs in seconds (overrides --slo)", None)
@@ -128,6 +129,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .ok_or_else(|| anyhow!("bad --policy"))?;
     cfg.engine.load_design = LoadDesign::parse(args.get_or("load-design", "async"))
         .ok_or_else(|| anyhow!("bad --load-design"))?;
+    if let Some(n) = args.get_usize("chunk-layers")? {
+        cfg.engine.chunk_layers = Some(n);
+    }
     // Scheduler / SLO flags override the config file; absent flags keep
     // the config's values (default: fcfs, no SLOs).
     if let Some(s) = args.get("scheduler") {
@@ -196,6 +200,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         vec!["mean latency (s)".into(), format!("{:.3}", cell.mean_latency)],
         vec!["p50 / p90 / p99 (s)".into(), format!("{:.3} / {:.3} / {:.3}", cell.summary.p50, cell.summary.p90, cell.summary.p99)],
         vec!["swaps".into(), cell.swaps.to_string()],
+        vec!["mean time-to-first-chunk (s)".into(), format!("{:.3}", cell.mean_ttfc)],
+        vec!["swap/compute overlap".into(), format!("{:.0}%", 100.0 * cell.mean_overlap)],
+        vec!["cancelled swaps".into(), cell.cancelled_swaps.to_string()],
         vec!["dependency violations".into(), report.violations.to_string()],
         vec!["sim events".into(), report.events.to_string()],
         vec!["host wall (s)".into(), format!("{:.3}", report.wall_secs)],

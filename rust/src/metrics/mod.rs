@@ -23,6 +23,16 @@ pub struct WorkloadCell {
     pub cdf: Vec<(f64, f64)>,
     pub requests: usize,
     pub swaps: usize,
+    /// Swaps cancelled mid-transfer in the measured window (chunked
+    /// pipeline only).
+    pub cancelled_swaps: usize,
+    /// Mean time-to-first-chunk over completed measured swaps: how long a
+    /// cold model waits before its first layers can compute. Equals the
+    /// mean load latency for monolithic transfers; 0 when no swaps.
+    pub mean_ttfc: f64,
+    /// Mean fraction of load chunks that landed while a batch for the
+    /// loading model was in flight (transfer hidden behind compute).
+    pub mean_overlap: f64,
     /// Requests dropped by admission control in the measured window.
     pub drops: usize,
     /// Fraction of measured *completed* requests that met their deadline
@@ -54,6 +64,17 @@ impl WorkloadCell {
         let attained = measured.iter().filter(|r| r.attained()).count();
         let drops = report.drops.iter().filter(|d| d.arrival >= measure_start).count();
         let served = measured.len();
+        let measured_swaps: Vec<&SwapRecord> =
+            report.swaps.iter().filter(|s| s.submitted >= measure_start).collect();
+        let completed_swaps: Vec<&SwapRecord> =
+            measured_swaps.iter().copied().filter(|s| !s.cancelled).collect();
+        let swap_mean = |f: fn(&SwapRecord) -> f64| {
+            if completed_swaps.is_empty() {
+                0.0
+            } else {
+                completed_swaps.iter().map(|&s| f(s)).sum::<f64>() / completed_swaps.len() as f64
+            }
+        };
         WorkloadCell {
             skew_label: skew_label.to_string(),
             cv,
@@ -61,11 +82,10 @@ impl WorkloadCell {
             summary: summary.clone(),
             cdf: cdf(&lats, 100),
             requests: served,
-            swaps: report
-                .swaps
-                .iter()
-                .filter(|s| s.submitted >= measure_start)
-                .count(),
+            swaps: measured_swaps.len(),
+            cancelled_swaps: measured_swaps.iter().filter(|s| s.cancelled).count(),
+            mean_ttfc: swap_mean(|s| s.time_to_first_chunk),
+            mean_overlap: swap_mean(|s| s.overlap_fraction),
             drops,
             attainment: if served == 0 { 0.0 } else { attained as f64 / served as f64 },
             goodput: if duration > 0.0 { attained as f64 / duration } else { 0.0 },
@@ -94,6 +114,9 @@ impl WorkloadCell {
             ),
             ("requests", self.requests.into()),
             ("swaps", self.swaps.into()),
+            ("cancelled_swaps", self.cancelled_swaps.into()),
+            ("mean_ttfc", self.mean_ttfc.into()),
+            ("mean_overlap", self.mean_overlap.into()),
             ("drops", self.drops.into()),
             ("attainment", self.attainment.into()),
             ("goodput", self.goodput.into()),
@@ -110,6 +133,11 @@ pub struct SwapScalingPoint {
     pub mean_swap: f64,
     pub mean_exec: f64,
     pub mean_e2e: f64,
+    /// Mean time-to-first-chunk: when a cold model's first layers can
+    /// start computing (== mean load latency for monolithic transfers).
+    pub mean_ttfc: f64,
+    /// Mean fraction of the load hidden behind compute (0 monolithic).
+    pub mean_overlap: f64,
     /// 24 GB / (n · 32 GB/s): the paper's ideal target.
     pub ideal: f64,
 }
@@ -123,7 +151,11 @@ impl SwapScalingPoint {
         model_bytes: usize,
         link_bandwidth: f64,
     ) -> SwapScalingPoint {
-        let mean_swap = mean(swaps.iter().map(SwapRecord::duration));
+        // Cancelled swaps (chunked pipeline) never completed a transfer —
+        // their duration is submit → cancel-ack — so every swap statistic
+        // here averages completed swaps only.
+        let completed: Vec<&SwapRecord> = swaps.iter().filter(|s| !s.cancelled).collect();
+        let mean_swap = mean(completed.iter().map(|s| s.duration()));
         let mean_e2e = mean(requests.iter().map(RequestRecord::latency));
         SwapScalingPoint {
             tp,
@@ -131,6 +163,8 @@ impl SwapScalingPoint {
             mean_swap,
             mean_exec: mean_e2e - mean_swap,
             mean_e2e,
+            mean_ttfc: mean(completed.iter().map(|s| s.time_to_first_chunk)),
+            mean_overlap: mean(completed.iter().map(|s| s.overlap_fraction)),
             ideal: model_bytes as f64 / ((tp * pp) as f64 * link_bandwidth),
         }
     }
@@ -142,6 +176,8 @@ impl SwapScalingPoint {
             ("mean_swap", self.mean_swap.into()),
             ("mean_exec", self.mean_exec.into()),
             ("mean_e2e", self.mean_e2e.into()),
+            ("mean_ttfc", self.mean_ttfc.into()),
+            ("mean_overlap", self.mean_overlap.into()),
             ("ideal", self.ideal.into()),
         ])
     }
@@ -256,6 +292,37 @@ mod tests {
         let j = cell.to_json();
         assert!(j.get("drop_rate").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("attainment").is_some() && j.get("goodput").is_some());
+    }
+
+    #[test]
+    fn chunk_metrics_in_cells() {
+        // Monolithic run: ttfc equals the load latency (first chunk ==
+        // whole shard), overlap is zero, nothing cancelled.
+        let r = small_report();
+        let cell = WorkloadCell::from_report("x", 1.0, &r, 0.0, 10.0);
+        assert!(cell.mean_ttfc > 0.0);
+        assert_eq!(cell.mean_overlap, 0.0);
+        assert_eq!(cell.cancelled_swaps, 0);
+        let j = cell.to_json();
+        assert!(j.get("mean_ttfc").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("mean_overlap").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(j.get("cancelled_swaps").unwrap().as_usize().unwrap(), 0);
+
+        // Chunked run: first chunk lands well before the full load and
+        // some transfer hides behind compute.
+        let mut cfg = SystemConfig::swap_experiment(2, 2);
+        cfg.engine.load_design = crate::config::LoadDesign::ChunkedPipelined;
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total: 6,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        let rc = sys.run();
+        let chunked = WorkloadCell::from_report("x", 1.0, &rc, 0.0, 10.0);
+        assert!(chunked.mean_ttfc < cell.mean_ttfc);
+        assert!(chunked.mean_overlap > 0.0);
     }
 
     #[test]

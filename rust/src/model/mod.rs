@@ -9,5 +9,8 @@ pub mod catalog;
 pub mod shard;
 pub mod spec;
 
-pub use shard::{shard, shard_grid, max_shard_bytes, GridPos, ShardManifest};
+pub use shard::{
+    chunk_plan, effective_chunk_layers, max_shard_bytes, shard, shard_grid, ChunkSpec, GridPos,
+    ShardManifest,
+};
 pub use spec::{Dtype, ModelSpec, TensorSpec};

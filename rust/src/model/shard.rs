@@ -169,6 +169,94 @@ pub fn shard(spec: &ModelSpec, tp: usize, pp: usize, pos: GridPos) -> Result<Sha
     Ok(ShardManifest { model: spec.name.clone(), pos, tensors })
 }
 
+/// One chunk of a stage shard: a contiguous run of layers (plus the
+/// stage-entry tensors on the first chunk and the stage-exit tensors on
+/// the last) that transfers as one unit of the chunked swap pipeline.
+///
+/// Chunks partition the stage shard exactly: summed `bytes`/`messages`
+/// equal the shard's, so a chunked transfer moves the same traffic as the
+/// monolithic one (the α–β link model makes the split itself free — the
+/// per-tensor α term is identical either way). A one-chunk plan IS the
+/// monolithic transfer; that is the equivalence invariant the chunked
+/// pipeline is tested against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Transformer layers covered by this chunk.
+    pub layers: usize,
+    /// Tensor messages in this chunk (α term).
+    pub messages: usize,
+    /// Total parameter bytes in this chunk (β term).
+    pub bytes: usize,
+}
+
+/// Resolve the `chunk_layers` knob for a model/PP combination: an explicit
+/// value is clamped to the stage's layer count (so "all" is any value ≥
+/// layers-per-stage); `None` selects the default of layers-per-stage / 4
+/// (minimum 1) — four chunks per stage.
+pub fn effective_chunk_layers(spec: &ModelSpec, pp: usize, chunk_layers: Option<usize>) -> usize {
+    let per_stage = (spec.num_layers / pp.max(1)).max(1);
+    match chunk_layers {
+        Some(n) => n.clamp(1, per_stage),
+        None => (per_stage / 4).max(1),
+    }
+}
+
+/// Partition one worker's stage shard into layer-granular chunks of (up
+/// to) `chunk_layers` layers each. Stage-entry tensors (embeddings on
+/// stage 0) ride with the first chunk; stage-exit tensors (final norm and
+/// the untied lm_head on the last stage) ride with the last chunk, so a
+/// batch that has consumed chunk i has every tensor layers `0..=i` need.
+pub fn chunk_plan(
+    spec: &ModelSpec,
+    tp: usize,
+    pp: usize,
+    pp_rank: usize,
+    chunk_layers: usize,
+) -> Result<Vec<ChunkSpec>, ShardError> {
+    assert!(chunk_layers >= 1, "chunk_layers must be >= 1");
+    let manifest = shard(spec, tp, pp, GridPos { pp_rank, tp_rank: 0 })?;
+    let (lo, hi) = stage_layers(spec, pp, pp_rank);
+    let stage_layer_count = hi - lo;
+    // Tensor layout of a stage shard (see `shard` above): prefix
+    // (embeddings, first stage only), 16 tensors per layer (3×{q,k,v}
+    // weight+bias, out_proj w+b, attn-norm w+b, fc1 w+b, fc2 w+b,
+    // final-norm w+b — 40 layers × 16 + 4 = the 644 messages of §5.1),
+    // suffix (decoder final norm + optional lm_head, last stage only).
+    const TENSORS_PER_LAYER: usize = 16;
+    let prefix = if pp_rank == 0 { 2 } else { 0 };
+    let suffix = if pp_rank == pp - 1 {
+        2 + if pp > 1 { 1 } else { 0 }
+    } else {
+        0
+    };
+    debug_assert_eq!(
+        manifest.tensor_count(),
+        prefix + stage_layer_count * TENSORS_PER_LAYER + suffix,
+        "stage shard layout drifted from chunk_plan's assumptions"
+    );
+    let num_chunks = stage_layer_count.div_ceil(chunk_layers);
+    let mut chunks = Vec::with_capacity(num_chunks);
+    for c in 0..num_chunks {
+        let first_layer = c * chunk_layers;
+        let last_layer = ((c + 1) * chunk_layers).min(stage_layer_count);
+        let mut start = prefix + first_layer * TENSORS_PER_LAYER;
+        let mut end = prefix + last_layer * TENSORS_PER_LAYER;
+        if c == 0 {
+            start = 0; // stage-entry tensors ride with the first chunk
+        }
+        if c == num_chunks - 1 {
+            end = manifest.tensor_count(); // stage-exit tensors with the last
+        }
+        let tensors = &manifest.tensors[start..end];
+        chunks.push(ChunkSpec {
+            layers: last_layer - first_layer,
+            messages: tensors.len(),
+            bytes: tensors.iter().map(TensorSpec::bytes).sum(),
+        });
+    }
+    Ok(chunks)
+}
+
 /// Build the full grid of shard manifests, indexed `[pp_rank][tp_rank]`.
 pub fn shard_grid(spec: &ModelSpec, tp: usize, pp: usize) -> Result<Vec<Vec<ShardManifest>>, ShardError> {
     validate(spec, tp, pp)?;
@@ -285,6 +373,54 @@ mod tests {
             }
             assert!(covered.iter().all(|&c| c));
         }
+    }
+
+    #[test]
+    fn chunk_plan_partitions_stage_shard_exactly() {
+        let spec = spec13b();
+        for (tp, pp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2), (1, 4)] {
+            for chunk_layers in [1usize, 2, 4, 7, 40] {
+                for pp_rank in 0..pp {
+                    let manifest =
+                        shard(&spec, tp, pp, GridPos { pp_rank, tp_rank: 0 }).unwrap();
+                    let plan = chunk_plan(&spec, tp, pp, pp_rank, chunk_layers).unwrap();
+                    let bytes: usize = plan.iter().map(|c| c.bytes).sum();
+                    let messages: usize = plan.iter().map(|c| c.messages).sum();
+                    let layers: usize = plan.iter().map(|c| c.layers).sum();
+                    assert_eq!(bytes, manifest.bytes(), "tp={tp} pp={pp} cl={chunk_layers}");
+                    assert_eq!(messages, manifest.tensor_count());
+                    assert_eq!(layers, spec.num_layers / pp);
+                    assert!(plan.iter().all(|c| c.layers >= 1 && c.bytes > 0 && c.messages > 0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_chunk_plan_is_the_monolithic_transfer() {
+        // chunk_layers >= layers-per-stage collapses to a single chunk
+        // with exactly the shard's byte/message totals — the equivalence
+        // invariant the chunked pipeline is pinned against.
+        let spec = spec13b();
+        for (tp, pp) in [(1usize, 1usize), (2, 2), (1, 4)] {
+            for pp_rank in 0..pp {
+                let manifest = shard(&spec, tp, pp, GridPos { pp_rank, tp_rank: 0 }).unwrap();
+                let plan = chunk_plan(&spec, tp, pp, pp_rank, spec.num_layers).unwrap();
+                assert_eq!(plan.len(), 1);
+                assert_eq!(plan[0].bytes, manifest.bytes());
+                assert_eq!(plan[0].messages, manifest.tensor_count());
+            }
+        }
+    }
+
+    #[test]
+    fn effective_chunk_layers_defaults_and_clamps() {
+        let spec = spec13b(); // 40 layers
+        assert_eq!(effective_chunk_layers(&spec, 1, None), 10); // 40/4
+        assert_eq!(effective_chunk_layers(&spec, 4, None), 2); // 10/4 -> 2
+        assert_eq!(effective_chunk_layers(&spec, 1, Some(1000)), 40); // "all"
+        assert_eq!(effective_chunk_layers(&spec, 4, Some(1000)), 10);
+        assert_eq!(effective_chunk_layers(&spec, 1, Some(3)), 3);
     }
 
     #[test]

@@ -115,6 +115,12 @@ impl Computron {
     /// Start engine + worker threads. Blocks until workers have compiled
     /// their executables (first submit is then fast).
     pub fn launch(cfg: ServeConfig) -> Result<Computron> {
+        if cfg.engine.load_design == crate::config::LoadDesign::ChunkedPipelined {
+            return Err(anyhow!(
+                "the chunked-pipelined load design is simulator-only for now; \
+                 real-mode loads are a single blocking host->device copy (use `async`)"
+            ));
+        }
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         if !manifest.supports(&cfg.model, cfg.tp) {
             return Err(anyhow!(

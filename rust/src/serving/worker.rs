@@ -100,6 +100,12 @@ pub fn run_worker(manifest: &Manifest, w: WorkerWiring) {
                 let result = match load.dir {
                     LoadDirection::Load => runtime.load(load.model).map(|_| ()),
                     LoadDirection::Offload => runtime.offload(load.model),
+                    // Chunked-pipeline cancellation is simulator-only for
+                    // now (real loads are a single blocking copy, so there
+                    // is no mid-transfer window); ack as a no-op so the
+                    // engine's state machine stays consistent if one ever
+                    // arrives.
+                    LoadDirection::Cancel => Ok(()),
                 };
                 if let Err(e) = result {
                     let _ = w.engine.send(EngineMsg::WorkerError {

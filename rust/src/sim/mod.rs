@@ -6,4 +6,4 @@ pub mod system;
 pub mod worker;
 
 pub use system::{Arrival, Driver, SimReport, SimSystem};
-pub use worker::{InstState, SimWorker, WorkerAction};
+pub use worker::{ChunkOutcome, InstState, SimWorker, WorkerAction};

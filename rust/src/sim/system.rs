@@ -13,8 +13,8 @@ use crate::config::{LoadDesign, SystemConfig};
 use crate::coordinator::engine::{DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
 use crate::coordinator::swap::SwapStats;
-use crate::model::{shard_grid, GridPos, ModelSpec};
-use crate::sim::worker::{SimWorker, WorkerAction};
+use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec};
+use crate::sim::worker::{ChunkOutcome, SimWorker, WorkerAction};
 use std::collections::HashMap;
 
 /// One scheduled request arrival.
@@ -88,6 +88,13 @@ enum Ev {
     TransferFin { worker: usize, entry_id: EntryId, model: ModelId, dir: LoadDirection },
     LoadAck { entry_id: EntryId },
     BatchReturn { entry_id: EntryId },
+    /// One chunk of a chunked transfer finished on `worker`'s lane; the
+    /// worker then dispatches the next chunk (or finishes / resolves a
+    /// cancellation).
+    ChunkFin { worker: usize, entry_id: EntryId, model: ModelId, dir: LoadDirection },
+    /// A worker's non-final chunk ack arriving at the engine (drives the
+    /// `PartiallyResident` state and the time-to-first-chunk metric).
+    ChunkAck { entry_id: EntryId, chunk: usize },
 }
 
 /// The composed simulator.
@@ -114,18 +121,40 @@ impl SimSystem {
         let (tp, pp) = (cfg.parallel.tp, cfg.parallel.pp);
         let grid = shard_grid(&spec, tp, pp)?;
         let link = cfg.hardware.effective_link();
+        // Chunked swap pipeline: build the per-stage layer-granular chunk
+        // plans (same chunk count on every stage — layers divide evenly).
+        let chunk_plans: Option<Vec<Vec<ChunkSpec>>> =
+            if cfg.engine.load_design == LoadDesign::ChunkedPipelined {
+                let cl = crate::model::shard::effective_chunk_layers(
+                    &spec,
+                    pp,
+                    cfg.engine.chunk_layers,
+                );
+                let plans = (0..pp)
+                    .map(|r| crate::model::shard::chunk_plan(&spec, tp, pp, r, cl))
+                    .collect::<Result<Vec<_>, _>>()?;
+                debug_assert!(plans.iter().all(|p| p.len() == plans[0].len()));
+                Some(plans)
+            } else {
+                None
+            };
+        let num_chunks = chunk_plans.as_ref().map(|p| p[0].len()).unwrap_or(1);
         let mut workers = Vec::with_capacity(tp * pp);
         for pp_rank in 0..pp {
             for tp_rank in 0..tp {
                 let shard = &grid[pp_rank][tp_rank];
                 let gpu = GpuDevice::new(workers.len(), cfg.hardware.gpu_mem, link);
-                workers.push(SimWorker::new(
+                let mut worker = SimWorker::new(
                     GridPos { pp_rank, tp_rank },
                     gpu,
                     cfg.num_models,
                     shard.bytes(),
                     shard.tensor_count(),
-                ));
+                );
+                if let Some(plans) = &chunk_plans {
+                    worker.set_chunk_plan(plans[pp_rank].clone());
+                }
+                workers.push(worker);
             }
         }
         let mut engine = Engine::new(
@@ -149,11 +178,22 @@ impl SimSystem {
             .flat_map(|row| row.iter().map(|s| s.tensor_count()))
             .max()
             .unwrap_or(0);
-        let swap_cost =
-            link.transfer_time(shard_msgs, shard_bytes) + 2.0 * cfg.hardware.pipe_latency;
+        // Under the chunked pipeline a cold model stops hurting as soon as
+        // its first chunk lands (compute chases the rest), so the
+        // scheduler's swap-cost *estimate* is the time-to-first-chunk; the
+        // floors stay true lower bounds and the engine's `SchedCtx` flips
+        // to the overlapped (max instead of sum) completion bound.
+        let swap_cost = match &chunk_plans {
+            Some(plans) if num_chunks > 1 => {
+                let c0 = plans[0][0];
+                link.transfer_time(c0.messages, c0.bytes) + 2.0 * cfg.hardware.pipe_latency
+            }
+            _ => link.transfer_time(shard_msgs, shard_bytes) + 2.0 * cfg.hardware.pipe_latency,
+        };
         let swap_floor = shard_bytes as f64 / link.bandwidth;
         let exec_floor = (pp + 1) as f64 * cfg.hardware.pipe_latency;
         engine.set_cost_model(swap_cost, swap_floor, exec_floor);
+        engine.set_chunks_per_load(num_chunks);
         Ok(SimSystem {
             cfg,
             spec,
@@ -278,6 +318,12 @@ impl SimSystem {
                         Ev::TransferFin { worker: widx, entry_id, model, dir },
                     );
                 }
+                WorkerAction::ChunkDone { entry_id, model, dir, at } => {
+                    self.queue.schedule_at(
+                        at,
+                        Ev::ChunkFin { worker: widx, entry_id, model, dir },
+                    );
+                }
             }
         }
         // Keep the worker loop turning.
@@ -348,16 +394,17 @@ impl SimSystem {
     /// Run the simulation to completion and return the report.
     pub fn run(mut self) -> SimReport {
         let wall_start = std::time::Instant::now();
-        match &self.driver {
-            Driver::Open(arrivals) => {
-                let arrivals = arrivals.clone();
-                for a in arrivals {
-                    self.queue.schedule_at(a.at, Ev::Arrival { model: a.model, input_len: a.input_len });
-                }
-            }
-            Driver::AlternatingBlocking { .. } => {
-                self.drive_closed_loop_next();
-            }
+        // Take the arrival schedule instead of cloning it — it can be
+        // hundreds of thousands of entries and is consumed exactly once.
+        let arrivals = match &mut self.driver {
+            Driver::Open(arrivals) => std::mem::take(arrivals),
+            Driver::AlternatingBlocking { .. } => Vec::new(),
+        };
+        for a in arrivals {
+            self.queue.schedule_at(a.at, Ev::Arrival { model: a.model, input_len: a.input_len });
+        }
+        if matches!(self.driver, Driver::AlternatingBlocking { .. }) {
+            self.drive_closed_loop_next();
         }
 
         while let Some((now, ev)) = self.queue.pop() {
@@ -380,6 +427,36 @@ impl SimSystem {
                         self.cfg.hardware.pipe_latency,
                         Ev::LoadAck { entry_id },
                     );
+                }
+                Ev::ChunkFin { worker, entry_id, model, dir } => {
+                    match self.workers[worker].on_chunk_fin(now, model) {
+                        ChunkOutcome::Next { done_chunk, at } => {
+                            self.queue
+                                .schedule_at(at, Ev::ChunkFin { worker, entry_id, model, dir });
+                            if dir == LoadDirection::Load {
+                                self.queue.schedule_in(
+                                    self.cfg.hardware.pipe_latency,
+                                    Ev::ChunkAck { entry_id, chunk: done_chunk },
+                                );
+                            }
+                        }
+                        // The final chunk acks as the load entry itself.
+                        ChunkOutcome::Finished => {
+                            self.queue.schedule_in(
+                                self.cfg.hardware.pipe_latency,
+                                Ev::LoadAck { entry_id },
+                            );
+                        }
+                        ChunkOutcome::Cancelled { cancel_entry } => {
+                            self.queue.schedule_in(
+                                self.cfg.hardware.pipe_latency,
+                                Ev::LoadAck { entry_id: cancel_entry },
+                            );
+                        }
+                    }
+                }
+                Ev::ChunkAck { entry_id, chunk } => {
+                    self.engine.on_chunk_ack(now, entry_id, chunk);
                 }
                 Ev::LoadAck { entry_id } => {
                     self.engine.on_load_ack(now, entry_id);
@@ -639,5 +716,120 @@ mod tests {
         assert_eq!(r1.requests, r2.requests);
         assert_eq!(r1.swaps, r2.swaps);
         assert_eq!(r1.events, r2.events);
+    }
+
+    /// §5.1 worst case with the chunked pipeline and a given chunk size.
+    fn run_swap_chunked(tp: usize, pp: usize, total: usize, chunk_layers: Option<usize>) -> SimReport {
+        let mut cfg = swap_cfg(tp, pp);
+        cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+        cfg.engine.chunk_layers = chunk_layers;
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        sys.run()
+    }
+
+    #[test]
+    fn chunked_with_one_chunk_reproduces_monolithic_exactly() {
+        // The equivalence invariant: chunk_layers >= layers-per-stage is a
+        // one-chunk plan, which must take the monolithic code path and
+        // reproduce the async design's records bit-for-bit — including
+        // event counts.
+        for (tp, pp) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2)] {
+            let mono = run_swap(tp, pp, 6);
+            let one_chunk = run_swap_chunked(tp, pp, 6, Some(1_000_000));
+            assert_eq!(mono.requests, one_chunk.requests, "tp={tp} pp={pp}");
+            assert_eq!(mono.swaps, one_chunk.swaps, "tp={tp} pp={pp}");
+            assert_eq!(mono.events, one_chunk.events, "tp={tp} pp={pp}");
+            assert_eq!(mono.h2d_bytes, one_chunk.h2d_bytes);
+            assert_eq!(mono.d2h_bytes, one_chunk.d2h_bytes);
+        }
+    }
+
+    #[test]
+    fn chunked_pipeline_reduces_cold_start_latency() {
+        // Every request in the alternating worst case is a cold hit: the
+        // chunked pipeline must strictly beat the monolithic async design
+        // on end-to-end latency (compute chases chunks + the batch entry
+        // skips the load-ack round trip), while moving exactly the same
+        // bytes and completing the same work.
+        for (tp, pp) in [(1usize, 1usize), (1, 4), (2, 2)] {
+            let mono = run_swap(tp, pp, 6);
+            let chunked = run_swap_chunked(tp, pp, 6, None);
+            assert_eq!(chunked.requests.len(), mono.requests.len());
+            assert_eq!(chunked.violations, 0);
+            assert_eq!(chunked.oom_events, 0);
+            assert_eq!(chunked.h2d_bytes, mono.h2d_bytes, "same traffic either way");
+            assert_eq!(chunked.d2h_bytes, mono.d2h_bytes);
+            let mean = |r: &SimReport| {
+                r.requests.iter().map(RequestRecord::latency).sum::<f64>()
+                    / r.requests.len() as f64
+            };
+            assert!(
+                mean(&chunked) < mean(&mono),
+                "tp={tp} pp={pp}: chunked {} must beat async {}",
+                mean(&chunked),
+                mean(&mono)
+            );
+            // Time-to-first-chunk collapses from the whole shard to one
+            // chunk (plans default to 4 chunks per stage).
+            let ttfc = |r: &SimReport| {
+                r.swaps.iter().map(|s| s.time_to_first_chunk).sum::<f64>() / r.swaps.len() as f64
+            };
+            assert!(
+                ttfc(&chunked) < ttfc(&mono) * 0.6,
+                "tp={tp} pp={pp}: ttfc {} vs monolithic {}",
+                ttfc(&chunked),
+                ttfc(&mono)
+            );
+            // And some of the transfer actually hid behind compute.
+            assert!(
+                chunked.swaps.iter().any(|s| s.overlap_fraction > 0.0),
+                "tp={tp} pp={pp}: no overlap recorded"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_memory_high_water_stays_within_cap() {
+        // Both directions chunk: the victim drains chunk-by-chunk while
+        // the incoming model fills — the per-GPU high-water mark must stay
+        // within cap shards (+ one in-flight chunk of slack).
+        let report = run_swap_chunked(1, 1, 8, Some(1));
+        assert_eq!(report.oom_events, 0);
+        let spec = crate::model::catalog::opt("opt-13b").unwrap();
+        let shard = crate::model::max_shard_bytes(&spec, 1, 1).unwrap();
+        let chunk = spec.param_bytes() / 40 * 2; // generous: ~2 layers
+        for &hw in &report.mem_high_water {
+            assert!(
+                hw <= shard + chunk,
+                "high water {hw} exceeds one shard {shard} + chunk slack"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_runs_deterministic_and_complete_on_scenarios() {
+        let run = |seed: u64| {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+            cfg.scenario = Some("bursty".into());
+            let (sys, _) = SimSystem::from_scenario(cfg, 10.0, seed).unwrap();
+            sys.run()
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.swaps, b.swaps);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.violations, 0);
+        assert_eq!(a.oom_events, 0);
+        let s = a.swap_stats;
+        assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled);
+        assert_eq!(s.offloads_started, s.offloads_completed);
     }
 }

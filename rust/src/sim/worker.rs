@@ -16,7 +16,7 @@
 use crate::cluster::gpu::GpuDevice;
 use crate::cluster::SimTime;
 use crate::coordinator::entry::{Entry, LoadDirection, ModelId};
-use crate::model::GridPos;
+use crate::model::{ChunkSpec, GridPos};
 use std::collections::VecDeque;
 
 /// Worker-local view of one model instance's shard.
@@ -38,6 +38,38 @@ pub enum WorkerAction {
     BatchOutput { entry_id: u64, at: SimTime },
     /// A dispatched transfer will complete at `at` (ack the engine then).
     TransferDone { entry_id: u64, model: ModelId, dir: LoadDirection, at: SimTime },
+    /// The first chunk of a chunked transfer completes at `at`; the
+    /// system layer then drives `on_chunk_fin` for the rest.
+    ChunkDone { entry_id: u64, model: ModelId, dir: LoadDirection, at: SimTime },
+}
+
+/// What `on_chunk_fin` decided after one chunk finished.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChunkOutcome {
+    /// The next chunk was enqueued and completes at `at`; chunk
+    /// `done_chunk` is now fully transferred (ack it to the engine when
+    /// loading).
+    Next { done_chunk: usize, at: SimTime },
+    /// That was the final chunk: the whole transfer is complete (ack the
+    /// engine exactly like a monolithic `TransferDone`).
+    Finished,
+    /// The load had been cancelled: its on-GPU chunks were discarded and
+    /// the shard is `Offloaded` again; ack the cancel entry.
+    Cancelled { cancel_entry: u64 },
+}
+
+/// In-progress chunked transfer for one model on this worker.
+#[derive(Clone, Debug)]
+struct ChunkProgress {
+    dir: LoadDirection,
+    /// Index of the next chunk to enqueue on the lane.
+    next_chunk: usize,
+    /// Lane completion times of the chunks enqueued so far.
+    finish_times: Vec<SimTime>,
+    /// Bytes already attributed to device memory (load direction).
+    loaded_bytes: usize,
+    /// Cancel entry id once a cancel arrived for this load.
+    cancelled: Option<u64>,
 }
 
 /// One simulated worker.
@@ -59,6 +91,13 @@ pub struct SimWorker {
     /// same for every model, §3.1).
     pub shard_bytes: usize,
     pub shard_messages: usize,
+    /// Layer-granular chunk plan for this worker's stage. Chunked
+    /// transfers are active iff the plan has more than one chunk; an
+    /// empty or one-chunk plan keeps the monolithic paths bit-for-bit
+    /// (the `chunk_layers = all` equivalence invariant, DESIGN.md §6).
+    chunk_plan: Vec<ChunkSpec>,
+    /// Per-model in-progress chunked transfer.
+    chunk_loads: Vec<Option<ChunkProgress>>,
 }
 
 impl SimWorker {
@@ -79,7 +118,28 @@ impl SimWorker {
             oom_events: 0,
             shard_bytes,
             shard_messages,
+            chunk_plan: Vec::new(),
+            chunk_loads: vec![None; num_models],
         }
+    }
+
+    /// Install the chunked swap pipeline's per-stage chunk plan. The plan
+    /// must partition the shard exactly (summed bytes/messages equal the
+    /// monolithic transfer's).
+    pub fn set_chunk_plan(&mut self, plan: Vec<ChunkSpec>) {
+        if !plan.is_empty() {
+            debug_assert_eq!(plan.iter().map(|c| c.bytes).sum::<usize>(), self.shard_bytes);
+            debug_assert_eq!(
+                plan.iter().map(|c| c.messages).sum::<usize>(),
+                self.shard_messages
+            );
+        }
+        self.chunk_plan = plan;
+    }
+
+    /// Chunked transfers active on this worker?
+    fn chunked(&self) -> bool {
+        self.chunk_plan.len() > 1
     }
 
     /// Pre-warm a model to Loaded (experiment initial conditions).
@@ -115,15 +175,55 @@ impl SimWorker {
         let mut actions = Vec::new();
         match &entry {
             Entry::Batch(batch) => {
-                if self.instances[batch.model] != InstState::Loaded {
-                    // Fig 2: only the broadcast baseline can get here.
-                    self.violations += 1;
-                }
                 let dur = compute_time(batch);
-                let finish = self.gpu.enqueue_compute(now, dur);
+                // Partial residency (chunked pipeline): a batch may chase
+                // an in-flight chunked load — each layer's compute waits
+                // for its chunk, not for the whole shard.
+                let chasing = self.chunked()
+                    && matches!(
+                        self.chunk_loads[batch.model],
+                        Some(ChunkProgress { dir: LoadDirection::Load, cancelled: None, .. })
+                    );
+                let finish = if chasing {
+                    self.chunked_compute_finish(now, batch.model, dur)
+                } else {
+                    if self.instances[batch.model] != InstState::Loaded {
+                        // Fig 2: only the broadcast baseline can get here.
+                        self.violations += 1;
+                    }
+                    self.gpu.enqueue_compute(now, dur)
+                };
                 // Synchronous processing: loop blocked until kernels drain.
                 self.busy_until = finish;
                 actions.push(WorkerAction::Forward { entry, at: finish });
+            }
+            Entry::Load(load) if load.dir == LoadDirection::Cancel => {
+                // Abort a chunked load mid-transfer: the in-flight chunk
+                // (if any) completes first, then its memory is discarded.
+                if let Some(at) = self.begin_cancel(load.model, load.id, now) {
+                    actions.push(WorkerAction::TransferDone {
+                        entry_id: load.id,
+                        model: load.model,
+                        dir: LoadDirection::Cancel,
+                        at,
+                    });
+                }
+                self.busy_until = now + dispatch_overhead;
+                actions.push(WorkerAction::Forward { entry, at: self.busy_until });
+            }
+            Entry::Load(load) if self.chunked() => {
+                // Chunked pipeline: enqueue the first chunk; the system
+                // layer drives the rest via `on_chunk_fin`. Forwarding is
+                // async, exactly like the monolithic async design.
+                let first_fin = self.dispatch_first_chunk(now, load.model, load.dir);
+                actions.push(WorkerAction::ChunkDone {
+                    entry_id: load.id,
+                    model: load.model,
+                    dir: load.dir,
+                    at: first_fin,
+                });
+                self.busy_until = now + dispatch_overhead;
+                actions.push(WorkerAction::Forward { entry, at: self.busy_until });
             }
             Entry::Load(load) => {
                 let (finish, _) = self.dispatch_transfer(now, load.model, load.dir);
@@ -172,7 +272,151 @@ impl SimWorker {
                 self.gpu.mem.free(self.shard_bytes);
                 (self.gpu.enqueue_offload(now, self.shard_messages, self.shard_bytes), true)
             }
+            LoadDirection::Cancel => unreachable!("cancel entries are not transfers"),
         }
+    }
+
+    /// Enqueue the first chunk of a chunked transfer and start tracking
+    /// progress; subsequent chunks dispatch one at a time from
+    /// `on_chunk_fin` (so a cancellation frees the remaining lane time).
+    fn dispatch_first_chunk(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> SimTime {
+        let c0 = self.chunk_plan[0];
+        let fin = match dir {
+            LoadDirection::Load => {
+                debug_assert_eq!(self.instances[model], InstState::Offloaded);
+                self.instances[model] = InstState::Loading;
+                self.gpu.enqueue_load(now, c0.messages, c0.bytes)
+            }
+            LoadDirection::Offload => {
+                debug_assert_eq!(self.instances[model], InstState::Loaded);
+                self.instances[model] = InstState::Offloading;
+                // Chunk-granular memory accounting: each chunk stops
+                // counting when its drain starts (the per-tensor semantics
+                // of the monolithic path, at chunk resolution).
+                self.gpu.mem.free(c0.bytes);
+                self.gpu.enqueue_offload(now, c0.messages, c0.bytes)
+            }
+            LoadDirection::Cancel => unreachable!("cancel entries are not transfers"),
+        };
+        self.chunk_loads[model] = Some(ChunkProgress {
+            dir,
+            next_chunk: 1,
+            finish_times: vec![fin],
+            loaded_bytes: 0,
+            cancelled: None,
+        });
+        fin
+    }
+
+    /// The lane finished one chunk of `model`'s in-flight chunked
+    /// transfer: attribute its memory, enqueue the next chunk (or finish,
+    /// or resolve a pending cancellation). Driven by the system layer.
+    pub fn on_chunk_fin(&mut self, now: SimTime, model: ModelId) -> ChunkOutcome {
+        let plan_len = self.chunk_plan.len();
+        let mut p = self.chunk_loads[model].take().expect("chunk fin without progress");
+        let finished = p.next_chunk - 1;
+        match p.dir {
+            LoadDirection::Load => {
+                if let Some(cancel_id) = p.cancelled {
+                    // Discard what already landed; the pinned host copy is
+                    // the source of truth, so nothing drains back.
+                    if p.loaded_bytes > 0 {
+                        self.gpu.mem.free(p.loaded_bytes);
+                    }
+                    self.instances[model] = InstState::Offloaded;
+                    return ChunkOutcome::Cancelled { cancel_entry: cancel_id };
+                }
+                let bytes = self.chunk_plan[finished].bytes;
+                if self.gpu.mem.alloc(bytes).is_err() {
+                    self.oom_events += 1;
+                } else {
+                    p.loaded_bytes += bytes;
+                }
+                if p.next_chunk == plan_len {
+                    self.instances[model] = InstState::Loaded;
+                    return ChunkOutcome::Finished;
+                }
+                let c = self.chunk_plan[p.next_chunk];
+                let fin = self.gpu.enqueue_load(now, c.messages, c.bytes);
+                p.finish_times.push(fin);
+                p.next_chunk += 1;
+                self.chunk_loads[model] = Some(p);
+                ChunkOutcome::Next { done_chunk: finished, at: fin }
+            }
+            LoadDirection::Offload => {
+                if p.next_chunk == plan_len {
+                    self.instances[model] = InstState::Offloaded;
+                    return ChunkOutcome::Finished;
+                }
+                let c = self.chunk_plan[p.next_chunk];
+                self.gpu.mem.free(c.bytes);
+                let fin = self.gpu.enqueue_offload(now, c.messages, c.bytes);
+                p.finish_times.push(fin);
+                p.next_chunk += 1;
+                self.chunk_loads[model] = Some(p);
+                ChunkOutcome::Next { done_chunk: finished, at: fin }
+            }
+            LoadDirection::Cancel => unreachable!("cancel entries are not transfers"),
+        }
+    }
+
+    /// Process a cancel entry for `model`. Returns `Some(ack_time)` when
+    /// the cancel resolves immediately (no chunks in flight — the load
+    /// already finished here, so the shard is discarded on the spot);
+    /// `None` when an in-flight chunk must complete first, in which case
+    /// `on_chunk_fin` returns `Cancelled` carrying `cancel_id`.
+    fn begin_cancel(&mut self, model: ModelId, cancel_id: u64, now: SimTime) -> Option<SimTime> {
+        debug_assert!(self.chunked(), "cancel outside the chunked pipeline");
+        if let Some(p) = self.chunk_loads[model].as_mut() {
+            if p.dir == LoadDirection::Load {
+                debug_assert!(p.cancelled.is_none(), "double cancel");
+                p.cancelled = Some(cancel_id);
+                return None;
+            }
+        }
+        // The load already completed on this worker before the cancel
+        // arrived: discard the shard now.
+        if self.instances[model] == InstState::Loaded {
+            self.gpu.mem.free(self.shard_bytes);
+            self.instances[model] = InstState::Offloaded;
+        }
+        Some(now)
+    }
+
+    /// Earliest completion of a whole-stage compute pass for a model
+    /// whose chunked load is still in flight: layer compute chases chunk
+    /// arrivals (a pipeline recurrence — each chunk's layers run after
+    /// both the previous layers and the chunk itself are done). Chunks
+    /// not yet dispatched are predicted as back-to-back lane transfers
+    /// starting no earlier than the lane's current backlog (which
+    /// includes other models' already-enqueued chunks): exact while the
+    /// H2D lane carries only this load — the common case during a single
+    /// swap-in — and a tightened estimate under contention, where chunks
+    /// another load enqueues *later* can still land ours after the
+    /// prediction (the error errs early; see DESIGN.md §6).
+    fn chunked_compute_finish(&mut self, now: SimTime, model: ModelId, dur: f64) -> SimTime {
+        let p = self.chunk_loads[model].as_ref().expect("gated compute without progress");
+        let total_layers: usize = self.chunk_plan.iter().map(|c| c.layers).sum();
+        let start = self.gpu.compute.next_free().max(now);
+        let mut finish = start;
+        let last_dispatched = *p.finish_times.last().expect("first chunk always dispatched");
+        let mut predicted =
+            last_dispatched.max(self.gpu.link.next_free(crate::cluster::Direction::H2D));
+        for (i, c) in self.chunk_plan.iter().enumerate() {
+            let landed = if i < p.finish_times.len() {
+                p.finish_times[i]
+            } else {
+                predicted += self.gpu.link.model.transfer_time(c.messages, c.bytes);
+                predicted
+            };
+            let t = dur * c.layers as f64 / total_layers as f64;
+            finish = finish.max(landed) + t;
+        }
+        // Drain the compute stream to `finish` so later batches serialize
+        // behind this one exactly as with a monolithic enqueue.
+        let pad = finish - self.gpu.compute.next_free().max(now);
+        self.gpu.enqueue_compute(now, pad.max(0.0));
+        finish
     }
 
     /// A previously dispatched transfer finished.
@@ -188,6 +432,10 @@ impl SimWorker {
             LoadDirection::Offload => {
                 debug_assert_eq!(self.instances[model], InstState::Offloading);
                 self.instances[model] = InstState::Offloaded;
+            }
+            LoadDirection::Cancel => {
+                // State was already reset when the cancel was processed;
+                // this ack only travels back to the engine.
             }
         }
     }
@@ -336,6 +584,211 @@ mod tests {
         };
         assert_eq!(t1, 1.0);
         assert!((t2 - 1.001).abs() < 1e-9, "load starts at dispatch, overlaps offload");
+    }
+
+    /// Worker with a 4-chunk plan: 100-byte / 4-message shard over a
+    /// 100 B/s link — one 25-byte / 1-message / 1-layer chunk per quarter
+    /// second.
+    fn worker_chunked() -> SimWorker {
+        let gpu = GpuDevice::new(
+            0,
+            1000,
+            LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
+        );
+        let mut w = SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 4);
+        w.set_chunk_plan(vec![
+            crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 25 };
+            4
+        ]);
+        w
+    }
+
+    fn drive_chunks(w: &mut SimWorker, model: usize, mut at: SimTime) -> (SimTime, usize) {
+        // Drive on_chunk_fin until Finished; returns (finish time, chunks).
+        let mut n = 1;
+        loop {
+            match w.on_chunk_fin(at, model) {
+                ChunkOutcome::Next { at: next, .. } => {
+                    at = next;
+                    n += 1;
+                }
+                ChunkOutcome::Finished => return (at, n),
+                ChunkOutcome::Cancelled { .. } => panic!("unexpected cancel"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_load_allocates_per_chunk_and_finishes_on_time() {
+        let mut w = worker_chunked();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let first = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::ChunkDone { at, dir: LoadDirection::Load, .. } => Some(*at),
+                _ => None,
+            })
+            .expect("chunked load emits ChunkDone");
+        assert!((first - 0.25).abs() < 1e-9, "25 B / 100 B/s");
+        assert_eq!(w.instances[0], InstState::Loading);
+        assert_eq!(w.gpu.mem.used(), 0, "nothing resident before the first chunk lands");
+        // Chunk 0 lands: memory appears chunk by chunk.
+        let out = w.on_chunk_fin(first, 0);
+        assert!(matches!(out, ChunkOutcome::Next { done_chunk: 0, .. }));
+        assert_eq!(w.gpu.mem.used(), 25);
+        let (finish, n) = drive_chunks(&mut w, 0, match out {
+            ChunkOutcome::Next { at, .. } => at,
+            _ => unreachable!(),
+        });
+        assert_eq!(n + 1, 4);
+        assert!((finish - 1.0).abs() < 1e-9, "total time equals the monolithic transfer");
+        assert_eq!(w.instances[0], InstState::Loaded);
+        assert_eq!(w.gpu.mem.used(), 100);
+        assert_eq!(w.oom_events, 0);
+    }
+
+    #[test]
+    fn compute_chases_chunks_instead_of_waiting_for_residency() {
+        // Batch delivered right behind the chunked load: the recurrence
+        // interleaves layer compute with chunk arrivals — finish at
+        // 1.25 s (last chunk at 1.0 + its layers' compute), not the
+        // monolithic 1.0 + 1.0.
+        let mut w = worker_chunked();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        w.deliver(batch(2, 0));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let actions = w.step(0.001, |_| 1.0, 0.001, false).unwrap();
+        let fwd = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::Forward { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((fwd - 1.25).abs() < 1e-9, "chased compute finishes at 1.25, got {fwd}");
+        assert_eq!(w.violations, 0, "chasing a chunked load is not a violation");
+        assert!((w.busy_until - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_offload_drains_chunk_by_chunk() {
+        let mut w = worker_chunked();
+        w.force_loaded(0);
+        assert_eq!(w.gpu.mem.used(), 100);
+        w.deliver(load(1, 0, LoadDirection::Offload));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        // First chunk freed at drain start.
+        assert_eq!(w.gpu.mem.used(), 75);
+        assert_eq!(w.instances[0], InstState::Offloading);
+        let out = w.on_chunk_fin(0.25, 0);
+        assert!(matches!(out, ChunkOutcome::Next { .. }));
+        assert_eq!(w.gpu.mem.used(), 50);
+        let (finish, _) = drive_chunks(&mut w, 0, match out {
+            ChunkOutcome::Next { at, .. } => at,
+            _ => unreachable!(),
+        });
+        assert!((finish - 1.0).abs() < 1e-9);
+        assert_eq!(w.instances[0], InstState::Offloaded);
+        assert_eq!(w.gpu.mem.used(), 0);
+    }
+
+    #[test]
+    fn cancel_mid_transfer_discards_loaded_chunks() {
+        let mut w = worker_chunked();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        // Chunk 0 lands; chunk 1 in flight.
+        let out = w.on_chunk_fin(0.25, 0);
+        assert!(matches!(out, ChunkOutcome::Next { .. }));
+        assert_eq!(w.gpu.mem.used(), 25);
+        // Cancel arrives mid-transfer: deferred until the in-flight chunk
+        // completes, then everything is discarded.
+        w.deliver(load(9, 0, LoadDirection::Cancel));
+        let actions = w.step(0.3, |_| 1.0, 0.001, false).unwrap();
+        assert!(
+            !actions.iter().any(|a| matches!(a, WorkerAction::TransferDone { .. })),
+            "deferred cancel must not ack immediately: {actions:?}"
+        );
+        match w.on_chunk_fin(0.5, 0) {
+            ChunkOutcome::Cancelled { cancel_entry } => assert_eq!(cancel_entry, 9),
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert_eq!(w.instances[0], InstState::Offloaded);
+        assert_eq!(w.gpu.mem.used(), 0);
+        assert_eq!(w.oom_events, 0);
+    }
+
+    #[test]
+    fn cancel_after_load_finished_acks_immediately_and_discards() {
+        let mut w = worker_chunked();
+        w.deliver(load(1, 0, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let out = w.on_chunk_fin(0.25, 0);
+        let (finish, _) = drive_chunks(&mut w, 0, match out {
+            ChunkOutcome::Next { at, .. } => at,
+            _ => unreachable!(),
+        });
+        assert_eq!(w.instances[0], InstState::Loaded);
+        // The cancel raced the load and lost: resolve on the spot.
+        w.deliver(load(9, 0, LoadDirection::Cancel));
+        let actions = w.step(finish, |_| 1.0, 0.001, false).unwrap();
+        let ack = actions.iter().find_map(|a| match a {
+            WorkerAction::TransferDone { entry_id, dir: LoadDirection::Cancel, at, .. } => {
+                Some((*entry_id, *at))
+            }
+            _ => None,
+        });
+        assert_eq!(ack, Some((9, finish)));
+        assert_eq!(w.instances[0], InstState::Offloaded);
+        assert_eq!(w.gpu.mem.used(), 0);
+    }
+
+    #[test]
+    fn overlapped_chunked_swap_never_exceeds_one_shard() {
+        // Chunked drain of the victim overlaps the chunked fill of the
+        // incoming model on the full-duplex link: memory peaks at one
+        // shard, never the sum.
+        let mut w = worker_chunked();
+        w.force_loaded(0);
+        w.deliver(load(1, 0, LoadDirection::Offload));
+        w.deliver(load(2, 1, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        w.step(0.001, |_| 1.0, 0.001, false).unwrap();
+        // Interleave the two chunk streams in time order.
+        let (mut off_at, mut load_at) = (0.25, 0.251);
+        let (mut off_done, mut load_done) = (false, false);
+        while !(off_done && load_done) {
+            if !off_done && (load_done || off_at <= load_at) {
+                match w.on_chunk_fin(off_at, 0) {
+                    ChunkOutcome::Next { at, .. } => off_at = at,
+                    ChunkOutcome::Finished => off_done = true,
+                    c => panic!("{c:?}"),
+                }
+            } else {
+                match w.on_chunk_fin(load_at, 1) {
+                    ChunkOutcome::Next { at, .. } => load_at = at,
+                    ChunkOutcome::Finished => load_done = true,
+                    c => panic!("{c:?}"),
+                }
+            }
+        }
+        assert_eq!(w.gpu.mem.used(), 100);
+        assert!(w.gpu.mem.high_water() <= 100, "chunked swap stays within one shard");
+        assert_eq!(w.oom_events, 0);
+    }
+
+    #[test]
+    fn one_chunk_plan_keeps_monolithic_path() {
+        let mut w = worker();
+        w.set_chunk_plan(vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 100 }]);
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        assert!(
+            actions.iter().any(|a| matches!(a, WorkerAction::TransferDone { .. })),
+            "one-chunk plan must use the monolithic dispatch: {actions:?}"
+        );
+        assert!(!actions.iter().any(|a| matches!(a, WorkerAction::ChunkDone { .. })));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Prevent the optimizer from deleting a computed value.
@@ -49,6 +50,17 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn summary(&self) -> Summary {
         Summary::of(&self.samples).expect("bench produced no samples")
+    }
+
+    /// Machine-readable record: name, batch size, and the timing summary
+    /// (seconds per iteration). Consumed by the `BENCH_*.json` artifacts
+    /// that track the perf trajectory across PRs (EXPERIMENTS.md §Perf).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", self.name.as_str().into()),
+            ("batch", self.batch.into()),
+            ("seconds_per_iter", self.summary().to_json()),
+        ])
     }
 
     /// Human-readable one-liner, criterion-style.
@@ -157,6 +169,11 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// All recorded results as a JSON array (see `BenchResult::to_json`).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(BenchResult::to_json).collect())
+    }
 }
 
 /// Print a section header used by the paper-figure benches so `cargo bench`
@@ -207,6 +224,11 @@ mod tests {
         });
         assert!(r.samples.len() >= 5);
         assert!(r.summary().mean > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "noop-ish");
+        assert!(j.get("seconds_per_iter").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+        let all = b.to_json();
+        assert_eq!(all.as_arr().unwrap().len(), 1);
     }
 
     #[test]

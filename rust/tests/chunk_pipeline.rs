@@ -1,0 +1,172 @@
+//! System-level property tests for the layer-granular chunked swap
+//! pipeline (DESIGN.md §6):
+//!
+//! 1. Conservation: chunked transfers move exactly the bytes the
+//!    monolithic design moves, per GPU and per direction.
+//! 2. Equivalence: `chunk_layers >= layers-per-stage` (a one-chunk plan)
+//!    reproduces the monolithic async design's records and event counts
+//!    bit-for-bit, across the whole scenario registry.
+//! 3. Win: with real chunking, cold-start latency strictly improves on
+//!    the §5.1 worst case and the §5.2 workload while every engine
+//!    invariant (no violations, no OOM, cap respected, swap accounting)
+//!    still holds.
+//! 4. Memory: with both directions chunking, the per-GPU high-water mark
+//!    stays within cap shards plus one chunk of slack.
+
+use computron::config::{LoadDesign, SystemConfig};
+use computron::coordinator::engine::RequestRecord;
+use computron::model::{catalog, max_shard_bytes};
+use computron::sim::{Driver, SimReport, SimSystem};
+use computron::workload::scenarios;
+
+fn chunked(mut cfg: SystemConfig, chunk_layers: Option<usize>) -> SystemConfig {
+    cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+    cfg.engine.chunk_layers = chunk_layers;
+    cfg
+}
+
+fn run_scenario(cfg: SystemConfig, name: &str, duration: f64) -> SimReport {
+    let mut cfg = cfg;
+    cfg.scenario = Some(name.to_string());
+    let (sys, _) = SimSystem::from_scenario(cfg, duration, 0xC114_7E).unwrap();
+    sys.run()
+}
+
+fn run_swap_worst_case(cfg: SystemConfig, total: usize) -> SimReport {
+    let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+        models: 2,
+        input_len: 2,
+        total,
+    })
+    .unwrap();
+    sys.preload(&[1]);
+    sys.run()
+}
+
+fn mean_latency(r: &SimReport) -> f64 {
+    r.requests.iter().map(RequestRecord::latency).sum::<f64>() / r.requests.len() as f64
+}
+
+#[test]
+fn chunked_moves_exactly_the_monolithic_bytes() {
+    for chunk_layers in [Some(1), Some(4), None] {
+        let mono = run_swap_worst_case(SystemConfig::swap_experiment(2, 2), 8);
+        let chnk =
+            run_swap_worst_case(chunked(SystemConfig::swap_experiment(2, 2), chunk_layers), 8);
+        assert_eq!(mono.h2d_bytes, chnk.h2d_bytes, "chunk_layers={chunk_layers:?}");
+        assert_eq!(mono.d2h_bytes, chnk.d2h_bytes, "chunk_layers={chunk_layers:?}");
+        assert_eq!(mono.requests.len(), chnk.requests.len());
+    }
+}
+
+#[test]
+fn one_chunk_plan_reproduces_monolithic_across_registry() {
+    // The equivalence invariant that keeps the paper-figure benches
+    // honest: chunk_layers = "all" must be the monolithic design
+    // bit-for-bit — same request records, same swap records, same event
+    // counts — on every scenario in the registry.
+    for &name in scenarios::names() {
+        let mono = run_scenario(SystemConfig::workload_experiment(3, 2, 8), name, 8.0);
+        let one = run_scenario(
+            chunked(SystemConfig::workload_experiment(3, 2, 8), Some(1_000_000)),
+            name,
+            8.0,
+        );
+        assert_eq!(mono.requests, one.requests, "{name}: request records diverged");
+        assert_eq!(mono.swaps, one.swaps, "{name}: swap records diverged");
+        assert_eq!(mono.events, one.events, "{name}: event counts diverged");
+        assert_eq!(mono.mem_high_water, one.mem_high_water, "{name}: memory diverged");
+    }
+}
+
+#[test]
+fn chunked_improves_cold_start_on_worst_case() {
+    for (tp, pp) in [(1usize, 1usize), (2, 2)] {
+        let mono = run_swap_worst_case(SystemConfig::swap_experiment(tp, pp), 8);
+        let chnk = run_swap_worst_case(chunked(SystemConfig::swap_experiment(tp, pp), None), 8);
+        assert!(
+            mean_latency(&chnk) < mean_latency(&mono),
+            "tp={tp} pp={pp}: chunked {} vs monolithic {}",
+            mean_latency(&chnk),
+            mean_latency(&mono)
+        );
+        assert_eq!(chnk.violations, 0);
+        assert_eq!(chnk.oom_events, 0);
+    }
+}
+
+#[test]
+fn chunked_preserves_invariants_across_registry() {
+    for &name in scenarios::names() {
+        let r = run_scenario(chunked(SystemConfig::workload_experiment(3, 2, 8), None), name, 8.0);
+        assert_eq!(r.violations, 0, "{name}: load-dependency violations");
+        assert_eq!(r.oom_events, 0, "{name}: OOM events");
+        let s = r.swap_stats;
+        assert_eq!(
+            s.loads_started,
+            s.loads_completed + s.loads_cancelled,
+            "{name}: loads did not drain"
+        );
+        assert_eq!(s.offloads_started, s.offloads_completed, "{name}: offloads did not drain");
+        assert_eq!(r.swaps.len() as u64, s.loads_completed + s.loads_cancelled);
+        // Completed swaps carry sane chunk metrics.
+        for sw in r.swaps.iter().filter(|sw| !sw.cancelled) {
+            assert!(sw.time_to_first_chunk > 0.0, "{name}: ttfc must be positive");
+            assert!(
+                sw.time_to_first_chunk <= sw.duration() + 1e-9,
+                "{name}: ttfc exceeds swap duration"
+            );
+            assert!(
+                (0.0..=1.0).contains(&sw.overlap_fraction),
+                "{name}: overlap fraction out of range"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_high_water_within_cap_plus_chunk() {
+    // Worst case with single-layer chunks in both directions: the victim
+    // drains chunk-by-chunk while the incoming model fills. Peak memory
+    // must stay within one shard (cap = 1) plus a chunk of slack.
+    let r = run_swap_worst_case(chunked(SystemConfig::swap_experiment(1, 1), Some(1)), 8);
+    assert_eq!(r.oom_events, 0);
+    let spec = catalog::opt("opt-13b").unwrap();
+    let shard = max_shard_bytes(&spec, 1, 1).unwrap();
+    let chunk_slack = spec.param_bytes() / 40 * 2;
+    for &hw in &r.mem_high_water {
+        assert!(hw <= shard + chunk_slack, "high water {hw} vs shard {shard}");
+    }
+
+    // And on the §5.2 grid (cap 2, TP=2 PP=2) across a busy scenario.
+    let r = run_scenario(
+        chunked(SystemConfig::workload_experiment(3, 2, 8), Some(2)),
+        "uniform",
+        8.0,
+    );
+    assert_eq!(r.oom_events, 0);
+    let shard = max_shard_bytes(&spec, 2, 2).unwrap();
+    for &hw in &r.mem_high_water {
+        assert!(hw <= 2 * shard + shard / 4, "high water {hw} vs 2x shard {shard}");
+    }
+}
+
+#[test]
+fn chunked_fcfs_equals_edf_without_slos() {
+    // The chunked pipeline composes with the scheduler registry: under
+    // infinite SLOs edf degenerates to fcfs exactly as in the monolithic
+    // design, and shed never drops.
+    use computron::config::SchedulerKind;
+    let run = |kind: SchedulerKind| {
+        let mut cfg = chunked(SystemConfig::workload_experiment(3, 2, 8), None);
+        cfg.engine.scheduler = kind;
+        run_scenario(cfg, "bursty", 8.0)
+    };
+    let fcfs = run(SchedulerKind::Fcfs);
+    let edf = run(SchedulerKind::Edf);
+    let shed = run(SchedulerKind::Shed);
+    assert_eq!(fcfs.requests, edf.requests);
+    assert_eq!(fcfs.swaps, edf.swaps);
+    assert_eq!(fcfs.events, edf.events);
+    assert!(shed.drops.is_empty(), "infinite SLOs are always feasible");
+}

@@ -52,6 +52,7 @@ fn ctx(rng: &mut Rng) -> SchedCtx {
         swap_cost: (rng.index(20) as f64) * 0.1,
         swap_floor: (rng.index(10) as f64) * 0.1,
         exec_floor: (rng.index(5) as f64) * 0.01,
+        chunked: false,
     }
 }
 
@@ -194,6 +195,9 @@ impl FcfsMirror {
                 self.residency[l.model] = match l.dir {
                     LoadDirection::Load => Residency::Loading,
                     LoadDirection::Offload => Residency::Offloading,
+                    LoadDirection::Cancel => {
+                        unreachable!("fcfs over the async design never cancels")
+                    }
                 };
                 self.load_acks.insert(l.id, (l.model, l.dir, world));
             }
@@ -208,6 +212,7 @@ impl FcfsMirror {
             self.residency[model] = match dir {
                 LoadDirection::Load => Residency::Resident,
                 LoadDirection::Offload => Residency::Offloaded,
+                LoadDirection::Cancel => unreachable!("mirror never records cancels"),
             };
         } else {
             self.load_acks.insert(id, (model, dir, remaining - 1));
