@@ -1,0 +1,266 @@
+//! Hetero suite — heterogeneous-fleet serving over the ModelCatalog API.
+//!
+//! Sweeps two fleets against the workload-scenario registry under both
+//! the async and chunked load designs:
+//!
+//! - **small-skew**: four models close in size (1.3B/1.3B/2.7B/6.7B),
+//!   mildly skewed rate shares — the regime where multiplexing is cheap;
+//! - **large-skew**: the shipped `configs/hetero_4model.json` preset
+//!   (1.3B/1.3B/6.7B/13B, 4:3:2:1 shares, skewed SLOs) — small hot
+//!   models multiplexed against a big cold tail.
+//!
+//! Per-cell invariant oracles (the acceptance criteria for the catalog
+//! redesign):
+//!
+//! - engine invariants: no dependency violations, no OOM, swaps drained,
+//!   every arrival completes (or is shed by an SLO-aware scheduler);
+//! - per-model accounting: every `SwapRecord` carries its own model's
+//!   shard bytes;
+//! - size ordering: mean swap-in time (time-to-first-chunk) is
+//!   non-decreasing in shard bytes across the fleet, and the smallest
+//!   model swaps STRICTLY faster than the largest in the same run.
+//!
+//! ```bash
+//! cargo bench --bench hetero_suite              # full sweep
+//! cargo bench --bench hetero_suite -- --fast    # CI smoke subset
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use computron::config::{LoadDesign, ModelCatalog, ModelDeployment, SystemConfig};
+use computron::metrics::WorkloadCell;
+use computron::model::{catalog, max_shard_bytes};
+use computron::sim::{SimReport, SimSystem};
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+
+const SEED: u64 = 0x4E7E_805;
+
+fn small_skew_fleet() -> SystemConfig {
+    let models = ModelCatalog::new(vec![
+        ModelDeployment::new("opt-1.3b").with_rate_share(2.0),
+        ModelDeployment::new("opt-1.3b").with_rate_share(2.0),
+        ModelDeployment::new("opt-2.7b"),
+        ModelDeployment::new("opt-6.7b"),
+    ]);
+    SystemConfig::hetero_experiment(models, 2, 8)
+}
+
+fn large_skew_fleet() -> SystemConfig {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("configs")
+        .join("hetero_4model.json");
+    let mut cfg = SystemConfig::from_file(&path).expect("shipped hetero preset loads");
+    // The suite sweeps scenario x design itself; neutralize the preset's
+    // own picks so cells stay comparable across fleets.
+    cfg.scenario = None;
+    cfg.engine.load_design = LoadDesign::AsyncPipelined;
+    cfg.engine.scheduler = computron::config::SchedulerKind::Fcfs;
+    cfg
+}
+
+struct Cell {
+    scenario: String,
+    cell: WorkloadCell,
+    /// Per-model (shard bytes, completed swap-ins, mean ttfc, mean latency).
+    per_model: Vec<(usize, usize, f64, f64)>,
+}
+
+fn run_cell(
+    fleet: &str,
+    base: &SystemConfig,
+    scenario: &str,
+    design: LoadDesign,
+    duration: f64,
+) -> Cell {
+    let mut cfg = base.clone();
+    cfg.scenario = Some(scenario.to_string());
+    cfg.engine.load_design = design;
+    let shards: Vec<usize> = cfg.shard_bytes_per_model().expect("catalog resolves");
+    let n = cfg.num_models();
+    let sheds = cfg.engine.scheduler == computron::config::SchedulerKind::Shed;
+    let (sys, measure_start) =
+        SimSystem::from_scenario(cfg, duration, SEED).expect("scenario resolves");
+    let report = sys.run();
+    oracle_checks(fleet, scenario, design, &report, &shards, sheds);
+
+    let per_model: Vec<(usize, usize, f64, f64)> = (0..n)
+        .map(|m| {
+            let ttfcs: Vec<f64> = report
+                .swaps
+                .iter()
+                .filter(|s| s.load_model == m && !s.cancelled)
+                .map(|s| s.time_to_first_chunk)
+                .collect();
+            let lats: Vec<f64> = report
+                .requests
+                .iter()
+                .filter(|r| r.model == m && r.arrival >= measure_start)
+                .map(|r| r.latency())
+                .collect();
+            let mean = |v: &[f64]| {
+                if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 }
+            };
+            (shards[m], ttfcs.len(), mean(&ttfcs), mean(&lats))
+        })
+        .collect();
+
+    Cell {
+        scenario: scenario.to_string(),
+        cell: WorkloadCell::from_report(scenario, -1.0, &report, measure_start, duration),
+        per_model,
+    }
+}
+
+fn oracle_checks(
+    fleet: &str,
+    scenario: &str,
+    design: LoadDesign,
+    report: &SimReport,
+    shards: &[usize],
+    sheds: bool,
+) {
+    let tag = format!("{fleet}/{scenario}/{}", design.name());
+    assert_eq!(report.violations, 0, "{tag}: load-dependency violations");
+    assert_eq!(report.oom_events, 0, "{tag}: OOM events");
+    let s = report.swap_stats;
+    assert_eq!(
+        s.loads_started,
+        s.loads_completed + s.loads_cancelled,
+        "{tag}: loads did not drain"
+    );
+    assert_eq!(s.offloads_started, s.offloads_completed, "{tag}: offloads did not drain");
+    if !sheds {
+        assert!(report.drops.is_empty(), "{tag}: only shed may drop");
+    }
+    // Per-model accounting: every swap record reports its own model's
+    // shard bytes.
+    for sw in &report.swaps {
+        assert_eq!(
+            sw.bytes, shards[sw.load_model],
+            "{tag}: swap of model {} carries foreign bytes",
+            sw.load_model
+        );
+    }
+    // Size ordering: mean swap-in time is non-decreasing in shard bytes,
+    // strictly increasing from the smallest to the largest model (when
+    // both actually swapped in this run).
+    let mean_ttfc = |m: usize| {
+        let v: Vec<f64> = report
+            .swaps
+            .iter()
+            .filter(|sw| sw.load_model == m && !sw.cancelled)
+            .map(|sw| sw.time_to_first_chunk)
+            .collect();
+        if v.is_empty() { None } else { Some(v.iter().sum::<f64>() / v.len() as f64) }
+    };
+    let mut sized: Vec<(usize, usize)> =
+        shards.iter().copied().enumerate().map(|(m, b)| (b, m)).collect();
+    sized.sort_unstable();
+    let smallest = sized[0];
+    let largest = sized[sized.len() - 1];
+    if smallest.0 < largest.0 {
+        if let (Some(lo), Some(hi)) = (mean_ttfc(smallest.1), mean_ttfc(largest.1)) {
+            assert!(
+                lo < hi,
+                "{tag}: smallest model's swap-in ({lo:.3}s) must beat largest ({hi:.3}s)"
+            );
+        }
+    }
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let duration = if fast { 8.0 } else { 20.0 };
+    let scenarios: &[&str] =
+        if fast { &["zipf"] } else { &["uniform", "zipf", "bursty", "flash-crowd"] };
+    let designs = [LoadDesign::AsyncPipelined, LoadDesign::ChunkedPipelined];
+    let fleets = [("small-skew", small_skew_fleet()), ("large-skew", large_skew_fleet())];
+
+    section(&format!(
+        "Hetero suite: 2 fleets x {} scenarios x {} designs, cap 2, TP=2 PP=2, {duration} s per cell",
+        scenarios.len(),
+        designs.len()
+    ));
+    for (name, cfg) in &fleets {
+        let archs: Vec<&str> = cfg.models.iter().map(|d| d.model.as_str()).collect();
+        println!("  fleet {name:<11} -> {archs:?} shares {:?}", cfg.models.rate_shares());
+    }
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cells_json: Vec<Json> = Vec::new();
+    for (fleet, base) in &fleets {
+        for &scenario in scenarios {
+            for &design in &designs {
+                let c = run_cell(fleet, base, scenario, design, duration);
+                for (m, &(bytes, swaps, ttfc, lat)) in c.per_model.iter().enumerate() {
+                    rows.push(vec![
+                        fleet.to_string(),
+                        c.scenario.clone(),
+                        design.name().to_string(),
+                        format!("{m}:{}", base.models[m].model),
+                        format!("{:.2}", bytes as f64 / 1e9),
+                        swaps.to_string(),
+                        common::fmt_s(ttfc),
+                        common::fmt_s(lat),
+                    ]);
+                }
+                let mut j = c.cell.to_json();
+                j.set("fleet", (*fleet).into());
+                j.set("design", design.name().into());
+                j.set(
+                    "per_model",
+                    Json::Arr(
+                        c.per_model
+                            .iter()
+                            .enumerate()
+                            .map(|(m, &(bytes, swaps, ttfc, lat))| {
+                                Json::from_pairs(vec![
+                                    ("model", base.models[m].model.as_str().into()),
+                                    ("shard_bytes", bytes.into()),
+                                    ("swaps", swaps.into()),
+                                    ("mean_ttfc", ttfc.into()),
+                                    ("mean_latency", lat.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+                cells_json.push(j);
+            }
+        }
+    }
+
+    table(
+        &[
+            "fleet",
+            "scenario",
+            "design",
+            "model",
+            "shard (GB)",
+            "swap-ins",
+            "mean ttfc (s)",
+            "mean lat (s)",
+        ],
+        &rows,
+    );
+    println!(
+        "\noracles held on every cell: engine invariants, per-model swap bytes, and \
+         small-before-large swap-in ordering"
+    );
+    // Sanity anchor for the size ordering outside any one run: shard
+    // bytes themselves are strictly ordered across distinct architectures.
+    let a = max_shard_bytes(&catalog::by_name("opt-1.3b").unwrap(), 2, 2).unwrap();
+    let b = max_shard_bytes(&catalog::by_name("opt-13b").unwrap(), 2, 2).unwrap();
+    assert!(a < b);
+
+    let payload = Json::from_pairs(vec![
+        ("experiment", "hetero_suite".into()),
+        ("duration", duration.into()),
+        ("fast", fast.into()),
+        ("cells", Json::Arr(cells_json)),
+    ]);
+    common::save_report("hetero_suite", payload.clone());
+    common::save_bench_json("hetero_suite", payload);
+}

@@ -37,9 +37,9 @@ fn run_cell(scenario: &str, kind: SchedulerKind) -> (WorkloadCell, SimReport) {
     let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
     cfg.scenario = Some(scenario.to_string());
     cfg.engine.scheduler = kind;
-    let mut slos = vec![LOOSE_SLO; cfg.num_models];
+    let mut slos = vec![LOOSE_SLO; cfg.num_models()];
     slos[0] = TIGHT_SLO;
-    cfg.slos = Some(slos);
+    cfg.set_slos(&slos).expect("one SLO per catalog entry");
     let (sys, measure_start) =
         SimSystem::from_scenario(cfg, DURATION, SEED).expect("scenario resolves");
     let report = sys.run();

@@ -31,13 +31,13 @@ pub fn broadcast_load(mut cfg: SystemConfig) -> SystemConfig {
 /// when the models cannot actually fit in aggregate GPU memory — the
 /// regime the paper targets is exactly where this baseline breaks.
 pub fn static_placement(mut cfg: SystemConfig) -> Option<SystemConfig> {
-    let spec = cfg.spec().ok()?;
-    let shard =
-        crate::model::max_shard_bytes(&spec, cfg.parallel.tp, cfg.parallel.pp).ok()?;
-    if shard * cfg.num_models > cfg.hardware.gpu_mem {
+    // Per-model shard bytes: a heterogeneous catalog is feasible iff the
+    // SUM of every entry's own shard fits (not n x the largest).
+    let shards = cfg.shard_bytes_per_model().ok()?;
+    if shards.iter().sum::<usize>() > cfg.hardware.gpu_mem {
         return None; // does not fit: static placement infeasible
     }
-    cfg.engine.resident_cap = cfg.num_models;
+    cfg.engine.resident_cap = cfg.num_models();
     Some(cfg)
 }
 
@@ -90,21 +90,34 @@ mod tests {
 
     #[test]
     fn static_placement_infeasible_beyond_memory() {
+        use crate::config::ModelCatalog;
         // 3× OPT-13B at TP=1,PP=1: 72 GB > 40 GB — must be rejected.
         let mut cfg = SystemConfig::swap_experiment(1, 1);
-        cfg.num_models = 3;
+        cfg.models = ModelCatalog::homogeneous("opt-13b", 3);
         assert!(static_placement(cfg).is_none());
         // At TP=2,PP=2 each shard is ~6 GB; 3 models fit easily.
         let mut cfg = SystemConfig::swap_experiment(2, 2);
-        cfg.num_models = 3;
+        cfg.models = ModelCatalog::homogeneous("opt-13b", 3);
         let s = static_placement(cfg).unwrap();
         assert_eq!(s.engine.resident_cap, 3);
+        // Heterogeneous feasibility is the SUM of per-model shards: at
+        // TP=1,PP=1 two 13B (24 GB each) do not fit, but one 13B plus
+        // one 1.3B (~2.6 GB) does.
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.models = ModelCatalog::homogeneous("opt-13b", 2);
+        assert!(static_placement(cfg).is_none());
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.models = ModelCatalog::new(vec![
+            crate::config::ModelDeployment::new("opt-13b"),
+            crate::config::ModelDeployment::new("opt-1.3b"),
+        ]);
+        let s = static_placement(cfg).unwrap();
+        assert_eq!(s.engine.resident_cap, 2);
     }
 
     #[test]
     fn static_placement_never_swaps() {
-        let mut cfg = SystemConfig::swap_experiment(2, 2);
-        cfg.num_models = 2;
+        let cfg = SystemConfig::swap_experiment(2, 2);
         let cfg = static_placement(cfg).unwrap();
         let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
             models: 2,

@@ -4,6 +4,16 @@
 //! loadable from JSON (see `configs/` for presets) or built from the
 //! programmatic presets here. Validation happens at construction so
 //! misconfigurations fail before a simulation or server starts.
+//!
+//! Deployments are described by a [`ModelCatalog`]: one
+//! [`ModelDeployment`] per served model instance, each carrying its own
+//! architecture (and therefore its own shard sizes, chunk plans, and
+//! compute costs), SLO, priority weight, and arrival-rate share. The
+//! paper's homogeneous `num_models` fleet is the special case of N
+//! identical entries — `ModelCatalog::homogeneous` and the legacy JSON
+//! shim (`{"model", "num_models"}`) build exactly that, and a homogeneous
+//! catalog reproduces the old behaviour decision-for-decision (pinned by
+//! `rust/tests/hetero.rs`). See DESIGN.md §7.
 
 use crate::cluster::compute::ComputeModel;
 use crate::cluster::link::LinkModel;
@@ -11,7 +21,7 @@ use crate::model::{catalog, spec::ModelSpec};
 use crate::util::json::Json;
 
 /// TP × PP parallel layout shared by all co-located models (the paper's
-/// homogeneity assumption, §3.1).
+/// §3.1 assumption; every catalog entry must shard evenly on this grid).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelConfig {
     pub tp: usize,
@@ -212,9 +222,10 @@ pub struct EngineConfig {
     /// reproduces the paper's engine decision-for-decision.
     pub scheduler: SchedulerKind,
     /// Layers per chunk for the `chunked` load design (ignored by the
-    /// other designs). `None` selects the default of layers-per-stage / 4;
-    /// any value >= layers-per-stage degenerates to one chunk — i.e. the
-    /// monolithic transfer, bit-for-bit (DESIGN.md §6).
+    /// other designs). `None` selects the default of layers-per-stage / 4
+    /// *per model*; any value >= a model's layers-per-stage degenerates
+    /// that model to one chunk — i.e. the monolithic transfer,
+    /// bit-for-bit (DESIGN.md §6).
     pub chunk_layers: Option<usize>,
 }
 
@@ -255,13 +266,227 @@ impl WorkloadConfig {
     }
 }
 
+/// One model in the deployment catalog: its architecture plus the
+/// serving attributes the engine and workload layers key on. Two entries
+/// may share an architecture (two independent `opt-13b` deployments) —
+/// entries are identified by catalog index (`ModelId`), not by name.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDeployment {
+    /// Architecture name, resolved through `model::catalog` (this is what
+    /// determines the entry's shard bytes, chunk plan, and compute cost).
+    pub model: String,
+    /// Latency SLO in seconds (deadline = arrival + SLO); `None` means no
+    /// deadline — `edf` then treats the entry as infinitely loose and
+    /// `shed` never drops its requests.
+    pub slo: Option<f64>,
+    /// Priority weight (> 0). The `swap-aware` scheduler divides a cold
+    /// model's amortized swap penalty by this weight, so high-priority
+    /// models win the swap slot earlier. 1.0 (the default) is neutral and
+    /// reproduces unweighted behaviour exactly.
+    pub weight: f64,
+    /// Relative arrival-rate share (> 0), consumed by the workload
+    /// scenario generators: an entry with share 2.0 receives twice the
+    /// traffic of a share-1.0 entry under every scenario shape. 1.0 (the
+    /// default) is the homogeneous fleet's uniform share.
+    pub rate_share: f64,
+}
+
+impl ModelDeployment {
+    /// A deployment of `model` with default attributes (no SLO, neutral
+    /// weight, uniform rate share).
+    pub fn new(model: impl Into<String>) -> ModelDeployment {
+        ModelDeployment { model: model.into(), slo: None, weight: 1.0, rate_share: 1.0 }
+    }
+
+    /// Builder-style SLO.
+    pub fn with_slo(mut self, slo: f64) -> ModelDeployment {
+        self.slo = Some(slo);
+        self
+    }
+
+    /// Builder-style priority weight.
+    pub fn with_weight(mut self, weight: f64) -> ModelDeployment {
+        self.weight = weight;
+        self
+    }
+
+    /// Builder-style arrival-rate share.
+    pub fn with_rate_share(mut self, rate_share: f64) -> ModelDeployment {
+        self.rate_share = rate_share;
+        self
+    }
+
+    /// Resolve the architecture spec.
+    pub fn spec(&self) -> Result<ModelSpec, ConfigError> {
+        catalog::by_name(&self.model).ok_or_else(|| ConfigError::UnknownModel(self.model.clone()))
+    }
+
+    /// Parse one catalog entry: either a bare architecture name string
+    /// (`"opt-13b"`) or an object
+    /// (`{"model": "opt-13b", "slo": 1.0, "weight": 2.0, "rate_share": 4.0}`).
+    pub fn from_json(j: &Json) -> Result<ModelDeployment, ConfigError> {
+        if let Some(name) = j.as_str() {
+            return Ok(ModelDeployment::new(name));
+        }
+        let name = j
+            .req_str("model")
+            .map_err(|x| ConfigError::Json(format!("catalog entry: {x}")))?;
+        let num = |key: &str| -> Result<Option<f64>, ConfigError> {
+            match j.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                    ConfigError::Json(format!(
+                        "catalog entry '{name}': `{key}` must be a number"
+                    ))
+                })?)),
+            }
+        };
+        let mut d = ModelDeployment::new(name);
+        if let Some(v) = num("slo")? {
+            d.slo = Some(v);
+        }
+        if let Some(v) = num("weight")? {
+            d.weight = v;
+        }
+        if let Some(v) = num("rate_share")? {
+            d.rate_share = v;
+        }
+        Ok(d)
+    }
+
+    /// Serialize one catalog entry (defaults are omitted, so a plain
+    /// deployment renders as just its architecture attributes).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::from_pairs(vec![("model", self.model.as_str().into())]);
+        if let Some(s) = self.slo {
+            j.set("slo", s.into());
+        }
+        if self.weight != 1.0 {
+            j.set("weight", self.weight.into());
+        }
+        if self.rate_share != 1.0 {
+            j.set("rate_share", self.rate_share.into());
+        }
+        j
+    }
+}
+
+/// The deployment catalog: one `ModelDeployment` per served instance.
+/// `ModelId` is the index into this catalog everywhere (queues, swap
+/// manager, workers, workload generators).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModelCatalog {
+    pub entries: Vec<ModelDeployment>,
+}
+
+impl ModelCatalog {
+    pub fn new(entries: Vec<ModelDeployment>) -> ModelCatalog {
+        ModelCatalog { entries }
+    }
+
+    /// N identical deployments of one architecture — the paper's
+    /// homogeneous fleet, and what the legacy `num_models` JSON schema
+    /// expands into.
+    pub fn homogeneous(model: impl Into<String>, n: usize) -> ModelCatalog {
+        ModelCatalog { entries: vec![ModelDeployment::new(model.into()); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, ModelDeployment> {
+        self.entries.iter()
+    }
+
+    /// True when every entry shares one architecture (the only fleet the
+    /// real-mode runtime can serve today).
+    pub fn is_homogeneous(&self) -> bool {
+        self.entries.windows(2).all(|w| w[0].model == w[1].model)
+    }
+
+    /// Builder-style uniform SLO across every entry.
+    pub fn with_uniform_slo(mut self, slo: f64) -> ModelCatalog {
+        for d in self.entries.iter_mut() {
+            d.slo = Some(slo);
+        }
+        self
+    }
+
+    /// Resolve every entry's architecture spec, in catalog order.
+    pub fn specs(&self) -> Result<Vec<ModelSpec>, ConfigError> {
+        self.entries.iter().map(ModelDeployment::spec).collect()
+    }
+
+    /// Per-model SLO vector for the engine (`f64::INFINITY` = no SLO);
+    /// `None` when no entry sets one.
+    pub fn slos(&self) -> Option<Vec<f64>> {
+        if self.entries.iter().all(|d| d.slo.is_none()) {
+            return None;
+        }
+        Some(self.entries.iter().map(|d| d.slo.unwrap_or(f64::INFINITY)).collect())
+    }
+
+    /// Per-model priority weights, in catalog order.
+    pub fn weights(&self) -> Vec<f64> {
+        self.entries.iter().map(|d| d.weight).collect()
+    }
+
+    /// Per-model arrival-rate shares, in catalog order.
+    pub fn rate_shares(&self) -> Vec<f64> {
+        self.entries.iter().map(|d| d.rate_share).collect()
+    }
+
+    /// Validate the per-entry serving attributes (SLO/weight/rate-share
+    /// positivity). Shared by `SystemConfig::validate` and real-mode
+    /// launch (whose manifest models bypass the sim catalog, so it
+    /// cannot reuse the full `SystemConfig` validation).
+    pub fn validate_attributes(&self) -> Result<(), ConfigError> {
+        for (i, d) in self.entries.iter().enumerate() {
+            if let Some(s) = d.slo {
+                if !(s.is_finite() && s > 0.0) {
+                    return Err(ConfigError::BadSlos(format!(
+                        "entry {i} ({}): SLO targets must be finite and positive, got {s}",
+                        d.model
+                    )));
+                }
+            }
+            if !(d.weight.is_finite() && d.weight > 0.0) {
+                return Err(ConfigError::BadDeployment(format!(
+                    "entry {i} ({}): weight must be finite and positive, got {}",
+                    d.model, d.weight
+                )));
+            }
+            if !(d.rate_share.is_finite() && d.rate_share > 0.0) {
+                return Err(ConfigError::BadDeployment(format!(
+                    "entry {i} ({}): rate_share must be finite and positive, got {}",
+                    d.model, d.rate_share
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::ops::Index<usize> for ModelCatalog {
+    type Output = ModelDeployment;
+
+    fn index(&self, i: usize) -> &ModelDeployment {
+        &self.entries[i]
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
-    /// Catalog model name (all instances share it — §3.1 assumption).
-    pub model: String,
-    /// Number of co-located model instances.
-    pub num_models: usize,
+    /// The deployment catalog (was `model` + `num_models` + `slos`; a
+    /// homogeneous catalog of N identical entries reproduces the old
+    /// `num_models = N` behaviour bit-for-bit).
+    pub models: ModelCatalog,
     pub parallel: ParallelConfig,
     pub hardware: HardwareConfig,
     pub engine: EngineConfig,
@@ -270,11 +495,6 @@ pub struct SystemConfig {
     /// caller supplies arrivals itself (default "uniform" when driven
     /// through the scenario path).
     pub scenario: Option<String>,
-    /// Per-model latency SLO targets in seconds (deadline = arrival +
-    /// SLO), length `num_models`. `None` means no deadlines (every SLO is
-    /// effectively infinite): `edf` then degenerates to `fcfs` and `shed`
-    /// never drops.
-    pub slos: Option<Vec<f64>>,
 }
 
 #[derive(Debug)]
@@ -289,6 +509,7 @@ pub enum ConfigError {
     UnknownScenario(String),
     UnknownScheduler(String),
     BadSlos(String),
+    BadDeployment(String),
     Json(String),
 }
 
@@ -298,15 +519,15 @@ impl std::fmt::Display for ConfigError {
             ConfigError::UnknownModel(m) => write!(f, "unknown model '{m}' (see model::catalog)"),
             ConfigError::BadParallel(e) => write!(f, "invalid parallel config: {e}"),
             ConfigError::ZeroCap => write!(f, "resident_cap must be >= 1"),
-            ConfigError::ZeroModels => write!(f, "num_models must be >= 1"),
+            ConfigError::ZeroModels => write!(f, "the model catalog must have >= 1 entry"),
             ConfigError::ZeroBatch => write!(f, "max_batch_size must be >= 1"),
             ConfigError::ZeroChunkLayers => {
                 write!(f, "chunk_layers must be >= 1 (omit it for the default)")
             }
             ConfigError::CapExceedsMemory { cap, shard_bytes, gpu_mem } => write!(
                 f,
-                "resident_cap {cap} x shard {shard_bytes}B exceeds GPU memory {gpu_mem}B \
-                 (plus one transient shard during overlapped swaps)"
+                "the {cap} largest resident shards (largest {shard_bytes}B) exceed GPU memory \
+                 {gpu_mem}B (plus one transient shard during overlapped swaps)"
             ),
             ConfigError::UnknownScenario(s) => write!(
                 f,
@@ -317,6 +538,7 @@ impl std::fmt::Display for ConfigError {
                 "unknown scheduler '{s}' (see coordinator::scheduler::names())"
             ),
             ConfigError::BadSlos(m) => write!(f, "bad slos: {m}"),
+            ConfigError::BadDeployment(m) => write!(f, "bad catalog entry: {m}"),
             ConfigError::Json(m) => write!(f, "{m}"),
         }
     }
@@ -341,8 +563,7 @@ impl SystemConfig {
     /// The paper's §5.1 swap-latency setup: 2 models, cap 1, worst case.
     pub fn swap_experiment(tp: usize, pp: usize) -> SystemConfig {
         SystemConfig {
-            model: "opt-13b".into(),
-            num_models: 2,
+            models: ModelCatalog::homogeneous("opt-13b", 2),
             parallel: ParallelConfig::new(tp, pp),
             hardware: HardwareConfig::default(),
             engine: EngineConfig {
@@ -351,15 +572,13 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
-            slos: None,
         }
     }
 
-    /// The paper's §5.2 simulated-workload setup.
+    /// The paper's §5.2 simulated-workload setup (homogeneous fleet).
     pub fn workload_experiment(num_models: usize, resident_cap: usize, max_batch: usize) -> SystemConfig {
         SystemConfig {
-            model: "opt-13b".into(),
-            num_models,
+            models: ModelCatalog::homogeneous("opt-13b", num_models),
             parallel: ParallelConfig::new(2, 2),
             hardware: HardwareConfig::default(),
             engine: EngineConfig {
@@ -368,22 +587,99 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
-            slos: None,
         }
     }
 
+    /// A heterogeneous-fleet setup on the §5.2 grid (TP=2, PP=2).
+    pub fn hetero_experiment(
+        models: ModelCatalog,
+        resident_cap: usize,
+        max_batch: usize,
+    ) -> SystemConfig {
+        SystemConfig {
+            models,
+            parallel: ParallelConfig::new(2, 2),
+            hardware: HardwareConfig::default(),
+            engine: EngineConfig {
+                max_batch_size: max_batch,
+                resident_cap,
+                ..EngineConfig::default()
+            },
+            scenario: None,
+        }
+    }
+
+    /// Number of catalog entries (served model instances).
+    pub fn num_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Spec of the catalog's *primary* (first) entry. Kept for
+    /// homogeneous setups (every §5.x experiment); heterogeneous callers
+    /// should use `specs()`.
     pub fn spec(&self) -> Result<ModelSpec, ConfigError> {
-        catalog::by_name(&self.model).ok_or_else(|| ConfigError::UnknownModel(self.model.clone()))
+        self.models
+            .entries
+            .first()
+            .ok_or(ConfigError::ZeroModels)?
+            .spec()
+    }
+
+    /// Per-entry architecture specs, in catalog order.
+    pub fn specs(&self) -> Result<Vec<ModelSpec>, ConfigError> {
+        self.models.specs()
+    }
+
+    /// Per-model SLO vector (`None` when no entry sets one).
+    pub fn slos(&self) -> Option<Vec<f64>> {
+        self.models.slos()
+    }
+
+    /// Set one SLO per catalog entry (finite seconds; errors on a length
+    /// mismatch — the `slos.len() != num_models` class of preset bugs).
+    pub fn set_slos(&mut self, slos: &[f64]) -> Result<(), ConfigError> {
+        if slos.len() != self.models.len() {
+            return Err(ConfigError::BadSlos(format!(
+                "expected {} entries (one per catalog entry), got {}",
+                self.models.len(),
+                slos.len()
+            )));
+        }
+        for (d, &s) in self.models.entries.iter_mut().zip(slos) {
+            d.slo = Some(s);
+        }
+        Ok(())
+    }
+
+    /// Apply one SLO to every catalog entry.
+    pub fn set_uniform_slo(&mut self, slo: f64) {
+        for d in self.models.entries.iter_mut() {
+            d.slo = Some(slo);
+        }
+    }
+
+    /// Per-model largest shard bytes on the configured grid (what one GPU
+    /// must hold for that model), in catalog order.
+    pub fn shard_bytes_per_model(&self) -> Result<Vec<usize>, ConfigError> {
+        self.specs()?
+            .iter()
+            .map(|spec| {
+                crate::model::shard::max_shard_bytes(spec, self.parallel.tp, self.parallel.pp)
+                    .map_err(ConfigError::from)
+            })
+            .collect()
     }
 
     pub fn validate(&self) -> Result<(), ConfigError> {
-        let spec = self.spec()?;
-        crate::model::shard::validate(&spec, self.parallel.tp, self.parallel.pp)?;
+        if self.models.is_empty() {
+            return Err(ConfigError::ZeroModels);
+        }
+        let specs = self.specs()?;
+        for spec in &specs {
+            crate::model::shard::validate(spec, self.parallel.tp, self.parallel.pp)?;
+        }
         if self.engine.resident_cap == 0 {
             return Err(ConfigError::ZeroCap);
-        }
-        if self.num_models == 0 {
-            return Err(ConfigError::ZeroModels);
         }
         if self.engine.max_batch_size == 0 {
             return Err(ConfigError::ZeroBatch);
@@ -396,31 +692,21 @@ impl SystemConfig {
                 return Err(ConfigError::UnknownScenario(name.clone()));
             }
         }
-        if let Some(slos) = &self.slos {
-            if slos.len() != self.num_models {
-                return Err(ConfigError::BadSlos(format!(
-                    "expected {} entries (one per model), got {}",
-                    self.num_models,
-                    slos.len()
-                )));
-            }
-            if let Some(bad) = slos.iter().find(|s| !(s.is_finite() && **s > 0.0)) {
-                return Err(ConfigError::BadSlos(format!(
-                    "SLO targets must be finite and positive, got {bad}"
-                )));
-            }
-        }
-        // `cap` shards must fit in device memory. (Transfers are
-        // per-tensor granular — an overlapped swap drains the victim while
-        // the replacement fills — so the peak is cap shards, not cap+1;
-        // this is what lets §5.1 swap 24 GB models on 40 GB GPUs at TP=1.)
-        let shard_bytes =
-            crate::model::shard::max_shard_bytes(&spec, self.parallel.tp, self.parallel.pp)?;
-        let needed = shard_bytes * self.engine.resident_cap.min(self.num_models);
+        self.models.validate_attributes()?;
+        // The `cap` *largest* shards must fit in device memory together.
+        // (Transfers are per-tensor granular — an overlapped swap drains
+        // the victim while the replacement fills — so the peak is cap
+        // shards, not cap+1; this is what lets §5.1 swap 24 GB models on
+        // 40 GB GPUs at TP=1.) For a homogeneous catalog this is exactly
+        // the old `shard_bytes * min(cap, n)` bound.
+        let mut shards = self.shard_bytes_per_model()?;
+        shards.sort_unstable_by(|a, b| b.cmp(a));
+        let resident = self.engine.resident_cap.min(shards.len());
+        let needed: usize = shards.iter().take(resident).sum();
         if needed > self.hardware.gpu_mem {
             return Err(ConfigError::CapExceedsMemory {
                 cap: self.engine.resident_cap,
-                shard_bytes,
+                shard_bytes: shards[0],
                 gpu_mem: self.hardware.gpu_mem,
             });
         }
@@ -429,10 +715,14 @@ impl SystemConfig {
 
     // ----- JSON (de)serialization -----
 
+    /// Serialize (always the catalog schema; the legacy `num_models`
+    /// schema is accepted on input only).
     pub fn to_json(&self) -> Json {
         let mut j = Json::from_pairs(vec![
-            ("model", self.model.as_str().into()),
-            ("num_models", self.num_models.into()),
+            (
+                "models",
+                Json::Arr(self.models.iter().map(ModelDeployment::to_json).collect()),
+            ),
             ("tp", self.parallel.tp.into()),
             ("pp", self.parallel.pp.into()),
             ("max_batch_size", self.engine.max_batch_size.into()),
@@ -454,17 +744,70 @@ impl SystemConfig {
         if let Some(s) = &self.scenario {
             j.set("scenario", s.as_str().into());
         }
-        if let Some(slos) = &self.slos {
-            j.set("slos", Json::Arr(slos.iter().map(|&s| s.into()).collect()));
-        }
         j
     }
 
+    /// Parse either schema:
+    ///
+    /// - **catalog** — `{"models": [<entry>, ...], "tp": ..}` where each
+    ///   entry is an object (`{"model", "slo"?, "weight"?, "rate_share"?}`)
+    ///   or a bare architecture-name string;
+    /// - **legacy** — `{"model": "opt-13b", "num_models": 3, ..}` expands
+    ///   into a homogeneous catalog (the compat shim).
+    ///
+    /// Top-level `"slos"` (per-model array) / `"slo"` (uniform scalar)
+    /// are honoured under both schemas and fill entries that do not set
+    /// their own `slo` (an entry-level `slo` wins).
     pub fn from_json(j: &Json) -> Result<SystemConfig, ConfigError> {
         let e = |m: String| ConfigError::Json(m);
+        let mut entries: Vec<ModelDeployment> = if let Some(v) = j.get("models") {
+            // A malformed `models` key must be a hard error, not a silent
+            // fall-through into the legacy schema.
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| e("`models` must be an array of catalog entries".into()))?;
+            if j.get("num_models").is_some() || j.get("model").is_some() {
+                return Err(e(
+                    "give either a `models` catalog or the legacy `model`+`num_models` \
+                     pair, not both"
+                        .into(),
+                ));
+            }
+            arr.iter().map(ModelDeployment::from_json).collect::<Result<_, _>>()?
+        } else {
+            // Legacy schema: N identical entries.
+            let name = j.req_str("model").map_err(|x| e(x.to_string()))?;
+            let n = j.req_usize("num_models").map_err(|x| e(x.to_string()))?;
+            vec![ModelDeployment::new(name); n]
+        };
+        // SLO targets: a per-model "slos" array, or the "slo" scalar
+        // shorthand; either fills entries without their own slo.
+        if let Some(arr) = j.get("slos").and_then(Json::as_arr) {
+            let slos: Vec<f64> = arr
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| e("slos entries must be numbers".into())))
+                .collect::<Result<_, _>>()?;
+            if slos.len() != entries.len() {
+                return Err(ConfigError::BadSlos(format!(
+                    "expected {} entries (one per model), got {}",
+                    entries.len(),
+                    slos.len()
+                )));
+            }
+            for (d, &s) in entries.iter_mut().zip(&slos) {
+                if d.slo.is_none() {
+                    d.slo = Some(s);
+                }
+            }
+        } else if let Some(v) = j.get("slo").and_then(Json::as_f64) {
+            for d in entries.iter_mut() {
+                if d.slo.is_none() {
+                    d.slo = Some(v);
+                }
+            }
+        }
         let mut cfg = SystemConfig {
-            model: j.req_str("model").map_err(|x| e(x.to_string()))?.to_string(),
-            num_models: j.req_usize("num_models").map_err(|x| e(x.to_string()))?,
+            models: ModelCatalog::new(entries),
             parallel: ParallelConfig::new(
                 j.req_usize("tp").map_err(|x| e(x.to_string()))?,
                 j.req_usize("pp").map_err(|x| e(x.to_string()))?,
@@ -472,21 +815,9 @@ impl SystemConfig {
             hardware: HardwareConfig::default(),
             engine: EngineConfig::default(),
             scenario: None,
-            slos: None,
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
-        }
-        // SLO targets: a per-model "slos" array, or the "slo" scalar
-        // shorthand applied uniformly to every model.
-        if let Some(arr) = j.get("slos").and_then(Json::as_arr) {
-            let slos: Vec<f64> = arr
-                .iter()
-                .map(|v| v.as_f64().ok_or_else(|| e("slos entries must be numbers".into())))
-                .collect::<Result<_, _>>()?;
-            cfg.slos = Some(slos);
-        } else if let Some(v) = j.get("slo").and_then(Json::as_f64) {
-            cfg.slos = Some(vec![v; cfg.num_models]);
         }
         if let Some(v) = j.get("max_batch_size").and_then(Json::as_usize) {
             cfg.engine.max_batch_size = v;
@@ -562,7 +893,7 @@ mod tests {
     #[test]
     fn unknown_model_rejected() {
         let mut cfg = SystemConfig::swap_experiment(1, 1);
-        cfg.model = "bert-9000".into();
+        cfg.models = ModelCatalog::homogeneous("bert-9000", 2);
         assert!(matches!(cfg.validate(), Err(ConfigError::UnknownModel(_))));
     }
 
@@ -572,7 +903,7 @@ mod tests {
         cfg.engine.resident_cap = 0;
         assert!(matches!(cfg.validate(), Err(ConfigError::ZeroCap)));
         let mut cfg = SystemConfig::swap_experiment(1, 1);
-        cfg.num_models = 0;
+        cfg.models = ModelCatalog::new(Vec::new());
         assert!(matches!(cfg.validate(), Err(ConfigError::ZeroModels)));
         let mut cfg = SystemConfig::swap_experiment(1, 1);
         cfg.engine.max_batch_size = 0;
@@ -584,12 +915,107 @@ mod tests {
         let cfg = SystemConfig::workload_experiment(6, 4, 32);
         let j = cfg.to_json();
         let back = SystemConfig::from_json(&j).unwrap();
-        assert_eq!(back.model, cfg.model);
-        assert_eq!(back.num_models, 6);
+        assert_eq!(back.models, cfg.models);
+        assert_eq!(back.num_models(), 6);
         assert_eq!(back.parallel, cfg.parallel);
         assert_eq!(back.engine.max_batch_size, 32);
         assert_eq!(back.engine.resident_cap, 4);
         assert_eq!(back.engine.policy, PolicyKind::Lru);
+    }
+
+    #[test]
+    fn legacy_schema_expands_to_homogeneous_catalog() {
+        // The compat shim: `model` + `num_models` (+ uniform `slo`).
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,"slo":1.5}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.num_models(), 3);
+        assert!(cfg.models.is_homogeneous());
+        for d in cfg.models.iter() {
+            assert_eq!(d.model, "opt-13b");
+            assert_eq!(d.slo, Some(1.5));
+            assert_eq!(d.weight, 1.0);
+            assert_eq!(d.rate_share, 1.0);
+        }
+        // And it round-trips through the catalog schema.
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.models, cfg.models);
+    }
+
+    #[test]
+    fn catalog_schema_parses_objects_and_strings() {
+        let j = Json::parse(
+            r#"{"models":["opt-1.3b",
+                          {"model":"opt-13b","slo":4.0,"weight":2.0,"rate_share":0.5}],
+                "tp":2,"pp":2}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.num_models(), 2);
+        assert!(!cfg.models.is_homogeneous());
+        assert_eq!(cfg.models[0].model, "opt-1.3b");
+        assert_eq!(cfg.models[0].slo, None);
+        assert_eq!(cfg.models[1].model, "opt-13b");
+        assert_eq!(cfg.models[1].slo, Some(4.0));
+        assert_eq!(cfg.models[1].weight, 2.0);
+        assert_eq!(cfg.models[1].rate_share, 0.5);
+        // Per-model shard bytes differ — the heterogeneity the catalog
+        // exists to express.
+        let shards = cfg.shard_bytes_per_model().unwrap();
+        assert!(shards[0] < shards[1]);
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.models, cfg.models);
+    }
+
+    #[test]
+    fn non_numeric_entry_attributes_rejected() {
+        // A quoted number must be a parse error, not a silently-ignored
+        // attribute (SLO enforcement silently disabled is the failure
+        // mode this guards against).
+        for bad in [
+            r#"{"models":[{"model":"opt-13b","slo":"0.8"}],"tp":1,"pp":1}"#,
+            r#"{"models":[{"model":"opt-13b","weight":"2"}],"tp":1,"pp":1}"#,
+            r#"{"models":[{"model":"opt-13b","rate_share":[1]}],"tp":1,"pp":1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(
+                matches!(SystemConfig::from_json(&j), Err(ConfigError::Json(_))),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn mixing_catalog_and_legacy_keys_rejected() {
+        let j = Json::parse(
+            r#"{"models":["opt-13b"],"model":"opt-13b","num_models":2,"tp":1,"pp":1}"#,
+        )
+        .unwrap();
+        assert!(SystemConfig::from_json(&j).is_err());
+        // A malformed (non-array) `models` key is a hard error — it must
+        // neither fall through to the legacy schema nor be silently
+        // ignored when legacy keys are also present.
+        let j = Json::parse(r#"{"models":"opt-13b","tp":1,"pp":1}"#).unwrap();
+        assert!(matches!(SystemConfig::from_json(&j), Err(ConfigError::Json(_))));
+        let j = Json::parse(
+            r#"{"models":"opt-1.3b","model":"opt-13b","num_models":2,"tp":1,"pp":1}"#,
+        )
+        .unwrap();
+        assert!(matches!(SystemConfig::from_json(&j), Err(ConfigError::Json(_))));
+    }
+
+    #[test]
+    fn top_level_slos_fill_entries_without_their_own() {
+        let j = Json::parse(
+            r#"{"models":[{"model":"opt-13b","slo":9.0},"opt-13b"],
+                "tp":2,"pp":2,"slos":[1.0,2.0]}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.models[0].slo, Some(9.0), "entry-level slo wins");
+        assert_eq!(cfg.models[1].slo, Some(2.0), "top-level slos fill the rest");
     }
 
     #[test]
@@ -617,32 +1043,6 @@ mod tests {
     }
 
     #[test]
-    fn shipped_preset_files_load() {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
-        for name in [
-            "swap_tp2_pp2.json",
-            "workload_3model.json",
-            "workload_6model.json",
-            "slo_3model.json",
-            "chunked_3model.json",
-        ] {
-            let cfg = SystemConfig::from_file(&dir.join(name))
-                .unwrap_or_else(|e| panic!("{name}: {e}"));
-            cfg.validate().unwrap();
-            assert_eq!(cfg.model, "opt-13b");
-        }
-        // The SLO preset exercises the scheduler + slos fields end-to-end.
-        let cfg = SystemConfig::from_file(&dir.join("slo_3model.json")).unwrap();
-        assert_eq!(cfg.engine.scheduler, SchedulerKind::Edf);
-        assert_eq!(cfg.slos.as_deref(), Some(&[1.0, 3.0, 3.0][..]));
-        assert_eq!(cfg.scenario.as_deref(), Some("bursty"));
-        // The chunked preset exercises the swap-pipeline fields.
-        let cfg = SystemConfig::from_file(&dir.join("chunked_3model.json")).unwrap();
-        assert_eq!(cfg.engine.load_design, LoadDesign::ChunkedPipelined);
-        assert_eq!(cfg.engine.chunk_layers, Some(2));
-    }
-
-    #[test]
     fn scenario_field_roundtrips_and_validates() {
         let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
         cfg.scenario = Some("flash-crowd".into());
@@ -664,11 +1064,11 @@ mod tests {
     fn scheduler_field_roundtrips_and_validates() {
         let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
         cfg.engine.scheduler = SchedulerKind::Edf;
-        cfg.slos = Some(vec![1.0, 2.0, 3.0]);
+        cfg.set_slos(&[1.0, 2.0, 3.0]).unwrap();
         cfg.validate().unwrap();
         let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.engine.scheduler, SchedulerKind::Edf);
-        assert_eq!(back.slos.as_deref(), Some(&[1.0, 2.0, 3.0][..]));
+        assert_eq!(back.slos().as_deref(), Some(&[1.0, 2.0, 3.0][..]));
 
         // Unknown scheduler name rejected at JSON parse time.
         let j = Json::parse(
@@ -687,20 +1087,75 @@ mod tests {
         .unwrap();
         let cfg = SystemConfig::from_json(&j).unwrap();
         assert_eq!(cfg.engine.scheduler, SchedulerKind::Shed);
-        assert_eq!(cfg.slos.as_deref(), Some(&[1.5, 1.5, 1.5][..]));
+        assert_eq!(cfg.slos().as_deref(), Some(&[1.5, 1.5, 1.5][..]));
     }
 
     #[test]
     fn bad_slos_rejected() {
         let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
-        cfg.slos = Some(vec![1.0, 2.0]); // wrong length
+        assert!(matches!(
+            cfg.set_slos(&[1.0, 2.0]), // wrong length
+            Err(ConfigError::BadSlos(_))
+        ));
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.set_slos(&[1.0, -2.0, 1.0]).unwrap(); // non-positive
         assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
         let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
-        cfg.slos = Some(vec![1.0, -2.0, 1.0]); // non-positive
+        cfg.set_slos(&[1.0, f64::NAN, 1.0]).unwrap(); // non-finite
         assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
-        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
-        cfg.slos = Some(vec![1.0, f64::NAN, 1.0]); // non-finite
-        assert!(matches!(cfg.validate(), Err(ConfigError::BadSlos(_))));
+        // Legacy JSON with a wrong-length slos array fails at parse time.
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,"slos":[1.0,2.0]}"#,
+        )
+        .unwrap();
+        assert!(matches!(SystemConfig::from_json(&j), Err(ConfigError::BadSlos(_))));
+    }
+
+    #[test]
+    fn bad_deployment_attributes_rejected() {
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 8);
+        cfg.models.entries[0].weight = 0.0;
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadDeployment(_))));
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 8);
+        cfg.models.entries[1].rate_share = -1.0;
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadDeployment(_))));
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 8);
+        cfg.models.entries[0].weight = f64::INFINITY;
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadDeployment(_))));
+    }
+
+    #[test]
+    fn hetero_catalog_validates_every_entry_against_the_grid() {
+        // Every entry must shard on the shared grid. pp=16 divides
+        // opt-2.7b's 32 layers but not opt-13b's 40, so the catalog as a
+        // whole must be rejected.
+        let models = ModelCatalog::new(vec![
+            ModelDeployment::new("opt-2.7b"),
+            ModelDeployment::new("opt-13b"),
+        ]);
+        let mut cfg = SystemConfig::hetero_experiment(models, 1, 8);
+        cfg.parallel = ParallelConfig::new(1, 16);
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadParallel(_))));
+    }
+
+    #[test]
+    fn memory_bound_uses_the_largest_shards() {
+        // Two small + one large model, cap 2: the bound is the two
+        // *largest* shards, so shrinking GPU memory below (13b + 6.7b)
+        // shards must reject even though two small shards would fit.
+        let models = ModelCatalog::new(vec![
+            ModelDeployment::new("opt-1.3b"),
+            ModelDeployment::new("opt-6.7b"),
+            ModelDeployment::new("opt-13b"),
+        ]);
+        let mut cfg = SystemConfig::hetero_experiment(models, 2, 8);
+        cfg.validate().unwrap();
+        let shards = cfg.shard_bytes_per_model().unwrap();
+        assert!(shards[0] < shards[1] && shards[1] < shards[2]);
+        cfg.hardware.gpu_mem = shards[2] + shards[1] - 1;
+        assert!(matches!(cfg.validate(), Err(ConfigError::CapExceedsMemory { .. })));
+        cfg.hardware.gpu_mem = shards[2] + shards[1];
+        cfg.validate().unwrap();
     }
 
     #[test]

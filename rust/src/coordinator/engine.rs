@@ -25,7 +25,7 @@ use crate::coordinator::entry::{
 };
 use crate::coordinator::prefetch::MarkovPredictor;
 use crate::coordinator::queues::RequestQueues;
-use crate::coordinator::scheduler::{self, Candidate, SchedCtx, Scheduler};
+use crate::coordinator::scheduler::{self, Candidate, ModelCost, SchedCtx, Scheduler};
 use crate::coordinator::swap::{Residency, SwapManager, SwapPlan, SwapStats};
 
 /// Completion record for one request (drives every latency table/CDF).
@@ -99,6 +99,10 @@ pub struct SwapRecord {
     /// True when the load was cancelled mid-transfer; `completed` is then
     /// the cancellation-ack time and the model ended `Offloaded`.
     pub cancelled: bool,
+    /// The loaded model's largest per-GPU shard, bytes — *that model's*
+    /// own footprint from the per-model cost model, not the fleet
+    /// maximum. 0 when the backend supplied no cost model (real mode).
+    pub bytes: usize,
 }
 
 impl SwapRecord {
@@ -156,19 +160,26 @@ pub struct Engine {
     /// Per-model SLO target in seconds (deadline = arrival + SLO);
     /// `f64::INFINITY` means no deadline.
     slos: Vec<f64>,
-    /// Cost-model constants for SLO-aware disciplines (see `SchedCtx`).
-    swap_cost: f64,
-    swap_floor: f64,
+    /// Per-model cost-model constants for SLO-aware disciplines (see
+    /// `scheduler::ModelCost`): each catalog entry's own swap cost and
+    /// cold-load floor, derived from its own shard bytes.
+    costs: Vec<ModelCost>,
+    /// Fleet-wide lower bound on batch-submit → completion time.
     exec_floor: f64,
+    /// Per-model priority weights (`ModelDeployment::weight`; 1.0 =
+    /// neutral), consumed by `swap-aware`.
+    weights: Vec<f64>,
     inflight_batches: HashMap<EntryId, BatchEntry>,
     inflight_per_model: Vec<usize>,
     inflight_loads: HashMap<EntryId, InflightLoad>,
     swap_pairs: Vec<SwapPair>,
-    /// Chunks per load entry under the chunked pipeline; 1 (the default)
-    /// means monolithic transfers, in which case the engine behaves
-    /// exactly like the async design regardless of `cfg.load_design` —
-    /// the `chunk_layers = all` equivalence invariant (DESIGN.md §6).
-    chunks_per_load: usize,
+    /// Per-model chunks per load entry under the chunked pipeline; 1 (the
+    /// default) means monolithic transfers for that model, in which case
+    /// the engine behaves exactly like the async design regardless of
+    /// `cfg.load_design` — the `chunk_layers = all` equivalence invariant
+    /// (DESIGN.md §6). Heterogeneous catalogs get different counts per
+    /// model (a model's layer count determines its plan).
+    chunks_per_load: Vec<usize>,
     /// Models with a cancel entry in flight (no early batches for them).
     cancelling: Vec<bool>,
     next_entry: EntryId,
@@ -192,14 +203,14 @@ impl Engine {
             swap: SwapManager::new(num_models, cfg.resident_cap, cfg.policy, seed),
             scheduler: scheduler::make(cfg.scheduler),
             slos: vec![f64::INFINITY; num_models],
-            swap_cost: 0.0,
-            swap_floor: 0.0,
+            costs: vec![ModelCost::default(); num_models],
             exec_floor: 0.0,
+            weights: vec![1.0; num_models],
             inflight_batches: HashMap::new(),
             inflight_per_model: vec![0; num_models],
             inflight_loads: HashMap::new(),
             swap_pairs: Vec::new(),
-            chunks_per_load: 1,
+            chunks_per_load: vec![1; num_models],
             cancelling: vec![false; num_models],
             next_entry: 0,
             next_request: 0,
@@ -227,17 +238,40 @@ impl Engine {
         self.slos.copy_from_slice(slos);
     }
 
-    /// Provide the scheduler's cost model: `swap_cost` is an *estimate*
-    /// of one swap-in's latency (drives `swap-aware` amortization);
-    /// `swap_floor` and `exec_floor` are *lower bounds* on a cold load
-    /// and on batch-submit→completion time (drive `shed`'s provable
-    /// infeasibility test). All default to zero, which disables
-    /// amortization and makes shedding maximally conservative.
-    pub fn set_cost_model(&mut self, swap_cost: f64, swap_floor: f64, exec_floor: f64) {
-        assert!(swap_cost >= 0.0 && swap_floor >= 0.0 && exec_floor >= 0.0);
-        self.swap_cost = swap_cost;
-        self.swap_floor = swap_floor;
+    /// Provide the scheduler's cost model: one `ModelCost` per catalog
+    /// entry (that model's own swap-in estimate, cold-load floor, and
+    /// shard bytes — see `scheduler::ModelCost`), plus the fleet-wide
+    /// `exec_floor` lower bound on batch-submit→completion time. All
+    /// default to zero, which disables amortization and makes shedding
+    /// maximally conservative. Each cost's `chunked` flag is derived by
+    /// the engine from its chunk plan (`set_chunks_per_load`), not from
+    /// the supplied value.
+    pub fn set_cost_model(&mut self, costs: Vec<ModelCost>, exec_floor: f64) {
+        assert_eq!(costs.len(), self.slos.len(), "one ModelCost per model");
+        assert!(
+            exec_floor >= 0.0
+                && costs.iter().all(|c| c.swap_cost >= 0.0 && c.swap_floor >= 0.0)
+        );
+        self.costs = costs;
         self.exec_floor = exec_floor;
+    }
+
+    /// Convenience for homogeneous fleets and tests: one cost for every
+    /// model (exactly the pre-catalog global-constant behaviour).
+    pub fn set_uniform_cost_model(&mut self, swap_cost: f64, swap_floor: f64, exec_floor: f64) {
+        let n = self.slos.len();
+        self.set_cost_model(
+            vec![ModelCost { swap_cost, swap_floor, bytes: 0, chunked: false }; n],
+            exec_floor,
+        );
+    }
+
+    /// Set per-model priority weights (`ModelDeployment::weight`; all 1.0
+    /// reproduces unweighted scheduling exactly).
+    pub fn set_weights(&mut self, weights: &[f64]) {
+        assert_eq!(weights.len(), self.weights.len(), "one weight per model");
+        assert!(weights.iter().all(|w| *w > 0.0 && w.is_finite()));
+        self.weights.copy_from_slice(weights);
     }
 
     /// The scheduling discipline in effect.
@@ -245,21 +279,30 @@ impl Engine {
         self.scheduler.name()
     }
 
-    /// Configure the chunked swap pipeline: each load entry transfers as
-    /// `n` layer-granular chunks (see `model::shard::chunk_plan`). Only
-    /// meaningful with `LoadDesign::ChunkedPipelined`; `n == 1` keeps the
+    /// Configure the chunked swap pipeline: model `m`'s load entries
+    /// transfer as `chunks[m]` layer-granular chunks (see
+    /// `model::shard::chunk_plan` — per-model counts under a
+    /// heterogeneous catalog). Only meaningful with
+    /// `LoadDesign::ChunkedPipelined`; a count of 1 keeps that model's
     /// monolithic behaviour bit-for-bit.
-    pub fn set_chunks_per_load(&mut self, n: usize) {
-        assert!(n >= 1);
-        self.chunks_per_load = n;
+    pub fn set_chunks_per_load(&mut self, chunks: Vec<usize>) {
+        assert_eq!(chunks.len(), self.chunks_per_load.len(), "one chunk count per model");
+        assert!(chunks.iter().all(|&n| n >= 1));
+        self.chunks_per_load = chunks;
     }
 
-    /// True when the chunked pipeline changes engine behaviour: batches
-    /// may be submitted to partially resident models and in-flight loads
-    /// may be cancelled. A one-chunk plan is monolithic by definition.
-    fn chunked_active(&self) -> bool {
+    /// True when the chunked pipeline changes engine behaviour *for this
+    /// model*: batches may be submitted to it while partially resident
+    /// and its in-flight loads may be cancelled. A one-chunk plan is
+    /// monolithic by definition.
+    fn chunked_active(&self, model: ModelId) -> bool {
         self.cfg.load_design == crate::config::LoadDesign::ChunkedPipelined
-            && self.chunks_per_load > 1
+            && self.chunks_per_load[model] > 1
+    }
+
+    /// This model's cost constants with the live `chunked` flag folded in.
+    fn model_cost(&self, model: ModelId) -> ModelCost {
+        ModelCost { chunked: self.chunked_active(model), ..self.costs[model] }
     }
 
     /// Deadline for a request for `model` arriving at `arrival`.
@@ -271,10 +314,7 @@ impl Engine {
         SchedCtx {
             now,
             max_batch_size: self.cfg.max_batch_size,
-            swap_cost: self.swap_cost,
-            swap_floor: self.swap_floor,
             exec_floor: self.exec_floor,
-            chunked: self.chunked_active(),
         }
     }
 
@@ -299,7 +339,12 @@ impl Engine {
         self.predictor.observe(model);
         let deadline = self.deadline_for(model, now);
         if self.scheduler.sheds()
-            && !self.scheduler.admit(&self.sched_ctx(now), deadline, self.swap.state(model))
+            && !self.scheduler.admit(
+                &self.sched_ctx(now),
+                self.model_cost(model),
+                deadline,
+                self.swap.state(model),
+            )
         {
             self.dropped.push(DropRecord {
                 id,
@@ -391,7 +436,7 @@ impl Engine {
         }
         let model = inflight.model;
         let pair_idx = inflight.pair;
-        let total = self.chunks_per_load;
+        let total = self.swap_pairs[pair_idx].total_chunks;
         // World-acks complete in chunk order (each worker acks its chunks
         // in order), but guard monotonicity anyway.
         let advance = match self.swap.state(model) {
@@ -478,6 +523,7 @@ impl Engine {
                 time_to_first_chunk: pair.first_chunk_at.unwrap_or(now) - pair.submitted,
                 overlap_fraction: pair.overlapped_chunks as f64 / pair.total_chunks as f64,
                 cancelled: pair.cancelled,
+                bytes: self.costs[pair.load_model].bytes,
             });
         }
     }
@@ -543,10 +589,11 @@ impl Engine {
         }
         let ctx = self.sched_ctx(now);
         for model in self.queues.nonempty_models() {
+            let cost = self.model_cost(model);
             while let Some(arrival) = self.queues.head(model).map(|r| r.arrival) {
                 let deadline = self.deadline_for(model, arrival);
                 let residency = self.swap.state(model);
-                if !self.scheduler.drop_queued(&ctx, deadline, residency) {
+                if !self.scheduler.drop_queued(&ctx, cost, deadline, residency) {
                     break;
                 }
                 let req = self.queues.pop_head(model).unwrap();
@@ -606,6 +653,8 @@ impl Engine {
                         queue_len: self.queues.len(m),
                         residency: self.swap.state(m),
                         inflight: self.inflight_per_model[m],
+                        cost: self.model_cost(m),
+                        weight: self.weights[m],
                     }
                 })
                 .collect();
@@ -629,7 +678,7 @@ impl Engine {
                         // chunk's arrival, so the transfer hides behind
                         // execution (time-to-first-chunk, DESIGN.md §6).
                         // Monolithic designs gate batches until Resident.
-                        if self.chunked_active()
+                        if self.chunked_active(model)
                             && !self.cancelling[model]
                             && self.inflight_per_model[model] < self.max_inflight_per_model
                         {
@@ -676,7 +725,9 @@ impl Engine {
                                 // queues so a victim can drain. The chunked
                                 // pipeline can additionally preempt a stale
                                 // half-loaded model to free the slot.
-                                if self.chunked_active() {
+                                if self.cfg.load_design
+                                    == crate::config::LoadDesign::ChunkedPipelined
+                                {
                                     self.try_cancel_stale_load(model);
                                 }
                                 break 'scan;
@@ -695,7 +746,7 @@ impl Engine {
     fn submit_batch(&mut self, now: f64, model: ModelId) {
         debug_assert!(
             self.swap.is_resident(model)
-                || (self.chunked_active() && self.swap.state(model).is_loading()),
+                || (self.chunked_active(model) && self.swap.state(model).is_loading()),
             "load dependency violated"
         );
         let requests = self.queues.pop_batch(model, self.cfg.max_batch_size);
@@ -711,7 +762,7 @@ impl Engine {
     }
 
     fn submit_swap(&mut self, now: f64, model: ModelId, victim: Option<ModelId>) {
-        let chunks = if self.chunked_active() { self.chunks_per_load } else { 1 };
+        let chunks = if self.chunked_active(model) { self.chunks_per_load[model] } else { 1 };
         let pair_idx = self.swap_pairs.len();
         self.swap_pairs.push(SwapPair {
             load_model: model,
@@ -769,7 +820,7 @@ impl Engine {
     /// would violate the load dependency. Returns true iff a cancel
     /// entry was issued; the swap slot frees when every worker acks.
     pub fn cancel_swap_in(&mut self, model: ModelId) -> bool {
-        if !self.chunked_active()
+        if !self.chunked_active(model)
             || self.cancelling[model]
             || !self.swap.state(model).is_loading()
             || self.inflight_per_model[model] != 0
@@ -853,7 +904,7 @@ mod tests {
                 ..cfg(cap, max_batch)
             },
         );
-        e.set_chunks_per_load(chunks);
+        e.set_chunks_per_load(vec![chunks; models]);
         e
     }
 
@@ -1259,7 +1310,7 @@ mod tests {
     fn choice_point(kind: crate::config::SchedulerKind, slos: &[f64], cost: f64) -> Vec<Entry> {
         let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 8, kind));
         e.set_slos(slos);
-        e.set_cost_model(cost, 0.0, 0.0);
+        e.set_uniform_cost_model(cost, 0.0, 0.0);
         e.force_resident(0, 0.0);
         e.on_request(0.0, 0, 4);
         let busy = e.drain_outbox()[0].id();
@@ -1312,7 +1363,7 @@ mod tests {
         use crate::config::SchedulerKind;
         let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 8, SchedulerKind::Shed));
         // Cold load lower bound 0.75 s, exec floor 0.03 s.
-        e.set_cost_model(0.8, 0.75, 0.03);
+        e.set_uniform_cost_model(0.8, 0.75, 0.03);
         e.set_slos(&[0.5, 2.0]);
         e.force_resident(1, 0.0);
         // Model 0 is offloaded: 0.75 + 0.03 > 0.5 — provably infeasible.
@@ -1360,7 +1411,7 @@ mod tests {
     fn shed_without_slos_never_drops() {
         use crate::config::SchedulerKind;
         let mut e = engine_for(2, 1, 1, cfg_with_scheduler(1, 4, SchedulerKind::Shed));
-        e.set_cost_model(0.8, 0.75, 0.03);
+        e.set_uniform_cost_model(0.8, 0.75, 0.03);
         e.force_resident(0, 0.0);
         let mut now = 0.0;
         for i in 0..8 {

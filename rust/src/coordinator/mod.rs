@@ -13,7 +13,7 @@ pub mod scheduler;
 pub mod swap;
 
 pub use engine::{DropRecord, Engine, RequestRecord, SwapRecord};
-pub use scheduler::{Candidate, SchedCtx, Scheduler};
+pub use scheduler::{Candidate, ModelCost, SchedCtx, Scheduler};
 pub use entry::{BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId};
 pub use queues::RequestQueues;
 pub use swap::{Residency, SwapManager, SwapPlan, SwapStats};

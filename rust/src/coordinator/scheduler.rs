@@ -14,6 +14,14 @@
 //! | `swap-aware` | FCFS with the swap-in cost amortized over the batch a cold model could pack |
 //! | `shed`       | FCFS plus admission control: provably deadline-infeasible requests are dropped |
 //!
+//! Cost-model constants are **per model** ([`ModelCost`]): under a
+//! heterogeneous [`crate::config::ModelCatalog`], a 1.3B model's swap-in
+//! estimate and cold-load floor are its *own* shard's, not the fleet
+//! maximum — `swap-aware` amortizes each model's actual cost and `shed`'s
+//! infeasibility proofs stay tight for small models. For a homogeneous
+//! catalog every `ModelCost` is identical, which reproduces the old
+//! global-constant behaviour exactly.
+//!
 //! The engine drives the trait at exactly two points: `order` ranks the
 //! models that have queued work before each scheduling pass, and
 //! `admit`/`drop_queued` gate requests at arrival time and while they
@@ -27,32 +35,42 @@ use crate::config::SchedulerKind;
 use crate::coordinator::entry::ModelId;
 use crate::coordinator::swap::Residency;
 
-/// Cost-model constants the engine hands every scheduling decision. All
-/// default to zero, which makes the SLO-aware disciplines maximally
-/// conservative (`shed` only drops requests that are already past their
-/// deadline); backends with a calibrated cost model (`sim::SimSystem`)
-/// tighten them via `Engine::set_cost_model`.
+/// Fleet-wide cost-model constants the engine hands every scheduling
+/// decision. Everything model-specific lives in [`ModelCost`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SchedCtx {
     /// Current engine time (sim seconds or unix seconds).
     pub now: f64,
     /// Engine max batch size (amortization denominator for `swap-aware`).
     pub max_batch_size: usize,
-    /// *Estimate* of one swap-in's latency — used by `swap-aware` to
-    /// weigh queue pressure against the cost the `SwapManager` would pay.
-    pub swap_cost: f64,
-    /// *Lower bound* on a cold load's latency — used by `shed` for
-    /// provable infeasibility, so it must never overestimate.
-    pub swap_floor: f64,
     /// *Lower bound* on any request's batch-submit → completion time
-    /// (pipe hops + compute), also part of `shed`'s proof obligation.
+    /// (pipe hops + compute), part of `shed`'s proof obligation.
     pub exec_floor: f64,
-    /// True when the chunked swap pipeline is active (DESIGN.md §6): the
-    /// load then *overlaps* execution — compute starts after the first
-    /// chunk, so a cold request's earliest completion is
-    /// `max(swap_floor, exec_floor)` rather than their sum. (`swap_cost`
-    /// is likewise supplied as a time-to-first-chunk estimate by backends
-    /// running the chunked design.)
+}
+
+/// Per-model cost-model constants (one per catalog entry, derived from
+/// that model's own shard bytes and tensor counts). All default to zero,
+/// which makes the SLO-aware disciplines maximally conservative (`shed`
+/// only drops requests that are already past their deadline); backends
+/// with a calibrated cost model (`sim::SimSystem`) tighten them via
+/// `Engine::set_cost_model`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModelCost {
+    /// *Estimate* of one swap-in's latency for this model — used by
+    /// `swap-aware` to weigh queue pressure against the cost the
+    /// `SwapManager` would pay (time-to-first-chunk under the chunked
+    /// pipeline).
+    pub swap_cost: f64,
+    /// *Lower bound* on this model's cold-load latency — used by `shed`
+    /// for provable infeasibility, so it must never overestimate.
+    pub swap_floor: f64,
+    /// This model's largest per-GPU shard, bytes (0 = unknown; reporting
+    /// only — surfaced on `SwapRecord`s, never used in decisions).
+    pub bytes: usize,
+    /// True when the chunked swap pipeline is active for this model
+    /// (DESIGN.md §6): the load then *overlaps* execution — compute
+    /// starts after the first chunk, so a cold request's earliest
+    /// completion is `max(swap_floor, exec_floor)` rather than their sum.
     pub chunked: bool,
 }
 
@@ -71,6 +89,11 @@ pub struct Candidate {
     pub residency: Residency,
     /// In-flight batch entries for this model.
     pub inflight: usize,
+    /// This model's cost-model constants.
+    pub cost: ModelCost,
+    /// This model's priority weight (`ModelDeployment::weight`; 1.0 =
+    /// neutral). `swap-aware` divides the amortized swap penalty by it.
+    pub weight: f64,
 }
 
 /// A scheduling & admission discipline.
@@ -89,13 +112,19 @@ pub trait Scheduler: Send {
 
     /// Admission control at arrival time: `false` rejects the request
     /// before it is queued. Default: admit everything.
-    fn admit(&self, _ctx: &SchedCtx, _deadline: f64, _residency: Residency) -> bool {
+    fn admit(&self, _ctx: &SchedCtx, _cost: ModelCost, _deadline: f64, _residency: Residency) -> bool {
         true
     }
 
     /// Lazy shedding of queued heads whose deadline became infeasible
     /// while they waited. Default: never drop.
-    fn drop_queued(&self, _ctx: &SchedCtx, _deadline: f64, _residency: Residency) -> bool {
+    fn drop_queued(
+        &self,
+        _ctx: &SchedCtx,
+        _cost: ModelCost,
+        _deadline: f64,
+        _residency: Residency,
+    ) -> bool {
         false
     }
 
@@ -116,13 +145,13 @@ fn by_arrival(candidates: &mut [Candidate]) {
 /// possibly complete, starting from `ctx.now`: every request pays at
 /// least `exec_floor`, and a model whose shards are off-GPU (or still
 /// draining — the engine cannot start its reload before the drain
-/// finishes) additionally pays at least one cold load.
-fn earliest_completion(ctx: &SchedCtx, residency: Residency) -> f64 {
+/// finishes) additionally pays at least *its own* cold load.
+fn earliest_completion(ctx: &SchedCtx, cost: ModelCost, residency: Residency) -> f64 {
     let cold = match residency {
-        Residency::Offloaded | Residency::Offloading => ctx.swap_floor,
+        Residency::Offloaded | Residency::Offloading => cost.swap_floor,
         Residency::Resident | Residency::Loading | Residency::PartiallyResident { .. } => 0.0,
     };
-    if ctx.chunked {
+    if cost.chunked {
         // Transfer and execution overlap: a request still cannot finish
         // before the full shard has crossed the link (the last layer's
         // chunk lands no earlier than swap_floor) NOR before the pure
@@ -174,12 +203,15 @@ impl Scheduler for Edf {
 }
 
 /// `swap-aware` — FCFS on an *effective* arrival time that charges cold
-/// models their swap cost amortized over the batch the swap would unlock:
-/// `key = head_arrival + swap_cost / min(queue_len, max_batch_size)`.
-/// A cold model with one queued request pays the full swap cost and
+/// models *their own* swap cost, amortized over the batch the swap would
+/// unlock and scaled down by their priority weight:
+/// `key = head_arrival + swap_cost / (min(queue_len, max_batch_size) · weight)`.
+/// A cold model with one queued request pays its full swap cost and
 /// yields to warm queues; a cold model with a full batch waiting pays
 /// `swap_cost / max_batch_size` and jumps back up — the swap is worth it
-/// precisely when many requests share it.
+/// precisely when many requests share it. Under a heterogeneous catalog a
+/// small model's penalty is proportionally smaller (its shard is cheap to
+/// load), and a weight-2 model's penalty is halved.
 pub struct SwapAware;
 
 impl SwapAware {
@@ -188,7 +220,7 @@ impl SwapAware {
         let cold = matches!(c.residency, Residency::Offloaded | Residency::Offloading);
         if cold {
             let amortize = c.queue_len.min(ctx.max_batch_size.max(1)).max(1);
-            c.head_arrival + ctx.swap_cost / amortize as f64
+            c.head_arrival + c.cost.swap_cost / (amortize as f64 * c.weight)
         } else {
             c.head_arrival
         }
@@ -213,8 +245,10 @@ impl Scheduler for SwapAware {
 /// `shed` — FCFS ordering plus admission control: a request is rejected
 /// at arrival (and a queued head is dropped while waiting) iff its
 /// deadline is *provably* infeasible — even a zero-queue best case using
-/// the lower-bound cost model could not meet it. Turns unbounded tail
-/// latency into a measured drop rate.
+/// the model's own lower-bound cost could not meet it. Turns unbounded
+/// tail latency into a measured drop rate. Per-model floors matter here:
+/// a tight SLO that is provably infeasible for a 13B model can be
+/// perfectly feasible for a 1.3B model in the same fleet.
 pub struct Shed;
 
 impl Scheduler for Shed {
@@ -226,12 +260,18 @@ impl Scheduler for Shed {
         by_arrival(candidates);
     }
 
-    fn admit(&self, ctx: &SchedCtx, deadline: f64, residency: Residency) -> bool {
-        earliest_completion(ctx, residency) <= deadline
+    fn admit(&self, ctx: &SchedCtx, cost: ModelCost, deadline: f64, residency: Residency) -> bool {
+        earliest_completion(ctx, cost, residency) <= deadline
     }
 
-    fn drop_queued(&self, ctx: &SchedCtx, deadline: f64, residency: Residency) -> bool {
-        earliest_completion(ctx, residency) > deadline
+    fn drop_queued(
+        &self,
+        ctx: &SchedCtx,
+        cost: ModelCost,
+        deadline: f64,
+        residency: Residency,
+    ) -> bool {
+        earliest_completion(ctx, cost, residency) > deadline
     }
 
     fn sheds(&self) -> bool {
@@ -265,7 +305,9 @@ pub fn describe(name: &str) -> Option<&'static str> {
     match name {
         "fcfs" => Some("oldest queue head first (the paper's engine, exact)"),
         "edf" => Some("earliest deadline first using per-model SLO targets"),
-        "swap-aware" => Some("FCFS with swap cost amortized over the batch a cold model packs"),
+        "swap-aware" => {
+            Some("FCFS with each model's own swap cost amortized over the batch it packs")
+        }
         "shed" => Some("FCFS + admission control: drop provably deadline-infeasible requests"),
         _ => None,
     }
@@ -298,18 +340,17 @@ mod tests {
             queue_len: qlen,
             residency: res,
             inflight: 0,
+            cost: cost(1.0),
+            weight: 1.0,
         }
     }
 
-    fn ctx(swap_cost: f64) -> SchedCtx {
-        SchedCtx {
-            now: 10.0,
-            max_batch_size: 8,
-            swap_cost,
-            swap_floor: 0.75,
-            exec_floor: 0.03,
-            chunked: false,
-        }
+    fn cost(swap_cost: f64) -> ModelCost {
+        ModelCost { swap_cost, swap_floor: 0.75, bytes: 0, chunked: false }
+    }
+
+    fn ctx() -> SchedCtx {
+        SchedCtx { now: 10.0, max_batch_size: 8, exec_floor: 0.03 }
     }
 
     fn order_of(s: &dyn Scheduler, ctx: &SchedCtx, mut cands: Vec<Candidate>) -> Vec<ModelId> {
@@ -337,7 +378,7 @@ mod tests {
     fn fcfs_orders_by_arrival_then_model() {
         let order = order_of(
             &Fcfs,
-            &ctx(1.0),
+            &ctx(),
             vec![
                 cand(2, 3.0, f64::INFINITY, 1, Residency::Resident),
                 cand(0, 3.0, f64::INFINITY, 1, Residency::Offloaded),
@@ -351,7 +392,7 @@ mod tests {
     fn edf_orders_by_deadline_and_degenerates_to_fcfs() {
         let order = order_of(
             &Edf,
-            &ctx(1.0),
+            &ctx(),
             vec![
                 cand(0, 1.0, 9.0, 1, Residency::Resident),
                 cand(1, 2.0, 4.0, 1, Residency::Resident),
@@ -365,22 +406,25 @@ mod tests {
             cand(1, 1.0, f64::INFINITY, 1, Residency::Resident),
         ];
         assert_eq!(
-            order_of(&Edf, &ctx(1.0), cands.clone()),
-            order_of(&Fcfs, &ctx(1.0), cands)
+            order_of(&Edf, &ctx(), cands.clone()),
+            order_of(&Fcfs, &ctx(), cands)
         );
     }
 
     #[test]
     fn swap_aware_amortizes_cold_penalty_over_queue() {
-        let c = ctx(8.0);
+        let with_cost = |mut c: Candidate, sc: f64| {
+            c.cost = cost(sc);
+            c
+        };
         // Cold model with 1 queued request: key = arrival + 8.0 → loses to
         // a warm model that arrived 2 s later.
         let order = order_of(
             &SwapAware,
-            &c,
+            &ctx(),
             vec![
-                cand(0, 0.0, f64::INFINITY, 1, Residency::Offloaded),
-                cand(1, 2.0, f64::INFINITY, 1, Residency::Resident),
+                with_cost(cand(0, 0.0, f64::INFINITY, 1, Residency::Offloaded), 8.0),
+                with_cost(cand(1, 2.0, f64::INFINITY, 1, Residency::Resident), 8.0),
             ],
         );
         assert_eq!(order, vec![1, 0]);
@@ -388,39 +432,63 @@ mod tests {
         // wins again (the swap is amortized over 8 requests).
         let order = order_of(
             &SwapAware,
-            &c,
+            &ctx(),
             vec![
-                cand(0, 0.0, f64::INFINITY, 8, Residency::Offloaded),
-                cand(1, 2.0, f64::INFINITY, 1, Residency::Resident),
+                with_cost(cand(0, 0.0, f64::INFINITY, 8, Residency::Offloaded), 8.0),
+                with_cost(cand(1, 2.0, f64::INFINITY, 1, Residency::Resident), 8.0),
             ],
         );
         assert_eq!(order, vec![0, 1]);
         // Zero swap cost: identical to FCFS.
         let cands = vec![
-            cand(0, 5.0, f64::INFINITY, 1, Residency::Offloaded),
-            cand(1, 2.0, f64::INFINITY, 3, Residency::Resident),
+            with_cost(cand(0, 5.0, f64::INFINITY, 1, Residency::Offloaded), 0.0),
+            with_cost(cand(1, 2.0, f64::INFINITY, 3, Residency::Resident), 0.0),
         ];
         assert_eq!(
-            order_of(&SwapAware, &ctx(0.0), cands.clone()),
-            order_of(&Fcfs, &ctx(0.0), cands)
+            order_of(&SwapAware, &ctx(), cands.clone()),
+            order_of(&Fcfs, &ctx(), cands)
+        );
+    }
+
+    #[test]
+    fn swap_aware_uses_per_model_costs_and_weights() {
+        let c = ctx();
+        // Heterogeneous fleet: both models cold, same arrival, one queued
+        // request each. The small model (cheap swap) must be ranked first.
+        let mut small = cand(1, 0.0, f64::INFINITY, 1, Residency::Offloaded);
+        small.cost = cost(0.5);
+        let mut large = cand(0, 0.0, f64::INFINITY, 1, Residency::Offloaded);
+        large.cost = cost(8.0);
+        assert!(SwapAware::effective_key(&c, &small) < SwapAware::effective_key(&c, &large));
+        let order = order_of(&SwapAware, &c, vec![large, small]);
+        assert_eq!(order, vec![1, 0], "cheaper swap wins the slot");
+        // Priority weight scales the penalty down: weight 4 on the large
+        // model quarters its penalty (8.0 / 4 = 2.0 > 0.5 — still loses;
+        // weight 32 → 0.25 < 0.5 — now wins).
+        let mut weighted = large;
+        weighted.weight = 32.0;
+        assert!(
+            SwapAware::effective_key(&c, &weighted) < SwapAware::effective_key(&c, &small),
+            "a high-priority model's amortized penalty shrinks"
         );
     }
 
     #[test]
     fn shed_admits_feasible_and_rejects_infeasible() {
-        let c = ctx(1.0); // swap_floor 0.75, exec_floor 0.03, now 10.0
+        let c = ctx(); // exec_floor 0.03, now 10.0; cost swap_floor 0.75
+        let k = cost(1.0);
         // Resident model: feasible iff deadline >= 10.03.
-        assert!(Shed.admit(&c, 10.03, Residency::Resident));
-        assert!(!Shed.admit(&c, 10.02, Residency::Resident));
-        // Offloaded model additionally pays the cold-load floor.
-        assert!(Shed.admit(&c, 10.78, Residency::Offloaded));
-        assert!(!Shed.admit(&c, 10.77, Residency::Offloaded));
+        assert!(Shed.admit(&c, k, 10.03, Residency::Resident));
+        assert!(!Shed.admit(&c, k, 10.02, Residency::Resident));
+        // Offloaded model additionally pays its own cold-load floor.
+        assert!(Shed.admit(&c, k, 10.78, Residency::Offloaded));
+        assert!(!Shed.admit(&c, k, 10.77, Residency::Offloaded));
         // Loading counts as warm (the load may complete immediately).
-        assert!(Shed.admit(&c, 10.05, Residency::Loading));
+        assert!(Shed.admit(&c, k, 10.05, Residency::Loading));
         // drop_queued is the exact complement of admit.
         for res in [Residency::Resident, Residency::Offloaded, Residency::Loading] {
             for d in [9.0, 10.05, 10.5, 11.0, f64::INFINITY] {
-                assert_eq!(Shed.admit(&c, d, res), !Shed.drop_queued(&c, d, res));
+                assert_eq!(Shed.admit(&c, k, d, res), !Shed.drop_queued(&c, k, d, res));
             }
         }
         assert!(Shed.sheds());
@@ -428,36 +496,50 @@ mod tests {
     }
 
     #[test]
+    fn shed_floors_are_per_model() {
+        // Heterogeneous fleet, one shared deadline: infeasible for the
+        // large model (floor 0.75), feasible for the small one (floor
+        // 0.10) — the per-model cost is what keeps small models servable
+        // under tight SLOs.
+        let c = ctx();
+        let large = ModelCost { swap_floor: 0.75, ..ModelCost::default() };
+        let small = ModelCost { swap_floor: 0.10, ..ModelCost::default() };
+        let deadline = 10.5;
+        assert!(!Shed.admit(&c, large, deadline, Residency::Offloaded));
+        assert!(Shed.admit(&c, small, deadline, Residency::Offloaded));
+    }
+
+    #[test]
     fn chunked_cost_model_overlaps_transfer_and_execution() {
         // Chunked pipeline: cold earliest completion is now + max(floors),
         // not now + sum — requests that the serial model would shed stay
         // admissible.
-        let mut c = ctx(1.0); // swap_floor 0.75, exec_floor 0.03, now 10.0
-        c.chunked = true;
-        assert!(Shed.admit(&c, 10.75, Residency::Offloaded), "max(0.75, 0.03) = 0.75");
-        assert!(!Shed.admit(&c, 10.74, Residency::Offloaded));
+        let c = ctx(); // exec_floor 0.03, now 10.0
+        let chunked = ModelCost { chunked: true, ..cost(1.0) };
+        assert!(Shed.admit(&c, chunked, 10.75, Residency::Offloaded), "max(0.75, 0.03) = 0.75");
+        assert!(!Shed.admit(&c, chunked, 10.74, Residency::Offloaded));
         // Serial model would require 10.78.
-        let serial = ctx(1.0);
-        assert!(!Shed.admit(&serial, 10.75, Residency::Offloaded));
+        assert!(!Shed.admit(&c, cost(1.0), 10.75, Residency::Offloaded));
         // Warm models: unchanged (exec floor only).
-        assert!(Shed.admit(&c, 10.03, Residency::Resident));
-        assert!(!Shed.admit(&c, 10.02, Residency::Resident));
+        assert!(Shed.admit(&c, chunked, 10.03, Residency::Resident));
+        assert!(!Shed.admit(&c, chunked, 10.02, Residency::Resident));
         // Partial residency counts as warm: the load may complete any
         // moment and compute is already overlapping.
-        assert!(Shed.admit(&c, 10.03, Residency::PartiallyResident { loaded: 1, total: 4 }));
+        assert!(Shed.admit(&c, chunked, 10.03, Residency::PartiallyResident { loaded: 1, total: 4 }));
         // swap-aware treats a partially resident model as warm: its swap
         // is already paid for, so no amortized penalty on the key.
-        let partial =
+        let mut partial =
             cand(0, 3.0, f64::INFINITY, 1, Residency::PartiallyResident { loaded: 2, total: 4 });
+        partial.cost = chunked;
         assert_eq!(SwapAware::effective_key(&c, &partial), 3.0);
     }
 
     #[test]
     fn only_shed_gates_admission() {
-        let c = ctx(5.0);
+        let c = ctx();
         for s in [&Fcfs as &dyn Scheduler, &Edf, &SwapAware] {
-            assert!(s.admit(&c, f64::NEG_INFINITY, Residency::Offloaded));
-            assert!(!s.drop_queued(&c, f64::NEG_INFINITY, Residency::Offloaded));
+            assert!(s.admit(&c, cost(5.0), f64::NEG_INFINITY, Residency::Offloaded));
+            assert!(!s.drop_queued(&c, cost(5.0), f64::NEG_INFINITY, Residency::Offloaded));
         }
     }
 }

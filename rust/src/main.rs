@@ -4,6 +4,7 @@
 //!   serve       launch the real-mode server and run an interactive demo load
 //!   simulate    run a §5.2-style simulated workload and print metrics
 //!   swap        run the §5.1 worst-case swap experiment for one (tp, pp)
+//!   models      print the resolved deployment catalog for a config
 //!   scenarios   list the named workload scenarios (`--scenario` targets)
 //!   schedulers  list the scheduling disciplines (`--scheduler` targets)
 //!   info        print environment, catalog, and artifact status
@@ -11,7 +12,10 @@
 //! `computron <subcommand> --help` lists options.
 
 use anyhow::{anyhow, Result};
-use computron::config::{EngineConfig, LoadDesign, PolicyKind, SchedulerKind, SystemConfig};
+use computron::config::{
+    EngineConfig, LoadDesign, ModelCatalog, ParallelConfig, PolicyKind, SchedulerKind,
+    SystemConfig,
+};
 use computron::coordinator::engine::SwapRecord;
 use computron::metrics::WorkloadCell;
 use computron::serving::{Computron, ServeConfig};
@@ -25,7 +29,7 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|swap|scenarios|schedulers|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|swap|models|scenarios|schedulers|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
@@ -33,6 +37,7 @@ fn main() {
         "serve" => cmd_serve(&rest),
         "simulate" => cmd_simulate(&rest),
         "swap" => cmd_swap(&rest),
+        "models" => cmd_models(&rest),
         "scenarios" => cmd_scenarios(),
         "schedulers" => cmd_schedulers(),
         "info" => cmd_info(),
@@ -46,6 +51,7 @@ fn main() {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = Args::new("computron serve", "launch the real-mode server (demo load)")
+        .opt("config", "JSON system config; its catalog/tp/pp/engine replace the size flags (entries must name manifest models, e.g. opt-test)", None)
         .opt("model", "manifest model name", Some("opt-test"))
         .opt("models", "number of co-located instances", Some("2"))
         .opt("tp", "tensor parallel degree", Some("1"))
@@ -55,18 +61,33 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("http", "serve HTTP on this address instead (e.g. 127.0.0.1:8080)", None)
         .parse_from(argv)?;
     let dir = computron::runtime::manifest::default_dir();
-    let mut cfg = ServeConfig::new(
-        &dir,
-        args.get_or("model", "opt-test"),
-        args.get_usize("models")?.unwrap_or(2),
-        args.get_usize("tp")?.unwrap_or(1),
-        args.get_usize("pp")?.unwrap_or(1),
-    );
-    cfg.engine = EngineConfig {
-        resident_cap: args.get_usize("cap")?.unwrap_or(1),
-        ..Default::default()
+    let cfg = match args.get("config") {
+        Some(path) => {
+            // Catalog configs: take the deployment (models/tp/pp/engine)
+            // from the file; real mode requires a homogeneous catalog of
+            // manifest models (heterogeneous fleets are simulator-only).
+            let sys = SystemConfig::from_file(std::path::Path::new(path))?;
+            let mut cfg =
+                ServeConfig::with_catalog(&dir, sys.models, sys.parallel.tp, sys.parallel.pp);
+            cfg.engine = sys.engine;
+            cfg
+        }
+        None => {
+            let mut cfg = ServeConfig::new(
+                &dir,
+                args.get_or("model", "opt-test"),
+                args.get_usize("models")?.unwrap_or(2),
+                args.get_usize("tp")?.unwrap_or(1),
+                args.get_usize("pp")?.unwrap_or(1),
+            );
+            cfg.engine = EngineConfig {
+                resident_cap: args.get_usize("cap")?.unwrap_or(1),
+                ..Default::default()
+            };
+            cfg
+        }
     };
-    let num_models = cfg.num_models;
+    let num_models = cfg.num_models();
     let server = Computron::launch(cfg)?;
     if let Some(bind) = args.get("http") {
         let server = std::sync::Arc::new(server);
@@ -97,7 +118,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {
     let args = Args::new("computron simulate", "run a §5.2-style simulated workload")
-        .opt("config", "JSON system config (see configs/); --policy/--load-design/--no-pinned still apply, size flags do not", None)
+        .opt("config", "JSON system config (catalog or legacy schema, see configs/); explicit flags override it, size flags do not apply", None)
         .opt("scenario", "named workload scenario (see `computron scenarios`); overrides --rates/--cv", None)
         .opt("models", "number of model instances", Some("3"))
         .opt("cap", "resident model cap", Some("2"))
@@ -106,8 +127,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("cv", "coefficient of variation", Some("1"))
         .opt("duration", "measured seconds", Some("30"))
         .opt("seed", "workload seed", Some("42"))
-        .opt("policy", "lru|lfu|fifo|random", Some("lru"))
-        .opt("load-design", "async|sync|broadcast|chunked", Some("async"))
+        .opt("policy", "lru|lfu|fifo|random (default: the config's, else lru)", None)
+        .opt("load-design", "async|sync|broadcast|chunked (default: the config's, else async)", None)
         .opt("chunk-layers", "layers per chunk for --load-design chunked (default layers-per-stage/4; >= layers-per-stage is monolithic)", None)
         .opt("scheduler", "fcfs|edf|swap-aware|shed (see `computron schedulers`)", None)
         .opt("slo", "uniform per-model latency SLO in seconds", None)
@@ -123,12 +144,17 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             args.get_usize("batch")?.unwrap_or(8),
         ),
     };
-    let models = cfg.num_models;
+    let models = cfg.num_models();
     let cap = cfg.engine.resident_cap;
-    cfg.engine.policy = PolicyKind::parse(args.get_or("policy", "lru"))
-        .ok_or_else(|| anyhow!("bad --policy"))?;
-    cfg.engine.load_design = LoadDesign::parse(args.get_or("load-design", "async"))
-        .ok_or_else(|| anyhow!("bad --load-design"))?;
+    // Explicit flags override the config file; absent flags keep its
+    // values (EngineConfig defaults — lru/async — when no config).
+    if let Some(s) = args.get("policy") {
+        cfg.engine.policy = PolicyKind::parse(s).ok_or_else(|| anyhow!("bad --policy '{s}'"))?;
+    }
+    if let Some(s) = args.get("load-design") {
+        cfg.engine.load_design =
+            LoadDesign::parse(s).ok_or_else(|| anyhow!("bad --load-design '{s}'"))?;
+    }
     if let Some(n) = args.get_usize("chunk-layers")? {
         cfg.engine.chunk_layers = Some(n);
     }
@@ -143,9 +169,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             .split(',')
             .map(|x| x.trim().parse::<f64>().map_err(|_| anyhow!("bad SLO '{x}'")))
             .collect::<Result<_>>()?;
-        cfg.slos = Some(slos);
+        cfg.set_slos(&slos)?;
     } else if let Some(v) = args.get_f64("slo")? {
-        cfg.slos = Some(vec![v; cfg.num_models]);
+        cfg.set_uniform_slo(v);
     }
     if args.flag("no-pinned") {
         cfg.hardware.pinned = false;
@@ -153,7 +179,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     let duration = args.get_f64("duration")?.unwrap_or(30.0);
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
     let scheduler_name = cfg.engine.scheduler.name();
-    let has_slos = cfg.slos.is_some();
+    let has_slos = cfg.slos().is_some();
 
     // Scenario precedence: an explicit --scenario flag always wins; a
     // config-file `scenario` field applies unless the user passed
@@ -213,6 +239,96 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         rows.insert(4, vec!["dropped (rate)".into(), format!("{} ({:.1}%)", cell.drops, 100.0 * cell.drop_rate)]);
     }
     table(&["metric", "value"], &rows);
+    Ok(())
+}
+
+fn cmd_models(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "computron models",
+        "print the resolved deployment catalog (per-model shards, chunks, SLOs, shares)",
+    )
+    .opt("config", "JSON system config (catalog or legacy schema)", None)
+    .opt("model", "architecture for an ad-hoc homogeneous catalog", Some("opt-13b"))
+    .opt("models", "entries in the ad-hoc homogeneous catalog", Some("3"))
+    .opt("tp", "tensor parallel degree (ad-hoc catalog only)", Some("2"))
+    .opt("pp", "pipeline parallel degree (ad-hoc catalog only)", Some("2"))
+    .parse_from(argv)?;
+    let cfg = match args.get("config") {
+        Some(path) => SystemConfig::from_file(std::path::Path::new(path))?,
+        None => {
+            // Print-only inspection: cap 1 so any shardable --tp/--pp
+            // combination passes the memory-bound check (e.g. opt-13b at
+            // TP=1 PP=1, where cap 2 would not fit).
+            let n = args.get_usize("models")?.unwrap_or(3);
+            let mut cfg = SystemConfig::workload_experiment(n, 1, 8);
+            cfg.models = ModelCatalog::homogeneous(args.get_or("model", "opt-13b"), n);
+            cfg.parallel = ParallelConfig::new(
+                args.get_usize("tp")?.unwrap_or(2),
+                args.get_usize("pp")?.unwrap_or(2),
+            );
+            cfg
+        }
+    };
+    cfg.validate()?;
+    let (tp, pp) = (cfg.parallel.tp, cfg.parallel.pp);
+    let specs = cfg.specs()?;
+    let shards = cfg.shard_bytes_per_model()?;
+    let chunked = cfg.engine.load_design == LoadDesign::ChunkedPipelined;
+    section(&format!(
+        "deployment catalog: {} models on TP={tp} PP={pp}, cap {}, load design {}",
+        cfg.num_models(),
+        cfg.engine.resident_cap,
+        cfg.engine.load_design.name()
+    ));
+    let rows: Vec<Vec<String>> = cfg
+        .models
+        .iter()
+        .enumerate()
+        .map(|(m, d)| {
+            let spec = &specs[m];
+            let chunks = if chunked {
+                let per_stage = spec.num_layers / pp;
+                let cl = computron::model::effective_chunk_layers(
+                    spec,
+                    pp,
+                    cfg.engine.chunk_layers,
+                );
+                per_stage.div_ceil(cl)
+            } else {
+                1
+            };
+            vec![
+                m.to_string(),
+                d.model.clone(),
+                spec.num_layers.to_string(),
+                spec.hidden.to_string(),
+                format!("{:.2}", spec.param_bytes() as f64 / 1e9),
+                format!("{:.2}", shards[m] as f64 / 1e9),
+                chunks.to_string(),
+                d.slo.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+                d.weight.to_string(),
+                d.rate_share.to_string(),
+            ]
+        })
+        .collect();
+    table(
+        &[
+            "id",
+            "model",
+            "layers",
+            "hidden",
+            "params (GB)",
+            "shard/GPU (GB)",
+            "chunks",
+            "slo (s)",
+            "weight",
+            "rate share",
+        ],
+        &rows,
+    );
+    if !cfg.models.is_homogeneous() {
+        println!("\nheterogeneous catalog: per-model swap costs scale with each model's own shard");
+    }
     Ok(())
 }
 

@@ -277,7 +277,7 @@ mod tests {
         // consistent with the counts.
         let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
         cfg.engine.scheduler = SchedulerKind::Shed;
-        cfg.slos = Some(vec![1.0, 1.0]);
+        cfg.set_slos(&[1.0, 1.0]).unwrap();
         let arrivals: Vec<Arrival> = (0..100)
             .map(|i| Arrival { at: 0.02 * i as f64, model: i % 2, input_len: 8 })
             .collect();

@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, ModelCatalog};
 use crate::coordinator::engine::Engine;
 use crate::coordinator::entry::{Entry, EntryId, ModelId, RequestId};
 use crate::coordinator::swap::SwapStats;
@@ -42,20 +42,22 @@ use crate::util::stats::Summary;
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub artifacts_dir: PathBuf,
-    /// Catalog/manifest model name (all instances share the architecture,
-    /// §3.1; instance i gets weight seed `manifest.weight_seed + i`).
-    pub model: String,
-    pub num_models: usize,
+    /// The deployment catalog (one entry per served instance; per-entry
+    /// SLOs and priority weights feed the SLO-aware schedulers selected
+    /// via `engine.scheduler`). The real-mode runtime currently requires
+    /// a *homogeneous* catalog — every entry the same manifest
+    /// architecture (instance i gets weight seed
+    /// `manifest.weight_seed + i`); heterogeneous fleets are
+    /// simulator-only (`config::SystemConfig` + `sim::SimSystem`).
+    pub models: ModelCatalog,
     pub tp: usize,
     pub pp: usize,
     pub engine: EngineConfig,
-    /// Per-model latency SLO targets in seconds (deadline = arrival +
-    /// SLO); `None` disables deadlines. Only consulted by the SLO-aware
-    /// schedulers (`edf`, `shed`) selected via `engine.scheduler`.
-    pub slos: Option<Vec<f64>>,
 }
 
 impl ServeConfig {
+    /// Homogeneous deployment: `num_models` instances of one manifest
+    /// architecture (the paper's §3.1 setup).
     pub fn new(
         artifacts_dir: impl Into<PathBuf>,
         model: impl Into<String>,
@@ -63,15 +65,40 @@ impl ServeConfig {
         tp: usize,
         pp: usize,
     ) -> ServeConfig {
+        ServeConfig::with_catalog(
+            artifacts_dir,
+            ModelCatalog::homogeneous(model, num_models),
+            tp,
+            pp,
+        )
+    }
+
+    /// Deployment from an explicit catalog (e.g. one loaded from a
+    /// `SystemConfig` JSON file via `computron serve --config`).
+    pub fn with_catalog(
+        artifacts_dir: impl Into<PathBuf>,
+        models: ModelCatalog,
+        tp: usize,
+        pp: usize,
+    ) -> ServeConfig {
         ServeConfig {
             artifacts_dir: artifacts_dir.into(),
-            model: model.into(),
-            num_models,
+            models,
             tp,
             pp,
             engine: EngineConfig::default(),
-            slos: None,
         }
+    }
+
+    /// Number of served instances (catalog entries).
+    pub fn num_models(&self) -> usize {
+        self.models.len()
+    }
+
+    /// The primary (first) entry's architecture name — the manifest model
+    /// every instance shares in real mode.
+    pub fn model(&self) -> &str {
+        &self.models.entries[0].model
     }
 }
 
@@ -121,22 +148,35 @@ impl Computron {
                  real-mode loads are a single blocking host->device copy (use `async`)"
             ));
         }
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        if !manifest.supports(&cfg.model, cfg.tp) {
+        if cfg.models.is_empty() {
+            return Err(anyhow!("the model catalog must have at least one entry"));
+        }
+        if !cfg.models.is_homogeneous() {
             return Err(anyhow!(
-                "artifacts for model '{}' tp={} not built (run `make artifacts`)",
-                cfg.model,
+                "heterogeneous catalogs are simulator-only for now; real mode serves N \
+                 instances of one architecture (every entry must name the same model)"
+            ));
+        }
+        // Fail bad per-entry attributes here, not as an assert inside the
+        // spawned engine thread (manifest models bypass the sim catalog,
+        // so the full SystemConfig validation does not apply).
+        cfg.models.validate_attributes()?;
+        let model_name = cfg.model().to_string();
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        if !manifest.supports(&model_name, cfg.tp) {
+            return Err(anyhow!(
+                "artifacts for model '{model_name}' tp={} not built (run `make artifacts`)",
                 cfg.tp
             ));
         }
         let spec = manifest
             .models
-            .get(&cfg.model)
-            .ok_or_else(|| anyhow!("model '{}' missing from manifest", cfg.model))?;
+            .get(&model_name)
+            .ok_or_else(|| anyhow!("model '{model_name}' missing from manifest"))?;
         if spec.num_layers % cfg.pp != 0 {
             return Err(anyhow!("pp={} must divide {} layers", cfg.pp, spec.num_layers));
         }
-        let buckets = manifest.buckets(&cfg.model, cfg.tp);
+        let buckets = manifest.buckets(&model_name, cfg.tp);
         let max_batch_bucket = buckets.iter().map(|b| b.0).max().unwrap();
         if cfg.engine.max_batch_size > max_batch_bucket {
             return Err(anyhow!(
@@ -170,12 +210,12 @@ impl Computron {
             let rxs = stage_rxs.pop().unwrap();
             for (tp_rank, inbox) in rxs.into_iter().enumerate() {
                 let wiring = WorkerWiring {
-                    model: cfg.model.clone(),
+                    model: model_name.clone(),
                     tp: cfg.tp,
                     pp: cfg.pp,
                     tp_rank,
                     pp_rank,
-                    num_instances: cfg.num_models,
+                    num_instances: cfg.num_models(),
                     inbox,
                     next: if pp_rank + 1 < cfg.pp {
                         Some(stage_txs[pp_rank + 1][tp_rank].clone())
@@ -251,10 +291,11 @@ fn engine_loop(
 ) {
     let start = Instant::now();
     let world = cfg.tp * cfg.pp;
-    let mut engine = Engine::new(cfg.num_models, world, cfg.pp, cfg.engine, 0xC0117);
-    if let Some(slos) = &cfg.slos {
-        engine.set_slos(slos);
+    let mut engine = Engine::new(cfg.num_models(), world, cfg.pp, cfg.engine, 0xC0117);
+    if let Some(slos) = cfg.models.slos() {
+        engine.set_slos(&slos);
     }
+    engine.set_weights(&cfg.models.weights());
     let mut payloads: HashMap<RequestId, Vec<i32>> = HashMap::new();
     let mut replies: HashMap<RequestId, Promise<InferenceResult>> = HashMap::new();
     let mut batch_members: HashMap<EntryId, Vec<RequestId>> = HashMap::new();
@@ -322,7 +363,7 @@ fn engine_loop(
         let now = start.elapsed().as_secs_f64();
         match msg {
             ToEngine::Submit { model, ids, reply } => {
-                if model >= cfg.num_models {
+                if model >= cfg.num_models() {
                     let _ = reply.fulfill(Err(format!("unknown model {model}")));
                     continue;
                 }

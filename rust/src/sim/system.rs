@@ -12,8 +12,9 @@ use crate::cluster::gpu::GpuDevice;
 use crate::config::{LoadDesign, SystemConfig};
 use crate::coordinator::engine::{DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
+use crate::coordinator::scheduler::ModelCost;
 use crate::coordinator::swap::SwapStats;
-use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec};
+use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec, ShardManifest};
 use crate::sim::worker::{ChunkOutcome, SimWorker, WorkerAction};
 use std::collections::HashMap;
 
@@ -97,106 +98,149 @@ enum Ev {
     ChunkAck { entry_id: EntryId, chunk: usize },
 }
 
+/// Per-model shard grids: `grids[model][pp_rank][tp_rank]`.
+type ModelShardGrids = Vec<Vec<Vec<ShardManifest>>>;
+/// Per-model, per-stage chunk plans: `plans[model][pp_rank]` is the
+/// layer-granular `ChunkSpec` sequence for that model on that stage.
+type ModelChunkPlans = Vec<Vec<Vec<ChunkSpec>>>;
+
 /// The composed simulator.
 pub struct SimSystem {
     cfg: SystemConfig,
-    spec: ModelSpec,
+    /// Per-catalog-entry architecture specs (`ModelId` indexed). A
+    /// homogeneous catalog repeats one spec; a heterogeneous one gives
+    /// every model its own shard grid, chunk plan, and compute cost.
+    specs: Vec<ModelSpec>,
     engine: Engine,
     workers: Vec<SimWorker>,
     queue: EventQueue<Ev>,
     batch_acks: HashMap<EntryId, usize>,
     driver: Driver,
     closed_sent: usize,
-    /// Memoized stage compute times per (batch, seqlen) — `stage_time`
-    /// walks the model's tensor inventory (param_bytes), which at 644
-    /// tensors dominated the event loop before memoization (§Perf:
-    /// 47 K events/s → >1 M events/s).
-    compute_cache: HashMap<(usize, usize), f64>,
+    /// Memoized stage compute times per (model, batch, seqlen) —
+    /// `stage_time` walks the model's tensor inventory (param_bytes),
+    /// which at 644 tensors dominated the event loop before memoization
+    /// (§Perf: 47 K events/s → >1 M events/s).
+    compute_cache: HashMap<(ModelId, usize, usize), f64>,
 }
 
 impl SimSystem {
     pub fn new(cfg: SystemConfig, driver: Driver) -> anyhow::Result<SimSystem> {
         cfg.validate()?;
-        let spec = cfg.spec()?;
+        let specs = cfg.specs()?;
+        let n = specs.len();
         let (tp, pp) = (cfg.parallel.tp, cfg.parallel.pp);
-        let grid = shard_grid(&spec, tp, pp)?;
         let link = cfg.hardware.effective_link();
-        // Chunked swap pipeline: build the per-stage layer-granular chunk
-        // plans (same chunk count on every stage — layers divide evenly).
-        let chunk_plans: Option<Vec<Vec<ChunkSpec>>> =
+        let grids: ModelShardGrids = specs
+            .iter()
+            .map(|spec| shard_grid(spec, tp, pp))
+            .collect::<Result<_, _>>()?;
+        // Chunked swap pipeline: build each model's per-stage
+        // layer-granular chunk plans (same chunk count on every stage of
+        // one model — its layers divide evenly; different models may get
+        // different counts). plans[m][pp_rank] is a Vec<ChunkSpec>.
+        let chunk_plans: Option<ModelChunkPlans> =
             if cfg.engine.load_design == LoadDesign::ChunkedPipelined {
-                let cl = crate::model::shard::effective_chunk_layers(
-                    &spec,
-                    pp,
-                    cfg.engine.chunk_layers,
-                );
-                let plans = (0..pp)
-                    .map(|r| crate::model::shard::chunk_plan(&spec, tp, pp, r, cl))
+                let plans = specs
+                    .iter()
+                    .map(|spec| {
+                        let cl = crate::model::shard::effective_chunk_layers(
+                            spec,
+                            pp,
+                            cfg.engine.chunk_layers,
+                        );
+                        (0..pp)
+                            .map(|r| crate::model::shard::chunk_plan(spec, tp, pp, r, cl))
+                            .collect::<Result<Vec<_>, _>>()
+                    })
                     .collect::<Result<Vec<_>, _>>()?;
-                debug_assert!(plans.iter().all(|p| p.len() == plans[0].len()));
+                debug_assert!(plans
+                    .iter()
+                    .all(|pm| pm.iter().all(|p| p.len() == pm[0].len())));
                 Some(plans)
             } else {
                 None
             };
-        let num_chunks = chunk_plans.as_ref().map(|p| p[0].len()).unwrap_or(1);
+        // Per-model chunk counts (1 = monolithic transfers for that model).
+        let chunks_per_model: Vec<usize> = match &chunk_plans {
+            Some(plans) => plans.iter().map(|pm| pm[0].len()).collect(),
+            None => vec![1; n],
+        };
         let mut workers = Vec::with_capacity(tp * pp);
         for pp_rank in 0..pp {
             for tp_rank in 0..tp {
-                let shard = &grid[pp_rank][tp_rank];
                 let gpu = GpuDevice::new(workers.len(), cfg.hardware.gpu_mem, link);
-                let mut worker = SimWorker::new(
-                    GridPos { pp_rank, tp_rank },
-                    gpu,
-                    cfg.num_models,
-                    shard.bytes(),
-                    shard.tensor_count(),
-                );
+                let bytes: Vec<usize> =
+                    (0..n).map(|m| grids[m][pp_rank][tp_rank].bytes()).collect();
+                let messages: Vec<usize> =
+                    (0..n).map(|m| grids[m][pp_rank][tp_rank].tensor_count()).collect();
+                let mut worker =
+                    SimWorker::new(GridPos { pp_rank, tp_rank }, gpu, bytes, messages);
                 if let Some(plans) = &chunk_plans {
-                    worker.set_chunk_plan(plans[pp_rank].clone());
+                    for m in 0..n {
+                        worker.set_chunk_plan(m, plans[m][pp_rank].clone());
+                    }
                 }
                 workers.push(worker);
             }
         }
-        let mut engine = Engine::new(
-            cfg.num_models,
-            tp * pp,
-            pp,
-            cfg.engine,
-            0x5EED ^ cfg.num_models as u64,
-        );
-        if let Some(slos) = &cfg.slos {
-            engine.set_slos(slos);
+        let mut engine = Engine::new(n, tp * pp, pp, cfg.engine, 0x5EED ^ n as u64);
+        if let Some(slos) = cfg.slos() {
+            engine.set_slos(&slos);
         }
-        // Scheduler cost model from the calibrated substrate. The
-        // estimate includes the per-tensor α term and one engine→worker
-        // pipe hop each way; the floors are true lower bounds (pure
-        // bandwidth for a cold load; pipe traversal for execution), which
-        // is what makes `shed`'s drops provably infeasible.
-        let shard_bytes = crate::model::shard::max_shard_bytes(&spec, tp, pp)?;
-        let shard_msgs = grid
-            .iter()
-            .flat_map(|row| row.iter().map(|s| s.tensor_count()))
-            .max()
-            .unwrap_or(0);
-        // Under the chunked pipeline a cold model stops hurting as soon as
-        // its first chunk lands (compute chases the rest), so the
-        // scheduler's swap-cost *estimate* is the time-to-first-chunk; the
-        // floors stay true lower bounds and the engine's `SchedCtx` flips
-        // to the overlapped (max instead of sum) completion bound.
-        let swap_cost = match &chunk_plans {
-            Some(plans) if num_chunks > 1 => {
-                let c0 = plans[0][0];
-                link.transfer_time(c0.messages, c0.bytes) + 2.0 * cfg.hardware.pipe_latency
-            }
-            _ => link.transfer_time(shard_msgs, shard_bytes) + 2.0 * cfg.hardware.pipe_latency,
-        };
-        let swap_floor = shard_bytes as f64 / link.bandwidth;
+        engine.set_weights(&cfg.models.weights());
+        // Scheduler cost model from the calibrated substrate, one entry
+        // per catalog model (its OWN shard bytes and tensor counts, not a
+        // fleet constant). The estimate includes the per-tensor α term
+        // and one engine→worker pipe hop each way; the floors are true
+        // lower bounds (pure bandwidth for a cold load; pipe traversal
+        // for execution), which is what makes `shed`'s drops provably
+        // infeasible. Under the chunked pipeline a cold model stops
+        // hurting as soon as its first chunk lands (compute chases the
+        // rest), so that model's swap-cost *estimate* is its
+        // time-to-first-chunk; the floors stay true lower bounds and the
+        // engine flips to the overlapped (max instead of sum) completion
+        // bound per model.
+        let costs: Vec<ModelCost> = (0..n)
+            .map(|m| {
+                let shard_bytes = grids[m]
+                    .iter()
+                    .flatten()
+                    .map(ShardManifest::bytes)
+                    .max()
+                    .unwrap_or(0);
+                let shard_msgs = grids[m]
+                    .iter()
+                    .flatten()
+                    .map(ShardManifest::tensor_count)
+                    .max()
+                    .unwrap_or(0);
+                let swap_cost = match &chunk_plans {
+                    Some(plans) if chunks_per_model[m] > 1 => {
+                        let c0 = plans[m][0][0];
+                        link.transfer_time(c0.messages, c0.bytes)
+                            + 2.0 * cfg.hardware.pipe_latency
+                    }
+                    _ => {
+                        link.transfer_time(shard_msgs, shard_bytes)
+                            + 2.0 * cfg.hardware.pipe_latency
+                    }
+                };
+                ModelCost {
+                    swap_cost,
+                    swap_floor: shard_bytes as f64 / link.bandwidth,
+                    bytes: shard_bytes,
+                    // The engine folds in the live per-model chunked flag.
+                    chunked: false,
+                }
+            })
+            .collect();
         let exec_floor = (pp + 1) as f64 * cfg.hardware.pipe_latency;
-        engine.set_cost_model(swap_cost, swap_floor, exec_floor);
-        engine.set_chunks_per_load(num_chunks);
+        engine.set_cost_model(costs, exec_floor);
+        engine.set_chunks_per_load(chunks_per_model);
         Ok(SimSystem {
             cfg,
-            spec,
+            specs,
             engine,
             workers,
             queue: EventQueue::new(),
@@ -220,9 +264,13 @@ impl SimSystem {
         use crate::workload::scenarios::{self, ScenarioParams, WorkloadGen};
         let name = cfg.scenario.clone().unwrap_or_else(|| "uniform".to_string());
         let params = ScenarioParams {
-            num_models: cfg.num_models,
+            num_models: cfg.num_models(),
             duration,
             seed,
+            // Per-model arrival-rate shares from the catalog: the
+            // generators scale each model's traffic by its share (all
+            // 1.0 for a homogeneous catalog — bit-identical schedules).
+            rate_shares: cfg.models.rate_shares(),
             ..ScenarioParams::default()
         };
         let gen = scenarios::by_name(&name, &params).ok_or_else(|| {
@@ -233,7 +281,7 @@ impl SimSystem {
         })?;
         let arrivals = gen.generate();
         let measure_start = gen.measure_start();
-        let cap = cfg.engine.resident_cap.min(cfg.num_models);
+        let cap = cfg.engine.resident_cap.min(cfg.num_models());
         let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
         sys.preload(&(0..cap).collect::<Vec<_>>());
         Ok((sys, measure_start))
@@ -335,14 +383,15 @@ impl SimSystem {
         let _ = tp;
     }
 
-    /// Memoized `ComputeModel::stage_time` lookup.
-    fn stage_time(&mut self, batch: usize, seqlen: usize) -> f64 {
+    /// Memoized `ComputeModel::stage_time` lookup (per catalog entry —
+    /// heterogeneous models have heterogeneous compute costs).
+    fn stage_time(&mut self, model: ModelId, batch: usize, seqlen: usize) -> f64 {
         let (tp, pp) = (self.cfg.parallel.tp, self.cfg.parallel.pp);
-        let spec = &self.spec;
+        let spec = &self.specs[model];
         let compute = &self.cfg.hardware.compute;
         *self
             .compute_cache
-            .entry((batch, seqlen))
+            .entry((model, batch, seqlen))
             .or_insert_with(|| compute.stage_time(spec, tp, pp, batch, seqlen))
     }
 
@@ -354,8 +403,8 @@ impl SimSystem {
         // inbox (if it is a batch) so the step closure is allocation-free.
         let head_cost = match self.workers[widx].inbox.front() {
             Some(Entry::Batch(b)) => {
-                let (bs, sl) = (b.batch_size(), b.seqlen);
-                self.stage_time(bs, sl)
+                let (m, bs, sl) = (b.model, b.batch_size(), b.seqlen);
+                self.stage_time(m, bs, sl)
             }
             _ => 0.0,
         };
@@ -670,7 +719,7 @@ mod tests {
         // into drops, and completions + drops still cover every arrival.
         let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
         cfg.engine.scheduler = SchedulerKind::Shed;
-        cfg.slos = Some(vec![1.0, 1.0]);
+        cfg.set_slos(&[1.0, 1.0]).unwrap();
         let arrivals: Vec<Arrival> = (0..100)
             .map(|i| Arrival { at: 0.02 * i as f64, model: i % 2, input_len: 8 })
             .collect();

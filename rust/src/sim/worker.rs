@@ -87,15 +87,19 @@ pub struct SimWorker {
     /// Failed device allocations (overcommit; only reachable when the
     /// residency cap is misconfigured or the broadcast baseline races).
     pub oom_events: u64,
-    /// Shard size for each model on this worker (homogeneous co-location:
-    /// same for every model, §3.1).
-    pub shard_bytes: usize,
-    pub shard_messages: usize,
-    /// Layer-granular chunk plan for this worker's stage. Chunked
-    /// transfers are active iff the plan has more than one chunk; an
-    /// empty or one-chunk plan keeps the monolithic paths bit-for-bit
-    /// (the `chunk_layers = all` equivalence invariant, DESIGN.md §6).
-    chunk_plan: Vec<ChunkSpec>,
+    /// Per-model shard size on this worker, indexed by `ModelId`. Under a
+    /// homogeneous catalog every entry is equal (the paper's §3.1 fleet);
+    /// a heterogeneous catalog gives each model its own footprint, and
+    /// all memory/transfer accounting below uses the *per-model* value.
+    pub shard_bytes: Vec<usize>,
+    /// Per-model tensor-message count on this worker (the α term).
+    pub shard_messages: Vec<usize>,
+    /// Per-model layer-granular chunk plans for this worker's stage.
+    /// Chunked transfers are active for a model iff its plan has more
+    /// than one chunk; an empty or one-chunk plan keeps that model on the
+    /// monolithic paths bit-for-bit (the `chunk_layers = all` equivalence
+    /// invariant, DESIGN.md §6).
+    chunk_plans: Vec<Vec<ChunkSpec>>,
     /// Per-model in-progress chunked transfer.
     chunk_loads: Vec<Option<ChunkProgress>>,
 }
@@ -104,10 +108,11 @@ impl SimWorker {
     pub fn new(
         pos: GridPos,
         gpu: GpuDevice,
-        num_models: usize,
-        shard_bytes: usize,
-        shard_messages: usize,
+        shard_bytes: Vec<usize>,
+        shard_messages: Vec<usize>,
     ) -> SimWorker {
+        assert_eq!(shard_bytes.len(), shard_messages.len(), "one entry per model");
+        let num_models = shard_bytes.len();
         SimWorker {
             pos,
             gpu,
@@ -118,34 +123,52 @@ impl SimWorker {
             oom_events: 0,
             shard_bytes,
             shard_messages,
-            chunk_plan: Vec::new(),
+            chunk_plans: vec![Vec::new(); num_models],
             chunk_loads: vec![None; num_models],
         }
     }
 
-    /// Install the chunked swap pipeline's per-stage chunk plan. The plan
-    /// must partition the shard exactly (summed bytes/messages equal the
-    /// monolithic transfer's).
-    pub fn set_chunk_plan(&mut self, plan: Vec<ChunkSpec>) {
-        if !plan.is_empty() {
-            debug_assert_eq!(plan.iter().map(|c| c.bytes).sum::<usize>(), self.shard_bytes);
-            debug_assert_eq!(
-                plan.iter().map(|c| c.messages).sum::<usize>(),
-                self.shard_messages
-            );
-        }
-        self.chunk_plan = plan;
+    /// Convenience constructor for a homogeneous fleet: every model gets
+    /// the same shard size and message count.
+    pub fn new_homogeneous(
+        pos: GridPos,
+        gpu: GpuDevice,
+        num_models: usize,
+        shard_bytes: usize,
+        shard_messages: usize,
+    ) -> SimWorker {
+        SimWorker::new(pos, gpu, vec![shard_bytes; num_models], vec![shard_messages; num_models])
     }
 
-    /// Chunked transfers active on this worker?
-    fn chunked(&self) -> bool {
-        self.chunk_plan.len() > 1
+    /// Install one model's chunked-swap-pipeline chunk plan for this
+    /// worker's stage. The plan must partition that model's shard exactly
+    /// (summed bytes/messages equal the monolithic transfer's).
+    pub fn set_chunk_plan(&mut self, model: ModelId, plan: Vec<ChunkSpec>) {
+        if !plan.is_empty() {
+            debug_assert_eq!(
+                plan.iter().map(|c| c.bytes).sum::<usize>(),
+                self.shard_bytes[model]
+            );
+            debug_assert_eq!(
+                plan.iter().map(|c| c.messages).sum::<usize>(),
+                self.shard_messages[model]
+            );
+        }
+        self.chunk_plans[model] = plan;
+    }
+
+    /// Chunked transfers active for this model on this worker?
+    fn chunked(&self, model: ModelId) -> bool {
+        self.chunk_plans[model].len() > 1
     }
 
     /// Pre-warm a model to Loaded (experiment initial conditions).
     pub fn force_loaded(&mut self, model: ModelId) {
         assert_eq!(self.instances[model], InstState::Offloaded);
-        self.gpu.mem.alloc(self.shard_bytes).expect("force_loaded overcommits GPU memory");
+        self.gpu
+            .mem
+            .alloc(self.shard_bytes[model])
+            .expect("force_loaded overcommits GPU memory");
         self.instances[model] = InstState::Loaded;
     }
 
@@ -179,7 +202,7 @@ impl SimWorker {
                 // Partial residency (chunked pipeline): a batch may chase
                 // an in-flight chunked load — each layer's compute waits
                 // for its chunk, not for the whole shard.
-                let chasing = self.chunked()
+                let chasing = self.chunked(batch.model)
                     && matches!(
                         self.chunk_loads[batch.model],
                         Some(ChunkProgress { dir: LoadDirection::Load, cancelled: None, .. })
@@ -211,7 +234,7 @@ impl SimWorker {
                 self.busy_until = now + dispatch_overhead;
                 actions.push(WorkerAction::Forward { entry, at: self.busy_until });
             }
-            Entry::Load(load) if self.chunked() => {
+            Entry::Load(load) if self.chunked(load.model) => {
                 // Chunked pipeline: enqueue the first chunk; the system
                 // layer drives the rest via `on_chunk_fin`. Forwarding is
                 // async, exactly like the monolithic async design.
@@ -260,17 +283,18 @@ impl SimWorker {
     /// its fill *completes*. Peak accuracy is within one shard, matching
     /// the per-tensor behaviour; cap enforcement is the engine's job.
     fn dispatch_transfer(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> (SimTime, bool) {
+        let (bytes, messages) = (self.shard_bytes[model], self.shard_messages[model]);
         match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Offloaded);
                 self.instances[model] = InstState::Loading;
-                (self.gpu.enqueue_load(now, self.shard_messages, self.shard_bytes), true)
+                (self.gpu.enqueue_load(now, messages, bytes), true)
             }
             LoadDirection::Offload => {
                 debug_assert_eq!(self.instances[model], InstState::Loaded);
                 self.instances[model] = InstState::Offloading;
-                self.gpu.mem.free(self.shard_bytes);
-                (self.gpu.enqueue_offload(now, self.shard_messages, self.shard_bytes), true)
+                self.gpu.mem.free(bytes);
+                (self.gpu.enqueue_offload(now, messages, bytes), true)
             }
             LoadDirection::Cancel => unreachable!("cancel entries are not transfers"),
         }
@@ -280,7 +304,7 @@ impl SimWorker {
     /// progress; subsequent chunks dispatch one at a time from
     /// `on_chunk_fin` (so a cancellation frees the remaining lane time).
     fn dispatch_first_chunk(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> SimTime {
-        let c0 = self.chunk_plan[0];
+        let c0 = self.chunk_plans[model][0];
         let fin = match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Offloaded);
@@ -312,7 +336,7 @@ impl SimWorker {
     /// transfer: attribute its memory, enqueue the next chunk (or finish,
     /// or resolve a pending cancellation). Driven by the system layer.
     pub fn on_chunk_fin(&mut self, now: SimTime, model: ModelId) -> ChunkOutcome {
-        let plan_len = self.chunk_plan.len();
+        let plan_len = self.chunk_plans[model].len();
         let mut p = self.chunk_loads[model].take().expect("chunk fin without progress");
         let finished = p.next_chunk - 1;
         match p.dir {
@@ -326,7 +350,7 @@ impl SimWorker {
                     self.instances[model] = InstState::Offloaded;
                     return ChunkOutcome::Cancelled { cancel_entry: cancel_id };
                 }
-                let bytes = self.chunk_plan[finished].bytes;
+                let bytes = self.chunk_plans[model][finished].bytes;
                 if self.gpu.mem.alloc(bytes).is_err() {
                     self.oom_events += 1;
                 } else {
@@ -336,7 +360,7 @@ impl SimWorker {
                     self.instances[model] = InstState::Loaded;
                     return ChunkOutcome::Finished;
                 }
-                let c = self.chunk_plan[p.next_chunk];
+                let c = self.chunk_plans[model][p.next_chunk];
                 let fin = self.gpu.enqueue_load(now, c.messages, c.bytes);
                 p.finish_times.push(fin);
                 p.next_chunk += 1;
@@ -348,7 +372,7 @@ impl SimWorker {
                     self.instances[model] = InstState::Offloaded;
                     return ChunkOutcome::Finished;
                 }
-                let c = self.chunk_plan[p.next_chunk];
+                let c = self.chunk_plans[model][p.next_chunk];
                 self.gpu.mem.free(c.bytes);
                 let fin = self.gpu.enqueue_offload(now, c.messages, c.bytes);
                 p.finish_times.push(fin);
@@ -366,7 +390,7 @@ impl SimWorker {
     /// `None` when an in-flight chunk must complete first, in which case
     /// `on_chunk_fin` returns `Cancelled` carrying `cancel_id`.
     fn begin_cancel(&mut self, model: ModelId, cancel_id: u64, now: SimTime) -> Option<SimTime> {
-        debug_assert!(self.chunked(), "cancel outside the chunked pipeline");
+        debug_assert!(self.chunked(model), "cancel outside the chunked pipeline");
         if let Some(p) = self.chunk_loads[model].as_mut() {
             if p.dir == LoadDirection::Load {
                 debug_assert!(p.cancelled.is_none(), "double cancel");
@@ -377,7 +401,7 @@ impl SimWorker {
         // The load already completed on this worker before the cancel
         // arrived: discard the shard now.
         if self.instances[model] == InstState::Loaded {
-            self.gpu.mem.free(self.shard_bytes);
+            self.gpu.mem.free(self.shard_bytes[model]);
             self.instances[model] = InstState::Offloaded;
         }
         Some(now)
@@ -396,13 +420,13 @@ impl SimWorker {
     /// prediction (the error errs early; see DESIGN.md §6).
     fn chunked_compute_finish(&mut self, now: SimTime, model: ModelId, dur: f64) -> SimTime {
         let p = self.chunk_loads[model].as_ref().expect("gated compute without progress");
-        let total_layers: usize = self.chunk_plan.iter().map(|c| c.layers).sum();
+        let total_layers: usize = self.chunk_plans[model].iter().map(|c| c.layers).sum();
         let start = self.gpu.compute.next_free().max(now);
         let mut finish = start;
         let last_dispatched = *p.finish_times.last().expect("first chunk always dispatched");
         let mut predicted =
             last_dispatched.max(self.gpu.link.next_free(crate::cluster::Direction::H2D));
-        for (i, c) in self.chunk_plan.iter().enumerate() {
+        for (i, c) in self.chunk_plans[model].iter().enumerate() {
             let landed = if i < p.finish_times.len() {
                 p.finish_times[i]
             } else {
@@ -424,7 +448,7 @@ impl SimWorker {
         match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Loading);
-                if self.gpu.mem.alloc(self.shard_bytes).is_err() {
+                if self.gpu.mem.alloc(self.shard_bytes[model]).is_err() {
                     self.oom_events += 1;
                 }
                 self.instances[model] = InstState::Loaded;
@@ -457,7 +481,7 @@ mod tests {
             1000,
             LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
         );
-        SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 1)
+        SimWorker::new_homogeneous(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 1)
     }
 
     fn batch(id: u64, model: usize) -> Entry {
@@ -551,7 +575,7 @@ mod tests {
             40,
             LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
         );
-        let mut w = SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 24, 1);
+        let mut w = SimWorker::new_homogeneous(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 24, 1);
         w.force_loaded(0);
         w.deliver(load(1, 0, LoadDirection::Offload));
         w.deliver(load(2, 1, LoadDirection::Load));
@@ -595,11 +619,10 @@ mod tests {
             1000,
             LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
         );
-        let mut w = SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 4);
-        w.set_chunk_plan(vec![
-            crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 25 };
-            4
-        ]);
+        let mut w = SimWorker::new_homogeneous(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 4);
+        let plan = vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 25 }; 4];
+        w.set_chunk_plan(0, plan.clone());
+        w.set_chunk_plan(1, plan);
         w
     }
 
@@ -781,7 +804,7 @@ mod tests {
     #[test]
     fn one_chunk_plan_keeps_monolithic_path() {
         let mut w = worker();
-        w.set_chunk_plan(vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 100 }]);
+        w.set_chunk_plan(0, vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 100 }]);
         w.deliver(load(1, 0, LoadDirection::Load));
         let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
         assert!(
@@ -789,6 +812,72 @@ mod tests {
             "one-chunk plan must use the monolithic dispatch: {actions:?}"
         );
         assert!(!actions.iter().any(|a| matches!(a, WorkerAction::ChunkDone { .. })));
+    }
+
+    #[test]
+    fn heterogeneous_shards_account_memory_per_model() {
+        // Model 0 owns a 100-byte shard, model 1 a 40-byte shard: every
+        // allocation/free must use that model's own size, never a fleet
+        // constant.
+        let gpu = GpuDevice::new(
+            0,
+            1000,
+            LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
+        );
+        let mut w =
+            SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, vec![100, 40], vec![1, 1]);
+        w.force_loaded(0);
+        assert_eq!(w.gpu.mem.used(), 100);
+        w.force_loaded(1);
+        assert_eq!(w.gpu.mem.used(), 140);
+        // Offloading the small model frees exactly 40 bytes at drain start.
+        w.deliver(load(1, 1, LoadDirection::Offload));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        assert_eq!(w.gpu.mem.used(), 100);
+        w.on_transfer_done(1, LoadDirection::Offload);
+        assert_eq!(w.gpu.mem.used(), 100);
+        // Reloading it allocates 40 again (transfer time scales with the
+        // model's own bytes: 40 B / 100 B/s = 0.4 s).
+        w.deliver(load(2, 1, LoadDirection::Load));
+        let actions = w.step(1.0, |_| 1.0, 0.001, false).unwrap();
+        let done_at = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::TransferDone { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((done_at - 1.4).abs() < 1e-9, "small shard loads in 0.4 s, got {done_at}");
+        w.on_transfer_done(1, LoadDirection::Load);
+        assert_eq!(w.gpu.mem.used(), 140);
+        assert_eq!(w.oom_events, 0);
+    }
+
+    #[test]
+    fn per_model_chunk_plans_differ() {
+        // Model 0 chunks 4 ways; model 1 has a one-chunk plan and must
+        // stay on the monolithic path in the same worker.
+        let gpu = GpuDevice::new(
+            0,
+            1000,
+            LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY },
+        );
+        let mut w =
+            SimWorker::new(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, vec![100, 40], vec![4, 1]);
+        w.set_chunk_plan(
+            0,
+            vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 25 }; 4],
+        );
+        w.set_chunk_plan(1, vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 40 }]);
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let a0 = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        assert!(a0.iter().any(|a| matches!(a, WorkerAction::ChunkDone { .. })));
+        w.deliver(load(2, 1, LoadDirection::Load));
+        let a1 = w.step(0.001, |_| 1.0, 0.001, false).unwrap();
+        assert!(
+            a1.iter().any(|a| matches!(a, WorkerAction::TransferDone { .. })),
+            "one-chunk model dispatches monolithically: {a1:?}"
+        );
     }
 
     #[test]

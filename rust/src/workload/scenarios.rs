@@ -53,7 +53,10 @@ pub trait WorkloadGen {
 }
 
 /// Knobs shared by every scenario. `rate_scale` multiplies each
-/// generator's built-in rates so one parameter sweeps offered load.
+/// generator's built-in rates so one parameter sweeps offered load;
+/// `rate_shares` additionally scales *each model's* traffic by its
+/// catalog entry's `ModelDeployment::rate_share`, so heterogeneous
+/// fleets get skewed popularity under every scenario shape.
 #[derive(Clone, Debug)]
 pub struct ScenarioParams {
     pub num_models: usize,
@@ -65,6 +68,10 @@ pub struct ScenarioParams {
     pub warmup: usize,
     pub seed: u64,
     pub rate_scale: f64,
+    /// Per-model arrival-rate shares (`ModelId`-indexed). Empty (the
+    /// default) or all-1.0 means uniform shares — every generator then
+    /// produces bit-identical schedules to the pre-catalog behaviour.
+    pub rate_shares: Vec<f64>,
 }
 
 impl Default for ScenarioParams {
@@ -76,6 +83,7 @@ impl Default for ScenarioParams {
             warmup: 2,
             seed: 0xC0117,
             rate_scale: 1.0,
+            rate_shares: Vec::new(),
         }
     }
 }
@@ -83,6 +91,18 @@ impl Default for ScenarioParams {
 impl ScenarioParams {
     pub fn new(num_models: usize, seed: u64) -> ScenarioParams {
         ScenarioParams { num_models, seed, ..ScenarioParams::default() }
+    }
+
+    /// Model `m`'s arrival-rate share (1.0 when unset).
+    pub fn share(&self, m: ModelId) -> f64 {
+        self.rate_shares.get(m).copied().unwrap_or(1.0)
+    }
+
+    fn assert_shares_valid(&self) {
+        assert!(
+            self.rate_shares.iter().all(|s| *s > 0.0 && s.is_finite()),
+            "rate shares must be finite and positive"
+        );
     }
 
     /// Lead window length before the measured window (matches
@@ -153,14 +173,17 @@ pub struct ZipfWorkload {
 impl ZipfWorkload {
     pub fn new(params: ScenarioParams) -> ZipfWorkload {
         assert!(params.num_models >= 1 && params.rate_scale > 0.0);
+        params.assert_shares_valid();
         let total_rate = 2.0 * params.num_models as f64 * params.rate_scale;
         ZipfWorkload { params, total_rate, exponent: 1.2 }
     }
 
-    /// Normalized popularity per model (rank = model id).
+    /// Normalized popularity per model (rank = model id), weighted by
+    /// each model's catalog rate share (uniform shares reproduce the
+    /// pure-Zipf law exactly).
     pub fn popularity(&self) -> Vec<f64> {
         let weights: Vec<f64> = (0..self.params.num_models)
-            .map(|i| 1.0 / ((i + 1) as f64).powf(self.exponent))
+            .map(|i| self.params.share(i) / ((i + 1) as f64).powf(self.exponent))
             .collect();
         let z: f64 = weights.iter().sum();
         weights.into_iter().map(|w| w / z).collect()
@@ -232,6 +255,7 @@ pub struct MarkovOnOffWorkload {
 impl MarkovOnOffWorkload {
     pub fn new(params: ScenarioParams) -> MarkovOnOffWorkload {
         assert!(params.num_models >= 1 && params.rate_scale > 0.0);
+        params.assert_shares_valid();
         let rate_on = 6.0 * params.rate_scale;
         MarkovOnOffWorkload { params, rate_on, mean_on: 1.5, mean_off: 3.0 }
     }
@@ -262,6 +286,9 @@ impl WorkloadGen for MarkovOnOffWorkload {
         let end = p.end();
         for model in 0..p.num_models {
             let mut rng = master.fork();
+            // Rate share scales the ON-state intensity (burst *timing*
+            // structure is share-independent).
+            let rate_on = self.rate_on * p.share(model);
             let mut t = p.lead();
             let mut on = rng.f64() < self.duty_cycle();
             while t < end {
@@ -274,7 +301,7 @@ impl WorkloadGen for MarkovOnOffWorkload {
                     let stop = (t + dwell).min(end);
                     let mut at = t;
                     loop {
-                        at += rng.exponential(self.rate_on);
+                        at += rng.exponential(rate_on);
                         if at >= stop {
                             break;
                         }
@@ -312,6 +339,7 @@ pub struct DiurnalWorkload {
 impl DiurnalWorkload {
     pub fn new(params: ScenarioParams) -> DiurnalWorkload {
         assert!(params.num_models >= 1 && params.rate_scale > 0.0);
+        params.assert_shares_valid();
         let base_rate = 2.0 * params.rate_scale;
         let period = params.duration.max(1e-9);
         DiurnalWorkload { params, base_rate, amplitude: 0.8, period }
@@ -342,10 +370,13 @@ impl WorkloadGen for DiurnalWorkload {
         assert!((0.0..1.0).contains(&self.amplitude), "amplitude must be in [0,1)");
         let mut master = Rng::seeded(p.seed ^ 0xD1CA_D1CA);
         let mut arrivals = warmup_arrivals(p);
-        let peak = self.base_rate * (1.0 + self.amplitude);
         let end = p.end();
         for model in 0..p.num_models {
             let mut rng = master.fork();
+            // Rate share scales the whole curve for this model (the
+            // sinusoidal shape is share-independent).
+            let share = p.share(model);
+            let peak = self.base_rate * share * (1.0 + self.amplitude);
             let mut t = p.lead();
             loop {
                 t += rng.exponential(peak);
@@ -353,7 +384,7 @@ impl WorkloadGen for DiurnalWorkload {
                     break;
                 }
                 // Thinning: accept with probability λ(t)/λmax.
-                if rng.f64() < self.rate_at(t - p.lead()) / peak {
+                if rng.f64() < self.rate_at(t - p.lead()) * share / peak {
                     arrivals.push(Arrival { at: t, model, input_len: p.input_len });
                 }
             }
@@ -389,6 +420,7 @@ pub struct FlashCrowdWorkload {
 impl FlashCrowdWorkload {
     pub fn new(params: ScenarioParams) -> FlashCrowdWorkload {
         assert!(params.num_models >= 1 && params.rate_scale > 0.0);
+        params.assert_shares_valid();
         let base_rate = 1.5 * params.rate_scale;
         let spike_start = params.duration * 0.4;
         let spike_duration = (params.duration * 0.15).max(1e-9);
@@ -429,20 +461,22 @@ impl WorkloadGen for FlashCrowdWorkload {
         let mut master = Rng::seeded(p.seed ^ 0xF1A5_F1A5);
         let mut arrivals = warmup_arrivals(p);
         let end = p.end();
-        // Baseline Poisson stream per model.
+        // Baseline Poisson stream per model, scaled by its rate share.
         for model in 0..p.num_models {
             let mut rng = master.fork();
+            let rate = self.base_rate * p.share(model);
             let mut t = p.lead();
             loop {
-                t += rng.exponential(self.base_rate);
+                t += rng.exponential(rate);
                 if t >= end {
                     break;
                 }
                 arrivals.push(Arrival { at: t, model, input_len: p.input_len });
             }
         }
-        // Extra crowd stream on the spiking model.
-        let extra = self.base_rate * (self.spike_factor - 1.0);
+        // Extra crowd stream on the spiking model (the spike multiplies
+        // that model's own — share-scaled — baseline).
+        let extra = self.base_rate * p.share(self.spike_model) * (self.spike_factor - 1.0);
         if extra > 0.0 {
             let (lo, hi) = self.spike_window();
             let mut rng = master.fork();
@@ -501,12 +535,18 @@ pub fn describe(name: &str) -> Option<&'static str> {
 }
 
 fn gamma_scenario(p: &ScenarioParams, cv: f64, skewed: bool) -> GammaWorkload {
+    p.assert_shares_valid();
     let mut rates = vec![2.0 * p.rate_scale; p.num_models];
     if skewed {
         rates[0] = 10.0 * p.rate_scale;
         for r in rates.iter_mut().skip(1) {
             *r = 1.0 * p.rate_scale;
         }
+    }
+    // Catalog rate shares scale each model's Gamma process (all 1.0 for
+    // homogeneous fleets — bit-identical schedules).
+    for (m, r) in rates.iter_mut().enumerate() {
+        *r *= p.share(m);
     }
     let mut w = GammaWorkload::new(rates, cv, p.seed);
     w.duration = p.duration;
@@ -635,6 +675,53 @@ mod tests {
         assert!(lo >= f.measure_start());
         assert!(hi <= f.params.end());
         assert!(hi > lo);
+    }
+
+    #[test]
+    fn uniform_shares_are_bit_identical_to_unset_shares() {
+        // The homogeneous-catalog equivalence pin at the generator level:
+        // an explicit all-1.0 share vector must produce exactly the
+        // schedule the share-less default produces, for every scenario.
+        for &name in names() {
+            let base = by_name(name, &params()).unwrap().generate();
+            let p = ScenarioParams { rate_shares: vec![1.0; 3], ..params() };
+            let shared = by_name(name, &p).unwrap().generate();
+            assert_eq!(base, shared, "{name}: uniform shares changed the schedule");
+        }
+    }
+
+    #[test]
+    fn rate_shares_skew_arrival_counts() {
+        // Model 0 gets 6x the share of model 2: every scenario must give
+        // it strictly more measured arrivals (long window for stability).
+        for &name in names() {
+            let p = ScenarioParams {
+                duration: 120.0,
+                rate_shares: vec![6.0, 1.0, 1.0],
+                ..ScenarioParams::new(3, 0x5A8E)
+            };
+            let gen = by_name(name, &p).unwrap();
+            let start = gen.measure_start();
+            let mut counts = [0usize; 3];
+            for a in gen.generate() {
+                if a.at >= start {
+                    counts[a.model] += 1;
+                }
+            }
+            assert!(
+                counts[0] > counts[2],
+                "{name}: share 6.0 model got {} arrivals vs {} for share 1.0",
+                counts[0],
+                counts[2]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rate shares")]
+    fn non_positive_shares_rejected() {
+        let p = ScenarioParams { rate_shares: vec![1.0, 0.0, 1.0], ..params() };
+        let _ = by_name("zipf", &p);
     }
 
     #[test]

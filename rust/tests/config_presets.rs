@@ -1,0 +1,123 @@
+//! Preset-drift guard: every JSON file shipped under `configs/` must
+//! parse AND validate (this is the test that catches the
+//! `slos.len() != num_models` class of preset bugs before a user does),
+//! plus round-trip pins for the legacy `num_models` compat shim and the
+//! resolved shape of the heterogeneous preset.
+
+use computron::config::{LoadDesign, ModelCatalog, SchedulerKind, SystemConfig};
+use computron::util::json::Json;
+
+fn configs_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs")
+}
+
+#[test]
+fn every_shipped_preset_parses_and_validates() {
+    let mut seen = Vec::new();
+    for entry in std::fs::read_dir(configs_dir()).expect("configs/ exists") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let cfg = SystemConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        // Every preset must also survive a JSON round-trip through the
+        // catalog schema with its catalog intact.
+        let back = SystemConfig::from_json(&cfg.to_json())
+            .unwrap_or_else(|e| panic!("{name} round-trip: {e}"));
+        assert_eq!(back.models, cfg.models, "{name}: catalog changed in round-trip");
+        assert_eq!(back.parallel, cfg.parallel, "{name}");
+        assert_eq!(back.scenario, cfg.scenario, "{name}");
+        seen.push(name);
+    }
+    // The known preset set must be present (a rename or deletion here is
+    // a doc-breaking change — update README/EXPERIMENTS when it fires).
+    for required in [
+        "swap_tp2_pp2.json",
+        "workload_3model.json",
+        "workload_6model.json",
+        "slo_3model.json",
+        "chunked_3model.json",
+        "hetero_4model.json",
+    ] {
+        assert!(seen.iter().any(|n| n == required), "missing preset {required} (have {seen:?})");
+    }
+}
+
+#[test]
+fn legacy_presets_still_resolve_as_homogeneous_catalogs() {
+    let dir = configs_dir();
+    for name in [
+        "swap_tp2_pp2.json",
+        "workload_3model.json",
+        "workload_6model.json",
+        "slo_3model.json",
+        "chunked_3model.json",
+    ] {
+        let cfg =
+            SystemConfig::from_file(&dir.join(name)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(cfg.models.is_homogeneous(), "{name}: legacy presets are homogeneous");
+        assert!(cfg.models.iter().all(|d| d.model == "opt-13b"), "{name}");
+    }
+    // The SLO preset exercises the scheduler + slos fields end-to-end.
+    let cfg = SystemConfig::from_file(&dir.join("slo_3model.json")).unwrap();
+    assert_eq!(cfg.engine.scheduler, SchedulerKind::Edf);
+    assert_eq!(cfg.slos().as_deref(), Some(&[1.0, 3.0, 3.0][..]));
+    assert_eq!(cfg.scenario.as_deref(), Some("bursty"));
+    // The chunked preset exercises the swap-pipeline fields.
+    let cfg = SystemConfig::from_file(&dir.join("chunked_3model.json")).unwrap();
+    assert_eq!(cfg.engine.load_design, LoadDesign::ChunkedPipelined);
+    assert_eq!(cfg.engine.chunk_layers, Some(2));
+}
+
+#[test]
+fn hetero_preset_resolves_expected_catalog() {
+    let cfg = SystemConfig::from_file(&configs_dir().join("hetero_4model.json")).unwrap();
+    assert_eq!(cfg.num_models(), 4);
+    assert!(!cfg.models.is_homogeneous());
+    let archs: Vec<&str> = cfg.models.iter().map(|d| d.model.as_str()).collect();
+    assert_eq!(archs, ["opt-1.3b", "opt-1.3b", "opt-6.7b", "opt-13b"]);
+    assert_eq!(cfg.slos().as_deref(), Some(&[0.8, 0.8, 2.0, 4.0][..]));
+    assert_eq!(cfg.models.rate_shares(), vec![4.0, 3.0, 2.0, 1.0]);
+    assert_eq!(cfg.models.weights(), vec![2.0, 1.0, 1.0, 1.0]);
+    assert_eq!(cfg.engine.load_design, LoadDesign::ChunkedPipelined);
+    assert_eq!(cfg.scenario.as_deref(), Some("zipf"));
+    // Per-model shard bytes are strictly increasing with architecture
+    // size — the heterogeneity the hetero bench's oracles rely on.
+    let shards = cfg.shard_bytes_per_model().unwrap();
+    assert_eq!(shards[0], shards[1]);
+    assert!(shards[1] < shards[2] && shards[2] < shards[3]);
+}
+
+#[test]
+fn legacy_json_round_trips_through_the_catalog_shim() {
+    // Legacy `num_models` + uniform `slo`.
+    let legacy = Json::parse(
+        r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,
+            "scheduler":"shed","slo":2.5,"resident_cap":2}"#,
+    )
+    .unwrap();
+    let cfg = SystemConfig::from_json(&legacy).unwrap();
+    assert_eq!(cfg.models, ModelCatalog::homogeneous("opt-13b", 3).with_uniform_slo(2.5));
+    let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(back.models, cfg.models);
+    assert_eq!(back.engine.scheduler, SchedulerKind::Shed);
+
+    // Legacy `slos` array.
+    let legacy = Json::parse(
+        r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,"slos":[1.0,2.0,3.0]}"#,
+    )
+    .unwrap();
+    let cfg = SystemConfig::from_json(&legacy).unwrap();
+    assert_eq!(cfg.slos().as_deref(), Some(&[1.0, 2.0, 3.0][..]));
+    let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(back.slos().as_deref(), Some(&[1.0, 2.0, 3.0][..]));
+
+    // Wrong-length legacy slos rejected at parse time.
+    let bad = Json::parse(
+        r#"{"model":"opt-13b","num_models":3,"tp":2,"pp":2,"slos":[1.0,2.0]}"#,
+    )
+    .unwrap();
+    assert!(SystemConfig::from_json(&bad).is_err());
+}

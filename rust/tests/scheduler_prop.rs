@@ -15,7 +15,7 @@
 use computron::config::{EngineConfig, SchedulerKind, SystemConfig};
 use computron::coordinator::engine::Engine;
 use computron::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
-use computron::coordinator::scheduler::{self, Candidate, SchedCtx, Scheduler};
+use computron::coordinator::scheduler::{self, Candidate, ModelCost, SchedCtx, Scheduler};
 use computron::coordinator::swap::Residency;
 use computron::sim::SimSystem;
 use computron::util::prop;
@@ -41,6 +41,14 @@ fn random_candidates(rng: &mut Rng) -> Vec<Candidate> {
                 _ => Residency::Offloading,
             },
             inflight: rng.index(3),
+            // Per-model cost constants (heterogeneous in general).
+            cost: ModelCost {
+                swap_cost: (rng.index(20) as f64) * 0.1,
+                swap_floor: (rng.index(10) as f64) * 0.1,
+                bytes: rng.index(1 << 30),
+                chunked: false,
+            },
+            weight: [0.5, 1.0, 2.0][rng.index(3)],
         })
         .collect()
 }
@@ -49,10 +57,7 @@ fn ctx(rng: &mut Rng) -> SchedCtx {
     SchedCtx {
         now: (rng.index(100) as f64) * 0.25,
         max_batch_size: prop::usize_in(rng, 1, 8),
-        swap_cost: (rng.index(20) as f64) * 0.1,
-        swap_floor: (rng.index(10) as f64) * 0.1,
         exec_floor: (rng.index(5) as f64) * 0.01,
-        chunked: false,
     }
 }
 
@@ -309,7 +314,7 @@ fn shed_drops_only_provably_infeasible_requests() {
             };
             let mut e = Engine::new(*models, 1, 1, cfg, 7);
             e.set_slos(slos);
-            e.set_cost_model(*swap_floor, *swap_floor, *exec_floor);
+            e.set_uniform_cost_model(*swap_floor, *swap_floor, *exec_floor);
             let mut pending_loads: Vec<EntryId> = Vec::new();
             let mut pending_batches: Vec<EntryId> = Vec::new();
             let mut now = 0.0;
