@@ -16,13 +16,15 @@ use computron::util::bench::{section, table};
 use computron::util::json::Json;
 
 fn main() {
+    let fast = common::fast_mode();
+    let total = if fast { 8 } else { common::SWAP_REQUESTS };
     section("Ablation: load-entry design (async pipelined vs sync vs broadcast), PP=4");
 
-    let run = |cfg: SystemConfig| {
+    let run = move |cfg: SystemConfig| {
         let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
             models: 2,
             input_len: 2,
-            total: common::SWAP_REQUESTS,
+            total,
         })
         .unwrap();
         sys.preload(&[1]);
@@ -67,12 +69,13 @@ fn main() {
     assert!(broadcast_r.violations > 0, "broadcast must violate dependencies");
     println!("shape checks passed: async fastest among correct designs; broadcast incorrect");
 
-    common::save_report(
-        "ablation_load_design",
-        Json::from_pairs(vec![
-            ("async_mean_swap", common::mean_swap(&async_r).into()),
-            ("sync_mean_swap", common::mean_swap(&sync_r).into()),
-            ("broadcast_violations", broadcast_r.violations.into()),
-        ]),
-    );
+    let payload = Json::from_pairs(vec![
+        ("experiment", "ablation_load_design".into()),
+        ("fast", fast.into()),
+        ("async_mean_swap", common::mean_swap(&async_r).into()),
+        ("sync_mean_swap", common::mean_swap(&sync_r).into()),
+        ("broadcast_violations", broadcast_r.violations.into()),
+    ]);
+    common::save_report("ablation_load_design", payload.clone());
+    common::save_bench_json("ablation_load_design", payload);
 }

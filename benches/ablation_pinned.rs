@@ -14,6 +14,7 @@ use computron::util::bench::{section, table};
 use computron::util::json::Json;
 
 fn main() {
+    let fast = common::fast_mode();
     section("Ablation: pinned vs pageable host memory, TP=2 PP=2 worst-case swaps");
     let pinned = common::swap_point(2, 2, |c| c);
     let pageable = common::swap_point(2, 2, baselines::unpinned);
@@ -32,11 +33,12 @@ fn main() {
     assert!(pageable.mean_swap > pinned.mean_swap * 1.5, "staging copy must be costly");
     println!("shape checks passed: pinning removes the staging copy");
 
-    common::save_report(
-        "ablation_pinned",
-        Json::from_pairs(vec![
-            ("pinned_mean_swap", pinned.mean_swap.into()),
-            ("pageable_mean_swap", pageable.mean_swap.into()),
-        ]),
-    );
+    let payload = Json::from_pairs(vec![
+        ("experiment", "ablation_pinned".into()),
+        ("fast", fast.into()),
+        ("pinned_mean_swap", pinned.mean_swap.into()),
+        ("pageable_mean_swap", pageable.mean_swap.into()),
+    ]);
+    common::save_report("ablation_pinned", payload.clone());
+    common::save_bench_json("ablation_pinned", payload);
 }

@@ -15,6 +15,8 @@ use computron::util::json::Json;
 use computron::workload::GammaWorkload;
 
 fn main() {
+    let fast = common::fast_mode();
+    let seeds: u64 = if fast { 3 } else { 5 };
     section("Ablation: replacement policy under skewed bursty load (3 models, cap 2)");
     let mut rows = Vec::new();
     let mut report_pairs: Vec<(&str, computron::util::json::Json)> = Vec::new();
@@ -25,7 +27,7 @@ fn main() {
         // Average over several seeds: policies interact with arrival noise.
         let mut means = Vec::new();
         let mut swaps = 0usize;
-        for seed in 0..5u64 {
+        for seed in 0..seeds {
             let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
             cfg.engine.policy = policy;
             let workload = GammaWorkload::new(vec![10.0, 10.0, 1.0], 4.0, 0xAB1E + seed);
@@ -44,7 +46,7 @@ fn main() {
         rows.push(vec![
             policy.name().to_string(),
             common::fmt_s(mean),
-            format!("{:.1}", swaps as f64 / 5.0),
+            format!("{:.1}", swaps as f64 / seeds as f64),
         ]);
         results.push((policy, mean));
         report_pairs.push((policy.name(), mean.into()));
@@ -59,5 +61,9 @@ fn main() {
     );
     println!("shape checks passed: LRU competitive under skewed bursty load");
 
-    common::save_report("ablation_policy", Json::from_pairs(report_pairs));
+    let mut payload = Json::from_pairs(report_pairs);
+    payload.set("experiment", "ablation_policy".into());
+    payload.set("fast", fast.into());
+    common::save_report("ablation_policy", payload.clone());
+    common::save_bench_json("ablation_policy", payload);
 }

@@ -17,13 +17,13 @@ use computron::sim::{Driver, SimSystem};
 use computron::util::bench::{section, table};
 use computron::util::json::Json;
 
-fn run(prefetch: bool) -> (f64, u64) {
+fn run(prefetch: bool, total: usize) -> (f64, u64) {
     let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
     cfg.engine.prefetch = prefetch;
     let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
         models: 3,
         input_len: 8,
-        total: 30,
+        total,
     })
     .unwrap();
     sys.preload(&[0]);
@@ -33,9 +33,11 @@ fn run(prefetch: bool) -> (f64, u64) {
 }
 
 fn main() {
+    let fast = common::fast_mode();
+    let total = if fast { 18 } else { 30 };
     section("Ablation: speculative prefetch (§6 extension), cyclic 3-model load, cap 2");
-    let (base_mean, base_loads) = run(false);
-    let (pf_mean, pf_loads) = run(true);
+    let (base_mean, base_loads) = run(false, total);
+    let (pf_mean, pf_loads) = run(true, total);
 
     table(
         &["variant", "mean latency (s)", "loads"],
@@ -56,11 +58,12 @@ fn main() {
     );
     println!("shape checks passed: predictive loading hides on-demand swaps (paper §6 hypothesis)");
 
-    common::save_report(
-        "ablation_prefetch",
-        Json::from_pairs(vec![
-            ("baseline_mean", base_mean.into()),
-            ("prefetch_mean", pf_mean.into()),
-        ]),
-    );
+    let payload = Json::from_pairs(vec![
+        ("experiment", "ablation_prefetch".into()),
+        ("fast", fast.into()),
+        ("baseline_mean", base_mean.into()),
+        ("prefetch_mean", pf_mean.into()),
+    ]);
+    common::save_report("ablation_prefetch", payload.clone());
+    common::save_bench_json("ablation_prefetch", payload);
 }

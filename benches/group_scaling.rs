@@ -1,0 +1,262 @@
+//! Group scaling — the multi-group cluster layer's headline experiment
+//! (DESIGN.md §8): replicate a skewed heterogeneous catalog across
+//! G ∈ {1, 2, 4} model-parallel groups and sweep the router registry
+//! under overload.
+//!
+//! Workloads: `zipf` (long-tail popularity) and `flash-crowd` (sudden
+//! hotspot) at an offered load far above even the 4-group capacity, with
+//! a uniform 1 s SLO and the `shed` admission controller — so served
+//! goodput tracks cluster *capacity*, the quantity placement/replication
+//! exists to scale.
+//!
+//! Oracles asserted on every cell:
+//!
+//! - engine invariants: no dependency violations, no OOM, swaps drained,
+//!   completions + drops cover every arrival;
+//! - per-group swap-bytes accounting: each group's per-GPU H2D traffic
+//!   decomposes exactly into (its own completed swap-ins) × (that
+//!   model's per-worker shard bytes), and `GroupStats::swap_bytes` sums
+//!   the same records;
+//! - scaling: for each scenario there is at least one router whose
+//!   aggregate goodput strictly increases 1 → 2 → 4 groups.
+//!
+//! ```bash
+//! cargo bench --bench group_scaling              # full sweep
+//! cargo bench --bench group_scaling -- --fast    # CI smoke subset
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use computron::config::{
+    ModelCatalog, ModelDeployment, PlacementSpec, RouterKind, SchedulerKind, SystemConfig,
+};
+use computron::coordinator::router;
+use computron::metrics::{group_cells, load_imbalance};
+use computron::model::shard_grid;
+use computron::sim::{Driver, SimCluster, SimReport};
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+use computron::workload::scenarios::{self, ScenarioParams, WorkloadGen};
+
+const SEED: u64 = 0x6A0C_5CA1;
+
+/// Skewed hetero catalog: hot small models, cold large tail (4:3:2:1
+/// shares), uniform 1 s SLO.
+fn fleet() -> ModelCatalog {
+    ModelCatalog::new(vec![
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(4.0),
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(3.0),
+        ModelDeployment::new("opt-2.7b").with_slo(1.0).with_rate_share(2.0),
+        ModelDeployment::new("opt-6.7b").with_slo(1.0).with_rate_share(1.0),
+    ])
+}
+
+fn cluster_cfg(g: usize, router: RouterKind) -> SystemConfig {
+    let mut cfg = SystemConfig::hetero_experiment(fleet(), 2, 8);
+    cfg.engine.scheduler = SchedulerKind::Shed;
+    cfg.placement = Some(PlacementSpec::replicated(g, cfg.parallel, 4, router));
+    cfg
+}
+
+struct Cell {
+    goodput: f64,
+    attained: usize,
+    drops: usize,
+    requests: usize,
+    imbalance: f64,
+}
+
+fn run_cell(
+    scenario: &str,
+    rate_scale: f64,
+    g: usize,
+    router: RouterKind,
+    duration: f64,
+) -> Cell {
+    let cfg = cluster_cfg(g, router);
+    let params = ScenarioParams {
+        num_models: 4,
+        duration,
+        seed: SEED,
+        rate_scale,
+        rate_shares: cfg.models.rate_shares(),
+        ..ScenarioParams::default()
+    };
+    let gen = scenarios::by_name(scenario, &params).expect("scenario resolves");
+    let arrivals = gen.generate();
+    let total_arrivals = arrivals.len();
+    let start = gen.measure_start();
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).expect("config valid");
+    sys.preload_warm();
+    let report = sys.run();
+    oracle_checks(scenario, g, router, &report, total_arrivals);
+    let attained = report
+        .requests
+        .iter()
+        .filter(|r| r.arrival >= start && r.attained())
+        .count();
+    let cells = group_cells(&report, start, duration);
+    Cell {
+        goodput: attained as f64 / duration,
+        attained,
+        drops: report.drops.iter().filter(|d| d.arrival >= start).count(),
+        requests: report.requests.iter().filter(|r| r.arrival >= start).count(),
+        imbalance: load_imbalance(&cells),
+    }
+}
+
+fn oracle_checks(
+    scenario: &str,
+    g: usize,
+    router: RouterKind,
+    report: &SimReport,
+    total_arrivals: usize,
+) {
+    let tag = format!("{scenario}/G={g}/{}", router.name());
+    assert_eq!(report.violations, 0, "{tag}: load-dependency violations");
+    assert_eq!(report.oom_events, 0, "{tag}: OOM events");
+    assert_eq!(report.groups.len(), g, "{tag}: group count");
+    assert_eq!(
+        report.requests.len() + report.drops.len(),
+        total_arrivals,
+        "{tag}: completions + drops must cover every arrival"
+    );
+    let s = report.swap_stats;
+    assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled, "{tag}: loads drained");
+    assert_eq!(s.offloads_started, s.offloads_completed, "{tag}: offloads drained");
+
+    // Per-group swap-bytes accounting (async design: every load moves the
+    // full shard). For each group: its per-GPU H2D counters must equal
+    // the sum over its completed swap-ins of that model's per-worker
+    // shard bytes, and GroupStats::swap_bytes must sum the same records'
+    // max-shard bytes.
+    let specs: Vec<_> = fleet()
+        .specs()
+        .expect("catalog resolves")
+        .into_iter()
+        .map(|spec| shard_grid(&spec, 2, 2).expect("grid divides"))
+        .collect();
+    for gs in &report.groups {
+        let world = gs.h2d_bytes.len();
+        assert_eq!(world, 4, "{tag}: tp2 x pp2 workers per group");
+        let mut expect_h2d = vec![0u64; world];
+        let mut expect_bytes = 0u64;
+        for sw in report.swaps.iter().filter(|sw| sw.group == gs.group && !sw.cancelled) {
+            let grid = &specs[sw.load_model];
+            let mut max_shard = 0usize;
+            for pp_rank in 0..2 {
+                for tp_rank in 0..2 {
+                    let b = grid[pp_rank][tp_rank].bytes();
+                    expect_h2d[pp_rank * 2 + tp_rank] += b as u64;
+                    max_shard = max_shard.max(b);
+                }
+            }
+            expect_bytes += max_shard as u64;
+            assert_eq!(sw.bytes, max_shard, "{tag}: swap record carries foreign bytes");
+        }
+        assert_eq!(gs.h2d_bytes, expect_h2d, "{tag}: group {} H2D decomposition", gs.group);
+        assert_eq!(gs.swap_bytes, expect_bytes, "{tag}: group {} swap_bytes", gs.group);
+        assert_eq!(
+            gs.swaps,
+            report.swaps.iter().filter(|sw| sw.group == gs.group && !sw.cancelled).count(),
+            "{tag}: group swap count"
+        );
+    }
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let duration = if fast { 6.0 } else { 20.0 };
+    // (scenario, rate_scale): offered load far above 4-group capacity so
+    // goodput is capacity-bound at every G.
+    let scenarios_swept: &[(&str, f64)] =
+        if fast { &[("zipf", 60.0)] } else { &[("zipf", 60.0), ("flash-crowd", 32.0)] };
+    let group_counts = [1usize, 2, 4];
+
+    section(&format!(
+        "Group scaling: skewed hetero catalog x {} scenarios x {} routers, G in {group_counts:?}, {duration} s cells",
+        scenarios_swept.len(),
+        router::names().len()
+    ));
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cells_json: Vec<Json> = Vec::new();
+    let mut all_monotone = Vec::new();
+    for &(scenario, rate_scale) in scenarios_swept {
+        let mut monotone_routers: Vec<&str> = Vec::new();
+        for &kind in router::KINDS.iter() {
+            let mut goodputs = Vec::new();
+            for &g in &group_counts {
+                let cell = run_cell(scenario, rate_scale, g, kind, duration);
+                rows.push(vec![
+                    scenario.to_string(),
+                    kind.name().to_string(),
+                    g.to_string(),
+                    format!("{:.1}", cell.goodput),
+                    cell.attained.to_string(),
+                    cell.requests.to_string(),
+                    cell.drops.to_string(),
+                    format!("{:.2}", cell.imbalance),
+                ]);
+                cells_json.push(Json::from_pairs(vec![
+                    ("scenario", scenario.into()),
+                    ("router", kind.name().into()),
+                    ("groups", g.into()),
+                    ("goodput", cell.goodput.into()),
+                    ("attained", cell.attained.into()),
+                    ("requests", cell.requests.into()),
+                    ("drops", cell.drops.into()),
+                    ("imbalance", cell.imbalance.into()),
+                ]));
+                goodputs.push(cell.goodput);
+            }
+            if goodputs.windows(2).all(|w| w[1] > w[0]) {
+                monotone_routers.push(kind.name());
+            }
+        }
+        assert!(
+            !monotone_routers.is_empty(),
+            "{scenario}: no router shows strictly increasing goodput across {group_counts:?}"
+        );
+        println!(
+            "{scenario}: goodput strictly increases 1->2->4 under {:?}",
+            monotone_routers
+        );
+        all_monotone.push((scenario.to_string(), monotone_routers.join(",")));
+    }
+
+    table(
+        &["scenario", "router", "groups", "goodput (req/s)", "attained", "served", "drops", "imbalance"],
+        &rows,
+    );
+    println!(
+        "\noracles held on every cell: engine invariants, arrival accounting, and \
+         per-group swap-bytes decomposition"
+    );
+    // Sanity anchor outside any run: replication multiplies raw GPU count.
+    assert_eq!(cluster_cfg(4, RouterKind::RoundRobin).resolved_placement().world(), 16);
+
+    let payload = Json::from_pairs(vec![
+        ("experiment", "group_scaling".into()),
+        ("duration", duration.into()),
+        ("fast", fast.into()),
+        (
+            "monotone",
+            Json::Arr(
+                all_monotone
+                    .iter()
+                    .map(|(s, r)| {
+                        Json::from_pairs(vec![
+                            ("scenario", s.as_str().into()),
+                            ("routers", r.as_str().into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("cells", Json::Arr(cells_json)),
+    ]);
+    common::save_report("group_scaling", payload.clone());
+    common::save_bench_json("group_scaling", payload);
+}

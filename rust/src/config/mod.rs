@@ -108,6 +108,41 @@ impl SchedulerKind {
     }
 }
 
+/// Cluster-level request-routing discipline selector (see
+/// `coordinator::router` for the registry and DESIGN.md §8 for the
+/// semantics). Only meaningful with a multi-group [`PlacementSpec`]; a
+/// single-group placement routes every request to the one group no
+/// matter which policy is named.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    /// Per-model rotation over that model's replica groups.
+    RoundRobin,
+    /// Cheapest pending-work queue cost wins (ties by group id).
+    LeastLoaded,
+    /// Prefer groups where the model is already Resident /
+    /// PartiallyResident; among cold groups, cheapest swap wins.
+    ResidentAffinity,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Option<RouterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" => Some(RouterKind::RoundRobin),
+            "least-loaded" => Some(RouterKind::LeastLoaded),
+            "resident-affinity" => Some(RouterKind::ResidentAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterKind::RoundRobin => "round-robin",
+            RouterKind::LeastLoaded => "least-loaded",
+            RouterKind::ResidentAffinity => "resident-affinity",
+        }
+    }
+}
+
 /// How load entries are delivered to workers — the §3.2 design space.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LoadDesign {
@@ -227,6 +262,11 @@ pub struct EngineConfig {
     /// that model to one chunk — i.e. the monolithic transfer,
     /// bit-for-bit (DESIGN.md §6).
     pub chunk_layers: Option<usize>,
+    /// Minimum observations of a model-to-model transition before the
+    /// Markov prefetcher acts on it (`coordinator::prefetch`). Higher
+    /// values trade reaction speed for fewer mispredicted speculative
+    /// loads. The default (2) reproduces the pre-knob behaviour exactly.
+    pub prefetch_min_count: u64,
 }
 
 impl Default for EngineConfig {
@@ -239,6 +279,7 @@ impl Default for EngineConfig {
             prefetch: false,
             scheduler: SchedulerKind::Fcfs,
             chunk_layers: None,
+            prefetch_min_count: 2,
         }
     }
 }
@@ -480,6 +521,206 @@ impl std::ops::Index<usize> for ModelCatalog {
     }
 }
 
+/// One model-parallel group in a cluster placement: its own TP×PP worker
+/// grid, the catalog models it serves (by catalog index — a model listed
+/// in several groups is *replicated*), and optional hardware overrides
+/// for heterogeneous clusters. See DESIGN.md §8.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupSpec {
+    /// This group's worker grid (every hosted model must shard on it).
+    pub parallel: ParallelConfig,
+    /// Catalog indices of the models this group serves (non-empty, no
+    /// duplicates — one group hosts at most one replica of a deployment).
+    pub models: Vec<usize>,
+    /// GPU memory per device in this group, bytes (`None` inherits
+    /// `HardwareConfig::gpu_mem`).
+    pub gpu_mem: Option<usize>,
+    /// CPU↔GPU link bandwidth for this group's devices, bytes/s (`None`
+    /// inherits the fleet link model).
+    pub link_bandwidth: Option<f64>,
+}
+
+impl GroupSpec {
+    /// A group serving `models` on the given grid with inherited hardware.
+    pub fn new(parallel: ParallelConfig, models: Vec<usize>) -> GroupSpec {
+        GroupSpec { parallel, models, gpu_mem: None, link_bandwidth: None }
+    }
+}
+
+/// Cluster placement: how the GPU grid is partitioned into model-parallel
+/// groups, which catalog models live on (or are replicated across) each
+/// group, and the routing policy dispatching arrivals between them.
+///
+/// `SystemConfig::placement = None` is the legacy single-group deployment:
+/// one group on `SystemConfig::parallel` hosting the whole catalog —
+/// [`PlacementSpec::single`] builds exactly that, and the simulator
+/// reproduces the pre-placement runs bit-for-bit through it (pinned by
+/// `rust/tests/cluster_equiv.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlacementSpec {
+    /// Cluster routing policy (see `coordinator::router`).
+    pub router: RouterKind,
+    pub groups: Vec<GroupSpec>,
+}
+
+impl PlacementSpec {
+    /// The legacy single-group shim: one group on `parallel` hosting all
+    /// `num_models` catalog entries.
+    pub fn single(parallel: ParallelConfig, num_models: usize) -> PlacementSpec {
+        PlacementSpec::replicated(1, parallel, num_models, RouterKind::RoundRobin)
+    }
+
+    /// `g` identical groups, each on its own `parallel` grid and each
+    /// hosting the full catalog (every model replicated `g` ways) — the
+    /// scaling sweep `benches/group_scaling.rs` runs.
+    pub fn replicated(
+        g: usize,
+        parallel: ParallelConfig,
+        num_models: usize,
+        router: RouterKind,
+    ) -> PlacementSpec {
+        PlacementSpec {
+            router,
+            groups: (0..g)
+                .map(|_| GroupSpec::new(parallel, (0..num_models).collect()))
+                .collect(),
+        }
+    }
+
+    /// Total GPUs across all groups.
+    pub fn world(&self) -> usize {
+        self.groups.iter().map(|g| g.parallel.world()).sum()
+    }
+
+    /// Groups hosting catalog model `m`, in group order.
+    pub fn groups_for(&self, m: usize) -> Vec<usize> {
+        self.groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.models.contains(&m))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Structural validation against a catalog of `num_models` entries:
+    /// at least one group, every group non-empty with in-range and
+    /// group-unique model indices, every catalog model hosted somewhere,
+    /// and positive hardware overrides.
+    pub fn validate(&self, num_models: usize) -> Result<(), ConfigError> {
+        let bad = |m: String| Err(ConfigError::BadPlacement(m));
+        if self.groups.is_empty() {
+            return bad("placement needs >= 1 group".into());
+        }
+        let mut hosted = vec![false; num_models];
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.models.is_empty() {
+                return bad(format!("group {i} serves no models"));
+            }
+            let mut seen = vec![false; num_models];
+            for &m in &g.models {
+                if m >= num_models {
+                    return bad(format!(
+                        "group {i} references model {m} but the catalog has {num_models} entries"
+                    ));
+                }
+                if seen[m] {
+                    return bad(format!(
+                        "group {i} lists model {m} twice (one group hosts one replica)"
+                    ));
+                }
+                seen[m] = true;
+                hosted[m] = true;
+            }
+            if let Some(mem) = g.gpu_mem {
+                if mem == 0 {
+                    return bad(format!("group {i}: gpu_mem must be positive"));
+                }
+            }
+            if let Some(bw) = g.link_bandwidth {
+                if !(bw.is_finite() && bw > 0.0) {
+                    return bad(format!(
+                        "group {i}: link_bandwidth must be finite and positive, got {bw}"
+                    ));
+                }
+            }
+        }
+        if let Some(m) = hosted.iter().position(|h| !h) {
+            return bad(format!("catalog model {m} is placed on no group"));
+        }
+        Ok(())
+    }
+
+    /// Parse `{"router": "...", "groups": [{"models": [...], "tp"?, "pp"?,
+    /// "gpu_mem"?, "link_bandwidth"?}, ...]}`. Groups omitting `tp`/`pp`
+    /// inherit `default_parallel` (the config's top-level grid).
+    pub fn from_json(j: &Json, default_parallel: ParallelConfig) -> Result<PlacementSpec, ConfigError> {
+        let e = |m: String| ConfigError::Json(m);
+        let router = match j.get("router").and_then(Json::as_str) {
+            Some(s) => RouterKind::parse(s).ok_or_else(|| ConfigError::UnknownRouter(s.to_string()))?,
+            None => RouterKind::RoundRobin,
+        };
+        let arr = j
+            .get("groups")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| e("placement needs a `groups` array".into()))?;
+        let mut groups = Vec::with_capacity(arr.len());
+        for (i, gj) in arr.iter().enumerate() {
+            let models = gj
+                .get("models")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| e(format!("placement group {i} needs a `models` array")))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| e(format!("placement group {i}: model indices must be integers")))
+                })
+                .collect::<Result<Vec<usize>, _>>()?;
+            let parallel = ParallelConfig::new(
+                gj.get("tp").and_then(Json::as_usize).unwrap_or(default_parallel.tp),
+                gj.get("pp").and_then(Json::as_usize).unwrap_or(default_parallel.pp),
+            );
+            groups.push(GroupSpec {
+                parallel,
+                models,
+                gpu_mem: gj.get("gpu_mem").and_then(Json::as_usize),
+                link_bandwidth: gj.get("link_bandwidth").and_then(Json::as_f64),
+            });
+        }
+        Ok(PlacementSpec { router, groups })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("router", self.router.name().into()),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            let mut gj = Json::from_pairs(vec![
+                                ("tp", g.parallel.tp.into()),
+                                ("pp", g.parallel.pp.into()),
+                                (
+                                    "models",
+                                    Json::Arr(g.models.iter().map(|&m| m.into()).collect()),
+                                ),
+                            ]);
+                            if let Some(mem) = g.gpu_mem {
+                                gj.set("gpu_mem", mem.into());
+                            }
+                            if let Some(bw) = g.link_bandwidth {
+                                gj.set("link_bandwidth", bw.into());
+                            }
+                            gj
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -495,6 +736,11 @@ pub struct SystemConfig {
     /// caller supplies arrivals itself (default "uniform" when driven
     /// through the scenario path).
     pub scenario: Option<String>,
+    /// Cluster placement: partition the GPU grid into model-parallel
+    /// groups with per-group model assignment/replication and a routing
+    /// policy (DESIGN.md §8). `None` is the legacy single-group
+    /// deployment on `parallel` — bit-for-bit the pre-placement system.
+    pub placement: Option<PlacementSpec>,
 }
 
 #[derive(Debug)]
@@ -505,11 +751,14 @@ pub enum ConfigError {
     ZeroModels,
     ZeroBatch,
     ZeroChunkLayers,
+    ZeroPrefetchMinCount,
     CapExceedsMemory { cap: usize, shard_bytes: usize, gpu_mem: usize },
     UnknownScenario(String),
     UnknownScheduler(String),
+    UnknownRouter(String),
     BadSlos(String),
     BadDeployment(String),
+    BadPlacement(String),
     Json(String),
 }
 
@@ -524,6 +773,9 @@ impl std::fmt::Display for ConfigError {
             ConfigError::ZeroChunkLayers => {
                 write!(f, "chunk_layers must be >= 1 (omit it for the default)")
             }
+            ConfigError::ZeroPrefetchMinCount => {
+                write!(f, "prefetch_min_count must be >= 1 (omit it for the default of 2)")
+            }
             ConfigError::CapExceedsMemory { cap, shard_bytes, gpu_mem } => write!(
                 f,
                 "the {cap} largest resident shards (largest {shard_bytes}B) exceed GPU memory \
@@ -537,8 +789,12 @@ impl std::fmt::Display for ConfigError {
                 f,
                 "unknown scheduler '{s}' (see coordinator::scheduler::names())"
             ),
+            ConfigError::UnknownRouter(s) => {
+                write!(f, "unknown router '{s}' (see coordinator::router::names())")
+            }
             ConfigError::BadSlos(m) => write!(f, "bad slos: {m}"),
             ConfigError::BadDeployment(m) => write!(f, "bad catalog entry: {m}"),
+            ConfigError::BadPlacement(m) => write!(f, "bad placement: {m}"),
             ConfigError::Json(m) => write!(f, "{m}"),
         }
     }
@@ -572,6 +828,7 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
+            placement: None,
         }
     }
 
@@ -587,6 +844,7 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
+            placement: None,
         }
     }
 
@@ -606,6 +864,7 @@ impl SystemConfig {
                 ..EngineConfig::default()
             },
             scenario: None,
+            placement: None,
         }
     }
 
@@ -670,13 +929,35 @@ impl SystemConfig {
             .collect()
     }
 
+    /// The effective cluster placement: the configured one, or the legacy
+    /// single-group shim (one group on `parallel` hosting every catalog
+    /// entry) when none is set.
+    pub fn resolved_placement(&self) -> PlacementSpec {
+        self.placement
+            .clone()
+            .unwrap_or_else(|| PlacementSpec::single(self.parallel, self.models.len()))
+    }
+
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.models.is_empty() {
             return Err(ConfigError::ZeroModels);
         }
         let specs = self.specs()?;
-        for spec in &specs {
-            crate::model::shard::validate(spec, self.parallel.tp, self.parallel.pp)?;
+        if let Some(p) = &self.placement {
+            p.validate(specs.len())?;
+        }
+        let placement = self.resolved_placement();
+        // Every model must shard on the grid of every group hosting it
+        // (for the legacy single group this is exactly the old
+        // whole-catalog check against `parallel`).
+        for group in &placement.groups {
+            for &m in &group.models {
+                crate::model::shard::validate(
+                    &specs[m],
+                    group.parallel.tp,
+                    group.parallel.pp,
+                )?;
+            }
         }
         if self.engine.resident_cap == 0 {
             return Err(ConfigError::ZeroCap);
@@ -687,28 +968,46 @@ impl SystemConfig {
         if self.engine.chunk_layers == Some(0) {
             return Err(ConfigError::ZeroChunkLayers);
         }
+        if self.engine.prefetch_min_count == 0 {
+            return Err(ConfigError::ZeroPrefetchMinCount);
+        }
         if let Some(name) = &self.scenario {
             if !crate::workload::scenarios::is_known(name) {
                 return Err(ConfigError::UnknownScenario(name.clone()));
             }
         }
         self.models.validate_attributes()?;
-        // The `cap` *largest* shards must fit in device memory together.
-        // (Transfers are per-tensor granular — an overlapped swap drains
-        // the victim while the replacement fills — so the peak is cap
-        // shards, not cap+1; this is what lets §5.1 swap 24 GB models on
-        // 40 GB GPUs at TP=1.) For a homogeneous catalog this is exactly
-        // the old `shard_bytes * min(cap, n)` bound.
-        let mut shards = self.shard_bytes_per_model()?;
-        shards.sort_unstable_by(|a, b| b.cmp(a));
-        let resident = self.engine.resident_cap.min(shards.len());
-        let needed: usize = shards.iter().take(resident).sum();
-        if needed > self.hardware.gpu_mem {
-            return Err(ConfigError::CapExceedsMemory {
-                cap: self.engine.resident_cap,
-                shard_bytes: shards[0],
-                gpu_mem: self.hardware.gpu_mem,
-            });
+        // Per group, the `cap` *largest* hosted shards must fit in that
+        // group's device memory together. (Transfers are per-tensor
+        // granular — an overlapped swap drains the victim while the
+        // replacement fills — so the peak is cap shards, not cap+1; this
+        // is what lets §5.1 swap 24 GB models on 40 GB GPUs at TP=1.)
+        // For the legacy single group and a homogeneous catalog this is
+        // exactly the old `shard_bytes * min(cap, n)` bound.
+        for group in &placement.groups {
+            let gpu_mem = group.gpu_mem.unwrap_or(self.hardware.gpu_mem);
+            let mut shards: Vec<usize> = group
+                .models
+                .iter()
+                .map(|&m| {
+                    crate::model::shard::max_shard_bytes(
+                        &specs[m],
+                        group.parallel.tp,
+                        group.parallel.pp,
+                    )
+                    .map_err(ConfigError::from)
+                })
+                .collect::<Result<_, _>>()?;
+            shards.sort_unstable_by(|a, b| b.cmp(a));
+            let resident = self.engine.resident_cap.min(shards.len());
+            let needed: usize = shards.iter().take(resident).sum();
+            if needed > gpu_mem {
+                return Err(ConfigError::CapExceedsMemory {
+                    cap: self.engine.resident_cap,
+                    shard_bytes: shards[0],
+                    gpu_mem,
+                });
+            }
         }
         Ok(())
     }
@@ -741,8 +1040,14 @@ impl SystemConfig {
         if let Some(n) = self.engine.chunk_layers {
             j.set("chunk_layers", n.into());
         }
+        if self.engine.prefetch_min_count != 2 {
+            j.set("prefetch_min_count", (self.engine.prefetch_min_count as usize).into());
+        }
         if let Some(s) = &self.scenario {
             j.set("scenario", s.as_str().into());
+        }
+        if let Some(p) = &self.placement {
+            j.set("placement", p.to_json());
         }
         j
     }
@@ -815,6 +1120,7 @@ impl SystemConfig {
             hardware: HardwareConfig::default(),
             engine: EngineConfig::default(),
             scenario: None,
+            placement: None,
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
@@ -842,6 +1148,12 @@ impl SystemConfig {
         }
         if let Some(v) = j.get("chunk_layers").and_then(Json::as_usize) {
             cfg.engine.chunk_layers = Some(v);
+        }
+        if let Some(v) = j.get("prefetch_min_count").and_then(Json::as_usize) {
+            cfg.engine.prefetch_min_count = v as u64;
+        }
+        if let Some(p) = j.get("placement") {
+            cfg.placement = Some(PlacementSpec::from_json(p, cfg.parallel)?);
         }
         if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
             cfg.hardware.gpu_mem = v;
@@ -1206,5 +1518,155 @@ mod tests {
         let w = WorkloadConfig::new(vec![10.0, 1.0, 1.0], 4.0);
         assert_eq!(w.duration, 30.0);
         assert_eq!(w.input_len, 8);
+    }
+
+    #[test]
+    fn resolved_placement_defaults_to_single_group() {
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let p = cfg.resolved_placement();
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].parallel, cfg.parallel);
+        assert_eq!(p.groups[0].models, vec![0, 1, 2]);
+        assert_eq!(p.groups[0].gpu_mem, None);
+        assert_eq!(p.world(), cfg.parallel.world());
+        assert_eq!(p.groups_for(1), vec![0]);
+    }
+
+    #[test]
+    fn replicated_placement_roundtrips_through_json() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.placement = Some(PlacementSpec::replicated(
+            2,
+            cfg.parallel,
+            3,
+            RouterKind::ResidentAffinity,
+        ));
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.placement, cfg.placement);
+        // Absent placement stays absent.
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.placement.is_none());
+    }
+
+    #[test]
+    fn placement_json_inherits_grid_and_parses_overrides() {
+        let j = Json::parse(
+            r#"{"models":["opt-13b","opt-13b","opt-1.3b"],"tp":2,"pp":2,
+                "resident_cap":1,
+                "placement":{"router":"least-loaded","groups":[
+                    {"models":[0,1]},
+                    {"models":[2],"tp":1,"pp":1,"gpu_mem":20000000000,
+                     "link_bandwidth":16000000000.0}]}}"#,
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&j).unwrap();
+        let p = cfg.placement.as_ref().unwrap();
+        assert_eq!(p.router, RouterKind::LeastLoaded);
+        assert_eq!(p.groups[0].parallel, ParallelConfig::new(2, 2), "inherits top-level grid");
+        assert_eq!(p.groups[1].parallel, ParallelConfig::new(1, 1));
+        assert_eq!(p.groups[1].gpu_mem, Some(20_000_000_000));
+        assert_eq!(p.groups[1].link_bandwidth, Some(16.0e9));
+        assert_eq!(p.groups_for(0), vec![0]);
+        assert_eq!(p.groups_for(2), vec![1]);
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.placement, cfg.placement);
+    }
+
+    #[test]
+    fn bad_placements_rejected() {
+        let base = || SystemConfig::workload_experiment(3, 2, 8);
+        // No groups.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec { router: RouterKind::RoundRobin, groups: vec![] });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadPlacement(_))));
+        // Empty group.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec {
+            router: RouterKind::RoundRobin,
+            groups: vec![GroupSpec::new(cfg.parallel, vec![0, 1, 2]), GroupSpec::new(cfg.parallel, vec![])],
+        });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadPlacement(_))));
+        // Out-of-range model index.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec {
+            router: RouterKind::RoundRobin,
+            groups: vec![GroupSpec::new(cfg.parallel, vec![0, 1, 2, 3])],
+        });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadPlacement(_))));
+        // Duplicate model in one group.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec {
+            router: RouterKind::RoundRobin,
+            groups: vec![GroupSpec::new(cfg.parallel, vec![0, 0, 1, 2])],
+        });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadPlacement(_))));
+        // Model hosted nowhere.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec {
+            router: RouterKind::RoundRobin,
+            groups: vec![GroupSpec::new(cfg.parallel, vec![0, 1])],
+        });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadPlacement(_))));
+        // A hosted model that does not shard on its group's grid.
+        let mut cfg = base();
+        cfg.placement = Some(PlacementSpec {
+            router: RouterKind::RoundRobin,
+            groups: vec![
+                GroupSpec::new(cfg.parallel, vec![0, 1]),
+                GroupSpec::new(ParallelConfig::new(3, 1), vec![2]),
+            ],
+        });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadParallel(_))));
+        // Unknown router name at JSON parse time.
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":2,"tp":2,"pp":2,
+                "placement":{"router":"random","groups":[{"models":[0,1]}]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(SystemConfig::from_json(&j), Err(ConfigError::UnknownRouter(_))));
+    }
+
+    #[test]
+    fn per_group_memory_bound_uses_group_overrides() {
+        // Two replicated groups, one with a gpu_mem override too small
+        // for cap 2 worth of shards: the override group must trip the
+        // bound even though the default-memory group fits.
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        let shard =
+            crate::model::shard::max_shard_bytes(&cfg.spec().unwrap(), 2, 2).unwrap();
+        let mut p = PlacementSpec::replicated(2, cfg.parallel, 3, RouterKind::RoundRobin);
+        p.groups[1].gpu_mem = Some(2 * shard - 1);
+        cfg.placement = Some(p);
+        assert!(matches!(cfg.validate(), Err(ConfigError::CapExceedsMemory { .. })));
+        cfg.placement.as_mut().unwrap().groups[1].gpu_mem = Some(2 * shard);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn router_kind_parse_name_roundtrip() {
+        for kind in [RouterKind::RoundRobin, RouterKind::LeastLoaded, RouterKind::ResidentAffinity] {
+            assert_eq!(RouterKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(RouterKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn prefetch_min_count_roundtrips_and_validates() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.engine.prefetch_min_count = 5;
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine.prefetch_min_count, 5);
+        // The default is not serialized and parses back as 2.
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        assert!(cfg.to_json().get("prefetch_min_count").is_none());
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.engine.prefetch_min_count, 2);
+        // Zero is rejected.
+        let mut bad = SystemConfig::workload_experiment(3, 2, 8);
+        bad.engine.prefetch_min_count = 0;
+        assert!(matches!(bad.validate(), Err(ConfigError::ZeroPrefetchMinCount)));
     }
 }

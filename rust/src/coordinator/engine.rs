@@ -32,6 +32,9 @@ use crate::coordinator::swap::{Residency, SwapManager, SwapPlan, SwapStats};
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestRecord {
     pub id: RequestId,
+    /// Catalog model id. The engine records its own (group-local) index;
+    /// multi-group backends remap to the catalog index when merging
+    /// per-group reports (`sim::SimCluster`).
     pub model: ModelId,
     pub arrival: f64,
     /// Latency deadline (`arrival + SLO`); `f64::INFINITY` when the
@@ -42,6 +45,9 @@ pub struct RequestRecord {
     /// When the batch's output returned to the engine.
     pub done: f64,
     pub batch_size: usize,
+    /// Engine group that served the request (0 in a single-group
+    /// deployment; set by the cluster backend when merging).
+    pub group: usize,
 }
 
 impl RequestRecord {
@@ -75,6 +81,8 @@ pub struct DropRecord {
     /// The model's residency state at the drop decision — determines
     /// which lower bounds made the deadline provably infeasible.
     pub residency: Residency,
+    /// Engine group that dropped the request (0 single-group).
+    pub group: usize,
 }
 
 /// Completion record for one swap (offload+load pair or bare load),
@@ -103,6 +111,8 @@ pub struct SwapRecord {
     /// own footprint from the per-model cost model, not the fleet
     /// maximum. 0 when the backend supplied no cost model (real mode).
     pub bytes: usize,
+    /// Engine group that performed the swap (0 single-group).
+    pub group: usize,
 }
 
 impl SwapRecord {
@@ -219,7 +229,10 @@ impl Engine {
             dropped: Vec::new(),
             swap_records: Vec::new(),
             batch_submit_times: HashMap::new(),
-            predictor: MarkovPredictor::new(num_models),
+            predictor: MarkovPredictor::with_min_count(
+                num_models,
+                cfg.prefetch_min_count.max(1),
+            ),
             prefetches_issued: 0,
         }
     }
@@ -353,6 +366,7 @@ impl Engine {
                 deadline,
                 dropped_at: now,
                 residency: self.swap.state(model),
+                group: 0,
             });
             return id;
         }
@@ -391,6 +405,24 @@ impl Engine {
         self.prefetches_issued
     }
 
+    /// Feed the Markov prefetcher a model-to-model transition observed
+    /// *outside* this engine. In a multi-group cluster the router sees
+    /// the global arrival sequence while each group's engine only
+    /// observes the arrivals routed to it; the cluster backend injects
+    /// the global transitions (translated to this engine's local model
+    /// ids) so prefetch keeps learning cross-model patterns when traffic
+    /// fans out across groups (DESIGN.md §8). No-op effect on anything
+    /// but the predictor's counts.
+    pub fn observe_external_transition(&mut self, prev: ModelId, next: ModelId) {
+        self.predictor.record_transition(prev, next);
+    }
+
+    /// Total requests queued across every model (the cluster router's
+    /// `least-loaded` signal, together with `inflight_batches`).
+    pub fn queued_total(&self) -> usize {
+        self.queues.total_len()
+    }
+
     fn submit_swap_entries(&mut self, now: f64, model: ModelId, victim: Option<ModelId>) {
         self.submit_swap(now, model, victim);
     }
@@ -412,6 +444,7 @@ impl Engine {
                 batch_submit: submit,
                 done: now,
                 batch_size: batch.batch_size(),
+                group: 0,
             });
         }
         self.pump(now);
@@ -524,6 +557,7 @@ impl Engine {
                 overlap_fraction: pair.overlapped_chunks as f64 / pair.total_chunks as f64,
                 cancelled: pair.cancelled,
                 bytes: self.costs[pair.load_model].bytes,
+                group: 0,
             });
         }
     }
@@ -604,6 +638,7 @@ impl Engine {
                     deadline,
                     dropped_at: now,
                     residency,
+                    group: 0,
                 });
             }
         }
@@ -890,6 +925,7 @@ mod tests {
             prefetch: false,
             scheduler: crate::config::SchedulerKind::Fcfs,
             chunk_layers: None,
+            prefetch_min_count: 2,
         }
     }
 

@@ -9,10 +9,12 @@ pub mod entry;
 pub mod policy;
 pub mod prefetch;
 pub mod queues;
+pub mod router;
 pub mod scheduler;
 pub mod swap;
 
 pub use engine::{DropRecord, Engine, RequestRecord, SwapRecord};
+pub use router::{GroupView, Router};
 pub use scheduler::{Candidate, ModelCost, SchedCtx, Scheduler};
 pub use entry::{BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId};
 pub use queues::RequestQueues;

@@ -24,10 +24,18 @@ pub struct MarkovPredictor {
 
 impl MarkovPredictor {
     pub fn new(num_models: usize) -> MarkovPredictor {
+        MarkovPredictor::with_min_count(num_models, 2)
+    }
+
+    /// A predictor acting only on transitions seen at least `min_count`
+    /// times (`EngineConfig::prefetch_min_count`; the default of 2 is
+    /// `new`'s behaviour).
+    pub fn with_min_count(num_models: usize, min_count: u64) -> MarkovPredictor {
+        assert!(min_count >= 1, "min_count must be >= 1");
         MarkovPredictor {
             transitions: vec![vec![0; num_models]; num_models],
             last: None,
-            min_count: 2,
+            min_count,
         }
     }
 
@@ -37,6 +45,15 @@ impl MarkovPredictor {
             self.transitions[prev][model] += 1;
         }
         self.last = Some(model);
+    }
+
+    /// Record a transition observed *elsewhere* — in the cluster setting
+    /// the router sees the global arrival sequence while each group's
+    /// engine only sees its own slice, so the backend injects the global
+    /// `prev → next` pairs here (DESIGN.md §8). Does not touch the local
+    /// `last` chain.
+    pub fn record_transition(&mut self, prev: ModelId, next: ModelId) {
+        self.transitions[prev][next] += 1;
     }
 
     /// Most likely next model after `model`, if seen often enough and not
@@ -101,6 +118,34 @@ mod tests {
             assert_eq!(p.predict_after(m), None);
         }
         assert_eq!(p.observations(), 0);
+    }
+
+    #[test]
+    fn min_count_is_configurable() {
+        let mut p = MarkovPredictor::with_min_count(2, 4);
+        for _ in 0..3 {
+            p.observe(0);
+            p.observe(1);
+        }
+        assert_eq!(p.predict_after(0), None, "3 observations < min_count 4");
+        p.observe(0);
+        p.observe(1);
+        assert_eq!(p.predict_after(0), Some(1));
+    }
+
+    #[test]
+    fn external_transitions_feed_predictions_without_breaking_the_chain() {
+        let mut p = MarkovPredictor::new(3);
+        // Locally the predictor saw only model 0; the global sequence
+        // (injected) alternates 0 -> 1.
+        p.observe(0);
+        p.record_transition(0, 1);
+        p.record_transition(0, 1);
+        assert_eq!(p.predict_after(0), Some(1));
+        // The local chain still continues from the last *observed* model.
+        p.observe(2);
+        assert_eq!(p.transitions[0][2], 1, "local chain was 0 -> 2");
+        assert_eq!(p.observations(), 3);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Cluster-level request routing across model-parallel groups
+//! (DESIGN.md §8).
+//!
+//! With a multi-group [`crate::config::PlacementSpec`] a model can be
+//! *replicated* — hosted by several engine groups at once — and every
+//! arrival must first pick a group before the per-group scheduler
+//! (`coordinator::scheduler`) ever sees it. AlpaServe (arXiv 2302.11665)
+//! shows this placement/routing layer is where model-parallel
+//! multiplexing pays off under real traffic, so the decision is lifted
+//! into a `Router` trait behind a named registry (mirroring
+//! `scheduler::by_name` and `scenarios::by_name`):
+//!
+//! | name                | discipline |
+//! |---------------------|------------|
+//! | `round-robin`       | per-model rotation over the model's replica groups |
+//! | `least-loaded`      | lowest pending-work queue cost wins (ties by group id) |
+//! | `resident-affinity` | prefer groups where the model is already warm; among cold groups, cheapest swap wins |
+//!
+//! The backend (`sim::SimCluster`) drives the trait at exactly one point:
+//! when an arrival pops, it snapshots one [`GroupView`] per replica group
+//! and asks the router for a destination. Everything after that — queues,
+//! batching, swaps — is the unchanged per-group engine, which is what
+//! keeps a single-group placement bit-for-bit identical to the
+//! pre-placement system (pinned by `rust/tests/cluster_equiv.rs`).
+//!
+//! Routers must be deterministic: same views, same (internal) state, same
+//! answer — runs stay reproducible bit-for-bit.
+
+use crate::config::RouterKind;
+use crate::coordinator::entry::ModelId;
+use crate::coordinator::swap::Residency;
+
+/// Snapshot of one candidate group for one routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupView {
+    /// Global group index.
+    pub group: usize,
+    /// Pending work at this group's engine: queued requests plus
+    /// in-flight batch entries (the `least-loaded` key). Unitless but
+    /// consistent across groups within one decision.
+    pub queue_cost: f64,
+    /// The routed model's residency on this group.
+    pub residency: Residency,
+    /// The routed model's swap-in cost estimate on this group (per-group
+    /// cost model: its grid and link) — `resident-affinity`'s tiebreak
+    /// among cold groups.
+    pub swap_cost: f64,
+}
+
+impl GroupView {
+    /// True when routing here does not require a new swap-in: the model
+    /// is resident, partially resident, or already loading.
+    pub fn warm(&self) -> bool {
+        matches!(
+            self.residency,
+            Residency::Resident | Residency::PartiallyResident { .. } | Residency::Loading
+        )
+    }
+}
+
+/// A cluster routing discipline.
+pub trait Router: Send {
+    fn kind(&self) -> RouterKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Pick the destination group for one arrival of `model` among its
+    /// replica groups. `candidates` is non-empty and sorted by ascending
+    /// group id; the returned value is the chosen `GroupView::group`.
+    /// Must be deterministic given the views and the router's own state.
+    fn route(&mut self, model: ModelId, candidates: &[GroupView]) -> usize;
+}
+
+/// `round-robin` — rotate each model over its replica groups in group-id
+/// order. Blind to load and residency, but perfectly fair: over any K
+/// consecutive arrivals of one model, per-group counts differ by at most
+/// one (pinned by `rust/tests/router_prop.rs`).
+pub struct RoundRobin {
+    /// Per-model rotation cursor, grown lazily.
+    counters: Vec<u64>,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { counters: Vec::new() }
+    }
+}
+
+impl Default for RoundRobin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router for RoundRobin {
+    fn kind(&self) -> RouterKind {
+        RouterKind::RoundRobin
+    }
+
+    fn route(&mut self, model: ModelId, candidates: &[GroupView]) -> usize {
+        if self.counters.len() <= model {
+            self.counters.resize(model + 1, 0);
+        }
+        let turn = self.counters[model];
+        self.counters[model] = turn.wrapping_add(1);
+        candidates[(turn % candidates.len() as u64) as usize].group
+    }
+}
+
+/// `least-loaded` — send the arrival to the group with the smallest
+/// pending-work queue cost, ties broken by group id. Never picks a group
+/// whose queue cost is strictly above another candidate's.
+pub struct LeastLoaded;
+
+impl Router for LeastLoaded {
+    fn kind(&self) -> RouterKind {
+        RouterKind::LeastLoaded
+    }
+
+    fn route(&mut self, _model: ModelId, candidates: &[GroupView]) -> usize {
+        candidates
+            .iter()
+            .min_by(|a, b| a.queue_cost.total_cmp(&b.queue_cost).then(a.group.cmp(&b.group)))
+            .expect("non-empty candidates")
+            .group
+    }
+}
+
+/// `resident-affinity` — route to a group already holding (or loading)
+/// the model, so the request re-hits warm state instead of paying a
+/// swap-in; among warm groups the least-loaded wins. When every replica
+/// is cold a swap is unavoidable, and the cheapest one wins: lowest
+/// swap-in cost, then lowest queue cost, then group id. Consequence
+/// (pinned by `rust/tests/router_prop.rs`): a resident replica existing
+/// anywhere means this router never triggers a new swap.
+pub struct ResidentAffinity;
+
+impl ResidentAffinity {
+    /// Sort key: warm groups (rank 0) compare on queue cost; cold groups
+    /// (rank 1) compare on swap cost then queue cost.
+    fn key(v: &GroupView) -> (u8, f64, f64, usize) {
+        if v.warm() {
+            (0, v.queue_cost, 0.0, v.group)
+        } else {
+            (1, v.swap_cost, v.queue_cost, v.group)
+        }
+    }
+}
+
+impl Router for ResidentAffinity {
+    fn kind(&self) -> RouterKind {
+        RouterKind::ResidentAffinity
+    }
+
+    fn route(&mut self, _model: ModelId, candidates: &[GroupView]) -> usize {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                let (ra, pa, sa, ga) = Self::key(a);
+                let (rb, pb, sb, gb) = Self::key(b);
+                ra.cmp(&rb)
+                    .then(pa.total_cmp(&pb))
+                    .then(sa.total_cmp(&sb))
+                    .then(ga.cmp(&gb))
+            })
+            .expect("non-empty candidates")
+            .group
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Every routing discipline, in presentation order. `names()`/`describe()`
+/// are pinned to this list by `registry_resolves_every_name`, and
+/// `make()`'s exhaustive match forces a new `RouterKind` variant through
+/// this file.
+pub const KINDS: [RouterKind; 3] =
+    [RouterKind::RoundRobin, RouterKind::LeastLoaded, RouterKind::ResidentAffinity];
+
+/// All registered router names, in presentation order.
+pub fn names() -> &'static [&'static str] {
+    &["round-robin", "least-loaded", "resident-affinity"]
+}
+
+/// True if `name` is a registered router.
+pub fn is_known(name: &str) -> bool {
+    names().contains(&name)
+}
+
+/// One-line description for CLI listings.
+pub fn describe(name: &str) -> Option<&'static str> {
+    match name {
+        "round-robin" => Some("rotate each model over its replica groups (load-blind, fair)"),
+        "least-loaded" => Some("lowest pending-work queue cost wins, ties by group id"),
+        "resident-affinity" => {
+            Some("prefer groups already holding the model; cheapest swap among cold groups")
+        }
+        _ => None,
+    }
+}
+
+/// Look up a router by registry name.
+pub fn by_name(name: &str) -> Option<Box<dyn Router>> {
+    RouterKind::parse(name).map(make)
+}
+
+/// Instantiate the router for a config selector.
+pub fn make(kind: RouterKind) -> Box<dyn Router> {
+    match kind {
+        RouterKind::RoundRobin => Box::new(RoundRobin::new()),
+        RouterKind::LeastLoaded => Box::new(LeastLoaded),
+        RouterKind::ResidentAffinity => Box::new(ResidentAffinity),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(group: usize, queue_cost: f64, residency: Residency, swap_cost: f64) -> GroupView {
+        GroupView { group, queue_cost, residency, swap_cost }
+    }
+
+    #[test]
+    fn registry_resolves_every_name() {
+        let from_kinds: Vec<&str> = KINDS.iter().map(|k| k.name()).collect();
+        assert_eq!(names(), &from_kinds[..]);
+        for &name in names() {
+            assert!(is_known(name));
+            assert!(describe(name).is_some(), "{name} has no description");
+            let r = by_name(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(r.name(), name);
+        }
+        assert!(by_name("nope").is_none());
+        assert!(!is_known("nope"));
+    }
+
+    #[test]
+    fn round_robin_rotates_per_model() {
+        let mut r = RoundRobin::new();
+        let views = vec![
+            view(0, 9.0, Residency::Offloaded, 1.0),
+            view(2, 0.0, Residency::Resident, 1.0),
+            view(5, 3.0, Residency::Offloaded, 1.0),
+        ];
+        // Model 0 rotates 0 -> 2 -> 5 -> 0 regardless of load/residency.
+        assert_eq!(r.route(0, &views), 0);
+        assert_eq!(r.route(0, &views), 2);
+        assert_eq!(r.route(0, &views), 5);
+        assert_eq!(r.route(0, &views), 0);
+        // Model 7's rotation is independent of model 0's.
+        assert_eq!(r.route(7, &views), 0);
+        assert_eq!(r.route(0, &views), 2);
+    }
+
+    #[test]
+    fn least_loaded_picks_minimum_with_id_tiebreak() {
+        let mut r = LeastLoaded;
+        let views = vec![
+            view(0, 3.0, Residency::Resident, 0.0),
+            view(1, 1.0, Residency::Offloaded, 9.0),
+            view(2, 1.0, Residency::Offloaded, 0.1),
+        ];
+        assert_eq!(r.route(0, &views), 1, "min cost wins, lower id breaks the tie");
+    }
+
+    #[test]
+    fn resident_affinity_prefers_warm_groups() {
+        let mut r = ResidentAffinity;
+        // A busy resident group still beats an idle cold one.
+        let views = vec![
+            view(0, 9.0, Residency::Resident, 1.0),
+            view(1, 0.0, Residency::Offloaded, 0.1),
+        ];
+        assert_eq!(r.route(0, &views), 0);
+        // Partially resident and loading count as warm.
+        let views = vec![
+            view(0, 1.0, Residency::Offloaded, 0.1),
+            view(1, 5.0, Residency::PartiallyResident { loaded: 1, total: 4 }, 1.0),
+            view(2, 6.0, Residency::Loading, 1.0),
+        ];
+        assert_eq!(r.route(0, &views), 1, "least-loaded warm group wins");
+        // All cold: cheapest swap wins, not the emptiest queue.
+        let views = vec![
+            view(0, 0.0, Residency::Offloaded, 2.0),
+            view(1, 4.0, Residency::Offloading, 0.5),
+        ];
+        assert_eq!(r.route(0, &views), 1);
+    }
+
+    #[test]
+    fn single_candidate_is_identity_for_every_router() {
+        let views = vec![view(3, 7.0, Residency::Offloading, 2.0)];
+        for &name in names() {
+            let mut r = by_name(name).unwrap();
+            for m in 0..4 {
+                assert_eq!(r.route(m, &views), 3, "{name}");
+            }
+        }
+    }
+}

@@ -7,14 +7,15 @@
 //!   models      print the resolved deployment catalog for a config
 //!   scenarios   list the named workload scenarios (`--scenario` targets)
 //!   schedulers  list the scheduling disciplines (`--scheduler` targets)
+//!   routers     list the cluster routing policies (`--router` targets)
 //!   info        print environment, catalog, and artifact status
 //!
 //! `computron <subcommand> --help` lists options.
 
 use anyhow::{anyhow, Result};
 use computron::config::{
-    EngineConfig, LoadDesign, ModelCatalog, ParallelConfig, PolicyKind, SchedulerKind,
-    SystemConfig,
+    EngineConfig, LoadDesign, ModelCatalog, ParallelConfig, PlacementSpec, PolicyKind,
+    RouterKind, SchedulerKind, SystemConfig,
 };
 use computron::coordinator::engine::SwapRecord;
 use computron::metrics::WorkloadCell;
@@ -29,7 +30,7 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|swap|models|scenarios|schedulers|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|swap|models|scenarios|schedulers|routers|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
@@ -40,6 +41,7 @@ fn main() {
         "models" => cmd_models(&rest),
         "scenarios" => cmd_scenarios(),
         "schedulers" => cmd_schedulers(),
+        "routers" => cmd_routers(),
         "info" => cmd_info(),
         other => Err(anyhow!("unknown subcommand '{other}'")),
     };
@@ -67,6 +69,22 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             // from the file; real mode requires a homogeneous catalog of
             // manifest models (heterogeneous fleets are simulator-only).
             let sys = SystemConfig::from_file(std::path::Path::new(path))?;
+            // Real mode serves exactly one engine group on the top-level
+            // grid with default hardware; accept only placements that are
+            // equivalent to that (anything else would silently diverge
+            // from what `simulate` runs on the same file).
+            let placement = sys.resolved_placement();
+            let single_shim = computron::config::PlacementSpec::single(
+                sys.parallel,
+                sys.models.len(),
+            );
+            if placement.groups != single_shim.groups {
+                return Err(anyhow!(
+                    "non-trivial placements are simulator-only; real mode serves one \
+                     engine group on the top-level tp/pp with default hardware \
+                     (drop the config's `placement` or use `simulate`)"
+                ));
+            }
             let mut cfg =
                 ServeConfig::with_catalog(&dir, sys.models, sys.parallel.tp, sys.parallel.pp);
             cfg.engine = sys.engine;
@@ -133,6 +151,10 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("scheduler", "fcfs|edf|swap-aware|shed (see `computron schedulers`)", None)
         .opt("slo", "uniform per-model latency SLO in seconds", None)
         .opt("slos", "comma-separated per-model SLOs in seconds (overrides --slo)", None)
+        .opt("groups", "replicate the catalog across G identical engine groups (overrides the config's placement)", None)
+        .opt("placement", "JSON placement file: {\"router\", \"groups\": [{\"models\", \"tp\"?, \"pp\"?, ...}]} (DESIGN.md §8)", None)
+        .opt("router", "round-robin|least-loaded|resident-affinity (see `computron routers`)", None)
+        .opt("prefetch-min-count", "Markov prefetcher's minimum transition observations (default 2)", None)
         .flag("no-pinned", "use pageable host memory (ablation)")
         .parse_from(argv)?;
 
@@ -145,7 +167,6 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         ),
     };
     let models = cfg.num_models();
-    let cap = cfg.engine.resident_cap;
     // Explicit flags override the config file; absent flags keep its
     // values (EngineConfig defaults — lru/async — when no config).
     if let Some(s) = args.get("policy") {
@@ -173,6 +194,37 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     } else if let Some(v) = args.get_f64("slo")? {
         cfg.set_uniform_slo(v);
     }
+    // Cluster placement flags (DESIGN.md §8): --placement loads a group
+    // layout from a JSON file; --groups replicates the catalog across G
+    // identical groups; --router overrides the routing policy either way.
+    if let Some(path) = args.get("placement") {
+        let j = computron::util::json::Json::parse_file(std::path::Path::new(path))?;
+        cfg.placement = Some(PlacementSpec::from_json(&j, cfg.parallel)?);
+    }
+    if let Some(g) = args.get_usize("groups")? {
+        anyhow::ensure!(g >= 1, "--groups must be >= 1");
+        let router = cfg
+            .placement
+            .as_ref()
+            .map(|p| p.router)
+            .unwrap_or(RouterKind::RoundRobin);
+        cfg.placement =
+            Some(PlacementSpec::replicated(g, cfg.parallel, cfg.num_models(), router));
+    }
+    if let Some(s) = args.get("router") {
+        let kind = RouterKind::parse(s)
+            .ok_or_else(|| anyhow!("bad --router '{s}' (see `computron routers`)"))?;
+        match cfg.placement.as_mut() {
+            Some(p) => p.router = kind,
+            None => {
+                cfg.placement =
+                    Some(PlacementSpec::replicated(1, cfg.parallel, cfg.num_models(), kind))
+            }
+        }
+    }
+    if let Some(n) = args.get_usize("prefetch-min-count")? {
+        cfg.engine.prefetch_min_count = n as u64;
+    }
     if args.flag("no-pinned") {
         cfg.hardware.pinned = false;
     }
@@ -180,6 +232,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
     let scheduler_name = cfg.engine.scheduler.name();
     let has_slos = cfg.slos().is_some();
+    let placement = cfg.resolved_placement();
+    let (num_groups, router_name) = (placement.groups.len(), placement.router.name());
 
     // Scenario precedence: an explicit --scenario flag always wins; a
     // config-file `scenario` field applies unless the user passed
@@ -214,7 +268,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         let start = workload.measure_start();
         let cv = workload.cv;
         let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
-        sys.preload(&(0..cap.min(models)).collect::<Vec<_>>());
+        // Warm-server start: each group preloads its first `resident_cap`
+        // hosted models (identical to the old 0..cap preload for one group).
+        sys.preload_warm();
         (sys.run(), start, "cli".to_string(), cv)
     };
     let cell = WorkloadCell::from_report(&label, cv, &report, start, duration);
@@ -238,7 +294,69 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         rows.insert(3, vec!["goodput (att. req/s)".into(), format!("{:.2}", cell.goodput)]);
         rows.insert(4, vec!["dropped (rate)".into(), format!("{} ({:.1}%)", cell.drops, 100.0 * cell.drop_rate)]);
     }
+    if num_groups > 1 {
+        rows.insert(1, vec!["groups".into(), num_groups.to_string()]);
+        rows.insert(2, vec!["router".into(), router_name.to_string()]);
+    }
     table(&["metric", "value"], &rows);
+
+    // Per-model attainment (deadline-met completions over all measured
+    // arrivals — drops count as misses) whenever SLOs are configured.
+    if has_slos {
+        let att = computron::metrics::per_model_attainment(&report, start);
+        let line: Vec<String> = att
+            .iter()
+            .enumerate()
+            .map(|(m, a)| format!("{m}: {:.1}%", 100.0 * a))
+            .collect();
+        println!("\nper-model attainment  {}", line.join("  "));
+    }
+
+    // Per-group breakdown for multi-group placements (DESIGN.md §8).
+    if num_groups > 1 {
+        let cells = computron::metrics::group_cells(&report, start, duration);
+        section("per-group results");
+        let grows: Vec<Vec<String>> = cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.group.to_string(),
+                    c.models.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(","),
+                    c.requests.to_string(),
+                    c.drops.to_string(),
+                    format!("{:.3}", c.mean_latency),
+                    format!("{:.1}%", 100.0 * c.attainment),
+                    c.swaps.to_string(),
+                    format!("{:.2}", c.swap_bytes as f64 / 1e9),
+                ]
+            })
+            .collect();
+        table(
+            &["group", "models", "requests", "drops", "mean lat (s)", "attainment", "swaps", "swap GB"],
+            &grows,
+        );
+        println!(
+            "\ncross-group load imbalance (max/mean): {:.2}",
+            computron::metrics::load_imbalance(&cells)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_routers() -> Result<()> {
+    section("cluster routing policies (computron simulate --groups G --router <name>)");
+    let rows: Vec<Vec<String>> = computron::coordinator::router::names()
+        .iter()
+        .map(|&name| {
+            vec![
+                name.to_string(),
+                computron::coordinator::router::describe(name).unwrap_or("").to_string(),
+            ]
+        })
+        .collect();
+    table(&["name", "description"], &rows);
+    println!("\nrouting only matters with a multi-group placement (`--groups` or a config");
+    println!("`placement`); a single group receives every request no matter the policy.");
     Ok(())
 }
 

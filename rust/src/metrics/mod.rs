@@ -192,6 +192,131 @@ fn mean(iter: impl Iterator<Item = f64>) -> f64 {
     }
 }
 
+/// Measured outcome of one engine group over the measured window
+/// (cluster runs, DESIGN.md §8). Built from the flat record vectors via
+/// their `group` tags plus the run's `GroupStats` aggregates.
+#[derive(Clone, Debug)]
+pub struct GroupCell {
+    pub group: usize,
+    /// Catalog ids this group hosts.
+    pub models: Vec<usize>,
+    /// Completed requests arriving in the measured window.
+    pub requests: usize,
+    /// Admission-control drops arriving in the measured window.
+    pub drops: usize,
+    pub mean_latency: f64,
+    /// Fraction of this group's measured completions that met their
+    /// deadline (1.0 when no SLOs are configured; 0.0 for a group with
+    /// no measured completions — `WorkloadCell`'s empty-window
+    /// convention).
+    pub attainment: f64,
+    /// Deadline-met completions per second of measured window.
+    pub goodput: f64,
+    /// Completed swap-ins over the whole run (not window-filtered — swap
+    /// traffic is a capacity metric, not a latency one).
+    pub swaps: usize,
+    /// Σ swap-in shard bytes over the whole run.
+    pub swap_bytes: u64,
+}
+
+impl GroupCell {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("group", self.group.into()),
+            ("models", Json::Arr(self.models.iter().map(|&m| m.into()).collect())),
+            ("requests", self.requests.into()),
+            ("drops", self.drops.into()),
+            ("mean_latency", self.mean_latency.into()),
+            ("attainment", self.attainment.into()),
+            ("goodput", self.goodput.into()),
+            ("swaps", self.swaps.into()),
+            ("swap_bytes", (self.swap_bytes as usize).into()),
+        ])
+    }
+}
+
+/// One `GroupCell` per engine group of a run, in group order.
+pub fn group_cells(report: &SimReport, measure_start: f64, duration: f64) -> Vec<GroupCell> {
+    report
+        .groups
+        .iter()
+        .map(|g| {
+            let measured: Vec<&RequestRecord> = report
+                .requests
+                .iter()
+                .filter(|r| r.group == g.group && r.arrival >= measure_start)
+                .collect();
+            let attained = measured.iter().filter(|r| r.attained()).count();
+            let lats: Vec<f64> = measured.iter().map(|r| r.latency()).collect();
+            GroupCell {
+                group: g.group,
+                models: g.models.clone(),
+                requests: measured.len(),
+                drops: report
+                    .drops
+                    .iter()
+                    .filter(|d| d.group == g.group && d.arrival >= measure_start)
+                    .count(),
+                mean_latency: mean(lats.into_iter()),
+                attainment: if measured.is_empty() {
+                    0.0
+                } else {
+                    attained as f64 / measured.len() as f64
+                },
+                goodput: if duration > 0.0 { attained as f64 / duration } else { 0.0 },
+                swaps: g.swaps,
+                swap_bytes: g.swap_bytes,
+            }
+        })
+        .collect()
+}
+
+/// Cross-group load imbalance: max / mean of per-group measured arrival
+/// counts (completions + drops — routed traffic, not just served).
+/// 1.0 is a perfect spread; G is one group taking everything. 0.0 when
+/// there is no traffic (or no groups).
+pub fn load_imbalance(cells: &[GroupCell]) -> f64 {
+    if cells.is_empty() {
+        return 0.0;
+    }
+    let counts: Vec<f64> = cells.iter().map(|c| (c.requests + c.drops) as f64).collect();
+    let total: f64 = counts.iter().sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let mean = total / counts.len() as f64;
+    counts.iter().cloned().fold(0.0, f64::max) / mean
+}
+
+/// Per-model SLO attainment over the measured window, indexed by catalog
+/// model id: deadline-met completions over *all* of the model's measured
+/// arrivals — a dropped request counts as a miss, so 100% shed traffic
+/// reports 0.0, not 1.0. Models with no measured traffic report 0.0
+/// (the empty-window convention `WorkloadCell` uses).
+pub fn per_model_attainment(report: &SimReport, measure_start: f64) -> Vec<f64> {
+    let n = report
+        .requests
+        .iter()
+        .map(|r| r.model + 1)
+        .chain(report.groups.iter().flat_map(|g| g.models.iter().map(|&m| m + 1)))
+        .max()
+        .unwrap_or(0);
+    let mut arrived = vec![0usize; n];
+    let mut attained = vec![0usize; n];
+    for r in report.requests.iter().filter(|r| r.arrival >= measure_start) {
+        arrived[r.model] += 1;
+        if r.attained() {
+            attained[r.model] += 1;
+        }
+    }
+    for d in report.drops.iter().filter(|d| d.arrival >= measure_start) {
+        arrived[d.model] += 1;
+    }
+    (0..n)
+        .map(|m| if arrived[m] == 0 { 0.0 } else { attained[m] as f64 / arrived[m] as f64 })
+        .collect()
+}
+
 /// Render a Tab-1/Tab-2-style grid: rows = skew, columns = CV.
 pub fn latency_table(cells: &[WorkloadCell], cvs: &[f64]) -> (Vec<&'static str>, Vec<Vec<String>>) {
     let mut skews: Vec<String> = Vec::new();
@@ -347,6 +472,64 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0][0], "(1,1,1)");
         assert_eq!(rows[1][3], "-"); // missing CV=4 cell
+    }
+
+    #[test]
+    fn group_cells_and_imbalance() {
+        use crate::config::{PlacementSpec, RouterKind};
+        use crate::sim::Arrival;
+        // Single group: one cell covering everything, imbalance 1.0.
+        let r = small_report();
+        let cells = group_cells(&r, 0.0, 10.0);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].requests, r.requests.len());
+        assert_eq!(cells[0].swaps, r.groups[0].swaps);
+        assert_eq!(cells[0].swap_bytes, r.groups[0].swap_bytes);
+        assert!((load_imbalance(&cells) - 1.0).abs() < 1e-12);
+        assert!(cells[0].to_json().get("goodput").is_some());
+
+        // Two replicated groups under round-robin: both serve traffic and
+        // the imbalance stays near 1 (perfect alternation = exactly 1).
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 8);
+        cfg.placement =
+            Some(PlacementSpec::replicated(2, cfg.parallel, 2, RouterKind::RoundRobin));
+        let arrivals: Vec<Arrival> = (0..16)
+            .map(|i| Arrival { at: 0.5 * i as f64, model: i % 2, input_len: 8 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload_warm();
+        let r = sys.run();
+        let cells = group_cells(&r, 0.0, 8.0);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].requests + cells[1].requests, 16);
+        assert_eq!(cells[0].requests, 8);
+        assert!((load_imbalance(&cells) - 1.0).abs() < 1e-12);
+        // Empty cell list and zero traffic degenerate to 0.
+        assert_eq!(load_imbalance(&[]), 0.0);
+    }
+
+    #[test]
+    fn per_model_attainment_splits_by_catalog_id() {
+        use crate::config::SchedulerKind;
+        use crate::sim::Arrival;
+        // §5.1 worst case at TP=1 PP=1 with a 0.5 s SLO: model 1 always
+        // swaps in cold (pure transfer alone is 0.75 s — provably a
+        // miss), while model 0's first request hits its preloaded copy
+        // and attains. Per-model attainment must split accordingly.
+        let mut cfg = SystemConfig::swap_experiment(1, 1);
+        cfg.engine.scheduler = SchedulerKind::Fcfs;
+        cfg.set_slos(&[0.5, 0.5]).unwrap();
+        let arrivals: Vec<Arrival> = (0..8)
+            .map(|i| Arrival { at: 3.0 * i as f64, model: i % 2, input_len: 2 })
+            .collect();
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0]);
+        let r = sys.run();
+        let att = per_model_attainment(&r, 0.0);
+        assert_eq!(att.len(), 2);
+        assert!(att.iter().all(|a| (0.0..=1.0).contains(a)));
+        assert_eq!(att[1], 0.0, "cold swaps can never meet a 0.5 s SLO: {att:?}");
+        assert!(att[1] < att[0], "the swapping model must attain less: {att:?}");
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod system;
 pub mod worker;
 
-pub use system::{Arrival, Driver, SimReport, SimSystem};
+pub use system::{Arrival, Driver, GroupStats, SimCluster, SimReport, SimSystem};
 pub use worker::{ChunkOutcome, InstState, SimWorker, WorkerAction};

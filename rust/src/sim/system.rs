@@ -1,24 +1,35 @@
-//! The composed discrete-event simulation: engine + TP×PP worker grid +
-//! FIFO pipes + workload driver.
+//! The composed discrete-event simulation: a cluster of model-parallel
+//! engine groups behind a routing layer, each group an engine + TP×PP
+//! worker grid + FIFO pipes, driven by one shared event loop.
 //!
-//! `SimSystem` reproduces the paper's testbed end-to-end: the engine state
+//! `SimCluster` generalizes the paper's single-group testbed (DESIGN.md
+//! §8): a `PlacementSpec` partitions the GPU grid into groups, assigns
+//! each catalog model to one or more groups (replication), and a
+//! pluggable `coordinator::router` policy dispatches every arrival to a
+//! hosting group. Within a group nothing changed: the engine state
 //! machine (`coordinator::Engine`) emits batch/load entries; entries flow
-//! through per-stage FIFO pipes to `SimWorker`s whose streams/links/memory
-//! are the calibrated `cluster` substrate; completions flow back as acks.
-//! Every experiment in `benches/` is a deterministic run of this system.
+//! through per-stage FIFO pipes to `SimWorker`s whose streams/links/
+//! memory are the calibrated `cluster` substrate; completions flow back
+//! as acks. A single-group placement (the default when
+//! `SystemConfig::placement` is `None`) reproduces the pre-cluster
+//! `SimSystem` bit-for-bit — pinned by `rust/tests/cluster_equiv.rs` —
+//! so `SimSystem` remains as an alias. Every experiment in `benches/` is
+//! a deterministic run of this system.
 
 use crate::cluster::clock::{EventQueue, SimTime};
+use crate::cluster::compute::ComputeModel;
 use crate::cluster::gpu::GpuDevice;
-use crate::config::{LoadDesign, SystemConfig};
+use crate::config::{GroupSpec, LoadDesign, SystemConfig};
 use crate::coordinator::engine::{DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
+use crate::coordinator::router::{self, GroupView, Router};
 use crate::coordinator::scheduler::ModelCost;
 use crate::coordinator::swap::SwapStats;
 use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec, ShardManifest};
 use crate::sim::worker::{ChunkOutcome, SimWorker, WorkerAction};
 use std::collections::HashMap;
 
-/// One scheduled request arrival.
+/// One scheduled request arrival (`model` is the catalog index).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Arrival {
     pub at: SimTime,
@@ -36,7 +47,42 @@ pub enum Driver {
     AlternatingBlocking { models: usize, input_len: usize, total: usize },
 }
 
-/// Everything measured during a run.
+/// Per-group accounting of one run. Record-level data (latencies,
+/// deadlines, swap timings) lives in the flat `SimReport` vectors, each
+/// record tagged with its `group`; this struct carries the per-group
+/// aggregates and per-GPU series the group-scaling analyses key on.
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub group: usize,
+    pub tp: usize,
+    pub pp: usize,
+    /// Catalog ids this group hosts, in local-index order.
+    pub models: Vec<ModelId>,
+    /// Completed requests served by this group.
+    pub requests: usize,
+    /// Requests dropped by this group's admission control.
+    pub drops: usize,
+    /// Completed (non-cancelled) swap-ins on this group.
+    pub swaps: usize,
+    /// Σ `SwapRecord::bytes` over this group's completed swap-ins — the
+    /// per-group swap traffic the scaling bench's oracle validates
+    /// against the group's own H2D link counters.
+    pub swap_bytes: u64,
+    pub swap_stats: SwapStats,
+    /// DES events attributed to this group (arrivals count toward the
+    /// group they were routed to).
+    pub events: u64,
+    pub violations: u64,
+    pub oom_events: u64,
+    /// Per-GPU series for this group's workers, local worker order.
+    pub mem_high_water: Vec<usize>,
+    pub h2d_bytes: Vec<u64>,
+    pub d2h_bytes: Vec<u64>,
+}
+
+/// Everything measured during a run. The flat vectors merge every group
+/// (each record carries its `group` tag); `groups` holds the per-group
+/// aggregates. Single-group runs produce exactly the pre-cluster report.
 #[derive(Clone, Debug)]
 pub struct SimReport {
     pub requests: Vec<RequestRecord>,
@@ -49,7 +95,8 @@ pub struct SimReport {
     /// zero in both pipelined designs).
     pub violations: u64,
     pub oom_events: u64,
-    /// Per-GPU memory high-water mark, bytes.
+    /// Per-GPU memory high-water mark, bytes (groups concatenated in
+    /// group order).
     pub mem_high_water: Vec<usize>,
     /// Per-GPU H2D bytes moved.
     pub h2d_bytes: Vec<u64>,
@@ -60,6 +107,8 @@ pub struct SimReport {
     pub wall_secs: f64,
     /// Final virtual time.
     pub sim_end: SimTime,
+    /// Per-group accounting, group order.
+    pub groups: Vec<GroupStats>,
 }
 
 impl SimReport {
@@ -82,8 +131,9 @@ impl SimReport {
     }
 }
 
+/// Group-scoped simulation events (worker indices and model ids are
+/// group-local).
 enum Ev {
-    Arrival { model: ModelId, input_len: usize },
     Deliver { worker: usize, entry: Entry },
     Wake { worker: usize },
     TransferFin { worker: usize, entry_id: EntryId, model: ModelId, dir: LoadDirection },
@@ -98,39 +148,72 @@ enum Ev {
     ChunkAck { entry_id: EntryId, chunk: usize },
 }
 
+/// Cluster events: arrivals are cluster-level (routed to a group when
+/// they pop, so the router sees live state); everything else is scoped
+/// to the group it belongs to.
+enum ClusterEv {
+    /// `model` is the catalog index.
+    Arrival { model: ModelId, input_len: usize },
+    Group { g: usize, ev: Ev },
+}
+
+fn gev(g: usize, ev: Ev) -> ClusterEv {
+    ClusterEv::Group { g, ev }
+}
+
 /// Per-model shard grids: `grids[model][pp_rank][tp_rank]`.
 type ModelShardGrids = Vec<Vec<Vec<ShardManifest>>>;
 /// Per-model, per-stage chunk plans: `plans[model][pp_rank]` is the
 /// layer-granular `ChunkSpec` sequence for that model on that stage.
 type ModelChunkPlans = Vec<Vec<Vec<ChunkSpec>>>;
 
-/// The composed simulator.
-pub struct SimSystem {
-    cfg: SystemConfig,
-    /// Per-catalog-entry architecture specs (`ModelId` indexed). A
-    /// homogeneous catalog repeats one spec; a heterogeneous one gives
-    /// every model its own shard grid, chunk plan, and compute cost.
+/// One model-parallel group: its engine, worker grid, and caches. Model
+/// indices inside a group are local (positions in `models`); the cluster
+/// layer translates to catalog ids at the boundary.
+struct SimGroup {
+    tp: usize,
+    pp: usize,
+    /// Catalog ids hosted, local-index order.
+    models: Vec<ModelId>,
+    /// Per-local-model architecture specs.
     specs: Vec<ModelSpec>,
+    /// Per-local-model scheduler cost constants (also the router's
+    /// swap-cost signal).
+    costs: Vec<ModelCost>,
     engine: Engine,
     workers: Vec<SimWorker>,
-    queue: EventQueue<Ev>,
     batch_acks: HashMap<EntryId, usize>,
-    driver: Driver,
-    closed_sent: usize,
-    /// Memoized stage compute times per (model, batch, seqlen) —
+    /// Memoized stage compute times per (local model, batch, seqlen) —
     /// `stage_time` walks the model's tensor inventory (param_bytes),
     /// which at 644 tensors dominated the event loop before memoization
     /// (§Perf: 47 K events/s → >1 M events/s).
-    compute_cache: HashMap<(ModelId, usize, usize), f64>,
+    compute_cache: HashMap<(usize, usize, usize), f64>,
+    /// DES events attributed to this group.
+    events: u64,
 }
 
-impl SimSystem {
-    pub fn new(cfg: SystemConfig, driver: Driver) -> anyhow::Result<SimSystem> {
-        cfg.validate()?;
-        let specs = cfg.specs()?;
+impl SimGroup {
+    /// Build one group exactly the way the pre-cluster `SimSystem::new`
+    /// built the whole system (same construction order, same engine seed
+    /// for group 0 — the bit-for-bit anchor).
+    fn build(
+        cfg: &SystemConfig,
+        gid: usize,
+        gs: &GroupSpec,
+        catalog_specs: &[ModelSpec],
+        catalog_slos: Option<&[f64]>,
+        catalog_weights: &[f64],
+        worker_base: usize,
+    ) -> anyhow::Result<SimGroup> {
+        let (tp, pp) = (gs.parallel.tp, gs.parallel.pp);
+        let mut link = cfg.hardware.effective_link();
+        if let Some(bw) = gs.link_bandwidth {
+            link.bandwidth = bw;
+        }
+        let gpu_mem = gs.gpu_mem.unwrap_or(cfg.hardware.gpu_mem);
+        let specs: Vec<ModelSpec> =
+            gs.models.iter().map(|&m| catalog_specs[m].clone()).collect();
         let n = specs.len();
-        let (tp, pp) = (cfg.parallel.tp, cfg.parallel.pp);
-        let link = cfg.hardware.effective_link();
         let grids: ModelShardGrids = specs
             .iter()
             .map(|spec| shard_grid(spec, tp, pp))
@@ -169,7 +252,7 @@ impl SimSystem {
         let mut workers = Vec::with_capacity(tp * pp);
         for pp_rank in 0..pp {
             for tp_rank in 0..tp {
-                let gpu = GpuDevice::new(workers.len(), cfg.hardware.gpu_mem, link);
+                let gpu = GpuDevice::new(worker_base + workers.len(), gpu_mem, link);
                 let bytes: Vec<usize> =
                     (0..n).map(|m| grids[m][pp_rank][tp_rank].bytes()).collect();
                 let messages: Vec<usize> =
@@ -184,23 +267,29 @@ impl SimSystem {
                 workers.push(worker);
             }
         }
-        let mut engine = Engine::new(n, tp * pp, pp, cfg.engine, 0x5EED ^ n as u64);
-        if let Some(slos) = cfg.slos() {
-            engine.set_slos(&slos);
+        // Group 0 keeps the legacy seed exactly; further groups perturb
+        // the high bits so replicated groups don't share policy RNG.
+        let seed = (0x5EED ^ n as u64) ^ ((gid as u64) << 32);
+        let mut engine = Engine::new(n, tp * pp, pp, cfg.engine, seed);
+        if let Some(slos) = catalog_slos {
+            let group_slos: Vec<f64> = gs.models.iter().map(|&m| slos[m]).collect();
+            engine.set_slos(&group_slos);
         }
-        engine.set_weights(&cfg.models.weights());
+        let group_weights: Vec<f64> =
+            gs.models.iter().map(|&m| catalog_weights[m]).collect();
+        engine.set_weights(&group_weights);
         // Scheduler cost model from the calibrated substrate, one entry
-        // per catalog model (its OWN shard bytes and tensor counts, not a
-        // fleet constant). The estimate includes the per-tensor α term
-        // and one engine→worker pipe hop each way; the floors are true
-        // lower bounds (pure bandwidth for a cold load; pipe traversal
-        // for execution), which is what makes `shed`'s drops provably
-        // infeasible. Under the chunked pipeline a cold model stops
-        // hurting as soon as its first chunk lands (compute chases the
-        // rest), so that model's swap-cost *estimate* is its
-        // time-to-first-chunk; the floors stay true lower bounds and the
-        // engine flips to the overlapped (max instead of sum) completion
-        // bound per model.
+        // per hosted model (its OWN shard bytes and tensor counts on THIS
+        // group's grid and link, not a fleet constant). The estimate
+        // includes the per-tensor α term and one engine→worker pipe hop
+        // each way; the floors are true lower bounds (pure bandwidth for
+        // a cold load; pipe traversal for execution), which is what makes
+        // `shed`'s drops provably infeasible. Under the chunked pipeline
+        // a cold model stops hurting as soon as its first chunk lands
+        // (compute chases the rest), so that model's swap-cost *estimate*
+        // is its time-to-first-chunk; the floors stay true lower bounds
+        // and the engine flips to the overlapped (max instead of sum)
+        // completion bound per model.
         let costs: Vec<ModelCost> = (0..n)
             .map(|m| {
                 let shard_bytes = grids[m]
@@ -236,31 +325,119 @@ impl SimSystem {
             })
             .collect();
         let exec_floor = (pp + 1) as f64 * cfg.hardware.pipe_latency;
-        engine.set_cost_model(costs, exec_floor);
+        engine.set_cost_model(costs.clone(), exec_floor);
         engine.set_chunks_per_load(chunks_per_model);
-        Ok(SimSystem {
-            cfg,
+        Ok(SimGroup {
+            tp,
+            pp,
+            models: gs.models.clone(),
             specs,
+            costs,
             engine,
             workers,
-            queue: EventQueue::new(),
             batch_acks: HashMap::new(),
+            compute_cache: HashMap::new(),
+            events: 0,
+        })
+    }
+
+    /// Group-local stage-0..pp-1 worker index.
+    fn worker_idx(&self, pp_rank: usize, tp_rank: usize) -> usize {
+        pp_rank * self.tp + tp_rank
+    }
+
+    /// Memoized `ComputeModel::stage_time` lookup (per hosted model —
+    /// heterogeneous models have heterogeneous compute costs).
+    fn stage_time(
+        &mut self,
+        compute: &ComputeModel,
+        model: usize,
+        batch: usize,
+        seqlen: usize,
+    ) -> f64 {
+        let (tp, pp) = (self.tp, self.pp);
+        let spec = &self.specs[model];
+        *self
+            .compute_cache
+            .entry((model, batch, seqlen))
+            .or_insert_with(|| compute.stage_time(spec, tp, pp, batch, seqlen))
+    }
+}
+
+/// The composed cluster simulator. `SimSystem` (the pre-cluster name) is
+/// an alias: a config without a `placement` builds one group on
+/// `SystemConfig::parallel` hosting the whole catalog and behaves
+/// bit-for-bit like the old single-group system.
+pub struct SimCluster {
+    cfg: SystemConfig,
+    groups: Vec<SimGroup>,
+    /// `model_groups[catalog_id]` = (group, local id) for every hosting
+    /// group, in group order — the router's candidate list.
+    model_groups: Vec<Vec<(usize, usize)>>,
+    router: Box<dyn Router>,
+    /// Catalog id of the previous arrival (cluster-wide), for cross-group
+    /// prefetch-predictor sync.
+    last_arrival: Option<ModelId>,
+    queue: EventQueue<ClusterEv>,
+    driver: Driver,
+    closed_sent: usize,
+}
+
+/// The historical name for the single-group deployment; every config
+/// without an explicit `PlacementSpec` still runs through it unchanged.
+pub type SimSystem = SimCluster;
+
+impl SimCluster {
+    pub fn new(cfg: SystemConfig, driver: Driver) -> anyhow::Result<SimCluster> {
+        cfg.validate()?;
+        let placement = cfg.resolved_placement();
+        let catalog_specs = cfg.specs()?;
+        let catalog_slos = cfg.slos();
+        let catalog_weights = cfg.models.weights();
+        let mut groups = Vec::with_capacity(placement.groups.len());
+        let mut worker_base = 0usize;
+        for (gid, gs) in placement.groups.iter().enumerate() {
+            groups.push(SimGroup::build(
+                &cfg,
+                gid,
+                gs,
+                &catalog_specs,
+                catalog_slos.as_deref(),
+                &catalog_weights,
+                worker_base,
+            )?);
+            worker_base += gs.parallel.world();
+        }
+        let mut model_groups: Vec<Vec<(usize, usize)>> =
+            vec![Vec::new(); catalog_specs.len()];
+        for (gid, gs) in placement.groups.iter().enumerate() {
+            for (local, &m) in gs.models.iter().enumerate() {
+                model_groups[m].push((gid, local));
+            }
+        }
+        let router = router::make(placement.router);
+        Ok(SimCluster {
+            cfg,
+            groups,
+            model_groups,
+            router,
+            last_arrival: None,
+            queue: EventQueue::new(),
             driver,
             closed_sent: 0,
-            compute_cache: HashMap::new(),
         })
     }
 
     /// Build a system from the scenario named in `cfg.scenario` (default
     /// `"uniform"`): resolve it in `workload::scenarios`, generate its
-    /// arrival schedule, and preload the first `resident_cap` models (a
-    /// warm server's initial conditions). Returns the system plus the
-    /// measured-window start for latency filtering.
+    /// arrival schedule, and preload each group's first `resident_cap`
+    /// hosted models (a warm server's initial conditions). Returns the
+    /// system plus the measured-window start for latency filtering.
     pub fn from_scenario(
         cfg: SystemConfig,
         duration: f64,
         seed: u64,
-    ) -> anyhow::Result<(SimSystem, f64)> {
+    ) -> anyhow::Result<(SimCluster, f64)> {
         use crate::workload::scenarios::{self, ScenarioParams, WorkloadGen};
         let name = cfg.scenario.clone().unwrap_or_else(|| "uniform".to_string());
         let params = ScenarioParams {
@@ -281,54 +458,89 @@ impl SimSystem {
         })?;
         let arrivals = gen.generate();
         let measure_start = gen.measure_start();
-        let cap = cfg.engine.resident_cap.min(cfg.num_models());
-        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals))?;
-        sys.preload(&(0..cap).collect::<Vec<_>>());
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals))?;
+        sys.preload_warm();
         Ok((sys, measure_start))
     }
 
-    /// Pre-warm models into GPU memory (engine + all workers).
-    pub fn preload(&mut self, models: &[ModelId]) {
-        for &m in models {
-            self.engine.force_resident(m, 0.0);
-            for w in &mut self.workers {
-                w.force_loaded(m);
+    /// Warm-server initial conditions: each group preloads its first
+    /// `resident_cap` hosted models (engine + its workers). For the
+    /// single-group placement this is exactly the old
+    /// `preload(&[0..cap])`.
+    pub fn preload_warm(&mut self) {
+        let cap = self.cfg.engine.resident_cap;
+        for grp in &mut self.groups {
+            let k = cap.min(grp.models.len());
+            for local in 0..k {
+                grp.engine.force_resident(local, 0.0);
+                for w in &mut grp.workers {
+                    w.force_loaded(local);
+                }
             }
         }
     }
 
-    fn worker_idx(&self, pp_rank: usize, tp_rank: usize) -> usize {
-        pp_rank * self.cfg.parallel.tp + tp_rank
+    /// Pre-warm catalog models into GPU memory on *every* group hosting
+    /// them (engine + workers).
+    pub fn preload(&mut self, models: &[ModelId]) {
+        for &m in models {
+            for &(g, local) in &self.model_groups[m] {
+                let grp = &mut self.groups[g];
+                grp.engine.force_resident(local, 0.0);
+                for w in &mut grp.workers {
+                    w.force_loaded(local);
+                }
+            }
+        }
+    }
+
+    /// Number of engine groups.
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// The routing policy in effect.
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
     }
 
     /// Route engine outbox entries into stage-0 pipes (or broadcast).
-    fn route_outbox(&mut self) {
+    fn route_outbox(&mut self, g: usize) {
         let lat = self.cfg.hardware.pipe_latency;
-        let entries = self.engine.drain_outbox();
+        let design = self.cfg.engine.load_design;
+        let entries = self.groups[g].engine.drain_outbox();
+        let tp = self.groups[g].tp;
+        let world = self.groups[g].workers.len();
         for entry in entries {
-            match self.cfg.engine.load_design {
+            match design {
                 LoadDesign::Broadcast if entry.is_load() => {
                     // Fig 2 strawman: every worker gets the load entry
                     // directly, racing any in-flight batch entries.
-                    for w in 0..self.workers.len() {
-                        self.queue.schedule_in(lat, Ev::Deliver { worker: w, entry: entry.clone() });
+                    for w in 0..world {
+                        self.queue.schedule_in(
+                            lat,
+                            gev(g, Ev::Deliver { worker: w, entry: entry.clone() }),
+                        );
                     }
                 }
                 _ => {
-                    for tp_rank in 0..self.cfg.parallel.tp {
-                        let w = self.worker_idx(0, tp_rank);
-                        self.queue.schedule_in(lat, Ev::Deliver { worker: w, entry: entry.clone() });
+                    for tp_rank in 0..tp {
+                        let w = self.groups[g].worker_idx(0, tp_rank);
+                        self.queue.schedule_in(
+                            lat,
+                            gev(g, Ev::Deliver { worker: w, entry: entry.clone() }),
+                        );
                     }
                 }
             }
         }
     }
 
-    fn handle_worker_actions(&mut self, widx: usize, actions: Vec<WorkerAction>) {
+    fn handle_worker_actions(&mut self, g: usize, widx: usize, actions: Vec<WorkerAction>) {
         let now = self.queue.now();
         let lat = self.cfg.hardware.pipe_latency;
-        let (tp, pp) = (self.cfg.parallel.tp, self.cfg.parallel.pp);
-        let pos = self.workers[widx].pos;
+        let pp = self.groups[g].pp;
+        let pos = self.groups[g].workers[widx].pos;
         for action in actions {
             match action {
                 WorkerAction::Forward { entry, at } => {
@@ -338,7 +550,7 @@ impl SimSystem {
                         (Entry::Batch(b), true) => {
                             // Last stage returns output to the engine.
                             self.queue
-                                .schedule_at(at + lat, Ev::BatchReturn { entry_id: b.id });
+                                .schedule_at(at + lat, gev(g, Ev::BatchReturn { entry_id: b.id }));
                         }
                         (Entry::Load(_), true) => {
                             // Load entries terminate at the last stage; the
@@ -352,90 +564,146 @@ impl SimSystem {
                             {
                                 continue;
                             }
-                            let next = self.worker_idx(pos.pp_rank + 1, pos.tp_rank);
-                            self.queue.schedule_at(at + lat, Ev::Deliver { worker: next, entry });
+                            let next =
+                                self.groups[g].worker_idx(pos.pp_rank + 1, pos.tp_rank);
+                            self.queue
+                                .schedule_at(at + lat, gev(g, Ev::Deliver { worker: next, entry }));
                         }
                     }
                 }
                 WorkerAction::BatchOutput { entry_id, at } => {
-                    self.queue.schedule_at(at + lat, Ev::BatchReturn { entry_id });
+                    self.queue.schedule_at(at + lat, gev(g, Ev::BatchReturn { entry_id }));
                 }
                 WorkerAction::TransferDone { entry_id, model, dir, at } => {
                     self.queue.schedule_at(
                         at,
-                        Ev::TransferFin { worker: widx, entry_id, model, dir },
+                        gev(g, Ev::TransferFin { worker: widx, entry_id, model, dir }),
                     );
                 }
                 WorkerAction::ChunkDone { entry_id, model, dir, at } => {
                     self.queue.schedule_at(
                         at,
-                        Ev::ChunkFin { worker: widx, entry_id, model, dir },
+                        gev(g, Ev::ChunkFin { worker: widx, entry_id, model, dir }),
                     );
                 }
             }
         }
         // Keep the worker loop turning.
-        let w = &self.workers[widx];
-        if !w.inbox.is_empty() {
-            let at = w.busy_until.max(now);
-            self.queue.schedule_at(at, Ev::Wake { worker: widx });
+        let w = &self.groups[g].workers[widx];
+        let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
+        if !inbox_empty {
+            let at = busy_until.max(now);
+            self.queue.schedule_at(at, gev(g, Ev::Wake { worker: widx }));
         }
-        let _ = tp;
     }
 
-    /// Memoized `ComputeModel::stage_time` lookup (per catalog entry —
-    /// heterogeneous models have heterogeneous compute costs).
-    fn stage_time(&mut self, model: ModelId, batch: usize, seqlen: usize) -> f64 {
-        let (tp, pp) = (self.cfg.parallel.tp, self.cfg.parallel.pp);
-        let spec = &self.specs[model];
-        let compute = &self.cfg.hardware.compute;
-        *self
-            .compute_cache
-            .entry((model, batch, seqlen))
-            .or_insert_with(|| compute.stage_time(spec, tp, pp, batch, seqlen))
-    }
-
-    fn wake_worker(&mut self, widx: usize) {
+    fn wake_worker(&mut self, g: usize, widx: usize) {
         let now = self.queue.now();
         let dispatch = self.cfg.hardware.dispatch_overhead;
         let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
         // Pre-resolve the compute time for the entry at the head of the
         // inbox (if it is a batch) so the step closure is allocation-free.
-        let head_cost = match self.workers[widx].inbox.front() {
-            Some(Entry::Batch(b)) => {
-                let (m, bs, sl) = (b.model, b.batch_size(), b.seqlen);
-                self.stage_time(m, bs, sl)
-            }
-            _ => 0.0,
+        let head = match self.groups[g].workers[widx].inbox.front() {
+            Some(Entry::Batch(b)) => Some((b.model, b.batch_size(), b.seqlen)),
+            _ => None,
         };
-        let actions = self.workers[widx].step(now, |_| head_cost, dispatch, sync_loads);
+        let head_cost = match head {
+            Some((m, bs, sl)) => {
+                let compute = self.cfg.hardware.compute;
+                self.groups[g].stage_time(&compute, m, bs, sl)
+            }
+            None => 0.0,
+        };
+        let actions = self.groups[g].workers[widx].step(now, |_| head_cost, dispatch, sync_loads);
         if let Some(actions) = actions {
-            self.handle_worker_actions(widx, actions);
-        } else if !self.workers[widx].inbox.is_empty()
-            && self.workers[widx].busy_until > now
-        {
-            // Busy: try again when free.
-            let at = self.workers[widx].busy_until;
-            self.queue.schedule_at(at, Ev::Wake { worker: widx });
+            self.handle_worker_actions(g, widx, actions);
+        } else {
+            let w = &self.groups[g].workers[widx];
+            let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
+            if !inbox_empty && busy_until > now {
+                // Busy: try again when free.
+                self.queue.schedule_at(busy_until, gev(g, Ev::Wake { worker: widx }));
+            }
         }
+    }
+
+    /// Pick the destination group for one arrival of catalog `model`.
+    fn route_arrival(&mut self, model: ModelId) -> usize {
+        let hosts = &self.model_groups[model];
+        if hosts.len() == 1 {
+            // Single replica: no choice to make (and no router state to
+            // advance) — the single-group fast path.
+            return hosts[0].0;
+        }
+        let mut views = Vec::with_capacity(hosts.len());
+        for &(g, local) in hosts {
+            let grp = &self.groups[g];
+            views.push(GroupView {
+                group: g,
+                queue_cost: (grp.engine.queued_total() + grp.engine.inflight_batches()) as f64,
+                residency: grp.engine.residency(local),
+                swap_cost: grp.costs[local].swap_cost,
+            });
+        }
+        self.router.route(model, &views)
+    }
+
+    /// Dispatch one arrival: route it, sync the other hosting groups'
+    /// prefetch predictors with the global transition, and feed the
+    /// routed group's engine.
+    fn on_arrival(&mut self, now: f64, model: ModelId, input_len: usize) {
+        let g = self.route_arrival(model);
+        // Cross-group predictor sync (DESIGN.md §8): each group's engine
+        // observes only the arrivals routed to it, so the global
+        // `prev → model` transition is injected into every *other* group
+        // hosting both endpoints (translated to its local ids). The
+        // routed group records the transition through its own
+        // `on_request` observation chain; in a single-group deployment
+        // this loop never fires — bit-for-bit legacy behaviour.
+        if let Some(prev) = self.last_arrival {
+            for &(h, local_next) in &self.model_groups[model] {
+                if h == g {
+                    continue;
+                }
+                let local_prev = self.model_groups[prev]
+                    .iter()
+                    .find(|&&(hg, _)| hg == h)
+                    .map(|&(_, l)| l);
+                if let Some(lp) = local_prev {
+                    self.groups[h].engine.observe_external_transition(lp, local_next);
+                }
+            }
+        }
+        self.last_arrival = Some(model);
+        let local = self.model_groups[model]
+            .iter()
+            .find(|&&(hg, _)| hg == g)
+            .map(|&(_, l)| l)
+            .expect("router picked a group that does not host the model");
+        self.groups[g].events += 1;
+        self.groups[g].engine.on_request(now, local, input_len);
+        self.route_outbox(g);
     }
 
     fn drive_closed_loop_next(&mut self) {
         if let Driver::AlternatingBlocking { models, input_len, total } = self.driver {
             if self.closed_sent < total {
                 let model = self.closed_sent % models;
-                let input_len = input_len;
                 self.closed_sent += 1;
-                self.queue.schedule_in(0.0, Ev::Arrival { model, input_len });
+                self.queue.schedule_in(0.0, ClusterEv::Arrival { model, input_len });
             }
         }
+    }
+
+    fn dropped_total(&self) -> usize {
+        self.groups.iter().map(|grp| grp.engine.dropped_count()).sum()
     }
 
     /// A dropped request never produces a completion ack, so the closed
     /// loop must advance once per drop recorded since `before` or it
     /// would wait forever on the shed request.
     fn drive_closed_loop_for_drops(&mut self, before: usize) {
-        for _ in before..self.engine.dropped_count() {
+        for _ in before..self.dropped_total() {
             self.drive_closed_loop_next();
         }
     }
@@ -450,104 +718,199 @@ impl SimSystem {
             Driver::AlternatingBlocking { .. } => Vec::new(),
         };
         for a in arrivals {
-            self.queue.schedule_at(a.at, Ev::Arrival { model: a.model, input_len: a.input_len });
+            self.queue
+                .schedule_at(a.at, ClusterEv::Arrival { model: a.model, input_len: a.input_len });
         }
         if matches!(self.driver, Driver::AlternatingBlocking { .. }) {
             self.drive_closed_loop_next();
         }
 
-        while let Some((now, ev)) = self.queue.pop() {
-            let drops_before = self.engine.dropped_count();
-            match ev {
-                Ev::Arrival { model, input_len } => {
-                    self.engine.on_request(now, model, input_len);
-                    self.route_outbox();
+        while let Some((now, cev)) = self.queue.pop() {
+            let drops_before = self.dropped_total();
+            match cev {
+                ClusterEv::Arrival { model, input_len } => {
+                    self.on_arrival(now, model, input_len);
                 }
-                Ev::Deliver { worker, entry } => {
-                    self.workers[worker].deliver(entry);
-                    self.wake_worker(worker);
-                }
-                Ev::Wake { worker } => {
-                    self.wake_worker(worker);
-                }
-                Ev::TransferFin { worker, entry_id, model, dir } => {
-                    self.workers[worker].on_transfer_done(model, dir);
-                    self.queue.schedule_in(
-                        self.cfg.hardware.pipe_latency,
-                        Ev::LoadAck { entry_id },
-                    );
-                }
-                Ev::ChunkFin { worker, entry_id, model, dir } => {
-                    match self.workers[worker].on_chunk_fin(now, model) {
-                        ChunkOutcome::Next { done_chunk, at } => {
-                            self.queue
-                                .schedule_at(at, Ev::ChunkFin { worker, entry_id, model, dir });
-                            if dir == LoadDirection::Load {
-                                self.queue.schedule_in(
-                                    self.cfg.hardware.pipe_latency,
-                                    Ev::ChunkAck { entry_id, chunk: done_chunk },
-                                );
+                ClusterEv::Group { g, ev } => {
+                    self.groups[g].events += 1;
+                    match ev {
+                        Ev::Deliver { worker, entry } => {
+                            self.groups[g].workers[worker].deliver(entry);
+                            self.wake_worker(g, worker);
+                        }
+                        Ev::Wake { worker } => {
+                            self.wake_worker(g, worker);
+                        }
+                        Ev::TransferFin { worker, entry_id, model, dir } => {
+                            self.groups[g].workers[worker].on_transfer_done(model, dir);
+                            self.queue.schedule_in(
+                                self.cfg.hardware.pipe_latency,
+                                gev(g, Ev::LoadAck { entry_id }),
+                            );
+                        }
+                        Ev::ChunkFin { worker, entry_id, model, dir } => {
+                            match self.groups[g].workers[worker].on_chunk_fin(now, model) {
+                                ChunkOutcome::Next { done_chunk, at } => {
+                                    self.queue.schedule_at(
+                                        at,
+                                        gev(g, Ev::ChunkFin { worker, entry_id, model, dir }),
+                                    );
+                                    if dir == LoadDirection::Load {
+                                        self.queue.schedule_in(
+                                            self.cfg.hardware.pipe_latency,
+                                            gev(g, Ev::ChunkAck { entry_id, chunk: done_chunk }),
+                                        );
+                                    }
+                                }
+                                // The final chunk acks as the load entry itself.
+                                ChunkOutcome::Finished => {
+                                    self.queue.schedule_in(
+                                        self.cfg.hardware.pipe_latency,
+                                        gev(g, Ev::LoadAck { entry_id }),
+                                    );
+                                }
+                                ChunkOutcome::Cancelled { cancel_entry } => {
+                                    self.queue.schedule_in(
+                                        self.cfg.hardware.pipe_latency,
+                                        gev(g, Ev::LoadAck { entry_id: cancel_entry }),
+                                    );
+                                }
                             }
                         }
-                        // The final chunk acks as the load entry itself.
-                        ChunkOutcome::Finished => {
-                            self.queue.schedule_in(
-                                self.cfg.hardware.pipe_latency,
-                                Ev::LoadAck { entry_id },
-                            );
+                        Ev::ChunkAck { entry_id, chunk } => {
+                            self.groups[g].engine.on_chunk_ack(now, entry_id, chunk);
                         }
-                        ChunkOutcome::Cancelled { cancel_entry } => {
-                            self.queue.schedule_in(
-                                self.cfg.hardware.pipe_latency,
-                                Ev::LoadAck { entry_id: cancel_entry },
-                            );
+                        Ev::LoadAck { entry_id } => {
+                            self.groups[g].engine.on_load_ack(now, entry_id);
+                            self.route_outbox(g);
                         }
-                    }
-                }
-                Ev::ChunkAck { entry_id, chunk } => {
-                    self.engine.on_chunk_ack(now, entry_id, chunk);
-                }
-                Ev::LoadAck { entry_id } => {
-                    self.engine.on_load_ack(now, entry_id);
-                    self.route_outbox();
-                }
-                Ev::BatchReturn { entry_id } => {
-                    let acks = self.batch_acks.entry(entry_id).or_insert(0);
-                    *acks += 1;
-                    if *acks == self.cfg.parallel.tp {
-                        self.batch_acks.remove(&entry_id);
-                        self.engine.on_batch_done(now, entry_id);
-                        self.route_outbox();
-                        self.drive_closed_loop_next();
+                        Ev::BatchReturn { entry_id } => {
+                            let tp = self.groups[g].tp;
+                            let acks = self.groups[g].batch_acks.entry(entry_id).or_insert(0);
+                            *acks += 1;
+                            let full = *acks == tp;
+                            if full {
+                                self.groups[g].batch_acks.remove(&entry_id);
+                                self.groups[g].engine.on_batch_done(now, entry_id);
+                                self.route_outbox(g);
+                                self.drive_closed_loop_next();
+                            }
+                        }
                     }
                 }
             }
             self.drive_closed_loop_for_drops(drops_before);
         }
 
-        debug_assert!(self.engine.idle(), "simulation drained with engine non-idle");
-        let mut engine = self.engine;
+        debug_assert!(
+            self.groups.iter().all(|grp| grp.engine.idle()),
+            "simulation drained with an engine non-idle"
+        );
+        let events = self.queue.processed();
+        let sim_end = self.queue.now();
+
+        // Per-group accounting + catalog-id remapping at the boundary.
+        let single = self.groups.len() == 1;
+        let mut group_stats = Vec::with_capacity(self.groups.len());
+        let mut per_group_requests = Vec::with_capacity(self.groups.len());
+        let mut per_group_drops = Vec::with_capacity(self.groups.len());
+        let mut per_group_swaps = Vec::with_capacity(self.groups.len());
+        for (gid, grp) in self.groups.iter_mut().enumerate() {
+            let mut requests = grp.engine.take_completed();
+            let mut drops = grp.engine.take_dropped();
+            let mut swaps = grp.engine.take_swap_records();
+            for r in &mut requests {
+                r.model = grp.models[r.model];
+                r.group = gid;
+            }
+            for d in &mut drops {
+                d.model = grp.models[d.model];
+                d.group = gid;
+            }
+            for s in &mut swaps {
+                s.load_model = grp.models[s.load_model];
+                s.victim = s.victim.map(|v| grp.models[v]);
+                s.group = gid;
+            }
+            let completed_swaps = swaps.iter().filter(|s| !s.cancelled).count();
+            let swap_bytes: u64 =
+                swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum();
+            group_stats.push(GroupStats {
+                group: gid,
+                tp: grp.tp,
+                pp: grp.pp,
+                models: grp.models.clone(),
+                requests: requests.len(),
+                drops: drops.len(),
+                swaps: completed_swaps,
+                swap_bytes,
+                swap_stats: grp.engine.swap_stats(),
+                events: grp.events,
+                violations: grp.workers.iter().map(|w| w.violations).sum(),
+                oom_events: grp.workers.iter().map(|w| w.oom_events).sum(),
+                mem_high_water: grp.workers.iter().map(|w| w.gpu.mem.high_water()).collect(),
+                h2d_bytes: grp
+                    .workers
+                    .iter()
+                    .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::H2D))
+                    .collect(),
+                d2h_bytes: grp
+                    .workers
+                    .iter()
+                    .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::D2H))
+                    .collect(),
+            });
+            per_group_requests.push(requests);
+            per_group_drops.push(drops);
+            per_group_swaps.push(swaps);
+        }
+        // Flat record vectors: the single group passes through untouched
+        // (the bit-for-bit path); multiple groups merge by completion
+        // time. Each group's vector is already non-decreasing in its sort
+        // key (records are pushed at monotonically increasing event
+        // times), so the stable sort is a deterministic k-way merge that
+        // preserves per-group order.
+        let (requests, drops, swaps) = if single {
+            (
+                per_group_requests.pop().unwrap(),
+                per_group_drops.pop().unwrap(),
+                per_group_swaps.pop().unwrap(),
+            )
+        } else {
+            let mut r: Vec<RequestRecord> = per_group_requests.into_iter().flatten().collect();
+            r.sort_by(|a, b| a.done.total_cmp(&b.done));
+            let mut d: Vec<DropRecord> = per_group_drops.into_iter().flatten().collect();
+            d.sort_by(|a, b| a.dropped_at.total_cmp(&b.dropped_at));
+            let mut s: Vec<SwapRecord> = per_group_swaps.into_iter().flatten().collect();
+            s.sort_by(|a, b| a.completed.total_cmp(&b.completed));
+            (r, d, s)
+        };
+        let swap_stats = group_stats.iter().fold(SwapStats::default(), |mut acc, gs| {
+            acc.loads_started += gs.swap_stats.loads_started;
+            acc.offloads_started += gs.swap_stats.offloads_started;
+            acc.loads_completed += gs.swap_stats.loads_completed;
+            acc.offloads_completed += gs.swap_stats.offloads_completed;
+            acc.loads_cancelled += gs.swap_stats.loads_cancelled;
+            acc.blocked += gs.swap_stats.blocked;
+            acc
+        });
         SimReport {
-            requests: engine.take_completed(),
-            drops: engine.take_dropped(),
-            swaps: engine.take_swap_records(),
-            swap_stats: engine.swap_stats(),
-            violations: self.workers.iter().map(|w| w.violations).sum(),
-            oom_events: self.workers.iter().map(|w| w.oom_events).sum(),
-            mem_high_water: self.workers.iter().map(|w| w.gpu.mem.high_water()).collect(),
-            h2d_bytes: self
-                .workers
+            requests,
+            drops,
+            swaps,
+            swap_stats,
+            violations: group_stats.iter().map(|gs| gs.violations).sum(),
+            oom_events: group_stats.iter().map(|gs| gs.oom_events).sum(),
+            mem_high_water: group_stats
                 .iter()
-                .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::H2D))
+                .flat_map(|gs| gs.mem_high_water.iter().copied())
                 .collect(),
-            d2h_bytes: self
-                .workers
-                .iter()
-                .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::D2H))
-                .collect(),
-            events: self.queue.processed(),
+            h2d_bytes: group_stats.iter().flat_map(|gs| gs.h2d_bytes.iter().copied()).collect(),
+            d2h_bytes: group_stats.iter().flat_map(|gs| gs.d2h_bytes.iter().copied()).collect(),
+            events,
             wall_secs: wall_start.elapsed().as_secs_f64(),
-            sim_end: self.queue.now(),
+            sim_end,
+            groups: group_stats,
         }
     }
 }
@@ -555,7 +918,7 @@ impl SimSystem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SystemConfig;
+    use crate::config::{PlacementSpec, RouterKind, SystemConfig};
 
     fn swap_cfg(tp: usize, pp: usize) -> SystemConfig {
         SystemConfig::swap_experiment(tp, pp)
@@ -880,5 +1243,136 @@ mod tests {
         let s = a.swap_stats;
         assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled);
         assert_eq!(s.offloads_started, s.offloads_completed);
+    }
+
+    // ----- multi-group cluster tests (DESIGN.md §8) -----
+
+    /// A 2-group replicated deployment of the §5.2 fleet.
+    fn replicated_cfg(g: usize, router: RouterKind) -> SystemConfig {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.placement = Some(PlacementSpec::replicated(g, cfg.parallel, 3, router));
+        cfg
+    }
+
+    #[test]
+    fn single_group_report_carries_group_stats() {
+        let report = run_swap(2, 2, 6);
+        assert_eq!(report.groups.len(), 1);
+        let g = &report.groups[0];
+        assert_eq!((g.group, g.tp, g.pp), (0, 2, 2));
+        assert_eq!(g.models, vec![0, 1]);
+        assert_eq!(g.requests, report.requests.len());
+        assert_eq!(g.drops, 0);
+        assert_eq!(g.swaps, report.swaps.iter().filter(|s| !s.cancelled).count());
+        assert_eq!(g.swap_stats, report.swap_stats);
+        assert_eq!(g.events, report.events, "every event belongs to the one group");
+        assert_eq!(g.h2d_bytes, report.h2d_bytes);
+        assert_eq!(g.mem_high_water, report.mem_high_water);
+        let bytes: u64 =
+            report.swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum();
+        assert_eq!(g.swap_bytes, bytes);
+        // Every record is tagged with the one group.
+        assert!(report.requests.iter().all(|r| r.group == 0));
+        assert!(report.swaps.iter().all(|s| s.group == 0));
+    }
+
+    #[test]
+    fn round_robin_splits_a_replicated_model_across_groups() {
+        // 2 groups, each hosting all 3 models; round-robin must alternate
+        // every model's arrivals between the groups.
+        let cfg = replicated_cfg(2, RouterKind::RoundRobin);
+        let arrivals: Vec<Arrival> = (0..24)
+            .map(|i| Arrival { at: 0.5 * i as f64, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        assert_eq!(sys.num_groups(), 2);
+        assert_eq!(sys.router_name(), "round-robin");
+        sys.preload_warm();
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 24);
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+        assert_eq!(report.groups.len(), 2);
+        // Perfect split: 8 arrivals per model, alternating -> 4+4 each.
+        assert_eq!(report.groups[0].requests, 12);
+        assert_eq!(report.groups[1].requests, 12);
+        // Group tags partition the flat records consistently.
+        for g in 0..2 {
+            assert_eq!(
+                report.requests.iter().filter(|r| r.group == g).count(),
+                report.groups[g].requests
+            );
+        }
+        // Records carry catalog model ids (0..3), not local ids beyond.
+        assert!(report.requests.iter().all(|r| r.model < 3));
+    }
+
+    #[test]
+    fn resident_affinity_routes_to_the_warm_replica() {
+        let cfg = replicated_cfg(2, RouterKind::ResidentAffinity);
+        let arrivals: Vec<Arrival> =
+            (0..10).map(|i| Arrival { at: 0.7 * i as f64, model: 0, input_len: 8 }).collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        // Warm model 0 on both groups (it is replicated), so affinity has
+        // warm candidates; all its traffic must then avoid swaps
+        // entirely.
+        sys.preload(&[0]);
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 10);
+        assert_eq!(report.swaps.len(), 0, "warm replicas mean no swap-ins at all");
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+    }
+
+    #[test]
+    fn multi_group_runs_are_deterministic() {
+        let run = || {
+            let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+            cfg.scenario = Some("bursty".into());
+            let (sys, _) = SimCluster::from_scenario(cfg, 8.0, 11).unwrap();
+            sys.run()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.swaps, b.swaps);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.groups.len(), b.groups.len());
+        for (x, y) in a.groups.iter().zip(&b.groups) {
+            assert_eq!(x.requests, y.requests);
+            assert_eq!(x.swap_bytes, y.swap_bytes);
+            assert_eq!(x.events, y.events);
+        }
+        // Per-group events sum to the cluster total.
+        assert_eq!(a.groups.iter().map(|g| g.events).sum::<u64>(), a.events);
+    }
+
+    #[test]
+    fn partitioned_placement_routes_each_model_to_its_only_host() {
+        // Group 0 hosts {0, 1}, group 1 hosts {2}: no replication, so
+        // every arrival has exactly one destination no matter the router.
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.placement = Some(crate::config::PlacementSpec {
+            router: RouterKind::LeastLoaded,
+            groups: vec![
+                crate::config::GroupSpec::new(cfg.parallel, vec![0, 1]),
+                crate::config::GroupSpec::new(cfg.parallel, vec![2]),
+            ],
+        });
+        let arrivals: Vec<Arrival> = (0..18)
+            .map(|i| Arrival { at: 0.4 * i as f64, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload_warm();
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 18);
+        assert_eq!(report.groups[0].requests, 12, "models 0 and 1 live on group 0");
+        assert_eq!(report.groups[1].requests, 6, "model 2 lives on group 1");
+        assert!(report
+            .requests
+            .iter()
+            .all(|r| (r.group == 0) == (r.model < 2)), "records keep catalog ids + group tags");
+        // Group 1 hosts one model: after its preload it never swaps.
+        assert_eq!(report.groups[1].swaps, 0);
     }
 }

@@ -1,0 +1,223 @@
+//! Cluster-layer equivalence pins (DESIGN.md §8):
+//!
+//! 1. **Single-group equivalence** — a `G = 1` `PlacementSpec` (any
+//!    router) reproduces the legacy no-placement `SimSystem` runs
+//!    bit-for-bit: same `RequestRecord`s, `SwapRecord`s, `DropRecord`s,
+//!    event counts, memory marks, and link traffic, across the full
+//!    scenario registry, for both the `Async` and `ChunkedPipelined`
+//!    load designs, open and closed loop.
+//! 2. **Group accounting** — multi-group runs conserve everything: per
+//!    group tags partition the flat records, per-group aggregates match
+//!    the tagged records, and completions + drops cover every arrival.
+
+use computron::config::{
+    LoadDesign, PlacementSpec, RouterKind, SchedulerKind, SystemConfig,
+};
+use computron::coordinator::router;
+use computron::sim::{Driver, SimReport, SimSystem};
+use computron::workload::scenarios;
+
+fn base_cfg(design: LoadDesign) -> SystemConfig {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.engine.load_design = design;
+    cfg
+}
+
+fn run_scenario(cfg: SystemConfig, name: &str, duration: f64) -> SimReport {
+    let mut cfg = cfg;
+    cfg.scenario = Some(name.to_string());
+    let (sys, _) = SimSystem::from_scenario(cfg, duration, 0xC1_0572).unwrap();
+    sys.run()
+}
+
+fn assert_bit_identical(tag: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.requests, b.requests, "{tag}: request records diverged");
+    assert_eq!(a.swaps, b.swaps, "{tag}: swap records diverged");
+    assert_eq!(a.drops, b.drops, "{tag}: drop records diverged");
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.mem_high_water, b.mem_high_water, "{tag}: memory diverged");
+    assert_eq!(a.h2d_bytes, b.h2d_bytes, "{tag}: H2D traffic diverged");
+    assert_eq!(a.d2h_bytes, b.d2h_bytes, "{tag}: D2H traffic diverged");
+    assert_eq!(a.swap_stats, b.swap_stats, "{tag}: swap stats diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{tag}: end times diverged");
+}
+
+#[test]
+fn g1_placement_reproduces_legacy_open_loop_bit_for_bit() {
+    // The acceptance anchor: an explicit single-group placement — under
+    // EVERY router, since one group leaves nothing to route — must be
+    // indistinguishable from the legacy no-placement system on every
+    // scenario, for both load designs.
+    for design in [LoadDesign::AsyncPipelined, LoadDesign::ChunkedPipelined] {
+        for &name in scenarios::names() {
+            let legacy = run_scenario(base_cfg(design), name, 6.0);
+            for &kind in router::KINDS.iter() {
+                let mut cfg = base_cfg(design);
+                cfg.placement =
+                    Some(PlacementSpec::replicated(1, cfg.parallel, 3, kind));
+                let explicit = run_scenario(cfg, name, 6.0);
+                let tag = format!("{name}/{}/{}", design.name(), kind.name());
+                assert_bit_identical(&tag, &legacy, &explicit);
+            }
+        }
+    }
+}
+
+#[test]
+fn g1_placement_reproduces_legacy_closed_loop_bit_for_bit() {
+    // §5.1 alternating-blocking worst case across grid shapes.
+    for (tp, pp) in [(1usize, 1usize), (2, 2), (1, 4)] {
+        for design in [LoadDesign::AsyncPipelined, LoadDesign::ChunkedPipelined] {
+            let run = |placed: bool| {
+                let mut cfg = SystemConfig::swap_experiment(tp, pp);
+                cfg.engine.load_design = design;
+                if placed {
+                    cfg.placement = Some(PlacementSpec::replicated(
+                        1,
+                        cfg.parallel,
+                        2,
+                        RouterKind::ResidentAffinity,
+                    ));
+                }
+                let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+                    models: 2,
+                    input_len: 2,
+                    total: 8,
+                })
+                .unwrap();
+                sys.preload(&[1]);
+                sys.run()
+            };
+            let tag = format!("tp{tp}pp{pp}/{}", design.name());
+            assert_bit_identical(&tag, &run(false), &run(true));
+        }
+    }
+}
+
+#[test]
+fn g1_placement_reproduces_legacy_with_slos_and_shed() {
+    // Admission control must survive the placement path too: drops and
+    // deadlines identical.
+    for &name in scenarios::names() {
+        let mk = |placed: bool| {
+            let mut cfg = SystemConfig::workload_experiment(3, 1, 4);
+            cfg.engine.scheduler = SchedulerKind::Shed;
+            cfg.set_slos(&[0.6, 0.6, 0.6]).unwrap();
+            if placed {
+                cfg.placement =
+                    Some(PlacementSpec::replicated(1, cfg.parallel, 3, RouterKind::LeastLoaded));
+            }
+            cfg
+        };
+        let legacy = run_scenario(mk(false), name, 6.0);
+        let explicit = run_scenario(mk(true), name, 6.0);
+        assert_bit_identical(&format!("{name}/shed"), &legacy, &explicit);
+        assert!(
+            legacy.requests.len() + legacy.drops.len() > 0,
+            "{name}: scenario generated no traffic"
+        );
+    }
+}
+
+#[test]
+fn multi_group_runs_conserve_all_accounting() {
+    // G = 2 and G = 3 replicated placements under every router, across
+    // the registry: engine invariants hold, group tags partition the
+    // records, and the per-group aggregates match the tagged records.
+    for &g in &[2usize, 3] {
+        for &kind in router::KINDS.iter() {
+            for &name in scenarios::names() {
+                let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+                cfg.placement = Some(PlacementSpec::replicated(g, cfg.parallel, 3, kind));
+                let report = run_scenario(cfg, name, 5.0);
+                let tag = format!("{name}/G={g}/{}", kind.name());
+                assert_eq!(report.violations, 0, "{tag}");
+                assert_eq!(report.oom_events, 0, "{tag}");
+                assert!(report.drops.is_empty(), "{tag}: fcfs never drops");
+                assert_eq!(report.groups.len(), g, "{tag}");
+                let s = report.swap_stats;
+                assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled, "{tag}");
+                assert_eq!(s.offloads_started, s.offloads_completed, "{tag}");
+                let mut tagged_requests = 0;
+                let mut tagged_swaps = 0;
+                for gs in &report.groups {
+                    let reqs =
+                        report.requests.iter().filter(|r| r.group == gs.group).count();
+                    assert_eq!(reqs, gs.requests, "{tag}: group {} requests", gs.group);
+                    let swaps = report
+                        .swaps
+                        .iter()
+                        .filter(|sw| sw.group == gs.group && !sw.cancelled)
+                        .count();
+                    assert_eq!(swaps, gs.swaps, "{tag}: group {} swaps", gs.group);
+                    let bytes: u64 = report
+                        .swaps
+                        .iter()
+                        .filter(|sw| sw.group == gs.group && !sw.cancelled)
+                        .map(|sw| sw.bytes as u64)
+                        .sum();
+                    assert_eq!(bytes, gs.swap_bytes, "{tag}: group {} swap bytes", gs.group);
+                    tagged_requests += reqs;
+                    tagged_swaps += swaps;
+                    // Worker-series lengths match the group's grid.
+                    assert_eq!(gs.h2d_bytes.len(), gs.tp * gs.pp, "{tag}");
+                }
+                assert_eq!(tagged_requests, report.requests.len(), "{tag}: tags partition");
+                assert_eq!(
+                    tagged_swaps,
+                    report.swaps.iter().filter(|sw| !sw.cancelled).count(),
+                    "{tag}"
+                );
+                assert_eq!(
+                    report.groups.iter().map(|gs| gs.events).sum::<u64>(),
+                    report.events,
+                    "{tag}: per-group events sum to the cluster total"
+                );
+                // Flat per-GPU series concatenate the groups' series.
+                assert_eq!(
+                    report.h2d_bytes.len(),
+                    report.groups.iter().map(|gs| gs.h2d_bytes.len()).sum::<usize>(),
+                    "{tag}"
+                );
+                // Every model got served (replication never strands one).
+                for m in 0..3 {
+                    assert!(
+                        report.requests.iter().any(|r| r.model == m),
+                        "{tag}: model {m} starved"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_grids_per_group() {
+    // A placement may give each group its own grid: model 2 on a private
+    // TP=1 PP=1 group with less memory, models 0/1 on the shared 2x2
+    // grid. Everything still drains and the per-group worker series
+    // reflect the per-group world sizes.
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.placement = Some(PlacementSpec {
+        router: RouterKind::LeastLoaded,
+        groups: vec![
+            computron::config::GroupSpec::new(cfg.parallel, vec![0, 1]),
+            computron::config::GroupSpec {
+                parallel: computron::config::ParallelConfig::new(1, 1),
+                models: vec![2],
+                gpu_mem: Some(30_000_000_000),
+                link_bandwidth: Some(16.0e9),
+            },
+        ],
+    });
+    let report = run_scenario(cfg, "uniform", 5.0);
+    assert_eq!(report.violations, 0);
+    assert_eq!(report.oom_events, 0);
+    assert_eq!(report.groups.len(), 2);
+    assert_eq!(report.groups[0].h2d_bytes.len(), 4, "2x2 grid");
+    assert_eq!(report.groups[1].h2d_bytes.len(), 1, "1x1 grid");
+    assert_eq!(report.h2d_bytes.len(), 5, "flat series concatenates 4 + 1");
+    // Model 2's single host serves all of its traffic.
+    assert!(report.requests.iter().filter(|r| r.model == 2).all(|r| r.group == 1));
+    assert!(report.requests.iter().filter(|r| r.model < 2).all(|r| r.group == 0));
+}

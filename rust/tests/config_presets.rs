@@ -40,6 +40,7 @@ fn every_shipped_preset_parses_and_validates() {
         "slo_3model.json",
         "chunked_3model.json",
         "hetero_4model.json",
+        "groups_2x2.json",
     ] {
         assert!(seen.iter().any(|n| n == required), "missing preset {required} (have {seen:?})");
     }
@@ -120,4 +121,26 @@ fn legacy_json_round_trips_through_the_catalog_shim() {
     )
     .unwrap();
     assert!(SystemConfig::from_json(&bad).is_err());
+}
+
+#[test]
+fn groups_preset_resolves_expected_placement() {
+    let cfg = SystemConfig::from_file(&configs_dir().join("groups_2x2.json")).unwrap();
+    assert_eq!(cfg.num_models(), 4);
+    let p = cfg.placement.as_ref().expect("groups preset carries a placement");
+    assert_eq!(p.router, computron::config::RouterKind::ResidentAffinity);
+    assert_eq!(p.groups.len(), 2);
+    for g in &p.groups {
+        // Groups inherit the top-level grid and replicate the catalog.
+        assert_eq!((g.parallel.tp, g.parallel.pp), (2, 2));
+        assert_eq!(g.models, vec![0, 1, 2, 3]);
+        assert_eq!(g.gpu_mem, None);
+    }
+    assert_eq!(p.world(), 8, "2 groups x 4 GPUs");
+    assert_eq!(p.groups_for(3), vec![0, 1], "every model is replicated");
+    assert_eq!(cfg.scenario.as_deref(), Some("zipf"));
+    // The preset builds a 2-group simulator directly.
+    let (sys, _) = computron::sim::SimCluster::from_scenario(cfg, 2.0, 7).unwrap();
+    assert_eq!(sys.num_groups(), 2);
+    assert_eq!(sys.router_name(), "resident-affinity");
 }

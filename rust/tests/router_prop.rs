@@ -1,0 +1,215 @@
+//! Router-policy property tests (ISSUE 5 satellite; DESIGN.md §8):
+//!
+//! - **round-robin fairness** — over any run of arrivals, one model's
+//!   per-group counts differ by at most one;
+//! - **least-loaded frugality** — the chosen group is never strictly
+//!   costlier than another candidate;
+//! - **resident-affinity warmth** — a new swap is never triggered while
+//!   a Resident/PartiallyResident replica exists;
+//!
+//! each checked directly against randomized `GroupView` snapshots, then
+//! end-to-end through `SimCluster` across the scenario registry, where
+//! resident-affinity's swap avoidance is measured against round-robin's
+//! churn on the same workload.
+
+use computron::config::{PlacementSpec, RouterKind, SystemConfig};
+use computron::coordinator::router::{self, GroupView};
+use computron::coordinator::swap::Residency;
+use computron::sim::{Arrival, Driver, SimCluster};
+use computron::util::prop;
+use computron::util::rng::Rng;
+use computron::workload::scenarios;
+use std::collections::HashMap;
+
+fn random_views(rng: &mut Rng, groups: usize) -> Vec<GroupView> {
+    (0..groups)
+        .map(|g| {
+            let residency = match rng.index(5) {
+                0 => Residency::Resident,
+                1 => Residency::PartiallyResident { loaded: 1, total: 4 },
+                2 => Residency::Loading,
+                3 => Residency::Offloading,
+                _ => Residency::Offloaded,
+            };
+            GroupView {
+                group: g,
+                queue_cost: rng.index(20) as f64,
+                residency,
+                swap_cost: 0.05 * (1 + rng.index(40)) as f64,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_round_robin_fairness() {
+    // Per model, per-group counts over K routed arrivals differ by <= 1.
+    prop::check(
+        "round-robin-fairness",
+        |rng: &mut Rng| {
+            let groups = prop::usize_in(rng, 2, 5);
+            let models = prop::usize_in(rng, 1, 4);
+            let arrivals: Vec<usize> = (0..60).map(|_| rng.index(models)).collect();
+            (groups, models, arrivals)
+        },
+        |(groups, models, arrivals)| {
+            let mut r = router::by_name("round-robin").unwrap();
+            let views: Vec<GroupView> = (0..*groups)
+                .map(|g| GroupView {
+                    group: g,
+                    queue_cost: g as f64, // load must not matter
+                    residency: Residency::Offloaded,
+                    swap_cost: 1.0,
+                })
+                .collect();
+            let mut counts: HashMap<(usize, usize), usize> = HashMap::new();
+            for &m in arrivals {
+                let g = r.route(m, &views);
+                *counts.entry((m, g)).or_insert(0) += 1;
+            }
+            for m in 0..*models {
+                let per_group: Vec<usize> =
+                    (0..*groups).map(|g| counts.get(&(m, g)).copied().unwrap_or(0)).collect();
+                let (lo, hi) = (
+                    per_group.iter().min().unwrap(),
+                    per_group.iter().max().unwrap(),
+                );
+                if hi - lo > 1 {
+                    return Err(format!("model {m}: unfair split {per_group:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_least_loaded_never_picks_strictly_costlier() {
+    prop::check(
+        "least-loaded-frugal",
+        |rng: &mut Rng| {
+            let groups = prop::usize_in(rng, 1, 6);
+            random_views(rng, groups)
+        },
+        |views| {
+            let mut r = router::by_name("least-loaded").unwrap();
+            let chosen = r.route(0, views);
+            let cost = views.iter().find(|v| v.group == chosen).unwrap().queue_cost;
+            let min = views.iter().map(|v| v.queue_cost).fold(f64::INFINITY, f64::min);
+            if cost > min {
+                return Err(format!(
+                    "picked group {chosen} at cost {cost} with a cheaper candidate ({min})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_resident_affinity_never_swaps_when_resident_replica_exists() {
+    prop::check(
+        "resident-affinity-warmth",
+        |rng: &mut Rng| {
+            let groups = prop::usize_in(rng, 1, 6);
+            random_views(rng, groups)
+        },
+        |views| {
+            let mut r = router::by_name("resident-affinity").unwrap();
+            let chosen = r.route(0, views);
+            let chosen_view = views.iter().find(|v| v.group == chosen).unwrap();
+            let any_resident = views.iter().any(|v| {
+                matches!(
+                    v.residency,
+                    Residency::Resident | Residency::PartiallyResident { .. }
+                )
+            });
+            // Routing to a warm group never starts a new swap; routing to
+            // a cold one does. So: a resident replica anywhere means the
+            // chosen group must be warm.
+            if any_resident && !chosen_view.warm() {
+                return Err(format!(
+                    "chose cold group {chosen} despite a resident replica: {views:?}"
+                ));
+            }
+            // And among all-cold candidates the cheapest swap wins.
+            if !views.iter().any(GroupView::warm) {
+                let min = views.iter().map(|v| v.swap_cost).fold(f64::INFINITY, f64::min);
+                if chosen_view.swap_cost > min {
+                    return Err(format!(
+                        "all-cold tie broken away from the cheapest swap: {views:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Two replicated groups, cap 1, two models, tightly alternating opens:
+/// resident-affinity discovers the stable model→group partition (one
+/// swap-in per model, ever), while round-robin keeps both groups
+/// churning (§5.1's worst case on each).
+#[test]
+fn affinity_partitions_where_round_robin_churns() {
+    let run = |kind: RouterKind| {
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 8);
+        cfg.placement = Some(PlacementSpec::replicated(2, cfg.parallel, 2, kind));
+        let arrivals: Vec<Arrival> = (0..40)
+            .map(|i| Arrival { at: 0.15 * i as f64, model: i % 2, input_len: 8 })
+            .collect();
+        // Cold start: no preload, so the router's first decisions place
+        // the models.
+        let sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.run()
+    };
+    let affinity = run(RouterKind::ResidentAffinity);
+    assert_eq!(affinity.requests.len(), 40);
+    assert_eq!(affinity.violations, 0);
+    assert_eq!(
+        affinity.swap_stats.loads_completed, 2,
+        "affinity loads each model exactly once and then sticks: {:?}",
+        affinity.swaps
+    );
+    let round_robin = run(RouterKind::RoundRobin);
+    assert_eq!(round_robin.requests.len(), 40);
+    assert!(
+        round_robin.swap_stats.loads_completed > affinity.swap_stats.loads_completed * 3,
+        "round-robin must churn where affinity sticks: rr {} vs affinity {}",
+        round_robin.swap_stats.loads_completed,
+        affinity.swap_stats.loads_completed
+    );
+}
+
+#[test]
+fn routers_hold_invariants_across_the_scenario_registry() {
+    // Every scenario × every router on a 2-group replicated placement:
+    // runs drain, stay deterministic, and account for every request.
+    for &name in scenarios::names() {
+        for &kind in router::KINDS.iter() {
+            let run = || {
+                let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+                cfg.scenario = Some(name.to_string());
+                cfg.placement = Some(PlacementSpec::replicated(2, cfg.parallel, 3, kind));
+                let (sys, _) = SimCluster::from_scenario(cfg, 5.0, 0x40_0735).unwrap();
+                sys.run()
+            };
+            let report = run();
+            let tag = format!("{name}/{}", kind.name());
+            assert_eq!(report.violations, 0, "{tag}");
+            assert_eq!(report.oom_events, 0, "{tag}");
+            assert_eq!(report.groups.len(), 2, "{tag}");
+            let s = report.swap_stats;
+            assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled, "{tag}");
+            assert_eq!(s.offloads_started, s.offloads_completed, "{tag}");
+            assert_eq!(
+                report.groups.iter().map(|g| g.requests).sum::<usize>(),
+                report.requests.len(),
+                "{tag}"
+            );
+            let again = run();
+            assert_eq!(report.requests, again.requests, "{tag}: non-deterministic");
+            assert_eq!(report.events, again.events, "{tag}: non-deterministic");
+        }
+    }
+}
