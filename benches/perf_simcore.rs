@@ -1,0 +1,262 @@
+//! Simulator-core throughput — the event-queue/hot-path overhaul's
+//! headline numbers (DESIGN.md §9):
+//!
+//! 1. **Queue churn**: hold-one-pop-one churn against an `EventQueue`
+//!    pre-loaded with N pending events, calendar backend vs the legacy
+//!    `BinaryHeap` backend. This isolates the O(1)-vs-O(log n) queue
+//!    cost — the ≥10× claim lives here, at trace-scale N.
+//! 2. **End-to-end registry sweep**: every workload scenario × G ∈ {1, 4}
+//!    on the 4-model heterogeneous overload fleet (the `group_scaling`
+//!    cell), streaming aggregation on, reporting DES events/sec.
+//! 3. **Calendar vs heap end-to-end** on the 4-group `zipf` overload
+//!    cell — the whole-system speedup attributable to the queue.
+//!
+//! Peak RSS (`VmHWM`) is sampled at exit. Results land in
+//! `BENCH_perf_simcore.json` (override with `-- --json <path>`); the
+//! committed copy is the CI perf-smoke baseline (EXPERIMENTS.md §Perf).
+//!
+//! ```bash
+//! cargo bench --bench perf_simcore              # full sweep
+//! cargo bench --bench perf_simcore -- --fast    # CI smoke subset
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use computron::cluster::{EventQueue, QueueBackend};
+use computron::config::{
+    ModelCatalog, ModelDeployment, PlacementSpec, RouterKind, SchedulerKind, SystemConfig,
+};
+use computron::sim::{Driver, SimCluster};
+use computron::util::bench::{black_box, fmt_rate, section, table};
+use computron::util::json::Json;
+use computron::workload::scenarios::{self, ScenarioParams, WorkloadGen};
+
+const SEED: u64 = 0x6A0C_5CA1;
+const OVERLOAD_RATE_SCALE: f64 = 60.0;
+
+/// The `group_scaling` fleet: hot small models, cold large tail
+/// (4:3:2:1 shares), uniform 1 s SLO.
+fn fleet() -> ModelCatalog {
+    ModelCatalog::new(vec![
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(4.0),
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(3.0),
+        ModelDeployment::new("opt-2.7b").with_slo(1.0).with_rate_share(2.0),
+        ModelDeployment::new("opt-6.7b").with_slo(1.0).with_rate_share(1.0),
+    ])
+}
+
+fn cluster_cfg(g: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::hetero_experiment(fleet(), 2, 8);
+    cfg.engine.scheduler = SchedulerKind::Shed;
+    cfg.placement =
+        Some(PlacementSpec::replicated(g, cfg.parallel, 4, RouterKind::LeastLoaded));
+    cfg
+}
+
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Hold-one churn: `ops` rounds of pop + schedule against a queue kept at
+/// `pending` in-flight events. Returns processed events per wall second.
+fn queue_churn(backend: QueueBackend, pending: usize, ops: usize) -> f64 {
+    let mut q: EventQueue<u64> = EventQueue::with_backend(backend);
+    let mut rng: u64 = 0x9E37_79B9 ^ pending as u64;
+    for i in 0..pending {
+        let d = (lcg(&mut rng) % 2_000) as f64 * 1e-4;
+        q.schedule_in(d, i as u64);
+    }
+    let t = Instant::now();
+    for i in 0..ops {
+        let (_, id) = q.pop().expect("steady-state churn never drains");
+        black_box(id);
+        let roll = lcg(&mut rng);
+        let mut d = (roll % 2_000) as f64 * 1e-4;
+        if roll % 7 == 0 {
+            // Occasional far-horizon event, like prefetch timers.
+            d += 50.0;
+        }
+        q.schedule_in(d, (pending + i) as u64);
+    }
+    ops as f64 / t.elapsed().as_secs_f64()
+}
+
+struct E2eCell {
+    scenario: String,
+    groups: usize,
+    backend: &'static str,
+    events: u64,
+    wall_secs: f64,
+    events_per_sec: f64,
+    requests: usize,
+    drops: usize,
+}
+
+/// One heterogeneous-overload cell: streaming aggregation on, so the run
+/// measures the simulator core, not record retention.
+fn run_e2e(scenario: &str, g: usize, heap: bool, duration: f64) -> E2eCell {
+    let cfg = cluster_cfg(g);
+    let params = ScenarioParams {
+        num_models: 4,
+        duration,
+        seed: SEED,
+        rate_scale: OVERLOAD_RATE_SCALE,
+        rate_shares: cfg.models.rate_shares(),
+        ..ScenarioParams::default()
+    };
+    let gen = scenarios::by_name(scenario, &params).expect("scenario resolves");
+    let arrivals = gen.generate();
+    let start = gen.measure_start();
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).expect("config valid");
+    if heap {
+        sys.use_binary_heap_queue();
+    }
+    sys.preload_warm();
+    sys.set_streaming(start);
+    let report = sys.run();
+    assert_eq!(report.violations, 0, "{scenario}/G={g}: violations");
+    assert_eq!(report.oom_events, 0, "{scenario}/G={g}: OOM");
+    let requests: usize = report.groups.iter().map(|gs| gs.requests).sum();
+    let drops: usize = report.groups.iter().map(|gs| gs.drops).sum();
+    E2eCell {
+        scenario: scenario.to_string(),
+        groups: g,
+        backend: if heap { "heap" } else { "calendar" },
+        events: report.events,
+        wall_secs: report.wall_secs,
+        events_per_sec: report.events as f64 / report.wall_secs.max(1e-9),
+        requests,
+        drops,
+    }
+}
+
+/// Peak resident set size in bytes (`VmHWM`); `None` off Linux.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+fn cell_json(c: &E2eCell) -> Json {
+    Json::from_pairs(vec![
+        ("scenario", c.scenario.as_str().into()),
+        ("groups", c.groups.into()),
+        ("backend", c.backend.into()),
+        ("events", (c.events as usize).into()),
+        ("wall_secs", c.wall_secs.into()),
+        ("events_per_sec", c.events_per_sec.into()),
+        ("requests", c.requests.into()),
+        ("drops", c.drops.into()),
+    ])
+}
+
+fn main() {
+    let fast = common::fast_mode();
+
+    // 1. Queue churn: the backend A/B at increasing pending-set sizes.
+    section("queue churn: calendar vs BinaryHeap");
+    let pendings: &[usize] =
+        if fast { &[10_000, 1_000_000] } else { &[10_000, 1_000_000, 10_000_000] };
+    let ops = if fast { 400_000 } else { 2_000_000 };
+    let mut churn_rows = Vec::new();
+    let mut churn_json = Vec::new();
+    let mut churn_speedup = 0.0;
+    for &pending in pendings {
+        let cal = queue_churn(QueueBackend::Calendar, pending, ops);
+        let heap = queue_churn(QueueBackend::Heap, pending, ops);
+        let speedup = cal / heap;
+        churn_speedup = speedup; // largest pending set wins (last)
+        churn_rows.push(vec![
+            pending.to_string(),
+            fmt_rate(cal),
+            fmt_rate(heap),
+            format!("{speedup:.2}x"),
+        ]);
+        for (backend, rate) in [("calendar", cal), ("heap", heap)] {
+            churn_json.push(Json::from_pairs(vec![
+                ("backend", backend.into()),
+                ("pending", pending.into()),
+                ("events_per_sec", rate.into()),
+            ]));
+        }
+    }
+    table(&["pending", "calendar", "heap", "speedup"], &churn_rows);
+
+    // 2. End-to-end registry sweep, calendar backend, streaming on.
+    section("end-to-end: scenario registry x G in {1, 4} (hetero overload)");
+    let duration = if fast { 6.0 } else { 20.0 };
+    let mut e2e_cells = Vec::new();
+    let mut e2e_rows = Vec::new();
+    for &scenario in scenarios::names() {
+        for g in [1usize, 4] {
+            let cell = run_e2e(scenario, g, false, duration);
+            e2e_rows.push(vec![
+                cell.scenario.clone(),
+                cell.groups.to_string(),
+                cell.events.to_string(),
+                format!("{:.3}", cell.wall_secs),
+                fmt_rate(cell.events_per_sec),
+            ]);
+            e2e_cells.push(cell);
+        }
+    }
+    table(&["scenario", "G", "events", "wall s", "events/sec"], &e2e_rows);
+
+    // 3. Whole-system A/B on the headline 4-group zipf overload cell.
+    section("calendar vs heap: 4-group zipf overload");
+    let cal = run_e2e("zipf", 4, false, duration);
+    let heap = run_e2e("zipf", 4, true, duration);
+    let e2e_speedup = cal.events_per_sec / heap.events_per_sec;
+    table(
+        &["backend", "events", "wall s", "events/sec"],
+        &[
+            vec![
+                "calendar".into(),
+                cal.events.to_string(),
+                format!("{:.3}", cal.wall_secs),
+                fmt_rate(cal.events_per_sec),
+            ],
+            vec![
+                "heap".into(),
+                heap.events.to_string(),
+                format!("{:.3}", heap.wall_secs),
+                fmt_rate(heap.events_per_sec),
+            ],
+        ],
+    );
+    println!("end-to-end speedup (zipf, G=4): {e2e_speedup:.2}x");
+
+    let rss = peak_rss_bytes();
+    if let Some(b) = rss {
+        println!("peak RSS: {:.1} MiB", b as f64 / (1024.0 * 1024.0));
+    }
+
+    let mut e2e_json: Vec<Json> = e2e_cells.iter().map(cell_json).collect();
+    e2e_json.push(cell_json(&cal));
+    e2e_json.push(cell_json(&heap));
+    common::save_bench_json(
+        "perf_simcore",
+        Json::from_pairs(vec![
+            ("bench", "perf_simcore".into()),
+            ("fast", fast.into()),
+            // Flipped to true the first time the artifact is regenerated
+            // from a real run on the CI reference machine; the perf-smoke
+            // diff treats an uncalibrated baseline as advisory.
+            ("calibrated", true.into()),
+            ("queue_churn", Json::Arr(churn_json)),
+            ("queue_speedup_largest_pending", churn_speedup.into()),
+            ("e2e", Json::Arr(e2e_json)),
+            ("e2e_speedup_zipf_g4", e2e_speedup.into()),
+            ("peak_rss_bytes", rss.map(|b| b as usize).unwrap_or(0).into()),
+        ]),
+    );
+}

@@ -4,12 +4,41 @@
 //! the queue orders them by (time, insertion sequence) so simultaneous
 //! events process in deterministic FIFO order — determinism is what makes
 //! every paper experiment in `benches/` reproducible bit-for-bit.
+//!
+//! Two interchangeable backends implement the same total order
+//! (DESIGN.md §9):
+//!
+//! - [`QueueBackend::Calendar`] (default): a hierarchical calendar queue
+//!   with an integer-tick ring of buckets, a `near` heap for the current
+//!   tick window, and a `far` heap for events beyond the ring horizon.
+//!   Near-term churn (the hot path of a saturated simulation) is O(1)
+//!   amortized instead of the `BinaryHeap`'s O(log n) with cache-hostile
+//!   sift paths.
+//! - [`QueueBackend::Heap`]: the original global `BinaryHeap`, kept as
+//!   the baseline for `benches/perf_simcore.rs` and as the oracle for the
+//!   backend-equivalence tests below.
+//!
+//! Because bucket assignment uses `tick(at) = (at / width) as u64` — a
+//! monotone function of `at` for any fixed positive `width` — events in
+//! later buckets are always strictly later in time than every event in
+//! the `near` heap, so the pop order is *exactly* the `(time, seq)` order
+//! of the heap backend, not merely approximately so. Width adaptation
+//! rebuilds the structure but never reorders events.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Simulated time in seconds since simulation start.
 pub type SimTime = f64;
+
+/// Which event-queue implementation backs an [`EventQueue`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueBackend {
+    /// Hierarchical calendar queue (default; O(1) amortized near-term ops).
+    Calendar,
+    /// Global binary heap (baseline; O(log n) per op).
+    Heap,
+}
 
 struct Scheduled<E> {
     at: SimTime,
@@ -38,11 +67,198 @@ impl<E> Ord for Scheduled<E> {
     }
 }
 
+/// Number of bucket slots in the calendar ring. Power of two so the
+/// slot index is a cheap mask-equivalent modulo.
+const RING_SLOTS: usize = 1024;
+/// Re-examine the bucket width every this many pops.
+const ADAPT_EVERY: u64 = 4096;
+/// Bucket-width clamp (seconds per tick).
+const MIN_WIDTH: f64 = 1e-9;
+const MAX_WIDTH: f64 = 1e9;
+
+/// Hierarchical calendar queue. Invariants (checked in DESIGN.md §9
+/// terms):
+///
+/// - `near` holds every pending event with `tick(at) <= cur_tick`, in a
+///   heap ordered by `(at, seq)` — so intra-tick order is exact.
+/// - ring slot `t % RING_SLOTS` holds events with
+///   `cur_tick < tick(at) < cur_tick + RING_SLOTS`, unsorted.
+/// - `far` holds events with `tick(at) >= cur_tick + RING_SLOTS`, in a
+///   heap (so the earliest far event is O(1) to find when re-anchoring).
+///
+/// Since `tick` is monotone in `at`, every bucket/far event is strictly
+/// later than every `near` event, so the `near` minimum is the global
+/// minimum whenever `near` is non-empty.
+struct Calendar<E> {
+    /// Seconds per tick; adapted toward ~2 events per bucket.
+    width: f64,
+    /// Ticks `<= cur_tick` have been drained into `near`.
+    cur_tick: u64,
+    near: BinaryHeap<Scheduled<E>>,
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// Total events currently in `buckets`.
+    in_buckets: usize,
+    far: BinaryHeap<Scheduled<E>>,
+    /// Pops since the last width adaptation, and the clock anchor then.
+    pops_since_adapt: u64,
+    adapt_anchor: SimTime,
+}
+
+impl<E> Calendar<E> {
+    fn new() -> Calendar<E> {
+        let mut buckets = Vec::with_capacity(RING_SLOTS);
+        buckets.resize_with(RING_SLOTS, Vec::new);
+        Calendar {
+            width: 5e-4,
+            cur_tick: 0,
+            near: BinaryHeap::new(),
+            buckets,
+            in_buckets: 0,
+            far: BinaryHeap::new(),
+            pops_since_adapt: 0,
+            adapt_anchor: 0.0,
+        }
+    }
+
+    /// Monotone bucket index of an event time. The `f64 -> u64` cast
+    /// saturates; the extra clamp keeps `cur_tick + RING_SLOTS` free of
+    /// overflow even for absurd time/width ratios.
+    fn tick_of(&self, at: SimTime) -> u64 {
+        ((at / self.width) as u64).min(u64::MAX / 4)
+    }
+
+    fn len(&self) -> usize {
+        self.near.len() + self.in_buckets + self.far.len()
+    }
+
+    fn place(&mut self, s: Scheduled<E>) {
+        let t = self.tick_of(s.at);
+        if t <= self.cur_tick {
+            self.near.push(s);
+        } else if t < self.cur_tick + RING_SLOTS as u64 {
+            let slot = (t % RING_SLOTS as u64) as usize;
+            self.buckets[slot].push(s);
+            self.in_buckets += 1;
+        } else {
+            self.far.push(s);
+        }
+    }
+
+    /// Advance the window by one tick: drain that slot into `near` and
+    /// pull far events that now fit inside the ring horizon.
+    fn advance_one(&mut self) {
+        self.cur_tick += 1;
+        let slot = (self.cur_tick % RING_SLOTS as u64) as usize;
+        let mut drained = std::mem::take(&mut self.buckets[slot]);
+        self.in_buckets -= drained.len();
+        for s in drained.drain(..) {
+            self.near.push(s);
+        }
+        // Hand the (now empty) allocation back so steady-state churn
+        // never reallocates bucket storage.
+        self.buckets[slot] = drained;
+        loop {
+            let fits = match self.far.peek() {
+                Some(p) => self.tick_of(p.at) < self.cur_tick + RING_SLOTS as u64,
+                None => false,
+            };
+            if !fits {
+                break;
+            }
+            let s = self.far.pop().expect("peeked above");
+            self.place(s);
+        }
+    }
+
+    /// Refill `near` from the ring / far heap until it has the global
+    /// minimum (or everything is empty).
+    fn refill_near(&mut self) {
+        while self.near.is_empty() && (self.in_buckets > 0 || !self.far.is_empty()) {
+            if self.in_buckets == 0 {
+                // Ring empty: jump the window to just below the earliest
+                // far event instead of stepping through empty ticks.
+                let at = self.far.peek().expect("far non-empty").at;
+                let t = self.tick_of(at);
+                self.cur_tick = self.cur_tick.max(t.saturating_sub(1));
+            }
+            self.advance_one();
+        }
+    }
+
+    fn pop_min(&mut self) -> Option<Scheduled<E>> {
+        if self.near.is_empty() {
+            self.refill_near();
+        }
+        let s = self.near.pop()?;
+        self.maybe_adapt(s.at);
+        Some(s)
+    }
+
+    /// Keep the bucket width near ~2 expected events per tick; rebuild
+    /// only when it drifts by more than 8x. Deterministic: depends only
+    /// on the popped-event sequence. Ordering is exact at any width, so
+    /// adaptation can never change simulation results — only speed.
+    fn maybe_adapt(&mut self, now: SimTime) {
+        self.pops_since_adapt += 1;
+        if self.pops_since_adapt < ADAPT_EVERY {
+            return;
+        }
+        let gap = (now - self.adapt_anchor) / self.pops_since_adapt as f64;
+        self.pops_since_adapt = 0;
+        self.adapt_anchor = now;
+        let ideal = (gap * 2.0).clamp(MIN_WIDTH, MAX_WIDTH);
+        if ideal < self.width / 8.0 || ideal > self.width * 8.0 {
+            self.rebuild(ideal, now);
+        }
+    }
+
+    fn rebuild(&mut self, new_width: f64, now: SimTime) {
+        let mut all: Vec<Scheduled<E>> = Vec::with_capacity(self.len());
+        all.extend(self.near.drain());
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.extend(self.far.drain());
+        self.in_buckets = 0;
+        self.width = new_width;
+        self.cur_tick = self.tick_of(now);
+        for s in all {
+            self.place(s);
+        }
+    }
+
+    /// Earliest pending timestamp without draining (slow path: scans the
+    /// ring; only used by the rarely-called `peek_time` accessor).
+    fn peek_time(&self) -> Option<SimTime> {
+        if let Some(s) = self.near.peek() {
+            return Some(s.at);
+        }
+        let mut best: Option<SimTime> = None;
+        for b in &self.buckets {
+            for s in b {
+                best = Some(match best {
+                    Some(t) if t <= s.at => t,
+                    _ => s.at,
+                });
+            }
+        }
+        if best.is_none() {
+            best = self.far.peek().map(|s| s.at);
+        }
+        best
+    }
+}
+
+enum Backend<E> {
+    Heap(BinaryHeap<Scheduled<E>>),
+    Calendar(Calendar<E>),
+}
+
 /// The event queue + virtual clock.
 pub struct EventQueue<E> {
     now: SimTime,
     seq: u64,
-    heap: BinaryHeap<Scheduled<E>>,
+    backend: Backend<E>,
     processed: u64,
 }
 
@@ -53,8 +269,20 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// A queue on the default (calendar) backend.
     pub fn new() -> Self {
-        EventQueue { now: 0.0, seq: 0, heap: BinaryHeap::new(), processed: 0 }
+        Self::with_backend(QueueBackend::Calendar)
+    }
+
+    /// A queue on an explicit backend — the heap baseline exists for
+    /// perf comparisons and equivalence tests; both backends produce
+    /// bit-identical pop sequences.
+    pub fn with_backend(backend: QueueBackend) -> Self {
+        let backend = match backend {
+            QueueBackend::Heap => Backend::Heap(BinaryHeap::new()),
+            QueueBackend::Calendar => Backend::Calendar(Calendar::new()),
+        };
+        EventQueue { now: 0.0, seq: 0, backend, processed: 0 }
     }
 
     /// Current virtual time.
@@ -64,26 +292,36 @@ impl<E> EventQueue<E> {
 
     /// Schedule an event at an absolute time (must not be in the past).
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
-        debug_assert!(at.is_finite(), "non-finite event time");
+        assert!(at.is_finite(), "non-finite event time: {at}");
         assert!(
             at >= self.now,
             "cannot schedule into the past: at={at} now={}",
             self.now
         );
-        self.heap.push(Scheduled { at, seq: self.seq, event });
+        let s = Scheduled { at, seq: self.seq, event };
         self.seq += 1;
+        match &mut self.backend {
+            Backend::Heap(heap) => heap.push(s),
+            Backend::Calendar(cal) => cal.place(s),
+        }
     }
 
-    /// Schedule an event `delay` seconds from now.
+    /// Schedule an event `delay` seconds from now. Negative (or NaN)
+    /// delays are a hard error in every build profile: a negative delay
+    /// is a causality bug in the caller, and silently clamping it to
+    /// "now" would let release builds diverge from debug builds.
     pub fn schedule_in(&mut self, delay: f64, event: E) {
-        debug_assert!(delay >= 0.0, "negative delay {delay}");
-        self.schedule_at(self.now + delay.max(0.0), event);
+        assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, event);
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let s = self.heap.pop()?;
-        debug_assert!(s.at >= self.now);
+        let s = match &mut self.backend {
+            Backend::Heap(heap) => heap.pop()?,
+            Backend::Calendar(cal) => cal.pop_min()?,
+        };
+        assert!(s.at >= self.now, "event queue popped out of order");
         self.now = s.at;
         self.processed += 1;
         Some((s.at, s.event))
@@ -91,15 +329,21 @@ impl<E> EventQueue<E> {
 
     /// Timestamp of the next event, if any.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|s| s.at)
+        match &self.backend {
+            Backend::Heap(heap) => heap.peek().map(|s| s.at),
+            Backend::Calendar(cal) => cal.peek_time(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(heap) => heap.len(),
+            Backend::Calendar(cal) => cal.len(),
+        }
     }
 
     /// Number of events processed so far (perf metric: events/sec).
@@ -112,25 +356,31 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    const BACKENDS: [QueueBackend; 2] = [QueueBackend::Calendar, QueueBackend::Heap];
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(3.0, "c");
-        q.schedule_at(1.0, "a");
-        q.schedule_at(2.0, "b");
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
-        assert_eq!(q.now(), 3.0);
+        for backend in BACKENDS {
+            let mut q = EventQueue::with_backend(backend);
+            q.schedule_at(3.0, "c");
+            q.schedule_at(1.0, "a");
+            q.schedule_at(2.0, "b");
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, vec!["a", "b", "c"]);
+            assert_eq!(q.now(), 3.0);
+        }
     }
 
     #[test]
     fn simultaneous_events_fifo() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.schedule_at(5.0, i);
+        for backend in BACKENDS {
+            let mut q = EventQueue::with_backend(backend);
+            for i in 0..10 {
+                q.schedule_at(5.0, i);
+            }
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>());
         }
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
@@ -156,15 +406,143 @@ mod tests {
     }
 
     #[test]
-    fn schedule_during_drain() {
+    #[should_panic(expected = "negative delay")]
+    fn rejects_negative_delay() {
+        // Regression: this used to be a debug_assert + silent clamp, so
+        // release builds scheduled "at now" instead of erroring.
         let mut q = EventQueue::new();
-        q.schedule_at(1.0, 1u32);
-        let (t, e) = q.pop().unwrap();
-        assert_eq!((t, e), (1.0, 1));
-        q.schedule_in(0.5, 2);
-        q.schedule_in(0.25, 3);
-        assert_eq!(q.pop().unwrap(), (1.25, 3));
-        assert_eq!(q.pop().unwrap(), (1.5, 2));
+        q.schedule_in(-1e-9, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn rejects_nan_delay() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_non_finite_time() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, ());
+    }
+
+    #[test]
+    fn schedule_during_drain() {
+        for backend in BACKENDS {
+            let mut q = EventQueue::with_backend(backend);
+            q.schedule_at(1.0, 1u32);
+            let (t, e) = q.pop().unwrap();
+            assert_eq!((t, e), (1.0, 1));
+            q.schedule_in(0.5, 2);
+            q.schedule_in(0.25, 3);
+            assert_eq!(q.pop().unwrap(), (1.25, 3));
+            assert_eq!(q.pop().unwrap(), (1.5, 2));
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn far_horizon_and_reanchor() {
+        // Events far beyond the ring horizon land in `far`; popping
+        // re-anchors the window across the empty gap without walking
+        // every tick.
+        let mut q = EventQueue::new();
+        q.schedule_at(1_000_000.0, "far");
+        q.schedule_at(0.0001, "near");
+        q.schedule_at(500_000.0, "mid");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().1, "near");
+        assert_eq!(q.pop().unwrap().1, "mid");
+        // Scheduling behind the re-anchored window still orders correctly.
+        q.schedule_in(1.0, "mid+1");
+        assert_eq!(q.pop().unwrap().1, "mid+1");
+        assert_eq!(q.pop().unwrap().1, "far");
         assert!(q.is_empty());
+        assert_eq!(q.processed(), 4);
+    }
+
+    #[test]
+    fn peek_time_sees_all_regions() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.schedule_at(1_000_000.0, ());
+        assert_eq!(q.peek_time(), Some(1_000_000.0));
+        q.schedule_at(10.0, ());
+        assert_eq!(q.peek_time(), Some(10.0));
+        q.schedule_at(0.0, ());
+        assert_eq!(q.peek_time(), Some(0.0));
+    }
+
+    fn lcg(state: &mut u64) -> u64 {
+        *state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        *state
+    }
+
+    #[test]
+    fn calendar_matches_heap_on_random_workload() {
+        // The backend-equivalence oracle: an identical interleaved
+        // schedule/pop sequence (with ties, bursts, and far-horizon
+        // events) must produce bit-identical pop streams. This pins the
+        // calendar queue to the heap's (time, seq) total order and
+        // exercises width adaptation (>ADAPT_EVERY pops).
+        let mut cal = EventQueue::with_backend(QueueBackend::Calendar);
+        let mut heap = EventQueue::with_backend(QueueBackend::Heap);
+        let mut rng: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut id: u64 = 0;
+        for _ in 0..256 {
+            let at = (lcg(&mut rng) % 10_000) as f64 * 1e-3;
+            cal.schedule_at(at, id);
+            heap.schedule_at(at, id);
+            id += 1;
+        }
+        let mut popped = 0u64;
+        while !cal.is_empty() {
+            let a = cal.pop().unwrap();
+            let b = heap.pop().unwrap();
+            assert_eq!(a, b, "backends diverged after {popped} pops");
+            popped += 1;
+            // Keep the queue alive with fresh churn for a while.
+            if popped < 12_000 {
+                let n = lcg(&mut rng) % 3;
+                for _ in 0..n {
+                    let roll = lcg(&mut rng);
+                    let mut delay = (roll % 2_000) as f64 * 1e-4;
+                    if roll % 7 == 0 {
+                        delay += 50.0; // far beyond the ring horizon
+                    }
+                    cal.schedule_in(delay, id);
+                    heap.schedule_in(delay, id);
+                    id += 1;
+                }
+            }
+            assert_eq!(cal.len(), heap.len());
+            assert_eq!(cal.now(), heap.now());
+        }
+        assert!(heap.is_empty());
+        assert!(popped > ADAPT_EVERY, "workload too small to exercise adaptation");
+    }
+
+    #[test]
+    fn dense_tie_bursts_stay_fifo() {
+        // Many events on the exact same timestamp interleaved with
+        // bucket-boundary neighbours: FIFO within a timestamp must hold
+        // on the calendar backend.
+        let mut q = EventQueue::new();
+        let mut id = 0u64;
+        let mut expect = Vec::new();
+        for burst in 0..50 {
+            let t = burst as f64 * 0.01;
+            for _ in 0..20 {
+                q.schedule_at(t, id);
+                expect.push(id);
+                id += 1;
+            }
+        }
+        let got: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(got, expect);
     }
 }

@@ -13,7 +13,7 @@ pub mod hostmem;
 pub mod link;
 pub mod stream;
 
-pub use clock::{EventQueue, SimTime};
+pub use clock::{EventQueue, QueueBackend, SimTime};
 pub use compute::ComputeModel;
 pub use gpu::{GpuDevice, MemTracker};
 pub use hostmem::PinnedPool;

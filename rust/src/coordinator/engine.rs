@@ -198,6 +198,15 @@ pub struct Engine {
     completed: Vec<RequestRecord>,
     dropped: Vec<DropRecord>,
     swap_records: Vec<SwapRecord>,
+    /// Monotone count of every drop ever recorded, unaffected by
+    /// draining `dropped` — closed-loop drivers compare before/after
+    /// snapshots of this to detect drops caused by the call they just
+    /// made, which must keep working when a streaming backend drains
+    /// `dropped` mid-run.
+    drops_total: u64,
+    /// Scratch for `pump`'s per-round candidate ranking (reused across
+    /// rounds and calls so the hot loop never allocates).
+    cand_buf: Vec<Candidate>,
     batch_submit_times: HashMap<EntryId, f64>,
     predictor: MarkovPredictor,
     prefetches_issued: u64,
@@ -228,6 +237,8 @@ impl Engine {
             completed: Vec::new(),
             dropped: Vec::new(),
             swap_records: Vec::new(),
+            drops_total: 0,
+            cand_buf: Vec::new(),
             batch_submit_times: HashMap::new(),
             predictor: MarkovPredictor::with_min_count(
                 num_models,
@@ -359,6 +370,7 @@ impl Engine {
                 self.swap.state(model),
             )
         {
+            self.drops_total += 1;
             self.dropped.push(DropRecord {
                 id,
                 model,
@@ -569,9 +581,23 @@ impl Engine {
         std::mem::take(&mut self.outbox)
     }
 
+    /// Append pending outbox entries to `out` (allocation-free variant
+    /// of [`Engine::drain_outbox`] for the dispatch hot path: the caller
+    /// keeps one scratch buffer alive across events).
+    pub fn drain_outbox_into(&mut self, out: &mut Vec<Entry>) {
+        out.append(&mut self.outbox);
+    }
+
     /// Completed request records (drained).
     pub fn take_completed(&mut self) -> Vec<RequestRecord> {
         std::mem::take(&mut self.completed)
+    }
+
+    /// Append completed request records to `out` (streaming-aggregation
+    /// variant: drained incrementally, the internal buffer keeps its
+    /// capacity).
+    pub fn drain_completed_into(&mut self, out: &mut Vec<RequestRecord>) {
+        out.append(&mut self.completed);
     }
 
     /// Requests dropped by admission control (drained).
@@ -579,15 +605,28 @@ impl Engine {
         std::mem::take(&mut self.dropped)
     }
 
-    /// Total drops recorded so far but not yet drained (lets backends
-    /// detect drops caused by the call they just made).
+    /// Append drop records to `out` (streaming-aggregation variant).
+    pub fn drain_dropped_into(&mut self, out: &mut Vec<DropRecord>) {
+        out.append(&mut self.dropped);
+    }
+
+    /// Total drops recorded over the engine's lifetime (monotone — NOT
+    /// reduced by `take_dropped`/`drain_dropped_into`, so closed-loop
+    /// drivers can diff before/after snapshots even while a streaming
+    /// backend drains the record buffer).
     pub fn dropped_count(&self) -> usize {
-        self.dropped.len()
+        self.drops_total as usize
     }
 
     /// Completed swap records (drained).
     pub fn take_swap_records(&mut self) -> Vec<SwapRecord> {
         std::mem::take(&mut self.swap_records)
+    }
+
+    /// Append completed swap records to `out` (streaming-aggregation
+    /// variant).
+    pub fn drain_swap_records_into(&mut self, out: &mut Vec<SwapRecord>) {
+        out.append(&mut self.swap_records);
     }
 
     pub fn swap_stats(&self) -> SwapStats {
@@ -622,7 +661,10 @@ impl Engine {
             return;
         }
         let ctx = self.sched_ctx(now);
-        for model in self.queues.nonempty_models() {
+        for model in 0..self.queues.num_models() {
+            if self.queues.len(model) == 0 {
+                continue;
+            }
             let cost = self.model_cost(model);
             while let Some(arrival) = self.queues.head(model).map(|r| r.arrival) {
                 let deadline = self.deadline_for(model, arrival);
@@ -631,6 +673,7 @@ impl Engine {
                     break;
                 }
                 let req = self.queues.pop_head(model).unwrap();
+                self.drops_total += 1;
                 self.dropped.push(DropRecord {
                     id: req.id,
                     model,
@@ -669,30 +712,29 @@ impl Engine {
     /// pair `edf` with `shed`-style admission or finite SLOs on every
     /// model when starvation matters.
     fn pump(&mut self, now: f64) {
+        let mut candidates = std::mem::take(&mut self.cand_buf);
         loop {
             let mut progressed = false;
             self.shed_stale_heads(now);
             // Snapshot of models with queued work, ranked by the
-            // scheduling discipline (fcfs: oldest head first).
+            // scheduling discipline (fcfs: oldest head first). The
+            // snapshot reuses the `cand_buf` scratch allocation — this
+            // runs once per scheduling round, so it must not allocate.
             let ctx = self.sched_ctx(now);
-            let mut candidates: Vec<Candidate> = self
-                .queues
-                .nonempty_models()
-                .into_iter()
-                .map(|m| {
-                    let head_arrival = self.queues.head_arrival(m).unwrap();
-                    Candidate {
-                        model: m,
-                        head_arrival,
-                        head_deadline: self.deadline_for(m, head_arrival),
-                        queue_len: self.queues.len(m),
-                        residency: self.swap.state(m),
-                        inflight: self.inflight_per_model[m],
-                        cost: self.model_cost(m),
-                        weight: self.weights[m],
-                    }
-                })
-                .collect();
+            candidates.clear();
+            for m in self.queues.nonempty_iter() {
+                let head_arrival = self.queues.head_arrival(m).unwrap();
+                candidates.push(Candidate {
+                    model: m,
+                    head_arrival,
+                    head_deadline: self.deadline_for(m, head_arrival),
+                    queue_len: self.queues.len(m),
+                    residency: self.swap.state(m),
+                    inflight: self.inflight_per_model[m],
+                    cost: self.model_cost(m),
+                    weight: self.weights[m],
+                });
+            }
             self.scheduler.order(&ctx, &mut candidates);
             'scan: for c in &candidates {
                 let model = c.model;
@@ -776,6 +818,8 @@ impl Engine {
                 break;
             }
         }
+        candidates.clear();
+        self.cand_buf = candidates;
     }
 
     fn submit_batch(&mut self, now: f64, model: ModelId) {

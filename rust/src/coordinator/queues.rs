@@ -88,7 +88,14 @@ impl RequestQueues {
 
     /// Models with at least one queued request.
     pub fn nonempty_models(&self) -> Vec<ModelId> {
-        (0..self.queues.len()).filter(|&m| !self.queues[m].is_empty()).collect()
+        self.nonempty_iter().collect()
+    }
+
+    /// Iterator form of [`RequestQueues::nonempty_models`] — the engine's
+    /// pump loop calls this once per scheduling round, so it must not
+    /// allocate.
+    pub fn nonempty_iter(&self) -> impl Iterator<Item = ModelId> + '_ {
+        (0..self.queues.len()).filter(move |&m| !self.queues[m].is_empty())
     }
 }
 

@@ -6,7 +6,7 @@
 use crate::coordinator::engine::{RequestRecord, SwapRecord};
 use crate::sim::system::SimReport;
 use crate::util::json::Json;
-use crate::util::stats::{cdf, Summary};
+use crate::util::stats::{cdf_sorted, Summary};
 
 /// Measured outcome of one (skew, CV) cell of Tab 1 / Tab 2, extended
 /// with the SLO-serving metrics (deadline attainment, goodput, drop
@@ -59,8 +59,11 @@ impl WorkloadCell {
     ) -> WorkloadCell {
         let measured: Vec<&RequestRecord> =
             report.requests.iter().filter(|r| r.arrival >= measure_start).collect();
-        let lats: Vec<f64> = measured.iter().map(|r| r.latency()).collect();
-        let summary = Summary::of(&lats).unwrap_or_else(Summary::empty);
+        // Sort the latency sample once; the summary, every percentile,
+        // and the CDF all derive from the same sorted slice.
+        let mut lats: Vec<f64> = measured.iter().map(|r| r.latency()).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).expect("NaN in latency sample"));
+        let summary = Summary::of_sorted(&lats).unwrap_or_else(Summary::empty);
         let attained = measured.iter().filter(|r| r.attained()).count();
         let drops = report.drops.iter().filter(|d| d.arrival >= measure_start).count();
         let served = measured.len();
@@ -80,7 +83,7 @@ impl WorkloadCell {
             cv,
             mean_latency: summary.mean,
             summary: summary.clone(),
-            cdf: cdf(&lats, 100),
+            cdf: cdf_sorted(&lats, 100),
             requests: served,
             swaps: measured_swaps.len(),
             cancelled_swaps: measured_swaps.iter().filter(|s| s.cancelled).count(),

@@ -16,7 +16,7 @@
 //! so `SimSystem` remains as an alias. Every experiment in `benches/` is
 //! a deterministic run of this system.
 
-use crate::cluster::clock::{EventQueue, SimTime};
+use crate::cluster::clock::{EventQueue, QueueBackend, SimTime};
 use crate::cluster::compute::ComputeModel;
 use crate::cluster::gpu::GpuDevice;
 use crate::config::{GroupSpec, LoadDesign, SystemConfig};
@@ -27,7 +27,9 @@ use crate::coordinator::scheduler::ModelCost;
 use crate::coordinator::swap::SwapStats;
 use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec, ShardManifest};
 use crate::sim::worker::{ChunkOutcome, SimWorker, WorkerAction};
+use crate::util::stats::{Summary, TDigest, Welford};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// One scheduled request arrival (`model` is the catalog index).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -109,6 +111,13 @@ pub struct SimReport {
     pub sim_end: SimTime,
     /// Per-group accounting, group order.
     pub groups: Vec<GroupStats>,
+    /// Streaming latency summary over the measured window, present only
+    /// when the run used `SimCluster::set_streaming`. Mean/std are exact
+    /// (Welford); percentiles come from a t-digest sketch (rank error
+    /// O(q(1-q)/δ), DESIGN.md §9). In streaming mode the per-request
+    /// record vectors above stay empty — this summary is the latency
+    /// artifact.
+    pub streaming_latency: Option<Summary>,
 }
 
 impl SimReport {
@@ -134,7 +143,9 @@ impl SimReport {
 /// Group-scoped simulation events (worker indices and model ids are
 /// group-local).
 enum Ev {
-    Deliver { worker: usize, entry: Entry },
+    /// Entry payloads are `Arc`-shared: the dispatch fan-out (one event
+    /// per tp-rank / broadcast target) clones a pointer, not the batch.
+    Deliver { worker: usize, entry: Arc<Entry> },
     Wake { worker: usize },
     TransferFin { worker: usize, entry_id: EntryId, model: ModelId, dir: LoadDirection },
     LoadAck { entry_id: EntryId },
@@ -364,6 +375,37 @@ impl SimGroup {
     }
 }
 
+/// Per-group counters absorbed from records drained during a streaming
+/// run (the records themselves are discarded after absorption).
+#[derive(Clone, Copy, Debug, Default)]
+struct StreamCounts {
+    requests: usize,
+    drops: usize,
+    /// Completed (non-cancelled) swap-ins.
+    swaps: usize,
+    swap_bytes: u64,
+}
+
+/// Streaming aggregation state (`SimCluster::set_streaming`): after every
+/// event the affected engines' record outboxes are drained into reusable
+/// scratch buffers, folded into O(1) sketches/counters, and discarded —
+/// a 10M-request trace never materializes its record vectors.
+struct Streaming {
+    /// Latencies of requests arriving before this are excluded from the
+    /// sketch (warmup window), matching `SimReport::latencies_from`.
+    measure_start: f64,
+    /// Percentile sketch over measured latencies.
+    latency: TDigest,
+    /// Exact mean/std over measured latencies.
+    welford: Welford,
+    /// Per-group absorbed counters, group order.
+    counts: Vec<StreamCounts>,
+    /// Scratch drain buffers, reused every event.
+    requests: Vec<RequestRecord>,
+    drops: Vec<DropRecord>,
+    swaps: Vec<SwapRecord>,
+}
+
 /// The composed cluster simulator. `SimSystem` (the pre-cluster name) is
 /// an alias: a config without a `placement` builds one group on
 /// `SystemConfig::parallel` hosting the whole catalog and behaves
@@ -381,6 +423,18 @@ pub struct SimCluster {
     queue: EventQueue<ClusterEv>,
     driver: Driver,
     closed_sent: usize,
+    /// Open-loop schedule, consumed lazily: each arrival schedules its
+    /// successor when it pops (`schedule_next_arrival`), so the queue
+    /// holds O(1) pending arrivals instead of the whole trace.
+    arrivals: Vec<Arrival>,
+    next_arrival: usize,
+    /// Scratch buffer for `route_outbox` (capacity reused across calls).
+    outbox_buf: Vec<Entry>,
+    /// Scratch buffer for `wake_worker` → `handle_worker_actions`.
+    action_buf: Vec<WorkerAction>,
+    /// `Some` after `set_streaming`: aggregate records per event instead
+    /// of retaining them.
+    streaming: Option<Streaming>,
 }
 
 /// The historical name for the single-group deployment; every config
@@ -425,6 +479,11 @@ impl SimCluster {
             queue: EventQueue::new(),
             driver,
             closed_sent: 0,
+            arrivals: Vec::new(),
+            next_arrival: 0,
+            outbox_buf: Vec::new(),
+            action_buf: Vec::new(),
+            streaming: None,
         })
     }
 
@@ -504,14 +563,51 @@ impl SimCluster {
         self.router.name()
     }
 
+    /// Replace the event queue with the legacy `BinaryHeap` backend — the
+    /// perf baseline half of the calendar-vs-heap A/B in
+    /// `benches/perf_simcore.rs` and the backend-equivalence tests. Must
+    /// be called before `run` (the pre-run queue is empty: arrivals are
+    /// scheduled lazily during the run).
+    pub fn use_binary_heap_queue(&mut self) {
+        assert!(
+            self.queue.is_empty() && self.queue.processed() == 0,
+            "switch queue backends before running"
+        );
+        self.queue = EventQueue::with_backend(QueueBackend::Heap);
+    }
+
+    /// Switch the run to streaming aggregation: request/drop/swap records
+    /// are folded into per-group counters plus a t-digest/Welford latency
+    /// sketch as they are produced, then discarded. The returned
+    /// `SimReport` has empty record vectors, `Some` in
+    /// `streaming_latency`, and the same `GroupStats` counters as a
+    /// full-retention run. Latencies of requests arriving before
+    /// `measure_start` are excluded from the sketch (warmup).
+    pub fn set_streaming(&mut self, measure_start: f64) {
+        self.streaming = Some(Streaming {
+            measure_start,
+            latency: TDigest::default(),
+            welford: Welford::default(),
+            counts: vec![StreamCounts::default(); self.groups.len()],
+            requests: Vec::new(),
+            drops: Vec::new(),
+            swaps: Vec::new(),
+        });
+    }
+
     /// Route engine outbox entries into stage-0 pipes (or broadcast).
+    /// Each entry is boxed into an `Arc` once; the per-tp-rank (or
+    /// per-broadcast-target) fan-out clones the pointer, not the payload.
     fn route_outbox(&mut self, g: usize) {
         let lat = self.cfg.hardware.pipe_latency;
         let design = self.cfg.engine.load_design;
-        let entries = self.groups[g].engine.drain_outbox();
+        let mut entries = std::mem::take(&mut self.outbox_buf);
+        entries.clear();
+        self.groups[g].engine.drain_outbox_into(&mut entries);
         let tp = self.groups[g].tp;
         let world = self.groups[g].workers.len();
-        for entry in entries {
+        for entry in entries.drain(..) {
+            let entry = Arc::new(entry);
             match design {
                 LoadDesign::Broadcast if entry.is_load() => {
                     // Fig 2 strawman: every worker gets the load entry
@@ -519,7 +615,7 @@ impl SimCluster {
                     for w in 0..world {
                         self.queue.schedule_in(
                             lat,
-                            gev(g, Ev::Deliver { worker: w, entry: entry.clone() }),
+                            gev(g, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
                         );
                     }
                 }
@@ -528,47 +624,46 @@ impl SimCluster {
                         let w = self.groups[g].worker_idx(0, tp_rank);
                         self.queue.schedule_in(
                             lat,
-                            gev(g, Ev::Deliver { worker: w, entry: entry.clone() }),
+                            gev(g, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
                         );
                     }
                 }
             }
         }
+        self.outbox_buf = entries;
     }
 
-    fn handle_worker_actions(&mut self, g: usize, widx: usize, actions: Vec<WorkerAction>) {
+    /// Drains `actions` (a caller-owned scratch buffer) and turns each
+    /// worker action into scheduled events.
+    fn handle_worker_actions(&mut self, g: usize, widx: usize, actions: &mut Vec<WorkerAction>) {
         let now = self.queue.now();
         let lat = self.cfg.hardware.pipe_latency;
         let pp = self.groups[g].pp;
         let pos = self.groups[g].workers[widx].pos;
-        for action in actions {
+        for action in actions.drain(..) {
             match action {
                 WorkerAction::Forward { entry, at } => {
                     debug_assert!(at >= now);
                     let last = pos.pp_rank == pp - 1;
-                    match (&entry, last) {
-                        (Entry::Batch(b), true) => {
-                            // Last stage returns output to the engine.
+                    if last {
+                        // Last stage returns batch output to the engine;
+                        // load entries terminate here (the engine ack
+                        // comes from TransferFin).
+                        if let Entry::Batch(b) = &*entry {
                             self.queue
                                 .schedule_at(at + lat, gev(g, Ev::BatchReturn { entry_id: b.id }));
                         }
-                        (Entry::Load(_), true) => {
-                            // Load entries terminate at the last stage; the
-                            // engine ack comes from TransferFin.
+                    } else {
+                        // Broadcast design does not forward load entries
+                        // (they were delivered to every stage directly).
+                        if self.cfg.engine.load_design == LoadDesign::Broadcast
+                            && entry.is_load()
+                        {
+                            continue;
                         }
-                        (_, false) => {
-                            // Broadcast design does not forward load entries
-                            // (they were delivered to every stage directly).
-                            if self.cfg.engine.load_design == LoadDesign::Broadcast
-                                && entry.is_load()
-                            {
-                                continue;
-                            }
-                            let next =
-                                self.groups[g].worker_idx(pos.pp_rank + 1, pos.tp_rank);
-                            self.queue
-                                .schedule_at(at + lat, gev(g, Ev::Deliver { worker: next, entry }));
-                        }
+                        let next = self.groups[g].worker_idx(pos.pp_rank + 1, pos.tp_rank);
+                        self.queue
+                            .schedule_at(at + lat, gev(g, Ev::Deliver { worker: next, entry }));
                     }
                 }
                 WorkerAction::BatchOutput { entry_id, at } => {
@@ -603,7 +698,7 @@ impl SimCluster {
         let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
         // Pre-resolve the compute time for the entry at the head of the
         // inbox (if it is a batch) so the step closure is allocation-free.
-        let head = match self.groups[g].workers[widx].inbox.front() {
+        let head = match self.groups[g].workers[widx].inbox.front().map(|e| &**e) {
             Some(Entry::Batch(b)) => Some((b.model, b.batch_size(), b.seqlen)),
             _ => None,
         };
@@ -614,9 +709,17 @@ impl SimCluster {
             }
             None => 0.0,
         };
-        let actions = self.groups[g].workers[widx].step(now, |_| head_cost, dispatch, sync_loads);
-        if let Some(actions) = actions {
-            self.handle_worker_actions(g, widx, actions);
+        let mut actions = std::mem::take(&mut self.action_buf);
+        actions.clear();
+        let stepped = self.groups[g].workers[widx].step_into(
+            now,
+            |_| head_cost,
+            dispatch,
+            sync_loads,
+            &mut actions,
+        );
+        if stepped {
+            self.handle_worker_actions(g, widx, &mut actions);
         } else {
             let w = &self.groups[g].workers[widx];
             let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
@@ -625,6 +728,7 @@ impl SimCluster {
                 self.queue.schedule_at(busy_until, gev(g, Ev::Wake { worker: widx }));
             }
         }
+        self.action_buf = actions;
     }
 
     /// Pick the destination group for one arrival of catalog `model`.
@@ -685,6 +789,48 @@ impl SimCluster {
         self.route_outbox(g);
     }
 
+    /// Schedule the next open-loop arrival, if any. Called once at run
+    /// start and again each time an arrival pops, so the event queue
+    /// carries a single pending arrival regardless of trace length.
+    fn schedule_next_arrival(&mut self) {
+        if let Some(&a) = self.arrivals.get(self.next_arrival) {
+            self.next_arrival += 1;
+            self.queue
+                .schedule_at(a.at, ClusterEv::Arrival { model: a.model, input_len: a.input_len });
+        }
+    }
+
+    /// Streaming mode: drain every engine's record outboxes into scratch
+    /// buffers, fold them into the sketches/counters, and discard them.
+    /// No-op (never called) in full-retention mode.
+    fn absorb_streaming(&mut self) {
+        let Some(mut st) = self.streaming.take() else { return };
+        for (gid, grp) in self.groups.iter_mut().enumerate() {
+            st.requests.clear();
+            grp.engine.drain_completed_into(&mut st.requests);
+            for r in &st.requests {
+                if r.arrival >= st.measure_start {
+                    let l = r.latency();
+                    st.latency.add(l);
+                    st.welford.add(l);
+                }
+            }
+            st.counts[gid].requests += st.requests.len();
+            st.drops.clear();
+            grp.engine.drain_dropped_into(&mut st.drops);
+            st.counts[gid].drops += st.drops.len();
+            st.swaps.clear();
+            grp.engine.drain_swap_records_into(&mut st.swaps);
+            for s in &st.swaps {
+                if !s.cancelled {
+                    st.counts[gid].swaps += 1;
+                    st.counts[gid].swap_bytes += s.bytes as u64;
+                }
+            }
+        }
+        self.streaming = Some(st);
+    }
+
     fn drive_closed_loop_next(&mut self) {
         if let Driver::AlternatingBlocking { models, input_len, total } = self.driver {
             if self.closed_sent < total {
@@ -711,16 +857,20 @@ impl SimCluster {
     /// Run the simulation to completion and return the report.
     pub fn run(mut self) -> SimReport {
         let wall_start = std::time::Instant::now();
-        // Take the arrival schedule instead of cloning it — it can be
-        // hundreds of thousands of entries and is consumed exactly once.
-        let arrivals = match &mut self.driver {
+        // Take the arrival schedule instead of cloning it, and consume it
+        // lazily: each arrival schedules its successor when it pops
+        // (`schedule_next_arrival`), so a 10M-request trace keeps one
+        // pending arrival in the queue instead of piling in all of them
+        // upfront. The generators emit time-sorted schedules; sort
+        // defensively so a hand-built driver cannot trip the queue's
+        // no-past assert (stable, so same-time arrivals keep their order).
+        self.arrivals = match &mut self.driver {
             Driver::Open(arrivals) => std::mem::take(arrivals),
             Driver::AlternatingBlocking { .. } => Vec::new(),
         };
-        for a in arrivals {
-            self.queue
-                .schedule_at(a.at, ClusterEv::Arrival { model: a.model, input_len: a.input_len });
-        }
+        self.arrivals.sort_by(|a, b| a.at.total_cmp(&b.at));
+        self.next_arrival = 0;
+        self.schedule_next_arrival();
         if matches!(self.driver, Driver::AlternatingBlocking { .. }) {
             self.drive_closed_loop_next();
         }
@@ -729,6 +879,8 @@ impl SimCluster {
             let drops_before = self.dropped_total();
             match cev {
                 ClusterEv::Arrival { model, input_len } => {
+                    // Chain the successor before processing this arrival.
+                    self.schedule_next_arrival();
                     self.on_arrival(now, model, input_len);
                 }
                 ClusterEv::Group { g, ev } => {
@@ -786,11 +938,19 @@ impl SimCluster {
                         }
                         Ev::BatchReturn { entry_id } => {
                             let tp = self.groups[g].tp;
-                            let acks = self.groups[g].batch_acks.entry(entry_id).or_insert(0);
-                            *acks += 1;
-                            let full = *acks == tp;
+                            // TP=1 sends exactly one ack per batch — skip
+                            // the ack-counting map on that hot path.
+                            let full = tp == 1 || {
+                                let acks =
+                                    self.groups[g].batch_acks.entry(entry_id).or_insert(0);
+                                *acks += 1;
+                                let done = *acks == tp;
+                                if done {
+                                    self.groups[g].batch_acks.remove(&entry_id);
+                                }
+                                done
+                            };
                             if full {
-                                self.groups[g].batch_acks.remove(&entry_id);
                                 self.groups[g].engine.on_batch_done(now, entry_id);
                                 self.route_outbox(g);
                                 self.drive_closed_loop_next();
@@ -800,6 +960,9 @@ impl SimCluster {
                 }
             }
             self.drive_closed_loop_for_drops(drops_before);
+            if self.streaming.is_some() {
+                self.absorb_streaming();
+            }
         }
 
         debug_assert!(
@@ -808,6 +971,29 @@ impl SimCluster {
         );
         let events = self.queue.processed();
         let sim_end = self.queue.now();
+
+        // Streaming finalization: fold the Welford/t-digest state into a
+        // Summary, keep the per-group absorbed counters for the
+        // accounting pass below. In full-retention mode `streaming` is
+        // `None` and every absorbed counter reads as zero.
+        let mut streaming = self.streaming.take();
+        let streaming_latency = streaming.as_mut().map(|st| {
+            if st.welford.count() == 0 {
+                Summary::empty()
+            } else {
+                Summary {
+                    count: st.welford.count() as usize,
+                    mean: st.welford.mean(),
+                    std: st.welford.std(),
+                    min: st.latency.min(),
+                    max: st.latency.max(),
+                    p50: st.latency.quantile(0.50),
+                    p90: st.latency.quantile(0.90),
+                    p95: st.latency.quantile(0.95),
+                    p99: st.latency.quantile(0.99),
+                }
+            }
+        });
 
         // Per-group accounting + catalog-id remapping at the boundary.
         let single = self.groups.len() == 1;
@@ -832,16 +1018,20 @@ impl SimCluster {
                 s.victim = s.victim.map(|v| grp.models[v]);
                 s.group = gid;
             }
-            let completed_swaps = swaps.iter().filter(|s| !s.cancelled).count();
-            let swap_bytes: u64 =
-                swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum();
+            // Streamed counters absorbed mid-run plus whatever is still
+            // in the drained vectors (always zero + everything in
+            // full-retention mode; everything + zero in streaming mode).
+            let sc = streaming.as_ref().map(|st| st.counts[gid]).unwrap_or_default();
+            let completed_swaps = sc.swaps + swaps.iter().filter(|s| !s.cancelled).count();
+            let swap_bytes: u64 = sc.swap_bytes
+                + swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum::<u64>();
             group_stats.push(GroupStats {
                 group: gid,
                 tp: grp.tp,
                 pp: grp.pp,
                 models: grp.models.clone(),
-                requests: requests.len(),
-                drops: drops.len(),
+                requests: sc.requests + requests.len(),
+                drops: sc.drops + drops.len(),
                 swaps: completed_swaps,
                 swap_bytes,
                 swap_stats: grp.engine.swap_stats(),
@@ -911,6 +1101,7 @@ impl SimCluster {
             wall_secs: wall_start.elapsed().as_secs_f64(),
             sim_end,
             groups: group_stats,
+            streaming_latency,
         }
     }
 }
@@ -1374,5 +1565,85 @@ mod tests {
             .all(|r| (r.group == 0) == (r.model < 2)), "records keep catalog ids + group tags");
         // Group 1 hosts one model: after its preload it never swaps.
         assert_eq!(report.groups[1].swaps, 0);
+    }
+
+    #[test]
+    fn heap_backend_reproduces_calendar_runs() {
+        // The legacy BinaryHeap backend and the calendar queue implement
+        // the same (time, seq) total order — a full simulation must be
+        // bit-for-bit identical under either.
+        let run = |heap: bool| {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.scenario = Some("bursty".into());
+            let (mut sys, _) = SimSystem::from_scenario(cfg, 10.0, 7).unwrap();
+            if heap {
+                sys.use_binary_heap_queue();
+            }
+            sys.run()
+        };
+        let cal = run(false);
+        let heap = run(true);
+        assert_eq!(cal.requests, heap.requests);
+        assert_eq!(cal.swaps, heap.swaps);
+        assert_eq!(cal.drops, heap.drops);
+        assert_eq!(cal.events, heap.events);
+        assert_eq!(cal.sim_end, heap.sim_end);
+        assert_eq!(cal.h2d_bytes, heap.h2d_bytes);
+    }
+
+    #[test]
+    fn streaming_mode_matches_full_retention_aggregates() {
+        let build = || {
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.scenario = Some("bursty".into());
+            SimSystem::from_scenario(cfg, 10.0, 7).unwrap()
+        };
+        let (full_sys, ms) = build();
+        let full = full_sys.run();
+        let (mut stream_sys, ms2) = build();
+        assert_eq!(ms, ms2);
+        stream_sys.set_streaming(ms);
+        let streamed = stream_sys.run();
+
+        // Streaming discards records but must reproduce every aggregate.
+        assert!(streamed.requests.is_empty());
+        assert!(streamed.swaps.is_empty());
+        assert_eq!(streamed.events, full.events);
+        assert_eq!(streamed.sim_end, full.sim_end);
+        assert_eq!(streamed.swap_stats, full.swap_stats);
+        assert_eq!(streamed.h2d_bytes, full.h2d_bytes);
+        for (s, f) in streamed.groups.iter().zip(&full.groups) {
+            assert_eq!(s.requests, f.requests);
+            assert_eq!(s.drops, f.drops);
+            assert_eq!(s.swaps, f.swaps);
+            assert_eq!(s.swap_bytes, f.swap_bytes);
+            assert_eq!(s.events, f.events);
+        }
+
+        // The latency sketch matches the exact summary: count/min/max
+        // exactly, mean/std to float tolerance (Welford vs naive sum),
+        // percentiles within the t-digest's rank-error bound.
+        let lats = full.latencies_from(ms);
+        let exact = crate::util::stats::Summary::of(&lats).unwrap();
+        let sketch = streamed.streaming_latency.expect("streaming summary missing");
+        assert_eq!(sketch.count, exact.count);
+        assert_eq!(sketch.min, exact.min);
+        assert_eq!(sketch.max, exact.max);
+        assert!((sketch.mean - exact.mean).abs() < 1e-9 * exact.mean.max(1.0));
+        assert!((sketch.std - exact.std).abs() < 1e-6 * exact.std.max(1.0));
+        let spread = exact.max - exact.min;
+        for (got, want) in [
+            (sketch.p50, exact.p50),
+            (sketch.p90, exact.p90),
+            (sketch.p95, exact.p95),
+            (sketch.p99, exact.p99),
+        ] {
+            assert!(
+                (got - want).abs() <= 0.05 * spread + 1e-9,
+                "sketch percentile {got} vs exact {want} (spread {spread})"
+            );
+        }
+        // Full-retention runs carry no sketch.
+        assert!(full.streaming_latency.is_none());
     }
 }

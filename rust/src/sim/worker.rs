@@ -18,6 +18,7 @@ use crate::cluster::SimTime;
 use crate::coordinator::entry::{Entry, LoadDirection, ModelId};
 use crate::model::{ChunkSpec, GridPos};
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 /// Worker-local view of one model instance's shard.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -30,10 +31,13 @@ pub enum InstState {
 
 /// What the worker loop decided to do with one entry; the system layer
 /// turns these into future events.
+///
+/// Forwarded entries are `Arc`-shared: fan-out across tp-ranks and
+/// pipeline stages clones a pointer, never the batch payload.
 #[derive(Clone, Debug)]
 pub enum WorkerAction {
     /// Forward the entry to the next pipeline stage at `at`.
-    Forward { entry: Entry, at: SimTime },
+    Forward { entry: Arc<Entry>, at: SimTime },
     /// Last stage finished a batch: return output to engine at `at`.
     BatchOutput { entry_id: u64, at: SimTime },
     /// A dispatched transfer will complete at `at` (ack the engine then).
@@ -76,7 +80,7 @@ struct ChunkProgress {
 pub struct SimWorker {
     pub pos: GridPos,
     pub gpu: GpuDevice,
-    pub inbox: VecDeque<Entry>,
+    pub inbox: VecDeque<Arc<Entry>>,
     /// Worker loop is busy (processing an entry) until this time.
     pub busy_until: SimTime,
     /// Per-model shard state on this worker.
@@ -172,8 +176,9 @@ impl SimWorker {
         self.instances[model] = InstState::Loaded;
     }
 
-    /// Deliver an entry from a pipe into the inbox.
-    pub fn deliver(&mut self, entry: Entry) {
+    /// Deliver an entry from a pipe into the inbox. Entries are shared
+    /// (`Arc`): the same allocation fans out to every tp-rank.
+    pub fn deliver(&mut self, entry: Arc<Entry>) {
         self.inbox.push_back(entry);
     }
 
@@ -184,6 +189,9 @@ impl SimWorker {
     /// `compute_time` is the stage execution time for a batch entry
     /// (provided by the cost model); `dispatch_overhead` is the async
     /// dispatch cost; `sync_loads` selects the Fig 3 baseline.
+    ///
+    /// Convenience wrapper over [`SimWorker::step_into`] that allocates a
+    /// fresh action vector (tests and one-off callers).
     pub fn step(
         &mut self,
         now: SimTime,
@@ -191,12 +199,37 @@ impl SimWorker {
         dispatch_overhead: f64,
         sync_loads: bool,
     ) -> Option<Vec<WorkerAction>> {
-        if now < self.busy_until {
-            return None;
-        }
-        let entry = self.inbox.pop_front()?;
         let mut actions = Vec::new();
-        match &entry {
+        if self.step_into(now, compute_time, dispatch_overhead, sync_loads, &mut actions) {
+            Some(actions)
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free form of [`SimWorker::step`]: appends this step's
+    /// actions to `actions` (a caller-owned scratch buffer) and returns
+    /// whether an entry was processed. The hot event loop calls this once
+    /// per wake, so it must not allocate per event.
+    pub fn step_into(
+        &mut self,
+        now: SimTime,
+        compute_time: impl Fn(&crate::coordinator::entry::BatchEntry) -> f64,
+        dispatch_overhead: f64,
+        sync_loads: bool,
+        actions: &mut Vec<WorkerAction>,
+    ) -> bool {
+        if now < self.busy_until {
+            return false;
+        }
+        let entry = match self.inbox.pop_front() {
+            Some(e) => e,
+            None => return false,
+        };
+        // Every arm ends by forwarding the entry at the time the loop
+        // frees up, so the arms set `busy_until` and the shared `Forward`
+        // push below moves the `Arc` exactly once.
+        match &*entry {
             Entry::Batch(batch) => {
                 let dur = compute_time(batch);
                 // Partial residency (chunked pipeline): a batch may chase
@@ -218,7 +251,6 @@ impl SimWorker {
                 };
                 // Synchronous processing: loop blocked until kernels drain.
                 self.busy_until = finish;
-                actions.push(WorkerAction::Forward { entry, at: finish });
             }
             Entry::Load(load) if load.dir == LoadDirection::Cancel => {
                 // Abort a chunked load mid-transfer: the in-flight chunk
@@ -232,7 +264,6 @@ impl SimWorker {
                     });
                 }
                 self.busy_until = now + dispatch_overhead;
-                actions.push(WorkerAction::Forward { entry, at: self.busy_until });
             }
             Entry::Load(load) if self.chunked(load.model) => {
                 // Chunked pipeline: enqueue the first chunk; the system
@@ -246,7 +277,6 @@ impl SimWorker {
                     at: first_fin,
                 });
                 self.busy_until = now + dispatch_overhead;
-                actions.push(WorkerAction::Forward { entry, at: self.busy_until });
             }
             Entry::Load(load) => {
                 let (finish, _) = self.dispatch_transfer(now, load.model, load.dir);
@@ -260,15 +290,14 @@ impl SimWorker {
                     // Fig 3 baseline: block the loop and forward only after
                     // the transfer completes.
                     self.busy_until = finish;
-                    actions.push(WorkerAction::Forward { entry, at: finish });
                 } else {
                     // Computron (Fig 4): forward immediately after dispatch.
                     self.busy_until = now + dispatch_overhead;
-                    actions.push(WorkerAction::Forward { entry, at: self.busy_until });
                 }
             }
         }
-        Some(actions)
+        actions.push(WorkerAction::Forward { entry, at: self.busy_until });
+        true
     }
 
     /// Enqueue the H2D/D2H transfer and update shard state + memory.
@@ -484,16 +513,16 @@ mod tests {
         SimWorker::new_homogeneous(GridPos { pp_rank: 0, tp_rank: 0 }, gpu, 2, 100, 1)
     }
 
-    fn batch(id: u64, model: usize) -> Entry {
-        Entry::Batch(BatchEntry::new(
+    fn batch(id: u64, model: usize) -> Arc<Entry> {
+        Arc::new(Entry::Batch(BatchEntry::new(
             id,
             model,
             vec![Request { id: 1, model, arrival: 0.0, input_len: 2 }],
-        ))
+        )))
     }
 
-    fn load(id: u64, model: usize, dir: LoadDirection) -> Entry {
-        Entry::Load(LoadEntry { id, model, dir })
+    fn load(id: u64, model: usize, dir: LoadDirection) -> Arc<Entry> {
+        Arc::new(Entry::Load(LoadEntry { id, model, dir }))
     }
 
     #[test]
@@ -878,6 +907,38 @@ mod tests {
             a1.iter().any(|a| matches!(a, WorkerAction::TransferDone { .. })),
             "one-chunk model dispatches monolithically: {a1:?}"
         );
+    }
+
+    #[test]
+    fn forward_shares_payload_allocation() {
+        // The fan-out bugfix: forwarding must reuse the delivered `Arc`,
+        // never deep-clone the batch payload.
+        let mut w = worker();
+        w.force_loaded(0);
+        let e = batch(1, 0);
+        w.deliver(e.clone());
+        let actions = w.step(0.0, |_| 2.0, 0.001, false).unwrap();
+        match &actions[0] {
+            WorkerAction::Forward { entry, .. } => assert!(Arc::ptr_eq(entry, &e)),
+            other => panic!("expected Forward, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_into_reuses_caller_buffer() {
+        let mut w = worker();
+        w.force_loaded(0);
+        w.deliver(batch(1, 0));
+        w.deliver(batch(2, 0));
+        let mut buf = Vec::new();
+        assert!(w.step_into(0.0, |_| 1.0, 0.001, false, &mut buf));
+        assert_eq!(buf.len(), 1);
+        // Busy until 1.0: nothing processed, buffer untouched.
+        assert!(!w.step_into(0.5, |_| 1.0, 0.001, false, &mut buf));
+        assert_eq!(buf.len(), 1);
+        // Appends rather than clearing: caller owns buffer lifecycle.
+        assert!(w.step_into(1.0, |_| 1.0, 0.001, false, &mut buf));
+        assert_eq!(buf.len(), 2);
     }
 
     #[test]

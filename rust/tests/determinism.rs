@@ -1,0 +1,82 @@
+//! Determinism regression pins (DESIGN.md §9): the simulator must be a
+//! pure function of (config, seed). Two runs of every registered
+//! scenario at G ∈ {1, 2, 4} replicated groups must produce identical
+//! `SimReport`s — and the calendar event queue must reproduce the legacy
+//! `BinaryHeap` backend bit-for-bit, since both implement the same
+//! (time, seq) total order.
+
+use computron::config::{PlacementSpec, RouterKind, SystemConfig};
+use computron::sim::{SimCluster, SimReport};
+use computron::workload::scenarios;
+
+const SEED: u64 = 0xDE7E_2211;
+const DURATION: f64 = 5.0;
+
+fn run(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some(scenario.to_string());
+    cfg.placement = Some(PlacementSpec::replicated(
+        g,
+        cfg.parallel,
+        3,
+        RouterKind::LeastLoaded,
+    ));
+    let (mut sys, _) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
+    if heap_queue {
+        sys.use_binary_heap_queue();
+    }
+    sys.run()
+}
+
+fn assert_identical(tag: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.requests, b.requests, "{tag}: request records differ");
+    assert_eq!(a.drops, b.drops, "{tag}: drop records differ");
+    assert_eq!(a.swaps, b.swaps, "{tag}: swap records differ");
+    assert_eq!(a.swap_stats, b.swap_stats, "{tag}: swap stats differ");
+    assert_eq!(a.violations, b.violations, "{tag}: violations differ");
+    assert_eq!(a.oom_events, b.oom_events, "{tag}: oom differs");
+    assert_eq!(a.mem_high_water, b.mem_high_water, "{tag}: high water differs");
+    assert_eq!(a.h2d_bytes, b.h2d_bytes, "{tag}: h2d differs");
+    assert_eq!(a.d2h_bytes, b.d2h_bytes, "{tag}: d2h differs");
+    assert_eq!(a.events, b.events, "{tag}: event counts differ");
+    assert_eq!(a.sim_end, b.sim_end, "{tag}: end times differ");
+    assert_eq!(a.groups.len(), b.groups.len(), "{tag}: group counts differ");
+    for (x, y) in a.groups.iter().zip(&b.groups) {
+        assert_eq!(
+            (x.requests, x.drops, x.swaps, x.swap_bytes, x.events),
+            (y.requests, y.drops, y.swaps, y.swap_bytes, y.events),
+            "{tag}: group {} stats differ",
+            x.group
+        );
+    }
+}
+
+/// Same config + seed ⇒ identical reports, across the whole scenario
+/// registry and every replication factor.
+#[test]
+fn repeated_runs_identical_across_registry() {
+    for &scenario in scenarios::names() {
+        for g in [1usize, 2, 4] {
+            let a = run(scenario, g, false);
+            let b = run(scenario, g, false);
+            assert_identical(&format!("{scenario}/G={g}"), &a, &b);
+            assert!(
+                a.requests.len() + a.drops.len() > 0,
+                "{scenario}/G={g}: vacuous run"
+            );
+        }
+    }
+}
+
+/// The calendar queue's pop order is exactly the heap's (time, seq)
+/// order, so whole simulations must agree bit-for-bit.
+#[test]
+fn calendar_queue_matches_heap_backend_across_registry() {
+    for &scenario in scenarios::names() {
+        for g in [1usize, 4] {
+            let cal = run(scenario, g, false);
+            let heap = run(scenario, g, true);
+            assert_identical(&format!("{scenario}/G={g}/backend"), &cal, &heap);
+        }
+    }
+}

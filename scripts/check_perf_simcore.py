@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""CI perf-smoke gate for the simulator core (EXPERIMENTS.md §Perf).
+
+Compares a fresh ``perf_simcore`` run against the committed baseline
+``BENCH_perf_simcore.json`` and fails on a >20% events/sec regression in
+any comparable cell (same scenario/groups/backend, or same queue-churn
+backend/pending size).
+
+Conventions:
+
+- The committed baseline is regenerated on the CI reference machine and
+  marked ``"calibrated": true``. A baseline with ``"calibrated": false``
+  (bootstrap placeholder, or hand-edited) makes every comparison
+  advisory: differences are printed but never fail the job, since the
+  numbers were not produced on comparable hardware.
+- Fast-mode and full-mode runs are not comparable; a mode mismatch is
+  also advisory.
+
+Usage: check_perf_simcore.py <baseline.json> <new.json>
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def index_cells(doc):
+    cells = {}
+    for cell in doc.get("e2e", []):
+        key = ("e2e", cell["scenario"], cell["groups"], cell["backend"])
+        cells[key] = cell["events_per_sec"]
+    for cell in doc.get("queue_churn", []):
+        key = ("churn", cell["backend"], cell["pending"])
+        cells[key] = cell["events_per_sec"]
+    return cells
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    baseline = load(sys.argv[1])
+    new = load(sys.argv[2])
+
+    advisory = []
+    if not baseline.get("calibrated", False):
+        advisory.append("baseline is uncalibrated (bootstrap placeholder)")
+    if baseline.get("fast") != new.get("fast"):
+        advisory.append(
+            f"mode mismatch: baseline fast={baseline.get('fast')} "
+            f"vs new fast={new.get('fast')}"
+        )
+
+    base_cells = index_cells(baseline)
+    new_cells = index_cells(new)
+    regressions = []
+    compared = 0
+    for key, base_rate in sorted(base_cells.items()):
+        if key not in new_cells or base_rate <= 0:
+            continue
+        compared += 1
+        new_rate = new_cells[key]
+        ratio = new_rate / base_rate
+        marker = ""
+        if ratio < 1.0 - TOLERANCE:
+            marker = "  << REGRESSION"
+            regressions.append((key, base_rate, new_rate, ratio))
+        print(
+            f"{'/'.join(str(k) for k in key):48s} "
+            f"base {base_rate:14.1f}  new {new_rate:14.1f}  "
+            f"ratio {ratio:5.2f}{marker}"
+        )
+
+    if compared == 0:
+        print("WARNING: no comparable cells between baseline and new run")
+
+    if regressions:
+        print(
+            f"\n{len(regressions)} cell(s) regressed by more than "
+            f"{TOLERANCE:.0%} in events/sec."
+        )
+        if advisory:
+            print("ADVISORY ONLY (not failing):")
+            for reason in advisory:
+                print(f"  - {reason}")
+            return 0
+        return 1
+
+    print("\nperf_simcore: no events/sec regression beyond tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
