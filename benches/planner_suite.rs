@@ -1,0 +1,194 @@
+//! Planner suite — the placement planner's headline oracle (DESIGN.md
+//! §10): on the skewed hetero fleet (`configs/hetero_4model.json`, 4:3:2:1
+//! shares, 0.8–4 s SLOs) under zipf and flash-crowd overload, the plan
+//! found by `computron plan` with an 8-GPU budget must **strictly beat**
+//! every hand-written preset and every single-group baseline on goodput:
+//!
+//! - `hetero_4model` itself (the legacy G=1 tp2×pp2 layout, 4 GPUs);
+//! - the `groups_2x2` preset's placement (2 × tp2×pp2 replicated groups,
+//!   resident-affinity routing, 8 GPUs) applied to the same fleet;
+//! - the G=1 8-GPU scale-up (one tp2×pp4 group hosting everything).
+//!
+//! All candidates — the planner's output and every baseline — are scored
+//! by one shared `sim::EvalHarness` trace per cell, so the comparison is
+//! free of workload sampling noise. Further oracles on every cell:
+//!
+//! - the annealer never returns worse than its greedy seed;
+//! - the planner spends at most its evaluation budget;
+//! - the winning spec partitions exactly the 8-GPU budget;
+//! - re-evaluating the winning spec on the bench's own harness
+//!   reproduces the planner's reported outcome bit-for-bit (the
+//!   determinism contract, at full bench scale).
+//!
+//! ```bash
+//! cargo bench --bench planner_suite              # full sweep
+//! cargo bench --bench planner_suite -- --fast    # CI smoke subset
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use computron::config::{ParallelConfig, PlacementSpec, PlannerConfig, SystemConfig};
+use computron::coordinator::planner;
+use computron::sim::EvalHarness;
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+
+const SEED: u64 = 0x914A_C0DE;
+const GPU_BUDGET: usize = 8;
+
+fn preset(name: &str) -> SystemConfig {
+    let path = format!("configs/{name}.json");
+    SystemConfig::from_file(std::path::Path::new(&path))
+        .unwrap_or_else(|e| panic!("preset {path} must load: {e}"))
+}
+
+/// The three hand-written baselines the planner must beat, labelled.
+fn baselines(base: &SystemConfig) -> Vec<(&'static str, PlacementSpec)> {
+    vec![
+        // The fleet's own legacy layout: one tp2 x pp2 group, 4 GPUs.
+        ("hetero_4model G=1 tp2pp2", base.resolved_placement()),
+        // The checked-in 2-group preset's placement on the same fleet.
+        ("groups_2x2 preset", preset("groups_2x2").resolved_placement()),
+        // Single-group scale-up to the full budget: one tp2 x pp4 group.
+        (
+            "single 8-GPU tp2pp4",
+            PlacementSpec::single(ParallelConfig::new(2, 4), base.num_models()),
+        ),
+    ]
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let duration = if fast { 6.0 } else { 20.0 };
+    let eval_budget = if fast { 24 } else { 64 };
+    // Offered load far above single-group capacity (matches the
+    // group_scaling overload cells): planning matters when capacity-bound.
+    let cells: &[(&str, f64)] = if fast {
+        &[("zipf", 60.0)]
+    } else {
+        &[("zipf", 60.0), ("flash-crowd", 32.0)]
+    };
+
+    let base = preset("hetero_4model");
+    section(&format!(
+        "Planner suite: {} catalog, {GPU_BUDGET}-GPU budget, {} cells x {duration} s, {eval_budget} evals",
+        "hetero_4model",
+        cells.len()
+    ));
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cells_json: Vec<Json> = Vec::new();
+    for &(scenario, rate_scale) in cells {
+        let mut knobs = PlannerConfig::for_config(&base, GPU_BUDGET);
+        knobs.duration = duration;
+        knobs.rate_scale = rate_scale;
+        knobs.eval_budget = eval_budget;
+        knobs.seed = SEED;
+
+        let plan = planner::plan(&base, scenario, &knobs)
+            .unwrap_or_else(|e| panic!("{scenario}: planner failed: {e}"));
+        let tag = format!("{scenario}@x{rate_scale}");
+        assert!(
+            plan.score >= plan.greedy_score,
+            "{tag}: annealer returned worse than its greedy seed ({} < {})",
+            plan.score,
+            plan.greedy_score
+        );
+        assert!(
+            plan.evals <= eval_budget,
+            "{tag}: spent {} evals over the {eval_budget} budget",
+            plan.evals
+        );
+        assert_eq!(
+            plan.spec.world(),
+            GPU_BUDGET,
+            "{tag}: plan must partition exactly the GPU budget"
+        );
+
+        // Score the plan and every baseline on one shared trace.
+        let harness = EvalHarness::new(base.clone(), scenario, duration, SEED, rate_scale)
+            .expect("scenario resolves");
+        let planned = harness.evaluate(&plan.spec).expect("plan spec evaluates");
+        assert_eq!(
+            planned, plan.outcome,
+            "{tag}: re-evaluating the plan must reproduce the planner's outcome bit-for-bit"
+        );
+
+        let mut cell_rows = vec![("planner".to_string(), plan.spec.groups.len(), planned)];
+        for (label, spec) in baselines(&base) {
+            let outcome = harness
+                .evaluate(&spec)
+                .unwrap_or_else(|e| panic!("{tag}: baseline {label} must evaluate: {e}"));
+            assert!(
+                planned.goodput > outcome.goodput,
+                "{tag}: planner goodput {:.2} does not strictly beat {label} ({:.2})",
+                planned.goodput,
+                outcome.goodput
+            );
+            cell_rows.push((label.to_string(), spec.groups.len(), outcome));
+        }
+
+        let mut outcomes_json = Vec::new();
+        for (label, groups, o) in &cell_rows {
+            rows.push(vec![
+                scenario.to_string(),
+                label.clone(),
+                groups.to_string(),
+                format!("{:.2}", o.goodput),
+                format!("{:.1}%", 100.0 * o.attainment),
+                format!("{:.3}", o.p99),
+                o.drops.to_string(),
+            ]);
+            outcomes_json.push(Json::from_pairs(vec![
+                ("candidate", label.as_str().into()),
+                ("groups", (*groups).into()),
+                ("goodput", o.goodput.into()),
+                ("attainment", o.attainment.into()),
+                ("p99", o.p99.into()),
+                ("completed", o.completed.into()),
+                ("attained", o.attained.into()),
+                ("drops", o.drops.into()),
+            ]));
+        }
+        println!(
+            "{tag}: planner ({} groups, {} evals over {} candidates) strictly beats all {} baselines",
+            plan.spec.groups.len(),
+            plan.evals,
+            plan.enumerated,
+            cell_rows.len() - 1
+        );
+        cells_json.push(Json::from_pairs(vec![
+            ("scenario", scenario.into()),
+            ("rate_scale", rate_scale.into()),
+            ("evals", plan.evals.into()),
+            ("enumerated", plan.enumerated.into()),
+            ("greedy_score", plan.greedy_score.into()),
+            ("score", plan.score.into()),
+            ("plan", plan.spec.to_json()),
+            ("outcomes", Json::Arr(outcomes_json)),
+        ]));
+    }
+
+    table(
+        &["scenario", "candidate", "groups", "goodput (req/s)", "attainment", "p99 (s)", "drops"],
+        &rows,
+    );
+    println!(
+        "\noracles held on every cell: annealer >= greedy seed, budget respected, \
+         exact budget partition, bit-for-bit re-evaluation, and strict goodput wins \
+         over every hand-written and single-group baseline"
+    );
+
+    let payload = Json::from_pairs(vec![
+        ("experiment", "planner_suite".into()),
+        ("duration", duration.into()),
+        ("eval_budget", eval_budget.into()),
+        ("gpu_budget", GPU_BUDGET.into()),
+        ("seed", SEED.into()),
+        ("fast", fast.into()),
+        ("cells", Json::Arr(cells_json)),
+    ]);
+    common::save_report("planner_suite", payload.clone());
+    common::save_bench_json("planner_suite", payload);
+}

@@ -721,6 +721,154 @@ impl PlacementSpec {
     }
 }
 
+/// Placement-planner optimization objective (`coordinator::planner`,
+/// DESIGN.md §10). Every objective is scored so that **higher is
+/// better**: `Goodput` and `Attainment` score as themselves, `P99` as
+/// negated tail latency (`sim::EvalOutcome::score`). All three are read
+/// from streaming-mode simulator runs (`SimReport::streaming_latency` /
+/// `streaming_counts`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Deadline-attained completions per measured second.
+    Goodput,
+    /// Attained fraction of measured arrivals (drops count as misses).
+    Attainment,
+    /// p99 latency over measured completions (minimized).
+    P99,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "goodput" => Some(Objective::Goodput),
+            "attainment" => Some(Objective::Attainment),
+            "p99" => Some(Objective::P99),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Goodput => "goodput",
+            Objective::Attainment => "attainment",
+            Objective::P99 => "p99",
+        }
+    }
+}
+
+/// Knobs for the simulator-in-the-loop placement planner
+/// (`coordinator::planner`): the GPU budget to partition, the candidate
+/// per-group shape grid, the search budget in *simulator evaluations*,
+/// and the forecast workload the candidates are scored against.
+///
+/// The planner is a pure function of (base config, scenario, knobs) —
+/// `seed` drives every stochastic choice in the annealer, so a fixed
+/// seed reproduces the plan bit-for-bit (pinned by
+/// `rust/tests/planner_prop.rs`).
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Total GPUs the plan may use; every candidate partitions exactly
+    /// this many (the planner never leaves hardware idle).
+    pub gpu_budget: usize,
+    /// Candidate per-group TP×PP shapes. Order matters: earlier shapes
+    /// win score ties, so the base grid is listed first by
+    /// [`PlannerConfig::for_config`] (that is what makes a 1-model
+    /// catalog degenerate to the legacy single-group spec).
+    pub shapes: Vec<ParallelConfig>,
+    /// Upper bound on the number of groups in a candidate.
+    pub max_groups: usize,
+    pub objective: Objective,
+    /// Search budget counted in simulator evaluations (cache hits on
+    /// already-scored candidates are free).
+    pub eval_budget: usize,
+    /// Seed for both the forecast trace and the annealer's RNG (the
+    /// planner derives a distinct annealer stream from it).
+    pub seed: u64,
+    /// Router written into every candidate spec.
+    pub router: RouterKind,
+    /// Measured-window length of each scoring run, simulated seconds.
+    pub duration: f64,
+    /// Offered-load multiplier of the planning forecast. The default
+    /// (60×) matches the skewed-hetero overload suite
+    /// (`benches/planner_suite.rs`): planning matters exactly when the
+    /// fleet is capacity-bound.
+    pub rate_scale: f64,
+}
+
+impl PlannerConfig {
+    /// Default knobs for a `gpu_budget`-GPU plan: shape grid
+    /// tp ∈ {1,2,4} × pp ∈ {1,2,4} capped at the budget, up to
+    /// min(budget, 8) groups, goodput objective, 48 evaluations.
+    pub fn new(gpu_budget: usize) -> PlannerConfig {
+        let mut shapes = Vec::new();
+        for &tp in &[1usize, 2, 4] {
+            for &pp in &[1usize, 2, 4] {
+                if tp * pp <= gpu_budget {
+                    shapes.push(ParallelConfig::new(tp, pp));
+                }
+            }
+        }
+        PlannerConfig {
+            gpu_budget,
+            shapes,
+            max_groups: gpu_budget.min(8),
+            objective: Objective::Goodput,
+            eval_budget: 48,
+            seed: 42,
+            router: RouterKind::RoundRobin,
+            duration: 6.0,
+            rate_scale: 60.0,
+        }
+    }
+
+    /// Default knobs anchored to a base config: like
+    /// [`PlannerConfig::new`] but with the base TP×PP grid moved to the
+    /// front of the shape list so it wins enumeration-order ties.
+    pub fn for_config(base: &SystemConfig, gpu_budget: usize) -> PlannerConfig {
+        let mut knobs = PlannerConfig::new(gpu_budget);
+        knobs.shapes.retain(|s| *s != base.parallel);
+        knobs.shapes.insert(0, base.parallel);
+        knobs
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |m: String| Err(ConfigError::BadPlanner(m));
+        if self.gpu_budget == 0 {
+            return bad("gpu_budget must be >= 1".into());
+        }
+        if self.shapes.is_empty() {
+            return bad("the candidate shape grid is empty".into());
+        }
+        for s in &self.shapes {
+            if s.world() == 0 {
+                return bad(format!("shape tp{} pp{} has no workers", s.tp, s.pp));
+            }
+            if s.world() > self.gpu_budget {
+                return bad(format!(
+                    "shape tp{} pp{} needs {} GPUs but the budget is {}",
+                    s.tp,
+                    s.pp,
+                    s.world(),
+                    self.gpu_budget
+                ));
+            }
+        }
+        if self.max_groups == 0 {
+            return bad("max_groups must be >= 1".into());
+        }
+        if self.eval_budget == 0 {
+            return bad("eval_budget must be >= 1 simulator evaluation".into());
+        }
+        if !(self.duration.is_finite() && self.duration > 0.0) {
+            return bad(format!("duration must be positive, got {}", self.duration));
+        }
+        if !(self.rate_scale.is_finite() && self.rate_scale > 0.0) {
+            return bad(format!("rate_scale must be positive, got {}", self.rate_scale));
+        }
+        Ok(())
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -759,6 +907,7 @@ pub enum ConfigError {
     BadSlos(String),
     BadDeployment(String),
     BadPlacement(String),
+    BadPlanner(String),
     Json(String),
 }
 
@@ -795,6 +944,7 @@ impl std::fmt::Display for ConfigError {
             ConfigError::BadSlos(m) => write!(f, "bad slos: {m}"),
             ConfigError::BadDeployment(m) => write!(f, "bad catalog entry: {m}"),
             ConfigError::BadPlacement(m) => write!(f, "bad placement: {m}"),
+            ConfigError::BadPlanner(m) => write!(f, "bad planner config: {m}"),
             ConfigError::Json(m) => write!(f, "{m}"),
         }
     }

@@ -6,6 +6,7 @@
 
 pub mod engine;
 pub mod entry;
+pub mod planner;
 pub mod policy;
 pub mod prefetch;
 pub mod queues;
@@ -14,6 +15,7 @@ pub mod scheduler;
 pub mod swap;
 
 pub use engine::{DropRecord, Engine, RequestRecord, SwapRecord};
+pub use planner::{enumerate_candidates, plan, PlanOutcome};
 pub use router::{GroupView, Router};
 pub use scheduler::{Candidate, ModelCost, SchedCtx, Scheduler};
 pub use entry::{BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId};

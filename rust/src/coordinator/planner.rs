@@ -1,0 +1,665 @@
+//! Simulator-in-the-loop placement planner (DESIGN.md §10).
+//!
+//! PR 5 made cluster placement — group shapes, model assignment,
+//! replication, routing — a first-class config axis, but left choosing
+//! one to hand-written JSON. This module searches that space the way
+//! AlpaServe does, with the calendar-queue simulator (PR 6) as the
+//! objective function: candidates are scored by replaying one shared
+//! forecast trace (`sim::EvalHarness`) in streaming mode, so thousands
+//! of evaluations fit in a CI smoke budget and two candidates' scores
+//! differ only because their placements do.
+//!
+//! The search is **enumerate + greedy seed + simulated annealing**:
+//!
+//! 1. *Enumerate*: partition the GPU budget into multisets of per-group
+//!    TP×PP shapes from the knob grid, and for each partition emit a
+//!    small set of deterministic assignment heuristics (demand-balanced
+//!    dedicated, fully replicated, dedicated-plus-hot-replicas). Every
+//!    emitted candidate passes the full `SystemConfig::validate`
+//!    placement feasibility gate (shard divisibility + per-group
+//!    memory bound) — pinned by `rust/tests/planner_prop.rs`.
+//! 2. *Greedy seed*: score enumerated candidates round-robin across
+//!    group counts until half the evaluation budget is spent; the best
+//!    becomes the annealer's start (ties keep the earliest-scored, and
+//!    the round-robin starts at G=1 with the base grid first — that is
+//!    what makes a homogeneous 1-model catalog degenerate to the legacy
+//!    single-group spec bit-for-bit).
+//! 3. *Anneal*: local moves (move/add/drop a replica, swap two models,
+//!    jump to another enumerated candidate) under a linear cooling
+//!    schedule, driven by a seeded `util::rng::Rng`. Scores memoize on
+//!    the candidate's canonical key, so revisits are free. The
+//!    best-so-far candidate is tracked separately and only replaced by
+//!    a strictly better score, so the planner can never return a plan
+//!    worse than its greedy seed.
+//!
+//! The whole pipeline is a pure function of (base config, scenario,
+//! knobs): the forecast trace is seeded by `knobs.seed` and so is the
+//! annealer, so a fixed seed reproduces the plan bit-for-bit.
+
+use crate::config::{
+    GroupSpec, Objective, ParallelConfig, PlacementSpec, PlannerConfig, SystemConfig,
+};
+use crate::model::spec::ModelSpec;
+use crate::sim::{EvalHarness, EvalOutcome};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+
+/// The planner's result: the winning spec (ready for
+/// `simulate --placement`), its score and measured outcome, and enough
+/// search telemetry to audit the run.
+#[derive(Clone, Debug)]
+pub struct PlanOutcome {
+    /// Best placement found (canonical group order).
+    pub spec: PlacementSpec,
+    /// Best score under `objective` (higher is better).
+    pub score: f64,
+    /// The winning candidate's measured simulation outcome.
+    pub outcome: EvalOutcome,
+    pub objective: Objective,
+    /// The greedy seed the annealer started from, and its score — the
+    /// annealer's result is never worse (`score >= greedy_score`).
+    pub greedy_spec: PlacementSpec,
+    pub greedy_score: f64,
+    /// Simulator evaluations actually spent (<= the knob budget; cache
+    /// hits are free).
+    pub evals: usize,
+    /// Feasible candidates the enumerator emitted.
+    pub enumerated: usize,
+}
+
+impl PlanOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("objective", self.objective.name().into()),
+            ("score", self.score.into()),
+            ("greedy_score", self.greedy_score.into()),
+            ("evals", self.evals.into()),
+            ("enumerated", self.enumerated.into()),
+            ("goodput", self.outcome.goodput.into()),
+            ("attainment", self.outcome.attainment.into()),
+            ("p99", self.outcome.p99.into()),
+            ("spec", self.spec.to_json()),
+        ])
+    }
+}
+
+/// One search point: per-group (shape, hosted catalog ids), kept in
+/// canonical order so logically identical candidates share one key (and
+/// therefore one cached score and one emitted spec).
+#[derive(Clone, Debug, PartialEq)]
+struct Candidate {
+    groups: Vec<(ParallelConfig, Vec<usize>)>,
+}
+
+impl Candidate {
+    /// Sort each group's model list, then the groups by (world desc,
+    /// tp desc, models asc) — a total order, since world and tp fix pp.
+    fn canonicalize(&mut self) {
+        for (_, models) in &mut self.groups {
+            models.sort_unstable();
+        }
+        self.groups.sort_by(|a, b| (b.0.world(), b.0.tp, &a.1).cmp(&(a.0.world(), a.0.tp, &b.1)));
+    }
+
+    /// Canonical memoization key (requires `canonicalize` first).
+    fn key(&self) -> String {
+        let parts: Vec<String> = self
+            .groups
+            .iter()
+            .map(|(p, ms)| {
+                let ids: Vec<String> = ms.iter().map(|m| m.to_string()).collect();
+                format!("tp{}pp{}:{}", p.tp, p.pp, ids.join(","))
+            })
+            .collect();
+        parts.join("|")
+    }
+
+    fn spec(&self, spec_router: crate::config::RouterKind) -> PlacementSpec {
+        PlacementSpec {
+            router: spec_router,
+            groups: self
+                .groups
+                .iter()
+                .map(|(p, ms)| GroupSpec::new(*p, ms.clone()))
+                .collect(),
+        }
+    }
+
+    /// Groups hosting catalog model `m`.
+    fn hosts(&self, m: usize) -> Vec<usize> {
+        self.groups
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, ms))| ms.contains(&m))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Full-config feasibility gate: exactly the PR 5 placement validation
+/// (shard divisibility on every hosting group's grid plus the per-group
+/// `resident_cap`-largest-shards memory bound).
+fn is_feasible(base: &SystemConfig, spec: &PlacementSpec) -> bool {
+    let mut cfg = base.clone();
+    cfg.placement = Some(spec.clone());
+    cfg.validate().is_ok()
+}
+
+/// Cheap single-group feasibility used while *building* assignments
+/// (the emitted candidate still passes the full gate above).
+fn group_feasible(
+    base: &SystemConfig,
+    specs: &[ModelSpec],
+    shape: ParallelConfig,
+    models: &[usize],
+) -> bool {
+    let mut shards = Vec::with_capacity(models.len());
+    for &m in models {
+        if crate::model::shard::validate(&specs[m], shape.tp, shape.pp).is_err() {
+            return false;
+        }
+        match crate::model::shard::max_shard_bytes(&specs[m], shape.tp, shape.pp) {
+            Ok(b) => shards.push(b),
+            Err(_) => return false,
+        }
+    }
+    shards.sort_unstable_by(|a, b| b.cmp(a));
+    let resident = base.engine.resident_cap.min(shards.len());
+    shards.iter().take(resident).sum::<usize>() <= base.hardware.gpu_mem
+}
+
+/// Multisets of shape indices whose worlds sum to exactly the GPU
+/// budget, at most `max_groups` parts, in deterministic order: fewer
+/// groups first, then lexicographic shape-index order. Indices within a
+/// partition are non-decreasing (canonical multiset form).
+fn shape_partitions(knobs: &PlannerConfig) -> Vec<Vec<usize>> {
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    let mut stack: Vec<usize> = Vec::new();
+    fn recurse(
+        knobs: &PlannerConfig,
+        start: usize,
+        remaining: usize,
+        stack: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+    ) {
+        if remaining == 0 {
+            out.push(stack.clone());
+            return;
+        }
+        if stack.len() == knobs.max_groups {
+            return;
+        }
+        for i in start..knobs.shapes.len() {
+            let w = knobs.shapes[i].world();
+            if w <= remaining {
+                stack.push(i);
+                recurse(knobs, i, remaining - w, stack, out);
+                stack.pop();
+            }
+        }
+    }
+    recurse(knobs, 0, knobs.gpu_budget, &mut stack, &mut out);
+    out.sort_by(|a, b| (a.len(), a).cmp(&(b.len(), b)));
+    out
+}
+
+/// Per-model demand proxy: catalog rate shares (uniform when unset).
+fn demands(base: &SystemConfig) -> Vec<f64> {
+    base.models.rate_shares()
+}
+
+/// Demand-balanced dedicated assignment: models in demand-descending
+/// order each go to the feasible group with the lowest projected
+/// demand-per-GPU. `None` when some model fits no group or a group ends
+/// up empty (more groups than models).
+fn dedicated_assignment(
+    base: &SystemConfig,
+    specs: &[ModelSpec],
+    shapes: &[ParallelConfig],
+    demand: &[f64],
+) -> Option<Candidate> {
+    let n = demand.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    // Stable sort + index tiebreak: deterministic for equal demands.
+    order.sort_by(|&a, &b| demand[b].partial_cmp(&demand[a]).unwrap().then(a.cmp(&b)));
+    let mut groups: Vec<(ParallelConfig, Vec<usize>)> =
+        shapes.iter().map(|&p| (p, Vec::new())).collect();
+    let mut load = vec![0.0f64; shapes.len()];
+    for &m in &order {
+        let mut best: Option<(f64, usize)> = None;
+        for (g, (shape, models)) in groups.iter().enumerate() {
+            let mut with = models.clone();
+            with.push(m);
+            if !group_feasible(base, specs, *shape, &with) {
+                continue;
+            }
+            let projected = (load[g] + demand[m]) / shape.world() as f64;
+            // Strictly-less keeps the first (lowest-index) group on ties.
+            if best.map(|(b, _)| projected < b).unwrap_or(true) {
+                best = Some((projected, g));
+            }
+        }
+        let (_, g) = best?;
+        groups[g].1.push(m);
+        load[g] += demand[m];
+    }
+    if groups.iter().any(|(_, ms)| ms.is_empty()) {
+        return None;
+    }
+    Some(Candidate { groups })
+}
+
+/// Fully replicated assignment: every group hosts the whole catalog.
+fn replicated_assignment(
+    base: &SystemConfig,
+    specs: &[ModelSpec],
+    shapes: &[ParallelConfig],
+    n: usize,
+) -> Option<Candidate> {
+    let all: Vec<usize> = (0..n).collect();
+    for &shape in shapes {
+        if !group_feasible(base, specs, shape, &all) {
+            return None;
+        }
+    }
+    Some(Candidate { groups: shapes.iter().map(|&p| (p, all.clone())).collect() })
+}
+
+/// Dedicated assignment plus one extra replica of each model (hottest
+/// first) on the least-loaded group with room — the "replicate the hot
+/// head" heuristic AlpaServe motivates.
+fn hot_replica_assignment(
+    base: &SystemConfig,
+    specs: &[ModelSpec],
+    shapes: &[ParallelConfig],
+    demand: &[f64],
+) -> Option<Candidate> {
+    let mut cand = dedicated_assignment(base, specs, shapes, demand)?;
+    let mut load: Vec<f64> = cand
+        .groups
+        .iter()
+        .map(|(p, ms)| ms.iter().map(|&m| demand[m]).sum::<f64>() / p.world() as f64)
+        .collect();
+    let n = demand.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| demand[b].partial_cmp(&demand[a]).unwrap().then(a.cmp(&b)));
+    for &m in &order {
+        let mut best: Option<(f64, usize)> = None;
+        for (g, (shape, models)) in cand.groups.iter().enumerate() {
+            if models.contains(&m) {
+                continue;
+            }
+            let mut with = models.clone();
+            with.push(m);
+            if !group_feasible(base, specs, *shape, &with) {
+                continue;
+            }
+            if best.map(|(b, _)| load[g] < b).unwrap_or(true) {
+                best = Some((load[g], g));
+            }
+        }
+        if let Some((_, g)) = best {
+            cand.groups[g].1.push(m);
+            let w = cand.groups[g].0.world() as f64;
+            load[g] += demand[m] / w;
+        }
+    }
+    Some(cand)
+}
+
+/// Enumerate the feasible candidate pool: every shape partition of the
+/// budget × the three assignment heuristics, canonicalized, deduped,
+/// and filtered through the full `SystemConfig::validate` gate.
+/// Deterministic: partition order is fixed and dedup keeps first.
+fn enumerate_pool(base: &SystemConfig, knobs: &PlannerConfig) -> Vec<Candidate> {
+    let specs = match base.specs() {
+        Ok(s) => s,
+        Err(_) => return Vec::new(),
+    };
+    let demand = demands(base);
+    let n = demand.len();
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut pool = Vec::new();
+    for part in shape_partitions(knobs) {
+        let shapes: Vec<ParallelConfig> = part.iter().map(|&i| knobs.shapes[i]).collect();
+        let variants = [
+            dedicated_assignment(base, &specs, &shapes, &demand),
+            replicated_assignment(base, &specs, &shapes, n),
+            hot_replica_assignment(base, &specs, &shapes, &demand),
+        ];
+        for mut cand in variants.into_iter().flatten() {
+            cand.canonicalize();
+            if !seen.insert(cand.key()) {
+                continue;
+            }
+            if is_feasible(base, &cand.spec(knobs.router)) {
+                pool.push(cand);
+            }
+        }
+    }
+    pool
+}
+
+/// Public view of the enumerator for the property tests: every returned
+/// spec already passed the full placement feasibility gate.
+pub fn enumerate_candidates(base: &SystemConfig, knobs: &PlannerConfig) -> Vec<PlacementSpec> {
+    enumerate_pool(base, knobs).iter().map(|c| c.spec(knobs.router)).collect()
+}
+
+/// Seeding order: round-robin across group counts ascending (first
+/// candidate of each G, then second of each, ...), preserving
+/// enumeration order within a G class. Guarantees the single-group base
+/// layout is scored first (tie anchor) while high-G candidates still
+/// get seeded within a small budget.
+fn seeding_order(pool: &[Candidate]) -> Vec<usize> {
+    let mut by_g: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, c) in pool.iter().enumerate() {
+        let g = c.groups.len();
+        match by_g.iter_mut().find(|(gg, _)| *gg == g) {
+            Some((_, v)) => v.push(i),
+            None => by_g.push((g, vec![i])),
+        }
+    }
+    by_g.sort_by_key(|(g, _)| *g);
+    let mut order = Vec::with_capacity(pool.len());
+    let mut round = 0;
+    loop {
+        let mut emitted = false;
+        for (_, v) in &by_g {
+            if let Some(&i) = v.get(round) {
+                order.push(i);
+                emitted = true;
+            }
+        }
+        if !emitted {
+            break;
+        }
+        round += 1;
+    }
+    order
+}
+
+/// Scorer with canonical-key memoization: cache hits never consume the
+/// evaluation budget.
+struct Scorer<'a> {
+    harness: &'a EvalHarness,
+    objective: Objective,
+    cache: HashMap<String, (f64, EvalOutcome)>,
+    evals: usize,
+}
+
+impl Scorer<'_> {
+    fn score(&mut self, key: &str, spec: &PlacementSpec) -> anyhow::Result<(f64, EvalOutcome)> {
+        if let Some(&hit) = self.cache.get(key) {
+            return Ok(hit);
+        }
+        let outcome = self.harness.evaluate(spec)?;
+        self.evals += 1;
+        let s = outcome.score(self.objective);
+        self.cache.insert(key.to_string(), (s, outcome));
+        Ok((s, outcome))
+    }
+}
+
+/// One annealer move proposal; `None` when the move does not apply to
+/// the current candidate (e.g. nothing to swap). Mutations preserve the
+/// partition's shapes except for the jump move.
+fn propose(
+    cand: &Candidate,
+    pool: &[Candidate],
+    num_models: usize,
+    rng: &mut Rng,
+) -> Option<Candidate> {
+    let g_count = cand.groups.len();
+    match rng.index(5) {
+        // Move one replica of a model to a group not hosting it.
+        0 => {
+            let m = rng.index(num_models);
+            let hosts = cand.hosts(m);
+            let others: Vec<usize> = (0..g_count).filter(|g| !hosts.contains(g)).collect();
+            if hosts.is_empty() || others.is_empty() {
+                return None;
+            }
+            let from = hosts[rng.index(hosts.len())];
+            let to = others[rng.index(others.len())];
+            if cand.groups[from].1.len() == 1 {
+                return None; // would empty the source group
+            }
+            let mut next = cand.clone();
+            next.groups[from].1.retain(|&x| x != m);
+            next.groups[to].1.push(m);
+            Some(next)
+        }
+        // Add a replica on a group not hosting the model.
+        1 => {
+            let m = rng.index(num_models);
+            let hosts = cand.hosts(m);
+            let others: Vec<usize> = (0..g_count).filter(|g| !hosts.contains(g)).collect();
+            if others.is_empty() {
+                return None;
+            }
+            let to = others[rng.index(others.len())];
+            let mut next = cand.clone();
+            next.groups[to].1.push(m);
+            Some(next)
+        }
+        // Drop one replica of a multi-replica model.
+        2 => {
+            let m = rng.index(num_models);
+            let hosts = cand.hosts(m);
+            if hosts.len() < 2 {
+                return None;
+            }
+            let from = hosts[rng.index(hosts.len())];
+            if cand.groups[from].1.len() == 1 {
+                return None;
+            }
+            let mut next = cand.clone();
+            next.groups[from].1.retain(|&x| x != m);
+            Some(next)
+        }
+        // Swap one model between two groups.
+        3 => {
+            if g_count < 2 {
+                return None;
+            }
+            let g = rng.index(g_count);
+            let mut h = rng.index(g_count - 1);
+            if h >= g {
+                h += 1;
+            }
+            let only_g: Vec<usize> = cand.groups[g]
+                .1
+                .iter()
+                .copied()
+                .filter(|m| !cand.groups[h].1.contains(m))
+                .collect();
+            let only_h: Vec<usize> = cand.groups[h]
+                .1
+                .iter()
+                .copied()
+                .filter(|m| !cand.groups[g].1.contains(m))
+                .collect();
+            if only_g.is_empty() || only_h.is_empty() {
+                return None;
+            }
+            let a = only_g[rng.index(only_g.len())];
+            let b = only_h[rng.index(only_h.len())];
+            let mut next = cand.clone();
+            next.groups[g].1.retain(|&x| x != a);
+            next.groups[g].1.push(b);
+            next.groups[h].1.retain(|&x| x != b);
+            next.groups[h].1.push(a);
+            Some(next)
+        }
+        // Jump to another enumerated candidate (shape-partition change).
+        _ => {
+            if pool.len() < 2 {
+                return None;
+            }
+            Some(pool[rng.index(pool.len())].clone())
+        }
+    }
+}
+
+/// Run the full search. See the module docs for the pipeline; the
+/// result's `spec` is ready for `simulate --placement` and its score is
+/// never below `greedy_score`.
+pub fn plan(
+    base: &SystemConfig,
+    scenario: &str,
+    knobs: &PlannerConfig,
+) -> anyhow::Result<PlanOutcome> {
+    knobs.validate()?;
+    let mut base = base.clone();
+    base.placement = None;
+    base.models.validate_attributes()?;
+    let num_models = base.num_models();
+
+    let pool = enumerate_pool(&base, knobs);
+    anyhow::ensure!(
+        !pool.is_empty(),
+        "no feasible placement: no shape partition of {} GPUs hosts the catalog",
+        knobs.gpu_budget
+    );
+
+    let harness = EvalHarness::new(
+        base.clone(),
+        scenario,
+        knobs.duration,
+        knobs.seed,
+        knobs.rate_scale,
+    )?;
+    let mut scorer = Scorer {
+        harness: &harness,
+        objective: knobs.objective,
+        cache: HashMap::new(),
+        evals: 0,
+    };
+
+    // Greedy seed: round-robin across group counts, half the budget.
+    let seed_budget = (knobs.eval_budget / 2).max(1);
+    let mut best: Option<(Candidate, f64, EvalOutcome)> = None;
+    for &i in &seeding_order(&pool) {
+        if scorer.evals >= seed_budget {
+            break;
+        }
+        let cand = &pool[i];
+        let (s, o) = scorer.score(&cand.key(), &cand.spec(knobs.router))?;
+        // Strictly-greater: earliest-scored candidate anchors ties.
+        if best.as_ref().map(|(_, b, _)| s > *b).unwrap_or(true) {
+            best = Some((cand.clone(), s, o));
+        }
+    }
+    let (greedy_cand, greedy_score, greedy_outcome) =
+        best.clone().expect("seed phase scores at least one candidate");
+
+    // Simulated annealing from the greedy seed.
+    let mut rng = Rng::seeded(knobs.seed ^ 0xA11E_A1E5_0000_0001);
+    let (mut cur, mut cur_score) = (greedy_cand.clone(), greedy_score);
+    let t0 = 0.05 * greedy_score.abs().max(1e-3);
+    let max_iters = knobs.eval_budget.saturating_mul(20);
+    let mut iters = 0usize;
+    while scorer.evals < knobs.eval_budget && iters < max_iters {
+        iters += 1;
+        let Some(mut next) = propose(&cur, &pool, num_models, &mut rng) else {
+            continue;
+        };
+        next.canonicalize();
+        let spec = next.spec(knobs.router);
+        if !is_feasible(&base, &spec) {
+            continue;
+        }
+        let (s, o) = scorer.score(&next.key(), &spec)?;
+        let progress = scorer.evals as f64 / knobs.eval_budget as f64;
+        let temp = (t0 * (1.0 - progress)).max(1e-9);
+        let delta = s - cur_score;
+        if delta >= 0.0 || rng.f64() < (delta / temp).exp() {
+            cur = next.clone();
+            cur_score = s;
+        }
+        if best.as_ref().map(|(_, b, _)| s > *b).unwrap_or(true) {
+            best = Some((next, s, o));
+        }
+    }
+
+    let (cand, score, outcome) = best.expect("seed phase scored at least one candidate");
+    Ok(PlanOutcome {
+        spec: cand.spec(knobs.router),
+        score,
+        outcome,
+        objective: knobs.objective,
+        greedy_spec: greedy_cand.spec(knobs.router),
+        greedy_score,
+        evals: scorer.evals,
+        enumerated: pool.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelCatalog;
+
+    fn base() -> SystemConfig {
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
+        cfg.models = ModelCatalog::homogeneous("opt-1.3b", 2);
+        cfg
+    }
+
+    #[test]
+    fn partitions_use_exactly_the_budget() {
+        let knobs = PlannerConfig::new(4);
+        for part in shape_partitions(&knobs) {
+            let total: usize = part.iter().map(|&i| knobs.shapes[i].world()).sum();
+            assert_eq!(total, 4);
+            assert!(part.len() <= knobs.max_groups);
+            assert!(part.windows(2).all(|w| w[0] <= w[1]), "canonical multiset order");
+        }
+    }
+
+    #[test]
+    fn canonical_key_is_order_invariant() {
+        let mut a = Candidate {
+            groups: vec![
+                (ParallelConfig::new(1, 1), vec![1, 0]),
+                (ParallelConfig::new(2, 1), vec![0]),
+            ],
+        };
+        let mut b = Candidate {
+            groups: vec![
+                (ParallelConfig::new(2, 1), vec![0]),
+                (ParallelConfig::new(1, 1), vec![0, 1]),
+            ],
+        };
+        a.canonicalize();
+        b.canonicalize();
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn enumerated_pool_is_deduped_and_nonempty() {
+        let cfg = base();
+        let knobs = PlannerConfig::for_config(&cfg, 4);
+        let pool = enumerate_pool(&cfg, &knobs);
+        assert!(!pool.is_empty());
+        let mut keys: Vec<String> = pool.iter().map(Candidate::key).collect();
+        let before = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(before, keys.len(), "pool must be key-deduped");
+    }
+
+    #[test]
+    fn seeding_order_interleaves_group_counts() {
+        let cfg = base();
+        let knobs = PlannerConfig::for_config(&cfg, 4);
+        let pool = enumerate_pool(&cfg, &knobs);
+        let order = seeding_order(&pool);
+        assert_eq!(order.len(), pool.len());
+        // First seeded candidate is the lowest-G, first-enumerated one.
+        let min_g = pool.iter().map(|c| c.groups.len()).min().unwrap();
+        assert_eq!(pool[order[0]].groups.len(), min_g);
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve       launch the real-mode server and run an interactive demo load
 //!   simulate    run a §5.2-style simulated workload and print metrics
+//!   plan        search for a cluster placement with the simulator in the loop
 //!   swap        run the §5.1 worst-case swap experiment for one (tp, pp)
 //!   models      print the resolved deployment catalog for a config
 //!   scenarios   list the named workload scenarios (`--scenario` targets)
@@ -14,8 +15,8 @@
 
 use anyhow::{anyhow, Result};
 use computron::config::{
-    EngineConfig, LoadDesign, ModelCatalog, ParallelConfig, PlacementSpec, PolicyKind,
-    RouterKind, SchedulerKind, SystemConfig,
+    EngineConfig, LoadDesign, ModelCatalog, Objective, ParallelConfig, PlacementSpec,
+    PlannerConfig, PolicyKind, RouterKind, SchedulerKind, SystemConfig,
 };
 use computron::coordinator::engine::SwapRecord;
 use computron::metrics::WorkloadCell;
@@ -30,13 +31,14 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|swap|models|scenarios|schedulers|routers|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|plan|swap|models|scenarios|schedulers|routers|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
     let result = match cmd.as_str() {
         "serve" => cmd_serve(&rest),
         "simulate" => cmd_simulate(&rest),
+        "plan" => cmd_plan(&rest),
         "swap" => cmd_swap(&rest),
         "models" => cmd_models(&rest),
         "scenarios" => cmd_scenarios(),
@@ -339,6 +341,111 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
             "\ncross-group load imbalance (max/mean): {:.2}",
             computron::metrics::load_imbalance(&cells)
         );
+    }
+    Ok(())
+}
+
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let args = Args::new(
+        "computron plan",
+        "search for a cluster placement with the simulator in the loop (DESIGN.md §10)",
+    )
+    .opt("catalog", "JSON system config supplying the catalog/engine/hardware the plan serves (required)", None)
+    .opt("scenario", "forecast scenario to plan against (default: the config's, else zipf)", None)
+    .opt("gpu-budget", "total GPUs to partition (default: 2x the config's tp*pp world)", None)
+    .opt("objective", "goodput|attainment|p99", Some("goodput"))
+    .opt("budget", "search budget in simulator evaluations (cache hits are free)", Some("48"))
+    .opt("seed", "deterministic seed for the forecast trace and the annealer", Some("42"))
+    .opt("duration", "measured seconds per scoring run", Some("6"))
+    .opt("rate-scale", "offered-load multiplier of the forecast (default matches the overload suite)", Some("60"))
+    .opt("max-groups", "maximum number of groups in a candidate (default min(budget, 8))", None)
+    .opt("router", "round-robin|least-loaded|resident-affinity written into the plan", None)
+    .opt("out", "write the winning placement JSON here (a `simulate --placement` file)", None)
+    .opt("emit-config", "write a full system config JSON (catalog + placement) here", None)
+    .parse_from(argv)?;
+
+    let path = args.get("catalog").ok_or_else(|| anyhow!("--catalog <config.json> is required"))?;
+    let base = SystemConfig::from_file(std::path::Path::new(path))?;
+    let scenario = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| base.scenario.clone())
+        .unwrap_or_else(|| "zipf".to_string());
+
+    let gpu_budget = args.get_usize("gpu-budget")?.unwrap_or_else(|| 2 * base.parallel.world());
+    let mut knobs = PlannerConfig::for_config(&base, gpu_budget);
+    if let Some(s) = args.get("objective") {
+        knobs.objective = Objective::parse(s)
+            .ok_or_else(|| anyhow!("bad --objective '{s}' (goodput|attainment|p99)"))?;
+    }
+    if let Some(n) = args.get_usize("budget")? {
+        knobs.eval_budget = n;
+    }
+    if let Some(n) = args.get_usize("seed")? {
+        knobs.seed = n as u64;
+    }
+    if let Some(v) = args.get_f64("duration")? {
+        knobs.duration = v;
+    }
+    if let Some(v) = args.get_f64("rate-scale")? {
+        knobs.rate_scale = v;
+    }
+    if let Some(n) = args.get_usize("max-groups")? {
+        knobs.max_groups = n;
+    }
+    if let Some(s) = args.get("router") {
+        knobs.router = RouterKind::parse(s)
+            .ok_or_else(|| anyhow!("bad --router '{s}' (see `computron routers`)"))?;
+    }
+
+    let plan = computron::coordinator::planner::plan(&base, &scenario, &knobs)?;
+
+    section("placement plan");
+    let rows = vec![
+        vec!["scenario".into(), format!("{scenario} (x{:.0} load, {:.0}s window)", knobs.rate_scale, knobs.duration)],
+        vec!["objective".into(), knobs.objective.name().to_string()],
+        vec!["GPU budget".into(), gpu_budget.to_string()],
+        vec!["candidates enumerated".into(), plan.enumerated.to_string()],
+        vec!["simulator evaluations".into(), plan.evals.to_string()],
+        vec!["greedy-seed score".into(), format!("{:.4}", plan.greedy_score)],
+        vec!["best score".into(), format!("{:.4}", plan.score)],
+        vec!["goodput (att. req/s)".into(), format!("{:.2}", plan.outcome.goodput)],
+        vec!["SLO attainment".into(), format!("{:.1}%", 100.0 * plan.outcome.attainment)],
+        vec!["p99 latency (s)".into(), format!("{:.3}", plan.outcome.p99)],
+        vec!["groups".into(), plan.spec.groups.len().to_string()],
+        vec!["router".into(), plan.spec.router.name().to_string()],
+    ];
+    table(&["metric", "value"], &rows);
+
+    section("winning groups");
+    let grows: Vec<Vec<String>> = plan
+        .spec
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            vec![
+                i.to_string(),
+                format!("tp{} pp{}", g.parallel.tp, g.parallel.pp),
+                g.models.iter().map(|m| m.to_string()).collect::<Vec<_>>().join(","),
+            ]
+        })
+        .collect();
+    table(&["group", "grid", "models"], &grows);
+
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, plan.spec.to_json().pretty() + "\n")?;
+        println!("\nwrote placement to {out}  (simulate --placement {out})");
+    }
+    if let Some(out) = args.get("emit-config") {
+        let mut cfg = base.clone();
+        cfg.placement = Some(plan.spec.clone());
+        cfg.scenario = Some(scenario.clone());
+        std::fs::write(out, cfg.to_json().pretty() + "\n")?;
+        println!("wrote full config to {out}  (simulate --config {out})");
+    }
+    if args.get("out").is_none() && args.get("emit-config").is_none() {
+        println!("\n{}", plan.spec.to_json().pretty());
     }
     Ok(())
 }

@@ -1,0 +1,147 @@
+//! Batched candidate evaluation for the placement planner (DESIGN.md
+//! §10): one workload trace, generated once from a named scenario, is
+//! replayed against every candidate `PlacementSpec` in streaming mode.
+//!
+//! Sharing the trace is what makes candidate scores *comparable*: two
+//! placements are judged on exactly the same arrival sequence, so a
+//! score difference is attributable to the placement and never to
+//! workload sampling noise. Streaming aggregation keeps each evaluation
+//! O(1) in memory (no record retention) while still yielding the three
+//! planner objectives — goodput, SLO attainment, and p99 latency — via
+//! [`MeasuredCounts`] and the t-digest summary.
+
+use crate::config::{Objective, PlacementSpec, SystemConfig};
+use crate::sim::{Arrival, Driver, SimCluster};
+use crate::workload::scenarios::{self, ScenarioParams, WorkloadGen};
+
+/// One candidate's measured-window outcome, extracted from a streaming
+/// run. Higher `goodput`/`attainment` and lower `p99` are better;
+/// [`EvalOutcome::score`] folds the chosen objective into a single
+/// maximized scalar.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalOutcome {
+    /// Deadline-attained completions per measured second.
+    pub goodput: f64,
+    /// Attained fraction of measured arrivals (drops count as misses,
+    /// matching `metrics::per_model_attainment`).
+    pub attainment: f64,
+    /// p99 latency over measured completions (t-digest estimate).
+    pub p99: f64,
+    /// Mean latency over measured completions (exact, Welford).
+    pub mean_latency: f64,
+    pub completed: usize,
+    pub attained: usize,
+    pub drops: usize,
+}
+
+impl EvalOutcome {
+    /// Scalarize under `objective`, oriented so that **higher is always
+    /// better** (`P99` scores as negated tail latency).
+    pub fn score(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::Goodput => self.goodput,
+            Objective::Attainment => self.attainment,
+            Objective::P99 => -self.p99,
+        }
+    }
+}
+
+/// The planner's simulator-in-the-loop scorer: a base `SystemConfig`
+/// (catalog, engine, hardware — everything except the placement) plus
+/// one pre-generated arrival trace. `evaluate` swaps candidate
+/// placements into the base config and replays the shared trace.
+pub struct EvalHarness {
+    base: SystemConfig,
+    scenario: String,
+    arrivals: Vec<Arrival>,
+    measure_start: f64,
+    duration: f64,
+}
+
+impl EvalHarness {
+    /// Generate the shared trace: `scenario` (a registry name) at
+    /// `rate_scale` times its nominal offered load, with per-model rate
+    /// shares taken from the base catalog, a `duration`-second measured
+    /// window, and a deterministic `seed`.
+    pub fn new(
+        base: SystemConfig,
+        scenario: &str,
+        duration: f64,
+        seed: u64,
+        rate_scale: f64,
+    ) -> anyhow::Result<EvalHarness> {
+        let params = ScenarioParams {
+            num_models: base.num_models(),
+            duration,
+            seed,
+            rate_scale,
+            rate_shares: base.models.rate_shares(),
+            ..ScenarioParams::default()
+        };
+        let workload = scenarios::by_name(scenario, &params).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario '{scenario}' (known: {})",
+                scenarios::names().join(", ")
+            )
+        })?;
+        Ok(EvalHarness {
+            base,
+            scenario: scenario.to_string(),
+            arrivals: workload.generate(),
+            measure_start: workload.measure_start(),
+            duration,
+        })
+    }
+
+    pub fn scenario(&self) -> &str {
+        &self.scenario
+    }
+
+    /// Base config with the placement cleared (candidates supply it).
+    pub fn base(&self) -> &SystemConfig {
+        &self.base
+    }
+
+    pub fn measure_start(&self) -> f64 {
+        self.measure_start
+    }
+
+    /// Measured-window length in simulated seconds.
+    pub fn duration(&self) -> f64 {
+        self.duration
+    }
+
+    /// Arrivals in the shared trace (warmup included).
+    pub fn num_arrivals(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    /// Score one candidate placement: replay the shared trace against
+    /// the base config with `placement` swapped in, streaming
+    /// aggregation on, warm-server preload. Errors if the candidate
+    /// fails config validation (shard or memory infeasibility).
+    pub fn evaluate(&self, placement: &PlacementSpec) -> anyhow::Result<EvalOutcome> {
+        let mut cfg = self.base.clone();
+        cfg.placement = Some(placement.clone());
+        let mut sys = SimCluster::new(cfg, Driver::Open(self.arrivals.clone()))?;
+        sys.preload_warm();
+        sys.set_streaming(self.measure_start);
+        let report = sys.run();
+        let counts = report.streaming_counts.expect("streaming runs report measured counts");
+        let latency = report.streaming_latency.expect("streaming runs report a latency summary");
+        let arrived = counts.completed + counts.drops;
+        Ok(EvalOutcome {
+            goodput: counts.attained as f64 / self.duration,
+            attainment: if arrived == 0 {
+                0.0
+            } else {
+                counts.attained as f64 / arrived as f64
+            },
+            p99: latency.p99,
+            mean_latency: latency.mean,
+            completed: counts.completed,
+            attained: counts.attained,
+            drops: counts.drops,
+        })
+    }
+}

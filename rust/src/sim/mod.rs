@@ -2,8 +2,10 @@
 //! worker grid + pipes + links) as a deterministic, calibrated simulator.
 //! See DESIGN.md §1 for the substitution argument.
 
+pub mod eval;
 pub mod system;
 pub mod worker;
 
-pub use system::{Arrival, Driver, GroupStats, SimCluster, SimReport, SimSystem};
+pub use eval::{EvalHarness, EvalOutcome};
+pub use system::{Arrival, Driver, GroupStats, MeasuredCounts, SimCluster, SimReport, SimSystem};
 pub use worker::{ChunkOutcome, InstState, SimWorker, WorkerAction};

@@ -118,6 +118,10 @@ pub struct SimReport {
     /// record vectors above stay empty — this summary is the latency
     /// artifact.
     pub streaming_latency: Option<Summary>,
+    /// Measured-window completion/attainment/drop counts, present only
+    /// in streaming runs — the planner's goodput/attainment source
+    /// (full-retention runs derive the same numbers from the records).
+    pub streaming_counts: Option<MeasuredCounts>,
 }
 
 impl SimReport {
@@ -386,6 +390,23 @@ struct StreamCounts {
     swap_bytes: u64,
 }
 
+/// Measured-window request accounting maintained during a streaming run
+/// (full-retention runs derive the same numbers from the record
+/// vectors). This is what lets the placement planner score goodput and
+/// SLO attainment from streaming runs whose per-request records were
+/// discarded: goodput = `attained / measured-window length`, attainment
+/// = `attained / (completed + drops)` (a dropped request counts as a
+/// miss, matching `metrics::per_model_attainment`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MeasuredCounts {
+    /// Completions whose arrival fell in the measured window.
+    pub completed: usize,
+    /// Measured completions that met their deadline (`attained()`).
+    pub attained: usize,
+    /// Admission-control drops whose arrival fell in the measured window.
+    pub drops: usize,
+}
+
 /// Streaming aggregation state (`SimCluster::set_streaming`): after every
 /// event the affected engines' record outboxes are drained into reusable
 /// scratch buffers, folded into O(1) sketches/counters, and discarded —
@@ -400,6 +421,8 @@ struct Streaming {
     welford: Welford,
     /// Per-group absorbed counters, group order.
     counts: Vec<StreamCounts>,
+    /// Measured-window completions/attainment/drops across the cluster.
+    measured: MeasuredCounts,
     /// Scratch drain buffers, reused every event.
     requests: Vec<RequestRecord>,
     drops: Vec<DropRecord>,
@@ -589,6 +612,7 @@ impl SimCluster {
             latency: TDigest::default(),
             welford: Welford::default(),
             counts: vec![StreamCounts::default(); self.groups.len()],
+            measured: MeasuredCounts::default(),
             requests: Vec::new(),
             drops: Vec::new(),
             swaps: Vec::new(),
@@ -813,12 +837,18 @@ impl SimCluster {
                     let l = r.latency();
                     st.latency.add(l);
                     st.welford.add(l);
+                    st.measured.completed += 1;
+                    if r.attained() {
+                        st.measured.attained += 1;
+                    }
                 }
             }
             st.counts[gid].requests += st.requests.len();
             st.drops.clear();
             grp.engine.drain_dropped_into(&mut st.drops);
             st.counts[gid].drops += st.drops.len();
+            st.measured.drops +=
+                st.drops.iter().filter(|d| d.arrival >= st.measure_start).count();
             st.swaps.clear();
             grp.engine.drain_swap_records_into(&mut st.swaps);
             for s in &st.swaps {
@@ -977,6 +1007,7 @@ impl SimCluster {
         // accounting pass below. In full-retention mode `streaming` is
         // `None` and every absorbed counter reads as zero.
         let mut streaming = self.streaming.take();
+        let streaming_counts = streaming.as_ref().map(|st| st.measured);
         let streaming_latency = streaming.as_mut().map(|st| {
             if st.welford.count() == 0 {
                 Summary::empty()
@@ -1102,6 +1133,7 @@ impl SimCluster {
             sim_end,
             groups: group_stats,
             streaming_latency,
+            streaming_counts,
         }
     }
 }

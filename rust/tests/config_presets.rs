@@ -22,6 +22,20 @@ fn every_shipped_preset_parses_and_validates() {
         let name = path.file_name().unwrap().to_string_lossy().to_string();
         let cfg = SystemConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
         cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        // Re-validate the *resolved* placement (explicit or the legacy
+        // single-group shim) against the PlacementSpec feasibility
+        // checks: structure, per-group shard divisibility, and the
+        // per-group memory bound — exactly what the placement planner
+        // enforces on its own candidates (DESIGN.md §10).
+        let placement = cfg.resolved_placement();
+        placement
+            .validate(cfg.num_models())
+            .unwrap_or_else(|e| panic!("{name}: resolved placement invalid: {e}"));
+        let mut pinned = cfg.clone();
+        pinned.placement = Some(placement);
+        pinned
+            .validate()
+            .unwrap_or_else(|e| panic!("{name}: resolved placement infeasible: {e}"));
         // Every preset must also survive a JSON round-trip through the
         // catalog schema with its catalog intact.
         let back = SystemConfig::from_json(&cfg.to_json())
@@ -29,6 +43,7 @@ fn every_shipped_preset_parses_and_validates() {
         assert_eq!(back.models, cfg.models, "{name}: catalog changed in round-trip");
         assert_eq!(back.parallel, cfg.parallel, "{name}");
         assert_eq!(back.scenario, cfg.scenario, "{name}");
+        assert_eq!(back.placement, cfg.placement, "{name}: placement changed in round-trip");
         seen.push(name);
     }
     // The known preset set must be present (a rename or deletion here is
@@ -41,6 +56,7 @@ fn every_shipped_preset_parses_and_validates() {
         "chunked_3model.json",
         "hetero_4model.json",
         "groups_2x2.json",
+        "planned_hetero.json",
     ] {
         assert!(seen.iter().any(|n| n == required), "missing preset {required} (have {seen:?})");
     }
@@ -121,6 +137,37 @@ fn legacy_json_round_trips_through_the_catalog_shim() {
     )
     .unwrap();
     assert!(SystemConfig::from_json(&bad).is_err());
+}
+
+/// The planner-emitted preset (`computron plan --catalog
+/// configs/hetero_4model.json --emit-config ...`, DESIGN.md §10): the
+/// hetero_4model fleet re-laid-out as four dedicated tp2×pp1 groups on
+/// an 8-GPU budget. Dedicated hosting keeps every group at or under
+/// `resident_cap`, so the plan never swaps — the property the planner
+/// converges on under overload (pinned end-to-end by
+/// `benches/planner_suite.rs`).
+#[test]
+fn planned_preset_resolves_expected_placement() {
+    let cfg = SystemConfig::from_file(&configs_dir().join("planned_hetero.json")).unwrap();
+    // Same fleet as hetero_4model.json — only the placement differs.
+    let base = SystemConfig::from_file(&configs_dir().join("hetero_4model.json")).unwrap();
+    assert_eq!(cfg.models, base.models, "planned preset serves the hetero_4model fleet");
+    assert_eq!(cfg.scenario.as_deref(), Some("zipf"));
+    let p = cfg.placement.as_ref().expect("planned preset carries a placement");
+    assert_eq!(p.router, computron::config::RouterKind::RoundRobin);
+    assert_eq!(p.groups.len(), 4, "one dedicated group per model");
+    assert_eq!(p.world(), 8, "partitions the full 8-GPU budget");
+    for (m, g) in p.groups.iter().enumerate() {
+        assert_eq!((g.parallel.tp, g.parallel.pp), (2, 1));
+        assert_eq!(g.models, vec![m], "group {m} hosts exactly model {m}");
+        assert!(
+            g.models.len() <= cfg.engine.resident_cap,
+            "dedicated hosting never exceeds the resident cap (no swapping)"
+        );
+    }
+    // The preset builds a 4-group simulator directly.
+    let (sys, _) = computron::sim::SimCluster::from_scenario(cfg, 2.0, 7).unwrap();
+    assert_eq!(sys.num_groups(), 4);
 }
 
 #[test]

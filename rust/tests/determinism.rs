@@ -80,3 +80,78 @@ fn calendar_queue_matches_heap_backend_across_registry() {
         }
     }
 }
+
+fn run_streaming(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some(scenario.to_string());
+    cfg.placement = Some(PlacementSpec::replicated(
+        g,
+        cfg.parallel,
+        3,
+        RouterKind::LeastLoaded,
+    ));
+    let (mut sys, start) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
+    if heap_queue {
+        sys.use_binary_heap_queue();
+    }
+    sys.set_streaming(start);
+    sys.run()
+}
+
+/// Streaming aggregation must be as deterministic as full retention:
+/// records are absorbed in event order, so the t-digest latency sketch,
+/// the Welford moments behind `Summary::mean`/`std`, and the measured
+/// counts are all functions of (config, seed) — across repeated runs
+/// *and* across queue backends (the planner's evaluation harness relies
+/// on this: candidate scores must not depend on the backend).
+fn assert_streaming_identical(tag: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(
+        a.streaming_latency, b.streaming_latency,
+        "{tag}: streaming latency sketches differ"
+    );
+    assert_eq!(
+        a.streaming_counts, b.streaming_counts,
+        "{tag}: measured counts differ"
+    );
+    assert!(
+        a.requests.is_empty() && b.requests.is_empty(),
+        "{tag}: streaming runs must not retain request records"
+    );
+    assert_eq!(a.swap_stats, b.swap_stats, "{tag}: swap stats differ");
+    assert_eq!(a.events, b.events, "{tag}: event counts differ");
+    assert_eq!(a.sim_end, b.sim_end, "{tag}: end times differ");
+    assert_eq!(a.groups.len(), b.groups.len(), "{tag}: group counts differ");
+    for (x, y) in a.groups.iter().zip(&b.groups) {
+        assert_eq!(
+            (x.requests, x.drops, x.swaps, x.swap_bytes, x.events),
+            (y.requests, y.drops, y.swaps, y.swap_bytes, y.events),
+            "{tag}: group {} stats differ",
+            x.group
+        );
+    }
+}
+
+/// Streaming-mode cell: same config + seed ⇒ identical
+/// `streaming_latency` / `streaming_counts`, run-to-run and
+/// calendar-vs-heap, across the registry.
+#[test]
+fn streaming_mode_identical_across_registry_and_backends() {
+    for &scenario in scenarios::names() {
+        for g in [1usize, 4] {
+            let a = run_streaming(scenario, g, false);
+            let b = run_streaming(scenario, g, false);
+            assert_streaming_identical(&format!("{scenario}/G={g}/repeat"), &a, &b);
+            let heap = run_streaming(scenario, g, true);
+            assert_streaming_identical(&format!("{scenario}/G={g}/backend"), &a, &heap);
+            let counts = a.streaming_counts.expect("streaming run reports counts");
+            assert!(
+                counts.completed + counts.drops > 0,
+                "{scenario}/G={g}: vacuous streaming run"
+            );
+            assert!(
+                a.streaming_latency.is_some(),
+                "{scenario}/G={g}: missing latency summary"
+            );
+        }
+    }
+}

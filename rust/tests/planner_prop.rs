@@ -1,0 +1,152 @@
+//! Property pins for the placement planner's search core (DESIGN.md
+//! §10). The planner is simulator-in-the-loop, so these properties are
+//! what make it trustworthy enough to emit checked-in presets:
+//!
+//! 1. *Feasibility*: every candidate the enumerator emits passes the
+//!    full `SystemConfig::validate` placement gate (shard divisibility
+//!    + per-group memory bound) and partitions exactly the GPU budget.
+//! 2. *Never worse than greedy*: simulated annealing tracks best-so-far,
+//!    so `plan.score >= plan.greedy_score` always.
+//! 3. *Determinism*: a fixed seed reproduces the plan bit-for-bit —
+//!    same spec, same score bits, same evaluation count.
+//! 4. *Degeneracy*: on a homogeneous 1-model catalog with the budget
+//!    equal to the base grid, the planner returns the legacy
+//!    single-group spec bit-for-bit (`PlacementSpec::single`), because
+//!    the base layout is enumerated first and score ties never displace
+//!    the incumbent.
+
+use computron::config::{
+    ModelCatalog, ModelDeployment, Objective, PlacementSpec, PlannerConfig, SystemConfig,
+};
+use computron::coordinator::planner;
+
+/// The group_scaling skewed hetero fleet: hot small models, cold tail.
+fn hetero_fleet() -> ModelCatalog {
+    ModelCatalog::new(vec![
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(4.0),
+        ModelDeployment::new("opt-1.3b").with_slo(1.0).with_rate_share(3.0),
+        ModelDeployment::new("opt-2.7b").with_slo(1.0).with_rate_share(2.0),
+        ModelDeployment::new("opt-6.7b").with_slo(1.0).with_rate_share(1.0),
+    ])
+}
+
+fn hetero_base() -> SystemConfig {
+    SystemConfig::hetero_experiment(hetero_fleet(), 2, 8)
+}
+
+/// Small, fast knobs for the search-property tests: 2 s scoring windows
+/// and a 10-evaluation budget keep each `plan` call well under a second.
+fn small_knobs(base: &SystemConfig, gpu_budget: usize, seed: u64) -> PlannerConfig {
+    let mut knobs = PlannerConfig::for_config(base, gpu_budget);
+    knobs.duration = 2.0;
+    knobs.rate_scale = 8.0;
+    knobs.eval_budget = 10;
+    knobs.seed = seed;
+    knobs
+}
+
+/// Property 1: every enumerated candidate is feasible under the full
+/// config validation gate and uses exactly the GPU budget.
+#[test]
+fn every_enumerated_candidate_passes_validation() {
+    let bases = [SystemConfig::workload_experiment(3, 2, 8), hetero_base()];
+    for base in &bases {
+        for budget in [4usize, 8] {
+            let knobs = PlannerConfig::for_config(base, budget);
+            let pool = planner::enumerate_candidates(base, &knobs);
+            assert!(
+                !pool.is_empty(),
+                "budget {budget}: enumerator must emit at least one candidate"
+            );
+            for (i, spec) in pool.iter().enumerate() {
+                assert_eq!(
+                    spec.world(),
+                    budget,
+                    "budget {budget}, candidate {i}: must partition the full budget"
+                );
+                spec.validate(base.num_models()).unwrap_or_else(|e| {
+                    panic!("budget {budget}, candidate {i}: structural validation: {e}")
+                });
+                let mut cfg = base.clone();
+                cfg.placement = Some(spec.clone());
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("budget {budget}, candidate {i}: feasibility validation: {e}")
+                });
+            }
+        }
+    }
+}
+
+/// Property 2: the annealer tracks best-so-far, so the returned plan is
+/// never worse than the greedy seed it started from.
+#[test]
+fn annealer_never_returns_worse_than_greedy_seed() {
+    let base = hetero_base();
+    for seed in [1u64, 7, 42] {
+        let knobs = small_knobs(&base, 4, seed);
+        let plan = planner::plan(&base, "zipf", &knobs).expect("plan succeeds");
+        assert!(
+            plan.score >= plan.greedy_score,
+            "seed {seed}: plan score {} below greedy seed {}",
+            plan.score,
+            plan.greedy_score
+        );
+        assert!(
+            plan.evals <= knobs.eval_budget,
+            "seed {seed}: spent {} evals over the {} budget",
+            plan.evals,
+            knobs.eval_budget
+        );
+    }
+}
+
+/// Property 3: the planner is a pure function of (config, scenario,
+/// knobs) — a fixed seed reproduces the plan bit-for-bit.
+#[test]
+fn fixed_seed_reproduces_the_plan_bit_for_bit() {
+    let base = hetero_base();
+    let knobs = small_knobs(&base, 4, 0xD5EED);
+    let a = planner::plan(&base, "zipf", &knobs).expect("plan succeeds");
+    let b = planner::plan(&base, "zipf", &knobs).expect("plan succeeds");
+    assert_eq!(a.spec, b.spec, "specs differ across identical runs");
+    assert_eq!(
+        a.spec.to_json().to_string(),
+        b.spec.to_json().to_string(),
+        "serialized specs differ across identical runs"
+    );
+    assert_eq!(
+        a.score.to_bits(),
+        b.score.to_bits(),
+        "scores differ across identical runs"
+    );
+    assert_eq!(a.greedy_spec, b.greedy_spec, "greedy seeds differ");
+    assert_eq!(a.evals, b.evals, "evaluation counts differ");
+    assert_eq!(a.enumerated, b.enumerated, "candidate pools differ");
+}
+
+/// Property 4: a homogeneous 1-model catalog with the budget equal to
+/// the base grid degenerates to the legacy single-group spec
+/// bit-for-bit. Every candidate ties on goodput (no SLOs, no drops, all
+/// arrivals complete), and ties never displace the first-enumerated
+/// incumbent — which is the base layout by construction.
+#[test]
+fn single_model_catalog_degenerates_to_legacy_spec() {
+    let base = SystemConfig::workload_experiment(1, 1, 8);
+    let mut knobs = PlannerConfig::for_config(&base, base.parallel.world());
+    knobs.duration = 2.0;
+    knobs.rate_scale = 1.0;
+    knobs.eval_budget = 8;
+    knobs.seed = 3;
+    knobs.objective = Objective::Goodput;
+    let plan = planner::plan(&base, "uniform", &knobs).expect("plan succeeds");
+    let legacy = PlacementSpec::single(base.parallel, 1);
+    assert_eq!(
+        plan.spec, legacy,
+        "1-model catalog must degenerate to the legacy single-group spec"
+    );
+    assert_eq!(
+        plan.spec.to_json().to_string(),
+        legacy.to_json().to_string(),
+        "degenerate spec must serialize bit-for-bit like the legacy shim"
+    );
+}

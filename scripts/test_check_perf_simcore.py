@@ -1,0 +1,178 @@
+"""Unit tests for the perf-smoke diff logic (scripts/check_perf_simcore.py).
+
+Run with either harness:
+    python3 -m unittest discover -s scripts
+    python -m pytest scripts/
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import check_perf_simcore as cps
+
+
+def report(calibrated=True, fast=True, e2e=(), churn=()):
+    return {
+        "bench": "perf_simcore",
+        "calibrated": calibrated,
+        "fast": fast,
+        "e2e": [
+            {
+                "scenario": s,
+                "groups": g,
+                "backend": b,
+                "events_per_sec": rate,
+            }
+            for (s, g, b, rate) in e2e
+        ],
+        "queue_churn": [
+            {"backend": b, "pending": p, "events_per_sec": rate}
+            for (b, p, rate) in churn
+        ],
+    }
+
+
+class IndexCellsTest(unittest.TestCase):
+    def test_keys_cover_both_sections(self):
+        doc = report(
+            e2e=[("zipf", 4, "calendar", 100.0)],
+            churn=[("heap", 10000, 50.0)],
+        )
+        cells = cps.index_cells(doc)
+        self.assertEqual(
+            cells,
+            {
+                ("e2e", "zipf", 4, "calendar"): 100.0,
+                ("churn", "heap", 10000): 50.0,
+            },
+        )
+
+    def test_missing_sections_yield_empty_index(self):
+        self.assertEqual(cps.index_cells({"bench": "perf_simcore"}), {})
+
+
+class CompareCellsTest(unittest.TestCase):
+    def test_regression_beyond_tolerance_is_flagged(self):
+        base = {("churn", "calendar", 10000): 100.0}
+        new = {("churn", "calendar", 10000): 79.0}
+        lines, regressions, compared = cps.compare_cells(base, new)
+        self.assertEqual(compared, 1)
+        self.assertEqual(len(regressions), 1)
+        key, base_rate, new_rate, ratio = regressions[0]
+        self.assertEqual(key, ("churn", "calendar", 10000))
+        self.assertAlmostEqual(ratio, 0.79)
+        self.assertIn("REGRESSION", lines[0])
+
+    def test_exact_tolerance_boundary_passes(self):
+        # ratio == 1 - TOLERANCE is NOT a regression (strictly below fails).
+        base = {("churn", "heap", 10000): 100.0}
+        new = {("churn", "heap", 10000): 80.0}
+        _, regressions, compared = cps.compare_cells(base, new)
+        self.assertEqual(compared, 1)
+        self.assertEqual(regressions, [])
+
+    def test_improvement_passes(self):
+        base = {("e2e", "zipf", 1, "calendar"): 100.0}
+        new = {("e2e", "zipf", 1, "calendar"): 150.0}
+        _, regressions, _ = cps.compare_cells(base, new)
+        self.assertEqual(regressions, [])
+
+    def test_unmeasured_baseline_cells_are_skipped(self):
+        # events_per_sec <= 0 means "not yet measured" (bootstrap rows).
+        base = {("churn", "calendar", 10000): 0}
+        new = {("churn", "calendar", 10000): 123.0}
+        lines, regressions, compared = cps.compare_cells(base, new)
+        self.assertEqual((lines, regressions, compared), ([], [], 0))
+
+    def test_cells_missing_from_new_run_are_skipped(self):
+        base = {("e2e", "zipf", 4, "heap"): 100.0}
+        _, regressions, compared = cps.compare_cells(base, {})
+        self.assertEqual((regressions, compared), ([], 0))
+
+    def test_custom_tolerance(self):
+        base = {("churn", "heap", 1): 100.0}
+        new = {("churn", "heap", 1): 94.0}
+        _, regressions, _ = cps.compare_cells(base, new, tolerance=0.05)
+        self.assertEqual(len(regressions), 1)
+        _, regressions, _ = cps.compare_cells(base, new, tolerance=0.10)
+        self.assertEqual(regressions, [])
+
+
+class AdvisoryReasonsTest(unittest.TestCase):
+    def test_uncalibrated_baseline_is_advisory(self):
+        reasons = cps.advisory_reasons(report(calibrated=False), report())
+        self.assertTrue(any("uncalibrated" in r for r in reasons))
+
+    def test_mode_mismatch_is_advisory(self):
+        reasons = cps.advisory_reasons(report(fast=True), report(fast=False))
+        self.assertTrue(any("mode mismatch" in r for r in reasons))
+
+    def test_calibrated_same_mode_binds(self):
+        self.assertEqual(cps.advisory_reasons(report(), report()), [])
+
+
+class CalibrateTest(unittest.TestCase):
+    def test_calibrate_flips_flag_and_keeps_cells(self):
+        fresh = report(
+            calibrated=False,
+            e2e=[("zipf", 4, "calendar", 321.0)],
+            churn=[("heap", 10000, 50.0)],
+        )
+        doc = cps.calibrate(fresh)
+        self.assertTrue(doc["calibrated"])
+        self.assertEqual(cps.index_cells(doc), cps.index_cells(fresh))
+        # The input document is not mutated.
+        self.assertFalse(fresh["calibrated"])
+
+
+class MainExitCodeTest(unittest.TestCase):
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, dir=self.dir.name
+        )
+        json.dump(doc, f)
+        f.close()
+        return f.name
+
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def test_binding_regression_fails(self):
+        base = self.write(report(churn=[("heap", 10000, 100.0)]))
+        new = self.write(report(churn=[("heap", 10000, 10.0)]))
+        self.assertEqual(cps.main(["prog", base, new]), 1)
+
+    def test_advisory_regression_passes(self):
+        base = self.write(
+            report(calibrated=False, churn=[("heap", 10000, 100.0)])
+        )
+        new = self.write(report(churn=[("heap", 10000, 10.0)]))
+        self.assertEqual(cps.main(["prog", base, new]), 0)
+
+    def test_clean_run_passes(self):
+        base = self.write(report(churn=[("heap", 10000, 100.0)]))
+        new = self.write(report(churn=[("heap", 10000, 101.0)]))
+        self.assertEqual(cps.main(["prog", base, new]), 0)
+
+    def test_calibrate_writes_calibrated_baseline(self):
+        fresh = self.write(
+            report(calibrated=False, churn=[("heap", 10000, 100.0)])
+        )
+        out = os.path.join(self.dir.name, "baseline.json")
+        self.assertEqual(cps.main(["prog", "--calibrate", fresh, out]), 0)
+        with open(out) as f:
+            doc = json.load(f)
+        self.assertTrue(doc["calibrated"])
+        self.assertEqual(
+            cps.index_cells(doc), {("churn", "heap", 10000): 100.0}
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()
