@@ -1,0 +1,631 @@
+//! Fault-injection plans and chaos schedule generators (DESIGN.md §11).
+//!
+//! A [`FaultPlan`] is part of the system config: a list of timed fault
+//! events (whole-group failures, spot preemptions with a warning lead
+//! time, link degradation) plus the [`RetryPolicy`] applied to requests
+//! harvested from a failing group and an optional [`AutoscalePolicy`].
+//! Plans are *data* — the simulator (`sim/system.rs`) turns them into
+//! first-class calendar events via [`FaultPlan::timeline`], so a plan
+//! plays back bit-for-bit under any queue backend. `FaultPlan::none()`
+//! is the identity: it schedules nothing and the simulator takes the
+//! exact same code paths as before the fault layer existed.
+//!
+//! The chaos registry at the bottom generates seeded fault schedules
+//! (random GPU MTBF, correlated rack outage, spot-preemption waves) the
+//! same way `workload::scenarios` generates arrival processes.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One timed fault in a plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Simulation time (seconds) at which the fault fires.
+    pub at: f64,
+    pub kind: FaultKind,
+}
+
+/// What happens at a [`FaultEvent`]'s time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Hard failure: the group dies instantly (GPU / host crash). All
+    /// in-flight work is cancelled and queued requests are harvested
+    /// for retry per the plan's [`RetryPolicy`].
+    GroupFail { group: usize },
+    /// Spot preemption: the group gets `warning` seconds of notice — it
+    /// drains (stops accepting new traffic) at `at` and dies at
+    /// `at + warning`.
+    GroupPreempt { group: usize, warning: f64 },
+    /// The group comes back empty: healthy again, nothing resident.
+    GroupRecover { group: usize },
+    /// Every PCIe link in the group slows down by `factor` (>= 1).
+    LinkDegrade { group: usize, factor: f64 },
+    /// Links return to nominal bandwidth.
+    LinkRestore { group: usize },
+}
+
+impl FaultKind {
+    /// The group the fault targets.
+    pub fn group(&self) -> usize {
+        match *self {
+            FaultKind::GroupFail { group }
+            | FaultKind::GroupPreempt { group, .. }
+            | FaultKind::GroupRecover { group }
+            | FaultKind::LinkDegrade { group, .. }
+            | FaultKind::LinkRestore { group } => group,
+        }
+    }
+}
+
+/// Primitive fault actions after preemption warnings are resolved —
+/// what the simulator actually schedules on the calendar queue.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Stop routing new traffic to the group; in-flight work finishes.
+    Drain { group: usize },
+    /// Kill the group: cancel in-flight loads/batches, harvest queues.
+    Fail { group: usize },
+    /// Bring the group back (cold — nothing resident, links nominal).
+    Recover { group: usize },
+    /// Scale the group's link transfer times by `factor` (1.0 = nominal).
+    LinkScale { group: usize, factor: f64 },
+}
+
+impl FaultAction {
+    pub fn group(&self) -> usize {
+        match *self {
+            FaultAction::Drain { group }
+            | FaultAction::Fail { group }
+            | FaultAction::Recover { group }
+            | FaultAction::LinkScale { group, .. } => group,
+        }
+    }
+}
+
+/// What happens to requests harvested from a failed group.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Re-issue attempts per harvested request before it is dropped
+    /// with `DropReason::Fault` (0 = fail-fast, every harvested
+    /// request is lost).
+    pub max_retries: u32,
+    /// Base backoff in seconds; retry attempt `k` is re-injected
+    /// `backoff * 2^(k-1)` seconds after the harvest.
+    pub backoff: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff: 0.05 }
+    }
+}
+
+impl RetryPolicy {
+    /// Exponential-backoff delay before retry attempt `attempt` (1-based).
+    pub fn delay(&self, attempt: u32) -> f64 {
+        debug_assert!(attempt >= 1, "attempts are 1-based");
+        // Cap the shift so a pathological max_retries cannot overflow.
+        self.backoff * (1u64 << (attempt.saturating_sub(1)).min(20)) as f64
+    }
+}
+
+/// Queue-depth-driven elastic scaling (the controller loop lives in
+/// `coordinator/autoscale.rs`; this is the config knob set).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscalePolicy {
+    /// Seconds between controller ticks.
+    pub interval: f64,
+    /// Mean queue depth per active group above which a standby joins.
+    pub high_queue: f64,
+    /// Mean queue depth below which the highest-id active group leaves.
+    pub low_queue: f64,
+    /// Never scale below this many active groups.
+    pub min_active: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy { interval: 0.5, high_queue: 8.0, low_queue: 1.0, min_active: 1 }
+    }
+}
+
+/// A full fault-injection plan: timed events + retry + autoscaling.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub retry: RetryPolicy,
+    pub autoscale: Option<AutoscalePolicy>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan — by contract, a simulator handed `none()` behaves
+    /// bit-for-bit like one handed no plan at all (pinned in
+    /// `rust/tests/determinism.rs`).
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new(), retry: RetryPolicy::default(), autoscale: None }
+    }
+
+    /// True when the plan injects nothing and never scales — the
+    /// simulator skips the whole fault layer.
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty() && self.autoscale.is_none()
+    }
+
+    /// Resolve the plan into time-ordered primitive actions: a
+    /// `GroupPreempt` becomes a `Drain` at its warning time plus a
+    /// `Fail` when the warning expires. Stable-sorted by time, so
+    /// simultaneous actions fire in plan order.
+    pub fn timeline(&self) -> Vec<(f64, FaultAction)> {
+        let mut out = Vec::new();
+        for e in &self.events {
+            match e.kind {
+                FaultKind::GroupFail { group } => out.push((e.at, FaultAction::Fail { group })),
+                FaultKind::GroupPreempt { group, warning } => {
+                    out.push((e.at, FaultAction::Drain { group }));
+                    out.push((e.at + warning, FaultAction::Fail { group }));
+                }
+                FaultKind::GroupRecover { group } => {
+                    out.push((e.at, FaultAction::Recover { group }))
+                }
+                FaultKind::LinkDegrade { group, factor } => {
+                    out.push((e.at, FaultAction::LinkScale { group, factor }))
+                }
+                FaultKind::LinkRestore { group } => {
+                    out.push((e.at, FaultAction::LinkScale { group, factor: 1.0 }))
+                }
+            }
+        }
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("fault times are finite"));
+        out
+    }
+
+    /// Structural validation against a resolved placement of
+    /// `num_groups` groups.
+    pub fn validate(&self, num_groups: usize) -> Result<(), String> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at.is_finite() || e.at < 0.0 {
+                return Err(format!("fault event {i}: time {} must be finite and >= 0", e.at));
+            }
+            let g = e.kind.group();
+            if g >= num_groups {
+                return Err(format!(
+                    "fault event {i} targets group {g} but the placement has {num_groups} group(s)"
+                ));
+            }
+            match e.kind {
+                FaultKind::GroupPreempt { warning, .. } => {
+                    if !warning.is_finite() || warning < 0.0 {
+                        return Err(format!(
+                            "fault event {i}: preemption warning {warning} must be finite and >= 0"
+                        ));
+                    }
+                }
+                FaultKind::LinkDegrade { factor, .. } => {
+                    if !factor.is_finite() || factor < 1.0 {
+                        return Err(format!(
+                            "fault event {i}: link degradation factor {factor} must be >= 1"
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if !self.retry.backoff.is_finite() || self.retry.backoff < 0.0 {
+            return Err(format!(
+                "retry backoff {} must be finite and >= 0",
+                self.retry.backoff
+            ));
+        }
+        if let Some(a) = &self.autoscale {
+            if !a.interval.is_finite() || a.interval <= 0.0 {
+                return Err(format!("autoscale interval {} must be > 0", a.interval));
+            }
+            if !a.high_queue.is_finite() || !a.low_queue.is_finite() || a.low_queue < 0.0 {
+                return Err("autoscale queue thresholds must be finite and >= 0".into());
+            }
+            if a.high_queue < a.low_queue {
+                return Err(format!(
+                    "autoscale high_queue {} must be >= low_queue {}",
+                    a.high_queue, a.low_queue
+                ));
+            }
+            if a.min_active < 1 {
+                return Err("autoscale min_active must be >= 1".into());
+            }
+            if a.min_active > num_groups {
+                return Err(format!(
+                    "autoscale min_active {} exceeds the placement's {num_groups} group(s)",
+                    a.min_active
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    // ----- JSON (the `faults` field of a system config) -----
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("at", Json::Num(e.at));
+                let (kind, group) = match e.kind {
+                    FaultKind::GroupFail { group } => ("fail", group),
+                    FaultKind::GroupPreempt { group, warning } => {
+                        o.set("warning", Json::Num(warning));
+                        ("preempt", group)
+                    }
+                    FaultKind::GroupRecover { group } => ("recover", group),
+                    FaultKind::LinkDegrade { group, factor } => {
+                        o.set("factor", Json::Num(factor));
+                        ("link-degrade", group)
+                    }
+                    FaultKind::LinkRestore { group } => ("link-restore", group),
+                };
+                o.set("kind", Json::Str(kind.to_string()));
+                o.set("group", Json::Num(group as f64));
+                o
+            })
+            .collect();
+        j.set("events", Json::Arr(events));
+        let mut r = Json::obj();
+        r.set("max_retries", Json::Num(self.retry.max_retries as f64));
+        r.set("backoff", Json::Num(self.retry.backoff));
+        j.set("retry", r);
+        if let Some(a) = &self.autoscale {
+            let mut o = Json::obj();
+            o.set("interval", Json::Num(a.interval));
+            o.set("high_queue", Json::Num(a.high_queue));
+            o.set("low_queue", Json::Num(a.low_queue));
+            o.set("min_active", Json::Num(a.min_active as f64));
+            j.set("autoscale", o);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        if let Some(r) = j.get("retry") {
+            let mut retry = RetryPolicy::default();
+            if let Some(n) = r.get("max_retries").and_then(Json::as_u64) {
+                retry.max_retries = n as u32;
+            }
+            if let Some(b) = r.get("backoff").and_then(Json::as_f64) {
+                retry.backoff = b;
+            }
+            plan.retry = retry;
+        }
+        if let Some(a) = j.get("autoscale") {
+            let mut auto = AutoscalePolicy::default();
+            if let Some(v) = a.get("interval").and_then(Json::as_f64) {
+                auto.interval = v;
+            }
+            if let Some(v) = a.get("high_queue").and_then(Json::as_f64) {
+                auto.high_queue = v;
+            }
+            if let Some(v) = a.get("low_queue").and_then(Json::as_f64) {
+                auto.low_queue = v;
+            }
+            if let Some(v) = a.get("min_active").and_then(Json::as_usize) {
+                auto.min_active = v;
+            }
+            plan.autoscale = Some(auto);
+        }
+        if let Some(events) = j.get("events") {
+            let arr = events.as_arr().ok_or("faults.events must be an array")?;
+            for (i, e) in arr.iter().enumerate() {
+                let at = e
+                    .get("at")
+                    .and_then(Json::as_f64)
+                    .ok_or(format!("faults.events[{i}]: missing numeric `at`"))?;
+                let kind = e
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or(format!("faults.events[{i}]: missing string `kind`"))?;
+                let group = e
+                    .get("group")
+                    .and_then(Json::as_usize)
+                    .ok_or(format!("faults.events[{i}]: missing integer `group`"))?;
+                let kind = match kind {
+                    "fail" => FaultKind::GroupFail { group },
+                    "preempt" => {
+                        let warning = e.get("warning").and_then(Json::as_f64).unwrap_or(0.0);
+                        FaultKind::GroupPreempt { group, warning }
+                    }
+                    "recover" => FaultKind::GroupRecover { group },
+                    "link-degrade" => {
+                        let factor = e.get("factor").and_then(Json::as_f64).ok_or(format!(
+                            "faults.events[{i}]: link-degrade needs a numeric `factor`"
+                        ))?;
+                        FaultKind::LinkDegrade { group, factor }
+                    }
+                    "link-restore" => FaultKind::LinkRestore { group },
+                    other => {
+                        return Err(format!(
+                            "faults.events[{i}]: unknown kind '{other}' \
+                             (fail|preempt|recover|link-degrade|link-restore)"
+                        ))
+                    }
+                };
+                plan.events.push(FaultEvent { at, kind });
+            }
+        }
+        Ok(plan)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos schedule generators — the fault-side analogue of the workload
+// scenario registry (`computron chaos` / `simulate --chaos <name>`).
+// ---------------------------------------------------------------------------
+
+/// Inputs a chaos generator needs to lay out a schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosParams {
+    pub seed: u64,
+    /// Measured window in seconds; schedules are laid out inside it.
+    pub duration: f64,
+    pub num_groups: usize,
+}
+
+const KINDS: &[(&str, &str)] = &[
+    (
+        "gpu-mtbf",
+        "independent per-group hard failures with exponential MTBF (~1 per group per window), fixed repair time",
+    ),
+    (
+        "rack-correlated",
+        "one correlated rack outage kills half the groups at the same instant, repaired together",
+    ),
+    (
+        "spot-wave",
+        "periodic spot-preemption waves: a rotating group gets a warning, dies, and comes back",
+    ),
+];
+
+/// Registered chaos schedule names, in registry order.
+pub fn chaos_names() -> Vec<&'static str> {
+    KINDS.iter().map(|&(n, _)| n).collect()
+}
+
+pub fn is_known_chaos(name: &str) -> bool {
+    KINDS.iter().any(|&(n, _)| n == name)
+}
+
+pub fn describe_chaos(name: &str) -> Option<&'static str> {
+    KINDS.iter().find(|&&(n, _)| n == name).map(|&(_, d)| d)
+}
+
+/// Generate the named chaos schedule; `None` for unknown names. Same
+/// name + params always yields the identical plan.
+pub fn chaos_by_name(name: &str, p: &ChaosParams) -> Option<FaultPlan> {
+    match name {
+        "gpu-mtbf" => Some(gpu_mtbf(p)),
+        "rack-correlated" => Some(rack_correlated(p)),
+        "spot-wave" => Some(spot_wave(p)),
+        _ => None,
+    }
+}
+
+/// Independent exponential failures per group, MTBF = the measured
+/// window (so each group fails about once), repair after 10% of it.
+fn gpu_mtbf(p: &ChaosParams) -> FaultPlan {
+    let mut root = Rng::seeded(p.seed ^ 0xFA17_0001);
+    let repair = 0.10 * p.duration;
+    let mut events = Vec::new();
+    for g in 0..p.num_groups {
+        let mut rng = root.fork();
+        let mut t = rng.exponential(1.0 / p.duration);
+        while t < p.duration {
+            events.push(FaultEvent { at: t, kind: FaultKind::GroupFail { group: g } });
+            let back = t + repair;
+            if back >= p.duration {
+                break;
+            }
+            events.push(FaultEvent { at: back, kind: FaultKind::GroupRecover { group: g } });
+            t = back + rng.exponential(1.0 / p.duration);
+        }
+    }
+    FaultPlan { events, retry: RetryPolicy::default(), autoscale: None }
+}
+
+/// One correlated outage: the first half of the groups (the shared
+/// "rack") all die at a random instant in [0.3, 0.5] of the window and
+/// are repaired together 20% of the window later.
+fn rack_correlated(p: &ChaosParams) -> FaultPlan {
+    let mut rng = Rng::seeded(p.seed ^ 0xFA17_0002);
+    let at = rng.range_f64(0.3, 0.5) * p.duration;
+    let back = at + 0.2 * p.duration;
+    let rack = (p.num_groups / 2).max(1).min(p.num_groups);
+    let mut events = Vec::new();
+    for g in 0..rack {
+        events.push(FaultEvent { at, kind: FaultKind::GroupFail { group: g } });
+        if back < p.duration {
+            events.push(FaultEvent { at: back, kind: FaultKind::GroupRecover { group: g } });
+        }
+    }
+    FaultPlan { events, retry: RetryPolicy::default(), autoscale: None }
+}
+
+/// Spot-preemption waves: starting 20-30% into the window, a rotating
+/// group is preempted (5% warning), stays down 15%, and the next wave
+/// lands 25-35% later.
+fn spot_wave(p: &ChaosParams) -> FaultPlan {
+    let mut rng = Rng::seeded(p.seed ^ 0xFA17_0003);
+    let warning = 0.05 * p.duration;
+    let down = 0.15 * p.duration;
+    let mut events = Vec::new();
+    let mut t = rng.range_f64(0.2, 0.3) * p.duration;
+    let mut wave = 0usize;
+    while t + warning < p.duration {
+        let group = wave % p.num_groups;
+        events.push(FaultEvent { at: t, kind: FaultKind::GroupPreempt { group, warning } });
+        let back = t + warning + down;
+        if back < p.duration {
+            events.push(FaultEvent { at: back, kind: FaultKind::GroupRecover { group } });
+        }
+        wave += 1;
+        t += rng.range_f64(0.25, 0.35) * p.duration;
+    }
+    FaultPlan { events, retry: RetryPolicy::default(), autoscale: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_empty_identity() {
+        let plan = FaultPlan::none();
+        assert!(plan.is_none());
+        assert!(plan.timeline().is_empty());
+        assert!(plan.validate(1).is_ok());
+        assert_eq!(plan, FaultPlan::default());
+    }
+
+    #[test]
+    fn preempt_resolves_to_drain_then_fail() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at: 2.0,
+                kind: FaultKind::GroupPreempt { group: 1, warning: 0.5 },
+            }],
+            ..FaultPlan::none()
+        };
+        assert_eq!(
+            plan.timeline(),
+            vec![
+                (2.0, FaultAction::Drain { group: 1 }),
+                (2.5, FaultAction::Fail { group: 1 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn timeline_is_time_ordered_and_restore_is_unit_scale() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent { at: 3.0, kind: FaultKind::LinkRestore { group: 0 } },
+                FaultEvent { at: 1.0, kind: FaultKind::LinkDegrade { group: 0, factor: 4.0 } },
+            ],
+            ..FaultPlan::none()
+        };
+        assert_eq!(
+            plan.timeline(),
+            vec![
+                (1.0, FaultAction::LinkScale { group: 0, factor: 4.0 }),
+                (3.0, FaultAction::LinkScale { group: 0, factor: 1.0 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let fail = |group| FaultEvent { at: 1.0, kind: FaultKind::GroupFail { group } };
+        let plan = FaultPlan { events: vec![fail(2)], ..FaultPlan::none() };
+        assert!(plan.validate(2).is_err(), "group out of range");
+        assert!(plan.validate(3).is_ok());
+
+        let plan = FaultPlan {
+            events: vec![FaultEvent { at: -1.0, kind: FaultKind::GroupFail { group: 0 } }],
+            ..FaultPlan::none()
+        };
+        assert!(plan.validate(1).is_err(), "negative time");
+
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                at: 0.0,
+                kind: FaultKind::LinkDegrade { group: 0, factor: 0.5 },
+            }],
+            ..FaultPlan::none()
+        };
+        assert!(plan.validate(1).is_err(), "speed-up factors are not degradation");
+
+        let plan = FaultPlan {
+            autoscale: Some(AutoscalePolicy { min_active: 3, ..AutoscalePolicy::default() }),
+            ..FaultPlan::none()
+        };
+        assert!(plan.validate(2).is_err(), "min_active above group count");
+    }
+
+    #[test]
+    fn retry_backoff_is_exponential() {
+        let r = RetryPolicy { max_retries: 4, backoff: 0.25 };
+        assert_eq!(r.delay(1), 0.25);
+        assert_eq!(r.delay(2), 0.5);
+        assert_eq!(r.delay(3), 1.0);
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent { at: 1.0, kind: FaultKind::GroupFail { group: 0 } },
+                FaultEvent { at: 2.0, kind: FaultKind::GroupPreempt { group: 1, warning: 0.5 } },
+                FaultEvent { at: 4.0, kind: FaultKind::GroupRecover { group: 1 } },
+                FaultEvent { at: 5.0, kind: FaultKind::LinkDegrade { group: 0, factor: 3.0 } },
+                FaultEvent { at: 6.0, kind: FaultKind::LinkRestore { group: 0 } },
+            ],
+            retry: RetryPolicy { max_retries: 7, backoff: 0.125 },
+            autoscale: Some(AutoscalePolicy {
+                interval: 0.25,
+                high_queue: 12.0,
+                low_queue: 2.0,
+                min_active: 2,
+            }),
+        };
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+        // And through the string form (what a config file actually holds).
+        let reparsed = Json::parse(&plan.to_json().to_string()).unwrap();
+        assert_eq!(FaultPlan::from_json(&reparsed).unwrap(), plan);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_kind() {
+        let j = Json::parse(r#"{"events":[{"at":1.0,"kind":"meteor","group":0}]}"#).unwrap();
+        assert!(FaultPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn chaos_registry_is_consistent() {
+        let names = chaos_names();
+        assert_eq!(names, vec!["gpu-mtbf", "rack-correlated", "spot-wave"]);
+        for name in names {
+            assert!(is_known_chaos(name));
+            assert!(describe_chaos(name).is_some());
+            let p = ChaosParams { seed: 11, duration: 10.0, num_groups: 4 };
+            let plan = chaos_by_name(name, &p).expect("registered name generates");
+            plan.validate(4).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!plan.events.is_empty(), "{name}: schedules at least one fault");
+            // Deterministic: same seed, same schedule.
+            assert_eq!(chaos_by_name(name, &p).unwrap(), plan, "{name}");
+            // Different seeds move the schedule.
+            let p2 = ChaosParams { seed: 12, ..p };
+            assert_ne!(chaos_by_name(name, &p2).unwrap(), plan, "{name}");
+        }
+        assert!(!is_known_chaos("sunshine"));
+        assert!(chaos_by_name("sunshine", &ChaosParams { seed: 1, duration: 1.0, num_groups: 1 })
+            .is_none());
+    }
+
+    #[test]
+    fn chaos_schedules_stay_inside_the_window() {
+        for name in chaos_names() {
+            let p = ChaosParams { seed: 3, duration: 20.0, num_groups: 3 };
+            let plan = chaos_by_name(name, &p).unwrap();
+            for e in &plan.events {
+                assert!(e.at >= 0.0 && e.at < p.duration, "{name}: event at {}", e.at);
+            }
+        }
+    }
+}

@@ -89,13 +89,30 @@ impl Lane {
 #[derive(Clone, Debug)]
 pub struct Link {
     pub model: LinkModel,
+    /// Fault-injected degradation: every transfer duration is multiplied
+    /// by this factor (1.0 = nominal, and `x * 1.0 == x` exactly, so an
+    /// undegraded link is bit-for-bit identical to one without the
+    /// knob). Set via `FaultAction::LinkScale` (DESIGN.md §11).
+    time_scale: f64,
     h2d: Lane,
     d2h: Lane,
 }
 
 impl Link {
     pub fn new(model: LinkModel) -> Link {
-        Link { model, h2d: Lane::new(), d2h: Lane::new() }
+        Link { model, time_scale: 1.0, h2d: Lane::new(), d2h: Lane::new() }
+    }
+
+    /// Degrade (factor > 1) or restore (factor = 1) the link; applies to
+    /// transfers enqueued from now on — in-flight ones keep their
+    /// original duration (the DMA is already programmed).
+    pub fn set_time_scale(&mut self, factor: f64) {
+        assert!(factor.is_finite() && factor >= 1.0, "degradation factor must be >= 1");
+        self.time_scale = factor;
+    }
+
+    pub fn time_scale(&self) -> f64 {
+        self.time_scale
     }
 
     /// Enqueue a transfer at `now`; returns its completion time. Transfers
@@ -107,7 +124,7 @@ impl Link {
         messages: usize,
         bytes: usize,
     ) -> SimTime {
-        let duration = self.model.transfer_time(messages, bytes);
+        let duration = self.model.transfer_time(messages, bytes) * self.time_scale;
         match dir {
             Direction::H2D => self.h2d.enqueue(now, duration, bytes),
             Direction::D2H => self.d2h.enqueue(now, duration, bytes),
@@ -219,6 +236,20 @@ mod tests {
             lane_a.bytes_moved(Direction::H2D),
             lane_b.bytes_moved(Direction::H2D)
         );
+    }
+
+    #[test]
+    fn degraded_link_slows_future_transfers_only() {
+        let mut link =
+            Link::new(LinkModel { alpha: 0.0, bandwidth: 1e9, pageable_copy_bw: f64::INFINITY });
+        let f1 = link.transfer(0.0, Direction::H2D, 1, 1_000_000_000); // 1 s nominal
+        link.set_time_scale(4.0);
+        let f2 = link.transfer(0.0, Direction::H2D, 1, 1_000_000_000); // 4 s degraded
+        assert_eq!(f1, 1.0, "in-flight transfer keeps its duration");
+        assert_eq!(f2, 5.0);
+        link.set_time_scale(1.0);
+        let f3 = link.transfer(0.0, Direction::H2D, 1, 1_000_000_000);
+        assert_eq!(f3, 6.0, "restore returns to nominal");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 pub mod clock;
 pub mod compute;
+pub mod fault;
 pub mod gpu;
 pub mod hostmem;
 pub mod link;
@@ -15,6 +16,7 @@ pub mod stream;
 
 pub use clock::{EventQueue, QueueBackend, SimTime};
 pub use compute::ComputeModel;
+pub use fault::{AutoscalePolicy, FaultAction, FaultEvent, FaultKind, FaultPlan, RetryPolicy};
 pub use gpu::{GpuDevice, MemTracker};
 pub use hostmem::PinnedPool;
 pub use link::{Direction, Link, LinkModel};

@@ -16,6 +16,7 @@
 //! `rust/tests/hetero.rs`). See DESIGN.md §7.
 
 use crate::cluster::compute::ComputeModel;
+use crate::cluster::fault::FaultPlan;
 use crate::cluster::link::LinkModel;
 use crate::model::{catalog, spec::ModelSpec};
 use crate::util::json::Json;
@@ -889,6 +890,12 @@ pub struct SystemConfig {
     /// policy (DESIGN.md §8). `None` is the legacy single-group
     /// deployment on `parallel` — bit-for-bit the pre-placement system.
     pub placement: Option<PlacementSpec>,
+    /// Fault-injection & elasticity plan (DESIGN.md §11): scheduled
+    /// group failures / spot preemptions / link degradations, the retry
+    /// policy for requests caught on a failing group, and an optional
+    /// queue-depth autoscaler. `None` (and `Some(FaultPlan::none())`)
+    /// reproduce the fault-free simulator bit-for-bit.
+    pub faults: Option<FaultPlan>,
 }
 
 #[derive(Debug)]
@@ -908,6 +915,11 @@ pub enum ConfigError {
     BadDeployment(String),
     BadPlacement(String),
     BadPlanner(String),
+    BadFaults(String),
+    /// The configuration requests a feature that only the simulator
+    /// implements — real serving (`serve`) must reject it up front
+    /// instead of each call site improvising its own error.
+    SimulatorOnly(String),
     Json(String),
 }
 
@@ -945,6 +957,12 @@ impl std::fmt::Display for ConfigError {
             ConfigError::BadDeployment(m) => write!(f, "bad catalog entry: {m}"),
             ConfigError::BadPlacement(m) => write!(f, "bad placement: {m}"),
             ConfigError::BadPlanner(m) => write!(f, "bad planner config: {m}"),
+            ConfigError::BadFaults(m) => write!(f, "bad fault plan: {m}"),
+            ConfigError::SimulatorOnly(feature) => write!(
+                f,
+                "{feature} is simulator-only for now; drop it from the config (or run \
+                 `simulate`) to use real serving"
+            ),
             ConfigError::Json(m) => write!(f, "{m}"),
         }
     }
@@ -979,6 +997,7 @@ impl SystemConfig {
             },
             scenario: None,
             placement: None,
+            faults: None,
         }
     }
 
@@ -995,6 +1014,7 @@ impl SystemConfig {
             },
             scenario: None,
             placement: None,
+            faults: None,
         }
     }
 
@@ -1015,6 +1035,7 @@ impl SystemConfig {
             },
             scenario: None,
             placement: None,
+            faults: None,
         }
     }
 
@@ -1127,6 +1148,9 @@ impl SystemConfig {
             }
         }
         self.models.validate_attributes()?;
+        if let Some(plan) = &self.faults {
+            plan.validate(placement.groups.len()).map_err(ConfigError::BadFaults)?;
+        }
         // Per group, the `cap` *largest* hosted shards must fit in that
         // group's device memory together. (Transfers are per-tensor
         // granular — an overlapped swap drains the victim while the
@@ -1158,6 +1182,46 @@ impl SystemConfig {
                     gpu_mem,
                 });
             }
+        }
+        Ok(())
+    }
+
+    /// Reject the **simulator-only features** for real-mode serving with
+    /// one [`ConfigError::SimulatorOnly`] per offender. This is the
+    /// single place the "works in `simulate`, not in `serve`" list
+    /// lives — `main.rs` and `Computron::launch` both route through it
+    /// instead of improvising ad-hoc errors. Deliberately independent of
+    /// `validate()`: serve configs may name manifest models (e.g.
+    /// `opt-test`) the simulation catalog cannot resolve — real mode
+    /// validates its catalog against the artifact manifest instead.
+    pub fn validate_serve(&self) -> Result<(), ConfigError> {
+        if self.engine.load_design == LoadDesign::ChunkedPipelined {
+            return Err(ConfigError::SimulatorOnly(
+                "the chunked-pipelined load design (real-mode loads are a single \
+                 blocking host->device copy; use `async`)"
+                    .into(),
+            ));
+        }
+        if !self.models.is_homogeneous() {
+            return Err(ConfigError::SimulatorOnly(
+                "a heterogeneous model catalog (real mode serves N instances of one \
+                 architecture)"
+                    .into(),
+            ));
+        }
+        if let Some(p) = &self.placement {
+            if *p != PlacementSpec::single(self.parallel, self.models.len()) {
+                return Err(ConfigError::SimulatorOnly(
+                    "a non-trivial placement (real mode serves one engine group on the \
+                     configured tp x pp grid)"
+                        .into(),
+                ));
+            }
+        }
+        if self.faults.as_ref().is_some_and(|p| !p.is_none()) {
+            return Err(ConfigError::SimulatorOnly(
+                "fault injection (`faults`)".into(),
+            ));
         }
         Ok(())
     }
@@ -1198,6 +1262,9 @@ impl SystemConfig {
         }
         if let Some(p) = &self.placement {
             j.set("placement", p.to_json());
+        }
+        if let Some(plan) = &self.faults {
+            j.set("faults", plan.to_json());
         }
         j
     }
@@ -1271,6 +1338,7 @@ impl SystemConfig {
             engine: EngineConfig::default(),
             scenario: None,
             placement: None,
+            faults: None,
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
@@ -1304,6 +1372,9 @@ impl SystemConfig {
         }
         if let Some(p) = j.get("placement") {
             cfg.placement = Some(PlacementSpec::from_json(p, cfg.parallel)?);
+        }
+        if let Some(fj) = j.get("faults") {
+            cfg.faults = Some(FaultPlan::from_json(fj).map_err(ConfigError::BadFaults)?);
         }
         if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
             cfg.hardware.gpu_mem = v;
@@ -1818,5 +1889,68 @@ mod tests {
         let mut bad = SystemConfig::workload_experiment(3, 2, 8);
         bad.engine.prefetch_min_count = 0;
         assert!(matches!(bad.validate(), Err(ConfigError::ZeroPrefetchMinCount)));
+    }
+
+    #[test]
+    fn fault_plan_roundtrips_and_validates_against_placement() {
+        use crate::cluster::fault::{FaultEvent, FaultKind};
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.placement = Some(PlacementSpec::replicated(2, cfg.parallel, 3, RouterKind::RoundRobin));
+        let mut plan = FaultPlan::none();
+        plan.events.push(FaultEvent {
+            at: 1.0,
+            kind: FaultKind::GroupPreempt { group: 1, warning: 0.2 },
+        });
+        plan.retry.max_retries = 2;
+        cfg.faults = Some(plan.clone());
+        cfg.validate().unwrap();
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.faults, Some(plan));
+        // A plan naming a group outside the placement is a config error.
+        cfg.faults.as_mut().unwrap().events[0].kind =
+            FaultKind::GroupFail { group: 7 };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadFaults(_))));
+        // No `faults` key parses as None (not Some(none())).
+        let bare = SystemConfig::workload_experiment(3, 2, 8);
+        assert!(bare.to_json().get("faults").is_none());
+        assert_eq!(SystemConfig::from_json(&bare.to_json()).unwrap().faults, None);
+    }
+
+    #[test]
+    fn validate_serve_rejects_simulator_only_features() {
+        use crate::cluster::fault::{FaultEvent, FaultKind};
+        // The baseline workload preset is real-servable.
+        let cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.validate_serve().unwrap();
+        // The trivial single-group shim is still fine (it IS the legacy
+        // deployment, just spelled explicitly).
+        let mut shim = cfg.clone();
+        shim.placement = Some(PlacementSpec::single(shim.parallel, shim.models.len()));
+        shim.validate_serve().unwrap();
+        // Chunked load design.
+        let mut chunked = cfg.clone();
+        chunked.engine.load_design = LoadDesign::ChunkedPipelined;
+        assert!(matches!(chunked.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+        // Heterogeneous catalog.
+        let mut hetero = cfg.clone();
+        hetero.models = ModelCatalog::new(vec![
+            ModelDeployment::new("opt-13b"),
+            ModelDeployment::new("opt-6.7b"),
+        ]);
+        assert!(matches!(hetero.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+        // Multi-group placement.
+        let mut multi = cfg.clone();
+        multi.placement =
+            Some(PlacementSpec::replicated(2, multi.parallel, 3, RouterKind::RoundRobin));
+        assert!(matches!(multi.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+        // A non-empty fault plan; the empty plan is equivalent to None.
+        let mut faulty = cfg.clone();
+        faulty.faults = Some(FaultPlan::none());
+        faulty.validate_serve().unwrap();
+        faulty.faults.as_mut().unwrap().events.push(FaultEvent {
+            at: 0.5,
+            kind: FaultKind::GroupFail { group: 0 },
+        });
+        assert!(matches!(faulty.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
     }
 }

@@ -1,0 +1,141 @@
+//! Queue-depth autoscaler for elastic groups (DESIGN.md §11).
+//!
+//! A *pure* controller: the simulator samples per-group load at each
+//! `AutoscaleTick`, hands the snapshot to [`decide`], and applies the
+//! returned join/leave actions. Keeping the policy side-effect-free makes
+//! it trivially deterministic (the snapshot is sorted by group id) and
+//! unit-testable without a cluster.
+//!
+//! The policy is deliberately simple — mean queue depth across *active*
+//! healthy groups against a high/low watermark pair
+//! ([`crate::cluster::fault::AutoscalePolicy`]):
+//!
+//! - mean depth > `high_queue` → **join** the lowest-id healthy standby
+//!   group (scale out one group per tick; model loads are the cold-start
+//!   cost, paid lazily on first routed request);
+//! - mean depth < `low_queue` and more than `min_active` groups active →
+//!   **leave** (drain) the highest-id active group — highest first so the
+//!   active set stays a prefix, which keeps scale-in/scale-out cycles
+//!   from thrashing different group identities.
+//!
+//! One action per tick bounds the control loop's slew rate; hysteresis
+//! comes from the watermark gap (`high_queue` > `low_queue`).
+
+use crate::cluster::fault::AutoscalePolicy;
+
+/// One group's load sample at a tick, as seen by the controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupLoad {
+    pub group: usize,
+    /// Counted in the active serving set (joined, not draining).
+    pub active: bool,
+    /// Up per the fault layer (a failed group is neither a join candidate
+    /// nor counted toward mean depth).
+    pub healthy: bool,
+    /// Queued requests on the group's engine.
+    pub queue_depth: usize,
+}
+
+/// A scaling decision for one tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// Activate a standby group (starts receiving routed traffic).
+    Join { group: usize },
+    /// Drain an active group: stop routing new arrivals to it; queued
+    /// work finishes where it is.
+    Leave { group: usize },
+}
+
+/// Decide this tick's action (at most one) from a load snapshot. `loads`
+/// must be sorted by ascending group id — the simulator builds it that
+/// way, and determinism of the tie-breaks depends on it.
+pub fn decide(policy: &AutoscalePolicy, loads: &[GroupLoad]) -> Option<ScaleAction> {
+    let active: Vec<&GroupLoad> = loads.iter().filter(|l| l.active && l.healthy).collect();
+    if active.is_empty() {
+        // Everything is down or drained: join the first healthy standby
+        // so traffic has somewhere to go, regardless of watermarks.
+        return loads
+            .iter()
+            .find(|l| !l.active && l.healthy)
+            .map(|l| ScaleAction::Join { group: l.group });
+    }
+    let mean = active.iter().map(|l| l.queue_depth as f64).sum::<f64>() / active.len() as f64;
+    if mean > policy.high_queue {
+        return loads
+            .iter()
+            .find(|l| !l.active && l.healthy)
+            .map(|l| ScaleAction::Join { group: l.group });
+    }
+    if mean < policy.low_queue && active.len() > policy.min_active {
+        return active.last().map(|l| ScaleAction::Leave { group: l.group });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy { interval: 0.5, high_queue: 8.0, low_queue: 1.0, min_active: 1 }
+    }
+
+    fn load(group: usize, active: bool, healthy: bool, queue_depth: usize) -> GroupLoad {
+        GroupLoad { group, active, healthy, queue_depth }
+    }
+
+    #[test]
+    fn joins_lowest_standby_when_overloaded() {
+        let loads = [
+            load(0, true, true, 12),
+            load(1, false, true, 0),
+            load(2, false, true, 0),
+        ];
+        assert_eq!(decide(&policy(), &loads), Some(ScaleAction::Join { group: 1 }));
+    }
+
+    #[test]
+    fn leaves_highest_active_when_idle() {
+        let loads = [load(0, true, true, 0), load(1, true, true, 0)];
+        assert_eq!(decide(&policy(), &loads), Some(ScaleAction::Leave { group: 1 }));
+    }
+
+    #[test]
+    fn respects_min_active_floor() {
+        let loads = [load(0, true, true, 0)];
+        assert_eq!(decide(&policy(), &loads), None);
+        let two_floor = AutoscalePolicy { min_active: 2, ..policy() };
+        let loads = [load(0, true, true, 0), load(1, true, true, 0)];
+        assert_eq!(decide(&two_floor, &loads), None);
+    }
+
+    #[test]
+    fn holds_steady_between_watermarks() {
+        let loads = [load(0, true, true, 4), load(1, true, true, 4)];
+        assert_eq!(decide(&policy(), &loads), None);
+    }
+
+    #[test]
+    fn skips_unhealthy_groups_entirely() {
+        // The dead group neither biases the mean nor gets joined.
+        let loads = [
+            load(0, true, true, 12),
+            load(1, false, false, 0), // failed
+            load(2, false, true, 0),
+        ];
+        assert_eq!(decide(&policy(), &loads), Some(ScaleAction::Join { group: 2 }));
+        // Overloaded but no healthy standby left: no action possible.
+        let loads = [load(0, true, true, 12), load(1, false, false, 0)];
+        assert_eq!(decide(&policy(), &loads), None);
+    }
+
+    #[test]
+    fn rejoins_when_active_set_is_empty() {
+        // Every active group failed: join the first healthy standby even
+        // though there is no queue-depth signal.
+        let loads = [load(0, false, false, 0), load(1, false, true, 0)];
+        assert_eq!(decide(&policy(), &loads), Some(ScaleAction::Join { group: 1 }));
+        let loads = [load(0, false, false, 0)];
+        assert_eq!(decide(&policy(), &loads), None);
+    }
+}

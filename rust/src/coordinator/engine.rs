@@ -67,8 +67,21 @@ impl RequestRecord {
     }
 }
 
-/// Record of one request rejected or shed by admission control (only the
-/// `shed` scheduler produces these).
+/// Why a request was dropped instead of completed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// Admission control / shedding: the deadline was provably
+    /// infeasible (the `shed` scheduler's verdict).
+    Infeasible,
+    /// The hosting group failed and the `RetryPolicy` budget was
+    /// exhausted (fault injection, DESIGN.md §11).
+    Fault,
+}
+
+/// Record of one request rejected, shed, or lost. Admission control
+/// (the `shed` scheduler) produces `Infeasible` drops; the cluster's
+/// fault layer produces `Fault` drops for requests a failed group could
+/// not re-home within its retry budget.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DropRecord {
     pub id: RequestId,
@@ -83,6 +96,7 @@ pub struct DropRecord {
     pub residency: Residency,
     /// Engine group that dropped the request (0 single-group).
     pub group: usize,
+    pub reason: DropReason,
 }
 
 /// Completion record for one swap (offload+load pair or bare load),
@@ -379,6 +393,7 @@ impl Engine {
                 dropped_at: now,
                 residency: self.swap.state(model),
                 group: 0,
+                reason: DropReason::Infeasible,
             });
             return id;
         }
@@ -682,6 +697,7 @@ impl Engine {
                     dropped_at: now,
                     residency,
                     group: 0,
+                    reason: DropReason::Infeasible,
                 });
             }
         }
@@ -930,6 +946,65 @@ impl Engine {
         self.cancelling[model] = true;
         self.outbox.push(Entry::Load(LoadEntry { id, model, dir: LoadDirection::Cancel }));
         true
+    }
+
+    /// The hosting group died (fault injection, DESIGN.md §11): harvest
+    /// every request that had not completed — queued ones first (model
+    /// order, FIFO within each model), then the members of in-flight
+    /// batches in entry-id order — and reset all transfer state so the
+    /// caller can retry or drop them. Unsettled swap pairs are recorded
+    /// as cancelled at `now`, every in-flight load is accounted as
+    /// cancelled in `SwapStats` (offloads as completed — the data was
+    /// headed to host memory), and all residency flips to `Offloaded`:
+    /// the GPUs lost their memory. Completed/drop/swap records, counters,
+    /// and the predictor's learned transitions survive — they describe
+    /// the past, not the hardware. The engine is `idle()` afterwards and
+    /// serves again as soon as the backend feeds it arrivals (recovery).
+    pub fn fail(&mut self, now: f64) -> Vec<Request> {
+        let mut harvested = Vec::new();
+        for model in 0..self.queues.num_models() {
+            while let Some(req) = self.queues.pop_head(model) {
+                harvested.push(req);
+            }
+        }
+        // HashMap iteration order is nondeterministic; sort by entry id
+        // (== submission order) so retries replay identically run-to-run.
+        let mut batch_ids: Vec<EntryId> = self.inflight_batches.keys().copied().collect();
+        batch_ids.sort_unstable();
+        for id in batch_ids {
+            let batch = self.inflight_batches.remove(&id).unwrap();
+            harvested.extend(batch.requests.iter().cloned());
+        }
+        self.batch_submit_times.clear();
+        self.inflight_per_model.iter_mut().for_each(|n| *n = 0);
+        self.inflight_loads.clear();
+        for idx in 0..self.swap_pairs.len() {
+            let pair = &mut self.swap_pairs[idx];
+            if pair.completed.is_some() {
+                continue;
+            }
+            pair.completed = Some(now);
+            pair.cancelled = true;
+            pair.outstanding = 0;
+            let (load_model, victim, submitted) = (pair.load_model, pair.victim, pair.submitted);
+            let ttfc = pair.first_chunk_at.unwrap_or(now) - submitted;
+            let overlap = pair.overlapped_chunks as f64 / pair.total_chunks as f64;
+            self.swap_records.push(SwapRecord {
+                load_model,
+                victim,
+                submitted,
+                completed: now,
+                time_to_first_chunk: ttfc,
+                overlap_fraction: overlap,
+                cancelled: true,
+                bytes: self.costs[load_model].bytes,
+                group: 0,
+            });
+        }
+        self.cancelling.iter_mut().for_each(|c| *c = false);
+        self.outbox.clear();
+        self.swap.fail_all();
+        harvested
     }
 
     /// A burst flipped priorities while `requested`'s swap-in is Blocked:
@@ -1506,6 +1581,52 @@ mod tests {
             }
         }
         assert!(e.take_dropped().is_empty(), "infinite SLOs are always feasible");
+    }
+
+    #[test]
+    fn fail_harvests_queued_and_inflight_requests() {
+        let mut e = engine_for(2, 2, 1, cfg(2, 2));
+        e.force_resident(0, 0.0);
+        // One batch in flight for model 0, two queued behind it, and one
+        // queued for offloaded model 1 (its load goes out too).
+        e.on_request(0.0, 0, 4);
+        e.on_request(0.1, 0, 4);
+        e.on_request(0.2, 0, 4);
+        e.on_request(0.3, 1, 4);
+        let out = e.drain_outbox();
+        assert!(out.iter().any(|en| !en.is_load()), "a batch went out");
+        assert!(out.iter().any(Entry::is_load), "model 1's load went out");
+        let harvested = e.fail(1.0);
+        // Queued requests come back first (model order), then in-flight
+        // batch members in entry order.
+        let ids: Vec<_> = harvested.iter().map(|r| r.id).collect();
+        assert_eq!(harvested.len(), 4, "{harvested:?}");
+        assert_eq!(ids, vec![1, 2, 3, 0]);
+        assert!(e.idle(), "a failed engine is quiescent");
+        assert!(e.drain_outbox().is_empty(), "outbox wiped");
+        for m in 0..2 {
+            assert_eq!(e.residency(m), Residency::Offloaded, "GPU memory lost");
+        }
+        // The in-flight swap pair settles as cancelled; SwapStats
+        // invariants hold (loads started == completed + cancelled).
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert!(recs[0].cancelled);
+        let s = e.swap_stats();
+        assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled);
+        assert_eq!(s.offloads_started, s.offloads_completed);
+        // The engine serves again after recovery: same request replayed.
+        e.on_request(2.0, 0, 4);
+        let out = e.drain_outbox();
+        assert!(out.iter().any(Entry::is_load), "cold reload after recovery");
+    }
+
+    #[test]
+    fn fail_on_idle_engine_is_a_no_op_harvest() {
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        assert!(e.fail(0.5).is_empty());
+        assert!(e.idle());
+        assert!(e.take_swap_records().is_empty());
     }
 
     #[test]

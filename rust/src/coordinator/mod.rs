@@ -4,6 +4,7 @@
 //! (DESIGN.md §5), and the batch/load entry types that flow through the
 //! worker pipelines.
 
+pub mod autoscale;
 pub mod engine;
 pub mod entry;
 pub mod planner;
@@ -14,7 +15,8 @@ pub mod router;
 pub mod scheduler;
 pub mod swap;
 
-pub use engine::{DropRecord, Engine, RequestRecord, SwapRecord};
+pub use autoscale::{GroupLoad, ScaleAction};
+pub use engine::{DropRecord, DropReason, Engine, RequestRecord, SwapRecord};
 pub use planner::{enumerate_candidates, plan, PlanOutcome};
 pub use router::{GroupView, Router};
 pub use scheduler::{Candidate, ModelCost, SchedCtx, Scheduler};

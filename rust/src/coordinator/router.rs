@@ -170,6 +170,57 @@ impl Router for ResidentAffinity {
     }
 }
 
+/// Health-aware wrapper over any registered router (DESIGN.md §11): the
+/// fault layer marks groups dead (failed), draining (preemption warning
+/// or autoscaler leave), or standby (not yet joined), and this wrapper
+/// filters them out of the candidate set before the wrapped discipline
+/// decides. When every candidate is available it delegates the original
+/// slice untouched — decisions *and* the inner router's state evolution
+/// are bit-for-bit those of the unwrapped router, which is what keeps
+/// the no-fault plan equivalent to the pre-fault simulator.
+pub struct HealthAwareRouter {
+    inner: Box<dyn Router>,
+    /// Scratch for the filtered candidate list (no per-decision alloc).
+    scratch: Vec<GroupView>,
+}
+
+impl HealthAwareRouter {
+    pub fn new(inner: Box<dyn Router>) -> HealthAwareRouter {
+        HealthAwareRouter { inner, scratch: Vec::new() }
+    }
+
+    /// The wrapped discipline's registry name.
+    pub fn inner_name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    pub fn inner_kind(&self) -> RouterKind {
+        self.inner.kind()
+    }
+
+    /// Route one arrival of `model` among the candidates whose group
+    /// `available` accepts. Returns `None` when no replica is available
+    /// (every host dead/draining) — the caller decides between retry
+    /// and a fault drop.
+    pub fn route_available(
+        &mut self,
+        model: ModelId,
+        candidates: &[GroupView],
+        available: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        if candidates.iter().all(|v| available(v.group)) {
+            return Some(self.inner.route(model, candidates));
+        }
+        self.scratch.clear();
+        self.scratch.extend(candidates.iter().filter(|v| available(v.group)).copied());
+        if self.scratch.is_empty() {
+            None
+        } else {
+            Some(self.inner.route(model, &self.scratch))
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------
@@ -290,6 +341,40 @@ mod tests {
             view(1, 4.0, Residency::Offloading, 0.5),
         ];
         assert_eq!(r.route(0, &views), 1);
+    }
+
+    #[test]
+    fn health_aware_filters_unavailable_groups() {
+        let views = vec![
+            view(0, 0.0, Residency::Resident, 0.0),
+            view(1, 5.0, Residency::Offloaded, 1.0),
+            view(2, 9.0, Residency::Offloaded, 1.0),
+        ];
+        let mut r = HealthAwareRouter::new(by_name("least-loaded").unwrap());
+        assert_eq!(r.inner_name(), "least-loaded");
+        // All healthy: identical to the unwrapped discipline.
+        assert_eq!(r.route_available(0, &views, |_| true), Some(0));
+        // Group 0 dead: the best *available* group wins.
+        assert_eq!(r.route_available(0, &views, |g| g != 0), Some(1));
+        // Everything dead: no destination.
+        assert_eq!(r.route_available(0, &views, |_| false), None);
+    }
+
+    #[test]
+    fn health_aware_all_available_matches_unwrapped_state_evolution() {
+        // Round-robin keeps per-model counters; with every group healthy
+        // the wrapper must advance them exactly like the bare router.
+        let views = vec![
+            view(0, 0.0, Residency::Offloaded, 1.0),
+            view(1, 0.0, Residency::Offloaded, 1.0),
+            view(2, 0.0, Residency::Offloaded, 1.0),
+        ];
+        let mut bare = RoundRobin::new();
+        let mut wrapped = HealthAwareRouter::new(Box::new(RoundRobin::new()));
+        for _ in 0..7 {
+            let expect = bare.route(0, &views);
+            assert_eq!(wrapped.route_available(0, &views, |_| true), Some(expect));
+        }
     }
 
     #[test]

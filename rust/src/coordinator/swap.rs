@@ -272,6 +272,29 @@ impl SwapManager {
         self.states[model] = Residency::Resident;
         self.policy.on_insert(model, now);
     }
+
+    /// The hosting group died (fault injection): every in-flight load is
+    /// accounted as cancelled and every in-flight offload as completed
+    /// (the stats invariants `loads_started == loads_completed +
+    /// loads_cancelled` and `offloads_started == offloads_completed`
+    /// must survive a crash), resident models are evicted from the
+    /// policy's book-keeping, and all residency flips to `Offloaded` —
+    /// the GPUs lost their memory.
+    pub fn fail_all(&mut self) {
+        for m in 0..self.states.len() {
+            match self.states[m] {
+                Residency::Loading | Residency::PartiallyResident { .. } => {
+                    self.stats.loads_cancelled += 1;
+                }
+                Residency::Offloading => {
+                    self.stats.offloads_completed += 1;
+                }
+                Residency::Resident => self.policy.on_evict(m),
+                Residency::Offloaded => {}
+            }
+            self.states[m] = Residency::Offloaded;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +345,28 @@ mod tests {
         // Model 1 is LRU-older but has in-flight batches (not evictable).
         let plan = m.plan_swap_in(2, 2.0, |mm| mm != 1);
         assert_eq!(plan, SwapPlan::Start { victim: Some(0) });
+    }
+
+    #[test]
+    fn fail_all_flushes_every_state_and_keeps_invariants() {
+        let mut m = mgr(4, 2);
+        m.force_resident(0, 0.0);
+        m.force_resident(1, 0.5);
+        // Model 2 swaps in against victim 0: 0 Offloading, 2 Loading.
+        assert_eq!(m.plan_swap_in(2, 1.0, |_| true), SwapPlan::Start { victim: Some(0) });
+        m.fail_all();
+        for model in 0..4 {
+            assert_eq!(m.state(model), Residency::Offloaded, "model {model}");
+        }
+        let s = m.stats();
+        assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled);
+        assert_eq!(s.offloads_started, s.offloads_completed);
+        assert_eq!(s.loads_cancelled, 1);
+        // Recovery: the manager serves again from a cold state, and the
+        // evicted residents no longer pollute the policy's victim book.
+        assert_eq!(m.plan_swap_in(1, 2.0, |_| true), SwapPlan::Start { victim: None });
+        m.on_load_complete(1, 2.5);
+        assert!(m.is_resident(1));
     }
 
     #[test]

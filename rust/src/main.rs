@@ -9,6 +9,7 @@
 //!   scenarios   list the named workload scenarios (`--scenario` targets)
 //!   schedulers  list the scheduling disciplines (`--scheduler` targets)
 //!   routers     list the cluster routing policies (`--router` targets)
+//!   chaos       list the chaos fault schedules (`--chaos` targets)
 //!   info        print environment, catalog, and artifact status
 //!
 //! `computron <subcommand> --help` lists options.
@@ -31,7 +32,7 @@ fn main() {
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: computron <serve|simulate|plan|swap|models|scenarios|schedulers|routers|info> [options]  (--help per subcommand)");
+            eprintln!("usage: computron <serve|simulate|plan|swap|models|scenarios|schedulers|routers|chaos|info> [options]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
@@ -44,6 +45,7 @@ fn main() {
         "scenarios" => cmd_scenarios(),
         "schedulers" => cmd_schedulers(),
         "routers" => cmd_routers(),
+        "chaos" => cmd_chaos(),
         "info" => cmd_info(),
         other => Err(anyhow!("unknown subcommand '{other}'")),
     };
@@ -71,22 +73,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             // from the file; real mode requires a homogeneous catalog of
             // manifest models (heterogeneous fleets are simulator-only).
             let sys = SystemConfig::from_file(std::path::Path::new(path))?;
-            // Real mode serves exactly one engine group on the top-level
-            // grid with default hardware; accept only placements that are
-            // equivalent to that (anything else would silently diverge
-            // from what `simulate` runs on the same file).
-            let placement = sys.resolved_placement();
-            let single_shim = computron::config::PlacementSpec::single(
-                sys.parallel,
-                sys.models.len(),
-            );
-            if placement.groups != single_shim.groups {
-                return Err(anyhow!(
-                    "non-trivial placements are simulator-only; real mode serves one \
-                     engine group on the top-level tp/pp with default hardware \
-                     (drop the config's `placement` or use `simulate`)"
-                ));
-            }
+            // One typed gate for everything `simulate` accepts but real
+            // mode cannot serve yet — chunked loads, heterogeneous
+            // catalogs, non-trivial placements, fault plans
+            // (`ConfigError::SimulatorOnly` names the offender).
+            sys.validate_serve()?;
             let mut cfg =
                 ServeConfig::with_catalog(&dir, sys.models, sys.parallel.tp, sys.parallel.pp);
             cfg.engine = sys.engine;
@@ -156,6 +147,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("groups", "replicate the catalog across G identical engine groups (overrides the config's placement)", None)
         .opt("placement", "JSON placement file: {\"router\", \"groups\": [{\"models\", \"tp\"?, \"pp\"?, ...}]} (DESIGN.md §8)", None)
         .opt("router", "round-robin|least-loaded|resident-affinity (see `computron routers`)", None)
+        .opt("faults", "JSON fault plan: group failures/preemptions/link degradation + retry/autoscale policies; accepts a bare plan or a full config's `faults` field (DESIGN.md §11)", None)
+        .opt("chaos", "named chaos schedule generating a fault plan from --seed/--duration (see `computron chaos`); overrides --faults", None)
         .opt("prefetch-min-count", "Markov prefetcher's minimum transition observations (default 2)", None)
         .flag("no-pinned", "use pageable host memory (ablation)")
         .parse_from(argv)?;
@@ -237,6 +230,27 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     let placement = cfg.resolved_placement();
     let (num_groups, router_name) = (placement.groups.len(), placement.router.name());
 
+    // Fault-injection flags (DESIGN.md §11): --faults loads a plan from
+    // a JSON file (a bare plan, or a full system config whose `faults`
+    // field is used); --chaos generates one from the named registry
+    // schedule, seeded by --seed over the measured --duration.
+    if let Some(path) = args.get("faults") {
+        let j = computron::util::json::Json::parse_file(std::path::Path::new(path))?;
+        let fj = j.get("faults").unwrap_or(&j);
+        cfg.faults = Some(
+            computron::cluster::fault::FaultPlan::from_json(fj)
+                .map_err(|e| anyhow!("bad --faults file: {e}"))?,
+        );
+    }
+    if let Some(name) = args.get("chaos") {
+        let params = computron::cluster::fault::ChaosParams { seed, duration, num_groups };
+        cfg.faults = Some(
+            computron::cluster::fault::chaos_by_name(name, &params)
+                .ok_or_else(|| anyhow!("unknown chaos schedule '{name}' (see `computron chaos`)"))?,
+        );
+    }
+    let has_faults = cfg.faults.as_ref().is_some_and(|p| !p.is_none());
+
     // Scenario precedence: an explicit --scenario flag always wins; a
     // config-file `scenario` field applies unless the user passed
     // explicit --rates (flags override config).
@@ -300,7 +314,41 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         rows.insert(1, vec!["groups".into(), num_groups.to_string()]);
         rows.insert(2, vec!["router".into(), router_name.to_string()]);
     }
+    if has_faults {
+        let fs = report.fault_stats;
+        rows.push(vec!["faults injected".into(), fs.injected.to_string()]);
+        rows.push(vec![
+            "lost / retried / re-homed".into(),
+            format!("{} / {} / {}", fs.lost, fs.retried, fs.rehomed),
+        ]);
+        rows.push(vec!["dead events dropped".into(), fs.dead_event_drops.to_string()]);
+    }
     table(&["metric", "value"], &rows);
+
+    // Per-group resilience accounting whenever a fault plan ran
+    // (DESIGN.md §11) — downtime/recovery plus what the fault layer did
+    // with this group's requests.
+    if has_faults {
+        section("per-group fault metrics");
+        let frows: Vec<Vec<String>> = report
+            .groups
+            .iter()
+            .map(|g| {
+                vec![
+                    g.group.to_string(),
+                    g.failures.to_string(),
+                    format!("{:.3}", g.downtime),
+                    format!("{:.3}", g.recovery_time),
+                    g.lost.to_string(),
+                    g.rehomed.to_string(),
+                ]
+            })
+            .collect();
+        table(
+            &["group", "failures", "downtime (s)", "last recovery (s)", "lost", "re-homed"],
+            &frows,
+        );
+    }
 
     // Per-model attainment (deadline-met completions over all measured
     // arrivals — drops count as misses) whenever SLOs are configured.
@@ -464,6 +512,24 @@ fn cmd_routers() -> Result<()> {
     table(&["name", "description"], &rows);
     println!("\nrouting only matters with a multi-group placement (`--groups` or a config");
     println!("`placement`); a single group receives every request no matter the policy.");
+    Ok(())
+}
+
+fn cmd_chaos() -> Result<()> {
+    section("chaos fault schedules (computron simulate --chaos <name>)");
+    let rows: Vec<Vec<String>> = computron::cluster::fault::chaos_names()
+        .iter()
+        .map(|&name| {
+            vec![
+                name.to_string(),
+                computron::cluster::fault::describe_chaos(name).unwrap_or("").to_string(),
+            ]
+        })
+        .collect();
+    table(&["name", "description"], &rows);
+    println!("\nschedules are generated from (--seed, --duration, group count): the same");
+    println!("flags replay the identical fault plan (DESIGN.md §11). Hand-written plans");
+    println!("go through --faults <plan.json> instead (see configs/chaos_spot.json).");
     Ok(())
 }
 

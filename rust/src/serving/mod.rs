@@ -142,20 +142,24 @@ impl Computron {
     /// Start engine + worker threads. Blocks until workers have compiled
     /// their executables (first submit is then fast).
     pub fn launch(cfg: ServeConfig) -> Result<Computron> {
+        // Simulator-only features fail the same way everywhere: the
+        // typed `ConfigError::SimulatorOnly` rejection (shared with
+        // `SystemConfig::validate_serve`, which covers the config-file
+        // path in `main.rs`).
         if cfg.engine.load_design == crate::config::LoadDesign::ChunkedPipelined {
-            return Err(anyhow!(
-                "the chunked-pipelined load design is simulator-only for now; \
-                 real-mode loads are a single blocking host->device copy (use `async`)"
-            ));
+            return Err(crate::config::ConfigError::SimulatorOnly(
+                "the chunked-pipelined load design".into(),
+            )
+            .into());
         }
         if cfg.models.is_empty() {
             return Err(anyhow!("the model catalog must have at least one entry"));
         }
         if !cfg.models.is_homogeneous() {
-            return Err(anyhow!(
-                "heterogeneous catalogs are simulator-only for now; real mode serves N \
-                 instances of one architecture (every entry must name the same model)"
-            ));
+            return Err(crate::config::ConfigError::SimulatorOnly(
+                "a heterogeneous model catalog".into(),
+            )
+            .into());
         }
         // Fail bad per-entry attributes here, not as an assert inside the
         // spawned engine thread (manifest models bypass the sim catalog,

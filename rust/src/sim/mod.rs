@@ -7,5 +7,7 @@ pub mod system;
 pub mod worker;
 
 pub use eval::{EvalHarness, EvalOutcome};
-pub use system::{Arrival, Driver, GroupStats, MeasuredCounts, SimCluster, SimReport, SimSystem};
+pub use system::{
+    Arrival, Driver, FaultStats, GroupStats, MeasuredCounts, SimCluster, SimReport, SimSystem,
+};
 pub use worker::{ChunkOutcome, InstState, SimWorker, WorkerAction};

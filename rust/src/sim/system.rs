@@ -18,11 +18,13 @@
 
 use crate::cluster::clock::{EventQueue, QueueBackend, SimTime};
 use crate::cluster::compute::ComputeModel;
+use crate::cluster::fault::{AutoscalePolicy, FaultAction, RetryPolicy};
 use crate::cluster::gpu::GpuDevice;
 use crate::config::{GroupSpec, LoadDesign, SystemConfig};
-use crate::coordinator::engine::{DropRecord, Engine, RequestRecord, SwapRecord};
-use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId};
-use crate::coordinator::router::{self, GroupView, Router};
+use crate::coordinator::autoscale::{self, GroupLoad, ScaleAction};
+use crate::coordinator::engine::{DropReason, DropRecord, Engine, RequestRecord, SwapRecord};
+use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId, RequestId};
+use crate::coordinator::router::{self, GroupView, HealthAwareRouter};
 use crate::coordinator::scheduler::ModelCost;
 use crate::coordinator::swap::SwapStats;
 use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec, ShardManifest};
@@ -80,6 +82,48 @@ pub struct GroupStats {
     pub mem_high_water: Vec<usize>,
     pub h2d_bytes: Vec<u64>,
     pub d2h_bytes: Vec<u64>,
+    /// Fault injections that killed this group (hard failures and
+    /// executed preemptions; all zero without a `FaultPlan`).
+    pub failures: u64,
+    /// Total seconds the group spent Down (an outage still open at sim
+    /// end counts up to `sim_end`).
+    pub downtime: f64,
+    /// Downtime of the last *completed* outage (failure → recovery);
+    /// 0.0 if the group never failed or never recovered.
+    pub recovery_time: f64,
+    /// Requests lost to faults that originated on this group (dropped
+    /// with `DropReason::Fault` after exhausting retries).
+    pub lost: u64,
+    /// Requests harvested from this group by a fault and successfully
+    /// re-homed onto a *different* group.
+    pub rehomed: u64,
+}
+
+/// Cluster-level fault & elasticity accounting (DESIGN.md §11). All
+/// zero — and `PartialEq`-comparable as such — for runs without a
+/// `FaultPlan`, which is part of the no-fault bit-for-bit contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Fault-plan actions executed (drain/fail/recover/link-scale pops).
+    pub injected: u64,
+    /// Events addressed to a stale group epoch (scheduled before a
+    /// failure, popped after) — dropped with this accounting instead of
+    /// firing into rebuilt state or panicking.
+    pub dead_event_drops: u64,
+    /// Retry dispatches that successfully re-entered an engine queue.
+    pub retried: u64,
+    /// Retried requests that landed on a different group than the one
+    /// the fault harvested them from.
+    pub rehomed: u64,
+    /// Requests dropped with `DropReason::Fault` (harvested or arriving
+    /// with no available host, retries exhausted).
+    pub lost: u64,
+    /// Events processed at cluster scope rather than attributed to a
+    /// group: autoscaler ticks plus retry/arrival pops that found no
+    /// available host. The conservation law
+    /// `Σ groups[g].events + dead_event_drops + cluster_events ==
+    /// report.events` holds for every run.
+    pub cluster_events: u64,
 }
 
 /// Everything measured during a run. The flat vectors merge every group
@@ -122,6 +166,9 @@ pub struct SimReport {
     /// in streaming runs — the planner's goodput/attainment source
     /// (full-retention runs derive the same numbers from the records).
     pub streaming_counts: Option<MeasuredCounts>,
+    /// Fault-injection & elasticity accounting; all-zero default for
+    /// runs without a `FaultPlan`.
+    pub fault_stats: FaultStats,
 }
 
 impl SimReport {
@@ -164,16 +211,30 @@ enum Ev {
 }
 
 /// Cluster events: arrivals are cluster-level (routed to a group when
-/// they pop, so the router sees live state); everything else is scoped
-/// to the group it belongs to.
+/// they pop, so the router sees live state); group events carry the
+/// group's epoch at scheduling time so events addressed to a since-failed
+/// incarnation are dropped (with accounting) instead of firing into
+/// rebuilt state; fault/retry/autoscale events drive the resilience
+/// layer (DESIGN.md §11) and are never scheduled without a `FaultPlan`.
 enum ClusterEv {
     /// `model` is the catalog index.
     Arrival { model: ModelId, input_len: usize },
-    Group { g: usize, ev: Ev },
+    Group { g: usize, epoch: u32, ev: Ev },
+    /// One resolved fault-plan action fires.
+    Fault { action: FaultAction },
+    /// Re-dispatch of a request harvested from a failed group (or one
+    /// that arrived while no host was available). `origin` is the group
+    /// the fault took it from (`None` for never-routed arrivals) and
+    /// `arrival` its original arrival time (kept for drop accounting).
+    Retry { model: ModelId, input_len: usize, attempt: u32, origin: Option<usize>, arrival: f64 },
+    /// Autoscaler controller tick (scheduled only with an
+    /// `AutoscalePolicy`; re-arms itself while other work remains).
+    AutoscaleTick,
 }
 
-fn gev(g: usize, ev: Ev) -> ClusterEv {
-    ClusterEv::Group { g, ev }
+/// Group event addressed to `g`'s incarnation `epoch`.
+fn gev(g: usize, epoch: u32, ev: Ev) -> ClusterEv {
+    ClusterEv::Group { g, epoch, ev }
 }
 
 /// Per-model shard grids: `grids[model][pp_rank][tp_rank]`.
@@ -205,6 +266,25 @@ struct SimGroup {
     compute_cache: HashMap<(usize, usize, usize), f64>,
     /// DES events attributed to this group.
     events: u64,
+    /// Incarnation counter: bumped on every hard failure. Group events
+    /// carry the epoch they were scheduled under; a mismatch at pop
+    /// means the event addressed a dead incarnation and is discarded
+    /// (`FaultStats::dead_event_drops`).
+    epoch: u32,
+    /// Up per the fault layer (false between a Fail and its Recover).
+    up: bool,
+    /// In the active serving set (autoscaler join/leave).
+    active: bool,
+    /// Draining: no new routed traffic (preemption warning or
+    /// autoscaler leave); queued work finishes where it is.
+    draining: bool,
+    /// When the current outage started (Some while down).
+    down_since: Option<f64>,
+    failures: u64,
+    downtime: f64,
+    recovery_time: f64,
+    /// Requests harvested from this group and re-homed elsewhere.
+    rehomed: u64,
 }
 
 impl SimGroup {
@@ -353,7 +433,21 @@ impl SimGroup {
             batch_acks: HashMap::new(),
             compute_cache: HashMap::new(),
             events: 0,
+            epoch: 0,
+            up: true,
+            active: true,
+            draining: false,
+            down_since: None,
+            failures: 0,
+            downtime: 0.0,
+            recovery_time: 0.0,
+            rehomed: 0,
         })
+    }
+
+    /// Can this group receive newly routed traffic right now?
+    fn is_available(&self) -> bool {
+        self.up && self.active && !self.draining
     }
 
     /// Group-local stage-0..pp-1 worker index.
@@ -439,7 +533,7 @@ pub struct SimCluster {
     /// `model_groups[catalog_id]` = (group, local id) for every hosting
     /// group, in group order — the router's candidate list.
     model_groups: Vec<Vec<(usize, usize)>>,
-    router: Box<dyn Router>,
+    router: HealthAwareRouter,
     /// Catalog id of the previous arrival (cluster-wide), for cross-group
     /// prefetch-predictor sync.
     last_arrival: Option<ModelId>,
@@ -458,6 +552,27 @@ pub struct SimCluster {
     /// `Some` after `set_streaming`: aggregate records per event instead
     /// of retaining them.
     streaming: Option<Streaming>,
+    /// Resolved fault-plan timeline, scheduled into the queue at run
+    /// start (empty without a `FaultPlan` — zero extra events).
+    fault_timeline: Vec<(f64, FaultAction)>,
+    /// Retry policy for requests caught on a failing group.
+    retry: RetryPolicy,
+    /// Queue-depth autoscaler, when the plan enables one.
+    autoscale: Option<AutoscalePolicy>,
+    /// Cluster-level drops (`DropReason::Fault`): requests whose retries
+    /// were exhausted (or disallowed) with no available host. Merged
+    /// into the report's drop records and per-group counters at the end;
+    /// counted by `dropped_total` so closed-loop drivers keep advancing.
+    fault_drops: Vec<DropRecord>,
+    /// Id source for fault drops of never-routed arrivals (harvested
+    /// requests keep their engine-assigned id).
+    fault_drop_seq: RequestId,
+    fault_stats: FaultStats,
+    /// Per-catalog-model SLO seconds (`INFINITY` = none): deadline
+    /// source for cluster-level fault drops.
+    model_slos: Vec<f64>,
+    /// Scratch availability snapshot for `route_arrival`.
+    avail_buf: Vec<bool>,
 }
 
 /// The historical name for the single-group deployment; every config
@@ -492,7 +607,13 @@ impl SimCluster {
                 model_groups[m].push((gid, local));
             }
         }
-        let router = router::make(placement.router);
+        let router = HealthAwareRouter::new(router::make(placement.router));
+        let plan = cfg.faults.clone().unwrap_or_default();
+        let num_groups = placement.groups.len();
+        let num_models = catalog_specs.len();
+        let model_slos = cfg
+            .slos()
+            .unwrap_or_else(|| vec![f64::INFINITY; num_models]);
         Ok(SimCluster {
             cfg,
             groups,
@@ -507,6 +628,14 @@ impl SimCluster {
             outbox_buf: Vec::new(),
             action_buf: Vec::new(),
             streaming: None,
+            fault_timeline: plan.timeline(),
+            retry: plan.retry,
+            autoscale: plan.autoscale,
+            fault_drops: Vec::new(),
+            fault_drop_seq: 0,
+            fault_stats: FaultStats::default(),
+            model_slos,
+            avail_buf: vec![true; num_groups],
         })
     }
 
@@ -583,7 +712,7 @@ impl SimCluster {
 
     /// The routing policy in effect.
     pub fn router_name(&self) -> &'static str {
-        self.router.name()
+        self.router.inner_name()
     }
 
     /// Replace the event queue with the legacy `BinaryHeap` backend — the
@@ -623,6 +752,7 @@ impl SimCluster {
     /// Each entry is boxed into an `Arc` once; the per-tp-rank (or
     /// per-broadcast-target) fan-out clones the pointer, not the payload.
     fn route_outbox(&mut self, g: usize) {
+        let ep = self.groups[g].epoch;
         let lat = self.cfg.hardware.pipe_latency;
         let design = self.cfg.engine.load_design;
         let mut entries = std::mem::take(&mut self.outbox_buf);
@@ -639,7 +769,7 @@ impl SimCluster {
                     for w in 0..world {
                         self.queue.schedule_in(
                             lat,
-                            gev(g, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
+                            gev(g, ep, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
                         );
                     }
                 }
@@ -648,7 +778,7 @@ impl SimCluster {
                         let w = self.groups[g].worker_idx(0, tp_rank);
                         self.queue.schedule_in(
                             lat,
-                            gev(g, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
+                            gev(g, ep, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
                         );
                     }
                 }
@@ -660,6 +790,7 @@ impl SimCluster {
     /// Drains `actions` (a caller-owned scratch buffer) and turns each
     /// worker action into scheduled events.
     fn handle_worker_actions(&mut self, g: usize, widx: usize, actions: &mut Vec<WorkerAction>) {
+        let ep = self.groups[g].epoch;
         let now = self.queue.now();
         let lat = self.cfg.hardware.pipe_latency;
         let pp = self.groups[g].pp;
@@ -674,8 +805,8 @@ impl SimCluster {
                         // load entries terminate here (the engine ack
                         // comes from TransferFin).
                         if let Entry::Batch(b) = &*entry {
-                            self.queue
-                                .schedule_at(at + lat, gev(g, Ev::BatchReturn { entry_id: b.id }));
+                            let ret = gev(g, ep, Ev::BatchReturn { entry_id: b.id });
+                            self.queue.schedule_at(at + lat, ret);
                         }
                     } else {
                         // Broadcast design does not forward load entries
@@ -687,22 +818,22 @@ impl SimCluster {
                         }
                         let next = self.groups[g].worker_idx(pos.pp_rank + 1, pos.tp_rank);
                         self.queue
-                            .schedule_at(at + lat, gev(g, Ev::Deliver { worker: next, entry }));
+                            .schedule_at(at + lat, gev(g, ep, Ev::Deliver { worker: next, entry }));
                     }
                 }
                 WorkerAction::BatchOutput { entry_id, at } => {
-                    self.queue.schedule_at(at + lat, gev(g, Ev::BatchReturn { entry_id }));
+                    self.queue.schedule_at(at + lat, gev(g, ep, Ev::BatchReturn { entry_id }));
                 }
                 WorkerAction::TransferDone { entry_id, model, dir, at } => {
                     self.queue.schedule_at(
                         at,
-                        gev(g, Ev::TransferFin { worker: widx, entry_id, model, dir }),
+                        gev(g, ep, Ev::TransferFin { worker: widx, entry_id, model, dir }),
                     );
                 }
                 WorkerAction::ChunkDone { entry_id, model, dir, at } => {
                     self.queue.schedule_at(
                         at,
-                        gev(g, Ev::ChunkFin { worker: widx, entry_id, model, dir }),
+                        gev(g, ep, Ev::ChunkFin { worker: widx, entry_id, model, dir }),
                     );
                 }
             }
@@ -712,11 +843,12 @@ impl SimCluster {
         let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
         if !inbox_empty {
             let at = busy_until.max(now);
-            self.queue.schedule_at(at, gev(g, Ev::Wake { worker: widx }));
+            self.queue.schedule_at(at, gev(g, ep, Ev::Wake { worker: widx }));
         }
     }
 
     fn wake_worker(&mut self, g: usize, widx: usize) {
+        let ep = self.groups[g].epoch;
         let now = self.queue.now();
         let dispatch = self.cfg.hardware.dispatch_overhead;
         let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
@@ -749,19 +881,22 @@ impl SimCluster {
             let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
             if !inbox_empty && busy_until > now {
                 // Busy: try again when free.
-                self.queue.schedule_at(busy_until, gev(g, Ev::Wake { worker: widx }));
+                self.queue.schedule_at(busy_until, gev(g, ep, Ev::Wake { worker: widx }));
             }
         }
         self.action_buf = actions;
     }
 
-    /// Pick the destination group for one arrival of catalog `model`.
-    fn route_arrival(&mut self, model: ModelId) -> usize {
+    /// Pick the destination group for one arrival of catalog `model`, or
+    /// `None` when every hosting group is dead/draining (the caller then
+    /// retries or fault-drops the request).
+    fn route_arrival(&mut self, model: ModelId) -> Option<usize> {
         let hosts = &self.model_groups[model];
         if hosts.len() == 1 {
             // Single replica: no choice to make (and no router state to
             // advance) — the single-group fast path.
-            return hosts[0].0;
+            let g = hosts[0].0;
+            return self.groups[g].is_available().then_some(g);
         }
         let mut views = Vec::with_capacity(hosts.len());
         for &(g, local) in hosts {
@@ -773,14 +908,28 @@ impl SimCluster {
                 swap_cost: grp.costs[local].swap_cost,
             });
         }
-        self.router.route(model, &views)
+        // Snapshot availability so the router borrow stays disjoint; in
+        // a fault-free run every entry is true and the health wrapper
+        // delegates the untouched view slice — bit-for-bit the bare
+        // router's decisions and state evolution.
+        self.avail_buf.clear();
+        self.avail_buf.extend(self.groups.iter().map(SimGroup::is_available));
+        let avail = std::mem::take(&mut self.avail_buf);
+        let pick = self.router.route_available(model, &views, |g| avail[g]);
+        self.avail_buf = avail;
+        pick
     }
 
     /// Dispatch one arrival: route it, sync the other hosting groups'
     /// prefetch predictors with the global transition, and feed the
-    /// routed group's engine.
-    fn on_arrival(&mut self, now: f64, model: ModelId, input_len: usize) {
-        let g = self.route_arrival(model);
+    /// routed group's engine. Returns `false` when no hosting group is
+    /// available (the caller re-queues or fault-drops the request; the
+    /// predictor/last-arrival state is left untouched — the arrival was
+    /// never observed by any engine).
+    fn on_arrival(&mut self, now: f64, model: ModelId, input_len: usize) -> bool {
+        let Some(g) = self.route_arrival(model) else {
+            return false;
+        };
         // Cross-group predictor sync (DESIGN.md §8): each group's engine
         // observes only the arrivals routed to it, so the global
         // `prev → model` transition is injected into every *other* group
@@ -811,6 +960,181 @@ impl SimCluster {
         self.groups[g].events += 1;
         self.groups[g].engine.on_request(now, local, input_len);
         self.route_outbox(g);
+        true
+    }
+
+    // ----- fault injection & elasticity (DESIGN.md §11) -----
+
+    /// Execute one resolved fault-plan action.
+    fn apply_fault_action(&mut self, now: f64, action: FaultAction) {
+        self.fault_stats.injected += 1;
+        // Fault actions are attributed to the group they act on.
+        self.groups[action.group()].events += 1;
+        match action {
+            FaultAction::Drain { group } => {
+                let grp = &mut self.groups[group];
+                if grp.up {
+                    grp.draining = true;
+                }
+            }
+            FaultAction::Fail { group } => self.fail_group(now, group),
+            FaultAction::Recover { group } => self.recover_group(now, group),
+            FaultAction::LinkScale { group, factor } => {
+                for w in &mut self.groups[group].workers {
+                    w.gpu.link.set_time_scale(factor);
+                }
+            }
+        }
+    }
+
+    /// Kill a group: bump its epoch (orphaning every in-flight event
+    /// addressed to it), flush workers and engine, and re-queue or
+    /// fault-drop every harvested request per the retry policy.
+    fn fail_group(&mut self, now: f64, g: usize) {
+        if !self.groups[g].up {
+            return; // already down (e.g. overlapping chaos schedules)
+        }
+        let grp = &mut self.groups[g];
+        grp.up = false;
+        grp.draining = false;
+        grp.failures += 1;
+        grp.down_since = Some(now);
+        grp.epoch = grp.epoch.wrapping_add(1);
+        grp.batch_acks.clear();
+        for w in &mut grp.workers {
+            w.fail(now);
+        }
+        let harvested = grp.engine.fail(now);
+        let models = grp.models.clone();
+        for req in harvested {
+            let catalog = models[req.model];
+            self.requeue_or_drop(now, catalog, req.input_len, 1, Some(g), req.arrival);
+        }
+    }
+
+    /// Bring a failed group back: it rejoins the available set cold
+    /// (everything offloaded; models reload on demand).
+    fn recover_group(&mut self, now: f64, g: usize) {
+        let grp = &mut self.groups[g];
+        let Some(since) = grp.down_since.take() else {
+            return; // not down (recover without a failure is a no-op)
+        };
+        grp.up = true;
+        grp.draining = false;
+        grp.downtime += now - since;
+        grp.recovery_time = now - since;
+    }
+
+    /// Schedule retry `attempt` for a request (1-based), or record the
+    /// fault drop once the policy's budget is exhausted.
+    fn requeue_or_drop(
+        &mut self,
+        now: f64,
+        model: ModelId,
+        input_len: usize,
+        attempt: u32,
+        origin: Option<usize>,
+        arrival: f64,
+    ) {
+        if attempt <= self.retry.max_retries {
+            self.queue.schedule_in(
+                self.retry.delay(attempt),
+                ClusterEv::Retry { model, input_len, attempt, origin, arrival },
+            );
+        } else {
+            // Out of retries: the request is lost to the fault. Attribute
+            // it to the group the fault took it from (never-routed
+            // arrivals go to the model's first host). Ids come from a
+            // cluster-level sequence — engine-local ids were retired when
+            // the failing engine was flushed.
+            let group = origin.unwrap_or_else(|| self.model_groups[model][0].0);
+            let slo = self.model_slos[model];
+            let id = self.fault_drop_seq;
+            self.fault_drop_seq += 1;
+            self.fault_drops.push(DropRecord {
+                id,
+                model,
+                arrival,
+                deadline: if slo.is_finite() { arrival + slo } else { f64::INFINITY },
+                dropped_at: now,
+                residency: crate::coordinator::swap::Residency::Offloaded,
+                group,
+                reason: DropReason::Fault,
+            });
+            self.fault_stats.lost += 1;
+        }
+    }
+
+    /// A `Retry` event popped: try to route it like a fresh arrival
+    /// (predictor state untouched — it is a re-dispatch, not a new
+    /// request). Unroutable retries re-arm with backoff until the budget
+    /// runs out.
+    fn on_retry(
+        &mut self,
+        now: f64,
+        model: ModelId,
+        input_len: usize,
+        attempt: u32,
+        origin: Option<usize>,
+        arrival: f64,
+    ) {
+        match self.route_arrival(model) {
+            Some(g) => {
+                self.fault_stats.retried += 1;
+                if let Some(o) = origin {
+                    if o != g {
+                        self.fault_stats.rehomed += 1;
+                        self.groups[o].rehomed += 1;
+                    }
+                }
+                let local = self.model_groups[model]
+                    .iter()
+                    .find(|&&(hg, _)| hg == g)
+                    .map(|&(_, l)| l)
+                    .expect("router picked a group that does not host the model");
+                self.groups[g].events += 1;
+                self.groups[g].engine.on_request(now, local, input_len);
+                self.route_outbox(g);
+            }
+            None => {
+                self.fault_stats.cluster_events += 1;
+                self.requeue_or_drop(now, model, input_len, attempt + 1, origin, arrival);
+            }
+        }
+    }
+
+    /// Autoscaler tick: sample per-group load, apply at most one
+    /// join/leave, and re-arm while other work remains in the queue.
+    fn on_autoscale_tick(&mut self) {
+        self.fault_stats.cluster_events += 1;
+        let Some(policy) = self.autoscale else { return };
+        let loads: Vec<GroupLoad> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(i, grp)| GroupLoad {
+                group: i,
+                active: grp.active && !grp.draining,
+                healthy: grp.up,
+                queue_depth: grp.engine.queued_total(),
+            })
+            .collect();
+        match autoscale::decide(&policy, &loads) {
+            Some(ScaleAction::Join { group }) => {
+                self.groups[group].active = true;
+                self.groups[group].draining = false;
+            }
+            Some(ScaleAction::Leave { group }) => {
+                // Drain, don't kill: queued work finishes where it is.
+                self.groups[group].draining = true;
+            }
+            None => {}
+        }
+        // Re-arm only while the queue holds other work — the tick must
+        // not keep an otherwise-drained simulation alive forever.
+        if !self.queue.is_empty() {
+            self.queue.schedule_in(policy.interval, ClusterEv::AutoscaleTick);
+        }
     }
 
     /// Schedule the next open-loop arrival, if any. Called once at run
@@ -872,7 +1196,8 @@ impl SimCluster {
     }
 
     fn dropped_total(&self) -> usize {
-        self.groups.iter().map(|grp| grp.engine.dropped_count()).sum()
+        self.groups.iter().map(|grp| grp.engine.dropped_count()).sum::<usize>()
+            + self.fault_drops.len()
     }
 
     /// A dropped request never produces a completion ack, so the closed
@@ -900,6 +1225,15 @@ impl SimCluster {
         };
         self.arrivals.sort_by(|a, b| a.at.total_cmp(&b.at));
         self.next_arrival = 0;
+        // Fault-plan timeline and the first autoscaler tick go in before
+        // the first arrival (both empty/absent without a `FaultPlan`, so
+        // fault-free runs schedule exactly the same events as before).
+        for (at, action) in std::mem::take(&mut self.fault_timeline) {
+            self.queue.schedule_at(at, ClusterEv::Fault { action });
+        }
+        if let Some(policy) = self.autoscale {
+            self.queue.schedule_in(policy.interval, ClusterEv::AutoscaleTick);
+        }
         self.schedule_next_arrival();
         if matches!(self.driver, Driver::AlternatingBlocking { .. }) {
             self.drive_closed_loop_next();
@@ -911,9 +1245,35 @@ impl SimCluster {
                 ClusterEv::Arrival { model, input_len } => {
                     // Chain the successor before processing this arrival.
                     self.schedule_next_arrival();
-                    self.on_arrival(now, model, input_len);
+                    if !self.on_arrival(now, model, input_len) {
+                        // No available host (fault layer): the arrival is
+                        // cluster-scoped; retry with backoff or drop.
+                        self.fault_stats.cluster_events += 1;
+                        self.requeue_or_drop(now, model, input_len, 1, None, now);
+                    }
                 }
-                ClusterEv::Group { g, ev } => {
+                ClusterEv::Fault { action } => {
+                    self.apply_fault_action(now, action);
+                }
+                ClusterEv::Retry { model, input_len, attempt, origin, arrival } => {
+                    self.on_retry(now, model, input_len, attempt, origin, arrival);
+                }
+                ClusterEv::AutoscaleTick => {
+                    self.on_autoscale_tick();
+                }
+                ClusterEv::Group { g, epoch, ev } => {
+                    if epoch != self.groups[g].epoch {
+                        // Addressed to a dead incarnation (scheduled
+                        // before a failure): drop with accounting instead
+                        // of firing into the rebuilt group.
+                        self.fault_stats.dead_event_drops += 1;
+                        self.drive_closed_loop_for_drops(drops_before);
+                        if self.streaming.is_some() {
+                            self.absorb_streaming();
+                        }
+                        continue;
+                    }
+                    let ep = epoch;
                     self.groups[g].events += 1;
                     match ev {
                         Ev::Deliver { worker, entry } => {
@@ -927,7 +1287,7 @@ impl SimCluster {
                             self.groups[g].workers[worker].on_transfer_done(model, dir);
                             self.queue.schedule_in(
                                 self.cfg.hardware.pipe_latency,
-                                gev(g, Ev::LoadAck { entry_id }),
+                                gev(g, ep, Ev::LoadAck { entry_id }),
                             );
                         }
                         Ev::ChunkFin { worker, entry_id, model, dir } => {
@@ -935,12 +1295,13 @@ impl SimCluster {
                                 ChunkOutcome::Next { done_chunk, at } => {
                                     self.queue.schedule_at(
                                         at,
-                                        gev(g, Ev::ChunkFin { worker, entry_id, model, dir }),
+                                        gev(g, ep, Ev::ChunkFin { worker, entry_id, model, dir }),
                                     );
                                     if dir == LoadDirection::Load {
+                                        let ack = Ev::ChunkAck { entry_id, chunk: done_chunk };
                                         self.queue.schedule_in(
                                             self.cfg.hardware.pipe_latency,
-                                            gev(g, Ev::ChunkAck { entry_id, chunk: done_chunk }),
+                                            gev(g, ep, ack),
                                         );
                                     }
                                 }
@@ -948,13 +1309,13 @@ impl SimCluster {
                                 ChunkOutcome::Finished => {
                                     self.queue.schedule_in(
                                         self.cfg.hardware.pipe_latency,
-                                        gev(g, Ev::LoadAck { entry_id }),
+                                        gev(g, ep, Ev::LoadAck { entry_id }),
                                     );
                                 }
                                 ChunkOutcome::Cancelled { cancel_entry } => {
                                     self.queue.schedule_in(
                                         self.cfg.hardware.pipe_latency,
-                                        gev(g, Ev::LoadAck { entry_id: cancel_entry }),
+                                        gev(g, ep, Ev::LoadAck { entry_id: cancel_entry }),
                                     );
                                 }
                             }
@@ -1002,11 +1363,39 @@ impl SimCluster {
         let events = self.queue.processed();
         let sim_end = self.queue.now();
 
+        // Close outages that were still open when the run drained: the
+        // group never recovered, so its downtime extends to sim end (the
+        // last `recovery_time` keeps the previous completed outage).
+        for grp in &mut self.groups {
+            if let Some(since) = grp.down_since.take() {
+                grp.downtime += sim_end - since;
+            }
+        }
+
         // Streaming finalization: fold the Welford/t-digest state into a
         // Summary, keep the per-group absorbed counters for the
         // accounting pass below. In full-retention mode `streaming` is
         // `None` and every absorbed counter reads as zero.
         let mut streaming = self.streaming.take();
+        // Fault-layer drops never pass through an engine outbox, so fold
+        // them here: streaming mode absorbs them into the counters (no
+        // records retained, like every other streamed record); full
+        // retention counts them per group and merges the records into the
+        // flat `drops` vector below. Empty in fault-free runs, so the
+        // bit-for-bit path is untouched.
+        let mut fault_drops = std::mem::take(&mut self.fault_drops);
+        let mut fdrops_per_group = vec![0usize; self.groups.len()];
+        for d in &fault_drops {
+            fdrops_per_group[d.group] += 1;
+        }
+        if let Some(st) = streaming.as_mut() {
+            for d in &fault_drops {
+                if d.arrival >= st.measure_start {
+                    st.measured.drops += 1;
+                }
+            }
+            fault_drops.clear();
+        }
         let streaming_counts = streaming.as_ref().map(|st| st.measured);
         let streaming_latency = streaming.as_mut().map(|st| {
             if st.welford.count() == 0 {
@@ -1062,7 +1451,7 @@ impl SimCluster {
                 pp: grp.pp,
                 models: grp.models.clone(),
                 requests: sc.requests + requests.len(),
-                drops: sc.drops + drops.len(),
+                drops: sc.drops + drops.len() + fdrops_per_group[gid],
                 swaps: completed_swaps,
                 swap_bytes,
                 swap_stats: grp.engine.swap_stats(),
@@ -1080,6 +1469,11 @@ impl SimCluster {
                     .iter()
                     .map(|w| w.gpu.link.bytes_moved(crate::cluster::Direction::D2H))
                     .collect(),
+                failures: grp.failures,
+                downtime: grp.downtime,
+                recovery_time: grp.recovery_time,
+                lost: fdrops_per_group[gid] as u64,
+                rehomed: grp.rehomed,
             });
             per_group_requests.push(requests);
             per_group_drops.push(drops);
@@ -1091,7 +1485,7 @@ impl SimCluster {
         // key (records are pushed at monotonically increasing event
         // times), so the stable sort is a deterministic k-way merge that
         // preserves per-group order.
-        let (requests, drops, swaps) = if single {
+        let (requests, mut drops, swaps) = if single {
             (
                 per_group_requests.pop().unwrap(),
                 per_group_drops.pop().unwrap(),
@@ -1106,6 +1500,12 @@ impl SimCluster {
             s.sort_by(|a, b| a.completed.total_cmp(&b.completed));
             (r, d, s)
         };
+        // Fault-layer drops join the flat vector in drop-time order (the
+        // vector is untouched — and unsorted work skipped — without them).
+        if !fault_drops.is_empty() {
+            drops.extend(fault_drops);
+            drops.sort_by(|a, b| a.dropped_at.total_cmp(&b.dropped_at));
+        }
         let swap_stats = group_stats.iter().fold(SwapStats::default(), |mut acc, gs| {
             acc.loads_started += gs.swap_stats.loads_started;
             acc.offloads_started += gs.swap_stats.offloads_started;
@@ -1134,6 +1534,7 @@ impl SimCluster {
             groups: group_stats,
             streaming_latency,
             streaming_counts,
+            fault_stats: self.fault_stats,
         }
     }
 }
@@ -1677,5 +2078,215 @@ mod tests {
         }
         // Full-retention runs carry no sketch.
         assert!(full.streaming_latency.is_none());
+    }
+
+    // ----- fault injection & elasticity tests (DESIGN.md §11) -----
+
+    use crate::cluster::fault::{FaultEvent, FaultKind, FaultPlan};
+
+    fn conservation_holds(report: &SimReport) -> bool {
+        report.groups.iter().map(|g| g.events).sum::<u64>()
+            + report.fault_stats.dead_event_drops
+            + report.fault_stats.cluster_events
+            == report.events
+    }
+
+    #[test]
+    fn explicit_none_fault_plan_is_bit_for_bit_identity() {
+        let run = |faults: Option<FaultPlan>| {
+            let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+            cfg.scenario = Some("bursty".into());
+            cfg.faults = faults;
+            let (sys, _) = SimCluster::from_scenario(cfg, 8.0, 11).unwrap();
+            sys.run()
+        };
+        let base = run(None);
+        let none = run(Some(FaultPlan::none()));
+        assert_eq!(base.requests, none.requests);
+        assert_eq!(base.drops, none.drops);
+        assert_eq!(base.swaps, none.swaps);
+        assert_eq!(base.events, none.events);
+        assert_eq!(base.sim_end, none.sim_end);
+        assert_eq!(base.fault_stats, FaultStats::default());
+        assert_eq!(none.fault_stats, FaultStats::default());
+        assert!(conservation_holds(&base));
+    }
+
+    #[test]
+    fn replicated_failover_loses_nothing_and_recovers() {
+        let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+        cfg.faults = Some(FaultPlan {
+            events: vec![
+                FaultEvent { at: 3.0, kind: FaultKind::GroupFail { group: 1 } },
+                FaultEvent { at: 6.0, kind: FaultKind::GroupRecover { group: 1 } },
+            ],
+            retry: RetryPolicy { max_retries: 3, backoff: 0.05 },
+            autoscale: None,
+        });
+        let arrivals: Vec<Arrival> = (0..40)
+            .map(|i| Arrival { at: 0.25 * i as f64, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload_warm();
+        let report = sys.run();
+        // The surviving replica + retries absorb the outage: every
+        // arrival still completes and nothing is lost.
+        assert_eq!(report.fault_stats.lost, 0);
+        assert_eq!(report.requests.len(), 40);
+        assert_eq!(report.fault_stats.injected, 2);
+        assert_eq!(report.groups[1].failures, 1);
+        assert!(
+            (report.groups[1].downtime - 3.0).abs() < 1e-9,
+            "downtime {} should be the fail→recover gap",
+            report.groups[1].downtime
+        );
+        assert_eq!(report.groups[1].downtime, report.groups[1].recovery_time);
+        assert!(conservation_holds(&report));
+    }
+
+    #[test]
+    fn fail_fast_single_group_drops_with_fault_reason() {
+        let mut cfg = SystemConfig::workload_experiment(2, 1, 4);
+        cfg.faults = Some(FaultPlan {
+            events: vec![FaultEvent { at: 1.0, kind: FaultKind::GroupFail { group: 0 } }],
+            retry: RetryPolicy { max_retries: 0, backoff: 0.05 },
+            autoscale: None,
+        });
+        let arrivals: Vec<Arrival> = (0..10)
+            .map(|i| Arrival { at: 0.3 * i as f64, model: i % 2, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[0]);
+        let report = sys.run();
+        // The only group never recovers and the retry budget is zero:
+        // everything not already completed is lost to the fault.
+        assert!(report.fault_stats.lost > 0);
+        assert_eq!(report.requests.len() + report.drops.len(), 10);
+        assert!(report.drops.iter().all(|d| d.reason == DropReason::Fault));
+        assert_eq!(report.drops.len() as u64, report.fault_stats.lost);
+        assert_eq!(report.groups[0].lost, report.fault_stats.lost);
+        assert_eq!(report.groups[0].drops as u64, report.fault_stats.lost);
+        assert_eq!(report.groups[0].failures, 1);
+        // Open outage: downtime runs to sim end, no completed recovery.
+        assert!(report.groups[0].downtime > 0.0);
+        assert_eq!(report.groups[0].recovery_time, 0.0);
+        assert!(conservation_holds(&report));
+    }
+
+    #[test]
+    fn events_for_failed_groups_are_dropped_with_accounting() {
+        // A cold load is in flight when the group dies: its transfer/ack
+        // events are addressed to the dead incarnation and must be
+        // discarded with accounting (not fired into rebuilt state).
+        let mut cfg = swap_cfg(1, 1);
+        cfg.faults = Some(FaultPlan {
+            events: vec![
+                FaultEvent { at: 0.3, kind: FaultKind::GroupFail { group: 0 } },
+                FaultEvent { at: 2.0, kind: FaultKind::GroupRecover { group: 0 } },
+            ],
+            retry: RetryPolicy { max_retries: 0, backoff: 0.05 },
+            autoscale: None,
+        });
+        let arrivals = vec![
+            Arrival { at: 0.0, model: 0, input_len: 2 },
+            Arrival { at: 3.0, model: 1, input_len: 2 },
+        ];
+        let mut sys = SimSystem::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload(&[1]);
+        let report = sys.run();
+        assert!(report.fault_stats.dead_event_drops > 0, "orphaned events must be accounted");
+        assert_eq!(report.fault_stats.lost, 1, "the in-flight request is lost");
+        assert_eq!(report.requests.len(), 1, "the post-recovery arrival completes");
+        assert!(conservation_holds(&report));
+    }
+
+    #[test]
+    fn preemption_warning_drains_before_killing() {
+        // Preempt = Drain at t, Fail at t+warning. A request arriving
+        // during the warning must be routed away (replicated fleet), and
+        // in-flight work at the drain point finishes or is harvested.
+        let mut cfg = replicated_cfg(2, RouterKind::RoundRobin);
+        cfg.faults = Some(FaultPlan {
+            events: vec![FaultEvent {
+                at: 1.0,
+                kind: FaultKind::GroupPreempt { group: 1, warning: 1.0 },
+            }],
+            retry: RetryPolicy { max_retries: 2, backoff: 0.05 },
+            autoscale: None,
+        });
+        let arrivals: Vec<Arrival> = (0..16)
+            .map(|i| Arrival { at: 0.5 * i as f64, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload_warm();
+        let report = sys.run();
+        assert_eq!(report.fault_stats.lost, 0, "the replica absorbs the preemption");
+        assert_eq!(report.requests.len(), 16);
+        // Drain + fail both fired (and count as injections).
+        assert_eq!(report.fault_stats.injected, 2);
+        assert_eq!(report.groups[1].failures, 1);
+        // Every arrival at/after the warning lands on group 0.
+        assert!(report.requests.iter().all(|r| r.group == 0 || r.arrival < 1.0));
+        assert!(conservation_holds(&report));
+    }
+
+    #[test]
+    fn link_degradation_slows_swaps() {
+        let mean_swap = |faults: Option<FaultPlan>| {
+            let mut cfg = swap_cfg(1, 1);
+            cfg.faults = faults;
+            let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+                models: 2,
+                input_len: 2,
+                total: 4,
+            })
+            .unwrap();
+            sys.preload(&[1]);
+            let r = sys.run();
+            r.swaps.iter().map(SwapRecord::duration).sum::<f64>() / r.swaps.len() as f64
+        };
+        let base = mean_swap(None);
+        let degraded = mean_swap(Some(FaultPlan {
+            events: vec![FaultEvent {
+                at: 0.0,
+                kind: FaultKind::LinkDegrade { group: 0, factor: 4.0 },
+            }],
+            ..FaultPlan::none()
+        }));
+        assert!(degraded > base * 2.0, "4x slower links: {degraded} vs base {base}");
+    }
+
+    #[test]
+    fn autoscaler_drains_idle_groups_and_run_terminates() {
+        let mut cfg = replicated_cfg(2, RouterKind::RoundRobin);
+        cfg.faults = Some(FaultPlan {
+            events: Vec::new(),
+            retry: RetryPolicy::default(),
+            autoscale: Some(AutoscalePolicy {
+                interval: 0.5,
+                high_queue: 50.0,
+                low_queue: 1.0,
+                min_active: 1,
+            }),
+        });
+        let arrivals: Vec<Arrival> = (0..30)
+            .map(|i| Arrival { at: 0.4 * i as f64, model: i % 3, input_len: 8 })
+            .collect();
+        let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+        sys.preload_warm();
+        let report = sys.run();
+        // Termination is the regression here: the self-re-arming tick
+        // must not keep a drained queue alive. Then the behaviour: at
+        // this trickle of load the controller drains group 1 early, so
+        // round-robin's remaining traffic lands on group 0.
+        assert_eq!(report.requests.len(), 30);
+        assert!(report.fault_stats.cluster_events > 0, "ticks are cluster-scoped events");
+        assert!(
+            report.groups[0].requests > report.groups[1].requests,
+            "drained group keeps receiving traffic: {} vs {}",
+            report.groups[0].requests,
+            report.groups[1].requests
+        );
+        assert!(conservation_holds(&report));
     }
 }

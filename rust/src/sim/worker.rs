@@ -496,6 +496,30 @@ impl SimWorker {
     pub fn is_last_stage(&self, pp: usize) -> bool {
         self.pos.pp_rank == pp - 1
     }
+
+    /// The hosting group died (fault injection, DESIGN.md §11): drop
+    /// every queued inbox entry, abandon in-flight chunked transfers,
+    /// release all device memory (the GPU's contents are lost, not
+    /// drained), and free the worker loop at `now`. Lane time already
+    /// reserved on the link/compute streams stays reserved — a crashed
+    /// DMA still occupied the bus — and expires on its own; stale
+    /// completion events are dropped by the cluster's epoch check.
+    /// Counters (violations, oom_events, link accounting, the memory
+    /// high-water mark) survive: they describe the past.
+    pub fn fail(&mut self, now: SimTime) {
+        self.inbox.clear();
+        for p in self.chunk_loads.iter_mut() {
+            *p = None;
+        }
+        for st in self.instances.iter_mut() {
+            *st = InstState::Offloaded;
+        }
+        let used = self.gpu.mem.used();
+        if used > 0 {
+            self.gpu.mem.free(used);
+        }
+        self.busy_until = now;
+    }
 }
 
 #[cfg(test)]
@@ -939,6 +963,30 @@ mod tests {
         // Appends rather than clearing: caller owns buffer lifecycle.
         assert!(w.step_into(1.0, |_| 1.0, 0.001, false, &mut buf));
         assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn fail_clears_state_and_releases_memory() {
+        let mut w = worker_chunked();
+        w.force_loaded(1);
+        // Mid-flight chunked load for model 0, plus a queued batch.
+        w.deliver(load(1, 0, LoadDirection::Load));
+        w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        w.on_chunk_fin(0.25, 0); // chunk 0 landed: 25 bytes on device
+        w.deliver(batch(2, 1));
+        assert!(w.gpu.mem.used() > 0);
+        let high_water = w.gpu.mem.high_water();
+        w.fail(0.4);
+        assert!(w.inbox.is_empty(), "queued entries dropped");
+        assert_eq!(w.gpu.mem.used(), 0, "device memory lost");
+        assert_eq!(w.gpu.mem.high_water(), high_water, "history survives");
+        assert!(w.instances.iter().all(|&s| s == InstState::Offloaded));
+        assert_eq!(w.busy_until, 0.4);
+        // Recovery: a cold reload works and accounts memory normally.
+        w.deliver(load(3, 1, LoadDirection::Load));
+        let a = w.step(1.0, |_| 1.0, 0.001, false).unwrap();
+        assert!(a.iter().any(|x| matches!(x, WorkerAction::ChunkDone { .. })));
+        assert_eq!(w.oom_events, 0);
     }
 
     #[test]

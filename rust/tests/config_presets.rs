@@ -44,6 +44,7 @@ fn every_shipped_preset_parses_and_validates() {
         assert_eq!(back.parallel, cfg.parallel, "{name}");
         assert_eq!(back.scenario, cfg.scenario, "{name}");
         assert_eq!(back.placement, cfg.placement, "{name}: placement changed in round-trip");
+        assert_eq!(back.faults, cfg.faults, "{name}: fault plan changed in round-trip");
         seen.push(name);
     }
     // The known preset set must be present (a rename or deletion here is
@@ -57,6 +58,7 @@ fn every_shipped_preset_parses_and_validates() {
         "hetero_4model.json",
         "groups_2x2.json",
         "planned_hetero.json",
+        "chaos_spot.json",
     ] {
         assert!(seen.iter().any(|n| n == required), "missing preset {required} (have {seen:?})");
     }
@@ -168,6 +170,51 @@ fn planned_preset_resolves_expected_placement() {
     // The preset builds a 4-group simulator directly.
     let (sys, _) = computron::sim::SimCluster::from_scenario(cfg, 2.0, 7).unwrap();
     assert_eq!(sys.num_groups(), 4);
+}
+
+/// The chaos quick-start preset (`computron simulate --faults
+/// configs/chaos_spot.json`, DESIGN.md §11): the groups_2x2 fleet under
+/// two staggered spot-preemption waves, with retries and the elastic
+/// autoscaler armed.
+#[test]
+fn chaos_preset_resolves_expected_faults() {
+    use computron::cluster::fault::FaultKind;
+
+    let cfg = SystemConfig::from_file(&configs_dir().join("chaos_spot.json")).unwrap();
+    let p = cfg.placement.as_ref().expect("chaos preset carries a placement");
+    assert_eq!(p.router, computron::config::RouterKind::LeastLoaded);
+    assert_eq!(p.groups.len(), 2, "waves alternate across two replicated groups");
+
+    let plan = cfg.faults.as_ref().expect("chaos preset carries a fault plan");
+    assert!(!plan.is_none());
+    plan.validate(p.groups.len()).expect("plan targets in-range groups");
+    // Two staggered preemption waves, each with a warning and a recovery:
+    // group 1 first, then group 0 — never both at once.
+    let preempts: Vec<usize> = plan
+        .events
+        .iter()
+        .filter_map(|e| match e.kind {
+            FaultKind::GroupPreempt { group, warning } => {
+                assert!(warning > 0.0, "spot preemptions come with notice");
+                Some(group)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(preempts, vec![1, 0]);
+    let recovers =
+        plan.events.iter().filter(|e| matches!(e.kind, FaultKind::GroupRecover { .. })).count();
+    assert_eq!(recovers, 2, "every preempted group comes back");
+    assert!(plan.retry.max_retries >= 1, "the quick-start demonstrates re-homing, not loss");
+    assert!(plan.autoscale.is_some(), "the elastic controller is armed");
+    // The resolved timeline interleaves drains before kills.
+    let timeline = plan.timeline();
+    assert_eq!(timeline.len(), 6, "2 x (drain + fail) + 2 recovers");
+    assert!(timeline.windows(2).all(|w| w[0].0 <= w[1].0), "timeline is time-ordered");
+
+    // The preset builds a faulted 2-group simulator directly.
+    let (sys, _) = computron::sim::SimCluster::from_scenario(cfg, 2.0, 7).unwrap();
+    assert_eq!(sys.num_groups(), 2);
 }
 
 #[test]

@@ -5,6 +5,7 @@
 //! `BinaryHeap` backend bit-for-bit, since both implement the same
 //! (time, seq) total order.
 
+use computron::cluster::fault::{AutoscalePolicy, FaultEvent, FaultKind, FaultPlan, RetryPolicy};
 use computron::config::{PlacementSpec, RouterKind, SystemConfig};
 use computron::sim::{SimCluster, SimReport};
 use computron::workload::scenarios;
@@ -40,12 +41,19 @@ fn assert_identical(tag: &str, a: &SimReport, b: &SimReport) {
     assert_eq!(a.d2h_bytes, b.d2h_bytes, "{tag}: d2h differs");
     assert_eq!(a.events, b.events, "{tag}: event counts differ");
     assert_eq!(a.sim_end, b.sim_end, "{tag}: end times differ");
+    assert_eq!(a.fault_stats, b.fault_stats, "{tag}: fault stats differ");
     assert_eq!(a.groups.len(), b.groups.len(), "{tag}: group counts differ");
     for (x, y) in a.groups.iter().zip(&b.groups) {
         assert_eq!(
             (x.requests, x.drops, x.swaps, x.swap_bytes, x.events),
             (y.requests, y.drops, y.swaps, y.swap_bytes, y.events),
             "{tag}: group {} stats differ",
+            x.group
+        );
+        assert_eq!(
+            (x.failures, x.downtime, x.recovery_time, x.lost, x.rehomed),
+            (y.failures, y.downtime, y.recovery_time, y.lost, y.rehomed),
+            "{tag}: group {} fault metrics differ",
             x.group
         );
     }
@@ -77,6 +85,92 @@ fn calendar_queue_matches_heap_backend_across_registry() {
             let cal = run(scenario, g, false);
             let heap = run(scenario, g, true);
             assert_identical(&format!("{scenario}/G={g}/backend"), &cal, &heap);
+        }
+    }
+}
+
+/// A non-trivial fault plan valid for any group count: group 0 takes a
+/// hard failure, recovers, is spot-preempted with a warning, recovers
+/// again, and rides a link-degradation window — with retries and the
+/// autoscaler armed, so every fault code path is on the calendar.
+fn chaotic_plan() -> FaultPlan {
+    FaultPlan {
+        events: vec![
+            FaultEvent { at: 1.0, kind: FaultKind::GroupFail { group: 0 } },
+            FaultEvent { at: 1.8, kind: FaultKind::GroupRecover { group: 0 } },
+            FaultEvent { at: 2.4, kind: FaultKind::GroupPreempt { group: 0, warning: 0.3 } },
+            FaultEvent { at: 3.4, kind: FaultKind::GroupRecover { group: 0 } },
+            FaultEvent { at: 3.6, kind: FaultKind::LinkDegrade { group: 0, factor: 3.0 } },
+            FaultEvent { at: 4.2, kind: FaultKind::LinkRestore { group: 0 } },
+        ],
+        retry: RetryPolicy { max_retries: 2, backoff: 0.05 },
+        autoscale: Some(AutoscalePolicy {
+            interval: 0.4,
+            high_queue: 6.0,
+            low_queue: 0.5,
+            min_active: 1,
+        }),
+    }
+}
+
+fn run_faulted(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.scenario = Some(scenario.to_string());
+    cfg.placement = Some(PlacementSpec::replicated(
+        g,
+        cfg.parallel,
+        3,
+        RouterKind::LeastLoaded,
+    ));
+    cfg.faults = Some(chaotic_plan());
+    let (mut sys, _) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
+    if heap_queue {
+        sys.use_binary_heap_queue();
+    }
+    sys.run()
+}
+
+/// Fault injection must not cost determinism: with a plan exercising
+/// failure, preemption, recovery, link degradation, retries, and the
+/// autoscaler, repeated runs and both queue backends still agree
+/// bit-for-bit at every replication factor.
+#[test]
+fn faulted_runs_identical_across_backends_and_group_counts() {
+    for &scenario in &["bursty", "zipf"] {
+        for g in [1usize, 2, 4] {
+            let a = run_faulted(scenario, g, false);
+            let b = run_faulted(scenario, g, false);
+            assert_identical(&format!("{scenario}/G={g}/faulted/repeat"), &a, &b);
+            let heap = run_faulted(scenario, g, true);
+            assert_identical(&format!("{scenario}/G={g}/faulted/backend"), &a, &heap);
+            assert!(
+                a.fault_stats.injected > 0,
+                "{scenario}/G={g}: the plan must actually inject"
+            );
+        }
+    }
+}
+
+/// `faults: Some(FaultPlan::none())` is the identity: bit-for-bit the
+/// same run as `faults: None`, across the scenario registry.
+#[test]
+fn none_fault_plan_matches_absent_plan_across_registry() {
+    for &scenario in scenarios::names() {
+        for g in [1usize, 2] {
+            let base = run(scenario, g, false);
+            let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+            cfg.scenario = Some(scenario.to_string());
+            cfg.placement = Some(PlacementSpec::replicated(
+                g,
+                cfg.parallel,
+                3,
+                RouterKind::LeastLoaded,
+            ));
+            cfg.faults = Some(FaultPlan::none());
+            let (sys, _) =
+                SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
+            let none = sys.run();
+            assert_identical(&format!("{scenario}/G={g}/none-plan"), &base, &none);
         }
     }
 }

@@ -1,0 +1,238 @@
+//! Resilience regression suite (DESIGN.md §11): fault injection, retry /
+//! re-homing, health-aware routing, and the elastic autoscaler exercised
+//! through the public API. The heavyweight goodput-dip / recovery-time
+//! oracles run in `benches/resilience_suite.rs`; this file pins the
+//! invariants those oracles stand on:
+//!
+//! - event conservation: per-group events + dead-event drops +
+//!   cluster-scoped events account for every event the queue processed;
+//! - replicated fleets with a retry budget lose nothing across an outage;
+//! - fail-fast (zero-retry) fleets lose exactly the harvested requests,
+//!   each recorded with `DropReason::Fault`;
+//! - health-aware routing steers every post-failure arrival away from a
+//!   dead group;
+//! - every chaos schedule in the registry validates, runs to completion,
+//!   and is a pure function of (config, seed).
+
+use computron::cluster::fault::{
+    chaos_by_name, chaos_names, AutoscalePolicy, ChaosParams, FaultEvent, FaultKind, FaultPlan,
+    RetryPolicy,
+};
+use computron::config::{PlacementSpec, RouterKind, SystemConfig};
+use computron::coordinator::DropReason;
+use computron::sim::{Arrival, Driver, SimCluster, SimReport};
+
+const SEED: u64 = 0x5E51_11E7;
+
+fn replicated_cfg(g: usize, router: RouterKind) -> SystemConfig {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.placement = Some(PlacementSpec::replicated(g, cfg.parallel, 3, router));
+    cfg
+}
+
+fn steady_arrivals(n: usize, spacing: f64) -> Vec<Arrival> {
+    (0..n)
+        .map(|i| Arrival { at: spacing * i as f64, model: i % 3, input_len: 8 })
+        .collect()
+}
+
+/// Per-group events + dead-event drops + cluster-scoped events must
+/// cover every event the queue processed — nothing is double-counted or
+/// silently discarded (DESIGN.md §11).
+fn conservation_holds(report: &SimReport) -> bool {
+    report.groups.iter().map(|g| g.events).sum::<u64>()
+        + report.fault_stats.dead_event_drops
+        + report.fault_stats.cluster_events
+        == report.events
+}
+
+#[test]
+fn replicated_outage_with_retries_loses_nothing() {
+    let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+    cfg.faults = Some(FaultPlan {
+        events: vec![
+            FaultEvent { at: 2.0, kind: FaultKind::GroupFail { group: 1 } },
+            FaultEvent { at: 5.0, kind: FaultKind::GroupRecover { group: 1 } },
+        ],
+        retry: RetryPolicy { max_retries: 3, backoff: 0.05 },
+        autoscale: None,
+    });
+    let arrivals = steady_arrivals(32, 0.25);
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload_warm();
+    let report = sys.run();
+    assert_eq!(report.fault_stats.lost, 0, "surviving replica + retries absorb the outage");
+    assert_eq!(report.requests.len(), 32, "every arrival completes");
+    assert!(report.drops.is_empty(), "nothing dropped");
+    assert_eq!(report.groups[1].failures, 1);
+    assert!((report.groups[1].downtime - 3.0).abs() < 1e-9, "downtime = fail→recover gap");
+    assert_eq!(report.groups[1].downtime, report.groups[1].recovery_time);
+    assert!(conservation_holds(&report));
+}
+
+#[test]
+fn fail_fast_loses_exactly_the_harvested_requests() {
+    let mut cfg = replicated_cfg(1, RouterKind::RoundRobin);
+    cfg.faults = Some(FaultPlan {
+        events: vec![FaultEvent { at: 1.0, kind: FaultKind::GroupFail { group: 0 } }],
+        retry: RetryPolicy { max_retries: 0, backoff: 0.05 },
+        autoscale: None,
+    });
+    let arrivals = steady_arrivals(12, 0.3);
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload_warm();
+    let report = sys.run();
+    assert!(report.fault_stats.lost > 0, "no retries + no recovery must lose requests");
+    assert_eq!(report.requests.len() + report.drops.len(), 12, "arrival accounting");
+    assert!(
+        report.drops.iter().all(|d| d.reason == DropReason::Fault),
+        "fault drops carry the fault reason"
+    );
+    assert_eq!(report.drops.len() as u64, report.fault_stats.lost);
+    assert_eq!(report.groups[0].lost, report.fault_stats.lost);
+    assert!(report.groups[0].downtime > 0.0, "open outage runs to sim end");
+    assert_eq!(report.groups[0].recovery_time, 0.0, "no completed recovery");
+    assert!(conservation_holds(&report));
+}
+
+#[test]
+fn health_aware_routing_steers_around_a_dead_group() {
+    // Group 1 dies before any arrival and never recovers: a round-robin
+    // router with health masking must send *every* request to group 0,
+    // with no retries needed.
+    let mut cfg = replicated_cfg(2, RouterKind::RoundRobin);
+    cfg.faults = Some(FaultPlan {
+        events: vec![FaultEvent { at: 0.0, kind: FaultKind::GroupFail { group: 1 } }],
+        retry: RetryPolicy { max_retries: 1, backoff: 0.05 },
+        autoscale: None,
+    });
+    let arrivals = steady_arrivals(20, 0.3);
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload_warm();
+    let report = sys.run();
+    assert_eq!(report.requests.len(), 20);
+    assert_eq!(report.fault_stats.lost, 0);
+    assert!(
+        report.requests.iter().all(|r| r.group == 0),
+        "every request must route to the surviving group"
+    );
+    assert_eq!(report.groups[1].requests, 0);
+    assert!(conservation_holds(&report));
+}
+
+#[test]
+fn preemption_warning_rehomes_without_loss() {
+    let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+    cfg.faults = Some(FaultPlan {
+        events: vec![FaultEvent {
+            at: 1.5,
+            kind: FaultKind::GroupPreempt { group: 1, warning: 0.8 },
+        }],
+        retry: RetryPolicy { max_retries: 2, backoff: 0.05 },
+        autoscale: None,
+    });
+    let arrivals = steady_arrivals(24, 0.3);
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload_warm();
+    let report = sys.run();
+    assert_eq!(report.fault_stats.lost, 0, "warned preemption + replica loses nothing");
+    assert_eq!(report.requests.len(), 24);
+    // Drain fires at 1.5, fail at 2.3 — both injected actions.
+    assert_eq!(report.fault_stats.injected, 2);
+    assert!(
+        report.requests.iter().all(|r| r.group == 0 || r.arrival < 1.5),
+        "arrivals during/after the warning avoid the draining group"
+    );
+    assert!(conservation_holds(&report));
+}
+
+#[test]
+fn autoscaler_under_burst_keeps_fleet_serving_and_terminates() {
+    // Aggressive thresholds + heavy burst: the controller keeps both
+    // groups serving the burst, and the run must still terminate (the
+    // tick re-arms only while the queue is non-empty — the regression
+    // that would otherwise keep an empty sim alive forever).
+    let mut cfg = replicated_cfg(2, RouterKind::LeastLoaded);
+    cfg.faults = Some(FaultPlan {
+        events: Vec::new(),
+        retry: RetryPolicy::default(),
+        autoscale: Some(AutoscalePolicy {
+            interval: 0.25,
+            high_queue: 2.0,
+            low_queue: 0.5,
+            min_active: 1,
+        }),
+    });
+    let arrivals = steady_arrivals(60, 0.05);
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+    sys.preload_warm();
+    let report = sys.run();
+    assert_eq!(report.requests.len() + report.drops.len(), 60);
+    assert!(report.fault_stats.cluster_events > 0, "autoscale ticks are cluster events");
+    assert!(
+        report.groups.iter().all(|g| g.requests > 0),
+        "burst load must spread across joined groups: {:?}",
+        report.groups.iter().map(|g| g.requests).collect::<Vec<_>>()
+    );
+    assert!(conservation_holds(&report));
+}
+
+/// Every chaos schedule in the registry produces a plan that validates
+/// against its placement, runs to completion with full arrival + event
+/// accounting, and replays bit-for-bit from the same seed.
+#[test]
+fn chaos_registry_runs_deterministically_across_group_counts() {
+    let duration = 6.0;
+    for name in chaos_names() {
+        for g in [1usize, 2, 4] {
+            let params = ChaosParams { seed: SEED, duration, num_groups: g };
+            let plan = chaos_by_name(name, &params)
+                .unwrap_or_else(|| panic!("chaos schedule {name} missing from registry"));
+            plan.validate(g).unwrap_or_else(|e| panic!("{name}/G={g}: invalid plan: {e}"));
+
+            let run = || {
+                let mut cfg = replicated_cfg(g, RouterKind::LeastLoaded);
+                cfg.faults = Some(plan.clone());
+                let arrivals = steady_arrivals(30, duration / 30.0);
+                let total = arrivals.len();
+                let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).unwrap();
+                sys.preload_warm();
+                let report = sys.run();
+                let tag = format!("{name}/G={g}");
+                assert_eq!(
+                    report.requests.len() + report.drops.len(),
+                    total,
+                    "{tag}: completions + drops must cover every arrival"
+                );
+                assert!(conservation_holds(&report), "{tag}: event conservation");
+                report
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a.requests, b.requests, "{name}/G={g}: replay differs");
+            assert_eq!(a.drops, b.drops, "{name}/G={g}: replay drops differ");
+            assert_eq!(a.fault_stats, b.fault_stats, "{name}/G={g}: fault stats differ");
+            assert_eq!(a.events, b.events, "{name}/G={g}: event counts differ");
+        }
+    }
+}
+
+/// The chaos generators themselves are pure functions of their params —
+/// same seed ⇒ same plan, different seed ⇒ (for these schedules) a
+/// different one.
+#[test]
+fn chaos_generators_are_seeded() {
+    let p = ChaosParams { seed: 7, duration: 60.0, num_groups: 4 };
+    for name in chaos_names() {
+        let a = chaos_by_name(name, &p).unwrap();
+        let b = chaos_by_name(name, &p).unwrap();
+        assert_eq!(a, b, "{name}: same params must reproduce the plan");
+    }
+    // The structural schedules always inject (gpu-mtbf's exponential
+    // draws may legitimately skip a short window).
+    for name in ["rack-correlated", "spot-wave"] {
+        let plan = chaos_by_name(name, &p).unwrap();
+        assert!(!plan.events.is_empty(), "{name}: a 60 s schedule must inject something");
+        assert!(plan.events.iter().all(|e| e.kind.group() < 4), "{name}: groups in range");
+    }
+}
