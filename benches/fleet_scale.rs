@@ -1,0 +1,432 @@
+//! Fleet scale — the host-memory hierarchy's headline experiment
+//! (DESIGN.md §12): grow a fine-tuned-variant catalog 10 → 100 → 1000
+//! entries over a *fixed* pinned-host budget and a zipf long-tail
+//! workload, with variants sharing a handful of base architectures.
+//!
+//! Deterministic oracles asserted before the sweep:
+//!
+//! - **Delta exactness** — every swap-in of a variant whose base is GPU
+//!   resident moves exactly `scale_count(shard_bytes, delta_fraction)`
+//!   bytes, and its `delta_bytes_saved` is exactly the complement;
+//! - **Tier cost ordering** — an NVMe-cold first swap is strictly slower
+//!   (> 2x here) than the same model's host-warm swaps.
+//!
+//! Oracles asserted on every fleet cell:
+//!
+//! - engine invariants (no dependency violations, no OOM, swaps
+//!   drained) and host-tier budget respected (high water <= budget);
+//! - per-record byte provenance: delta-form records carry exact delta
+//!   bytes, full-form records carry the full shard;
+//! - full-form host hits are cheaper on average than NVMe misses;
+//! - **dedup goodput** — at 1000 models under the fixed budget, the
+//!   delta-sharing catalog strictly beats the same fleet with lineage
+//!   stripped (every variant stored full-form).
+//!
+//! ```bash
+//! cargo bench --bench fleet_scale              # full sweep
+//! cargo bench --bench fleet_scale -- --fast    # CI smoke subset
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use computron::cluster::{HostPolicyKind, SwapTier};
+use computron::config::{
+    HostConfig, LoadDesign, ModelCatalog, ModelDeployment, ParallelConfig, SchedulerKind,
+    SystemConfig,
+};
+use computron::coordinator::engine::SwapRecord;
+use computron::model::shard::scale_count;
+use computron::model::shard_grid;
+use computron::sim::{Driver, SimCluster, SimSystem};
+use computron::util::bench::{section, table};
+use computron::util::json::Json;
+use computron::workload::scenarios::{self, ScenarioParams, WorkloadGen};
+
+const SEED: u64 = 0xF1EE_75CA;
+
+/// Fixed pinned-host budget for every fleet size: fits the 10-model
+/// fleet outright, most of the 100-model fleet in delta form, and a
+/// small fraction of the 1000-model fleet — eviction pressure is the
+/// experiment.
+const HOST_BUDGET: usize = 32_000_000_000;
+
+/// Fraction of parameters each fine-tune touches.
+const DELTA_FRACTION: f64 = 0.1;
+
+/// Base architectures shared by the whole fleet (variants reference
+/// their family's standalone entry).
+const FAMILIES: [&str; 4] = ["opt-125m", "opt-350m", "opt-1.3b", "opt-2.7b"];
+
+/// `n`-entry fleet: one standalone base per family, then fine-tuned
+/// variants round-robin across families. `dedup = false` strips the
+/// lineage (every variant stored and swapped full-form) — the control
+/// arm of the dedup-goodput oracle.
+fn fleet(n: usize, dedup: bool) -> ModelCatalog {
+    assert!(n >= FAMILIES.len());
+    let mut models = Vec::with_capacity(n);
+    for fam in FAMILIES {
+        models.push(ModelDeployment::new(fam).with_slo(1.0));
+    }
+    for k in FAMILIES.len()..n {
+        let fam = FAMILIES[k % FAMILIES.len()];
+        let mut d = ModelDeployment::new(fam).with_slo(1.0);
+        if dedup {
+            d = d.with_base(fam, DELTA_FRACTION);
+        }
+        models.push(d);
+    }
+    ModelCatalog::new(models)
+}
+
+fn fleet_cfg(n: usize, dedup: bool, policy: HostPolicyKind) -> SystemConfig {
+    let mut cfg = SystemConfig::hetero_experiment(fleet(n, dedup), 4, 8);
+    // One worker keeps the per-cell cost linear in the trace, not the
+    // grid; the sharded delta path is pinned by the exactness stage.
+    cfg.parallel = ParallelConfig::new(1, 1);
+    cfg.engine.scheduler = SchedulerKind::Shed;
+    cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+    cfg.host = Some(HostConfig { budget: HOST_BUDGET, policy, ..HostConfig::default() });
+    cfg
+}
+
+struct FleetCell {
+    goodput: f64,
+    attained: usize,
+    requests: usize,
+    drops: usize,
+    hit_rate: f64,
+    evictions: u64,
+    nvme_gb: f64,
+    host_delta_gb: f64,
+    gpu_delta_gb: f64,
+    mean_hit_s: f64,
+    mean_miss_s: f64,
+}
+
+fn run_fleet(n: usize, dedup: bool, policy: HostPolicyKind, duration: f64) -> FleetCell {
+    let cfg = fleet_cfg(n, dedup, policy);
+    // Per-entry ground truth for the byte-provenance oracle, computed
+    // before the config moves into the simulator.
+    let bases = cfg.resolved_bases().expect("fleet lineage resolves");
+    let fractions: Vec<f64> = cfg.models.iter().map(|d| d.delta_fraction).collect();
+    let full: Vec<usize> = cfg
+        .models
+        .specs()
+        .expect("fleet resolves")
+        .iter()
+        .map(|spec| shard_grid(spec, 1, 1).expect("1x1 grid")[0][0].bytes())
+        .collect();
+
+    let params = ScenarioParams {
+        num_models: n,
+        duration,
+        seed: SEED,
+        // Fixed aggregate offered load (~24 req/s) regardless of fleet
+        // size, so cells differ only in how the tail spreads.
+        rate_scale: 12.0 / n as f64,
+        rate_shares: cfg.models.rate_shares(),
+        warmup: 0,
+        input_len: 4,
+    };
+    let gen = scenarios::by_name("zipf", &params).expect("zipf registered");
+    let arrivals = gen.generate();
+    let start = gen.measure_start();
+    let mut sys = SimCluster::new(cfg, Driver::Open(arrivals)).expect("config valid");
+    sys.preload(&[0]);
+    let report = sys.run();
+
+    let tag = format!("fleet n={n} dedup={dedup} policy={}", policy.name());
+    assert_eq!(report.violations, 0, "{tag}: load-dependency violations");
+    assert_eq!(report.oom_events, 0, "{tag}: OOM events");
+    let s = report.swap_stats;
+    assert_eq!(s.loads_started, s.loads_completed + s.loads_cancelled, "{tag}: loads drained");
+    assert_eq!(report.host.len(), 1, "{tag}: one per-group host tier");
+    let host = &report.host[0];
+    assert_eq!(host.budget, HOST_BUDGET, "{tag}");
+    assert!(host.high_water <= HOST_BUDGET, "{tag}: pinned past the budget");
+
+    // Byte provenance: every completed record is either an exact delta
+    // over its base or the exact full shard.
+    let (mut hit_n, mut hit_s, mut miss_n, mut miss_s) = (0u64, 0.0f64, 0u64, 0.0f64);
+    for sw in report.swaps.iter().filter(|sw| !sw.cancelled) {
+        let m = sw.load_model;
+        if sw.delta_bytes_saved > 0 {
+            let base = bases[m].expect("delta record for a standalone entry");
+            assert_eq!(full[base], full[m], "{tag}: family shares one architecture");
+            assert_eq!(
+                sw.bytes,
+                scale_count(full[m], fractions[m]),
+                "{tag}: delta record must move exactly the delta bytes"
+            );
+            assert_eq!(sw.delta_bytes_saved, full[m] - sw.bytes, "{tag}: savings complement");
+        } else {
+            assert_eq!(sw.bytes, full[m], "{tag}: full-form record must move the full shard");
+            match sw.tier {
+                SwapTier::HostHit => {
+                    hit_n += 1;
+                    hit_s += sw.duration();
+                }
+                SwapTier::NvmeMiss => {
+                    miss_n += 1;
+                    miss_s += sw.duration();
+                }
+            }
+        }
+    }
+    let mean_hit_s = if hit_n > 0 { hit_s / hit_n as f64 } else { 0.0 };
+    let mean_miss_s = if miss_n > 0 { miss_s / miss_n as f64 } else { 0.0 };
+    if hit_n > 0 && miss_n > 0 {
+        assert!(
+            mean_miss_s > mean_hit_s,
+            "{tag}: NVMe misses ({mean_miss_s:.3} s) must cost more than host hits ({mean_hit_s:.3} s)"
+        );
+    }
+
+    let attained =
+        report.requests.iter().filter(|r| r.arrival >= start && r.attained()).count();
+    let gpu_delta: u64 = report.groups.iter().map(|g| g.delta_bytes_saved).sum();
+    FleetCell {
+        goodput: attained as f64 / duration,
+        attained,
+        requests: report.requests.iter().filter(|r| r.arrival >= start).count(),
+        drops: report.drops.iter().filter(|d| d.arrival >= start).count(),
+        hit_rate: host.hit_rate(),
+        evictions: host.stats.evictions,
+        nvme_gb: host.stats.nvme_bytes as f64 / 1e9,
+        host_delta_gb: host.stats.delta_bytes_saved as f64 / 1e9,
+        gpu_delta_gb: gpu_delta as f64 / 1e9,
+        mean_hit_s,
+        mean_miss_s,
+    }
+}
+
+/// Delta-exactness stage: a 2x2-sharded variant cycling against its
+/// resident base must move exactly the per-worker delta bytes, chunked.
+fn delta_exactness_stage() -> (usize, usize, usize) {
+    let catalog = ModelCatalog::new(vec![
+        ModelDeployment::new("opt-1.3b"),
+        ModelDeployment::new("opt-1.3b").with_base("opt-1.3b", DELTA_FRACTION),
+        ModelDeployment::new("opt-1.3b"),
+    ]);
+    let mut cfg = SystemConfig::hetero_experiment(catalog, 2, 8);
+    cfg.engine.load_design = LoadDesign::ChunkedPipelined;
+    cfg.host = Some(HostConfig { warm_start: true, ..HostConfig::default() });
+
+    let spec = cfg.models.specs().expect("resolves")[0].clone();
+    let grid = shard_grid(&spec, 2, 2).expect("2x2 grid divides");
+    let full_max =
+        grid.iter().flatten().map(|shard| shard.bytes()).max().expect("non-empty grid");
+    let eff_max = grid
+        .iter()
+        .flatten()
+        .map(|shard| scale_count(shard.bytes(), DELTA_FRACTION))
+        .max()
+        .expect("non-empty grid");
+
+    let mut sys =
+        SimSystem::new(cfg, Driver::AlternatingBlocking { models: 3, input_len: 2, total: 9 })
+            .expect("config valid");
+    sys.preload(&[0]);
+    let report = sys.run();
+    assert_eq!(report.violations, 0);
+
+    let mut variant_swaps = 0usize;
+    for sw in report.swaps.iter().filter(|sw| !sw.cancelled) {
+        match sw.load_model {
+            1 => {
+                variant_swaps += 1;
+                assert_eq!(sw.bytes, eff_max, "variant over resident base: delta bytes only");
+                assert_eq!(sw.delta_bytes_saved, full_max - eff_max, "exact H2D savings");
+                assert_ne!(sw.victim, Some(0), "a variant never evicts its own base");
+            }
+            2 => {
+                assert_eq!(sw.bytes, full_max, "standalone entries move the full shard");
+                assert_eq!(sw.delta_bytes_saved, 0);
+            }
+            _ => {}
+        }
+    }
+    assert!(variant_swaps >= 2, "the cycle must swap the variant repeatedly");
+    let saved: u64 = report.groups.iter().map(|g| g.delta_bytes_saved).sum();
+    assert_eq!(saved, variant_swaps as u64 * (full_max - eff_max) as u64, "group ledger agrees");
+    (full_max, eff_max, variant_swaps)
+}
+
+/// Tier-cost stage: the one NVMe-cold swap of the run is strictly (and
+/// decisively) slower than the same model's host-warm swaps.
+fn tier_cost_stage() -> (f64, f64) {
+    let mut cfg = SystemConfig::swap_experiment(1, 1);
+    cfg.host = Some(HostConfig::default()); // cold start, default NVMe link
+    let mut sys =
+        SimSystem::new(cfg, Driver::AlternatingBlocking { models: 2, input_len: 2, total: 8 })
+            .expect("config valid");
+    sys.preload(&[1]);
+    let report = sys.run();
+
+    let cold: Vec<&SwapRecord> = report
+        .swaps
+        .iter()
+        .filter(|sw| !sw.cancelled && sw.tier == SwapTier::NvmeMiss)
+        .collect();
+    assert_eq!(cold.len(), 1, "only the first un-preloaded load is host-cold");
+    let cold_s = cold[0].duration();
+    let warm_s = report
+        .swaps
+        .iter()
+        .filter(|sw| {
+            !sw.cancelled && sw.tier == SwapTier::HostHit && sw.load_model == cold[0].load_model
+        })
+        .map(SwapRecord::duration)
+        .fold(f64::INFINITY, f64::min);
+    assert!(warm_s.is_finite(), "the cold model must swap host-warm later in the cycle");
+    assert!(
+        cold_s > 2.0 * warm_s,
+        "NVMe-cold swap ({cold_s:.3} s) must dominate the host-warm one ({warm_s:.3} s)"
+    );
+    (cold_s, warm_s)
+}
+
+fn cell_row(n: usize, dedup: bool, policy: HostPolicyKind, c: &FleetCell) -> Vec<String> {
+    vec![
+        n.to_string(),
+        if dedup { "delta".into() } else { "full".into() },
+        policy.name().to_string(),
+        format!("{:.1}", c.goodput),
+        c.attained.to_string(),
+        c.requests.to_string(),
+        c.drops.to_string(),
+        format!("{:.1}%", 100.0 * c.hit_rate),
+        c.evictions.to_string(),
+        format!("{:.1}", c.nvme_gb),
+        format!("{:.1}", c.host_delta_gb),
+        format!("{:.2}", c.gpu_delta_gb),
+        common::fmt_s(c.mean_hit_s),
+        common::fmt_s(c.mean_miss_s),
+    ]
+}
+
+fn cell_json(n: usize, dedup: bool, policy: HostPolicyKind, c: &FleetCell) -> Json {
+    Json::from_pairs(vec![
+        ("models", n.into()),
+        ("dedup", dedup.into()),
+        ("policy", policy.name().into()),
+        ("goodput", c.goodput.into()),
+        ("attained", c.attained.into()),
+        ("requests", c.requests.into()),
+        ("drops", c.drops.into()),
+        ("host_hit_rate", c.hit_rate.into()),
+        ("host_evictions", c.evictions.into()),
+        ("nvme_gb", c.nvme_gb.into()),
+        ("host_delta_gb_saved", c.host_delta_gb.into()),
+        ("gpu_delta_gb_saved", c.gpu_delta_gb.into()),
+        ("mean_hit_s", c.mean_hit_s.into()),
+        ("mean_miss_s", c.mean_miss_s.into()),
+    ])
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let duration = if fast { 4.0 } else { 12.0 };
+    let fleet_sizes = [10usize, 100, 1000];
+
+    section("Fleet scale: host-memory hierarchy under a growing variant catalog");
+
+    let (full_max, eff_max, variant_swaps) = delta_exactness_stage();
+    println!(
+        "delta exactness: {variant_swaps} variant swaps moved {eff_max} B each \
+         (full shard {full_max} B, fraction {DELTA_FRACTION})"
+    );
+    let (cold_s, warm_s) = tier_cost_stage();
+    println!("tier cost: NVMe-cold {cold_s:.3} s vs host-warm {warm_s:.3} s");
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut cells_json: Vec<Json> = Vec::new();
+
+    // Catalog scaling sweep under the fixed budget.
+    let mut dedup_1000: Option<FleetCell> = None;
+    for &n in &fleet_sizes {
+        let cell = run_fleet(n, true, HostPolicyKind::WeightedCost, duration);
+        rows.push(cell_row(n, true, HostPolicyKind::WeightedCost, &cell));
+        cells_json.push(cell_json(n, true, HostPolicyKind::WeightedCost, &cell));
+        if n == 1000 {
+            dedup_1000 = Some(cell);
+        }
+    }
+
+    // Host-policy sweep at the mid fleet size (full mode only).
+    if !fast {
+        for policy in [HostPolicyKind::Lru, HostPolicyKind::Lfu] {
+            let cell = run_fleet(100, true, policy, duration);
+            rows.push(cell_row(100, true, policy, &cell));
+            cells_json.push(cell_json(100, true, policy, &cell));
+        }
+    }
+
+    // Dedup-goodput oracle: same 1000-model zipf stream and budget, with
+    // and without base sharing.
+    let dedup = dedup_1000.expect("1000-model cell swept above");
+    let full_form = run_fleet(1000, false, HostPolicyKind::WeightedCost, duration);
+    rows.push(cell_row(1000, false, HostPolicyKind::WeightedCost, &full_form));
+    cells_json.push(cell_json(1000, false, HostPolicyKind::WeightedCost, &full_form));
+    assert!(
+        dedup.goodput > full_form.goodput,
+        "dedup fleet must strictly beat full-form storage at 1000 models \
+         ({:.2} vs {:.2} req/s)",
+        dedup.goodput,
+        full_form.goodput
+    );
+    assert!(
+        dedup.host_delta_gb > 0.0,
+        "the 1000-model dedup fleet must stage some variants in delta form"
+    );
+    println!(
+        "dedup goodput at 1000 models: {:.2} req/s (delta) vs {:.2} req/s (full-form), \
+         host hit rate {:.1}% vs {:.1}%",
+        dedup.goodput,
+        full_form.goodput,
+        100.0 * dedup.hit_rate,
+        100.0 * full_form.hit_rate
+    );
+
+    table(
+        &[
+            "models",
+            "storage",
+            "policy",
+            "goodput (req/s)",
+            "attained",
+            "served",
+            "drops",
+            "host hit",
+            "evict",
+            "NVMe GB",
+            "host dGB",
+            "gpu dGB",
+            "hit s",
+            "miss s",
+        ],
+        &rows,
+    );
+    println!(
+        "\noracles held: exact delta bytes over resident bases, cold >> warm tier cost, \
+         budget respected, dedup goodput strictly ahead at 1000 models"
+    );
+
+    let payload = Json::from_pairs(vec![
+        ("experiment", "fleet_scale".into()),
+        ("duration", duration.into()),
+        ("fast", fast.into()),
+        ("host_budget", HOST_BUDGET.into()),
+        ("delta_fraction", DELTA_FRACTION.into()),
+        ("full_shard_bytes", full_max.into()),
+        ("delta_shard_bytes", eff_max.into()),
+        ("cold_swap_s", cold_s.into()),
+        ("warm_swap_s", warm_s.into()),
+        ("dedup_goodput", dedup.goodput.into()),
+        ("full_form_goodput", full_form.goodput.into()),
+        ("cells", Json::Arr(cells_json)),
+    ]);
+    common::save_report("fleet_scale", payload.clone());
+    common::save_bench_json("fleet_scale", payload);
+}

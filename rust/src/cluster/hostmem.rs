@@ -36,6 +36,35 @@ impl std::fmt::Display for PinnedOom {
 
 impl std::error::Error for PinnedOom {}
 
+/// Typed failure of [`PinnedPool::pin`]. Eviction loops (the host tier,
+/// DESIGN.md §12) unpin and re-pin tags continuously, so both failure
+/// modes must be recoverable values, never panics.
+#[derive(Debug, PartialEq)]
+pub enum PinError {
+    /// The tag is already pinned; unpin it first (shards pin once when a
+    /// model is registered or promoted).
+    AlreadyPinned { tag: String },
+    /// Pinning would exceed the pool budget.
+    Oom(PinnedOom),
+}
+
+impl std::fmt::Display for PinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PinError::AlreadyPinned { tag } => write!(f, "tag '{tag}' already pinned"),
+            PinError::Oom(oom) => oom.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for PinError {}
+
+impl From<PinnedOom> for PinError {
+    fn from(oom: PinnedOom) -> PinError {
+        PinError::Oom(oom)
+    }
+}
+
 impl PinnedPool {
     /// `budget` is the maximum bytes that may be pinned simultaneously.
     pub fn new(budget: usize) -> PinnedPool {
@@ -47,17 +76,31 @@ impl PinnedPool {
         PinnedPool::new(128_000_000_000)
     }
 
-    /// Pin `bytes` under `tag` (idempotent per tag: re-pinning the same tag
-    /// is an error — shards pin once when the model is registered).
-    pub fn pin(&mut self, tag: &str, bytes: usize) -> Result<(), PinnedOom> {
-        assert!(!self.allocs.contains_key(tag), "tag '{tag}' already pinned");
+    /// Pin `bytes` under `tag`. Re-pinning a live tag is a typed error
+    /// (`PinError::AlreadyPinned`), not a panic — shards pin once when a
+    /// model is registered, but eviction-driven callers probe freely.
+    pub fn pin(&mut self, tag: &str, bytes: usize) -> Result<(), PinError> {
+        if self.allocs.contains_key(tag) {
+            return Err(PinError::AlreadyPinned { tag: tag.to_string() });
+        }
         if self.used + bytes > self.budget {
-            return Err(PinnedOom { requested: bytes, used: self.used, budget: self.budget });
+            return Err(PinnedOom { requested: bytes, used: self.used, budget: self.budget }.into());
         }
         self.used += bytes;
         self.high_water = self.high_water.max(self.used);
         self.allocs.insert(tag.to_string(), bytes);
         Ok(())
+    }
+
+    /// Non-erroring form of [`PinnedPool::pin`]: returns whether the tag
+    /// is now pinned at `bytes`. A tag already pinned counts as success
+    /// only if its recorded size matches (idempotent re-pin); an
+    /// over-budget request leaves the pool untouched and returns false.
+    pub fn try_pin(&mut self, tag: &str, bytes: usize) -> bool {
+        match self.allocs.get(tag) {
+            Some(&b) => b == bytes,
+            None => self.pin(tag, bytes).is_ok(),
+        }
     }
 
     /// Unpin a tag, returning its size.
@@ -109,17 +152,43 @@ mod tests {
     fn budget_enforced() {
         let mut p = PinnedPool::new(1000);
         p.pin("a", 900).unwrap();
-        let err = p.pin("b", 200).unwrap_err();
-        assert_eq!(err.used, 900);
+        match p.pin("b", 200).unwrap_err() {
+            PinError::Oom(oom) => {
+                assert_eq!(oom.used, 900);
+                assert_eq!(oom.requested, 200);
+                assert_eq!(oom.budget, 1000);
+            }
+            other => panic!("expected Oom, got {other:?}"),
+        }
         assert_eq!(p.count(), 1);
     }
 
     #[test]
-    #[should_panic(expected = "already pinned")]
-    fn double_pin_same_tag_panics() {
+    fn double_pin_same_tag_is_typed_error() {
         let mut p = PinnedPool::new(1000);
         p.pin("a", 1).unwrap();
-        p.pin("a", 1).unwrap();
+        let err = p.pin("a", 1).unwrap_err();
+        assert_eq!(err, PinError::AlreadyPinned { tag: "a".to_string() });
+        // The pool is untouched: still one alloc of one byte.
+        assert_eq!(p.count(), 1);
+        assert_eq!(p.used(), 1);
+        // Eviction-style reuse: unpin then re-pin the same tag works.
+        assert_eq!(p.unpin("a"), Some(1));
+        p.pin("a", 2).unwrap();
+        assert_eq!(p.used(), 2);
+    }
+
+    #[test]
+    fn try_pin_is_idempotent_and_budget_safe() {
+        let mut p = PinnedPool::new(100);
+        assert!(p.try_pin("a", 60));
+        assert!(p.try_pin("a", 60), "same tag+size re-pin is success");
+        assert!(!p.try_pin("a", 50), "size mismatch on a live tag fails");
+        assert!(!p.try_pin("b", 60), "over budget fails without panicking");
+        assert_eq!(p.used(), 60);
+        assert_eq!(p.count(), 1);
+        assert!(p.try_pin("b", 40));
+        assert_eq!(p.used(), 100);
     }
 
     #[test]

@@ -1,0 +1,700 @@
+//! Host-memory hierarchy: a finite pinned-host cache over an NVMe tier
+//! (DESIGN.md §12).
+//!
+//! The paper assumes "large CPU memory" — every offloaded model is always
+//! warm in pinned host RAM. At fleet scale (hundreds to thousands of
+//! fine-tuned variants) that assumption breaks: pinned memory is a finite
+//! budget, and models that fall out of it must be re-staged from NVMe
+//! before the GPU link ever sees a byte. This module models that tier:
+//!
+//! - host residency is a read-through cache of immutable weights backed
+//!   by a durable NVMe store, accounted against a [`PinnedPool`] budget;
+//! - the NVMe→host link is one more α–β [`Link`] in the `cluster/link.rs`
+//!   idiom: a host-cold swap-in pays NVMe→host→GPU *in series*, pipelined
+//!   at chunk granularity (each H2D chunk is gated on its staging chunk);
+//! - eviction is policy-driven (`lru` / `lfu` / `weighted-cost`) behind a
+//!   named registry mirroring `coordinator/policy.rs`;
+//! - fine-tuned variants whose `base` is host-resident are stored (and
+//!   staged) in delta form, with refcounts so a base is never evicted
+//!   from under its resident dependents.
+//!
+//! Evictions are instant unpins: weights are immutable and the NVMe copy
+//! is the source of truth, so there is no write-back traffic.
+
+use crate::cluster::clock::SimTime;
+use crate::cluster::hostmem::PinnedPool;
+use crate::cluster::link::{Direction, Link, LinkModel};
+use crate::coordinator::entry::ModelId;
+
+/// Where a swap-in's bytes came from (per-swap tier provenance,
+/// surfaced on `SwapRecord`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SwapTier {
+    /// The model was warm in pinned host memory: host→GPU only — the
+    /// paper's baseline cost, and the only tier in runs without a host
+    /// config.
+    #[default]
+    HostHit,
+    /// The model was host-cold: NVMe→host staging ran in series before
+    /// (or pipelined chunk-by-chunk under) the host→GPU transfer.
+    NvmeMiss,
+}
+
+/// Host-eviction policy registry key (config string: `lru`, `lfu`,
+/// `weighted-cost`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HostPolicyKind {
+    #[default]
+    Lru,
+    Lfu,
+    /// Cost-aware: evict the entry with the least (frequency-weighted)
+    /// refetch cost per pinned byte — large, cheap-to-restage, rarely
+    /// used entries go first.
+    WeightedCost,
+}
+
+impl HostPolicyKind {
+    pub fn parse(s: &str) -> Option<HostPolicyKind> {
+        match s {
+            "lru" => Some(HostPolicyKind::Lru),
+            "lfu" => Some(HostPolicyKind::Lfu),
+            "weighted-cost" => Some(HostPolicyKind::WeightedCost),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HostPolicyKind::Lru => "lru",
+            HostPolicyKind::Lfu => "lfu",
+            HostPolicyKind::WeightedCost => "weighted-cost",
+        }
+    }
+
+    pub fn all() -> [HostPolicyKind; 3] {
+        [HostPolicyKind::Lru, HostPolicyKind::Lfu, HostPolicyKind::WeightedCost]
+    }
+}
+
+/// One evictable host entry offered to a policy: richer than the GPU
+/// replacement candidates because host eviction trades pinned bytes
+/// against NVMe refetch cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostCandidate {
+    pub model: ModelId,
+    /// Pinned bytes the eviction would free (delta entries free only
+    /// their delta).
+    pub bytes: usize,
+    /// Seconds to restage this entry from NVMe if it is needed again.
+    pub refetch_cost: f64,
+}
+
+/// Chooses which host-resident entry to unpin when admitting a new one
+/// would exceed the pinned budget. Mirrors
+/// `coordinator::policy::ReplacementPolicy`, with candidates carrying
+/// size and refetch cost.
+pub trait HostEvictionPolicy: Send {
+    /// `model` was fetched (hit or miss).
+    fn on_access(&mut self, model: ModelId, now: f64);
+
+    /// `model` became host-resident.
+    fn on_insert(&mut self, model: ModelId, now: f64);
+
+    /// `model` was evicted from the host tier.
+    fn on_evict(&mut self, model: ModelId);
+
+    /// Pick a victim among `candidates` (already filtered to evictable
+    /// entries). Returns `None` iff `candidates` is empty.
+    fn victim(&mut self, candidates: &[HostCandidate]) -> Option<ModelId>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Least-recently-fetched host entry goes first.
+pub struct HostLru {
+    last_access: Vec<f64>,
+}
+
+impl HostLru {
+    pub fn new(num_models: usize) -> HostLru {
+        HostLru { last_access: vec![f64::NEG_INFINITY; num_models] }
+    }
+}
+
+impl HostEvictionPolicy for HostLru {
+    fn on_access(&mut self, model: ModelId, now: f64) {
+        self.last_access[model] = now;
+    }
+
+    fn on_insert(&mut self, model: ModelId, now: f64) {
+        self.last_access[model] = self.last_access[model].max(now);
+    }
+
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[HostCandidate]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                self.last_access[a.model]
+                    .total_cmp(&self.last_access[b.model])
+                    .then(a.model.cmp(&b.model))
+            })
+            .map(|c| c.model)
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+/// Least-frequently-fetched host entry goes first.
+pub struct HostLfu {
+    counts: Vec<u64>,
+}
+
+impl HostLfu {
+    pub fn new(num_models: usize) -> HostLfu {
+        HostLfu { counts: vec![0; num_models] }
+    }
+}
+
+impl HostEvictionPolicy for HostLfu {
+    fn on_access(&mut self, model: ModelId, _now: f64) {
+        self.counts[model] += 1;
+    }
+
+    fn on_insert(&mut self, _model: ModelId, _now: f64) {}
+
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[HostCandidate]) -> Option<ModelId> {
+        candidates.iter().min_by_key(|c| (self.counts[c.model], c.model)).map(|c| c.model)
+    }
+
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+}
+
+/// GreedyDual-style weighted cost: evict the entry minimizing
+/// `(accesses + 1) · refetch_cost / bytes` — the least re-staging pain
+/// bought back per pinned byte freed. Deterministic tie-break by id.
+pub struct HostWeightedCost {
+    counts: Vec<u64>,
+}
+
+impl HostWeightedCost {
+    pub fn new(num_models: usize) -> HostWeightedCost {
+        HostWeightedCost { counts: vec![0; num_models] }
+    }
+}
+
+impl HostEvictionPolicy for HostWeightedCost {
+    fn on_access(&mut self, model: ModelId, _now: f64) {
+        self.counts[model] += 1;
+    }
+
+    fn on_insert(&mut self, _model: ModelId, _now: f64) {}
+
+    fn on_evict(&mut self, _model: ModelId) {}
+
+    fn victim(&mut self, candidates: &[HostCandidate]) -> Option<ModelId> {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                let score = |c: &HostCandidate| {
+                    (self.counts[c.model] + 1) as f64 * c.refetch_cost
+                        / (c.bytes.max(1)) as f64
+                };
+                score(a).total_cmp(&score(b)).then(a.model.cmp(&b.model))
+            })
+            .map(|c| c.model)
+    }
+
+    fn name(&self) -> &'static str {
+        "weighted-cost"
+    }
+}
+
+/// Construct a host-eviction policy from its registry key.
+pub fn make_host_policy(kind: HostPolicyKind, num_models: usize) -> Box<dyn HostEvictionPolicy> {
+    match kind {
+        HostPolicyKind::Lru => Box::new(HostLru::new(num_models)),
+        HostPolicyKind::Lfu => Box::new(HostLfu::new(num_models)),
+        HostPolicyKind::WeightedCost => Box::new(HostWeightedCost::new(num_models)),
+    }
+}
+
+/// Host-tier counters for the run report (all zero and `PartialEq`-equal
+/// to default in runs that never miss).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HostTierStats {
+    /// Swap-ins served from pinned host memory.
+    pub hits: u64,
+    /// Swap-ins that had to stage from NVMe first.
+    pub misses: u64,
+    /// Host entries unpinned to make room.
+    pub evictions: u64,
+    /// Misses that could not be admitted even after eviction (streamed
+    /// through without becoming host-resident).
+    pub overflows: u64,
+    /// Bytes read from the NVMe tier.
+    pub nvme_bytes: u64,
+    /// NVMe bytes *not* read because a variant staged in delta form over
+    /// its host-resident base.
+    pub delta_bytes_saved: u64,
+}
+
+/// Outcome of one tier fetch: where the bytes were, and per-chunk
+/// earliest H2D start times (staging completions; empty = ungated).
+#[derive(Clone, Debug)]
+pub struct FetchOutcome {
+    pub tier: SwapTier,
+    pub gates: Vec<SimTime>,
+    /// The fetch staged (or found) a delta-form host entry.
+    pub host_delta: bool,
+}
+
+/// End-of-run snapshot of one host tier (`SimReport::host`).
+#[derive(Clone, Debug)]
+pub struct HostTierReport {
+    /// The group this tier serves; `None` for the cluster-shared tier.
+    pub group: Option<usize>,
+    /// Eviction-policy registry name (`lru` / `lfu` / `weighted-cost`).
+    pub policy: &'static str,
+    /// Pinned budget, bytes.
+    pub budget: usize,
+    /// Pinned bytes at sim end.
+    pub used: usize,
+    /// Pinned high-water mark over the run, bytes.
+    pub high_water: usize,
+    /// Host-resident entries at sim end.
+    pub resident_models: usize,
+    pub stats: HostTierStats,
+}
+
+impl HostTierReport {
+    /// Fraction of tier fetches served host-warm (1.0 when none ran).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.stats.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The finite pinned-host tier over NVMe for one scope (one engine group,
+/// or the whole cluster when shared). Indexed by catalog model id.
+pub struct HostTier {
+    pool: PinnedPool,
+    policy: Box<dyn HostEvictionPolicy>,
+    /// NVMe→host staging link; reads serialize on its H2D lane.
+    nvme: Link,
+    /// Per-model direct base (already cycle-checked by config validation).
+    bases: Vec<Option<ModelId>>,
+    /// Full host footprint per model (all parameters).
+    full_bytes: Vec<usize>,
+    /// Delta footprint per model (== `full_bytes` without a base).
+    delta_bytes: Vec<usize>,
+    resident: Vec<bool>,
+    /// The resident entry is delta-form (holds a ref on its base).
+    entry_is_delta: Vec<bool>,
+    /// Resident delta entries currently depending on this model.
+    host_refs: Vec<u32>,
+    stats: HostTierStats,
+}
+
+impl HostTier {
+    /// `full_bytes[m]` / `delta_bytes[m]` are model `m`'s host footprints
+    /// in full and delta form; `bases[m]` its resolved base, if any.
+    pub fn new(
+        budget: usize,
+        kind: HostPolicyKind,
+        nvme: LinkModel,
+        bases: Vec<Option<ModelId>>,
+        full_bytes: Vec<usize>,
+        delta_bytes: Vec<usize>,
+    ) -> HostTier {
+        let n = full_bytes.len();
+        assert_eq!(bases.len(), n);
+        assert_eq!(delta_bytes.len(), n);
+        HostTier {
+            pool: PinnedPool::new(budget),
+            policy: make_host_policy(kind, n),
+            nvme: Link::new(nvme),
+            bases,
+            full_bytes,
+            delta_bytes,
+            resident: vec![false; n],
+            entry_is_delta: vec![false; n],
+            host_refs: vec![0; n],
+            stats: HostTierStats::default(),
+        }
+    }
+
+    fn tag(model: ModelId) -> String {
+        format!("m{model}")
+    }
+
+    pub fn is_resident(&self, model: ModelId) -> bool {
+        self.resident[model]
+    }
+
+    pub fn stats(&self) -> HostTierStats {
+        self.stats
+    }
+
+    /// Snapshot this tier for the run report.
+    pub fn report(&self, group: Option<usize>) -> HostTierReport {
+        HostTierReport {
+            group,
+            policy: self.policy.name(),
+            budget: self.pool.budget(),
+            used: self.pool.used(),
+            high_water: self.pool.high_water(),
+            resident_models: self.pool.count(),
+            stats: self.stats,
+        }
+    }
+
+    pub fn pool(&self) -> &PinnedPool {
+        &self.pool
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Resident entries (for occupancy reporting).
+    pub fn resident_count(&self) -> usize {
+        self.pool.count()
+    }
+
+    /// Pinned bytes the entry for `model` occupies (or would occupy) in
+    /// its current admissible form.
+    fn entry_bytes(&self, model: ModelId) -> usize {
+        if self.entry_is_delta[model] { self.delta_bytes[model] } else { self.full_bytes[model] }
+    }
+
+    /// Unpin one entry (caller guarantees it is resident & unreferenced).
+    fn evict(&mut self, model: ModelId) {
+        debug_assert!(self.resident[model] && self.host_refs[model] == 0);
+        self.pool.unpin(&Self::tag(model));
+        self.resident[model] = false;
+        if self.entry_is_delta[model] {
+            let base = self.bases[model].expect("delta entry without base");
+            self.host_refs[base] -= 1;
+            self.entry_is_delta[model] = false;
+        }
+        self.policy.on_evict(model);
+        self.stats.evictions += 1;
+    }
+
+    /// Evict until `need` more bytes fit, or no candidate remains.
+    /// Candidates: host-resident, no dependent delta entries, not the
+    /// model being admitted or its base, and `evictable` (the caller
+    /// excludes GPU-resident models — an offload must always find its
+    /// host copy, and eviction here has no writeback to model).
+    fn make_room(&mut self, model: ModelId, need: usize, evictable: &dyn Fn(ModelId) -> bool) -> bool {
+        while self.pool.used() + need > self.pool.budget() {
+            let base = self.bases[model];
+            let candidates: Vec<HostCandidate> = (0..self.resident.len())
+                .filter(|&m| {
+                    self.resident[m]
+                        && self.host_refs[m] == 0
+                        && m != model
+                        && Some(m) != base
+                        && evictable(m)
+                })
+                .map(|m| {
+                    let bytes = self.entry_bytes(m);
+                    HostCandidate {
+                        model: m,
+                        bytes,
+                        refetch_cost: self.nvme.model.transfer_time(1, bytes),
+                    }
+                })
+                .collect();
+            match self.policy.victim(&candidates) {
+                Some(v) => self.evict(v),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Stage `bytes` from NVMe in `chunks` back-to-back reads starting at
+    /// `now`; returns the per-chunk completion times (the H2D gates).
+    fn stage(&mut self, now: SimTime, bytes: usize, chunks: usize) -> Vec<SimTime> {
+        let chunks = chunks.max(1);
+        let mut gates = Vec::with_capacity(chunks);
+        let mut prev = 0usize;
+        for k in 1..=chunks {
+            let cum = bytes * k / chunks;
+            gates.push(self.nvme.transfer(now, Direction::H2D, 1, cum - prev));
+            prev = cum;
+        }
+        self.stats.nvme_bytes += bytes as u64;
+        gates
+    }
+
+    /// A swap-in of `model` is starting at `now` with an H2D plan of
+    /// `chunks` chunks. On a host hit this is free (empty gates); on a
+    /// miss the entry is admitted (evicting per policy under the budget)
+    /// and staged from NVMe — chunk `k`'s gate is its staging completion,
+    /// so the H2D pipeline chases the NVMe reads exactly like compute
+    /// chases H2D chunks. If admission fails even after eviction, the
+    /// bytes stream through without becoming resident (counted in
+    /// `overflows`).
+    pub fn fetch(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        chunks: usize,
+        evictable: &dyn Fn(ModelId) -> bool,
+    ) -> FetchOutcome {
+        self.policy.on_access(model, now);
+        if self.resident[model] {
+            self.stats.hits += 1;
+            return FetchOutcome {
+                tier: SwapTier::HostHit,
+                gates: Vec::new(),
+                host_delta: self.entry_is_delta[model],
+            };
+        }
+        self.stats.misses += 1;
+        // Delta-form admission: only when the base is host-resident at
+        // fetch time (the delta applies against the warm base copy).
+        let delta = match self.bases[model] {
+            Some(b) if self.resident[b] => true,
+            _ => false,
+        };
+        let bytes = if delta { self.delta_bytes[model] } else { self.full_bytes[model] };
+        if self.make_room(model, bytes, evictable) {
+            self.pool.pin(&Self::tag(model), bytes).expect("make_room guaranteed fit");
+            self.resident[model] = true;
+            self.entry_is_delta[model] = delta;
+            if delta {
+                self.host_refs[self.bases[model].unwrap()] += 1;
+                self.stats.delta_bytes_saved +=
+                    (self.full_bytes[model] - self.delta_bytes[model]) as u64;
+            }
+            self.policy.on_insert(model, now);
+        } else {
+            self.stats.overflows += 1;
+        }
+        let gates = self.stage(now, bytes, chunks);
+        FetchOutcome { tier: SwapTier::NvmeMiss, gates, host_delta: delta }
+    }
+
+    /// Admit `model` full-form without staging cost (an offload is about
+    /// to drain into the tier and the entry fell out while the model was
+    /// on GPU — only reachable when a preload overflowed the budget).
+    /// Returns whether the entry is now resident.
+    pub fn admit(&mut self, model: ModelId, now: SimTime, evictable: &dyn Fn(ModelId) -> bool) -> bool {
+        if self.resident[model] {
+            return true;
+        }
+        let bytes = self.full_bytes[model];
+        if !self.make_room(model, bytes, evictable) {
+            self.stats.overflows += 1;
+            return false;
+        }
+        self.pool.pin(&Self::tag(model), bytes).expect("make_room guaranteed fit");
+        self.resident[model] = true;
+        self.entry_is_delta[model] = false;
+        self.policy.on_insert(model, now);
+        true
+    }
+
+    /// Seed initial host residency without NVMe cost or eviction (warm
+    /// starts and GPU preloads): pin in the given order, delta-form when
+    /// the base is already resident; entries that do not fit stay cold.
+    pub fn seed(&mut self, models: impl IntoIterator<Item = ModelId>) {
+        for m in models {
+            if self.resident[m] {
+                continue;
+            }
+            let delta = matches!(self.bases[m], Some(b) if self.resident[b]);
+            let bytes = if delta { self.delta_bytes[m] } else { self.full_bytes[m] };
+            if self.pool.pin(&Self::tag(m), bytes).is_ok() {
+                self.resident[m] = true;
+                self.entry_is_delta[m] = delta;
+                if delta {
+                    self.host_refs[self.bases[m].unwrap()] += 1;
+                }
+                self.policy.on_insert(m, 0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nvme() -> LinkModel {
+        LinkModel { alpha: 0.0, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY }
+    }
+
+    fn tier(budget: usize, kind: HostPolicyKind) -> HostTier {
+        // Three standalone 100-byte models.
+        HostTier::new(budget, kind, nvme(), vec![None; 3], vec![100; 3], vec![100; 3])
+    }
+
+    #[test]
+    fn hit_is_free_miss_stages_from_nvme() {
+        let mut t = tier(300, HostPolicyKind::Lru);
+        let all = |_m: ModelId| true;
+        let out = t.fetch(0, 0.0, 1, &all);
+        assert_eq!(out.tier, SwapTier::NvmeMiss);
+        assert_eq!(out.gates, vec![1.0], "100 B / 100 B/s staged in one read");
+        let out = t.fetch(0, 2.0, 1, &all);
+        assert_eq!(out.tier, SwapTier::HostHit);
+        assert!(out.gates.is_empty());
+        assert_eq!(t.stats().hits, 1);
+        assert_eq!(t.stats().misses, 1);
+        assert_eq!(t.stats().nvme_bytes, 100);
+    }
+
+    #[test]
+    fn chunked_staging_pipelines_and_conserves_bytes() {
+        let mut t = tier(300, HostPolicyKind::Lru);
+        let out = t.fetch(0, 0.0, 4, &|_| true);
+        assert_eq!(out.gates.len(), 4);
+        assert!((out.gates[0] - 0.25).abs() < 1e-9, "first chunk stages early");
+        assert!((out.gates[3] - 1.0).abs() < 1e-9, "chunking is free on the α–β lane");
+        assert_eq!(t.stats().nvme_bytes, 100);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_under_budget() {
+        let mut t = tier(200, HostPolicyKind::Lru);
+        let all = |_m: ModelId| true;
+        t.fetch(0, 0.0, 1, &all);
+        t.fetch(1, 1.0, 1, &all);
+        t.fetch(0, 2.0, 1, &all); // refresh 0
+        t.fetch(2, 3.0, 1, &all); // must evict 1 (least recent)
+        assert!(t.is_resident(0) && !t.is_resident(1) && t.is_resident(2));
+        assert_eq!(t.stats().evictions, 1);
+    }
+
+    #[test]
+    fn gpu_resident_entries_are_not_evictable() {
+        let mut t = tier(200, HostPolicyKind::Lru);
+        t.fetch(0, 0.0, 1, &|_| true);
+        t.fetch(1, 1.0, 1, &|_| true);
+        // 0 is "on GPU": the only evictable candidate is 1.
+        let out = t.fetch(2, 2.0, 1, &|m| m != 0);
+        assert_eq!(out.tier, SwapTier::NvmeMiss);
+        assert!(t.is_resident(0) && !t.is_resident(1) && t.is_resident(2));
+    }
+
+    #[test]
+    fn overflow_streams_through_without_residency() {
+        let mut t = tier(100, HostPolicyKind::Lru);
+        t.fetch(0, 0.0, 1, &|_| true);
+        // Nothing evictable: 0 is pinned on GPU.
+        let out = t.fetch(1, 1.0, 1, &|_| false);
+        assert_eq!(out.tier, SwapTier::NvmeMiss);
+        assert!(!out.gates.is_empty(), "streamed bytes still pay NVMe time");
+        assert!(!t.is_resident(1));
+        assert_eq!(t.stats().overflows, 1);
+        // And the next access misses again.
+        let out = t.fetch(1, 5.0, 1, &|_| false);
+        assert_eq!(out.tier, SwapTier::NvmeMiss);
+    }
+
+    #[test]
+    fn delta_entry_refs_base_and_saves_nvme_bytes() {
+        // Model 1 is a variant of base 0: full 100, delta 20.
+        let mut t = HostTier::new(
+            1000,
+            HostPolicyKind::Lru,
+            nvme(),
+            vec![None, Some(0)],
+            vec![100, 100],
+            vec![100, 20],
+        );
+        let all = |_m: ModelId| true;
+        t.fetch(0, 0.0, 1, &all);
+        let out = t.fetch(1, 2.0, 1, &all);
+        assert!(out.host_delta);
+        assert!((out.gates[0] - 2.2).abs() < 1e-9, "only 20 delta bytes staged");
+        assert_eq!(t.stats().delta_bytes_saved, 80);
+        assert_eq!(t.pool().used(), 120, "base full + variant delta pinned");
+    }
+
+    #[test]
+    fn base_with_resident_dependents_never_evicted() {
+        // 0 = base (100 B), 1 = delta variant (20 B over 0), 2 = small
+        // standalone (30 B). Budget 140 fits base+delta but not all three.
+        let mut t = HostTier::new(
+            140,
+            HostPolicyKind::Lru,
+            nvme(),
+            vec![None, Some(0), None],
+            vec![100, 100, 30],
+            vec![100, 20, 30],
+        );
+        let all = |_m: ModelId| true;
+        t.fetch(0, 0.0, 1, &all);
+        t.fetch(1, 1.0, 1, &all); // delta over base; refs base
+        // Admitting 2 needs 30 bytes; base 0 is LRU-oldest but referenced
+        // — only the delta entry 1 is evictable.
+        t.fetch(2, 2.0, 1, &all);
+        assert!(t.is_resident(0), "referenced base survives");
+        assert!(!t.is_resident(1), "the dependent delta was the victim");
+        assert!(t.is_resident(2));
+        assert_eq!(t.stats().evictions, 1);
+        // Re-admitting the variant may not evict its own base either: 2 is
+        // the only candidate even though 0 is older and now unreferenced.
+        t.fetch(1, 3.0, 1, &all);
+        assert!(t.is_resident(0) && t.is_resident(1) && !t.is_resident(2));
+    }
+
+    #[test]
+    fn weighted_cost_prefers_cheap_refetch_per_byte() {
+        // Model 0: 100 bytes; model 1: 400 bytes. Same access counts.
+        // weighted-cost evicts the one with less refetch pain per pinned
+        // byte — refetch scales linearly here, so score ties on cost/byte
+        // and the id tie-break picks 0; an extra access on 0 flips it.
+        let mut t = HostTier::new(
+            500,
+            HostPolicyKind::WeightedCost,
+            nvme(),
+            vec![None, None, None],
+            vec![100, 400, 100],
+            vec![100, 400, 100],
+        );
+        let all = |_m: ModelId| true;
+        t.fetch(0, 0.0, 1, &all);
+        t.fetch(1, 1.0, 1, &all);
+        t.fetch(0, 2.0, 1, &all);
+        t.fetch(0, 3.0, 1, &all);
+        t.fetch(2, 4.0, 1, &all); // needs 100: evicts 1 (fewer accesses)
+        assert!(t.is_resident(0) && !t.is_resident(1) && t.is_resident(2));
+    }
+
+    #[test]
+    fn seed_pins_until_full_then_leaves_cold() {
+        let mut t = tier(250, HostPolicyKind::Lru);
+        t.seed(0..3);
+        assert!(t.is_resident(0) && t.is_resident(1));
+        assert!(!t.is_resident(2), "third 100-byte entry does not fit 250");
+        assert_eq!(t.stats().nvme_bytes, 0, "seeding is free");
+        assert_eq!(t.pool().high_water(), 200);
+    }
+
+    #[test]
+    fn policy_registry_names_roundtrip() {
+        for kind in HostPolicyKind::all() {
+            assert_eq!(HostPolicyKind::parse(kind.name()), Some(kind));
+            assert_eq!(make_host_policy(kind, 4).name(), kind.name());
+        }
+        assert_eq!(HostPolicyKind::parse("nope"), None);
+    }
+}

@@ -11,6 +11,7 @@ pub mod compute;
 pub mod fault;
 pub mod gpu;
 pub mod hostmem;
+pub mod hosttier;
 pub mod link;
 pub mod stream;
 
@@ -18,6 +19,10 @@ pub use clock::{EventQueue, QueueBackend, SimTime};
 pub use compute::ComputeModel;
 pub use fault::{AutoscalePolicy, FaultAction, FaultEvent, FaultKind, FaultPlan, RetryPolicy};
 pub use gpu::{GpuDevice, MemTracker};
-pub use hostmem::PinnedPool;
+pub use hostmem::{PinError, PinnedPool};
+pub use hosttier::{
+    make_host_policy, FetchOutcome, HostCandidate, HostEvictionPolicy, HostPolicyKind, HostTier,
+    HostTierReport, HostTierStats, SwapTier,
+};
 pub use link::{Direction, Link, LinkModel};
 pub use stream::Stream;

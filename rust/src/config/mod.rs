@@ -17,6 +17,7 @@
 
 use crate::cluster::compute::ComputeModel;
 use crate::cluster::fault::FaultPlan;
+use crate::cluster::hosttier::HostPolicyKind;
 use crate::cluster::link::LinkModel;
 use crate::model::{catalog, spec::ModelSpec};
 use crate::util::json::Json;
@@ -331,13 +332,30 @@ pub struct ModelDeployment {
     /// traffic of a share-1.0 entry under every scenario shape. 1.0 (the
     /// default) is the homogeneous fleet's uniform share.
     pub rate_share: f64,
+    /// This entry is a fine-tuned *variant* of another catalog entry
+    /// (named by its `model` field; resolved to the first other entry
+    /// with that architecture by `SystemConfig::resolved_bases`). When
+    /// the base's weights are resident on the relevant tier, swapping
+    /// this entry in moves only its delta bytes (DESIGN.md §12).
+    /// `None` (the default) is a standalone deployment.
+    pub base: Option<String>,
+    /// Fraction of this entry's parameters its fine-tune touched, in
+    /// (0, 1]. Only meaningful with `base`; must stay at 1.0 without one.
+    pub delta_fraction: f64,
 }
 
 impl ModelDeployment {
     /// A deployment of `model` with default attributes (no SLO, neutral
     /// weight, uniform rate share).
     pub fn new(model: impl Into<String>) -> ModelDeployment {
-        ModelDeployment { model: model.into(), slo: None, weight: 1.0, rate_share: 1.0 }
+        ModelDeployment {
+            model: model.into(),
+            slo: None,
+            weight: 1.0,
+            rate_share: 1.0,
+            base: None,
+            delta_fraction: 1.0,
+        }
     }
 
     /// Builder-style SLO.
@@ -355,6 +373,15 @@ impl ModelDeployment {
     /// Builder-style arrival-rate share.
     pub fn with_rate_share(mut self, rate_share: f64) -> ModelDeployment {
         self.rate_share = rate_share;
+        self
+    }
+
+    /// Builder-style fine-tune lineage: this entry is a variant of the
+    /// catalog entry whose `model` is `base`, touching `delta_fraction`
+    /// of its parameters.
+    pub fn with_base(mut self, base: impl Into<String>, delta_fraction: f64) -> ModelDeployment {
+        self.base = Some(base.into());
+        self.delta_fraction = delta_fraction;
         self
     }
 
@@ -393,6 +420,20 @@ impl ModelDeployment {
         if let Some(v) = num("rate_share")? {
             d.rate_share = v;
         }
+        if let Some(b) = j.get("base") {
+            d.base = Some(
+                b.as_str()
+                    .ok_or_else(|| {
+                        ConfigError::Json(format!(
+                            "catalog entry '{name}': `base` must be a model name string"
+                        ))
+                    })?
+                    .to_string(),
+            );
+        }
+        if let Some(v) = num("delta_fraction")? {
+            d.delta_fraction = v;
+        }
         Ok(d)
     }
 
@@ -408,6 +449,12 @@ impl ModelDeployment {
         }
         if self.rate_share != 1.0 {
             j.set("rate_share", self.rate_share.into());
+        }
+        if let Some(b) = &self.base {
+            j.set("base", b.as_str().into());
+        }
+        if self.delta_fraction != 1.0 {
+            j.set("delta_fraction", self.delta_fraction.into());
         }
         j
     }
@@ -870,6 +917,121 @@ impl PlannerConfig {
     }
 }
 
+/// Host-memory hierarchy configuration (DESIGN.md §12): a finite
+/// pinned-host tier (backed by `PinnedPool`) with an NVMe tier below it,
+/// modeled as one more α–β link. `SystemConfig::host = None` is the
+/// paper's infinite-warm-host assumption — every model always host
+/// resident, bit-for-bit the pre-tier simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostConfig {
+    /// Pinned-host budget in bytes per tier instance (per group, or for
+    /// the whole cluster when `shared`).
+    pub budget: usize,
+    /// Host-eviction policy (`lru` / `lfu` / `weighted-cost`), from the
+    /// `cluster::hosttier` registry.
+    pub policy: HostPolicyKind,
+    /// `true`: one tier shared by every group; `false` (default): one
+    /// independent tier (and budget) per placement group.
+    pub shared: bool,
+    /// NVMe read link per-op latency, seconds.
+    pub nvme_alpha: f64,
+    /// NVMe read bandwidth, bytes/second.
+    pub nvme_bandwidth: f64,
+    /// Seed host residency at t = 0 in catalog order until the budget is
+    /// full (delta-form where a base is already seeded); `false` starts
+    /// every model NVMe-cold except GPU-preloaded ones.
+    pub warm_start: bool,
+}
+
+impl Default for HostConfig {
+    /// Perlmutter-like defaults: the documented 128 GB pinned budget over
+    /// a ~7 GB/s NVMe read path with ~100 µs per-op latency.
+    fn default() -> HostConfig {
+        HostConfig {
+            budget: 128_000_000_000,
+            policy: HostPolicyKind::Lru,
+            shared: false,
+            nvme_alpha: 100e-6,
+            nvme_bandwidth: 7.0e9,
+            warm_start: false,
+        }
+    }
+}
+
+impl HostConfig {
+    /// The NVMe→host staging link model (pinned destination: no extra
+    /// staging copy — the pool IS the pinned buffer).
+    pub fn nvme_link(&self) -> LinkModel {
+        LinkModel {
+            alpha: self.nvme_alpha,
+            bandwidth: self.nvme_bandwidth,
+            pageable_copy_bw: f64::INFINITY,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("budget", self.budget.into()),
+            ("policy", self.policy.name().into()),
+            ("shared", self.shared.into()),
+            ("nvme_alpha", self.nvme_alpha.into()),
+            ("nvme_bandwidth", self.nvme_bandwidth.into()),
+            ("warm_start", self.warm_start.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<HostConfig, ConfigError> {
+        let bad = |m: String| ConfigError::BadHost(m);
+        let mut h = HostConfig::default();
+        if let Some(v) = j.get("budget") {
+            let b = v
+                .as_f64()
+                .ok_or_else(|| bad("`budget` must be a number of bytes".into()))?;
+            if !(b.is_finite() && b >= 0.0) {
+                return Err(bad(format!("`budget` must be finite and >= 0, got {b}")));
+            }
+            h.budget = b as usize;
+        }
+        if let Some(s) = j.get("policy").and_then(Json::as_str) {
+            h.policy = HostPolicyKind::parse(s)
+                .ok_or_else(|| bad(format!("unknown host policy '{s}' (lru/lfu/weighted-cost)")))?;
+        }
+        if let Some(v) = j.get("shared").and_then(Json::as_bool) {
+            h.shared = v;
+        }
+        if let Some(v) = j.get("nvme_alpha").and_then(Json::as_f64) {
+            h.nvme_alpha = v;
+        }
+        if let Some(v) = j.get("nvme_bandwidth").and_then(Json::as_f64) {
+            h.nvme_bandwidth = v;
+        }
+        if let Some(v) = j.get("warm_start").and_then(Json::as_bool) {
+            h.warm_start = v;
+        }
+        Ok(h)
+    }
+
+    /// Structural validation (`SystemConfig::validate` calls this; base
+    /// resolution is validated separately since `base` works without a
+    /// host tier).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |m: String| Err(ConfigError::BadHost(m));
+        if self.budget == 0 {
+            return bad("budget must be > 0 bytes of pinned host memory".into());
+        }
+        if !(self.nvme_alpha.is_finite() && self.nvme_alpha >= 0.0) {
+            return bad(format!("nvme_alpha must be finite and >= 0, got {}", self.nvme_alpha));
+        }
+        if !(self.nvme_bandwidth.is_finite() && self.nvme_bandwidth > 0.0) {
+            return bad(format!(
+                "nvme_bandwidth must be finite and positive, got {}",
+                self.nvme_bandwidth
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -896,6 +1058,11 @@ pub struct SystemConfig {
     /// queue-depth autoscaler. `None` (and `Some(FaultPlan::none())`)
     /// reproduce the fault-free simulator bit-for-bit.
     pub faults: Option<FaultPlan>,
+    /// Host-memory hierarchy (DESIGN.md §12): finite pinned-host tier +
+    /// NVMe below, with policy-driven host eviction and delta staging.
+    /// `None` is the paper's infinite-warm-host assumption — bit-for-bit
+    /// the pre-tier simulator.
+    pub host: Option<HostConfig>,
 }
 
 #[derive(Debug)]
@@ -916,6 +1083,7 @@ pub enum ConfigError {
     BadPlacement(String),
     BadPlanner(String),
     BadFaults(String),
+    BadHost(String),
     /// The configuration requests a feature that only the simulator
     /// implements — real serving (`serve`) must reject it up front
     /// instead of each call site improvising its own error.
@@ -958,6 +1126,7 @@ impl std::fmt::Display for ConfigError {
             ConfigError::BadPlacement(m) => write!(f, "bad placement: {m}"),
             ConfigError::BadPlanner(m) => write!(f, "bad planner config: {m}"),
             ConfigError::BadFaults(m) => write!(f, "bad fault plan: {m}"),
+            ConfigError::BadHost(m) => write!(f, "bad host tier: {m}"),
             ConfigError::SimulatorOnly(feature) => write!(
                 f,
                 "{feature} is simulator-only for now; drop it from the config (or run \
@@ -998,6 +1167,7 @@ impl SystemConfig {
             scenario: None,
             placement: None,
             faults: None,
+            host: None,
         }
     }
 
@@ -1015,6 +1185,7 @@ impl SystemConfig {
             scenario: None,
             placement: None,
             faults: None,
+            host: None,
         }
     }
 
@@ -1036,6 +1207,7 @@ impl SystemConfig {
             scenario: None,
             placement: None,
             faults: None,
+            host: None,
         }
     }
 
@@ -1100,6 +1272,66 @@ impl SystemConfig {
             .collect()
     }
 
+    /// Resolve each catalog entry's `base` name to a catalog index: the
+    /// first *other* entry whose `model` matches. Errors
+    /// ([`ConfigError::BadHost`]) on an unresolvable name, a
+    /// `delta_fraction` outside (0, 1], a fraction without a base, or a
+    /// base cycle. Entries without `base` resolve to `None`.
+    pub fn resolved_bases(&self) -> Result<Vec<Option<usize>>, ConfigError> {
+        let bad = |m: String| ConfigError::BadHost(m);
+        let n = self.models.len();
+        let mut bases: Vec<Option<usize>> = vec![None; n];
+        for (i, d) in self.models.iter().enumerate() {
+            if !(d.delta_fraction.is_finite()
+                && d.delta_fraction > 0.0
+                && d.delta_fraction <= 1.0)
+            {
+                return Err(bad(format!(
+                    "entry {i} ({}): delta_fraction must be in (0, 1], got {}",
+                    d.model, d.delta_fraction
+                )));
+            }
+            if let Some(name) = &d.base {
+                let j = self
+                    .models
+                    .iter()
+                    .enumerate()
+                    .find(|(j, o)| *j != i && o.model == *name)
+                    .map(|(j, _)| j)
+                    .ok_or_else(|| {
+                        bad(format!(
+                            "entry {i} ({}): base '{name}' does not name another catalog entry",
+                            d.model
+                        ))
+                    })?;
+                bases[i] = Some(j);
+            } else if d.delta_fraction != 1.0 {
+                return Err(bad(format!(
+                    "entry {i} ({}): delta_fraction {} without a base",
+                    d.model, d.delta_fraction
+                )));
+            }
+        }
+        // Reject base cycles: every lineage chain must terminate at a
+        // standalone entry within n hops.
+        for start in 0..n {
+            let mut cur = start;
+            for _ in 0..n {
+                match bases[cur] {
+                    Some(next) => cur = next,
+                    None => break,
+                }
+            }
+            if bases[cur].is_some() {
+                return Err(bad(format!(
+                    "entry {start} ({}): base lineage forms a cycle",
+                    self.models[start].model
+                )));
+            }
+        }
+        Ok(bases)
+    }
+
     /// The effective cluster placement: the configured one, or the legacy
     /// single-group shim (one group on `parallel` hosting every catalog
     /// entry) when none is set.
@@ -1148,6 +1380,10 @@ impl SystemConfig {
             }
         }
         self.models.validate_attributes()?;
+        self.resolved_bases()?;
+        if let Some(h) = &self.host {
+            h.validate()?;
+        }
         if let Some(plan) = &self.faults {
             plan.validate(placement.groups.len()).map_err(ConfigError::BadFaults)?;
         }
@@ -1223,6 +1459,16 @@ impl SystemConfig {
                 "fault injection (`faults`)".into(),
             ));
         }
+        if self.host.is_some() {
+            return Err(ConfigError::SimulatorOnly(
+                "the host-memory hierarchy (`host`)".into(),
+            ));
+        }
+        if self.models.iter().any(|d| d.base.is_some()) {
+            return Err(ConfigError::SimulatorOnly(
+                "delta swapping (catalog `base` entries)".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -1265,6 +1511,9 @@ impl SystemConfig {
         }
         if let Some(plan) = &self.faults {
             j.set("faults", plan.to_json());
+        }
+        if let Some(h) = &self.host {
+            j.set("host", h.to_json());
         }
         j
     }
@@ -1339,6 +1588,7 @@ impl SystemConfig {
             scenario: None,
             placement: None,
             faults: None,
+            host: None,
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
@@ -1375,6 +1625,9 @@ impl SystemConfig {
         }
         if let Some(fj) = j.get("faults") {
             cfg.faults = Some(FaultPlan::from_json(fj).map_err(ConfigError::BadFaults)?);
+        }
+        if let Some(hj) = j.get("host") {
+            cfg.host = Some(HostConfig::from_json(hj)?);
         }
         if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
             cfg.hardware.gpu_mem = v;
@@ -1952,5 +2205,112 @@ mod tests {
             kind: FaultKind::GroupFail { group: 0 },
         });
         assert!(matches!(faulty.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+        // Host tier and delta swapping are simulator-only too.
+        let mut hosted = cfg.clone();
+        hosted.host = Some(HostConfig::default());
+        assert!(matches!(hosted.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+        let mut varianted = cfg.clone();
+        varianted.models.entries[1] = ModelDeployment::new("opt-13b").with_base("opt-13b", 0.1);
+        assert!(matches!(varianted.validate_serve(), Err(ConfigError::SimulatorOnly(_))));
+    }
+
+    #[test]
+    fn host_config_json_roundtrip_and_defaults() {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.host = Some(HostConfig {
+            budget: 60_000_000_000,
+            policy: HostPolicyKind::WeightedCost,
+            shared: true,
+            nvme_alpha: 50e-6,
+            nvme_bandwidth: 3.5e9,
+            warm_start: true,
+        });
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.host, cfg.host);
+        // An empty host object takes every documented default.
+        let j = Json::parse(r#"{"model":"opt-13b","num_models":2,"tp":1,"pp":1,"host":{}}"#)
+            .unwrap();
+        let parsed = SystemConfig::from_json(&j).unwrap();
+        assert_eq!(parsed.host, Some(HostConfig::default()));
+        assert_eq!(parsed.host.unwrap().budget, 128_000_000_000);
+        // Absent key stays None (the legacy bit-for-bit path).
+        let legacy = SystemConfig::from_json(&SystemConfig::swap_experiment(1, 1).to_json())
+            .unwrap();
+        assert_eq!(legacy.host, None);
+    }
+
+    #[test]
+    fn bad_host_tier_rejected() {
+        let base = SystemConfig::workload_experiment(2, 2, 8);
+        // budget == 0.
+        let mut cfg = base.clone();
+        cfg.host = Some(HostConfig { budget: 0, ..HostConfig::default() });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadHost(_))));
+        // Non-finite / non-positive NVMe parameters.
+        let mut cfg = base.clone();
+        cfg.host = Some(HostConfig { nvme_alpha: f64::NAN, ..HostConfig::default() });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadHost(_))));
+        let mut cfg = base.clone();
+        cfg.host = Some(HostConfig { nvme_bandwidth: 0.0, ..HostConfig::default() });
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadHost(_))));
+        // Unknown host policy string.
+        let j = Json::parse(
+            r#"{"model":"opt-13b","num_models":2,"tp":1,"pp":1,"host":{"policy":"mru"}}"#,
+        )
+        .unwrap();
+        assert!(matches!(SystemConfig::from_json(&j), Err(ConfigError::BadHost(_))));
+        // A valid tier validates.
+        let mut cfg = base;
+        cfg.host = Some(HostConfig::default());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn base_lineage_resolution_and_validation() {
+        // A 6.7B base plus two fine-tuned variants: bases resolve to the
+        // first other entry with the named architecture.
+        let mut cfg = SystemConfig::hetero_experiment(
+            ModelCatalog::new(vec![
+                ModelDeployment::new("opt-6.7b"),
+                ModelDeployment::new("opt-6.7b").with_base("opt-6.7b", 0.1),
+                ModelDeployment::new("opt-6.7b").with_base("opt-6.7b", 0.25),
+            ]),
+            2,
+            8,
+        );
+        cfg.validate().unwrap();
+        assert_eq!(cfg.resolved_bases().unwrap(), vec![None, Some(0), Some(0)]);
+        // Round-trips through JSON (the drift guard compares catalogs).
+        let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.models, cfg.models);
+        assert_eq!(back.models.entries[1].delta_fraction, 0.1);
+        // Unknown base name.
+        cfg.models.entries[1].base = Some("opt-175b".into());
+        assert!(matches!(cfg.resolved_bases(), Err(ConfigError::BadHost(_))));
+        cfg.models.entries[1].base = Some("opt-6.7b".into());
+        // delta_fraction outside (0, 1].
+        for f in [0.0, -0.5, 1.5, f64::NAN] {
+            cfg.models.entries[1].delta_fraction = f;
+            assert!(
+                matches!(cfg.validate(), Err(ConfigError::BadHost(_))),
+                "delta_fraction {f} must be rejected"
+            );
+        }
+        cfg.models.entries[1].delta_fraction = 0.1;
+        // A fraction without a base is meaningless.
+        cfg.models.entries[2].base = None;
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadHost(_))));
+        cfg.models.entries[2].base = Some("opt-6.7b".into());
+        cfg.validate().unwrap();
+        // A two-entry cycle: each resolves to the other.
+        let cyclic = SystemConfig::hetero_experiment(
+            ModelCatalog::new(vec![
+                ModelDeployment::new("opt-6.7b").with_base("opt-6.7b", 0.5),
+                ModelDeployment::new("opt-6.7b").with_base("opt-6.7b", 0.5),
+            ]),
+            2,
+            8,
+        );
+        assert!(matches!(cyclic.validate(), Err(ConfigError::BadHost(_))));
     }
 }

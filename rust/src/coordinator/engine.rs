@@ -19,6 +19,7 @@
 
 use std::collections::HashMap;
 
+use crate::cluster::hosttier::SwapTier;
 use crate::config::EngineConfig;
 use crate::coordinator::entry::{
     BatchEntry, Entry, EntryId, LoadDirection, LoadEntry, ModelId, Request, RequestId,
@@ -124,7 +125,17 @@ pub struct SwapRecord {
     /// The loaded model's largest per-GPU shard, bytes — *that model's*
     /// own footprint from the per-model cost model, not the fleet
     /// maximum. 0 when the backend supplied no cost model (real mode).
+    /// Under delta swapping this is the bytes actually transferred (the
+    /// delta), not the full shard.
     pub bytes: usize,
+    /// Where the load's bytes came from (DESIGN.md §12): pinned host
+    /// memory, or staged up from NVMe first. Always `HostHit` without a
+    /// host-tier config — the paper's infinite-warm-host assumption.
+    pub tier: SwapTier,
+    /// H2D bytes *not* transferred because the model's base was GPU
+    /// resident and only the delta moved. 0 for standalone models and
+    /// full-form loads.
+    pub delta_bytes_saved: usize,
     /// Engine group that performed the swap (0 single-group).
     pub group: usize,
 }
@@ -165,6 +176,14 @@ struct SwapPair {
     /// Chunks that landed while the loading model had in-flight batches.
     overlapped_chunks: usize,
     cancelled: bool,
+    /// Tier provenance of the load, annotated by the backend at dispatch
+    /// time (`Engine::annotate_load`); `HostHit` until told otherwise.
+    tier: SwapTier,
+    /// Backend override for the record's `bytes` (the delta transfer
+    /// size under delta swapping); `None` keeps the cost-model shard.
+    bytes_override: Option<usize>,
+    /// H2D bytes saved by delta dedup (annotated with `bytes_override`).
+    delta_saved: usize,
 }
 
 /// The engine.
@@ -218,6 +237,16 @@ pub struct Engine {
     /// made, which must keep working when a streaming backend drains
     /// `dropped` mid-run.
     drops_total: u64,
+    /// Fine-tune lineage (group-local ids): `bases[v] = Some(b)` marks v
+    /// a delta variant of b. Drives base protection: a base is never an
+    /// eviction victim while a dependent variant is non-Offloaded.
+    bases: Vec<Option<ModelId>>,
+    /// Fast-path flag: no entry has a base, so every eviction filter
+    /// stays bit-for-bit the legacy predicate.
+    has_bases: bool,
+    /// Scratch for the per-plan base-protection mask (see
+    /// `recompute_protected`; reused so planning never allocates).
+    protected_buf: Vec<bool>,
     /// Scratch for `pump`'s per-round candidate ranking (reused across
     /// rounds and calls so the hot loop never allocates).
     cand_buf: Vec<Candidate>,
@@ -252,6 +281,9 @@ impl Engine {
             dropped: Vec::new(),
             swap_records: Vec::new(),
             drops_total: 0,
+            bases: vec![None; num_models],
+            has_bases: false,
+            protected_buf: vec![false; num_models],
             cand_buf: Vec::new(),
             batch_submit_times: HashMap::new(),
             predictor: MarkovPredictor::with_min_count(
@@ -315,6 +347,58 @@ impl Engine {
     /// The scheduling discipline in effect.
     pub fn scheduler_name(&self) -> &'static str {
         self.scheduler.name()
+    }
+
+    /// Declare the fine-tune lineage (group-local ids): `bases[v] =
+    /// Some(b)` marks v a delta variant of base b (DESIGN.md §12). The
+    /// eviction planner then refuses to evict a base while any dependent
+    /// variant is non-Offloaded, and a variant never evicts its own base
+    /// to make room for itself. An all-`None` vector (the default)
+    /// leaves every eviction decision bit-for-bit unchanged.
+    pub fn set_bases(&mut self, bases: Vec<Option<ModelId>>) {
+        assert_eq!(bases.len(), self.protected_buf.len(), "one base slot per model");
+        self.has_bases = bases.iter().any(|b| b.is_some());
+        self.bases = bases;
+    }
+
+    /// Refresh `protected_buf`: mark every base whose dependents are not
+    /// all Offloaded. Called right before each eviction plan; O(models),
+    /// allocation-free, and skipped entirely without lineage.
+    fn recompute_protected(&mut self) {
+        if !self.has_bases {
+            return;
+        }
+        self.protected_buf.iter_mut().for_each(|p| *p = false);
+        for v in 0..self.bases.len() {
+            if let Some(b) = self.bases[v] {
+                if self.swap.state(v) != Residency::Offloaded {
+                    self.protected_buf[b] = true;
+                }
+            }
+        }
+    }
+
+    /// Backend annotation for an in-flight load entry's swap record: tier
+    /// provenance (host hit vs NVMe miss), the actual bytes transferred
+    /// (`Some` overrides the cost-model shard — the delta size under
+    /// delta swapping), and the H2D bytes dedup saved. No-op for unknown
+    /// entries and non-load directions, so backends may call it
+    /// unconditionally from their dispatch path.
+    pub fn annotate_load(
+        &mut self,
+        entry_id: EntryId,
+        tier: SwapTier,
+        bytes_override: Option<usize>,
+        delta_bytes_saved: usize,
+    ) {
+        let Some(l) = self.inflight_loads.get(&entry_id) else { return };
+        if l.dir != LoadDirection::Load {
+            return;
+        }
+        let pair = &mut self.swap_pairs[l.pair];
+        pair.tier = tier;
+        pair.bytes_override = bytes_override;
+        pair.delta_saved = delta_bytes_saved;
     }
 
     /// Configure the chunked swap pipeline: model `m`'s load entries
@@ -413,10 +497,17 @@ impl Engine {
         if self.queues.len(next) > 0 {
             return; // a real request is queued: the normal path handles it
         }
+        self.recompute_protected();
         let inflight = &self.inflight_per_model;
         let queues = &self.queues;
+        let prot = &self.protected_buf;
+        let has_bases = self.has_bases;
+        let own_base = if has_bases { self.bases[next] } else { None };
         let plan = self.swap.plan_prefetch(next, now, |m| {
-            m != current && inflight[m] == 0 && queues.len(m) == 0
+            m != current
+                && inflight[m] == 0
+                && queues.len(m) == 0
+                && (!has_bases || (!prot[m] && Some(m) != own_base))
         });
         match plan {
             Some(victim) => {
@@ -583,7 +674,9 @@ impl Engine {
                 time_to_first_chunk: pair.first_chunk_at.unwrap_or(now) - pair.submitted,
                 overlap_fraction: pair.overlapped_chunks as f64 / pair.total_chunks as f64,
                 cancelled: pair.cancelled,
-                bytes: self.costs[pair.load_model].bytes,
+                bytes: pair.bytes_override.unwrap_or(self.costs[pair.load_model].bytes),
+                tier: pair.tier,
+                delta_bytes_saved: pair.delta_saved,
                 group: 0,
             });
         }
@@ -784,7 +877,14 @@ impl Engine {
                         // Draining; must complete before a reload can start.
                     }
                     Residency::Offloaded => {
+                        self.recompute_protected();
                         let inflight = &self.inflight_per_model;
+                        // Delta swapping (DESIGN.md §12): never evict a
+                        // protected base, and never let a variant evict
+                        // its own base to admit itself.
+                        let prot = &self.protected_buf;
+                        let has_bases = self.has_bases;
+                        let own_base = if has_bases { self.bases[model] } else { None };
                         // The broadcast strawman (Fig 2) has no safe-victim
                         // tracking at all — that is precisely why it
                         // violates load dependencies; the pipelined designs
@@ -798,14 +898,17 @@ impl Engine {
                             None
                         };
                         let mut plan = self.swap.plan_swap_in(model, now, |m| {
-                            (broadcast || inflight[m] == 0) && Some(m) != avoid
+                            (broadcast || inflight[m] == 0)
+                                && Some(m) != avoid
+                                && (!has_bases || (!prot[m] && Some(m) != own_base))
                         });
                         if plan == SwapPlan::Blocked && avoid.is_some() {
                             // Soft preference only: fall back to the plain
                             // filter rather than stalling.
-                            plan = self
-                                .swap
-                                .plan_swap_in(model, now, |m| broadcast || inflight[m] == 0);
+                            plan = self.swap.plan_swap_in(model, now, |m| {
+                                (broadcast || inflight[m] == 0)
+                                    && (!has_bases || (!prot[m] && Some(m) != own_base))
+                            });
                         }
                         match plan {
                             SwapPlan::Start { victim } => {
@@ -869,6 +972,9 @@ impl Engine {
             first_chunk_at: None,
             overlapped_chunks: 0,
             cancelled: false,
+            tier: SwapTier::HostHit,
+            bytes_override: None,
+            delta_saved: 0,
         });
         // Offload first (paper measures swap from offload submission), then
         // the load immediately after — the backend overlaps them.
@@ -989,6 +1095,8 @@ impl Engine {
             let (load_model, victim, submitted) = (pair.load_model, pair.victim, pair.submitted);
             let ttfc = pair.first_chunk_at.unwrap_or(now) - submitted;
             let overlap = pair.overlapped_chunks as f64 / pair.total_chunks as f64;
+            let (tier, bytes_override, delta_saved) =
+                (pair.tier, pair.bytes_override, pair.delta_saved);
             self.swap_records.push(SwapRecord {
                 load_model,
                 victim,
@@ -997,7 +1105,9 @@ impl Engine {
                 time_to_first_chunk: ttfc,
                 overlap_fraction: overlap,
                 cancelled: true,
-                bytes: self.costs[load_model].bytes,
+                bytes: bytes_override.unwrap_or(self.costs[load_model].bytes),
+                tier,
+                delta_bytes_saved: delta_saved,
                 group: 0,
             });
         }
@@ -1627,6 +1737,83 @@ mod tests {
         assert!(e.fail(0.5).is_empty());
         assert!(e.idle());
         assert!(e.take_swap_records().is_empty());
+    }
+
+    #[test]
+    fn base_with_live_variant_is_never_the_victim() {
+        // Models: 0 = base (resident, least recently used), 1 = its delta
+        // variant (resident), 2 = standalone. Cap 2, so serving model 2
+        // needs a victim. Plain LRU would evict the base (model 0); base
+        // protection must divert the eviction to the variant instead.
+        let mut e = engine_for(3, 1, 1, cfg(2, 8));
+        e.set_bases(vec![None, Some(0), None]);
+        e.force_resident(0, 0.0);
+        e.force_resident(1, 1.0);
+        e.on_request(2.0, 2, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out.len(), 2, "offload + load, got {out:?}");
+        match (&out[0], &out[1]) {
+            (Entry::Load(off), Entry::Load(load)) => {
+                assert_eq!(off.dir, LoadDirection::Offload);
+                assert_eq!(off.model, 1, "variant evicted, base protected");
+                assert_eq!(load.model, 2);
+            }
+            _ => panic!("expected offload+load pair"),
+        }
+        // Control: identical setup without lineage evicts the LRU base.
+        let mut e = engine_for(3, 1, 1, cfg(2, 8));
+        e.force_resident(0, 0.0);
+        e.force_resident(1, 1.0);
+        e.on_request(2.0, 2, 8);
+        let out = e.drain_outbox();
+        assert_eq!(out[0].model(), 0, "no lineage: plain LRU victim");
+    }
+
+    #[test]
+    fn variant_never_evicts_its_own_base() {
+        // Cap 1 holds only the base; its variant's swap-in would have to
+        // evict the base it is about to read deltas against — Blocked.
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.set_bases(vec![None, Some(0)]);
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        assert!(e.drain_outbox().is_empty(), "own-base eviction must block");
+        // Control: without lineage the same request swaps the base out.
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.force_resident(0, 0.0);
+        e.on_request(1.0, 1, 8);
+        assert_eq!(e.drain_outbox().len(), 2);
+    }
+
+    #[test]
+    fn annotate_load_stamps_tier_and_delta_bytes() {
+        let mut e = engine_for(2, 1, 1, cfg(1, 8));
+        e.set_cost_model(
+            vec![ModelCost { swap_cost: 0.0, swap_floor: 0.0, bytes: 1000, chunked: false }; 2],
+            0.0,
+        );
+        e.on_request(0.0, 0, 8);
+        let load_id = e.drain_outbox()[0].id();
+        e.annotate_load(load_id, SwapTier::NvmeMiss, Some(42), 7);
+        e.on_load_ack(1.0, load_id);
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].tier, SwapTier::NvmeMiss);
+        assert_eq!(recs[0].bytes, 42, "override replaces the cost-model shard");
+        assert_eq!(recs[0].delta_bytes_saved, 7);
+        // Un-annotated loads keep the defaults: HostHit + cost-model bytes.
+        e.on_request(2.0, 1, 8);
+        let out = e.drain_outbox();
+        let load_id = out.last().unwrap().id();
+        for en in &out[..out.len() - 1] {
+            e.on_load_ack(2.5, en.id());
+        }
+        e.on_load_ack(3.0, load_id);
+        let recs = e.take_swap_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].tier, SwapTier::HostHit);
+        assert_eq!(recs[0].bytes, 1000);
+        assert_eq!(recs[0].delta_bytes_saved, 0);
     }
 
     #[test]

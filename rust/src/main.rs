@@ -323,7 +323,60 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         ]);
         rows.push(vec!["dead events dropped".into(), fs.dead_event_drops.to_string()]);
     }
+    if !report.host.is_empty() {
+        let hits: u64 = report.host.iter().map(|h| h.stats.hits).sum();
+        let misses: u64 = report.host.iter().map(|h| h.stats.misses).sum();
+        let total = hits + misses;
+        let rate = if total == 0 { 1.0 } else { hits as f64 / total as f64 };
+        let saved: u64 = report.groups.iter().map(|g| g.delta_bytes_saved).sum();
+        rows.push(vec!["host hit rate".into(), format!("{:.1}% ({hits}/{total})", 100.0 * rate)]);
+        rows.push(vec![
+            "delta bytes saved (GB)".into(),
+            format!("{:.2}", saved as f64 / 1e9),
+        ]);
+    }
     table(&["metric", "value"], &rows);
+
+    // Host-memory hierarchy breakdown (DESIGN.md §12), one row per tier
+    // instance (per group, or a single cluster-shared row).
+    if !report.host.is_empty() {
+        section("host-memory tiers");
+        let hrows: Vec<Vec<String>> = report
+            .host
+            .iter()
+            .map(|h| {
+                vec![
+                    h.group.map_or_else(|| "shared".to_string(), |g| g.to_string()),
+                    h.policy.to_string(),
+                    format!("{:.1}%", 100.0 * h.hit_rate()),
+                    format!("{} / {}", h.stats.hits, h.stats.misses),
+                    h.stats.evictions.to_string(),
+                    h.stats.overflows.to_string(),
+                    format!("{:.2}", h.stats.nvme_bytes as f64 / 1e9),
+                    h.resident_models.to_string(),
+                    format!(
+                        "{:.1} / {:.1}",
+                        h.high_water as f64 / 1e9,
+                        h.budget as f64 / 1e9
+                    ),
+                ]
+            })
+            .collect();
+        table(
+            &[
+                "tier",
+                "policy",
+                "hit rate",
+                "hits / misses",
+                "evictions",
+                "overflows",
+                "NVMe GB",
+                "resident",
+                "high water / budget GB",
+            ],
+            &hrows,
+        );
+    }
 
     // Per-group resilience accounting whenever a fault plan ran
     // (DESIGN.md §11) — downtime/recovery plus what the fault layer did

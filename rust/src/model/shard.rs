@@ -257,6 +257,67 @@ pub fn chunk_plan(
     Ok(chunks)
 }
 
+/// Size of the delta component when a count (bytes or tensor messages) is
+/// split base-vs-delta at `delta_fraction ∈ (0, 1]`: rounded to nearest,
+/// clamped to `[1, total]` so a delta transfer is never empty. The base
+/// component is `total - scale_count(total, f)` — the two partition the
+/// total exactly by construction.
+pub fn scale_count(total: usize, delta_fraction: f64) -> usize {
+    debug_assert!(delta_fraction > 0.0 && delta_fraction <= 1.0);
+    (((total as f64) * delta_fraction).round() as usize).clamp(1.min(total), total)
+}
+
+/// Split a shard's bytes into `(base, delta)` components for a fine-tuned
+/// variant touching `delta_fraction` of its parameters (DESIGN.md §12).
+/// Conservation is exact: `base + delta == bytes`.
+pub fn split_delta(bytes: usize, delta_fraction: f64) -> (usize, usize) {
+    let delta = scale_count(bytes, delta_fraction);
+    (bytes - delta, delta)
+}
+
+/// Scale a stage chunk plan down to its delta component: the SAME chunk
+/// count (the engine's per-load ack accounting is chunk-count based, and
+/// staging gates pair with H2D chunks one-to-one), with per-chunk bytes
+/// and messages derived by prefix-sum rounding so the plan's totals equal
+/// `split_delta`/`scale_count` of the full totals *exactly* and every
+/// chunk stays non-empty. `delta_fraction = 1.0` reproduces the input
+/// plan's bytes/messages unchanged.
+pub fn delta_chunk_plan(plan: &[ChunkSpec], delta_fraction: f64) -> Vec<ChunkSpec> {
+    let n = plan.len();
+    let total_bytes: usize = plan.iter().map(|c| c.bytes).sum();
+    let total_msgs: usize = plan.iter().map(|c| c.messages).sum();
+    let dbytes = scale_count(total_bytes, delta_fraction);
+    let dmsgs = scale_count(total_msgs, delta_fraction);
+    assert!(
+        dbytes >= n && dmsgs >= n,
+        "delta component too small to spread over {n} chunks"
+    );
+    let mut out = Vec::with_capacity(n);
+    let (mut bprev, mut mprev) = (0usize, 0usize);
+    let (mut bacc, mut macc) = (0usize, 0usize);
+    for (i, c) in plan.iter().enumerate() {
+        bacc += c.bytes;
+        macc += c.messages;
+        // Cumulative delta targets: nearest-rounded prefix, kept strictly
+        // increasing and leaving ≥ 1 unit per remaining chunk; the last
+        // chunk lands exactly on the split totals.
+        let (bt, mt) = if i == n - 1 {
+            (dbytes, dmsgs)
+        } else {
+            (
+                (((bacc as f64) * delta_fraction).round() as usize)
+                    .clamp(bprev + 1, dbytes - (n - 1 - i)),
+                (((macc as f64) * delta_fraction).round() as usize)
+                    .clamp(mprev + 1, dmsgs - (n - 1 - i)),
+            )
+        };
+        out.push(ChunkSpec { layers: c.layers, messages: mt - mprev, bytes: bt - bprev });
+        bprev = bt;
+        mprev = mt;
+    }
+    out
+}
+
 /// Build the full grid of shard manifests, indexed `[pp_rank][tp_rank]`.
 pub fn shard_grid(spec: &ModelSpec, tp: usize, pp: usize) -> Result<Vec<Vec<ShardManifest>>, ShardError> {
     validate(spec, tp, pp)?;
@@ -421,6 +482,91 @@ mod tests {
         assert_eq!(effective_chunk_layers(&spec, 1, Some(1000)), 40); // "all"
         assert_eq!(effective_chunk_layers(&spec, 4, Some(1000)), 10);
         assert_eq!(effective_chunk_layers(&spec, 1, Some(3)), 3);
+    }
+
+    #[test]
+    fn split_delta_conserves_exactly() {
+        for bytes in [1usize, 1000, 24_000_000_000] {
+            for f in [0.001, 0.05, 0.25, 0.5, 0.9, 1.0] {
+                let (base, delta) = split_delta(bytes, f);
+                assert_eq!(base + delta, bytes, "bytes={bytes} f={f}");
+                assert!(delta >= 1, "delta transfer is never empty");
+            }
+        }
+        assert_eq!(split_delta(1000, 1.0), (0, 1000), "f=1 is the full shard");
+    }
+
+    #[test]
+    fn delta_chunk_plan_same_count_exact_totals() {
+        let spec = spec13b();
+        for (tp, pp) in [(1usize, 1usize), (2, 2), (1, 4)] {
+            for pp_rank in 0..pp {
+                for chunk_layers in [1usize, 4, 10] {
+                    let plan = chunk_plan(&spec, tp, pp, pp_rank, chunk_layers).unwrap();
+                    let bytes: usize = plan.iter().map(|c| c.bytes).sum();
+                    let msgs: usize = plan.iter().map(|c| c.messages).sum();
+                    for f in [0.05, 0.2, 0.5, 1.0] {
+                        let d = delta_chunk_plan(&plan, f);
+                        assert_eq!(d.len(), plan.len(), "chunk count preserved");
+                        let dbytes: usize = d.iter().map(|c| c.bytes).sum();
+                        let dmsgs: usize = d.iter().map(|c| c.messages).sum();
+                        assert_eq!(dbytes, scale_count(bytes, f), "f={f}");
+                        assert_eq!(dmsgs, scale_count(msgs, f), "f={f}");
+                        assert_eq!(dbytes + split_delta(bytes, f).0, bytes, "conservation");
+                        assert!(d.iter().all(|c| c.bytes >= 1 && c.messages >= 1));
+                        assert!(
+                            d.iter().zip(&plan).all(|(dc, pc)| dc.layers == pc.layers),
+                            "layer coverage unchanged"
+                        );
+                    }
+                    let full = delta_chunk_plan(&plan, 1.0);
+                    assert!(
+                        full.iter().zip(&plan).all(|(a, b)| a.bytes == b.bytes
+                            && a.messages == b.messages
+                            && a.layers == b.layers),
+                        "f=1.0 reproduces the plan"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_delta_plan_conservation() {
+        // Property: for random models/grids/fractions, the delta plan has
+        // the same chunk count, exact scaled totals, and no empty chunks.
+        prop::check(
+            "delta-plan-conservation",
+            |rng: &mut Rng| {
+                let name = prop::choice(rng, &["opt-1.3b", "opt-6.7b", "opt-13b"]);
+                let pp = prop::choice(rng, &[1usize, 2, 4]);
+                let cl = prop::choice(rng, &[1usize, 2, 5, 10]);
+                let f = prop::choice(rng, &[0.01, 0.1, 0.3, 0.7, 1.0]);
+                (name, pp, cl, f)
+            },
+            |&(name, pp, cl, f)| {
+                let spec = catalog::opt(name).unwrap();
+                if validate(&spec, 1, pp).is_err() {
+                    return Ok(());
+                }
+                for pp_rank in 0..pp {
+                    let plan = chunk_plan(&spec, 1, pp, pp_rank, cl).map_err(|e| e.to_string())?;
+                    let d = delta_chunk_plan(&plan, f);
+                    if d.len() != plan.len() {
+                        return Err("chunk count changed".into());
+                    }
+                    let total: usize = plan.iter().map(|c| c.bytes).sum();
+                    let dtotal: usize = d.iter().map(|c| c.bytes).sum();
+                    if dtotal != scale_count(total, f) {
+                        return Err(format!("byte total drifted: {dtotal}"));
+                    }
+                    if d.iter().any(|c| c.bytes == 0 || c.messages == 0) {
+                        return Err("empty delta chunk".into());
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -20,15 +20,17 @@ use crate::cluster::clock::{EventQueue, QueueBackend, SimTime};
 use crate::cluster::compute::ComputeModel;
 use crate::cluster::fault::{AutoscalePolicy, FaultAction, RetryPolicy};
 use crate::cluster::gpu::GpuDevice;
+use crate::cluster::hosttier::{HostTier, HostTierReport, SwapTier};
 use crate::config::{GroupSpec, LoadDesign, SystemConfig};
 use crate::coordinator::autoscale::{self, GroupLoad, ScaleAction};
 use crate::coordinator::engine::{DropReason, DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId, RequestId};
 use crate::coordinator::router::{self, GroupView, HealthAwareRouter};
 use crate::coordinator::scheduler::ModelCost;
-use crate::coordinator::swap::SwapStats;
+use crate::coordinator::swap::{Residency, SwapStats};
+use crate::model::shard::{delta_chunk_plan, scale_count};
 use crate::model::{shard_grid, ChunkSpec, GridPos, ModelSpec, ShardManifest};
-use crate::sim::worker::{ChunkOutcome, SimWorker, WorkerAction};
+use crate::sim::worker::{ChunkOutcome, LoadOverride, SimWorker, WorkerAction};
 use crate::util::stats::{Summary, TDigest, Welford};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -72,6 +74,10 @@ pub struct GroupStats {
     /// per-group swap traffic the scaling bench's oracle validates
     /// against the group's own H2D link counters.
     pub swap_bytes: u64,
+    /// Σ `SwapRecord::delta_bytes_saved` over this group's completed
+    /// swap-ins — H2D bytes delta swapping avoided moving (DESIGN.md
+    /// §12; zero without `base` deployments).
+    pub delta_bytes_saved: u64,
     pub swap_stats: SwapStats,
     /// DES events attributed to this group (arrivals count toward the
     /// group they were routed to).
@@ -97,6 +103,10 @@ pub struct GroupStats {
     /// Requests harvested from this group by a fault and successfully
     /// re-homed onto a *different* group.
     pub rehomed: u64,
+    /// This group's host-tier snapshot; `None` without a host config
+    /// and for the cluster-shared tier (reported once in
+    /// `SimReport::host` instead).
+    pub host: Option<HostTierReport>,
 }
 
 /// Cluster-level fault & elasticity accounting (DESIGN.md §11). All
@@ -169,6 +179,9 @@ pub struct SimReport {
     /// Fault-injection & elasticity accounting; all-zero default for
     /// runs without a `FaultPlan`.
     pub fault_stats: FaultStats,
+    /// Host-memory-tier snapshots (DESIGN.md §12): one per group, or a
+    /// single cluster-shared entry; empty without a host config.
+    pub host: Vec<HostTierReport>,
 }
 
 impl SimReport {
@@ -258,6 +271,12 @@ struct SimGroup {
     costs: Vec<ModelCost>,
     engine: Engine,
     workers: Vec<SimWorker>,
+    /// Per-local-model, per-stage chunk plans, retained past build for
+    /// delta-plan scaling at load staging (`None` outside the chunked
+    /// design).
+    chunk_plans: Option<ModelChunkPlans>,
+    /// Per-local-model chunk counts (1 = monolithic transfers).
+    chunks_per_model: Vec<usize>,
     batch_acks: HashMap<EntryId, usize>,
     /// Memoized stage compute times per (local model, batch, seqlen) —
     /// `stage_time` walks the model's tensor inventory (param_bytes),
@@ -421,7 +440,7 @@ impl SimGroup {
             .collect();
         let exec_floor = (pp + 1) as f64 * cfg.hardware.pipe_latency;
         engine.set_cost_model(costs.clone(), exec_floor);
-        engine.set_chunks_per_load(chunks_per_model);
+        engine.set_chunks_per_load(chunks_per_model.clone());
         Ok(SimGroup {
             tp,
             pp,
@@ -430,6 +449,8 @@ impl SimGroup {
             costs,
             engine,
             workers,
+            chunk_plans,
+            chunks_per_model,
             batch_acks: HashMap::new(),
             compute_cache: HashMap::new(),
             events: 0,
@@ -482,6 +503,7 @@ struct StreamCounts {
     /// Completed (non-cancelled) swap-ins.
     swaps: usize,
     swap_bytes: u64,
+    delta_bytes_saved: u64,
 }
 
 /// Measured-window request accounting maintained during a streaming run
@@ -573,6 +595,17 @@ pub struct SimCluster {
     model_slos: Vec<f64>,
     /// Scratch availability snapshot for `route_arrival`.
     avail_buf: Vec<bool>,
+    /// Host-memory tiers (DESIGN.md §12): one per group, or exactly one
+    /// cluster-shared tier; empty without a host config — zero new
+    /// state on the bit-for-bit legacy path.
+    host_tiers: Vec<HostTier>,
+    /// The single entry in `host_tiers` serves every group.
+    host_shared: bool,
+    /// Resolved catalog-level base ids (`SystemConfig::resolved_bases`),
+    /// cached for delta-plan decisions at load staging.
+    cat_bases: Vec<Option<ModelId>>,
+    /// Per-catalog-model delta fractions (1.0 without a base).
+    delta_fractions: Vec<f64>,
 }
 
 /// The historical name for the single-group deployment; every config
@@ -614,6 +647,59 @@ impl SimCluster {
         let model_slos = cfg
             .slos()
             .unwrap_or_else(|| vec![f64::INFINITY; num_models]);
+        // Host-memory hierarchy (DESIGN.md §12). Without a host config
+        // the tier vector stays empty and `cat_bases` all-None, so the
+        // run takes zero new code paths (the bit-for-bit contract).
+        let cat_bases = cfg.resolved_bases()?;
+        let delta_fractions: Vec<f64> =
+            cfg.models.iter().map(|d| d.delta_fraction).collect();
+        if cat_bases.iter().any(Option::is_some) {
+            // Teach each engine its hosted variants' local base ids so
+            // GPU-resident bases are never chosen as swap victims while
+            // a dependent variant is resident or loading.
+            for grp in &mut groups {
+                let local_bases: Vec<Option<ModelId>> = grp
+                    .models
+                    .iter()
+                    .map(|&cm| {
+                        cat_bases[cm].and_then(|cb| grp.models.iter().position(|&x| x == cb))
+                    })
+                    .collect();
+                grp.engine.set_bases(local_bases);
+            }
+        }
+        let (host_tiers, host_shared) = match &cfg.host {
+            Some(hc) => {
+                let full_bytes: Vec<usize> =
+                    catalog_specs.iter().map(ModelSpec::param_bytes).collect();
+                let delta_bytes: Vec<usize> = full_bytes
+                    .iter()
+                    .zip(&delta_fractions)
+                    .zip(&cat_bases)
+                    .map(|((&b, &f), base)| if base.is_some() { scale_count(b, f) } else { b })
+                    .collect();
+                let count = if hc.shared { 1 } else { num_groups };
+                let mut tiers: Vec<HostTier> = (0..count)
+                    .map(|_| {
+                        HostTier::new(
+                            hc.budget,
+                            hc.policy,
+                            hc.nvme_link(),
+                            cat_bases.clone(),
+                            full_bytes.clone(),
+                            delta_bytes.clone(),
+                        )
+                    })
+                    .collect();
+                if hc.warm_start {
+                    for tier in &mut tiers {
+                        tier.seed(0..num_models);
+                    }
+                }
+                (tiers, hc.shared)
+            }
+            None => (Vec::new(), false),
+        };
         Ok(SimCluster {
             cfg,
             groups,
@@ -636,6 +722,10 @@ impl SimCluster {
             fault_stats: FaultStats::default(),
             model_slos,
             avail_buf: vec![true; num_groups],
+            host_tiers,
+            host_shared,
+            cat_bases,
+            delta_fractions,
         })
     }
 
@@ -761,6 +851,10 @@ impl SimCluster {
         let tp = self.groups[g].tp;
         let world = self.groups[g].workers.len();
         for entry in entries.drain(..) {
+            // Host-tier staging must run before the entry fans out: a
+            // load's transfer plan (delta form, NVMe gates) is fixed at
+            // submission. No-op without a host config.
+            self.stage_tiered_load(g, &entry);
             let entry = Arc::new(entry);
             match design {
                 LoadDesign::Broadcast if entry.is_load() => {
@@ -785,6 +879,99 @@ impl SimCluster {
             }
         }
         self.outbox_buf = entries;
+    }
+
+    /// Host-memory-hierarchy bookkeeping for one freshly drained outbox
+    /// entry (DESIGN.md §12). Swap-ins consult the scope's host tier:
+    /// host-warm pays host→GPU only (the legacy transfer, bit-for-bit),
+    /// host-cold stages NVMe→host first — per-chunk completion times
+    /// become H2D gates on the workers. Variants whose base is resident
+    /// on this group's GPUs load in delta form via worker transfer
+    /// overrides. Offloads re-admit the model host-side (write-back).
+    /// No-op without a host config.
+    fn stage_tiered_load(&mut self, g: usize, entry: &Entry) {
+        if self.host_tiers.is_empty() {
+            return;
+        }
+        let Entry::Load(l) = entry else { return };
+        if l.dir == LoadDirection::Cancel {
+            return;
+        }
+        let local = l.model;
+        let cm = self.groups[g].models[local];
+        let t = if self.host_shared { 0 } else { g };
+        let now = self.queue.now();
+        // Disjoint field borrows: the tier mutates while the evictable
+        // closure reads engine residency. A host entry may be evicted
+        // only when no in-scope GPU copy of its model exists (evicting
+        // under a GPU-resident model would force an NVMe round trip the
+        // moment that model offloads).
+        let groups = &self.groups;
+        let model_groups = &self.model_groups;
+        let per_group = !self.host_shared;
+        let evictable = |m: ModelId| {
+            model_groups[m].iter().all(|&(hg, lm)| {
+                (per_group && hg != g)
+                    || groups[hg].engine.residency(lm) == Residency::Offloaded
+            })
+        };
+        if l.dir == LoadDirection::Offload {
+            // Write-back: the offloaded model becomes host-warm in full
+            // form (its GPU copy was full regardless of how it loaded).
+            // Overflow streams through, counted by the tier.
+            self.host_tiers[t].admit(cm, now, &evictable);
+            return;
+        }
+        let chunks = self.groups[g].chunks_per_model[local];
+        let outcome = self.host_tiers[t].fetch(cm, now, chunks, &evictable);
+        let gated = outcome.tier == SwapTier::NvmeMiss;
+        // Delta swapping: when this variant's base is resident on this
+        // group's GPUs (the engine pins it there while the variant is
+        // up), only the delta moves host→GPU. Guarded by per-stage
+        // feasibility: every chunk of every stage must keep ≥ 1 byte
+        // and ≥ 1 message after scaling.
+        let grp = &mut self.groups[g];
+        let f = self.delta_fractions[cm];
+        let base_resident = self.cat_bases[cm]
+            .and_then(|cb| grp.models.iter().position(|&x| x == cb))
+            .map(|lb| grp.engine.residency(lb) == Residency::Resident)
+            .unwrap_or(false);
+        let chunked = chunks > 1;
+        let full_plans: Vec<Vec<ChunkSpec>> = grp
+            .workers
+            .iter()
+            .map(|w| match (&grp.chunk_plans, chunked) {
+                (Some(plans), true) => plans[local][w.pos.pp_rank].clone(),
+                _ => vec![ChunkSpec {
+                    layers: 1,
+                    messages: w.shard_messages[local],
+                    bytes: w.shard_bytes[local],
+                }],
+            })
+            .collect();
+        let use_delta = base_resident
+            && full_plans.iter().all(|p| {
+                let tb = p.iter().map(|c| c.bytes).sum::<usize>();
+                let tm = p.iter().map(|c| c.messages).sum::<usize>();
+                scale_count(tb, f) >= p.len() && scale_count(tm, f) >= p.len()
+            });
+        if !use_delta && !gated {
+            // Host-warm full-form load: exactly the legacy transfer (the
+            // annotation stamps provenance without touching the plan).
+            grp.engine.annotate_load(l.id, outcome.tier, None, 0);
+            return;
+        }
+        let mut full_max = 0usize;
+        let mut eff_max = 0usize;
+        for (w, fp) in grp.workers.iter_mut().zip(&full_plans) {
+            let plan = if use_delta { delta_chunk_plan(fp, f) } else { fp.clone() };
+            full_max = full_max.max(fp.iter().map(|c| c.bytes).sum::<usize>());
+            eff_max = eff_max.max(plan.iter().map(|c| c.bytes).sum::<usize>());
+            w.set_load_override(local, LoadOverride { plan, gates: outcome.gates.clone() });
+        }
+        let (bytes_override, delta_saved) =
+            if use_delta { (Some(eff_max), full_max - eff_max) } else { (None, 0) };
+        grp.engine.annotate_load(l.id, outcome.tier, bytes_override, delta_saved);
     }
 
     /// Drains `actions` (a caller-owned scratch buffer) and turns each
@@ -1179,6 +1366,7 @@ impl SimCluster {
                 if !s.cancelled {
                     st.counts[gid].swaps += 1;
                     st.counts[gid].swap_bytes += s.bytes as u64;
+                    st.counts[gid].delta_bytes_saved += s.delta_bytes_saved as u64;
                 }
             }
         }
@@ -1445,6 +1633,12 @@ impl SimCluster {
             let completed_swaps = sc.swaps + swaps.iter().filter(|s| !s.cancelled).count();
             let swap_bytes: u64 = sc.swap_bytes
                 + swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum::<u64>();
+            let delta_bytes_saved: u64 = sc.delta_bytes_saved
+                + swaps
+                    .iter()
+                    .filter(|s| !s.cancelled)
+                    .map(|s| s.delta_bytes_saved as u64)
+                    .sum::<u64>();
             group_stats.push(GroupStats {
                 group: gid,
                 tp: grp.tp,
@@ -1454,6 +1648,7 @@ impl SimCluster {
                 drops: sc.drops + drops.len() + fdrops_per_group[gid],
                 swaps: completed_swaps,
                 swap_bytes,
+                delta_bytes_saved,
                 swap_stats: grp.engine.swap_stats(),
                 events: grp.events,
                 violations: grp.workers.iter().map(|w| w.violations).sum(),
@@ -1474,6 +1669,11 @@ impl SimCluster {
                 recovery_time: grp.recovery_time,
                 lost: fdrops_per_group[gid] as u64,
                 rehomed: grp.rehomed,
+                host: if self.host_shared {
+                    None
+                } else {
+                    self.host_tiers.get(gid).map(|tier| tier.report(Some(gid)))
+                },
             });
             per_group_requests.push(requests);
             per_group_drops.push(drops);
@@ -1535,6 +1735,15 @@ impl SimCluster {
             streaming_latency,
             streaming_counts,
             fault_stats: self.fault_stats,
+            host: if self.host_shared {
+                self.host_tiers.iter().map(|tier| tier.report(None)).collect()
+            } else {
+                self.host_tiers
+                    .iter()
+                    .enumerate()
+                    .map(|(i, tier)| tier.report(Some(i)))
+                    .collect()
+            },
         }
     }
 }
@@ -2288,5 +2497,149 @@ mod tests {
             report.groups[1].requests
         );
         assert!(conservation_holds(&report));
+    }
+
+    // ----- host-memory hierarchy (DESIGN.md §12) -----
+
+    fn host_cfg(warm_start: bool) -> crate::config::HostConfig {
+        crate::config::HostConfig { warm_start, ..Default::default() }
+    }
+
+    #[test]
+    fn warm_host_tier_reproduces_legacy_run_bit_for_bit() {
+        let legacy = run_swap(1, 1, 6);
+        let mut cfg = swap_cfg(1, 1);
+        cfg.host = Some(host_cfg(true));
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total: 6,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        let hosted = sys.run();
+        // Every fetch hits pinned host memory, so each swap is exactly
+        // the legacy host→GPU transfer: identical timings throughout.
+        assert_eq!(hosted.requests.len(), legacy.requests.len());
+        for (a, b) in legacy.requests.iter().zip(&hosted.requests) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.done, b.done);
+        }
+        assert_eq!(hosted.swaps.len(), legacy.swaps.len());
+        for (a, b) in legacy.swaps.iter().zip(&hosted.swaps) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.bytes, b.bytes);
+            assert_eq!(b.tier, SwapTier::HostHit);
+        }
+        assert_eq!(hosted.host.len(), 1);
+        let h = &hosted.host[0];
+        assert_eq!(h.stats.misses, 0, "warm start: every fetch host-warm");
+        assert!(h.stats.hits > 0);
+        assert!((h.hit_rate() - 1.0).abs() < 1e-12);
+        assert!(hosted.groups[0].host.is_some(), "per-group tier reported on its group");
+    }
+
+    #[test]
+    fn nvme_cold_first_swap_is_strictly_slower_than_host_warm() {
+        let warm = run_swap(1, 1, 6);
+        let mut cfg = swap_cfg(1, 1);
+        cfg.host = Some(host_cfg(false));
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total: 6,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        let cold = sys.run();
+        assert_eq!(cold.requests.len(), 6);
+        assert_eq!(cold.violations, 0);
+        assert_eq!(cold.oom_events, 0);
+        // Model 1 was GPU-preloaded and is host-admitted on its first
+        // offload; only model 0's first swap-in stages from NVMe.
+        let h = &cold.host[0];
+        assert_eq!(h.stats.misses, 1);
+        assert!(h.stats.hits >= 1);
+        assert!(h.stats.nvme_bytes > 0);
+        let miss: Vec<_> =
+            cold.swaps.iter().filter(|s| s.tier == SwapTier::NvmeMiss).collect();
+        assert_eq!(miss.len(), 1);
+        // Oracle: the NVMe-gated swap is strictly costlier than the
+        // host-warm equivalent (staging at NVMe bandwidth serializes
+        // ahead of the H2D copy).
+        let warm_first = warm.swaps[0].duration();
+        let cold_first = miss[0].duration();
+        assert!(
+            cold_first > warm_first * 2.0,
+            "NVMe miss {cold_first} vs host hit {warm_first}"
+        );
+        // Host-warm swaps in the same run match the legacy timing.
+        let hit = cold.swaps.iter().find(|s| s.tier == SwapTier::HostHit).unwrap();
+        assert!((hit.duration() - warm_first).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_variant_loads_only_delta_bytes_over_resident_base() {
+        use crate::config::{ModelCatalog, ModelDeployment};
+        let mut cfg = swap_cfg(1, 1);
+        cfg.models = ModelCatalog::new(vec![
+            ModelDeployment::new("opt-6.7b"),
+            ModelDeployment::new("opt-6.7b").with_base("opt-6.7b", 0.1),
+            ModelDeployment::new("opt-6.7b"),
+        ]);
+        cfg.engine.resident_cap = 2;
+        cfg.host = Some(host_cfg(true));
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 3,
+            input_len: 2,
+            total: 9,
+        })
+        .unwrap();
+        sys.preload(&[0]);
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 9);
+        assert_eq!(report.violations, 0);
+        assert_eq!(report.oom_events, 0);
+        // The standalone model's swaps move the full shard; the variant
+        // rides its GPU-resident base and moves exactly the delta.
+        let full = report.swaps.iter().find(|s| s.load_model == 2).expect("model 2 swaps").bytes;
+        let variant: Vec<_> =
+            report.swaps.iter().filter(|s| s.load_model == 1 && !s.cancelled).collect();
+        assert!(!variant.is_empty(), "the variant swaps in this schedule");
+        for s in &variant {
+            assert_eq!(s.bytes, scale_count(full, 0.1), "delta bytes exactly");
+            assert_eq!(s.delta_bytes_saved, full - s.bytes);
+        }
+        let saved: u64 =
+            variant.iter().map(|s| s.delta_bytes_saved as u64).sum();
+        assert_eq!(report.groups[0].delta_bytes_saved, saved);
+        // The base is pinned while its variant is up: it must never be
+        // a victim of a variant-resident eviction.
+        assert!(
+            report.swaps.iter().all(|s| !(s.load_model == 1 && s.victim == Some(0))),
+            "variant evicted its own base"
+        );
+    }
+
+    #[test]
+    fn shared_tier_reports_once_at_cluster_scope() {
+        let mut cfg = swap_cfg(1, 1);
+        cfg.host = Some(crate::config::HostConfig {
+            shared: true,
+            warm_start: true,
+            ..Default::default()
+        });
+        let mut sys = SimSystem::new(cfg, Driver::AlternatingBlocking {
+            models: 2,
+            input_len: 2,
+            total: 4,
+        })
+        .unwrap();
+        sys.preload(&[1]);
+        let report = sys.run();
+        assert_eq!(report.requests.len(), 4);
+        assert_eq!(report.host.len(), 1);
+        assert!(report.host[0].group.is_none(), "shared tier is cluster-scoped");
+        assert!(report.groups[0].host.is_none(), "no per-group snapshot when shared");
     }
 }

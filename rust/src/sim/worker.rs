@@ -62,6 +62,25 @@ pub enum ChunkOutcome {
     Cancelled { cancel_entry: u64 },
 }
 
+/// Per-load transfer override installed by the host-tier layer
+/// (DESIGN.md §12) just before a load entry is delivered: replaces the
+/// model's next transfer with a different-sized chunk plan (delta
+/// swapping moves only the delta bytes) and gates each chunk's H2D
+/// enqueue on its NVMe→host staging completion (host-cold swap-ins).
+/// The override describes the shard's on-device footprint while it
+/// stays resident — offload/cancel paths drain exactly what landed —
+/// and clears automatically when the instance returns to `Offloaded`.
+#[derive(Clone, Debug, Default)]
+pub struct LoadOverride {
+    /// Replacement chunk plan. Must have the same chunk count as the
+    /// model's installed plan (one chunk for monolithic models) so the
+    /// engine's chunk-ack bookkeeping lines up.
+    pub plan: Vec<ChunkSpec>,
+    /// Per-chunk earliest H2D enqueue times (NVMe staging completion);
+    /// empty = no gating, otherwise one entry per chunk of `plan`.
+    pub gates: Vec<SimTime>,
+}
+
 /// In-progress chunked transfer for one model on this worker.
 #[derive(Clone, Debug)]
 struct ChunkProgress {
@@ -106,6 +125,10 @@ pub struct SimWorker {
     chunk_plans: Vec<Vec<ChunkSpec>>,
     /// Per-model in-progress chunked transfer.
     chunk_loads: Vec<Option<ChunkProgress>>,
+    /// Per-model transfer override for the next/current load (delta
+    /// swapping + NVMe staging gates); `None` = the legacy full-shard
+    /// plan, bit-for-bit.
+    overrides: Vec<Option<LoadOverride>>,
 }
 
 impl SimWorker {
@@ -129,6 +152,7 @@ impl SimWorker {
             shard_messages,
             chunk_plans: vec![Vec::new(); num_models],
             chunk_loads: vec![None; num_models],
+            overrides: vec![None; num_models],
         }
     }
 
@@ -164,6 +188,68 @@ impl SimWorker {
     /// Chunked transfers active for this model on this worker?
     fn chunked(&self, model: ModelId) -> bool {
         self.chunk_plans[model].len() > 1
+    }
+
+    /// Install a transfer override for `model`'s next load (see
+    /// [`LoadOverride`]). Must be called while the shard is `Offloaded`;
+    /// the override governs the load, the resident footprint, and the
+    /// eventual drain, then clears when the shard offloads.
+    pub fn set_load_override(&mut self, model: ModelId, ov: LoadOverride) {
+        debug_assert_eq!(
+            self.instances[model],
+            InstState::Offloaded,
+            "override targets the next load"
+        );
+        debug_assert!(!ov.plan.is_empty(), "an override needs a plan");
+        debug_assert_eq!(
+            ov.plan.len(),
+            self.chunk_plans[model].len().max(1),
+            "same chunk count as the installed plan"
+        );
+        debug_assert!(ov.gates.is_empty() || ov.gates.len() == ov.plan.len());
+        self.overrides[model] = Some(ov);
+    }
+
+    /// Drop any pending override for `model` (the next load reverts to
+    /// the full-shard plan). Legal only while the shard is `Offloaded`.
+    pub fn clear_load_override(&mut self, model: ModelId) {
+        debug_assert_eq!(self.instances[model], InstState::Offloaded);
+        self.overrides[model] = None;
+    }
+
+    /// Chunk `i` of the effective transfer plan (override, else legacy).
+    fn eff_chunk(&self, model: ModelId, i: usize) -> ChunkSpec {
+        match &self.overrides[model] {
+            Some(ov) => ov.plan[i],
+            None => self.chunk_plans[model][i],
+        }
+    }
+
+    fn eff_plan_len(&self, model: ModelId) -> usize {
+        match &self.overrides[model] {
+            Some(ov) => ov.plan.len(),
+            None => self.chunk_plans[model].len(),
+        }
+    }
+
+    /// Effective (bytes, messages) of a monolithic transfer for `model`.
+    fn eff_totals(&self, model: ModelId) -> (usize, usize) {
+        match &self.overrides[model] {
+            Some(ov) => (
+                ov.plan.iter().map(|c| c.bytes).sum(),
+                ov.plan.iter().map(|c| c.messages).sum(),
+            ),
+            None => (self.shard_bytes[model], self.shard_messages[model]),
+        }
+    }
+
+    /// Earliest H2D enqueue time for chunk `i` of `model`'s load (the
+    /// NVMe staging gate); 0 without an override or gates.
+    fn gate(&self, model: ModelId, i: usize) -> SimTime {
+        self.overrides[model]
+            .as_ref()
+            .and_then(|ov| ov.gates.get(i).copied())
+            .unwrap_or(0.0)
     }
 
     /// Pre-warm a model to Loaded (experiment initial conditions).
@@ -312,12 +398,15 @@ impl SimWorker {
     /// its fill *completes*. Peak accuracy is within one shard, matching
     /// the per-tensor behaviour; cap enforcement is the engine's job.
     fn dispatch_transfer(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> (SimTime, bool) {
-        let (bytes, messages) = (self.shard_bytes[model], self.shard_messages[model]);
+        let (bytes, messages) = self.eff_totals(model);
         match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Offloaded);
                 self.instances[model] = InstState::Loading;
-                (self.gpu.enqueue_load(now, messages, bytes), true)
+                // A host-cold load cannot start its H2D copy before the
+                // NVMe→host staging completes (the gate).
+                let start = now.max(self.gate(model, 0));
+                (self.gpu.enqueue_load(start, messages, bytes), true)
             }
             LoadDirection::Offload => {
                 debug_assert_eq!(self.instances[model], InstState::Loaded);
@@ -333,12 +422,13 @@ impl SimWorker {
     /// progress; subsequent chunks dispatch one at a time from
     /// `on_chunk_fin` (so a cancellation frees the remaining lane time).
     fn dispatch_first_chunk(&mut self, now: SimTime, model: ModelId, dir: LoadDirection) -> SimTime {
-        let c0 = self.chunk_plans[model][0];
+        let c0 = self.eff_chunk(model, 0);
         let fin = match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Offloaded);
                 self.instances[model] = InstState::Loading;
-                self.gpu.enqueue_load(now, c0.messages, c0.bytes)
+                let start = now.max(self.gate(model, 0));
+                self.gpu.enqueue_load(start, c0.messages, c0.bytes)
             }
             LoadDirection::Offload => {
                 debug_assert_eq!(self.instances[model], InstState::Loaded);
@@ -365,7 +455,7 @@ impl SimWorker {
     /// transfer: attribute its memory, enqueue the next chunk (or finish,
     /// or resolve a pending cancellation). Driven by the system layer.
     pub fn on_chunk_fin(&mut self, now: SimTime, model: ModelId) -> ChunkOutcome {
-        let plan_len = self.chunk_plans[model].len();
+        let plan_len = self.eff_plan_len(model);
         let mut p = self.chunk_loads[model].take().expect("chunk fin without progress");
         let finished = p.next_chunk - 1;
         match p.dir {
@@ -377,9 +467,10 @@ impl SimWorker {
                         self.gpu.mem.free(p.loaded_bytes);
                     }
                     self.instances[model] = InstState::Offloaded;
+                    self.overrides[model] = None;
                     return ChunkOutcome::Cancelled { cancel_entry: cancel_id };
                 }
-                let bytes = self.chunk_plans[model][finished].bytes;
+                let bytes = self.eff_chunk(model, finished).bytes;
                 if self.gpu.mem.alloc(bytes).is_err() {
                     self.oom_events += 1;
                 } else {
@@ -389,8 +480,9 @@ impl SimWorker {
                     self.instances[model] = InstState::Loaded;
                     return ChunkOutcome::Finished;
                 }
-                let c = self.chunk_plans[model][p.next_chunk];
-                let fin = self.gpu.enqueue_load(now, c.messages, c.bytes);
+                let c = self.eff_chunk(model, p.next_chunk);
+                let start = now.max(self.gate(model, p.next_chunk));
+                let fin = self.gpu.enqueue_load(start, c.messages, c.bytes);
                 p.finish_times.push(fin);
                 p.next_chunk += 1;
                 self.chunk_loads[model] = Some(p);
@@ -399,9 +491,10 @@ impl SimWorker {
             LoadDirection::Offload => {
                 if p.next_chunk == plan_len {
                     self.instances[model] = InstState::Offloaded;
+                    self.overrides[model] = None;
                     return ChunkOutcome::Finished;
                 }
-                let c = self.chunk_plans[model][p.next_chunk];
+                let c = self.eff_chunk(model, p.next_chunk);
                 self.gpu.mem.free(c.bytes);
                 let fin = self.gpu.enqueue_offload(now, c.messages, c.bytes);
                 p.finish_times.push(fin);
@@ -428,10 +521,13 @@ impl SimWorker {
             }
         }
         // The load already completed on this worker before the cancel
-        // arrived: discard the shard now.
+        // arrived: discard the shard now (exactly what landed — the
+        // delta footprint under an override).
         if self.instances[model] == InstState::Loaded {
-            self.gpu.mem.free(self.shard_bytes[model]);
+            let (bytes, _) = self.eff_totals(model);
+            self.gpu.mem.free(bytes);
             self.instances[model] = InstState::Offloaded;
+            self.overrides[model] = None;
         }
         Some(now)
     }
@@ -448,18 +544,24 @@ impl SimWorker {
     /// another load enqueues *later* can still land ours after the
     /// prediction (the error errs early; see DESIGN.md §6).
     fn chunked_compute_finish(&mut self, now: SimTime, model: ModelId, dur: f64) -> SimTime {
+        let plan_len = self.eff_plan_len(model);
+        let total_layers: usize =
+            (0..plan_len).map(|i| self.eff_chunk(model, i).layers).sum();
         let p = self.chunk_loads[model].as_ref().expect("gated compute without progress");
-        let total_layers: usize = self.chunk_plans[model].iter().map(|c| c.layers).sum();
         let start = self.gpu.compute.next_free().max(now);
         let mut finish = start;
         let last_dispatched = *p.finish_times.last().expect("first chunk always dispatched");
         let mut predicted =
             last_dispatched.max(self.gpu.link.next_free(crate::cluster::Direction::H2D));
-        for (i, c) in self.chunk_plans[model].iter().enumerate() {
+        for i in 0..plan_len {
+            let c = self.eff_chunk(model, i);
             let landed = if i < p.finish_times.len() {
                 p.finish_times[i]
             } else {
-                predicted += self.gpu.link.model.transfer_time(c.messages, c.bytes);
+                // Undispatched chunks: back-to-back lane transfers, each
+                // held behind its NVMe staging gate when present.
+                predicted = predicted.max(self.gate(model, i))
+                    + self.gpu.link.model.transfer_time(c.messages, c.bytes);
                 predicted
             };
             let t = dur * c.layers as f64 / total_layers as f64;
@@ -477,7 +579,8 @@ impl SimWorker {
         match dir {
             LoadDirection::Load => {
                 debug_assert_eq!(self.instances[model], InstState::Loading);
-                if self.gpu.mem.alloc(self.shard_bytes[model]).is_err() {
+                let (bytes, _) = self.eff_totals(model);
+                if self.gpu.mem.alloc(bytes).is_err() {
                     self.oom_events += 1;
                 }
                 self.instances[model] = InstState::Loaded;
@@ -485,6 +588,7 @@ impl SimWorker {
             LoadDirection::Offload => {
                 debug_assert_eq!(self.instances[model], InstState::Offloading);
                 self.instances[model] = InstState::Offloaded;
+                self.overrides[model] = None;
             }
             LoadDirection::Cancel => {
                 // State was already reset when the cancel was processed;
@@ -510,6 +614,9 @@ impl SimWorker {
         self.inbox.clear();
         for p in self.chunk_loads.iter_mut() {
             *p = None;
+        }
+        for ov in self.overrides.iter_mut() {
+            *ov = None;
         }
         for st in self.instances.iter_mut() {
             *st = InstState::Offloaded;
@@ -931,6 +1038,112 @@ mod tests {
             a1.iter().any(|a| matches!(a, WorkerAction::TransferDone { .. })),
             "one-chunk model dispatches monolithically: {a1:?}"
         );
+    }
+
+    #[test]
+    fn load_override_shrinks_transfer_and_memory_then_clears() {
+        // Delta swapping: a 30-byte override on the 100-byte shard moves
+        // and allocates only 30 bytes; its eventual drain frees the same
+        // 30, and the override clears so the next load is full-shard.
+        let mut w = worker();
+        w.set_load_override(
+            0,
+            LoadOverride {
+                plan: vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 30 }],
+                gates: Vec::new(),
+            },
+        );
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let done = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::TransferDone { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((done - 0.3).abs() < 1e-9, "30 B / 100 B/s, got {done}");
+        w.on_transfer_done(0, LoadDirection::Load);
+        assert_eq!(w.gpu.mem.used(), 30, "delta footprint only");
+        w.deliver(load(2, 0, LoadDirection::Offload));
+        w.step(1.0, |_| 1.0, 0.001, false).unwrap();
+        assert_eq!(w.gpu.mem.used(), 0, "drain frees exactly what landed");
+        w.on_transfer_done(0, LoadDirection::Offload);
+        // Override cleared: the reload is the full 100-byte shard again.
+        w.deliver(load(3, 0, LoadDirection::Load));
+        let actions = w.step(2.0, |_| 1.0, 0.001, false).unwrap();
+        let done = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::TransferDone { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((done - 3.0).abs() < 1e-9, "full shard after the override cleared");
+        w.on_transfer_done(0, LoadDirection::Load);
+        assert_eq!(w.gpu.mem.used(), 100);
+        assert_eq!(w.oom_events, 0);
+    }
+
+    #[test]
+    fn gated_load_waits_for_nvme_staging() {
+        // Host-cold swap-in: the H2D copy cannot start before the NVMe
+        // staging gate even though the lane is idle.
+        let mut w = worker();
+        w.set_load_override(
+            0,
+            LoadOverride {
+                plan: vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 100 }],
+                gates: vec![0.5],
+            },
+        );
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let done = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::TransferDone { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((done - 1.5).abs() < 1e-9, "gate 0.5 + 1.0 s transfer, got {done}");
+    }
+
+    #[test]
+    fn chunked_override_gates_each_chunk_and_lands_delta_bytes() {
+        // 4-chunk model with a 4×10-byte delta plan; chunks 1.. gated at
+        // t=1.0 (their NVMe stage-in). The pipeline stalls on the gates,
+        // then streams, and exactly the delta bytes end up on device.
+        let mut w = worker_chunked();
+        w.set_load_override(
+            0,
+            LoadOverride {
+                plan: vec![crate::model::ChunkSpec { layers: 1, messages: 1, bytes: 10 }; 4],
+                gates: vec![0.0, 1.0, 1.0, 1.0],
+            },
+        );
+        w.deliver(load(1, 0, LoadDirection::Load));
+        let actions = w.step(0.0, |_| 1.0, 0.001, false).unwrap();
+        let first = actions
+            .iter()
+            .find_map(|a| match a {
+                WorkerAction::ChunkDone { at, .. } => Some(*at),
+                _ => None,
+            })
+            .unwrap();
+        assert!((first - 0.1).abs() < 1e-9, "10 B / 100 B/s, got {first}");
+        let out = w.on_chunk_fin(first, 0);
+        let at = match out {
+            ChunkOutcome::Next { done_chunk: 0, at } => at,
+            other => panic!("expected Next, got {other:?}"),
+        };
+        assert!((at - 1.1).abs() < 1e-9, "chunk 1 held behind its gate, got {at}");
+        let (finish, n) = drive_chunks(&mut w, 0, at);
+        assert_eq!(n + 1, 4);
+        assert!((finish - 1.3).abs() < 1e-9, "chunks 2,3 stream after the gate, got {finish}");
+        assert_eq!(w.instances[0], InstState::Loaded);
+        assert_eq!(w.gpu.mem.used(), 40, "delta bytes only");
+        assert_eq!(w.oom_events, 0);
     }
 
     #[test]

@@ -59,9 +59,50 @@ fn every_shipped_preset_parses_and_validates() {
         "groups_2x2.json",
         "planned_hetero.json",
         "chaos_spot.json",
+        "fleet_variants.json",
     ] {
         assert!(seen.iter().any(|n| n == required), "missing preset {required} (have {seen:?})");
     }
+}
+
+#[test]
+fn fleet_variants_preset_resolves_expected_tiering() {
+    let cfg = SystemConfig::from_file(&configs_dir().join("fleet_variants.json")).unwrap();
+    assert_eq!(cfg.num_models(), 6);
+    // Resolved base lineage: three opt-6.7b fine-tunes over entry 0, one
+    // opt-2.7b fine-tune over entry 4 (first *other* entry by name).
+    let bases = cfg.resolved_bases().unwrap();
+    assert_eq!(bases, vec![None, Some(0), Some(0), Some(0), None, Some(4)]);
+    let fracs: Vec<f64> = cfg.models.iter().map(|d| d.delta_fraction).collect();
+    assert_eq!(fracs, vec![1.0, 0.1, 0.15, 0.2, 1.0, 0.25]);
+    // Host-tier pin: the preset ships a finite per-group pinned budget
+    // over the weighted-cost policy, warm-started.
+    let host = cfg.host.as_ref().expect("preset configures a host tier");
+    assert_eq!(host.budget, 24_000_000_000);
+    assert_eq!(host.policy.name(), "weighted-cost");
+    assert!(host.warm_start);
+    assert!(!host.shared);
+    // The budget is deliberately smaller than the catalog's full host
+    // footprint (evictions must be reachable) but big enough for every
+    // base plus at least one delta entry.
+    let specs = cfg.specs().unwrap();
+    let full: Vec<usize> =
+        specs.iter().map(computron::model::ModelSpec::param_bytes).collect();
+    let footprint: usize = full
+        .iter()
+        .zip(&bases)
+        .zip(&fracs)
+        .map(|((&b, base), &f)| {
+            if base.is_some() { computron::model::shard::scale_count(b, f) } else { b }
+        })
+        .sum();
+    assert!(footprint > host.budget, "budget must force eviction pressure");
+    assert!(full[0] + full[4] < host.budget, "both bases must fit host-resident");
+    // Host config and base lineage survive a JSON round-trip.
+    let back = SystemConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(back.host, cfg.host, "host config changed in round-trip");
+    assert_eq!(back.resolved_bases().unwrap(), bases);
+    assert_eq!(back.models, cfg.models);
 }
 
 #[test]

@@ -1,0 +1,629 @@
+//! Host-memory-tier property tests (DESIGN.md §12):
+//!
+//! 1. **Policy reference models** — every registered host-eviction
+//!    policy (`lru` / `lfu` / `weighted-cost`) is replayed over random
+//!    access traces against a straightforward reference: the victim is
+//!    always drawn from the candidate set, LRU picks the least recently
+//!    fetched, LFU the least frequently fetched, weighted-cost the
+//!    minimum `(accesses + 1) · refetch_cost / bytes`.
+//! 2. **Tier accounting invariants** — random fetch/admit traces over
+//!    random catalogs (with delta-form variants) never exceed the pinned
+//!    budget, conserve NVMe bytes and hit/miss/eviction/overflow counts
+//!    against an external ledger, and never evict a base from under a
+//!    resident delta-form dependent.
+//! 3. **Delta-plan conservation** — `split_delta` partitions exactly and
+//!    `delta_chunk_plan` preserves chunk count while its byte/message
+//!    totals equal `scale_count` of the full totals exactly.
+//! 4. **Transparency pin** — a warm-started host tier with an effectively
+//!    infinite budget reproduces the no-host-config runs bit-for-bit
+//!    across the full scenario registry, both load designs, and every
+//!    host policy; the no-host runs carry no tier artifacts at all.
+
+use computron::cluster::hosttier::{
+    make_host_policy, HostCandidate, HostEvictionPolicy, HostPolicyKind, HostTier, SwapTier,
+};
+use computron::cluster::LinkModel;
+use computron::config::{HostConfig, LoadDesign, SystemConfig};
+use computron::model::shard::{delta_chunk_plan, scale_count, split_delta, ChunkSpec};
+use computron::sim::{SimReport, SimSystem};
+use computron::util::prop;
+use computron::util::rng::Rng;
+use computron::workload::scenarios;
+
+// ---------------------------------------------------------------------
+// 1. Policy reference models
+// ---------------------------------------------------------------------
+
+/// One randomized policy-trace event. `Access` may hit a non-resident
+/// model (the tier calls `on_access` on every fetch, cold or warm);
+/// `Insert`/`Evict` are well-formed against the resident set.
+#[derive(Clone, Debug)]
+enum Op {
+    Insert(usize),
+    Access(usize),
+    Evict(usize),
+}
+
+fn gen_trace(rng: &mut Rng, num_models: usize, len: usize) -> Vec<Op> {
+    let mut resident: Vec<usize> = Vec::new();
+    let mut ops = Vec::new();
+    for _ in 0..len {
+        let roll = rng.f64();
+        if resident.is_empty() || roll < 0.3 {
+            let m = rng.index(num_models);
+            if !resident.contains(&m) {
+                resident.push(m);
+                ops.push(Op::Insert(m));
+            }
+        } else if roll < 0.8 {
+            ops.push(Op::Access(rng.index(num_models)));
+        } else {
+            let i = rng.index(resident.len());
+            ops.push(Op::Evict(resident.remove(i)));
+        }
+    }
+    ops
+}
+
+/// Reference state after a trace: resident set, last fetch time (insert
+/// counts as a touch), lifetime access counts (never reset on eviction —
+/// host frequency is per model, not per residency stint).
+struct Reference {
+    resident: Vec<usize>,
+    last: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+fn replay(policy: &mut dyn HostEvictionPolicy, ops: &[Op], num_models: usize) -> Reference {
+    let mut r = Reference {
+        resident: Vec::new(),
+        last: vec![f64::NEG_INFINITY; num_models],
+        counts: vec![0; num_models],
+    };
+    let mut now = 0.0;
+    for op in ops {
+        now += 1.0;
+        match *op {
+            Op::Insert(m) => {
+                policy.on_insert(m, now);
+                r.resident.push(m);
+                r.last[m] = r.last[m].max(now);
+            }
+            Op::Access(m) => {
+                policy.on_access(m, now);
+                r.last[m] = now;
+                r.counts[m] += 1;
+            }
+            Op::Evict(m) => {
+                policy.on_evict(m);
+                r.resident.retain(|&x| x != m);
+            }
+        }
+    }
+    r
+}
+
+/// Candidate records for the reference's resident set, with fixed
+/// per-model sizes and refetch costs shared by policy and reference.
+fn candidates(resident: &[usize], bytes: &[usize], cost: &[f64]) -> Vec<HostCandidate> {
+    resident
+        .iter()
+        .map(|&m| HostCandidate { model: m, bytes: bytes[m], refetch_cost: cost[m] })
+        .collect()
+}
+
+fn gen_catalog_costs(rng: &mut Rng, n: usize) -> (Vec<usize>, Vec<f64>) {
+    let bytes: Vec<usize> = (0..n).map(|_| prop::usize_in(rng, 1, 1000)).collect();
+    let cost: Vec<f64> = (0..n).map(|_| prop::f64_in(rng, 0.01, 10.0)).collect();
+    (bytes, cost)
+}
+
+#[test]
+fn host_victim_always_from_candidates_all_policies() {
+    for kind in HostPolicyKind::all() {
+        prop::check(
+            &format!("host-victim-in-candidates-{}", kind.name()),
+            |rng: &mut Rng| {
+                let n = prop::usize_in(rng, 2, 8);
+                let ops = gen_trace(rng, n, prop::usize_in(rng, 1, 64));
+                let (bytes, cost) = gen_catalog_costs(rng, n);
+                let seed = rng.next_u64();
+                (n, ops, bytes, cost, seed)
+            },
+            |(n, ops, bytes, cost, seed)| {
+                let mut policy = make_host_policy(kind, *n);
+                let reference = replay(policy.as_mut(), ops, *n);
+                if policy.victim(&[]).is_some() {
+                    return Err("victim from empty candidate set".into());
+                }
+                let mut rng = Rng::seeded(seed.wrapping_add(1));
+                for _ in 0..8 {
+                    let subset: Vec<usize> =
+                        reference.resident.iter().copied().filter(|_| rng.f64() < 0.7).collect();
+                    let cands = candidates(&subset, bytes, cost);
+                    match policy.victim(&cands) {
+                        None if cands.is_empty() => {}
+                        None => return Err("no victim despite candidates".into()),
+                        Some(v) if subset.contains(&v) => {}
+                        Some(v) => return Err(format!("victim {v} not in {subset:?}")),
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn host_lru_picks_least_recently_fetched() {
+    prop::check(
+        "host-lru-least-recent",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            let (bytes, cost) = gen_catalog_costs(rng, n);
+            (n, ops, bytes, cost)
+        },
+        |(n, ops, bytes, cost)| {
+            let mut policy = make_host_policy(HostPolicyKind::Lru, *n);
+            let reference = replay(policy.as_mut(), ops, *n);
+            if reference.resident.is_empty() {
+                return Ok(());
+            }
+            let expected = reference
+                .resident
+                .iter()
+                .copied()
+                .min_by(|&a, &b| reference.last[a].total_cmp(&reference.last[b]).then(a.cmp(&b)))
+                .unwrap();
+            let got = policy.victim(&candidates(&reference.resident, bytes, cost)).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "LRU chose {got}, expected {expected} (last {:?})",
+                    reference.last
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn host_lfu_picks_least_frequently_fetched() {
+    prop::check(
+        "host-lfu-least-frequent",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            let (bytes, cost) = gen_catalog_costs(rng, n);
+            (n, ops, bytes, cost)
+        },
+        |(n, ops, bytes, cost)| {
+            let mut policy = make_host_policy(HostPolicyKind::Lfu, *n);
+            let reference = replay(policy.as_mut(), ops, *n);
+            if reference.resident.is_empty() {
+                return Ok(());
+            }
+            let expected = reference
+                .resident
+                .iter()
+                .copied()
+                .min_by_key(|&m| (reference.counts[m], m))
+                .unwrap();
+            let got = policy.victim(&candidates(&reference.resident, bytes, cost)).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "LFU chose {got}, expected {expected} (counts {:?})",
+                    reference.counts
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn host_weighted_cost_minimizes_refetch_pain_per_byte() {
+    prop::check(
+        "host-weighted-cost-score",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 8);
+            let ops = gen_trace(rng, n, prop::usize_in(rng, 4, 96));
+            let (bytes, cost) = gen_catalog_costs(rng, n);
+            (n, ops, bytes, cost)
+        },
+        |(n, ops, bytes, cost)| {
+            let mut policy = make_host_policy(HostPolicyKind::WeightedCost, *n);
+            let reference = replay(policy.as_mut(), ops, *n);
+            if reference.resident.is_empty() {
+                return Ok(());
+            }
+            let score =
+                |m: usize| (reference.counts[m] + 1) as f64 * cost[m] / bytes[m].max(1) as f64;
+            let expected = reference
+                .resident
+                .iter()
+                .copied()
+                .min_by(|&a, &b| score(a).total_cmp(&score(b)).then(a.cmp(&b)))
+                .unwrap();
+            let got = policy.victim(&candidates(&reference.resident, bytes, cost)).unwrap();
+            if got != expected {
+                return Err(format!(
+                    "weighted-cost chose {got} (score {}), expected {expected} (score {})",
+                    score(got),
+                    score(expected)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 2. Tier accounting invariants
+// ---------------------------------------------------------------------
+
+/// One randomized tier event. `evict_mask` bit `m` marks model `m`
+/// evictable this step (the simulator's "not GPU-resident" predicate is
+/// an arbitrary caller-supplied filter from the tier's point of view).
+#[derive(Clone, Debug)]
+enum TierOp {
+    Fetch { model: usize, chunks: usize, evict_mask: u64 },
+    Admit { model: usize, evict_mask: u64 },
+}
+
+/// Random single-level variant catalog: every base is itself baseless,
+/// mirroring `SystemConfig::resolved_bases` (a base may not have a base).
+#[derive(Clone, Debug)]
+struct Catalog {
+    bases: Vec<Option<usize>>,
+    full: Vec<usize>,
+    delta: Vec<usize>,
+}
+
+fn gen_tier_catalog(rng: &mut Rng, n: usize) -> Catalog {
+    let mut cat =
+        Catalog { bases: vec![None; n], full: vec![0; n], delta: vec![0; n] };
+    for m in 0..n {
+        cat.full[m] = prop::usize_in(rng, 40, 200);
+        let baseless: Vec<usize> = (0..m).filter(|&j| cat.bases[j].is_none()).collect();
+        if !baseless.is_empty() && rng.f64() < 0.4 {
+            cat.bases[m] = Some(baseless[rng.index(baseless.len())]);
+            cat.delta[m] = scale_count(cat.full[m], prop::f64_in(rng, 0.1, 0.9));
+        } else {
+            cat.delta[m] = cat.full[m];
+        }
+    }
+    cat
+}
+
+#[test]
+fn tier_accounting_matches_external_ledger_under_random_traces() {
+    prop::check(
+        "host-tier-ledger",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 2, 6);
+            let cat = gen_tier_catalog(rng, n);
+            let budget = prop::usize_in(rng, 80, 500);
+            let kind = prop::choice(rng, &HostPolicyKind::all());
+            let ops: Vec<TierOp> = (0..prop::usize_in(rng, 10, 80))
+                .map(|_| {
+                    let model = rng.index(n);
+                    let evict_mask = rng.next_u64();
+                    if rng.f64() < 0.8 {
+                        TierOp::Fetch { model, chunks: prop::usize_in(rng, 1, 4), evict_mask }
+                    } else {
+                        TierOp::Admit { model, evict_mask }
+                    }
+                })
+                .collect();
+            (cat, budget, kind, ops)
+        },
+        |(cat, budget, kind, ops)| {
+            let n = cat.full.len();
+            let nvme = LinkModel { alpha: 0.001, bandwidth: 100.0, pageable_copy_bw: f64::INFINITY };
+            let mut tier = HostTier::new(
+                *budget,
+                *kind,
+                nvme,
+                cat.bases.clone(),
+                cat.full.clone(),
+                cat.delta.clone(),
+            );
+            // External ledger, updated from observable outcomes only.
+            let mut delta_form = vec![false; n];
+            let (mut hits, mut misses, mut evictions, mut overflows) = (0u64, 0u64, 0u64, 0u64);
+            let (mut nvme_bytes, mut delta_saved) = (0u64, 0u64);
+            let mut max_used = 0usize;
+            let mut now = 0.0;
+            for op in ops {
+                now += 1.0;
+                let before: Vec<bool> = (0..n).map(|m| tier.is_resident(m)).collect();
+                match *op {
+                    TierOp::Fetch { model, chunks, evict_mask } => {
+                        let evictable = |m: usize| (evict_mask >> m) & 1 == 1;
+                        let out = tier.fetch(model, now, chunks, &evictable);
+                        if before[model] {
+                            if out.tier != SwapTier::HostHit {
+                                return Err(format!("resident model {model} missed"));
+                            }
+                            if out.host_delta != delta_form[model] {
+                                return Err(format!("hit on {model} misreported its form"));
+                            }
+                            if !out.gates.is_empty() {
+                                return Err("host hit must be ungated".into());
+                            }
+                            hits += 1;
+                        } else {
+                            if out.tier != SwapTier::NvmeMiss {
+                                return Err(format!("cold model {model} hit"));
+                            }
+                            misses += 1;
+                            // Delta-form admission iff the base was warm at
+                            // fetch time; full-form (and full staging) else.
+                            let base_warm =
+                                matches!(cat.bases[model], Some(b) if before[b]);
+                            if out.host_delta != base_warm {
+                                return Err(format!(
+                                    "miss on {model}: host_delta {} but base_warm {base_warm}",
+                                    out.host_delta
+                                ));
+                            }
+                            let staged =
+                                if out.host_delta { cat.delta[model] } else { cat.full[model] };
+                            nvme_bytes += staged as u64;
+                            if out.gates.len() != chunks.max(1) {
+                                return Err(format!(
+                                    "{} gates for {} chunks",
+                                    out.gates.len(),
+                                    chunks
+                                ));
+                            }
+                            if out.gates.windows(2).any(|w| w[0] > w[1]) || out.gates[0] < now {
+                                return Err(format!("unsorted gates {:?}", out.gates));
+                            }
+                            if tier.is_resident(model) {
+                                delta_form[model] = out.host_delta;
+                                if out.host_delta {
+                                    delta_saved += (cat.full[model] - cat.delta[model]) as u64;
+                                }
+                            } else {
+                                overflows += 1;
+                            }
+                        }
+                    }
+                    TierOp::Admit { model, evict_mask } => {
+                        let evictable = |m: usize| (evict_mask >> m) & 1 == 1;
+                        let admitted = tier.admit(model, now, &evictable);
+                        if before[model] {
+                            if !admitted {
+                                return Err(format!("resident {model} refused re-admission"));
+                            }
+                        } else if admitted {
+                            delta_form[model] = false; // offload write-back is full-form
+                        } else {
+                            overflows += 1;
+                        }
+                        if admitted != tier.is_resident(model) {
+                            return Err("admit return disagrees with residency".into());
+                        }
+                    }
+                }
+                // Evictions are residency transitions we did not request.
+                for m in 0..n {
+                    if before[m] && !tier.is_resident(m) {
+                        evictions += 1;
+                        delta_form[m] = false;
+                    }
+                }
+                // Budget, occupancy, and base-pinning invariants.
+                let expected_used: usize = (0..n)
+                    .filter(|&m| tier.is_resident(m))
+                    .map(|m| if delta_form[m] { cat.delta[m] } else { cat.full[m] })
+                    .sum();
+                if tier.pool().used() != expected_used {
+                    return Err(format!(
+                        "used {} != ledger {expected_used}",
+                        tier.pool().used()
+                    ));
+                }
+                if tier.pool().used() > *budget {
+                    return Err(format!("pinned {} over budget {budget}", tier.pool().used()));
+                }
+                if tier.resident_count() != (0..n).filter(|&m| tier.is_resident(m)).count() {
+                    return Err("resident_count disagrees with is_resident".into());
+                }
+                max_used = max_used.max(tier.pool().used());
+                for v in 0..n {
+                    if tier.is_resident(v) && delta_form[v] {
+                        let b = cat.bases[v].expect("delta form without base");
+                        if !tier.is_resident(b) {
+                            return Err(format!(
+                                "base {b} evicted under resident delta dependent {v}"
+                            ));
+                        }
+                    }
+                }
+            }
+            let s = tier.stats();
+            if (s.hits, s.misses, s.evictions, s.overflows) != (hits, misses, evictions, overflows)
+            {
+                return Err(format!(
+                    "stats {:?} != ledger (h {hits}, m {misses}, e {evictions}, o {overflows})",
+                    (s.hits, s.misses, s.evictions, s.overflows)
+                ));
+            }
+            if s.nvme_bytes != nvme_bytes || s.delta_bytes_saved != delta_saved {
+                return Err(format!(
+                    "bytes (nvme {}, saved {}) != ledger (nvme {nvme_bytes}, saved {delta_saved})",
+                    s.nvme_bytes, s.delta_bytes_saved
+                ));
+            }
+            if tier.pool().high_water() < max_used || tier.pool().high_water() > *budget {
+                return Err(format!(
+                    "high water {} outside [{max_used}, {budget}]",
+                    tier.pool().high_water()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. Delta-plan conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn split_delta_partitions_exactly() {
+    prop::check(
+        "split-delta-partition",
+        |rng: &mut Rng| {
+            (prop::usize_in(rng, 0, 1_000_000_000), prop::f64_in(rng, 0.001, 1.0))
+        },
+        |(bytes, f)| {
+            let (base, delta) = split_delta(*bytes, *f);
+            if base + delta != *bytes {
+                return Err(format!("{base} + {delta} != {bytes}"));
+            }
+            if delta != scale_count(*bytes, *f) {
+                return Err("delta component disagrees with scale_count".into());
+            }
+            if *bytes > 0 && delta == 0 {
+                return Err("non-empty shard produced an empty delta".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_chunk_plan_conserves_totals_exactly() {
+    prop::check(
+        "delta-plan-conservation",
+        |rng: &mut Rng| {
+            let n = prop::usize_in(rng, 1, 8);
+            let plan: Vec<ChunkSpec> = (0..n)
+                .map(|_| ChunkSpec {
+                    layers: prop::usize_in(rng, 1, 4),
+                    messages: prop::usize_in(rng, 1, 64),
+                    bytes: prop::usize_in(rng, 1, 10_000),
+                })
+                .collect();
+            (plan, prop::f64_in(rng, 0.02, 1.0))
+        },
+        |(plan, f)| {
+            let n = plan.len();
+            let total_bytes: usize = plan.iter().map(|c| c.bytes).sum();
+            let total_msgs: usize = plan.iter().map(|c| c.messages).sum();
+            let (dbytes, dmsgs) = (scale_count(total_bytes, *f), scale_count(total_msgs, *f));
+            if dbytes < n || dmsgs < n {
+                // Infeasible spread: the simulator falls back to a
+                // full-form load rather than calling delta_chunk_plan.
+                return Ok(());
+            }
+            let dp = delta_chunk_plan(plan, *f);
+            if dp.len() != n {
+                return Err(format!("chunk count changed: {} != {n}", dp.len()));
+            }
+            let got_bytes: usize = dp.iter().map(|c| c.bytes).sum();
+            let got_msgs: usize = dp.iter().map(|c| c.messages).sum();
+            if got_bytes != dbytes || got_msgs != dmsgs {
+                return Err(format!(
+                    "totals ({got_bytes} B, {got_msgs} msgs) != scale_count ({dbytes}, {dmsgs})"
+                ));
+            }
+            for (full, delta) in plan.iter().zip(&dp) {
+                if delta.bytes == 0 || delta.messages == 0 {
+                    return Err(format!("empty delta chunk in {dp:?}"));
+                }
+                if delta.layers != full.layers {
+                    return Err("layer counts must be preserved per chunk".into());
+                }
+                if delta.bytes > full.bytes || delta.messages > full.messages {
+                    return Err(format!("delta chunk exceeds its full chunk: {dp:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_fraction_one_is_the_identity_plan() {
+    let plan = vec![
+        ChunkSpec { layers: 2, messages: 7, bytes: 1000 },
+        ChunkSpec { layers: 2, messages: 5, bytes: 900 },
+        ChunkSpec { layers: 1, messages: 3, bytes: 128 },
+    ];
+    assert_eq!(delta_chunk_plan(&plan, 1.0), plan);
+}
+
+// ---------------------------------------------------------------------
+// 4. Transparency pin: warm infinite host tier ≡ no host config
+// ---------------------------------------------------------------------
+
+fn base_cfg(design: LoadDesign) -> SystemConfig {
+    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+    cfg.engine.load_design = design;
+    cfg
+}
+
+fn run_scenario(cfg: SystemConfig, name: &str) -> SimReport {
+    let mut cfg = cfg;
+    cfg.scenario = Some(name.to_string());
+    let (sys, _) = SimSystem::from_scenario(cfg, 5.0, 0xC1_0572).unwrap();
+    sys.run()
+}
+
+fn assert_bit_identical(tag: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.requests, b.requests, "{tag}: request records diverged");
+    assert_eq!(a.swaps, b.swaps, "{tag}: swap records diverged");
+    assert_eq!(a.drops, b.drops, "{tag}: drop records diverged");
+    assert_eq!(a.events, b.events, "{tag}: event counts diverged");
+    assert_eq!(a.mem_high_water, b.mem_high_water, "{tag}: memory diverged");
+    assert_eq!(a.h2d_bytes, b.h2d_bytes, "{tag}: H2D traffic diverged");
+    assert_eq!(a.d2h_bytes, b.d2h_bytes, "{tag}: D2H traffic diverged");
+    assert_eq!(a.swap_stats, b.swap_stats, "{tag}: swap stats diverged");
+    assert_eq!(a.sim_end, b.sim_end, "{tag}: end times diverged");
+}
+
+#[test]
+fn warm_infinite_host_tier_is_transparent_across_registry() {
+    for design in [LoadDesign::AsyncPipelined, LoadDesign::ChunkedPipelined] {
+        for &name in scenarios::names() {
+            let legacy = run_scenario(base_cfg(design), name);
+            // No host config → no tier artifacts anywhere in the report.
+            assert!(legacy.host.is_empty(), "{name}: host reports without a host config");
+            assert!(legacy.groups.iter().all(|g| g.host.is_none() && g.delta_bytes_saved == 0));
+            assert!(
+                legacy.swaps.iter().all(|s| s.tier == SwapTier::HostHit && s.delta_bytes_saved == 0),
+                "{name}: legacy swaps must default to the warm-host tier"
+            );
+            for kind in HostPolicyKind::all() {
+                let mut cfg = base_cfg(design);
+                cfg.host = Some(HostConfig {
+                    budget: 1 << 60,
+                    policy: kind,
+                    warm_start: true,
+                    ..HostConfig::default()
+                });
+                let warm = run_scenario(cfg, name);
+                let tag = format!("{name}/{}/{}", design.name(), kind.name());
+                assert_bit_identical(&tag, &legacy, &warm);
+                // The tier saw every swap-in and served all of them warm.
+                assert_eq!(warm.host.len(), 1, "{tag}: one per-group tier");
+                let h = &warm.host[0];
+                assert_eq!(h.policy, kind.name(), "{tag}");
+                assert_eq!(h.stats.misses, 0, "{tag}: warm start may never miss");
+                assert_eq!(h.stats.evictions, 0, "{tag}: infinite budget never evicts");
+                assert_eq!(h.stats.nvme_bytes, 0, "{tag}: no staging traffic");
+                assert!((h.hit_rate() - 1.0).abs() < 1e-12, "{tag}");
+                assert!(
+                    !legacy.swaps.is_empty() || h.stats.hits == 0,
+                    "{tag}: hits without swaps"
+                );
+            }
+        }
+    }
+}
