@@ -10,10 +10,18 @@
 //!    cell), streaming aggregation on, reporting DES events/sec.
 //! 3. **Calendar vs heap end-to-end** on the 4-group `zipf` overload
 //!    cell — the whole-system speedup attributable to the queue.
+//! 4. **Parallel vs sequential executor** on dedicated placements (each
+//!    model hosted by exactly one group — the bounded-lag executor's
+//!    fast path, DESIGN.md §13) at G ∈ {2, 4}, with the seq ≡ par
+//!    bit-equality oracle asserted in-bench before the speedup is
+//!    reported.
 //!
-//! Peak RSS (`VmHWM`) is sampled at exit. Results land in
-//! `BENCH_perf_simcore.json` (override with `-- --json <path>`); the
-//! committed copy is the CI perf-smoke baseline (EXPERIMENTS.md §Perf).
+//! Peak RSS (`VmHWM`) is sampled before and after every end-to-end cell
+//! so each cell's high-water growth — e.g. the parallel cells' extra
+//! thread stacks — is attributable to it; the final mark is also
+//! reported. Results land in `BENCH_perf_simcore.json` (override with
+//! `-- --json <path>`); the committed copy is the CI perf-smoke
+//! baseline (EXPERIMENTS.md §Perf).
 //!
 //! ```bash
 //! cargo bench --bench perf_simcore              # full sweep
@@ -27,9 +35,10 @@ use std::time::Instant;
 
 use computron::cluster::{EventQueue, QueueBackend};
 use computron::config::{
-    ModelCatalog, ModelDeployment, PlacementSpec, RouterKind, SchedulerKind, SystemConfig,
+    ExecMode, GroupSpec, ModelCatalog, ModelDeployment, PlacementSpec, RouterKind, SchedulerKind,
+    SystemConfig,
 };
-use computron::sim::{Driver, SimCluster};
+use computron::sim::{Driver, SimCluster, SimReport};
 use computron::util::bench::{black_box, fmt_rate, section, table};
 use computron::util::json::Json;
 use computron::workload::scenarios::{self, ScenarioParams, WorkloadGen};
@@ -53,6 +62,21 @@ fn cluster_cfg(g: usize) -> SystemConfig {
     cfg.engine.scheduler = SchedulerKind::Shed;
     cfg.placement =
         Some(PlacementSpec::replicated(g, cfg.parallel, 4, RouterKind::LeastLoaded));
+    cfg
+}
+
+/// Dedicated sibling of `cluster_cfg`: the same fleet split across `g`
+/// groups with every model hosted exactly once (round-robin partition) —
+/// the embarrassingly parallel case the bounded-lag executor fast-paths
+/// (DESIGN.md §13).
+fn dedicated_cfg(g: usize, exec: ExecMode) -> SystemConfig {
+    let mut cfg = SystemConfig::hetero_experiment(fleet(), 2, 8);
+    cfg.engine.scheduler = SchedulerKind::Shed;
+    cfg.exec = exec;
+    let groups = (0..g)
+        .map(|i| GroupSpec::new(cfg.parallel, (i..4).step_by(g).collect()))
+        .collect();
+    cfg.placement = Some(PlacementSpec { router: RouterKind::RoundRobin, groups });
     cfg
 }
 
@@ -89,17 +113,24 @@ struct E2eCell {
     scenario: String,
     groups: usize,
     backend: &'static str,
+    exec: &'static str,
     events: u64,
     wall_secs: f64,
     events_per_sec: f64,
     requests: usize,
     drops: usize,
+    /// `VmHWM` growth across this cell's run. The high-water mark is
+    /// monotone, so the before/after delta is exactly the portion of
+    /// peak RSS first reached during this cell (zero once a later cell
+    /// stays under an earlier cell's mark).
+    rss_delta_bytes: u64,
 }
 
-/// One heterogeneous-overload cell: streaming aggregation on, so the run
-/// measures the simulator core, not record retention.
-fn run_e2e(scenario: &str, g: usize, heap: bool, duration: f64) -> E2eCell {
-    let cfg = cluster_cfg(g);
+/// One end-to-end cell: streaming aggregation on, so the run measures
+/// the simulator core, not record retention. Returns the report plus
+/// the cell's `VmHWM` growth.
+fn run_cell(cfg: SystemConfig, scenario: &str, heap: bool, duration: f64) -> (SimReport, u64) {
+    let rss_before = peak_rss_bytes().unwrap_or(0);
     let params = ScenarioParams {
         num_models: 4,
         duration,
@@ -118,20 +149,58 @@ fn run_e2e(scenario: &str, g: usize, heap: bool, duration: f64) -> E2eCell {
     sys.preload_warm();
     sys.set_streaming(start);
     let report = sys.run();
-    assert_eq!(report.violations, 0, "{scenario}/G={g}: violations");
-    assert_eq!(report.oom_events, 0, "{scenario}/G={g}: OOM");
-    let requests: usize = report.groups.iter().map(|gs| gs.requests).sum();
-    let drops: usize = report.groups.iter().map(|gs| gs.drops).sum();
+    assert_eq!(report.violations, 0, "{scenario}: violations");
+    assert_eq!(report.oom_events, 0, "{scenario}: OOM");
+    let rss_after = peak_rss_bytes().unwrap_or(0);
+    (report, rss_after.saturating_sub(rss_before))
+}
+
+fn cell_from_report(
+    scenario: &str,
+    g: usize,
+    backend: &'static str,
+    exec: &'static str,
+    report: &SimReport,
+    rss_delta_bytes: u64,
+) -> E2eCell {
     E2eCell {
         scenario: scenario.to_string(),
         groups: g,
-        backend: if heap { "heap" } else { "calendar" },
+        backend,
+        exec,
         events: report.events,
         wall_secs: report.wall_secs,
         events_per_sec: report.events as f64 / report.wall_secs.max(1e-9),
-        requests,
-        drops,
+        requests: report.groups.iter().map(|gs| gs.requests).sum(),
+        drops: report.groups.iter().map(|gs| gs.drops).sum(),
+        rss_delta_bytes,
     }
+}
+
+fn run_e2e(scenario: &str, g: usize, heap: bool, duration: f64) -> E2eCell {
+    let (report, rss_delta) = run_cell(cluster_cfg(g), scenario, heap, duration);
+    let backend = if heap { "heap" } else { "calendar" };
+    cell_from_report(scenario, g, backend, "sequential", &report, rss_delta)
+}
+
+/// The seq ≡ par bit-for-bit contract at bench scale (the test-suite
+/// copy lives in `rust/tests/determinism.rs`).
+fn assert_reports_identical(seq: &SimReport, par: &SimReport, tag: &str) {
+    assert_eq!(seq.events, par.events, "{tag}: events diverge");
+    assert_eq!(seq.sim_end.to_bits(), par.sim_end.to_bits(), "{tag}: sim_end diverges");
+    assert_eq!(seq.streaming_counts, par.streaming_counts, "{tag}: measured counts diverge");
+    assert_eq!(seq.streaming_latency, par.streaming_latency, "{tag}: latency summary diverges");
+    assert_eq!(seq.groups.len(), par.groups.len(), "{tag}: group count diverges");
+    for (s, p) in seq.groups.iter().zip(&par.groups) {
+        assert_eq!(
+            (s.requests, s.drops, s.swaps, s.events),
+            (p.requests, p.drops, p.swaps, p.events),
+            "{tag}: group {} accounting diverges",
+            s.group
+        );
+    }
+    assert_eq!(seq.h2d_bytes, par.h2d_bytes, "{tag}: H2D traffic diverges");
+    assert_eq!(seq.mem_high_water, par.mem_high_water, "{tag}: memory high-water diverges");
 }
 
 /// Peak resident set size in bytes (`VmHWM`); `None` off Linux.
@@ -151,11 +220,13 @@ fn cell_json(c: &E2eCell) -> Json {
         ("scenario", c.scenario.as_str().into()),
         ("groups", c.groups.into()),
         ("backend", c.backend.into()),
+        ("exec", c.exec.into()),
         ("events", (c.events as usize).into()),
         ("wall_secs", c.wall_secs.into()),
         ("events_per_sec", c.events_per_sec.into()),
         ("requests", c.requests.into()),
         ("drops", c.drops.into()),
+        ("rss_delta_bytes", (c.rss_delta_bytes as usize).into()),
     ])
 }
 
@@ -235,6 +306,48 @@ fn main() {
     );
     println!("end-to-end speedup (zipf, G=4): {e2e_speedup:.2}x");
 
+    // 4. Parallel executor vs sequential on dedicated placements: each
+    //    model hosted by exactly one group, so the bounded-lag executor
+    //    takes its fast path (DESIGN.md §13). The bit-equality oracle
+    //    runs before the speedup is reported — a fast-but-wrong parallel
+    //    run can never post a number.
+    section("parallel vs sequential: zipf overload, dedicated placements, G in {2, 4}");
+    let mut par_cells = Vec::new();
+    let mut par_rows = Vec::new();
+    let mut parallel_speedup_g2 = 0.0;
+    let mut parallel_speedup_g4 = 0.0;
+    for g in [2usize, 4] {
+        let (seq_report, seq_rss) =
+            run_cell(dedicated_cfg(g, ExecMode::Sequential), "zipf", false, duration);
+        let (par_report, par_rss) =
+            run_cell(dedicated_cfg(g, ExecMode::ParallelGroups), "zipf", false, duration);
+        assert_reports_identical(&seq_report, &par_report, &format!("zipf dedicated G={g}"));
+        let seq =
+            cell_from_report("zipf-dedicated", g, "calendar", "sequential", &seq_report, seq_rss);
+        let par =
+            cell_from_report("zipf-dedicated", g, "calendar", "parallel", &par_report, par_rss);
+        let speedup = par.events_per_sec / seq.events_per_sec.max(1e-9);
+        if g == 2 {
+            parallel_speedup_g2 = speedup;
+        } else {
+            parallel_speedup_g4 = speedup;
+        }
+        for cell in [&seq, &par] {
+            par_rows.push(vec![
+                cell.groups.to_string(),
+                cell.exec.to_string(),
+                cell.events.to_string(),
+                format!("{:.3}", cell.wall_secs),
+                fmt_rate(cell.events_per_sec),
+                format!("{:.1} MiB", cell.rss_delta_bytes as f64 / (1024.0 * 1024.0)),
+            ]);
+        }
+        println!("parallel speedup (zipf dedicated, G={g}): {speedup:.2}x, reports bit-identical");
+        par_cells.push(seq);
+        par_cells.push(par);
+    }
+    table(&["G", "exec", "events", "wall s", "events/sec", "RSS delta"], &par_rows);
+
     let rss = peak_rss_bytes();
     if let Some(b) = rss {
         println!("peak RSS: {:.1} MiB", b as f64 / (1024.0 * 1024.0));
@@ -256,6 +369,9 @@ fn main() {
             ("queue_speedup_largest_pending", churn_speedup.into()),
             ("e2e", Json::Arr(e2e_json)),
             ("e2e_speedup_zipf_g4", e2e_speedup.into()),
+            ("parallel", Json::Arr(par_cells.iter().map(cell_json).collect())),
+            ("parallel_speedup_g2", parallel_speedup_g2.into()),
+            ("parallel_speedup_g4", parallel_speedup_g4.into()),
             ("peak_rss_bytes", rss.map(|b| b as usize).unwrap_or(0).into()),
         ]),
     );

@@ -18,7 +18,11 @@
 //! - the winning spec partitions exactly the 8-GPU budget;
 //! - re-evaluating the winning spec on the bench's own harness
 //!   reproduces the planner's reported outcome bit-for-bit (the
-//!   determinism contract, at full bench scale).
+//!   determinism contract, at full bench scale);
+//! - the zipf cell re-planned with a 1-worker and a 4-worker scoring
+//!   pool returns the identical plan bit-for-bit (batch-synchronous
+//!   scoring, DESIGN.md §13), and the candidates/sec of both arms —
+//!   plus their ratio — land in the JSON artifact.
 //!
 //! ```bash
 //! cargo bench --bench planner_suite              # full sweep
@@ -27,6 +31,8 @@
 
 #[path = "common.rs"]
 mod common;
+
+use std::time::Instant;
 
 use computron::config::{ParallelConfig, PlacementSpec, PlannerConfig, SystemConfig};
 use computron::coordinator::planner;
@@ -180,6 +186,60 @@ fn main() {
          over every hand-written and single-group baseline"
     );
 
+    // Parallel-scoring A/B: the zipf cell planned with a 1-worker and a
+    // 4-worker scoring pool. The plan is worker-count independent by
+    // construction (batch-synchronous scoring, DESIGN.md §13) — the
+    // identity is asserted before the speedup is reported, so a
+    // fast-but-divergent pool can never post a number.
+    section("planner scoring pool: workers 1 vs 4 (zipf cell)");
+    let mut ab_knobs = PlannerConfig::for_config(&base, GPU_BUDGET);
+    ab_knobs.duration = duration;
+    ab_knobs.rate_scale = 60.0;
+    ab_knobs.eval_budget = eval_budget;
+    ab_knobs.seed = SEED;
+    let mut workers_json = Vec::new();
+    let mut rates = [0.0_f64; 2];
+    let mut plans = Vec::new();
+    for (slot, workers) in [1usize, 4].into_iter().enumerate() {
+        ab_knobs.workers = workers;
+        let t = Instant::now();
+        let plan = planner::plan(&base, "zipf", &ab_knobs)
+            .unwrap_or_else(|e| panic!("workers={workers}: planner failed: {e}"));
+        let wall = t.elapsed().as_secs_f64();
+        let rate = plan.evals as f64 / wall.max(1e-9);
+        rates[slot] = rate;
+        println!(
+            "workers={workers}: {} evals in {wall:.3} s ({rate:.1} candidates/sec)",
+            plan.evals
+        );
+        workers_json.push(Json::from_pairs(vec![
+            ("workers", workers.into()),
+            ("evals", plan.evals.into()),
+            ("wall_secs", wall.into()),
+            ("candidates_per_sec", rate.into()),
+        ]));
+        plans.push(plan);
+    }
+    assert_eq!(
+        plans[0].spec, plans[1].spec,
+        "scoring pool width must not change the plan"
+    );
+    assert_eq!(
+        plans[0].score.to_bits(),
+        plans[1].score.to_bits(),
+        "scoring pool width must not change the plan score"
+    );
+    assert_eq!(
+        plans[0].evals, plans[1].evals,
+        "scoring pool width must not change the eval count"
+    );
+    assert_eq!(
+        plans[0].outcome, plans[1].outcome,
+        "scoring pool width must not change the winning outcome"
+    );
+    let planner_speedup_workers4 = rates[1] / rates[0].max(1e-9);
+    println!("planner scoring speedup (workers=4 vs 1): {planner_speedup_workers4:.2}x");
+
     let payload = Json::from_pairs(vec![
         ("experiment", "planner_suite".into()),
         ("duration", duration.into()),
@@ -188,6 +248,8 @@ fn main() {
         ("seed", SEED.into()),
         ("fast", fast.into()),
         ("cells", Json::Arr(cells_json)),
+        ("scoring_workers", Json::Arr(workers_json)),
+        ("planner_speedup_workers4", planner_speedup_workers4.into()),
     ]);
     common::save_report("planner_suite", payload.clone());
     common::save_bench_json("planner_suite", payload);

@@ -317,6 +317,14 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.pop_with_seq().map(|(at, _, event)| (at, event))
+    }
+
+    /// Like [`EventQueue::pop`], but also return the event's scheduling
+    /// sequence number — the deterministic FIFO tiebreaker. The parallel
+    /// executor (`cluster::parallel`) stamps per-group emission logs
+    /// with it so window merges happen in `(time, seq, group)` order.
+    pub fn pop_with_seq(&mut self) -> Option<(SimTime, u64, E)> {
         let s = match &mut self.backend {
             Backend::Heap(heap) => heap.pop()?,
             Backend::Calendar(cal) => cal.pop_min()?,
@@ -324,7 +332,26 @@ impl<E> EventQueue<E> {
         assert!(s.at >= self.now, "event queue popped out of order");
         self.now = s.at;
         self.processed += 1;
-        Some((s.at, s.event))
+        Some((s.at, s.seq, s.event))
+    }
+
+    /// Peek the earliest event without popping it: its timestamp plus a
+    /// reference to the payload. `&mut self` because the calendar
+    /// backend may need to drain ring buckets into the `near` heap to
+    /// surface the minimum — pure internal bookkeeping that never
+    /// advances the clock, bumps `processed`, or reorders events. The
+    /// parallel executor (`cluster::parallel`) peeks each group queue's
+    /// head to test window membership before committing to a pop.
+    pub fn peek_next(&mut self) -> Option<(SimTime, &E)> {
+        match &mut self.backend {
+            Backend::Heap(heap) => heap.peek().map(|s| (s.at, &s.event)),
+            Backend::Calendar(cal) => {
+                if cal.near.is_empty() {
+                    cal.refill_near();
+                }
+                cal.near.peek().map(|s| (s.at, &s.event))
+            }
+        }
     }
 
     /// Timestamp of the next event, if any.
@@ -349,6 +376,16 @@ impl<E> EventQueue<E> {
     /// Number of events processed so far (perf metric: events/sec).
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// The active backend, so derived queues (the parallel executor's
+    /// per-group splits) can mirror the caller's calendar-vs-heap
+    /// choice.
+    pub fn backend(&self) -> QueueBackend {
+        match &self.backend {
+            Backend::Heap(_) => QueueBackend::Heap,
+            Backend::Calendar(_) => QueueBackend::Calendar,
+        }
     }
 }
 
@@ -544,5 +581,52 @@ mod tests {
         }
         let got: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn peek_next_returns_head_without_consuming() {
+        // `peek_next` must surface exactly the event the next `pop`
+        // would return — same timestamp, same payload — while leaving
+        // the clock, the processed counter, and the pop order intact,
+        // on both backends and across far-horizon re-anchoring.
+        for backend in BACKENDS {
+            let mut q = EventQueue::with_backend(backend);
+            assert!(q.peek_next().is_none());
+            q.schedule_at(1_000_000.0, "far");
+            q.schedule_at(0.5, "early");
+            q.schedule_at(0.5, "early-tie");
+            assert_eq!(q.peek_next(), Some((0.5, &"early")));
+            // Idempotent: peeking again sees the same head.
+            assert_eq!(q.peek_next(), Some((0.5, &"early")));
+            assert_eq!(q.now(), 0.0);
+            assert_eq!(q.processed(), 0);
+            assert_eq!(q.pop().unwrap(), (0.5, "early"));
+            assert_eq!(q.peek_next(), Some((0.5, &"early-tie")));
+            assert_eq!(q.pop().unwrap(), (0.5, "early-tie"));
+            assert_eq!(q.peek_next(), Some((1_000_000.0, &"far")));
+            assert_eq!(q.pop().unwrap(), (1_000_000.0, "far"));
+            assert!(q.peek_next().is_none());
+            assert_eq!(q.processed(), 3);
+        }
+    }
+
+    #[test]
+    fn pop_with_seq_reports_scheduling_order() {
+        // Seqs are assigned in scheduling order and returned by
+        // `pop_with_seq` as the (time, seq) merge key the parallel
+        // executor relies on — including across same-time ties.
+        for backend in BACKENDS {
+            let mut q = EventQueue::with_backend(backend);
+            q.schedule_at(1.0, "late");
+            q.schedule_at(0.5, "early");
+            q.schedule_at(0.5, "early-tie");
+            let popped: Vec<(SimTime, u64, &str)> =
+                std::iter::from_fn(|| q.pop_with_seq()).collect();
+            assert_eq!(
+                popped,
+                vec![(0.5, 1, "early"), (0.5, 2, "early-tie"), (1.0, 0, "late")]
+            );
+            assert_eq!(q.processed(), 3);
+        }
     }
 }

@@ -13,6 +13,7 @@ pub mod gpu;
 pub mod hostmem;
 pub mod hosttier;
 pub mod link;
+pub mod parallel;
 pub mod stream;
 
 pub use clock::{EventQueue, QueueBackend, SimTime};

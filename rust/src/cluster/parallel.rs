@@ -1,0 +1,302 @@
+//! Conservative bounded-lag parallel execution primitives (DESIGN.md §13).
+//!
+//! The parallel cluster executor in `sim::system` partitions the global
+//! event calendar into per-group local queues plus one cluster-level
+//! queue for cross-group events (arrival dispatch, faults, retries,
+//! autoscale ticks). Between cluster events every group can run
+//! independently: group-event handlers only ever schedule further events
+//! for their *own* group, so the next cluster event's timestamp is a
+//! conservative lookahead horizon — no event before it can affect any
+//! other group. This module owns the pieces of that scheme that are
+//! independent of the simulation payload:
+//!
+//! - [`WindowKey`] / [`key_before`]: the `(time, tag)` total order that
+//!   reproduces the sequential run's `(time, seq)` pop order. Tags are
+//!   assigned so that for any two events that *could* tie in time, tag
+//!   order equals the scheduling-sequence order the sequential executor
+//!   would have produced (see [`TagSource`]).
+//! - [`TagSource`]: the coordinator's stamp counter. Everything the
+//!   coordinator schedules between windows gets an even tag `2·stamp`
+//!   in scheduling order; everything a group worker schedules *during*
+//!   window `W` gets the frozen odd tag `2W−1` — strictly after every
+//!   event already pending at window start (stamps `< W`) and strictly
+//!   before everything the coordinator schedules afterwards (stamps
+//!   `≥ W`), exactly matching the sequential seq assignment. Same-tag
+//!   ties only arise between events of *different* groups inside one
+//!   window, where relative order is unobservable (handlers never touch
+//!   another group), or within one group, where local-queue insertion
+//!   order equals scheduling order — the same FIFO tiebreak the
+//!   sequential queue applies.
+//! - [`FeedCursor`] / [`arrival_key`] / fast-path tags: the dedicated
+//!   placement fast path (every model hosted by exactly one group, no
+//!   faults) never materializes cluster events at all — each group
+//!   consumes its pre-routed slice of the arrival schedule directly and
+//!   runs to completion in a single window. Arrival `j` of the global
+//!   schedule carries tag `2j`; events scheduled while the simulation
+//!   is between global arrivals `i` and `i+1` ("span `i`") carry tag
+//!   `2i+3`: they lose time-ties against arrival `i+1` (tag `2i+2`,
+//!   scheduled earlier by the lazy arrival chain) and win against
+//!   arrival `i+2` (tag `2i+4`) — the exact sequential tie order.
+//! - [`WindowWorker`] + [`drain_to`] / [`run_window`]: the scoped
+//!   fan-out. A window spawns one `std::thread` per group that has
+//!   in-window work (none when zero, inline when one), joins at the
+//!   horizon barrier, and hands control back to the coordinator.
+
+use super::clock::SimTime;
+
+/// The `(time, tag)` ordering key for the parallel executor. Compares
+/// lexicographically via [`key_before`]; equal keys only occur across
+/// groups, where order is unobservable.
+pub type WindowKey = (SimTime, u64);
+
+/// Horizon of the final drain once the cluster queue is empty: no key
+/// compares at-or-after it, so every pending group event is in-window.
+pub const FINAL_HORIZON: WindowKey = (f64::INFINITY, u64::MAX);
+
+/// Strict lexicographic `(time, tag)` comparison — `true` when `a`
+/// must be processed before `b`.
+pub fn key_before(a: WindowKey, b: WindowKey) -> bool {
+    match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    }
+}
+
+/// Coordinator stamp counter (see the module doc for the even/odd tag
+/// scheme). One per parallel run.
+#[derive(Debug, Default)]
+pub struct TagSource {
+    stamp: u64,
+}
+
+impl TagSource {
+    pub fn new() -> TagSource {
+        TagSource { stamp: 0 }
+    }
+
+    /// Tag for the coordinator's next schedule call (cluster events and
+    /// group injections alike): even, strictly increasing.
+    pub fn next_even(&mut self) -> u64 {
+        let tag = 2 * self.stamp;
+        self.stamp += 1;
+        tag
+    }
+
+    /// Frozen tag for everything group workers schedule during the
+    /// window that starts now: `2·stamp − 1` — after every pending
+    /// even tag, before every future one. (`stamp == 0` means nothing
+    /// was ever scheduled, so no window can have work; the clamped 0
+    /// is never compared.)
+    pub fn window_tag(&self) -> u64 {
+        (2 * self.stamp).saturating_sub(1)
+    }
+}
+
+/// Key of global arrival `j` in the dedicated fast path: tag `2j`.
+pub fn arrival_key(j: usize, at: SimTime) -> WindowKey {
+    (at, 2 * j as u64)
+}
+
+/// Monotone cursor over the *global* arrival-time schedule, shared
+/// (read-only) by every fast-path group worker. `passed` counts global
+/// arrivals whose key is ≤ the event currently being processed; child
+/// events scheduled while handling that event carry
+/// [`FeedCursor::child_tag`] = `2·passed + 1` (span `passed − 1` in
+/// module-doc terms: `2(passed−1)+3`).
+#[derive(Debug, Default, Clone)]
+pub struct FeedCursor {
+    passed: usize,
+}
+
+impl FeedCursor {
+    /// Advance past every global arrival with key ≤ `key` (the event
+    /// about to be processed). When that event *is* arrival `j` itself,
+    /// this advances past it too — uniform rule, no special case.
+    pub fn advance(&mut self, times: &[SimTime], key: WindowKey) {
+        while self.passed < times.len() {
+            let ak = arrival_key(self.passed, times[self.passed]);
+            if key_before(key, ak) {
+                break;
+            }
+            self.passed += 1;
+        }
+    }
+
+    /// Tag for events scheduled while handling the event the cursor was
+    /// last advanced to.
+    pub fn child_tag(&self) -> u64 {
+        2 * self.passed as u64 + 1
+    }
+
+    /// Number of global arrivals at-or-before the current event.
+    pub fn passed(&self) -> usize {
+        self.passed
+    }
+}
+
+/// One group's executable stack, as seen by the window fan-out: peek
+/// the next pending key, or pop-and-process exactly one event.
+/// `next_key` takes `&mut self` because the calendar queue may refill
+/// internal buckets to surface its head; it must not process anything.
+pub trait WindowWorker: Send {
+    fn next_key(&mut self) -> Option<WindowKey>;
+    fn step(&mut self);
+}
+
+/// Drain one worker up to (not including) `horizon`.
+pub fn drain_to<W: WindowWorker>(w: &mut W, horizon: WindowKey) {
+    while let Some(k) = w.next_key() {
+        if !key_before(k, horizon) {
+            break;
+        }
+        w.step();
+    }
+}
+
+/// Run one bounded-lag window: every worker with in-window work drains
+/// to the horizon barrier. Workers cannot observe or create work for
+/// each other inside a window (group handlers schedule only same-group
+/// events), so the set of busy workers is fixed at window start: spawn
+/// scoped threads only when two or more have work, drain inline when
+/// one, return immediately when none.
+pub fn run_window<W: WindowWorker>(workers: &mut [W], horizon: WindowKey) {
+    let mut busy: Vec<&mut W> = workers
+        .iter_mut()
+        .filter(|w| w.next_key().is_some_and(|k| key_before(k, horizon)))
+        .collect();
+    match busy.len() {
+        0 => {}
+        1 => drain_to(busy[0], horizon),
+        _ => {
+            std::thread::scope(|s| {
+                for w in busy {
+                    s.spawn(move || drain_to(w, horizon));
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::clock::EventQueue;
+
+    #[test]
+    fn key_before_is_strict_lexicographic() {
+        assert!(key_before((1.0, 5), (2.0, 0)));
+        assert!(key_before((1.0, 2), (1.0, 3)));
+        assert!(!key_before((1.0, 3), (1.0, 3)));
+        assert!(!key_before((2.0, 0), (1.0, 9)));
+        // Everything precedes the final horizon.
+        assert!(key_before((f64::MAX, u64::MAX), FINAL_HORIZON));
+    }
+
+    #[test]
+    fn tag_source_even_odd_interleave() {
+        let mut tags = TagSource::new();
+        assert_eq!(tags.window_tag(), 0); // degenerate pre-schedule value
+        assert_eq!(tags.next_even(), 0);
+        assert_eq!(tags.next_even(), 2);
+        // Window starting now: its worker events sort after both pending
+        // coordinator tags and before the next coordinator tag.
+        let w = tags.window_tag();
+        assert_eq!(w, 3);
+        assert!(w > 2 && w < tags.next_even());
+    }
+
+    #[test]
+    fn feed_cursor_reproduces_sequential_tie_order() {
+        // Global arrivals at t = 0.0, 1.0, 1.0, 2.0. A child event
+        // scheduled while handling arrival 1 ("span 1") must lose a
+        // time-tie at t=1.0 against arrival 2 — wait, arrival 2 is also
+        // at 1.0: the child is scheduled *after* arrival 2 was (the
+        // lazy chain schedules arrival i+1 first), so the child's tag
+        // must exceed arrival 2's and stay below arrival 3's.
+        let times = [0.0, 1.0, 1.0, 2.0];
+        let mut cur = FeedCursor::default();
+        // Handle arrival 1 (key (1.0, 2)): passes arrivals 0 and 1.
+        cur.advance(&times, arrival_key(1, 1.0));
+        assert_eq!(cur.passed(), 2);
+        let child = cur.child_tag();
+        assert_eq!(child, 5); // span 1 → 2·1+3
+        assert!(arrival_key(2, 1.0).1 < child, "arrival 2 wins the t=1.0 tie");
+        assert!(child < arrival_key(3, 2.0).1, "child beats arrival 3");
+        // A queue event at (1.0, child) then passes arrival 2 as well:
+        // subsequent children belong to span 2.
+        cur.advance(&times, (1.0, child));
+        assert_eq!(cur.passed(), 3);
+        assert_eq!(cur.child_tag(), 7);
+        // Cursor is monotone: re-advancing to an earlier key is a no-op.
+        cur.advance(&times, (0.0, 0));
+        assert_eq!(cur.passed(), 3);
+    }
+
+    /// Toy worker: a tagged event queue plus a log of processed ids.
+    struct Toy {
+        q: EventQueue<(u64, u32)>,
+        log: Vec<(SimTime, u32)>,
+    }
+
+    impl Toy {
+        fn new(events: &[(SimTime, u64, u32)]) -> Toy {
+            let mut q = EventQueue::new();
+            for &(at, tag, id) in events {
+                q.schedule_at(at, (tag, id));
+            }
+            Toy { q, log: Vec::new() }
+        }
+    }
+
+    impl WindowWorker for Toy {
+        fn next_key(&mut self) -> Option<WindowKey> {
+            self.q.peek_next().map(|(t, &(tag, _))| (t, tag))
+        }
+        fn step(&mut self) {
+            let (t, (_, id)) = self.q.pop().expect("step after next_key");
+            self.log.push((t, id));
+        }
+    }
+
+    #[test]
+    fn drain_to_stops_at_horizon_including_tag_ties() {
+        let mut w = Toy::new(&[(1.0, 3, 1), (2.0, 3, 2), (2.0, 8, 3), (3.0, 3, 4)]);
+        // Horizon at (2.0, 6): the (2.0, 3) event is in-window, the
+        // (2.0, 8) event is not — the tag tiebreak is load-bearing.
+        drain_to(&mut w, (2.0, 6));
+        assert_eq!(w.log, vec![(1.0, 1), (2.0, 2)]);
+        drain_to(&mut w, FINAL_HORIZON);
+        assert_eq!(w.log, vec![(1.0, 1), (2.0, 2), (2.0, 3), (3.0, 4)]);
+    }
+
+    #[test]
+    fn run_window_drains_every_busy_worker_to_the_barrier() {
+        let mut workers = vec![
+            Toy::new(&[(0.5, 1, 10), (1.5, 1, 11)]),
+            Toy::new(&[(0.7, 1, 20), (0.9, 1, 21), (2.5, 1, 22)]),
+            Toy::new(&[(9.0, 1, 30)]),
+        ];
+        run_window(&mut workers, (1.6, 0));
+        assert_eq!(workers[0].log, vec![(0.5, 10), (1.5, 11)]);
+        assert_eq!(workers[1].log, vec![(0.7, 20), (0.9, 21)]);
+        assert!(workers[2].log.is_empty(), "worker 3 had no in-window work");
+        // The next window (final drain) finishes the rest.
+        run_window(&mut workers, FINAL_HORIZON);
+        assert_eq!(workers[1].log.last(), Some(&(2.5, 22)));
+        assert_eq!(workers[2].log, vec![(9.0, 30)]);
+    }
+
+    #[test]
+    fn window_events_scheduled_mid_drain_stay_in_window() {
+        // A worker that schedules a follow-up inside the window must
+        // process it before the barrier when its key is in-window —
+        // mirrored here by pre-loading the chain the real workers build
+        // incrementally (the queue accepts mid-drain schedules; see
+        // `clock::tests::schedule_during_drain`).
+        let mut w = Toy::new(&[(1.0, 5, 1)]);
+        w.q.schedule_at(1.2, (5, 2));
+        drain_to(&mut w, (2.0, 0));
+        assert_eq!(w.log, vec![(1.0, 1), (1.2, 2)]);
+    }
+}

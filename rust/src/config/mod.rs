@@ -804,6 +804,54 @@ impl Objective {
     }
 }
 
+/// Execution mode for the cluster simulator's event loop (DESIGN.md
+/// §13). Serving (`serve`) ignores it — the mode only selects how the
+/// simulator drains its event calendar.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One global calendar queue drained on the calling thread — the
+    /// reference semantics every other mode is pinned against.
+    #[default]
+    Sequential,
+    /// Conservative bounded-lag parallel execution
+    /// (`cluster::parallel`): per-group event queues drained by scoped
+    /// worker threads between cluster-event barriers, emissions merged
+    /// in deterministic `(time, seq, group)` order. Bit-for-bit
+    /// equivalent to [`ExecMode::Sequential`] (pinned by
+    /// `rust/tests/determinism.rs`); workloads the window executor
+    /// cannot partition (closed-loop drivers, a shared host tier, or a
+    /// single group) fall back to the sequential drain.
+    ParallelGroups,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "sequential" => Some(ExecMode::Sequential),
+            "parallel" | "parallel-groups" => Some(ExecMode::ParallelGroups),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::ParallelGroups => "parallel",
+        }
+    }
+
+    /// Session-wide default: `COMPUTRON_EXEC=parallel` flips every
+    /// config constructed without an explicit `exec` to the parallel
+    /// executor, so CI can route the whole test suite through the
+    /// parallel path (unknown values fall back to sequential).
+    pub fn default_from_env() -> ExecMode {
+        match std::env::var("COMPUTRON_EXEC") {
+            Ok(v) => ExecMode::parse(&v).unwrap_or(ExecMode::Sequential),
+            Err(_) => ExecMode::Sequential,
+        }
+    }
+}
+
 /// Knobs for the simulator-in-the-loop placement planner
 /// (`coordinator::planner`): the GPU budget to partition, the candidate
 /// per-group shape grid, the search budget in *simulator evaluations*,
@@ -841,6 +889,13 @@ pub struct PlannerConfig {
     /// (`benches/planner_suite.rs`): planning matters exactly when the
     /// fleet is capacity-bound.
     pub rate_scale: f64,
+    /// Size of the scoring worker pool: simulator evaluations inside a
+    /// greedy-seed or annealer-proposal batch run concurrently on up to
+    /// this many threads, and the results are folded back in proposal
+    /// order. The planned spec stays a pure function of `seed` —
+    /// `workers = 1` and `workers = N` produce bit-for-bit identical
+    /// plans (pinned by `rust/tests/planner_prop.rs`).
+    pub workers: usize,
 }
 
 impl PlannerConfig {
@@ -866,7 +921,14 @@ impl PlannerConfig {
             router: RouterKind::RoundRobin,
             duration: 6.0,
             rate_scale: 60.0,
+            workers: PlannerConfig::default_workers(),
         }
+    }
+
+    /// Default scoring-pool size: the machine's available parallelism,
+    /// falling back to a single worker when it cannot be determined.
+    pub fn default_workers() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
     /// Default knobs anchored to a base config: like
@@ -906,6 +968,9 @@ impl PlannerConfig {
         }
         if self.eval_budget == 0 {
             return bad("eval_budget must be >= 1 simulator evaluation".into());
+        }
+        if self.workers == 0 {
+            return bad("workers must be >= 1 scoring thread".into());
         }
         if !(self.duration.is_finite() && self.duration > 0.0) {
             return bad(format!("duration must be positive, got {}", self.duration));
@@ -1063,6 +1128,12 @@ pub struct SystemConfig {
     /// `None` is the paper's infinite-warm-host assumption — bit-for-bit
     /// the pre-tier simulator.
     pub host: Option<HostConfig>,
+    /// Simulator event-loop execution mode (DESIGN.md §13). Constructors
+    /// honour the `COMPUTRON_EXEC` env var as the session default;
+    /// `exec: "parallel"` in JSON or `simulate --parallel` opt in
+    /// explicitly. Bit-for-bit equivalent to sequential; `serve` ignores
+    /// it.
+    pub exec: ExecMode,
 }
 
 #[derive(Debug)]
@@ -1168,6 +1239,7 @@ impl SystemConfig {
             placement: None,
             faults: None,
             host: None,
+            exec: ExecMode::default_from_env(),
         }
     }
 
@@ -1186,6 +1258,7 @@ impl SystemConfig {
             placement: None,
             faults: None,
             host: None,
+            exec: ExecMode::default_from_env(),
         }
     }
 
@@ -1208,6 +1281,7 @@ impl SystemConfig {
             placement: None,
             faults: None,
             host: None,
+            exec: ExecMode::default_from_env(),
         }
     }
 
@@ -1515,6 +1589,9 @@ impl SystemConfig {
         if let Some(h) = &self.host {
             j.set("host", h.to_json());
         }
+        if self.exec != ExecMode::Sequential {
+            j.set("exec", self.exec.name().into());
+        }
         j
     }
 
@@ -1589,6 +1666,7 @@ impl SystemConfig {
             placement: None,
             faults: None,
             host: None,
+            exec: ExecMode::default_from_env(),
         };
         if let Some(s) = j.get("scenario").and_then(Json::as_str) {
             cfg.scenario = Some(s.to_string());
@@ -1628,6 +1706,10 @@ impl SystemConfig {
         }
         if let Some(hj) = j.get("host") {
             cfg.host = Some(HostConfig::from_json(hj)?);
+        }
+        if let Some(s) = j.get("exec").and_then(Json::as_str) {
+            cfg.exec = ExecMode::parse(s)
+                .ok_or_else(|| e(format!("unknown exec mode '{s}' (sequential/parallel)")))?;
         }
         if let Some(v) = j.get("gpu_mem").and_then(Json::as_usize) {
             cfg.hardware.gpu_mem = v;

@@ -186,6 +186,87 @@ struct SwapPair {
     delta_saved: usize,
 }
 
+/// Slot states for `RecordSlab`.
+enum RecordSlot {
+    /// Admitted, record not produced yet.
+    Pending,
+    /// Completed; the record waits to be drained in completion order.
+    Done(RequestRecord),
+    /// Exited without a record (shed, deadline drop, fail harvest) or
+    /// already drained; retired when the contiguous prefix advances.
+    Drained,
+}
+
+/// Vec-backed slab of completed-request records keyed by request id
+/// (the last allocation item of ROADMAP item 4). Admission reserves
+/// the slot in id order, completion writes the record in place, and
+/// draining walks the completion-order index — so the full-retention
+/// path grows one arena in arrival order instead of pushing records
+/// interleaved with the drop/swap vectors, while the drained prefix
+/// retires after each streaming drain to keep the slab O(live
+/// requests) on 10M-request traces.
+#[derive(Default)]
+struct RecordSlab {
+    /// Request id of `slots[0]`.
+    base: RequestId,
+    slots: Vec<RecordSlot>,
+    /// Completion order — the drain order the report contract pins.
+    done: Vec<RequestId>,
+}
+
+impl RecordSlab {
+    /// Reserve the slot for a freshly assigned id (ids are monotone, so
+    /// this is always a push).
+    fn admit(&mut self, id: RequestId) {
+        debug_assert_eq!(id, self.base + self.slots.len() as RequestId, "ids admit in order");
+        self.slots.push(RecordSlot::Pending);
+    }
+
+    fn slot(&mut self, id: RequestId) -> &mut RecordSlot {
+        &mut self.slots[(id - self.base) as usize]
+    }
+
+    /// The request completed: write its record into the reserved slot.
+    fn complete(&mut self, id: RequestId, record: RequestRecord) {
+        let slot = self.slot(id);
+        debug_assert!(matches!(slot, RecordSlot::Pending), "double completion for {id}");
+        *slot = RecordSlot::Done(record);
+        self.done.push(id);
+    }
+
+    /// The request exited without a record (shed / dropped / harvested).
+    fn retire(&mut self, id: RequestId) {
+        *self.slot(id) = RecordSlot::Drained;
+    }
+
+    /// Append the finished records to `out` in completion order, then
+    /// retire the slab's drained prefix (everything stays, with its
+    /// capacity, for the next round).
+    fn drain_into(&mut self, out: &mut Vec<RequestRecord>) {
+        out.reserve(self.done.len());
+        for i in 0..self.done.len() {
+            let id = self.done[i];
+            let slot = std::mem::replace(self.slot(id), RecordSlot::Drained);
+            match slot {
+                RecordSlot::Done(record) => out.push(record),
+                _ => unreachable!("done index points at a non-Done slot"),
+            }
+        }
+        self.done.clear();
+        let retired =
+            self.slots.iter().take_while(|s| matches!(s, RecordSlot::Drained)).count();
+        self.slots.drain(..retired);
+        self.base += retired as RequestId;
+    }
+
+    /// Drain everything into a fresh vector (full-retention path).
+    fn take_all(&mut self) -> Vec<RequestRecord> {
+        let mut out = Vec::new();
+        self.drain_into(&mut out);
+        out
+    }
+}
+
 /// The engine.
 pub struct Engine {
     cfg: EngineConfig,
@@ -228,7 +309,9 @@ pub struct Engine {
     next_entry: EntryId,
     next_request: RequestId,
     outbox: Vec<Entry>,
-    completed: Vec<RequestRecord>,
+    /// Completed-request records, arena-allocated by request id and
+    /// drained in completion order (see `RecordSlab`).
+    completed: RecordSlab,
     dropped: Vec<DropRecord>,
     swap_records: Vec<SwapRecord>,
     /// Monotone count of every drop ever recorded, unaffected by
@@ -277,7 +360,7 @@ impl Engine {
             next_entry: 0,
             next_request: 0,
             outbox: Vec::new(),
-            completed: Vec::new(),
+            completed: RecordSlab::default(),
             dropped: Vec::new(),
             swap_records: Vec::new(),
             drops_total: 0,
@@ -455,6 +538,9 @@ impl Engine {
     pub fn on_request(&mut self, now: f64, model: ModelId, input_len: usize) -> RequestId {
         let id = self.next_request;
         self.next_request += 1;
+        // Reserve the record slot up front (shed requests retire it
+        // below) so the slab's id keying stays gap-free.
+        self.completed.admit(id);
         // The predictor observes every arrival, including ones shed below:
         // rejected traffic is still demand, and prefetching its model is
         // exactly what can make the *next* request feasible again.
@@ -479,6 +565,7 @@ impl Engine {
                 group: 0,
                 reason: DropReason::Infeasible,
             });
+            self.completed.retire(id);
             return id;
         }
         self.queues.push(Request { id, model, arrival: now, input_len });
@@ -554,7 +641,7 @@ impl Engine {
         self.inflight_per_model[batch.model] -= 1;
         let submit = self.batch_submit_times.remove(&entry_id).expect("missing submit time");
         for req in batch.requests.iter() {
-            self.completed.push(RequestRecord {
+            self.completed.complete(req.id, RequestRecord {
                 id: req.id,
                 model: req.model,
                 arrival: req.arrival,
@@ -696,16 +783,16 @@ impl Engine {
         out.append(&mut self.outbox);
     }
 
-    /// Completed request records (drained).
+    /// Completed request records (drained), in completion order.
     pub fn take_completed(&mut self) -> Vec<RequestRecord> {
-        std::mem::take(&mut self.completed)
+        self.completed.take_all()
     }
 
     /// Append completed request records to `out` (streaming-aggregation
-    /// variant: drained incrementally, the internal buffer keeps its
-    /// capacity).
+    /// variant: drained incrementally, the slab keeps its capacity and
+    /// retires the drained prefix).
     pub fn drain_completed_into(&mut self, out: &mut Vec<RequestRecord>) {
-        out.append(&mut self.completed);
+        self.completed.drain_into(out);
     }
 
     /// Requests dropped by admission control (drained).
@@ -782,6 +869,7 @@ impl Engine {
                 }
                 let req = self.queues.pop_head(model).unwrap();
                 self.drops_total += 1;
+                self.completed.retire(req.id);
                 self.dropped.push(DropRecord {
                     id: req.id,
                     model,
@@ -1114,6 +1202,11 @@ impl Engine {
         self.cancelling.iter_mut().for_each(|c| *c = false);
         self.outbox.clear();
         self.swap.fail_all();
+        // Harvested requests never complete in this engine (retries get
+        // fresh ids): retire their record slots.
+        for req in &harvested {
+            self.completed.retire(req.id);
+        }
         harvested
     }
 

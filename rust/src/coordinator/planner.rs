@@ -35,6 +35,15 @@
 //! The whole pipeline is a pure function of (base config, scenario,
 //! knobs): the forecast trace is seeded by `knobs.seed` and so is the
 //! annealer, so a fixed seed reproduces the plan bit-for-bit.
+//!
+//! Scoring is **batch-parallel** (DESIGN.md §13): both phases collect
+//! candidates into fixed-size batches whose uncached members are
+//! evaluated concurrently on up to `knobs.workers` threads, then folded
+//! in proposal order on the caller's thread. Every RNG draw — proposal
+//! moves and Metropolis acceptance — happens in the single-threaded
+//! generate/fold phases, and `EvalHarness::evaluate` is a pure function
+//! of the spec, so the plan is bit-for-bit identical for any worker
+//! count (pinned by `rust/tests/planner_prop.rs`).
 
 use crate::config::{
     GroupSpec, Objective, ParallelConfig, PlacementSpec, PlannerConfig, SystemConfig,
@@ -400,6 +409,71 @@ impl Scorer<'_> {
         self.cache.insert(key.to_string(), (s, outcome));
         Ok((s, outcome))
     }
+
+    /// Fill the cache for a batch of candidates, evaluating the
+    /// uncached ones concurrently on up to `workers` threads. Batch
+    /// duplicates collapse to one evaluation (first occurrence wins),
+    /// and `evals` counts exactly the simulations run — identical
+    /// bookkeeping to scoring the batch one by one, because evaluation
+    /// is a pure function of the spec.
+    fn score_batch(
+        &mut self,
+        jobs: &[(String, PlacementSpec)],
+        workers: usize,
+    ) -> anyhow::Result<()> {
+        let mut seen: HashSet<&str> = HashSet::new();
+        let todo: Vec<&(String, PlacementSpec)> = jobs
+            .iter()
+            .filter(|(key, _)| !self.cache.contains_key(key) && seen.insert(key.as_str()))
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let outcomes = evaluate_concurrently(self.harness, &todo, workers)?;
+        for ((key, _), outcome) in todo.into_iter().zip(outcomes) {
+            self.evals += 1;
+            let s = outcome.score(self.objective);
+            self.cache.insert(key.clone(), (s, outcome));
+        }
+        Ok(())
+    }
+}
+
+/// Evaluate `jobs` on up to `workers` threads (scoped — the harness is
+/// borrowed, not cloned), returning outcomes in job order. Work is
+/// handed out through an atomic cursor so slow candidates do not stall
+/// the pool; on errors the first one *in job order* is returned, so the
+/// failure a caller sees is independent of thread interleaving.
+fn evaluate_concurrently(
+    harness: &EvalHarness,
+    jobs: &[&(String, PlacementSpec)],
+    workers: usize,
+) -> anyhow::Result<Vec<EvalOutcome>> {
+    let threads = workers.max(1).min(jobs.len());
+    if threads <= 1 {
+        return jobs.iter().map(|(_, spec)| harness.evaluate(spec)).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<anyhow::Result<EvalOutcome>>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let Some((_, spec)) = jobs.get(i) else { break };
+                let outcome = harness.evaluate(spec);
+                *slots[i].lock().expect("result slot poisoned") = Some(outcome);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("result slot poisoned")
+                .expect("every job index was claimed")
+        })
+        .collect()
 }
 
 /// One annealer move proposal; `None` when the move does not apply to
@@ -503,6 +577,12 @@ fn propose(
     }
 }
 
+/// Annealer proposals scored per round. A worker-count-independent
+/// constant: `knobs.workers` only sets how many threads *evaluate* a
+/// round, never its shape, which is what pins `workers=1` and
+/// `workers=N` to the same plan.
+const PROPOSAL_BATCH: usize = 8;
+
 /// Run the full search. See the module docs for the pipeline; the
 /// result's `spec` is ready for `simulate --placement` and its score is
 /// never below `greedy_score`.
@@ -539,12 +619,21 @@ pub fn plan(
     };
 
     // Greedy seed: round-robin across group counts, half the budget.
+    // The pool is key-deduped, so the first `seed_count` candidates in
+    // seeding order are exactly the ones the one-at-a-time loop would
+    // have scored before exhausting the seed budget; batch-evaluate
+    // them, then fold in seeding order (cache hits) so ties still
+    // anchor on the earliest-scored candidate.
     let seed_budget = (knobs.eval_budget / 2).max(1);
+    let order = seeding_order(&pool);
+    let seed_count = order.len().min(seed_budget);
+    let seed_jobs: Vec<(String, PlacementSpec)> = order[..seed_count]
+        .iter()
+        .map(|&i| (pool[i].key(), pool[i].spec(knobs.router)))
+        .collect();
+    scorer.score_batch(&seed_jobs, knobs.workers)?;
     let mut best: Option<(Candidate, f64, EvalOutcome)> = None;
-    for &i in &seeding_order(&pool) {
-        if scorer.evals >= seed_budget {
-            break;
-        }
+    for &i in &order[..seed_count] {
         let cand = &pool[i];
         let (s, o) = scorer.score(&cand.key(), &cand.spec(knobs.router))?;
         // Strictly-greater: earliest-scored candidate anchors ties.
@@ -552,35 +641,56 @@ pub fn plan(
             best = Some((cand.clone(), s, o));
         }
     }
-    let (greedy_cand, greedy_score, greedy_outcome) =
+    let (greedy_cand, greedy_score, _greedy_outcome) =
         best.clone().expect("seed phase scores at least one candidate");
 
-    // Simulated annealing from the greedy seed.
+    // Simulated annealing from the greedy seed, batch-synchronous:
+    // each round proposes up to `PROPOSAL_BATCH` feasible moves from
+    // the current candidate (single-threaded — the move RNG stream is
+    // fixed), scores the batch concurrently, then folds the proposals
+    // in order with Metropolis acceptance (the only other RNG draws).
+    // The batch size is a constant, NOT the worker count, so the
+    // round structure — and therefore the plan — is bit-for-bit
+    // identical at any `knobs.workers`.
     let mut rng = Rng::seeded(knobs.seed ^ 0xA11E_A1E5_0000_0001);
     let (mut cur, mut cur_score) = (greedy_cand.clone(), greedy_score);
     let t0 = 0.05 * greedy_score.abs().max(1e-3);
     let max_iters = knobs.eval_budget.saturating_mul(20);
     let mut iters = 0usize;
     while scorer.evals < knobs.eval_budget && iters < max_iters {
-        iters += 1;
-        let Some(mut next) = propose(&cur, &pool, num_models, &mut rng) else {
-            continue;
-        };
-        next.canonicalize();
-        let spec = next.spec(knobs.router);
-        if !is_feasible(&base, &spec) {
-            continue;
+        // Each batch entry costs at most one evaluation, so capping the
+        // batch at the remaining budget keeps `evals <= eval_budget`.
+        let room = knobs.eval_budget - scorer.evals;
+        let mut batch: Vec<Candidate> = Vec::with_capacity(PROPOSAL_BATCH.min(room));
+        while batch.len() < PROPOSAL_BATCH.min(room) && iters < max_iters {
+            iters += 1;
+            let Some(mut next) = propose(&cur, &pool, num_models, &mut rng) else {
+                continue;
+            };
+            next.canonicalize();
+            if !is_feasible(&base, &next.spec(knobs.router)) {
+                continue;
+            }
+            batch.push(next);
         }
-        let (s, o) = scorer.score(&next.key(), &spec)?;
-        let progress = scorer.evals as f64 / knobs.eval_budget as f64;
-        let temp = (t0 * (1.0 - progress)).max(1e-9);
-        let delta = s - cur_score;
-        if delta >= 0.0 || rng.f64() < (delta / temp).exp() {
-            cur = next.clone();
-            cur_score = s;
+        if batch.is_empty() {
+            continue; // iteration cap hit while proposing; loop exits
         }
-        if best.as_ref().map(|(_, b, _)| s > *b).unwrap_or(true) {
-            best = Some((next, s, o));
+        let jobs: Vec<(String, PlacementSpec)> =
+            batch.iter().map(|c| (c.key(), c.spec(knobs.router))).collect();
+        scorer.score_batch(&jobs, knobs.workers)?;
+        for next in batch {
+            let (s, o) = scorer.score(&next.key(), &next.spec(knobs.router))?;
+            let progress = scorer.evals as f64 / knobs.eval_budget as f64;
+            let temp = (t0 * (1.0 - progress)).max(1e-9);
+            let delta = s - cur_score;
+            if delta >= 0.0 || rng.f64() < (delta / temp).exp() {
+                cur = next.clone();
+                cur_score = s;
+            }
+            if best.as_ref().map(|(_, b, _)| s > *b).unwrap_or(true) {
+                best = Some((next, s, o));
+            }
         }
     }
 

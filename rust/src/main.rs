@@ -16,7 +16,7 @@
 
 use anyhow::{anyhow, Result};
 use computron::config::{
-    EngineConfig, LoadDesign, ModelCatalog, Objective, ParallelConfig, PlacementSpec,
+    EngineConfig, ExecMode, LoadDesign, ModelCatalog, Objective, ParallelConfig, PlacementSpec,
     PlannerConfig, PolicyKind, RouterKind, SchedulerKind, SystemConfig,
 };
 use computron::coordinator::engine::SwapRecord;
@@ -151,6 +151,7 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("chaos", "named chaos schedule generating a fault plan from --seed/--duration (see `computron chaos`); overrides --faults", None)
         .opt("prefetch-min-count", "Markov prefetcher's minimum transition observations (default 2)", None)
         .flag("no-pinned", "use pageable host memory (ablation)")
+        .flag("parallel", "run group event loops concurrently (bounded-lag windows, DESIGN.md §13); bit-for-bit identical results, also COMPUTRON_EXEC=parallel")
         .parse_from(argv)?;
 
     let mut cfg = match args.get("config") {
@@ -222,6 +223,9 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     }
     if args.flag("no-pinned") {
         cfg.hardware.pinned = false;
+    }
+    if args.flag("parallel") {
+        cfg.exec = ExecMode::ParallelGroups;
     }
     let duration = args.get_f64("duration")?.unwrap_or(30.0);
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
@@ -460,6 +464,7 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     .opt("duration", "measured seconds per scoring run", Some("6"))
     .opt("rate-scale", "offered-load multiplier of the forecast (default matches the overload suite)", Some("60"))
     .opt("max-groups", "maximum number of groups in a candidate (default min(budget, 8))", None)
+    .opt("workers", "scoring threads for candidate batches (default: available parallelism; the plan is identical at any count)", None)
     .opt("router", "round-robin|least-loaded|resident-affinity written into the plan", None)
     .opt("out", "write the winning placement JSON here (a `simulate --placement` file)", None)
     .opt("emit-config", "write a full system config JSON (catalog + placement) here", None)
@@ -493,6 +498,9 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     }
     if let Some(n) = args.get_usize("max-groups")? {
         knobs.max_groups = n;
+    }
+    if let Some(n) = args.get_usize("workers")? {
+        knobs.workers = n;
     }
     if let Some(s) = args.get("router") {
         knobs.router = RouterKind::parse(s)

@@ -21,7 +21,11 @@ use crate::cluster::compute::ComputeModel;
 use crate::cluster::fault::{AutoscalePolicy, FaultAction, RetryPolicy};
 use crate::cluster::gpu::GpuDevice;
 use crate::cluster::hosttier::{HostTier, HostTierReport, SwapTier};
-use crate::config::{GroupSpec, LoadDesign, SystemConfig};
+use crate::cluster::parallel::{
+    self, arrival_key, key_before, FeedCursor, TagSource, WindowKey, WindowWorker,
+    FINAL_HORIZON,
+};
+use crate::config::{ExecMode, GroupSpec, LoadDesign, SystemConfig};
 use crate::coordinator::autoscale::{self, GroupLoad, ScaleAction};
 use crate::coordinator::engine::{DropReason, DropRecord, Engine, RequestRecord, SwapRecord};
 use crate::coordinator::entry::{Entry, EntryId, LoadDirection, ModelId, RequestId};
@@ -304,6 +308,15 @@ struct SimGroup {
     recovery_time: f64,
     /// Requests harvested from this group and re-homed elsewhere.
     rehomed: u64,
+    /// Scratch buffer for `GroupCtx::route_outbox` (capacity reused
+    /// across calls; group-local so parallel windows stay allocation-
+    /// free and share nothing).
+    outbox_buf: Vec<Entry>,
+    /// Scratch buffer for `GroupCtx::wake_worker` → `handle_worker_actions`.
+    action_buf: Vec<WorkerAction>,
+    /// Events popped that addressed a dead incarnation of this group;
+    /// folded into `FaultStats::dead_event_drops` at report time.
+    dead_drops: u64,
 }
 
 impl SimGroup {
@@ -463,6 +476,9 @@ impl SimGroup {
             downtime: 0.0,
             recovery_time: 0.0,
             rehomed: 0,
+            outbox_buf: Vec::new(),
+            action_buf: Vec::new(),
+            dead_drops: 0,
         })
     }
 
@@ -523,26 +539,96 @@ pub struct MeasuredCounts {
     pub drops: usize,
 }
 
-/// Streaming aggregation state (`SimCluster::set_streaming`): after every
-/// event the affected engines' record outboxes are drained into reusable
-/// scratch buffers, folded into O(1) sketches/counters, and discarded —
-/// a 10M-request trace never materializes its record vectors.
-struct Streaming {
+/// Per-group streaming aggregation state (`SimCluster::set_streaming`):
+/// after every event the touched engine's record outboxes are drained
+/// into reusable scratch buffers, folded into O(1) sketches/counters,
+/// and discarded — a 10M-request trace never materializes its record
+/// vectors. One sketch per group (not one cluster-wide) so parallel
+/// windows absorb without sharing, and the final merge order (group 0,
+/// 1, …) is deterministic in both execution modes. A single-group run
+/// merges into empty sketches — the bit-for-bit identity.
+struct GroupStream {
     /// Latencies of requests arriving before this are excluded from the
     /// sketch (warmup window), matching `SimReport::latencies_from`.
     measure_start: f64,
-    /// Percentile sketch over measured latencies.
+    /// Percentile sketch over this group's measured latencies.
     latency: TDigest,
-    /// Exact mean/std over measured latencies.
+    /// Exact mean/std over this group's measured latencies.
     welford: Welford,
-    /// Per-group absorbed counters, group order.
-    counts: Vec<StreamCounts>,
-    /// Measured-window completions/attainment/drops across the cluster.
+    /// Absorbed record counters for this group.
+    counts: StreamCounts,
+    /// Measured-window completions/attainment/drops on this group.
     measured: MeasuredCounts,
     /// Scratch drain buffers, reused every event.
     requests: Vec<RequestRecord>,
     drops: Vec<DropRecord>,
     swaps: Vec<SwapRecord>,
+}
+
+impl GroupStream {
+    fn new(measure_start: f64) -> GroupStream {
+        GroupStream {
+            measure_start,
+            latency: TDigest::default(),
+            welford: Welford::default(),
+            counts: StreamCounts::default(),
+            measured: MeasuredCounts::default(),
+            requests: Vec::new(),
+            drops: Vec::new(),
+            swaps: Vec::new(),
+        }
+    }
+
+    /// Drain the engine's record outboxes and fold them into the
+    /// sketches/counters. Absorb order equals the engine's production
+    /// order, so per-group sketch state is independent of how groups
+    /// interleave — the parallel-equivalence anchor.
+    fn absorb(&mut self, engine: &mut Engine) {
+        self.requests.clear();
+        engine.drain_completed_into(&mut self.requests);
+        for r in &self.requests {
+            if r.arrival >= self.measure_start {
+                let l = r.latency();
+                self.latency.add(l);
+                self.welford.add(l);
+                self.measured.completed += 1;
+                if r.attained() {
+                    self.measured.attained += 1;
+                }
+            }
+        }
+        self.counts.requests += self.requests.len();
+        self.drops.clear();
+        engine.drain_dropped_into(&mut self.drops);
+        self.counts.drops += self.drops.len();
+        self.measured.drops +=
+            self.drops.iter().filter(|d| d.arrival >= self.measure_start).count();
+        self.swaps.clear();
+        engine.drain_swap_records_into(&mut self.swaps);
+        for s in &self.swaps {
+            if !s.cancelled {
+                self.counts.swaps += 1;
+                self.counts.swap_bytes += s.bytes as u64;
+                self.counts.delta_bytes_saved += s.delta_bytes_saved as u64;
+            }
+        }
+    }
+}
+
+/// Parallel-run state (`ExecMode::ParallelGroups`, DESIGN.md §13): the
+/// single calendar queue splits into one cluster-scope queue plus one
+/// local queue per group. Every entry carries a tag (see
+/// `cluster::parallel`) that embeds the sequential scheduling order, so
+/// window-horizon comparisons reproduce the sequential pop order's
+/// tie-breaks exactly.
+struct ParRun {
+    /// Cross-group events only (arrivals, faults, retries, autoscale).
+    cluster_q: EventQueue<(u64, ClusterEv)>,
+    /// `(tag, epoch, ev)` per group — drained concurrently inside a
+    /// window, fed by the coordinator between windows.
+    group_qs: Vec<EventQueue<(u64, u32, Ev)>>,
+    /// Coordinator stamp counter (even tags; windows freeze odd ones).
+    tags: TagSource,
 }
 
 /// The composed cluster simulator. `SimSystem` (the pre-cluster name) is
@@ -567,13 +653,12 @@ pub struct SimCluster {
     /// holds O(1) pending arrivals instead of the whole trace.
     arrivals: Vec<Arrival>,
     next_arrival: usize,
-    /// Scratch buffer for `route_outbox` (capacity reused across calls).
-    outbox_buf: Vec<Entry>,
-    /// Scratch buffer for `wake_worker` → `handle_worker_actions`.
-    action_buf: Vec<WorkerAction>,
     /// `Some` after `set_streaming`: aggregate records per event instead
-    /// of retaining them.
-    streaming: Option<Streaming>,
+    /// of retaining them (one sketch per group, merged at report time).
+    streaming: Option<Vec<GroupStream>>,
+    /// `Some` while a parallel run is in flight (`ExecMode::ParallelGroups`);
+    /// `None` on the sequential path — zero new state there.
+    par: Option<ParRun>,
     /// Resolved fault-plan timeline, scheduled into the queue at run
     /// start (empty without a `FaultPlan` — zero extra events).
     fault_timeline: Vec<(f64, FaultAction)>,
@@ -711,9 +796,8 @@ impl SimCluster {
             closed_sent: 0,
             arrivals: Vec::new(),
             next_arrival: 0,
-            outbox_buf: Vec::new(),
-            action_buf: Vec::new(),
             streaming: None,
+            par: None,
             fault_timeline: plan.timeline(),
             retry: plan.retry,
             autoscale: plan.autoscale,
@@ -826,252 +910,91 @@ impl SimCluster {
     /// full-retention run. Latencies of requests arriving before
     /// `measure_start` are excluded from the sketch (warmup).
     pub fn set_streaming(&mut self, measure_start: f64) {
-        self.streaming = Some(Streaming {
-            measure_start,
-            latency: TDigest::default(),
-            welford: Welford::default(),
-            counts: vec![StreamCounts::default(); self.groups.len()],
-            measured: MeasuredCounts::default(),
-            requests: Vec::new(),
-            drops: Vec::new(),
-            swaps: Vec::new(),
-        });
+        self.streaming =
+            Some((0..self.groups.len()).map(|_| GroupStream::new(measure_start)).collect());
     }
 
-    /// Route engine outbox entries into stage-0 pipes (or broadcast).
-    /// Each entry is boxed into an `Arc` once; the per-tp-rank (or
-    /// per-broadcast-target) fan-out clones the pointer, not the payload.
-    fn route_outbox(&mut self, g: usize) {
-        let ep = self.groups[g].epoch;
-        let lat = self.cfg.hardware.pipe_latency;
-        let design = self.cfg.engine.load_design;
-        let mut entries = std::mem::take(&mut self.outbox_buf);
-        entries.clear();
-        self.groups[g].engine.drain_outbox_into(&mut entries);
-        let tp = self.groups[g].tp;
-        let world = self.groups[g].workers.len();
-        for entry in entries.drain(..) {
-            // Host-tier staging must run before the entry fans out: a
-            // load's transfer plan (delta form, NVMe gates) is fixed at
-            // submission. No-op without a host config.
-            self.stage_tiered_load(g, &entry);
-            let entry = Arc::new(entry);
-            match design {
-                LoadDesign::Broadcast if entry.is_load() => {
-                    // Fig 2 strawman: every worker gets the load entry
-                    // directly, racing any in-flight batch entries.
-                    for w in 0..world {
-                        self.queue.schedule_in(
-                            lat,
-                            gev(g, ep, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
-                        );
-                    }
-                }
-                _ => {
-                    for tp_rank in 0..tp {
-                        let w = self.groups[g].worker_idx(0, tp_rank);
-                        self.queue.schedule_in(
-                            lat,
-                            gev(g, ep, Ev::Deliver { worker: w, entry: Arc::clone(&entry) }),
-                        );
-                    }
-                }
-            }
-        }
-        self.outbox_buf = entries;
-    }
-
-    /// Host-memory-hierarchy bookkeeping for one freshly drained outbox
-    /// entry (DESIGN.md §12). Swap-ins consult the scope's host tier:
-    /// host-warm pays host→GPU only (the legacy transfer, bit-for-bit),
-    /// host-cold stages NVMe→host first — per-chunk completion times
-    /// become H2D gates on the workers. Variants whose base is resident
-    /// on this group's GPUs load in delta form via worker transfer
-    /// overrides. Offloads re-admit the model host-side (write-back).
-    /// No-op without a host config.
-    fn stage_tiered_load(&mut self, g: usize, entry: &Entry) {
-        if self.host_tiers.is_empty() {
-            return;
-        }
-        let Entry::Load(l) = entry else { return };
-        if l.dir == LoadDirection::Cancel {
-            return;
-        }
-        let local = l.model;
-        let cm = self.groups[g].models[local];
-        let t = if self.host_shared { 0 } else { g };
-        let now = self.queue.now();
-        // Disjoint field borrows: the tier mutates while the evictable
-        // closure reads engine residency. A host entry may be evicted
-        // only when no in-scope GPU copy of its model exists (evicting
-        // under a GPU-resident model would force an NVMe round trip the
-        // moment that model offloads).
-        let groups = &self.groups;
-        let model_groups = &self.model_groups;
-        let per_group = !self.host_shared;
-        let evictable = |m: ModelId| {
-            model_groups[m].iter().all(|&(hg, lm)| {
-                (per_group && hg != g)
-                    || groups[hg].engine.residency(lm) == Residency::Offloaded
-            })
-        };
-        if l.dir == LoadDirection::Offload {
-            // Write-back: the offloaded model becomes host-warm in full
-            // form (its GPU copy was full regardless of how it loaded).
-            // Overflow streams through, counted by the tier.
-            self.host_tiers[t].admit(cm, now, &evictable);
-            return;
-        }
-        let chunks = self.groups[g].chunks_per_model[local];
-        let outcome = self.host_tiers[t].fetch(cm, now, chunks, &evictable);
-        let gated = outcome.tier == SwapTier::NvmeMiss;
-        // Delta swapping: when this variant's base is resident on this
-        // group's GPUs (the engine pins it there while the variant is
-        // up), only the delta moves host→GPU. Guarded by per-stage
-        // feasibility: every chunk of every stage must keep ≥ 1 byte
-        // and ≥ 1 message after scaling.
-        let grp = &mut self.groups[g];
-        let f = self.delta_fractions[cm];
-        let base_resident = self.cat_bases[cm]
-            .and_then(|cb| grp.models.iter().position(|&x| x == cb))
-            .map(|lb| grp.engine.residency(lb) == Residency::Resident)
-            .unwrap_or(false);
-        let chunked = chunks > 1;
-        let full_plans: Vec<Vec<ChunkSpec>> = grp
-            .workers
-            .iter()
-            .map(|w| match (&grp.chunk_plans, chunked) {
-                (Some(plans), true) => plans[local][w.pos.pp_rank].clone(),
-                _ => vec![ChunkSpec {
-                    layers: 1,
-                    messages: w.shard_messages[local],
-                    bytes: w.shard_bytes[local],
-                }],
-            })
-            .collect();
-        let use_delta = base_resident
-            && full_plans.iter().all(|p| {
-                let tb = p.iter().map(|c| c.bytes).sum::<usize>();
-                let tm = p.iter().map(|c| c.messages).sum::<usize>();
-                scale_count(tb, f) >= p.len() && scale_count(tm, f) >= p.len()
-            });
-        if !use_delta && !gated {
-            // Host-warm full-form load: exactly the legacy transfer (the
-            // annotation stamps provenance without touching the plan).
-            grp.engine.annotate_load(l.id, outcome.tier, None, 0);
-            return;
-        }
-        let mut full_max = 0usize;
-        let mut eff_max = 0usize;
-        for (w, fp) in grp.workers.iter_mut().zip(&full_plans) {
-            let plan = if use_delta { delta_chunk_plan(fp, f) } else { fp.clone() };
-            full_max = full_max.max(fp.iter().map(|c| c.bytes).sum::<usize>());
-            eff_max = eff_max.max(plan.iter().map(|c| c.bytes).sum::<usize>());
-            w.set_load_override(local, LoadOverride { plan, gates: outcome.gates.clone() });
-        }
-        let (bytes_override, delta_saved) =
-            if use_delta { (Some(eff_max), full_max - eff_max) } else { (None, 0) };
-        grp.engine.annotate_load(l.id, outcome.tier, bytes_override, delta_saved);
-    }
-
-    /// Drains `actions` (a caller-owned scratch buffer) and turns each
-    /// worker action into scheduled events.
-    fn handle_worker_actions(&mut self, g: usize, widx: usize, actions: &mut Vec<WorkerAction>) {
-        let ep = self.groups[g].epoch;
-        let now = self.queue.now();
-        let lat = self.cfg.hardware.pipe_latency;
-        let pp = self.groups[g].pp;
-        let pos = self.groups[g].workers[widx].pos;
-        for action in actions.drain(..) {
-            match action {
-                WorkerAction::Forward { entry, at } => {
-                    debug_assert!(at >= now);
-                    let last = pos.pp_rank == pp - 1;
-                    if last {
-                        // Last stage returns batch output to the engine;
-                        // load entries terminate here (the engine ack
-                        // comes from TransferFin).
-                        if let Entry::Batch(b) = &*entry {
-                            let ret = gev(g, ep, Ev::BatchReturn { entry_id: b.id });
-                            self.queue.schedule_at(at + lat, ret);
-                        }
-                    } else {
-                        // Broadcast design does not forward load entries
-                        // (they were delivered to every stage directly).
-                        if self.cfg.engine.load_design == LoadDesign::Broadcast
-                            && entry.is_load()
-                        {
-                            continue;
-                        }
-                        let next = self.groups[g].worker_idx(pos.pp_rank + 1, pos.tp_rank);
-                        self.queue
-                            .schedule_at(at + lat, gev(g, ep, Ev::Deliver { worker: next, entry }));
-                    }
-                }
-                WorkerAction::BatchOutput { entry_id, at } => {
-                    self.queue.schedule_at(at + lat, gev(g, ep, Ev::BatchReturn { entry_id }));
-                }
-                WorkerAction::TransferDone { entry_id, model, dir, at } => {
-                    self.queue.schedule_at(
-                        at,
-                        gev(g, ep, Ev::TransferFin { worker: widx, entry_id, model, dir }),
-                    );
-                }
-                WorkerAction::ChunkDone { entry_id, model, dir, at } => {
-                    self.queue.schedule_at(
-                        at,
-                        gev(g, ep, Ev::ChunkFin { worker: widx, entry_id, model, dir }),
-                    );
-                }
-            }
-        }
-        // Keep the worker loop turning.
-        let w = &self.groups[g].workers[widx];
-        let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
-        if !inbox_empty {
-            let at = busy_until.max(now);
-            self.queue.schedule_at(at, gev(g, ep, Ev::Wake { worker: widx }));
-        }
-    }
-
-    fn wake_worker(&mut self, g: usize, widx: usize) {
-        let ep = self.groups[g].epoch;
-        let now = self.queue.now();
-        let dispatch = self.cfg.hardware.dispatch_overhead;
-        let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
-        // Pre-resolve the compute time for the entry at the head of the
-        // inbox (if it is a batch) so the step closure is allocation-free.
-        let head = match self.groups[g].workers[widx].inbox.front().map(|e| &**e) {
-            Some(Entry::Batch(b)) => Some((b.model, b.batch_size(), b.seqlen)),
-            _ => None,
-        };
-        let head_cost = match head {
-            Some((m, bs, sl)) => {
-                let compute = self.cfg.hardware.compute;
-                self.groups[g].stage_time(&compute, m, bs, sl)
-            }
-            None => 0.0,
-        };
-        let mut actions = std::mem::take(&mut self.action_buf);
-        actions.clear();
-        let stepped = self.groups[g].workers[widx].step_into(
-            now,
-            |_| head_cost,
-            dispatch,
-            sync_loads,
-            &mut actions,
-        );
-        if stepped {
-            self.handle_worker_actions(g, widx, &mut actions);
+    /// Build the group-scoped handler context for `g` (coordinator
+    /// side). Sequential mode splits the group slice around `g` so the
+    /// shared-host-tier eviction check can read neighbour residency;
+    /// parallel mode routes scheduling into `g`'s local queue under
+    /// fresh coordinator (even) tags.
+    fn ctx(&mut self, g: usize) -> GroupCtx<'_> {
+        let (left, rest) = self.groups.split_at_mut(g);
+        let (grp, right) = rest.split_first_mut().expect("group index in range");
+        let tier = if self.host_shared {
+            self.host_tiers.first_mut()
         } else {
-            let w = &self.groups[g].workers[widx];
-            let (inbox_empty, busy_until) = (w.inbox.is_empty(), w.busy_until);
-            if !inbox_empty && busy_until > now {
-                // Busy: try again when free.
-                self.queue.schedule_at(busy_until, gev(g, ep, Ev::Wake { worker: widx }));
+            self.host_tiers.get_mut(g)
+        };
+        let stream = self.streaming.as_mut().map(|v| &mut v[g]);
+        let sink = match self.par.as_mut() {
+            None => EvSink::Cluster { queue: &mut self.queue },
+            Some(p) => EvSink::Coord { queue: &mut p.group_qs[g], tags: &mut p.tags },
+        };
+        GroupCtx {
+            gid: g,
+            cfg: &self.cfg,
+            grp,
+            left,
+            right,
+            tier,
+            host_shared: self.host_shared,
+            model_groups: &self.model_groups,
+            cat_bases: &self.cat_bases,
+            delta_fractions: &self.delta_fractions,
+            stream,
+            sink,
+        }
+    }
+
+    /// Schedule a cluster-scope event. Sequential mode uses the single
+    /// queue (bit-for-bit the old call sites); parallel mode stamps a
+    /// coordinator tag and uses the cluster-scope queue. Group events
+    /// never come through here in parallel mode — they go through
+    /// `GroupCtx`'s sink into the per-group queues.
+    fn sched_cluster_at(&mut self, at: f64, ev: ClusterEv) {
+        match self.par.as_mut() {
+            None => self.queue.schedule_at(at, ev),
+            Some(p) => {
+                let tag = p.tags.next_even();
+                p.cluster_q.schedule_at(at, (tag, ev));
             }
         }
-        self.action_buf = actions;
+    }
+
+    /// The cluster-scope clock: the timestamp of the cluster event being
+    /// processed (group handlers carry their own explicit `now`).
+    fn cluster_now(&self) -> f64 {
+        match &self.par {
+            None => self.queue.now(),
+            Some(p) => p.cluster_q.now(),
+        }
+    }
+
+    fn sched_cluster_in(&mut self, delay: f64, ev: ClusterEv) {
+        let at = self.cluster_now() + delay;
+        self.sched_cluster_at(at, ev);
+    }
+
+    /// Pending events across every live queue — the autoscaler's re-arm
+    /// guard (sequential: the one queue; parallel: cluster + groups).
+    fn pending_events(&self) -> usize {
+        match &self.par {
+            None => self.queue.len(),
+            Some(p) => {
+                p.cluster_q.len() + p.group_qs.iter().map(EventQueue::len).sum::<usize>()
+            }
+        }
+    }
+
+    /// Streaming mode: fold group `g`'s freshly produced records into
+    /// its sketch. Only needed for records produced outside `GroupCtx`
+    /// handling (fault actions); the ctx absorbs its own.
+    fn absorb_group(&mut self, g: usize) {
+        if let Some(streams) = self.streaming.as_mut() {
+            streams[g].absorb(&mut self.groups[g].engine);
+        }
     }
 
     /// Pick the destination group for one arrival of catalog `model`, or
@@ -1144,9 +1067,7 @@ impl SimCluster {
             .find(|&&(hg, _)| hg == g)
             .map(|&(_, l)| l)
             .expect("router picked a group that does not host the model");
-        self.groups[g].events += 1;
-        self.groups[g].engine.on_request(now, local, input_len);
-        self.route_outbox(g);
+        self.ctx(g).feed_request(now, local, input_len);
         true
     }
 
@@ -1156,7 +1077,8 @@ impl SimCluster {
     fn apply_fault_action(&mut self, now: f64, action: FaultAction) {
         self.fault_stats.injected += 1;
         // Fault actions are attributed to the group they act on.
-        self.groups[action.group()].events += 1;
+        let acted = action.group();
+        self.groups[acted].events += 1;
         match action {
             FaultAction::Drain { group } => {
                 let grp = &mut self.groups[group];
@@ -1172,6 +1094,9 @@ impl SimCluster {
                 }
             }
         }
+        // A failing engine can emit records (e.g. cancelled swaps) that
+        // never pass through a `GroupCtx` — absorb them here.
+        self.absorb_group(acted);
     }
 
     /// Kill a group: bump its epoch (orphaning every in-flight event
@@ -1224,8 +1149,9 @@ impl SimCluster {
         arrival: f64,
     ) {
         if attempt <= self.retry.max_retries {
-            self.queue.schedule_in(
-                self.retry.delay(attempt),
+            let delay = self.retry.delay(attempt);
+            self.sched_cluster_in(
+                delay,
                 ClusterEv::Retry { model, input_len, attempt, origin, arrival },
             );
         } else {
@@ -1279,9 +1205,7 @@ impl SimCluster {
                     .find(|&&(hg, _)| hg == g)
                     .map(|&(_, l)| l)
                     .expect("router picked a group that does not host the model");
-                self.groups[g].events += 1;
-                self.groups[g].engine.on_request(now, local, input_len);
-                self.route_outbox(g);
+                self.ctx(g).feed_request(now, local, input_len);
             }
             None => {
                 self.fault_stats.cluster_events += 1;
@@ -1317,10 +1241,10 @@ impl SimCluster {
             }
             None => {}
         }
-        // Re-arm only while the queue holds other work — the tick must
+        // Re-arm only while the queues hold other work — the tick must
         // not keep an otherwise-drained simulation alive forever.
-        if !self.queue.is_empty() {
-            self.queue.schedule_in(policy.interval, ClusterEv::AutoscaleTick);
+        if self.pending_events() > 0 {
+            self.sched_cluster_in(policy.interval, ClusterEv::AutoscaleTick);
         }
     }
 
@@ -1330,47 +1254,11 @@ impl SimCluster {
     fn schedule_next_arrival(&mut self) {
         if let Some(&a) = self.arrivals.get(self.next_arrival) {
             self.next_arrival += 1;
-            self.queue
-                .schedule_at(a.at, ClusterEv::Arrival { model: a.model, input_len: a.input_len });
+            self.sched_cluster_at(a.at, ClusterEv::Arrival {
+                model: a.model,
+                input_len: a.input_len,
+            });
         }
-    }
-
-    /// Streaming mode: drain every engine's record outboxes into scratch
-    /// buffers, fold them into the sketches/counters, and discard them.
-    /// No-op (never called) in full-retention mode.
-    fn absorb_streaming(&mut self) {
-        let Some(mut st) = self.streaming.take() else { return };
-        for (gid, grp) in self.groups.iter_mut().enumerate() {
-            st.requests.clear();
-            grp.engine.drain_completed_into(&mut st.requests);
-            for r in &st.requests {
-                if r.arrival >= st.measure_start {
-                    let l = r.latency();
-                    st.latency.add(l);
-                    st.welford.add(l);
-                    st.measured.completed += 1;
-                    if r.attained() {
-                        st.measured.attained += 1;
-                    }
-                }
-            }
-            st.counts[gid].requests += st.requests.len();
-            st.drops.clear();
-            grp.engine.drain_dropped_into(&mut st.drops);
-            st.counts[gid].drops += st.drops.len();
-            st.measured.drops +=
-                st.drops.iter().filter(|d| d.arrival >= st.measure_start).count();
-            st.swaps.clear();
-            grp.engine.drain_swap_records_into(&mut st.swaps);
-            for s in &st.swaps {
-                if !s.cancelled {
-                    st.counts[gid].swaps += 1;
-                    st.counts[gid].swap_bytes += s.bytes as u64;
-                    st.counts[gid].delta_bytes_saved += s.delta_bytes_saved as u64;
-                }
-            }
-        }
-        self.streaming = Some(st);
     }
 
     fn drive_closed_loop_next(&mut self) {
@@ -1378,7 +1266,7 @@ impl SimCluster {
             if self.closed_sent < total {
                 let model = self.closed_sent % models;
                 self.closed_sent += 1;
-                self.queue.schedule_in(0.0, ClusterEv::Arrival { model, input_len });
+                self.sched_cluster_in(0.0, ClusterEv::Arrival { model, input_len });
             }
         }
     }
@@ -1398,158 +1286,270 @@ impl SimCluster {
     }
 
     /// Run the simulation to completion and return the report.
+    ///
+    /// `ExecMode::ParallelGroups` runs the conservative bounded-lag
+    /// executor (DESIGN.md §13), pinned bit-for-bit equivalent to the
+    /// sequential path by `rust/tests/determinism.rs`. Workloads the
+    /// window executor cannot honour fall back to sequential: a single
+    /// group (nothing to overlap), a shared host tier (cross-group
+    /// mutable state inside windows), or a closed-loop driver (every
+    /// completion feeds the cluster scope).
     pub fn run(mut self) -> SimReport {
-        let wall_start = std::time::Instant::now();
-        // Take the arrival schedule instead of cloning it, and consume it
-        // lazily: each arrival schedules its successor when it pops
-        // (`schedule_next_arrival`), so a 10M-request trace keeps one
-        // pending arrival in the queue instead of piling in all of them
-        // upfront. The generators emit time-sorted schedules; sort
-        // defensively so a hand-built driver cannot trip the queue's
-        // no-past assert (stable, so same-time arrivals keep their order).
+        let parallel = self.cfg.exec == ExecMode::ParallelGroups
+            && self.groups.len() > 1
+            && !self.host_shared
+            && matches!(self.driver, Driver::Open(_));
+        if !parallel {
+            return self.run_sequential();
+        }
+        // Dedicated placements (every model hosted by exactly one group)
+        // with no fault/autoscale timeline never produce a cross-group
+        // event after the static route: each group runs to completion in
+        // one embarrassingly parallel window.
+        let dedicated = self.model_groups.iter().all(|hosts| hosts.len() == 1)
+            && self.fault_timeline.is_empty()
+            && self.autoscale.is_none();
+        if dedicated {
+            self.run_parallel_dedicated()
+        } else {
+            self.run_parallel_windowed()
+        }
+    }
+
+    /// Schedule run-start events: the fault-plan timeline and first
+    /// autoscaler tick go in before the first arrival (both empty/absent
+    /// without a `FaultPlan`, so fault-free runs schedule exactly the
+    /// same events as before). The arrival schedule is taken instead of
+    /// cloned and consumed lazily: each arrival schedules its successor
+    /// when it pops (`schedule_next_arrival`), so a 10M-request trace
+    /// keeps one pending arrival in the queue instead of piling in all
+    /// of them upfront. The generators emit time-sorted schedules; sort
+    /// defensively so a hand-built driver cannot trip the queue's
+    /// no-past assert (stable, so same-time arrivals keep their order).
+    fn prepare_run(&mut self) {
         self.arrivals = match &mut self.driver {
             Driver::Open(arrivals) => std::mem::take(arrivals),
             Driver::AlternatingBlocking { .. } => Vec::new(),
         };
         self.arrivals.sort_by(|a, b| a.at.total_cmp(&b.at));
         self.next_arrival = 0;
-        // Fault-plan timeline and the first autoscaler tick go in before
-        // the first arrival (both empty/absent without a `FaultPlan`, so
-        // fault-free runs schedule exactly the same events as before).
         for (at, action) in std::mem::take(&mut self.fault_timeline) {
-            self.queue.schedule_at(at, ClusterEv::Fault { action });
+            self.sched_cluster_at(at, ClusterEv::Fault { action });
         }
         if let Some(policy) = self.autoscale {
-            self.queue.schedule_in(policy.interval, ClusterEv::AutoscaleTick);
+            self.sched_cluster_in(policy.interval, ClusterEv::AutoscaleTick);
         }
         self.schedule_next_arrival();
         if matches!(self.driver, Driver::AlternatingBlocking { .. }) {
             self.drive_closed_loop_next();
         }
+    }
 
-        while let Some((now, cev)) = self.queue.pop() {
-            let drops_before = self.dropped_total();
-            match cev {
-                ClusterEv::Arrival { model, input_len } => {
-                    // Chain the successor before processing this arrival.
-                    self.schedule_next_arrival();
-                    if !self.on_arrival(now, model, input_len) {
-                        // No available host (fault layer): the arrival is
-                        // cluster-scoped; retry with backoff or drop.
-                        self.fault_stats.cluster_events += 1;
-                        self.requeue_or_drop(now, model, input_len, 1, None, now);
-                    }
-                }
-                ClusterEv::Fault { action } => {
-                    self.apply_fault_action(now, action);
-                }
-                ClusterEv::Retry { model, input_len, attempt, origin, arrival } => {
-                    self.on_retry(now, model, input_len, attempt, origin, arrival);
-                }
-                ClusterEv::AutoscaleTick => {
-                    self.on_autoscale_tick();
-                }
-                ClusterEv::Group { g, epoch, ev } => {
-                    if epoch != self.groups[g].epoch {
-                        // Addressed to a dead incarnation (scheduled
-                        // before a failure): drop with accounting instead
-                        // of firing into the rebuilt group.
-                        self.fault_stats.dead_event_drops += 1;
-                        self.drive_closed_loop_for_drops(drops_before);
-                        if self.streaming.is_some() {
-                            self.absorb_streaming();
-                        }
-                        continue;
-                    }
-                    let ep = epoch;
-                    self.groups[g].events += 1;
-                    match ev {
-                        Ev::Deliver { worker, entry } => {
-                            self.groups[g].workers[worker].deliver(entry);
-                            self.wake_worker(g, worker);
-                        }
-                        Ev::Wake { worker } => {
-                            self.wake_worker(g, worker);
-                        }
-                        Ev::TransferFin { worker, entry_id, model, dir } => {
-                            self.groups[g].workers[worker].on_transfer_done(model, dir);
-                            self.queue.schedule_in(
-                                self.cfg.hardware.pipe_latency,
-                                gev(g, ep, Ev::LoadAck { entry_id }),
-                            );
-                        }
-                        Ev::ChunkFin { worker, entry_id, model, dir } => {
-                            match self.groups[g].workers[worker].on_chunk_fin(now, model) {
-                                ChunkOutcome::Next { done_chunk, at } => {
-                                    self.queue.schedule_at(
-                                        at,
-                                        gev(g, ep, Ev::ChunkFin { worker, entry_id, model, dir }),
-                                    );
-                                    if dir == LoadDirection::Load {
-                                        let ack = Ev::ChunkAck { entry_id, chunk: done_chunk };
-                                        self.queue.schedule_in(
-                                            self.cfg.hardware.pipe_latency,
-                                            gev(g, ep, ack),
-                                        );
-                                    }
-                                }
-                                // The final chunk acks as the load entry itself.
-                                ChunkOutcome::Finished => {
-                                    self.queue.schedule_in(
-                                        self.cfg.hardware.pipe_latency,
-                                        gev(g, ep, Ev::LoadAck { entry_id }),
-                                    );
-                                }
-                                ChunkOutcome::Cancelled { cancel_entry } => {
-                                    self.queue.schedule_in(
-                                        self.cfg.hardware.pipe_latency,
-                                        gev(g, ep, Ev::LoadAck { entry_id: cancel_entry }),
-                                    );
-                                }
-                            }
-                        }
-                        Ev::ChunkAck { entry_id, chunk } => {
-                            self.groups[g].engine.on_chunk_ack(now, entry_id, chunk);
-                        }
-                        Ev::LoadAck { entry_id } => {
-                            self.groups[g].engine.on_load_ack(now, entry_id);
-                            self.route_outbox(g);
-                        }
-                        Ev::BatchReturn { entry_id } => {
-                            let tp = self.groups[g].tp;
-                            // TP=1 sends exactly one ack per batch — skip
-                            // the ack-counting map on that hot path.
-                            let full = tp == 1 || {
-                                let acks =
-                                    self.groups[g].batch_acks.entry(entry_id).or_insert(0);
-                                *acks += 1;
-                                let done = *acks == tp;
-                                if done {
-                                    self.groups[g].batch_acks.remove(&entry_id);
-                                }
-                                done
-                            };
-                            if full {
-                                self.groups[g].engine.on_batch_done(now, entry_id);
-                                self.route_outbox(g);
-                                self.drive_closed_loop_next();
-                            }
-                        }
-                    }
+    /// Process one cluster-scope event (both modes — in parallel mode
+    /// every group is already synced to this event's horizon).
+    fn dispatch_cluster_event(&mut self, now: f64, cev: ClusterEv) {
+        match cev {
+            ClusterEv::Arrival { model, input_len } => {
+                // Chain the successor before processing this arrival.
+                self.schedule_next_arrival();
+                if !self.on_arrival(now, model, input_len) {
+                    // No available host (fault layer): the arrival is
+                    // cluster-scoped; retry with backoff or drop.
+                    self.fault_stats.cluster_events += 1;
+                    self.requeue_or_drop(now, model, input_len, 1, None, now);
                 }
             }
-            self.drive_closed_loop_for_drops(drops_before);
-            if self.streaming.is_some() {
-                self.absorb_streaming();
+            ClusterEv::Fault { action } => {
+                self.apply_fault_action(now, action);
+            }
+            ClusterEv::Retry { model, input_len, attempt, origin, arrival } => {
+                self.on_retry(now, model, input_len, attempt, origin, arrival);
+            }
+            ClusterEv::AutoscaleTick => {
+                self.on_autoscale_tick();
+            }
+            ClusterEv::Group { g, epoch, ev } => {
+                let completions = self.ctx(g).handle_event(now, epoch, ev);
+                for _ in 0..completions {
+                    self.drive_closed_loop_next();
+                }
             }
         }
+    }
 
+    /// The sequential event loop: one calendar queue, events popped in
+    /// `(time, seq)` order — the reference semantics every other mode
+    /// must reproduce bit-for-bit.
+    fn run_sequential(mut self) -> SimReport {
+        let wall_start = std::time::Instant::now();
+        self.prepare_run();
+        while let Some((now, cev)) = self.queue.pop() {
+            let drops_before = self.dropped_total();
+            self.dispatch_cluster_event(now, cev);
+            self.drive_closed_loop_for_drops(drops_before);
+        }
+        let events = self.queue.processed();
+        let sim_end = self.queue.now();
+        self.finalize(wall_start, events, sim_end)
+    }
+
+    /// Split the run into per-group queues plus a cluster-scope queue.
+    /// Backends mirror the sequential queue's choice so the calendar-vs-
+    /// heap A/B stays meaningful in parallel mode.
+    fn init_par(&mut self) {
+        let backend = self.queue.backend();
+        self.par = Some(ParRun {
+            cluster_q: EventQueue::with_backend(backend),
+            group_qs: (0..self.groups.len())
+                .map(|_| EventQueue::with_backend(backend))
+                .collect(),
+            tags: TagSource::new(),
+        });
+    }
+
+    /// Drain every group's local queue up to (not including) `horizon`,
+    /// concurrently — the bounded-lag window.
+    fn run_groups_window(&mut self, horizon: WindowKey) {
+        let Some(p) = self.par.as_mut() else { return };
+        let window_tag = p.tags.window_tag();
+        let mut tiers = self.host_tiers.iter_mut();
+        let mut streams = self.streaming.as_mut().map(|v| v.iter_mut());
+        let mut units: Vec<GroupUnit<'_>> = Vec::with_capacity(self.groups.len());
+        for (gid, (grp, q)) in
+            self.groups.iter_mut().zip(p.group_qs.iter_mut()).enumerate()
+        {
+            units.push(GroupUnit {
+                gid,
+                cfg: &self.cfg,
+                grp,
+                q,
+                tier: tiers.next(),
+                stream: streams.as_mut().and_then(|it| it.next()),
+                model_groups: &self.model_groups,
+                cat_bases: &self.cat_bases,
+                delta_fractions: &self.delta_fractions,
+                tags: UnitTags::Window(window_tag),
+                feed: &[],
+                feed_pos: 0,
+                fed: 0,
+                last_feed: 0.0,
+            });
+        }
+        parallel::run_window(&mut units, horizon);
+    }
+
+    /// Events processed and end-of-sim clock across the split queues.
+    fn par_totals(&self) -> (u64, f64) {
+        let p = self.par.as_ref().expect("parallel run state");
+        let events = p.cluster_q.processed()
+            + p.group_qs.iter().map(EventQueue::processed).sum::<u64>();
+        let sim_end =
+            p.group_qs.iter().map(EventQueue::now).fold(p.cluster_q.now(), f64::max);
+        (events, sim_end)
+    }
+
+    /// The windowed parallel loop: groups run concurrently up to the
+    /// next cluster event's `(time, tag)` horizon, then the coordinator
+    /// processes that one event with full `&mut self` access (stop-the-
+    /// world between windows) and the next window opens.
+    fn run_parallel_windowed(mut self) -> SimReport {
+        let wall_start = std::time::Instant::now();
+        self.init_par();
+        self.prepare_run();
+        loop {
+            let horizon = match self.par.as_mut().expect("parallel run state").cluster_q.peek_next()
+            {
+                Some((at, &(tag, _))) => (at, tag),
+                None => FINAL_HORIZON,
+            };
+            self.run_groups_window(horizon);
+            let popped = self.par.as_mut().expect("parallel run state").cluster_q.pop();
+            let Some((now, (_, cev))) = popped else { break };
+            self.dispatch_cluster_event(now, cev);
+        }
+        let (events, sim_end) = self.par_totals();
+        self.finalize(wall_start, events, sim_end)
+    }
+
+    /// The dedicated fast path: every model has exactly one host and no
+    /// fault/autoscale timeline exists, so arrivals pre-route statically
+    /// and each group (its arrival feed merged with its local queue in
+    /// tag order) runs to completion in a single window. This is the
+    /// embarrassingly parallel case that carries the speedup target; the
+    /// tag cursor (`cluster::parallel::FeedCursor`) reproduces the
+    /// sequential interleaving's tie-breaks without ever materializing
+    /// the cluster-wide queue.
+    fn run_parallel_dedicated(mut self) -> SimReport {
+        let wall_start = std::time::Instant::now();
+        self.init_par();
+        self.arrivals = match &mut self.driver {
+            Driver::Open(arrivals) => std::mem::take(arrivals),
+            Driver::AlternatingBlocking { .. } => Vec::new(),
+        };
+        self.arrivals.sort_by(|a, b| a.at.total_cmp(&b.at));
+        // Global arrival timeline (all groups): the tag cursors scan it.
+        let times: Vec<f64> = self.arrivals.iter().map(|a| a.at).collect();
+        // Static routing: a dedicated placement gives the router no
+        // choice (and leaves its state untouched), so each arrival's
+        // destination and local model id are known upfront.
+        let mut feeds: Vec<Vec<FeedItem>> = vec![Vec::new(); self.groups.len()];
+        for (j, a) in self.arrivals.iter().enumerate() {
+            let (g, local) = self.model_groups[a.model][0];
+            feeds[g].push(FeedItem { j, at: a.at, local, input_len: a.input_len });
+        }
+        let mut fed_total = 0u64;
+        let mut last_feed = 0.0f64;
+        {
+            let p = self.par.as_mut().expect("parallel run state");
+            let mut tiers = self.host_tiers.iter_mut();
+            let mut streams = self.streaming.as_mut().map(|v| v.iter_mut());
+            let mut units: Vec<GroupUnit<'_>> = Vec::with_capacity(self.groups.len());
+            for (gid, (grp, q)) in
+                self.groups.iter_mut().zip(p.group_qs.iter_mut()).enumerate()
+            {
+                units.push(GroupUnit {
+                    gid,
+                    cfg: &self.cfg,
+                    grp,
+                    q,
+                    tier: tiers.next(),
+                    stream: streams.as_mut().and_then(|it| it.next()),
+                    model_groups: &self.model_groups,
+                    cat_bases: &self.cat_bases,
+                    delta_fractions: &self.delta_fractions,
+                    tags: UnitTags::Feed { times: &times, cursor: FeedCursor::default() },
+                    feed: &feeds[gid],
+                    feed_pos: 0,
+                    fed: 0,
+                    last_feed: 0.0,
+                });
+            }
+            parallel::run_window(&mut units, FINAL_HORIZON);
+            for u in &units {
+                fed_total += u.fed;
+                last_feed = last_feed.max(u.last_feed);
+            }
+        }
+        let (qevents, qend) = self.par_totals();
+        self.finalize(wall_start, qevents + fed_total, qend.max(last_feed))
+    }
+
+    /// Shared end-of-run accounting: fold per-group state into the
+    /// report. `events`/`sim_end` come from the mode-specific queues.
+    fn finalize(
+        mut self,
+        wall_start: std::time::Instant,
+        events: u64,
+        sim_end: f64,
+    ) -> SimReport {
         debug_assert!(
             self.groups.iter().all(|grp| grp.engine.idle()),
             "simulation drained with an engine non-idle"
         );
-        let events = self.queue.processed();
-        let sim_end = self.queue.now();
+        // Dead-incarnation drops were counted per group (windows cannot
+        // touch cluster state); fold them into the cluster stat here.
+        self.fault_stats.dead_event_drops +=
+            self.groups.iter().map(|grp| grp.dead_drops).sum::<u64>();
 
         // Close outages that were still open when the run drained: the
         // group never recovered, so its downtime extends to sim end (the
@@ -1560,10 +1560,12 @@ impl SimCluster {
             }
         }
 
-        // Streaming finalization: fold the Welford/t-digest state into a
-        // Summary, keep the per-group absorbed counters for the
-        // accounting pass below. In full-retention mode `streaming` is
-        // `None` and every absorbed counter reads as zero.
+        // Streaming finalization: merge the per-group Welford/t-digest
+        // sketches in group order (deterministic in both execution
+        // modes; a single group merges into empty state — the
+        // bit-for-bit identity) and fold them into a Summary. In
+        // full-retention mode `streaming` is `None` and every absorbed
+        // counter reads as zero.
         let mut streaming = self.streaming.take();
         // Fault-layer drops never pass through an engine outbox, so fold
         // them here: streaming mode absorbs them into the counters (no
@@ -1576,29 +1578,42 @@ impl SimCluster {
         for d in &fault_drops {
             fdrops_per_group[d.group] += 1;
         }
-        if let Some(st) = streaming.as_mut() {
-            for d in &fault_drops {
-                if d.arrival >= st.measure_start {
-                    st.measured.drops += 1;
-                }
-            }
+        let mut fault_measured_drops = 0usize;
+        if let Some(streams) = streaming.as_ref() {
+            let ms = streams[0].measure_start;
+            fault_measured_drops = fault_drops.iter().filter(|d| d.arrival >= ms).count();
             fault_drops.clear();
         }
-        let streaming_counts = streaming.as_ref().map(|st| st.measured);
-        let streaming_latency = streaming.as_mut().map(|st| {
-            if st.welford.count() == 0 {
+        let streaming_counts = streaming.as_ref().map(|streams| {
+            let mut m = MeasuredCounts::default();
+            for s in streams {
+                m.completed += s.measured.completed;
+                m.attained += s.measured.attained;
+                m.drops += s.measured.drops;
+            }
+            m.drops += fault_measured_drops;
+            m
+        });
+        let streaming_latency = streaming.as_mut().map(|streams| {
+            let mut welford = Welford::default();
+            let mut digest = TDigest::default();
+            for s in streams.iter_mut() {
+                welford.merge(&s.welford);
+                digest.merge(std::mem::take(&mut s.latency));
+            }
+            if welford.count() == 0 {
                 Summary::empty()
             } else {
                 Summary {
-                    count: st.welford.count() as usize,
-                    mean: st.welford.mean(),
-                    std: st.welford.std(),
-                    min: st.latency.min(),
-                    max: st.latency.max(),
-                    p50: st.latency.quantile(0.50),
-                    p90: st.latency.quantile(0.90),
-                    p95: st.latency.quantile(0.95),
-                    p99: st.latency.quantile(0.99),
+                    count: welford.count() as usize,
+                    mean: welford.mean(),
+                    std: welford.std(),
+                    min: digest.min(),
+                    max: digest.max(),
+                    p50: digest.quantile(0.50),
+                    p90: digest.quantile(0.90),
+                    p95: digest.quantile(0.95),
+                    p99: digest.quantile(0.99),
                 }
             }
         });
@@ -1629,7 +1644,7 @@ impl SimCluster {
             // Streamed counters absorbed mid-run plus whatever is still
             // in the drained vectors (always zero + everything in
             // full-retention mode; everything + zero in streaming mode).
-            let sc = streaming.as_ref().map(|st| st.counts[gid]).unwrap_or_default();
+            let sc = streaming.as_ref().map(|st| st[gid].counts).unwrap_or_default();
             let completed_swaps = sc.swaps + swaps.iter().filter(|s| !s.cancelled).count();
             let swap_bytes: u64 = sc.swap_bytes
                 + swaps.iter().filter(|s| !s.cancelled).map(|s| s.bytes as u64).sum::<u64>();
@@ -1744,6 +1759,496 @@ impl SimCluster {
                     .map(|(i, tier)| tier.report(Some(i)))
                     .collect()
             },
+        }
+    }
+}
+
+/// Destination for events scheduled by group-side handlers. Sequential
+/// mode schedules straight into the cluster queue — bit-for-bit the
+/// old call sites. Parallel mode schedules into the group's local
+/// queue with the tag that reproduces the sequential pop order's
+/// tie-breaks (see `cluster::parallel`).
+enum EvSink<'a> {
+    /// Sequential: the one cluster-wide calendar queue.
+    Cluster { queue: &'a mut EventQueue<ClusterEv> },
+    /// Parallel coordinator (between windows): the group's local queue,
+    /// a fresh even tag per schedule (coordinator stamp order).
+    Coord { queue: &'a mut EventQueue<(u64, u32, Ev)>, tags: &'a mut TagSource },
+    /// Parallel group worker (inside a window): the group's local
+    /// queue, the window's frozen odd tag.
+    Window { queue: &'a mut EventQueue<(u64, u32, Ev)>, tag: u64 },
+}
+
+impl EvSink<'_> {
+    fn schedule(&mut self, gid: usize, epoch: u32, at: SimTime, ev: Ev) {
+        match self {
+            EvSink::Cluster { queue } => queue.schedule_at(at, gev(gid, epoch, ev)),
+            EvSink::Coord { queue, tags } => {
+                let tag = tags.next_even();
+                queue.schedule_at(at, (tag, epoch, ev));
+            }
+            EvSink::Window { queue, tag } => queue.schedule_at(at, (*tag, epoch, ev)),
+        }
+    }
+}
+
+/// A group-scoped view of the cluster: everything the group-side event
+/// handlers touch, with cross-group state narrowed to read-only
+/// neighbour slices. Sequential mode builds one around `split_at_mut`
+/// (the shared-host-tier eviction check reads neighbour residency);
+/// parallel mode builds one per `GroupUnit` with empty neighbour
+/// slices — the handlers never read them on the per-group-tier paths
+/// parallel mode requires. Keeping group handling on this one type is
+/// what pins the two execution modes to the same code.
+struct GroupCtx<'a> {
+    gid: usize,
+    cfg: &'a SystemConfig,
+    grp: &'a mut SimGroup,
+    /// Groups before/after `gid` (shared-host-tier eviction only).
+    left: &'a [SimGroup],
+    right: &'a [SimGroup],
+    /// This group's host tier (or the shared one), if configured.
+    tier: Option<&'a mut HostTier>,
+    host_shared: bool,
+    model_groups: &'a [Vec<(usize, usize)>],
+    cat_bases: &'a [Option<ModelId>],
+    delta_fractions: &'a [f64],
+    /// Streaming sketch for this group, when streaming is on.
+    stream: Option<&'a mut GroupStream>,
+    sink: EvSink<'a>,
+}
+
+impl GroupCtx<'_> {
+    fn sched_at(&mut self, at: SimTime, ev: Ev) {
+        let epoch = self.grp.epoch;
+        self.sink.schedule(self.gid, epoch, at, ev);
+    }
+
+    /// Streaming mode: fold freshly produced records into the sketch.
+    fn absorb(&mut self) {
+        if let Some(st) = self.stream.as_deref_mut() {
+            st.absorb(&mut self.grp.engine);
+        }
+    }
+
+    /// Feed one routed request (arrival or retry) into the engine.
+    fn feed_request(&mut self, now: f64, local: usize, input_len: usize) {
+        self.grp.events += 1;
+        self.grp.engine.on_request(now, local, input_len);
+        self.route_outbox(now);
+        self.absorb();
+    }
+
+    /// Process one group event popped at `now`. Returns the number of
+    /// fully acked batches — the sequential closed-loop driver sends
+    /// one follow-up request per completion (parallel mode is open-loop
+    /// only, so the count is ignored there).
+    fn handle_event(&mut self, now: f64, epoch: u32, ev: Ev) -> usize {
+        if epoch != self.grp.epoch {
+            // Addressed to a dead incarnation (scheduled before a
+            // failure): drop with accounting instead of firing into the
+            // rebuilt group.
+            self.grp.dead_drops += 1;
+            return 0;
+        }
+        self.grp.events += 1;
+        let lat = self.cfg.hardware.pipe_latency;
+        let mut completions = 0;
+        match ev {
+            Ev::Deliver { worker, entry } => {
+                self.grp.workers[worker].deliver(entry);
+                self.wake_worker(now, worker);
+            }
+            Ev::Wake { worker } => {
+                self.wake_worker(now, worker);
+            }
+            Ev::TransferFin { worker, entry_id, model, dir } => {
+                self.grp.workers[worker].on_transfer_done(model, dir);
+                self.sched_at(now + lat, Ev::LoadAck { entry_id });
+            }
+            Ev::ChunkFin { worker, entry_id, model, dir } => {
+                match self.grp.workers[worker].on_chunk_fin(now, model) {
+                    ChunkOutcome::Next { done_chunk, at } => {
+                        self.sched_at(at, Ev::ChunkFin { worker, entry_id, model, dir });
+                        if dir == LoadDirection::Load {
+                            self.sched_at(now + lat, Ev::ChunkAck { entry_id, chunk: done_chunk });
+                        }
+                    }
+                    // The final chunk acks as the load entry itself.
+                    ChunkOutcome::Finished => {
+                        self.sched_at(now + lat, Ev::LoadAck { entry_id });
+                    }
+                    ChunkOutcome::Cancelled { cancel_entry } => {
+                        self.sched_at(now + lat, Ev::LoadAck { entry_id: cancel_entry });
+                    }
+                }
+            }
+            Ev::ChunkAck { entry_id, chunk } => {
+                self.grp.engine.on_chunk_ack(now, entry_id, chunk);
+            }
+            Ev::LoadAck { entry_id } => {
+                self.grp.engine.on_load_ack(now, entry_id);
+                self.route_outbox(now);
+            }
+            Ev::BatchReturn { entry_id } => {
+                let tp = self.grp.tp;
+                // TP=1 sends exactly one ack per batch — skip the
+                // ack-counting map on that hot path.
+                let full = tp == 1 || {
+                    let acks = self.grp.batch_acks.entry(entry_id).or_insert(0);
+                    *acks += 1;
+                    let done = *acks == tp;
+                    if done {
+                        self.grp.batch_acks.remove(&entry_id);
+                    }
+                    done
+                };
+                if full {
+                    self.grp.engine.on_batch_done(now, entry_id);
+                    self.route_outbox(now);
+                    completions += 1;
+                }
+            }
+        }
+        self.absorb();
+        completions
+    }
+
+    /// Route engine outbox entries into stage-0 pipes (or broadcast).
+    /// Each entry is boxed into an `Arc` once; the per-tp-rank (or
+    /// per-broadcast-target) fan-out clones the pointer, not the payload.
+    fn route_outbox(&mut self, now: f64) {
+        let lat = self.cfg.hardware.pipe_latency;
+        let design = self.cfg.engine.load_design;
+        let mut entries = std::mem::take(&mut self.grp.outbox_buf);
+        entries.clear();
+        self.grp.engine.drain_outbox_into(&mut entries);
+        let tp = self.grp.tp;
+        let world = self.grp.workers.len();
+        for entry in entries.drain(..) {
+            // Host-tier staging must run before the entry fans out: a
+            // load's transfer plan (delta form, NVMe gates) is fixed at
+            // submission. No-op without a host config.
+            self.stage_tiered_load(now, &entry);
+            let entry = Arc::new(entry);
+            match design {
+                LoadDesign::Broadcast if entry.is_load() => {
+                    // Fig 2 strawman: every worker gets the load entry
+                    // directly, racing any in-flight batch entries.
+                    for w in 0..world {
+                        self.sched_at(
+                            now + lat,
+                            Ev::Deliver { worker: w, entry: Arc::clone(&entry) },
+                        );
+                    }
+                }
+                _ => {
+                    for tp_rank in 0..tp {
+                        let w = self.grp.worker_idx(0, tp_rank);
+                        self.sched_at(
+                            now + lat,
+                            Ev::Deliver { worker: w, entry: Arc::clone(&entry) },
+                        );
+                    }
+                }
+            }
+        }
+        self.grp.outbox_buf = entries;
+    }
+
+    /// Host-memory-hierarchy bookkeeping for one freshly drained outbox
+    /// entry (DESIGN.md §12). Swap-ins consult the scope's host tier:
+    /// host-warm pays host→GPU only (the legacy transfer, bit-for-bit),
+    /// host-cold stages NVMe→host first — per-chunk completion times
+    /// become H2D gates on the workers. Variants whose base is resident
+    /// on this group's GPUs load in delta form via worker transfer
+    /// overrides. Offloads re-admit the model host-side (write-back).
+    /// No-op without a host config.
+    fn stage_tiered_load(&mut self, now: f64, entry: &Entry) {
+        let Some(tier) = self.tier.as_deref_mut() else { return };
+        let Entry::Load(l) = entry else { return };
+        if l.dir == LoadDirection::Cancel {
+            return;
+        }
+        let local = l.model;
+        let cm = self.grp.models[local];
+        // Disjoint field borrows: the tier mutates while the evictable
+        // closure reads engine residency. A host entry may be evicted
+        // only when no in-scope GPU copy of its model exists (evicting
+        // under a GPU-resident model would force an NVMe round trip the
+        // moment that model offloads). Neighbour groups are consulted
+        // only for a shared tier (sequential mode), via the split
+        // slices around this group.
+        let gid = self.gid;
+        let per_group = !self.host_shared;
+        let engine = &self.grp.engine;
+        let (left, right) = (self.left, self.right);
+        let model_groups = self.model_groups;
+        let evictable = |m: ModelId| {
+            model_groups[m].iter().all(|&(hg, lm)| {
+                if hg == gid {
+                    engine.residency(lm) == Residency::Offloaded
+                } else if per_group {
+                    true
+                } else {
+                    let other = if hg < gid { &left[hg] } else { &right[hg - gid - 1] };
+                    other.engine.residency(lm) == Residency::Offloaded
+                }
+            })
+        };
+        if l.dir == LoadDirection::Offload {
+            // Write-back: the offloaded model becomes host-warm in full
+            // form (its GPU copy was full regardless of how it loaded).
+            // Overflow streams through, counted by the tier.
+            tier.admit(cm, now, &evictable);
+            return;
+        }
+        let chunks = self.grp.chunks_per_model[local];
+        let outcome = tier.fetch(cm, now, chunks, &evictable);
+        let gated = outcome.tier == SwapTier::NvmeMiss;
+        // Delta swapping: when this variant's base is resident on this
+        // group's GPUs (the engine pins it there while the variant is
+        // up), only the delta moves host→GPU. Guarded by per-stage
+        // feasibility: every chunk of every stage must keep ≥ 1 byte
+        // and ≥ 1 message after scaling.
+        let grp = &mut *self.grp;
+        let f = self.delta_fractions[cm];
+        let base_resident = self.cat_bases[cm]
+            .and_then(|cb| grp.models.iter().position(|&x| x == cb))
+            .map(|lb| grp.engine.residency(lb) == Residency::Resident)
+            .unwrap_or(false);
+        let chunked = chunks > 1;
+        let full_plans: Vec<Vec<ChunkSpec>> = grp
+            .workers
+            .iter()
+            .map(|w| match (&grp.chunk_plans, chunked) {
+                (Some(plans), true) => plans[local][w.pos.pp_rank].clone(),
+                _ => vec![ChunkSpec {
+                    layers: 1,
+                    messages: w.shard_messages[local],
+                    bytes: w.shard_bytes[local],
+                }],
+            })
+            .collect();
+        let use_delta = base_resident
+            && full_plans.iter().all(|p| {
+                let tb = p.iter().map(|c| c.bytes).sum::<usize>();
+                let tm = p.iter().map(|c| c.messages).sum::<usize>();
+                scale_count(tb, f) >= p.len() && scale_count(tm, f) >= p.len()
+            });
+        if !use_delta && !gated {
+            // Host-warm full-form load: exactly the legacy transfer (the
+            // annotation stamps provenance without touching the plan).
+            grp.engine.annotate_load(l.id, outcome.tier, None, 0);
+            return;
+        }
+        let mut full_max = 0usize;
+        let mut eff_max = 0usize;
+        for (w, fp) in grp.workers.iter_mut().zip(&full_plans) {
+            let plan = if use_delta { delta_chunk_plan(fp, f) } else { fp.clone() };
+            full_max = full_max.max(fp.iter().map(|c| c.bytes).sum::<usize>());
+            eff_max = eff_max.max(plan.iter().map(|c| c.bytes).sum::<usize>());
+            w.set_load_override(local, LoadOverride { plan, gates: outcome.gates.clone() });
+        }
+        let (bytes_override, delta_saved) =
+            if use_delta { (Some(eff_max), full_max - eff_max) } else { (None, 0) };
+        grp.engine.annotate_load(l.id, outcome.tier, bytes_override, delta_saved);
+    }
+
+    /// Drains `actions` (a caller-owned scratch buffer) and turns each
+    /// worker action into scheduled events.
+    fn handle_worker_actions(&mut self, now: f64, widx: usize, actions: &mut Vec<WorkerAction>) {
+        let lat = self.cfg.hardware.pipe_latency;
+        let pp = self.grp.pp;
+        let pos = self.grp.workers[widx].pos;
+        for action in actions.drain(..) {
+            match action {
+                WorkerAction::Forward { entry, at } => {
+                    debug_assert!(at >= now);
+                    let last = pos.pp_rank == pp - 1;
+                    if last {
+                        // Last stage returns batch output to the engine;
+                        // load entries terminate here (the engine ack
+                        // comes from TransferFin).
+                        if let Entry::Batch(b) = &*entry {
+                            self.sched_at(at + lat, Ev::BatchReturn { entry_id: b.id });
+                        }
+                    } else {
+                        // Broadcast design does not forward load entries
+                        // (they were delivered to every stage directly).
+                        if self.cfg.engine.load_design == LoadDesign::Broadcast
+                            && entry.is_load()
+                        {
+                            continue;
+                        }
+                        let next = self.grp.worker_idx(pos.pp_rank + 1, pos.tp_rank);
+                        self.sched_at(at + lat, Ev::Deliver { worker: next, entry });
+                    }
+                }
+                WorkerAction::BatchOutput { entry_id, at } => {
+                    self.sched_at(at + lat, Ev::BatchReturn { entry_id });
+                }
+                WorkerAction::TransferDone { entry_id, model, dir, at } => {
+                    self.sched_at(at, Ev::TransferFin { worker: widx, entry_id, model, dir });
+                }
+                WorkerAction::ChunkDone { entry_id, model, dir, at } => {
+                    self.sched_at(at, Ev::ChunkFin { worker: widx, entry_id, model, dir });
+                }
+            }
+        }
+        // Keep the worker loop turning.
+        let (inbox_empty, busy_until) = {
+            let w = &self.grp.workers[widx];
+            (w.inbox.is_empty(), w.busy_until)
+        };
+        if !inbox_empty {
+            self.sched_at(busy_until.max(now), Ev::Wake { worker: widx });
+        }
+    }
+
+    fn wake_worker(&mut self, now: f64, widx: usize) {
+        let dispatch = self.cfg.hardware.dispatch_overhead;
+        let sync_loads = self.cfg.engine.load_design == LoadDesign::SyncPipelined;
+        // Pre-resolve the compute time for the entry at the head of the
+        // inbox (if it is a batch) so the step closure is allocation-free.
+        let head = match self.grp.workers[widx].inbox.front().map(|e| &**e) {
+            Some(Entry::Batch(b)) => Some((b.model, b.batch_size(), b.seqlen)),
+            _ => None,
+        };
+        let head_cost = match head {
+            Some((m, bs, sl)) => {
+                let compute = self.cfg.hardware.compute;
+                self.grp.stage_time(&compute, m, bs, sl)
+            }
+            None => 0.0,
+        };
+        let mut actions = std::mem::take(&mut self.grp.action_buf);
+        actions.clear();
+        let stepped = self.grp.workers[widx].step_into(
+            now,
+            |_| head_cost,
+            dispatch,
+            sync_loads,
+            &mut actions,
+        );
+        if stepped {
+            self.handle_worker_actions(now, widx, &mut actions);
+        } else {
+            let (inbox_empty, busy_until) = {
+                let w = &self.grp.workers[widx];
+                (w.inbox.is_empty(), w.busy_until)
+            };
+            if !inbox_empty && busy_until > now {
+                // Busy: try again when free.
+                self.sched_at(busy_until, Ev::Wake { worker: widx });
+            }
+        }
+        self.grp.action_buf = actions;
+    }
+}
+
+/// One pre-routed open-loop arrival for the dedicated parallel path.
+#[derive(Clone, Copy)]
+struct FeedItem {
+    /// Global arrival index — tags derive from it (`arrival_key`).
+    j: usize,
+    at: f64,
+    /// Local model id on the hosting group.
+    local: usize,
+    input_len: usize,
+}
+
+/// How a `GroupUnit` tags the events it schedules.
+enum UnitTags<'a> {
+    /// Windowed mode: the window's frozen odd tag for every child.
+    Window(u64),
+    /// Dedicated mode: tags derive from the global arrival cursor,
+    /// reproducing the sequential interleaving (`FeedCursor`).
+    Feed { times: &'a [f64], cursor: FeedCursor },
+}
+
+/// One group's slice of the parallel run: its state, local queue, and
+/// (dedicated mode) pre-routed arrival feed. Implements `WindowWorker`
+/// so `parallel::run_window` can drain it to the barrier on its own
+/// thread. The `WindowWorker: Send` supertrait is what forces every
+/// borrowed field to be thread-safe at compile time.
+struct GroupUnit<'a> {
+    gid: usize,
+    cfg: &'a SystemConfig,
+    grp: &'a mut SimGroup,
+    q: &'a mut EventQueue<(u64, u32, Ev)>,
+    tier: Option<&'a mut HostTier>,
+    stream: Option<&'a mut GroupStream>,
+    model_groups: &'a [Vec<(usize, usize)>],
+    cat_bases: &'a [Option<ModelId>],
+    delta_fractions: &'a [f64],
+    tags: UnitTags<'a>,
+    /// This group's pre-routed arrivals, schedule order (empty in
+    /// windowed mode — arrivals route through the coordinator there).
+    feed: &'a [FeedItem],
+    feed_pos: usize,
+    /// Arrivals processed (the sequential pop-count equivalent).
+    fed: u64,
+    /// Timestamp of the last arrival fed (sim-end accounting).
+    last_feed: f64,
+}
+
+impl GroupUnit<'_> {
+    fn head_feed_key(&self) -> Option<WindowKey> {
+        self.feed.get(self.feed_pos).map(|f| arrival_key(f.j, f.at))
+    }
+
+    fn ctx(&mut self, tag: u64) -> GroupCtx<'_> {
+        GroupCtx {
+            gid: self.gid,
+            cfg: self.cfg,
+            grp: &mut *self.grp,
+            left: &[],
+            right: &[],
+            tier: self.tier.as_deref_mut(),
+            host_shared: false,
+            model_groups: self.model_groups,
+            cat_bases: self.cat_bases,
+            delta_fractions: self.delta_fractions,
+            stream: self.stream.as_deref_mut(),
+            sink: EvSink::Window { queue: &mut *self.q, tag },
+        }
+    }
+}
+
+impl WindowWorker for GroupUnit<'_> {
+    fn next_key(&mut self) -> Option<WindowKey> {
+        let fk = self.head_feed_key();
+        let qk = self.q.peek_next().map(|(at, &(tag, _, _))| (at, tag));
+        match (fk, qk) {
+            (Some(a), Some(b)) => Some(if key_before(a, b) { a } else { b }),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn step(&mut self) {
+        let Some(key) = self.next_key() else { return };
+        let tag = match &mut self.tags {
+            UnitTags::Window(t) => *t,
+            UnitTags::Feed { times, cursor } => {
+                // Pass every arrival (cluster-wide) at or before this
+                // event, so children get the tag span the sequential
+                // interleaving would give them.
+                cursor.advance(*times, key);
+                cursor.child_tag()
+            }
+        };
+        // Arrival tags are even, queue-event tags odd: the keys never
+        // tie, so equality means the feed head IS the next event.
+        if self.head_feed_key() == Some(key) {
+            let f = self.feed[self.feed_pos];
+            self.feed_pos += 1;
+            self.fed += 1;
+            self.last_feed = f.at;
+            self.ctx(tag).feed_request(f.at, f.local, f.input_len);
+        } else {
+            let Some((now, (_, epoch, ev))) = self.q.pop() else { return };
+            self.ctx(tag).handle_event(now, epoch, ev);
         }
     }
 }

@@ -208,6 +208,28 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// combination of partial moments). Deterministic: the result is a
+    /// pure function of the two states, so merging per-group
+    /// accumulators in group order always reproduces the same floats.
+    /// Merging into an empty accumulator clones `other` bit-for-bit —
+    /// the single-group parallel run reproduces the sequential sketch
+    /// exactly.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * (other.n as f64 / n as f64);
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64 / n as f64);
+        self.n = n;
+    }
+
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -347,6 +369,48 @@ impl TDigest {
             * (2.0 * q - 1.0).clamp(-1.0, 1.0).asin()
     }
 
+    /// Fold another digest into this one. Deterministic: both sketches
+    /// flush, their centroid lists merge-sort by mean (ties keep
+    /// `self` first), and the result re-clusters under the same k1
+    /// limit as [`TDigest::flush`] — a pure function of the two
+    /// states, so merging per-group sketches in group order always
+    /// yields the same centroids. Merging into an empty digest moves
+    /// `other` in wholesale (bit-for-bit identity — the single-group
+    /// parallel run reproduces the sequential sketch exactly).
+    pub fn merge(&mut self, mut other: TDigest) {
+        assert!(
+            self.compression.to_bits() == other.compression.to_bits(),
+            "merging t-digests with different compression"
+        );
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other;
+            return;
+        }
+        self.flush();
+        other.flush();
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        let a = std::mem::take(&mut self.centroids);
+        let b = other.centroids;
+        let mut merged: Vec<Centroid> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() || j < b.len() {
+            let take_a = j >= b.len() || (i < a.len() && a[i].mean <= b[j].mean);
+            if take_a {
+                merged.push(a[i]);
+                i += 1;
+            } else {
+                merged.push(b[j]);
+                j += 1;
+            }
+        }
+        self.centroids = self.recluster(merged);
+    }
+
     /// Merge buffered samples into the centroid list and re-cluster
     /// greedily under the k1 size limit.
     fn flush(&mut self) {
@@ -369,10 +433,18 @@ impl TDigest {
                 j += 1;
             }
         }
+        self.centroids = self.recluster(merged);
+        self.buffer = buf;
+        self.buffer.clear();
+    }
+
+    /// Greedy k1 re-cluster of a mean-sorted centroid list — the shared
+    /// tail of [`TDigest::flush`] and [`TDigest::merge`].
+    fn recluster(&self, merged: Vec<Centroid>) -> Vec<Centroid> {
         let total: f64 = merged.iter().map(|c| c.weight).sum();
         let mut out: Vec<Centroid> = Vec::with_capacity(self.compression as usize * 2);
         let mut iter = merged.into_iter();
-        let mut acc = iter.next().expect("buffer was non-empty");
+        let Some(mut acc) = iter.next() else { return out };
         let mut w_before = 0.0;
         let mut k_lower = self.k_scale(0.0);
         for c in iter {
@@ -389,9 +461,7 @@ impl TDigest {
             }
         }
         out.push(acc);
-        self.buffer = buf;
-        self.buffer.clear();
-        self.centroids = out;
+        out
     }
 }
 
@@ -510,6 +580,92 @@ mod tests {
             .wrapping_mul(6364136223846793005)
             .wrapping_add(1442695040888963407);
         *state
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        // Splitting a stream across accumulators and merging in order
+        // must agree with one straight-through accumulator to float
+        // precision, and merging into an empty one is bit-exact.
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 * 0.37).cos() * 5.0 + 7.0).collect();
+        let mut whole = Welford::default();
+        for &x in &xs {
+            whole.add(x);
+        }
+        let mut parts: Vec<Welford> = (0..4).map(|_| Welford::default()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            parts[i % 4].add(x);
+        }
+        let mut merged = Welford::default();
+        for p in &parts {
+            merged.merge(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-9);
+        assert!((merged.std() - whole.std()).abs() < 1e-9);
+        // Identity: empty ⊕ x == x, x ⊕ empty == x (bit-for-bit).
+        let mut id = Welford::default();
+        id.merge(&whole);
+        id.merge(&Welford::default());
+        assert_eq!(id.mean().to_bits(), whole.mean().to_bits());
+        assert_eq!(id.std().to_bits(), whole.std().to_bits());
+        assert_eq!(id.count(), whole.count());
+    }
+
+    #[test]
+    fn tdigest_merge_into_empty_is_identity() {
+        // The G=1 parallel-run guarantee: folding one group's sketch
+        // into an empty cluster sketch reproduces it bit-for-bit.
+        let mut d = TDigest::default();
+        let mut rng = 0xFEEDu64;
+        for _ in 0..5_000 {
+            d.add((lcg(&mut rng) % 10_000) as f64 * 1e-2);
+        }
+        let mut merged = TDigest::default();
+        merged.merge(d.clone());
+        merged.merge(TDigest::default());
+        assert_eq!(merged.count(), d.count());
+        assert_eq!(merged.min().to_bits(), d.min().to_bits());
+        assert_eq!(merged.max().to_bits(), d.max().to_bits());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q).to_bits(), d.quantile(q).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn tdigest_merge_is_deterministic_and_accurate() {
+        // Four disjoint shards merged in order: the result is identical
+        // across repeat merges (determinism) and still tracks the exact
+        // quantiles of the combined sample.
+        let mut xs = Vec::new();
+        let mut shards: Vec<TDigest> = (0..4).map(|_| TDigest::default()).collect();
+        let mut rng = 0xABCDu64;
+        for i in 0..40_000 {
+            let x = (lcg(&mut rng) % 100_000) as f64 * 1e-3;
+            shards[i % 4].add(x);
+            xs.push(x);
+        }
+        let fold = |shards: &[TDigest]| {
+            let mut acc = TDigest::default();
+            for s in shards {
+                acc.merge(s.clone());
+            }
+            acc
+        };
+        let mut a = fold(&shards);
+        let mut b = fold(&shards);
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            assert_eq!(a.quantile(q).to_bits(), b.quantile(q).to_bits(), "q={q}");
+        }
+        xs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let exact = percentile_sorted(&xs, q);
+            let est = a.quantile(q);
+            assert!((est - exact).abs() < 1.5, "q={q}: {est} vs {exact}");
+        }
+        assert_eq!(a.count(), 40_000);
+        assert!(a.centroid_count() < 500);
     }
 
     #[test]

@@ -3,30 +3,47 @@
 //! scenario at G ∈ {1, 2, 4} replicated groups must produce identical
 //! `SimReport`s — and the calendar event queue must reproduce the legacy
 //! `BinaryHeap` backend bit-for-bit, since both implement the same
-//! (time, seq) total order.
+//! (time, seq) total order. The parallel bounded-lag executor
+//! (`ExecMode::ParallelGroups`, DESIGN.md §13) is held to the same
+//! contract: sequential ≡ parallel bit-for-bit across the registry,
+//! every replication factor, both queue backends, a non-trivial fault
+//! plan, and streaming aggregation.
 
 use computron::cluster::fault::{AutoscalePolicy, FaultEvent, FaultKind, FaultPlan, RetryPolicy};
-use computron::config::{PlacementSpec, RouterKind, SystemConfig};
+use computron::config::{ExecMode, GroupSpec, PlacementSpec, RouterKind, SystemConfig};
 use computron::sim::{SimCluster, SimReport};
 use computron::workload::scenarios;
 
 const SEED: u64 = 0xDE7E_2211;
 const DURATION: f64 = 5.0;
 
-fn run(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+fn base_cfg(scenario: &str, g: usize, exec: ExecMode) -> SystemConfig {
     let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
     cfg.scenario = Some(scenario.to_string());
+    cfg.exec = exec;
     cfg.placement = Some(PlacementSpec::replicated(
         g,
         cfg.parallel,
         3,
         RouterKind::LeastLoaded,
     ));
+    cfg
+}
+
+fn run_cfg(cfg: SystemConfig, heap_queue: bool) -> SimReport {
     let (mut sys, _) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
     if heap_queue {
         sys.use_binary_heap_queue();
     }
     sys.run()
+}
+
+fn run(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    run_cfg(base_cfg(scenario, g, ExecMode::Sequential), heap_queue)
+}
+
+fn run_parallel(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    run_cfg(base_cfg(scenario, g, ExecMode::ParallelGroups), heap_queue)
 }
 
 fn assert_identical(tag: &str, a: &SimReport, b: &SimReport) {
@@ -113,21 +130,14 @@ fn chaotic_plan() -> FaultPlan {
     }
 }
 
-fn run_faulted(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
-    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
-    cfg.scenario = Some(scenario.to_string());
-    cfg.placement = Some(PlacementSpec::replicated(
-        g,
-        cfg.parallel,
-        3,
-        RouterKind::LeastLoaded,
-    ));
+fn run_faulted_exec(scenario: &str, g: usize, heap_queue: bool, exec: ExecMode) -> SimReport {
+    let mut cfg = base_cfg(scenario, g, exec);
     cfg.faults = Some(chaotic_plan());
-    let (mut sys, _) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
-    if heap_queue {
-        sys.use_binary_heap_queue();
-    }
-    sys.run()
+    run_cfg(cfg, heap_queue)
+}
+
+fn run_faulted(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    run_faulted_exec(scenario, g, heap_queue, ExecMode::Sequential)
 }
 
 /// Fault injection must not cost determinism: with a plan exercising
@@ -175,21 +185,18 @@ fn none_fault_plan_matches_absent_plan_across_registry() {
     }
 }
 
-fn run_streaming(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
-    let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
-    cfg.scenario = Some(scenario.to_string());
-    cfg.placement = Some(PlacementSpec::replicated(
-        g,
-        cfg.parallel,
-        3,
-        RouterKind::LeastLoaded,
-    ));
+fn run_streaming_exec(scenario: &str, g: usize, heap_queue: bool, exec: ExecMode) -> SimReport {
+    let cfg = base_cfg(scenario, g, exec);
     let (mut sys, start) = SimCluster::from_scenario(cfg, DURATION, SEED).expect("config valid");
     if heap_queue {
         sys.use_binary_heap_queue();
     }
     sys.set_streaming(start);
     sys.run()
+}
+
+fn run_streaming(scenario: &str, g: usize, heap_queue: bool) -> SimReport {
+    run_streaming_exec(scenario, g, heap_queue, ExecMode::Sequential)
 }
 
 /// Streaming aggregation must be as deterministic as full retention:
@@ -247,5 +254,89 @@ fn streaming_mode_identical_across_registry_and_backends() {
                 "{scenario}/G={g}: missing latency summary"
             );
         }
+    }
+}
+
+/// The bounded-lag parallel executor (DESIGN.md §13) must reproduce the
+/// sequential loop bit-for-bit: across the whole scenario registry,
+/// every replication factor, and both queue backends. At G=1 the
+/// parallel mode falls back to sequential — the identity must hold
+/// there too.
+#[test]
+fn parallel_exec_matches_sequential_across_registry() {
+    for &scenario in scenarios::names() {
+        for g in [1usize, 2, 4] {
+            for heap in [false, true] {
+                let seq = run(scenario, g, heap);
+                let par = run_parallel(scenario, g, heap);
+                let backend = if heap { "heap" } else { "calendar" };
+                assert_identical(&format!("{scenario}/G={g}/{backend}/par"), &seq, &par);
+            }
+        }
+    }
+}
+
+/// Fault injection keeps the seq ≡ par contract: the chaotic plan
+/// (failure, preemption, recovery, link degradation, retries, the
+/// autoscaler) forces the windowed executor through every cluster-scope
+/// code path, and the reports must still be bit-identical.
+#[test]
+fn parallel_exec_matches_sequential_under_faults() {
+    for &scenario in &["bursty", "zipf"] {
+        for g in [2usize, 4] {
+            let seq = run_faulted_exec(scenario, g, false, ExecMode::Sequential);
+            let par = run_faulted_exec(scenario, g, false, ExecMode::ParallelGroups);
+            assert_identical(&format!("{scenario}/G={g}/faulted/par"), &seq, &par);
+            assert!(
+                seq.fault_stats.injected > 0,
+                "{scenario}/G={g}: the plan must actually inject"
+            );
+        }
+    }
+}
+
+/// Streaming aggregation in parallel mode: per-group sketches are
+/// merged in group order at finalize, so the t-digest percentiles and
+/// Welford moments must equal the sequential run's exactly.
+#[test]
+fn parallel_streaming_matches_sequential_across_registry() {
+    for &scenario in scenarios::names() {
+        for g in [2usize, 4] {
+            let seq = run_streaming_exec(scenario, g, false, ExecMode::Sequential);
+            let par = run_streaming_exec(scenario, g, false, ExecMode::ParallelGroups);
+            assert_streaming_identical(&format!("{scenario}/G={g}/streaming/par"), &seq, &par);
+        }
+    }
+}
+
+/// Dedicated placements (every model hosted by exactly one group) take
+/// the executor's embarrassingly parallel fast path — one window per
+/// group, run to completion. Pin it against sequential, full-retention
+/// and streaming.
+#[test]
+fn parallel_dedicated_fast_path_matches_sequential() {
+    let dedicated = |scenario: &str, exec: ExecMode| {
+        let mut cfg = SystemConfig::workload_experiment(3, 2, 8);
+        cfg.scenario = Some(scenario.to_string());
+        cfg.exec = exec;
+        let groups = (0..3).map(|m| GroupSpec::new(cfg.parallel, vec![m])).collect();
+        cfg.placement = Some(PlacementSpec { router: RouterKind::RoundRobin, groups });
+        cfg
+    };
+    for &scenario in scenarios::names() {
+        let seq = run_cfg(dedicated(scenario, ExecMode::Sequential), false);
+        let par = run_cfg(dedicated(scenario, ExecMode::ParallelGroups), false);
+        assert_identical(&format!("{scenario}/dedicated/par"), &seq, &par);
+
+        let stream = |exec| {
+            let (mut sys, start) =
+                SimCluster::from_scenario(dedicated(scenario, exec), DURATION, SEED)
+                    .expect("config valid");
+            sys.set_streaming(start);
+            sys.run()
+        };
+        let seq_s = stream(ExecMode::Sequential);
+        let par_s = stream(ExecMode::ParallelGroups);
+        assert_streaming_identical(&format!("{scenario}/dedicated/streaming/par"), &seq_s, &par_s);
     }
 }

@@ -14,6 +14,9 @@
 //!    single-group spec bit-for-bit (`PlacementSpec::single`), because
 //!    the base layout is enumerated first and score ties never displace
 //!    the incumbent.
+//! 5. *Worker independence*: scoring is batch-parallel (DESIGN.md §13)
+//!    with every RNG draw on the single-threaded generate/fold path, so
+//!    the plan is bit-for-bit identical at any scoring-pool width.
 
 use computron::config::{
     ModelCatalog, ModelDeployment, Objective, PlacementSpec, PlannerConfig, SystemConfig,
@@ -149,4 +152,40 @@ fn single_model_catalog_degenerates_to_legacy_spec() {
         legacy.to_json().to_string(),
         "degenerate spec must serialize bit-for-bit like the legacy shim"
     );
+}
+
+/// Property 5: the scoring-pool width never changes the plan. Proposal
+/// batches are a fixed size (worker-count independent), every RNG draw
+/// happens on the single-threaded generate/fold path, and results fold
+/// in proposal order — so `workers = 1` and `workers = 4` must agree
+/// bit-for-bit on spec, score, greedy seed, and evaluation count.
+#[test]
+fn scoring_pool_width_never_changes_the_plan() {
+    let base = hetero_base();
+    for seed in [0xD5EEDu64, 11] {
+        let mut knobs = small_knobs(&base, 8, seed);
+        knobs.workers = 1;
+        let one = planner::plan(&base, "zipf", &knobs).expect("plan succeeds");
+        knobs.workers = 4;
+        let four = planner::plan(&base, "zipf", &knobs).expect("plan succeeds");
+        assert_eq!(one.spec, four.spec, "seed {seed}: specs differ across pool widths");
+        assert_eq!(
+            one.spec.to_json().to_string(),
+            four.spec.to_json().to_string(),
+            "seed {seed}: serialized specs differ across pool widths"
+        );
+        assert_eq!(
+            one.score.to_bits(),
+            four.score.to_bits(),
+            "seed {seed}: scores differ across pool widths"
+        );
+        assert_eq!(one.greedy_spec, four.greedy_spec, "seed {seed}: greedy seeds differ");
+        assert_eq!(
+            one.greedy_score.to_bits(),
+            four.greedy_score.to_bits(),
+            "seed {seed}: greedy scores differ"
+        );
+        assert_eq!(one.evals, four.evals, "seed {seed}: evaluation counts differ");
+        assert_eq!(one.enumerated, four.enumerated, "seed {seed}: candidate pools differ");
+    }
 }

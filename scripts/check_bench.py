@@ -1,0 +1,272 @@
+#!/usr/bin/env python3
+"""CI perf-smoke gate for the bench JSON artifacts (EXPERIMENTS.md §Perf).
+
+Generalizes the old ``check_perf_simcore.py`` to *any* registered
+``BENCH_<name>.json``: compares a fresh run against the committed
+baseline and fails on a regression beyond the metric's tolerance in any
+comparable cell. The bench is auto-detected from the document's
+``bench``/``experiment`` field; registered benches:
+
+- ``perf_simcore`` — events/sec per queue-churn, end-to-end, and
+  parallel-executor cell, plus the named speedup ratios
+  (``queue_speedup_largest_pending``, ``e2e_speedup_zipf_g4``,
+  ``parallel_speedup_g2``, ``parallel_speedup_g4``).
+- ``fleet_scale`` — goodput and host hit rate per fleet cell, plus the
+  dedup-vs-full-form goodput totals.
+- ``planner_suite`` — candidates/sec per scoring-pool arm and
+  ``planner_speedup_workers4``, plus per-candidate goodput on every
+  planning cell.
+
+Every metric is higher-is-better; each carries its own tolerance
+(events/sec and goodput 20%, speedup ratios and candidates/sec 25% —
+wall-clock ratios on shared CI runners are noisier, hit rates 10%).
+
+Conventions (unchanged from the perf_simcore-only gate):
+
+- The committed baseline is regenerated on the CI reference machine and
+  marked ``"calibrated": true``. A baseline with ``"calibrated": false``
+  (bootstrap placeholder, or hand-edited) makes every comparison
+  advisory: differences are printed but never fail the job, since the
+  numbers were not produced on comparable hardware.
+- Fast-mode and full-mode runs are not comparable; a mode mismatch is
+  also advisory.
+- Cells with a non-positive baseline value mean "not yet measured" and
+  are skipped by the diff.
+
+Usage:
+    check_bench.py <baseline.json> <new.json>
+        Diff a fresh run against the baseline; exit 1 on a binding
+        (non-advisory) regression.
+    check_bench.py --calibrate <new.json> <baseline-out.json>
+        Promote a fresh run to a calibrated baseline: stamps
+        ``calibrated: true`` and writes it where the repo expects the
+        committed baseline. CI runs this when the committed baseline is
+        still the bootstrap placeholder and uploads the result as an
+        artifact ready to commit.
+
+The pure helpers (``index_cells``, ``compare_cells``,
+``advisory_reasons``, ``calibrate``) are unit-tested by
+``scripts/test_check_bench.py`` (run ``python3 -m unittest discover -s
+scripts`` or ``python -m pytest scripts/``).
+"""
+
+import json
+import sys
+
+DEFAULT_TOLERANCE = 0.20
+#: Wall-clock ratios and planner scoring rates bounce more on shared CI
+#: runners than raw event rates do.
+RATIO_TOLERANCE = 0.25
+HIT_RATE_TOLERANCE = 0.10
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _entry(value, tolerance):
+    return (value, tolerance)
+
+
+def index_perf_simcore(doc):
+    """Flatten a perf_simcore report into {key: (value, tolerance)}."""
+    cells = {}
+    for cell in doc.get("e2e", []):
+        key = ("e2e", cell["scenario"], cell["groups"], cell["backend"])
+        cells[key] = _entry(cell["events_per_sec"], DEFAULT_TOLERANCE)
+    for cell in doc.get("queue_churn", []):
+        key = ("churn", cell["backend"], cell["pending"])
+        cells[key] = _entry(cell["events_per_sec"], DEFAULT_TOLERANCE)
+    for cell in doc.get("parallel", []):
+        key = ("parallel", cell["scenario"], cell["groups"], cell["exec"])
+        cells[key] = _entry(cell["events_per_sec"], DEFAULT_TOLERANCE)
+    for name in (
+        "queue_speedup_largest_pending",
+        "e2e_speedup_zipf_g4",
+        "parallel_speedup_g2",
+        "parallel_speedup_g4",
+    ):
+        cells[("ratio", name)] = _entry(doc.get(name, 0), RATIO_TOLERANCE)
+    return cells
+
+
+def index_fleet_scale(doc):
+    """Flatten a fleet_scale report into {key: (value, tolerance)}."""
+    cells = {}
+    for cell in doc.get("cells", []):
+        tag = (cell["models"], cell["dedup"], cell["policy"])
+        cells[("goodput",) + tag] = _entry(cell["goodput"], DEFAULT_TOLERANCE)
+        cells[("hit_rate",) + tag] = _entry(
+            cell["host_hit_rate"], HIT_RATE_TOLERANCE
+        )
+    for name in ("dedup_goodput", "full_form_goodput"):
+        cells[("total", name)] = _entry(doc.get(name, 0), DEFAULT_TOLERANCE)
+    return cells
+
+
+def index_planner_suite(doc):
+    """Flatten a planner_suite report into {key: (value, tolerance)}."""
+    cells = {}
+    for arm in doc.get("scoring_workers", []):
+        cells[("scoring", arm["workers"])] = _entry(
+            arm["candidates_per_sec"], RATIO_TOLERANCE
+        )
+    cells[("ratio", "planner_speedup_workers4")] = _entry(
+        doc.get("planner_speedup_workers4", 0), RATIO_TOLERANCE
+    )
+    for cell in doc.get("cells", []):
+        for outcome in cell.get("outcomes", []):
+            key = ("goodput", cell["scenario"], outcome["candidate"])
+            cells[key] = _entry(outcome["goodput"], DEFAULT_TOLERANCE)
+    return cells
+
+
+REGISTRY = {
+    "perf_simcore": index_perf_simcore,
+    "fleet_scale": index_fleet_scale,
+    "planner_suite": index_planner_suite,
+}
+
+
+def bench_name(doc):
+    """The report's bench identity (``bench`` or legacy ``experiment``)."""
+    return doc.get("bench") or doc.get("experiment")
+
+
+def index_cells(doc):
+    """Dispatch to the bench's indexer; raises ValueError when unknown."""
+    name = bench_name(doc)
+    if name not in REGISTRY:
+        known = ", ".join(sorted(REGISTRY))
+        raise ValueError(f"unregistered bench {name!r} (known: {known})")
+    return REGISTRY[name](doc)
+
+
+def _split(entry):
+    """(value, tolerance) of a cell entry; bare numbers get the default."""
+    if isinstance(entry, tuple):
+        return entry
+    return (entry, DEFAULT_TOLERANCE)
+
+
+def advisory_reasons(baseline, new):
+    """Reasons the comparison cannot bind (fail CI), in report order."""
+    reasons = []
+    if not baseline.get("calibrated", False):
+        reasons.append("baseline is uncalibrated (bootstrap placeholder)")
+    if baseline.get("fast") != new.get("fast"):
+        reasons.append(
+            f"mode mismatch: baseline fast={baseline.get('fast')} "
+            f"vs new fast={new.get('fast')}"
+        )
+    return reasons
+
+
+def compare_cells(base_cells, new_cells):
+    """Diff two cell indexes.
+
+    Returns ``(lines, regressions, compared)``: printable per-cell diff
+    lines, the list of ``(key, base_value, new_value, ratio)`` tuples
+    that regressed beyond the baseline cell's tolerance, and the number
+    of comparable cells. Cells missing from the new run or with
+    non-positive baseline values are skipped (unmeasured placeholders).
+    """
+    lines = []
+    regressions = []
+    compared = 0
+    for key, entry in sorted(base_cells.items()):
+        base_value, tolerance = _split(entry)
+        if key not in new_cells or base_value <= 0:
+            continue
+        compared += 1
+        new_value, _ = _split(new_cells[key])
+        ratio = new_value / base_value
+        marker = ""
+        if ratio < 1.0 - tolerance:
+            marker = "  << REGRESSION"
+            regressions.append((key, base_value, new_value, ratio))
+        lines.append(
+            f"{'/'.join(str(k) for k in key):48s} "
+            f"base {base_value:14.1f}  new {new_value:14.1f}  "
+            f"ratio {ratio:5.2f} (tol {tolerance:.0%}){marker}"
+        )
+    return lines, regressions, compared
+
+
+def calibrate(new_doc):
+    """Promote a fresh run to a calibrated baseline document."""
+    doc = dict(new_doc)
+    doc["calibrated"] = True
+    doc["note"] = (
+        "Calibrated baseline generated by scripts/check_bench.py "
+        "--calibrate from a real run on the CI reference machine. "
+        "Regressions beyond each metric's tolerance now fail the "
+        "perf-smoke job."
+    )
+    return doc
+
+
+def run_diff(baseline_path, new_path):
+    baseline = load(baseline_path)
+    new = load(new_path)
+    name = bench_name(baseline)
+    if bench_name(new) != name:
+        print(
+            f"WARNING: bench mismatch (baseline {name!r} vs new "
+            f"{bench_name(new)!r}); nothing to compare"
+        )
+        return 0
+    try:
+        base_cells = index_cells(baseline)
+        new_cells = index_cells(new)
+    except ValueError as e:
+        print(f"WARNING: {e}; nothing to compare")
+        return 0
+    advisory = advisory_reasons(baseline, new)
+    lines, regressions, compared = compare_cells(base_cells, new_cells)
+    for line in lines:
+        print(line)
+    if compared == 0:
+        print(f"WARNING: no comparable {name} cells between baseline and new run")
+    if regressions:
+        print(f"\n{len(regressions)} {name} cell(s) regressed beyond tolerance.")
+        if advisory:
+            print("ADVISORY ONLY (not failing):")
+            for reason in advisory:
+                print(f"  - {reason}")
+            return 0
+        return 1
+    print(f"\n{name}: no regression beyond tolerance.")
+    return 0
+
+
+def run_calibrate(new_path, out_path):
+    doc = calibrate(load(new_path))
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    name = bench_name(doc)
+    try:
+        cells = index_cells(doc)
+    except ValueError:
+        cells = {}
+    measured = sum(1 for entry in cells.values() if _split(entry)[0] > 0)
+    print(
+        f"calibrated baseline written to {out_path} "
+        f"({measured}/{len(cells)} cells measured); commit it as "
+        f"BENCH_{name}.json to arm the perf gate"
+    )
+    return 0
+
+
+def main(argv):
+    if len(argv) == 4 and argv[1] == "--calibrate":
+        return run_calibrate(argv[2], argv[3])
+    if len(argv) == 3:
+        return run_diff(argv[1], argv[2])
+    sys.exit(__doc__)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

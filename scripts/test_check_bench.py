@@ -1,0 +1,307 @@
+"""Unit tests for the perf-smoke diff logic (scripts/check_bench.py).
+
+Ports the old test_check_perf_simcore.py suite onto the generalized
+gate and adds coverage for the fleet_scale / planner_suite indexers,
+per-metric tolerances, and unknown-bench handling.
+
+Run with either harness:
+    python3 -m unittest discover -s scripts
+    python -m pytest scripts/
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import check_bench as cb
+
+
+def report(calibrated=True, fast=True, e2e=(), churn=(), parallel=(), ratios=None):
+    doc = {
+        "bench": "perf_simcore",
+        "calibrated": calibrated,
+        "fast": fast,
+        "e2e": [
+            {
+                "scenario": s,
+                "groups": g,
+                "backend": b,
+                "events_per_sec": rate,
+            }
+            for (s, g, b, rate) in e2e
+        ],
+        "queue_churn": [
+            {"backend": b, "pending": p, "events_per_sec": rate}
+            for (b, p, rate) in churn
+        ],
+        "parallel": [
+            {
+                "scenario": s,
+                "groups": g,
+                "exec": e,
+                "events_per_sec": rate,
+            }
+            for (s, g, e, rate) in parallel
+        ],
+    }
+    doc.update(ratios or {})
+    return doc
+
+
+def fleet_report(calibrated=True, fast=True, cells=(), totals=None):
+    doc = {
+        "bench": "fleet_scale",
+        "calibrated": calibrated,
+        "fast": fast,
+        "cells": [
+            {
+                "models": n,
+                "dedup": d,
+                "policy": p,
+                "goodput": goodput,
+                "host_hit_rate": hit,
+            }
+            for (n, d, p, goodput, hit) in cells
+        ],
+    }
+    doc.update(totals or {})
+    return doc
+
+
+def planner_report(calibrated=True, fast=True, arms=(), cells=(), speedup=0):
+    return {
+        "experiment": "planner_suite",
+        "calibrated": calibrated,
+        "fast": fast,
+        "scoring_workers": [
+            {"workers": w, "candidates_per_sec": rate} for (w, rate) in arms
+        ],
+        "planner_speedup_workers4": speedup,
+        "cells": [
+            {
+                "scenario": s,
+                "outcomes": [
+                    {"candidate": c, "goodput": g} for (c, g) in outcomes
+                ],
+            }
+            for (s, outcomes) in cells
+        ],
+    }
+
+
+class IndexCellsTest(unittest.TestCase):
+    def test_perf_simcore_keys_cover_all_sections(self):
+        doc = report(
+            e2e=[("zipf", 4, "calendar", 100.0)],
+            churn=[("heap", 10000, 50.0)],
+            parallel=[("zipf-dedicated", 4, "parallel", 200.0)],
+            ratios={"parallel_speedup_g4": 2.0},
+        )
+        cells = cb.index_cells(doc)
+        self.assertEqual(cells[("e2e", "zipf", 4, "calendar")], (100.0, 0.20))
+        self.assertEqual(cells[("churn", "heap", 10000)], (50.0, 0.20))
+        self.assertEqual(
+            cells[("parallel", "zipf-dedicated", 4, "parallel")], (200.0, 0.20)
+        )
+        self.assertEqual(
+            cells[("ratio", "parallel_speedup_g4")], (2.0, cb.RATIO_TOLERANCE)
+        )
+        # Unset ratios index as 0 (placeholder) rather than KeyError.
+        self.assertEqual(
+            cells[("ratio", "e2e_speedup_zipf_g4")], (0, cb.RATIO_TOLERANCE)
+        )
+
+    def test_missing_sections_yield_only_ratio_placeholders(self):
+        cells = cb.index_cells({"bench": "perf_simcore"})
+        self.assertTrue(all(key[0] == "ratio" for key in cells))
+        self.assertTrue(all(cb._split(v)[0] == 0 for v in cells.values()))
+
+    def test_fleet_scale_keys(self):
+        doc = fleet_report(
+            cells=[(1000, True, "weighted-cost", 40.0, 0.9)],
+            totals={"dedup_goodput": 40.0, "full_form_goodput": 30.0},
+        )
+        cells = cb.index_cells(doc)
+        self.assertEqual(
+            cells[("goodput", 1000, True, "weighted-cost")], (40.0, 0.20)
+        )
+        self.assertEqual(
+            cells[("hit_rate", 1000, True, "weighted-cost")],
+            (0.9, cb.HIT_RATE_TOLERANCE),
+        )
+        self.assertEqual(cells[("total", "dedup_goodput")], (40.0, 0.20))
+        self.assertEqual(cells[("total", "full_form_goodput")], (30.0, 0.20))
+
+    def test_planner_suite_keys(self):
+        doc = planner_report(
+            arms=[(1, 10.0), (4, 35.0)],
+            cells=[("zipf", [("planner", 50.0), ("groups_2x2 preset", 40.0)])],
+            speedup=3.5,
+        )
+        cells = cb.index_cells(doc)
+        self.assertEqual(cells[("scoring", 1)], (10.0, cb.RATIO_TOLERANCE))
+        self.assertEqual(cells[("scoring", 4)], (35.0, cb.RATIO_TOLERANCE))
+        self.assertEqual(
+            cells[("ratio", "planner_speedup_workers4")],
+            (3.5, cb.RATIO_TOLERANCE),
+        )
+        self.assertEqual(cells[("goodput", "zipf", "planner")], (50.0, 0.20))
+        self.assertEqual(
+            cells[("goodput", "zipf", "groups_2x2 preset")], (40.0, 0.20)
+        )
+
+    def test_unknown_bench_raises(self):
+        with self.assertRaises(ValueError):
+            cb.index_cells({"bench": "mystery"})
+        with self.assertRaises(ValueError):
+            cb.index_cells({})
+
+
+class CompareCellsTest(unittest.TestCase):
+    def test_regression_beyond_tolerance_is_flagged(self):
+        base = {("churn", "calendar", 10000): 100.0}
+        new = {("churn", "calendar", 10000): 79.0}
+        lines, regressions, compared = cb.compare_cells(base, new)
+        self.assertEqual(compared, 1)
+        self.assertEqual(len(regressions), 1)
+        key, base_value, new_value, ratio = regressions[0]
+        self.assertEqual(key, ("churn", "calendar", 10000))
+        self.assertAlmostEqual(ratio, 0.79)
+        self.assertIn("REGRESSION", lines[0])
+
+    def test_exact_tolerance_boundary_passes(self):
+        # ratio == 1 - tolerance is NOT a regression (strictly below fails).
+        base = {("churn", "heap", 10000): 100.0}
+        new = {("churn", "heap", 10000): 80.0}
+        _, regressions, compared = cb.compare_cells(base, new)
+        self.assertEqual(compared, 1)
+        self.assertEqual(regressions, [])
+
+    def test_improvement_passes(self):
+        base = {("e2e", "zipf", 1, "calendar"): 100.0}
+        new = {("e2e", "zipf", 1, "calendar"): 150.0}
+        _, regressions, _ = cb.compare_cells(base, new)
+        self.assertEqual(regressions, [])
+
+    def test_unmeasured_baseline_cells_are_skipped(self):
+        # value <= 0 means "not yet measured" (bootstrap rows).
+        base = {("churn", "calendar", 10000): 0}
+        new = {("churn", "calendar", 10000): 123.0}
+        lines, regressions, compared = cb.compare_cells(base, new)
+        self.assertEqual((lines, regressions, compared), ([], [], 0))
+
+    def test_cells_missing_from_new_run_are_skipped(self):
+        base = {("e2e", "zipf", 4, "heap"): 100.0}
+        _, regressions, compared = cb.compare_cells(base, {})
+        self.assertEqual((regressions, compared), ([], 0))
+
+    def test_per_metric_tolerance_from_baseline_entry(self):
+        # A 21% drop regresses a 20%-tolerance metric but not a 25% one.
+        base = {("ratio", "x"): (100.0, 0.25), ("e2e", "y"): (100.0, 0.20)}
+        new = {("ratio", "x"): 79.0, ("e2e", "y"): 79.0}
+        _, regressions, compared = cb.compare_cells(base, new)
+        self.assertEqual(compared, 2)
+        self.assertEqual([key for key, *_ in regressions], [("e2e", "y")])
+
+
+class AdvisoryReasonsTest(unittest.TestCase):
+    def test_uncalibrated_baseline_is_advisory(self):
+        reasons = cb.advisory_reasons(report(calibrated=False), report())
+        self.assertTrue(any("uncalibrated" in r for r in reasons))
+
+    def test_mode_mismatch_is_advisory(self):
+        reasons = cb.advisory_reasons(report(fast=True), report(fast=False))
+        self.assertTrue(any("mode mismatch" in r for r in reasons))
+
+    def test_calibrated_same_mode_binds(self):
+        self.assertEqual(cb.advisory_reasons(report(), report()), [])
+
+
+class CalibrateTest(unittest.TestCase):
+    def test_calibrate_flips_flag_and_keeps_cells(self):
+        fresh = report(
+            calibrated=False,
+            e2e=[("zipf", 4, "calendar", 321.0)],
+            churn=[("heap", 10000, 50.0)],
+        )
+        doc = cb.calibrate(fresh)
+        self.assertTrue(doc["calibrated"])
+        self.assertEqual(cb.index_cells(doc), cb.index_cells(fresh))
+        # The input document is not mutated.
+        self.assertFalse(fresh["calibrated"])
+
+
+class MainExitCodeTest(unittest.TestCase):
+    def write(self, doc):
+        f = tempfile.NamedTemporaryFile(
+            "w", suffix=".json", delete=False, dir=self.dir.name
+        )
+        json.dump(doc, f)
+        f.close()
+        return f.name
+
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def test_binding_regression_fails(self):
+        base = self.write(report(churn=[("heap", 10000, 100.0)]))
+        new = self.write(report(churn=[("heap", 10000, 10.0)]))
+        self.assertEqual(cb.main(["prog", base, new]), 1)
+
+    def test_advisory_regression_passes(self):
+        base = self.write(
+            report(calibrated=False, churn=[("heap", 10000, 100.0)])
+        )
+        new = self.write(report(churn=[("heap", 10000, 10.0)]))
+        self.assertEqual(cb.main(["prog", base, new]), 0)
+
+    def test_clean_run_passes(self):
+        base = self.write(report(churn=[("heap", 10000, 100.0)]))
+        new = self.write(report(churn=[("heap", 10000, 101.0)]))
+        self.assertEqual(cb.main(["prog", base, new]), 0)
+
+    def test_fleet_scale_binding_regression_fails(self):
+        base = self.write(
+            fleet_report(cells=[(1000, True, "weighted-cost", 100.0, 0.9)])
+        )
+        new = self.write(
+            fleet_report(cells=[(1000, True, "weighted-cost", 10.0, 0.9)])
+        )
+        self.assertEqual(cb.main(["prog", base, new]), 1)
+
+    def test_planner_suite_binding_regression_fails(self):
+        base = self.write(planner_report(arms=[(4, 100.0)], speedup=3.5))
+        new = self.write(planner_report(arms=[(4, 10.0)], speedup=3.5))
+        self.assertEqual(cb.main(["prog", base, new]), 1)
+
+    def test_bench_mismatch_is_a_warning_not_a_failure(self):
+        base = self.write(report(churn=[("heap", 10000, 100.0)]))
+        new = self.write(fleet_report())
+        self.assertEqual(cb.main(["prog", base, new]), 0)
+
+    def test_unknown_bench_is_a_warning_not_a_failure(self):
+        base = self.write({"bench": "mystery", "calibrated": True})
+        new = self.write({"bench": "mystery", "calibrated": True})
+        self.assertEqual(cb.main(["prog", base, new]), 0)
+
+    def test_calibrate_writes_calibrated_baseline(self):
+        fresh = self.write(
+            report(calibrated=False, churn=[("heap", 10000, 100.0)])
+        )
+        out = os.path.join(self.dir.name, "baseline.json")
+        self.assertEqual(cb.main(["prog", "--calibrate", fresh, out]), 0)
+        with open(out) as f:
+            doc = json.load(f)
+        self.assertTrue(doc["calibrated"])
+        self.assertEqual(
+            cb.index_cells(doc)[("churn", "heap", 10000)], (100.0, 0.20)
+        )
+
+
+if __name__ == "__main__":
+    unittest.main()
